@@ -1,0 +1,147 @@
+//! OOM interrupt → resume on a larger instance (paper §IV).
+//!
+//! ```bash
+//! cargo run --release --example oom_resume
+//! ```
+//!
+//! "It can support other types of interruption, such as out-of-memory, in
+//! which case the workload can be resumed on a larger instance from a
+//! checkpoint."
+//!
+//! This example composes the framework's pieces directly (no experiment
+//! driver): a workload runs on a D8s_v3 until it "OOMs" mid-stage, the
+//! last periodic transparent checkpoint survives on the share, the scale
+//! set is resized to the smallest size with enough memory, and the
+//! replacement instance restores and finishes — with the bill showing the
+//! mixed-size run.
+
+use spoton::checkpoint::{CheckpointWriter, CkptKind};
+use spoton::cloud::billing::BillingMeter;
+use spoton::cloud::pricing::PriceBook;
+use spoton::cloud::scale_set::ScaleSet;
+use spoton::config::CheckpointMethodCfg;
+use spoton::coordinator::{CheckpointPolicy, RestartManager};
+use spoton::simclock::{Clock, SimDuration, SimTime};
+use spoton::storage::BlobStore;
+use spoton::workload::sleeper::{Sleeper, SleeperCfg};
+use spoton::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    let book = PriceBook::default();
+    let mut clock = Clock::new();
+    let mut billing = BillingMeter::new();
+    let mut store = BlobStore::for_tests();
+    let mut writer = CheckpointWriter::new();
+    let policy = CheckpointPolicy::new(CheckpointMethodCfg::Transparent {
+        interval: SimDuration::from_mins(30),
+    });
+
+    let mut scale_set = ScaleSet::new(
+        "Standard_D8s_v3",
+        true,
+        SimDuration::from_secs(90),
+        book.clone(),
+    )?;
+
+    // --- phase 1: run on the 32 GiB instance until it OOMs -------------
+    let vm0 = scale_set.launch(clock.now()).id;
+    println!("launched {vm0} (Standard_D8s_v3, 32 GiB)");
+    let mut workload = Sleeper::new(SleeperCfg::small(), 77);
+    let step_cost = SimDuration::from_secs(55);
+    let mut last_ckpt = clock.now();
+    let mut steps = 0u32;
+
+    // the workload's memory footprint grows past 32 GiB at step 70
+    let oom_at_step = 70u32;
+    let oom_footprint_gib = 48u32;
+
+    loop {
+        if policy.periodic_due(clock.now(), last_ckpt) {
+            let snap = workload.snapshot()?;
+            let out = writer.write(
+                &mut store,
+                clock.now(),
+                CkptKind::Periodic,
+                &workload,
+                &snap,
+            )?;
+            clock.advance(out.cost());
+            last_ckpt = clock.now();
+            println!(
+                "  {:?} periodic checkpoint {} (step {steps})",
+                clock.now(),
+                out.committed().unwrap().id
+            );
+        }
+        if steps == oom_at_step {
+            println!(
+                "  {:?} OOM: workload needs {oom_footprint_gib} GiB, \
+                 instance has 32 GiB — killing {vm0}",
+                clock.now()
+            );
+            break;
+        }
+        clock.advance(step_cost);
+        workload.step()?;
+        steps += 1;
+    }
+    let steps_at_oom = workload.progress().total_steps;
+    scale_set.terminate_current(clock.now(), &mut billing);
+
+    // --- phase 2: upsize and resume ------------------------------------
+    let bigger = book
+        .smallest_with_mem(oom_footprint_gib)
+        .expect("catalog has a big enough size");
+    println!(
+        "resizing scale set: Standard_D8s_v3 -> {} ({} GiB)",
+        bigger.name, bigger.mem_gib
+    );
+    scale_set.resize(&bigger.name)?;
+    clock.advance(scale_set.provisioning_delay());
+    let vm1 = scale_set.launch(clock.now()).id;
+    println!("launched {vm1} ({}, {} GiB)", bigger.name, bigger.mem_gib);
+
+    let mut resumed = Sleeper::new(SleeperCfg::small(), 77);
+    let report =
+        RestartManager::find_and_restore(&mut store, &policy, &mut resumed)?
+            .expect("checkpoint must exist");
+    clock.advance(report.cost);
+    println!(
+        "  {:?} restored from checkpoint {} (step {}, lost {} steps to \
+         the OOM)",
+        clock.now(),
+        report.manifest.id,
+        report.resumed_total_steps,
+        steps_at_oom - report.resumed_total_steps,
+    );
+
+    while !resumed.is_done() {
+        clock.advance(step_cost);
+        resumed.step()?;
+    }
+    println!("  {:?} workload complete on the larger instance", clock.now());
+    scale_set.terminate_current(clock.now(), &mut billing);
+
+    // --- verify + bill ---------------------------------------------------
+    let mut reference = Sleeper::new(SleeperCfg::small(), 77);
+    while !reference.is_done() {
+        reference.step()?;
+    }
+    assert_eq!(
+        resumed.fingerprint(),
+        reference.fingerprint(),
+        "post-OOM resume diverged from uninterrupted execution"
+    );
+    billing.book_storage(
+        "nfs-share",
+        100.0,
+        clock.now().since(SimTime::ZERO),
+        16.0,
+    );
+    println!("\nInvoice (mixed instance sizes):\n{}", billing.invoice());
+    println!(
+        "RESULT: OOM survived; run resumed on {} and finished bit-exact.",
+        bigger.name
+    );
+    Ok(())
+}

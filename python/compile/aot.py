@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.
+
+This is the entire build-time Python surface.  ``make artifacts`` runs
+
+    python -m compile.aot --out ../artifacts
+
+once; the Rust binary is self-contained afterwards and Python never runs on
+the request path.
+
+Interchange format is **HLO text, not serialized HloModuleProto**: jax >=
+0.5 emits protos with 64-bit instruction ids which the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+Lowering goes through stablehlo with ``return_tuple=True``; the Rust side
+unwraps with ``to_tuple1()``.
+
+Alongside the ``*.hlo.txt`` files we emit ``manifest.json``: per-artifact
+input/output shapes + dtypes, geometry constants, and a SHA-256 of each HLO
+file.  The Rust runtime treats the manifest as the single source of truth
+and refuses to run against artifacts whose geometry disagrees with its
+workload config.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, build_all, example_args
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _arg_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def lower_artifact(name: str, fn, args) -> tuple[str, list, list]:
+    """Lower `fn` at `args`; returns (hlo_text, input_sig, output_sig)."""
+    lowered = jax.jit(fn).lower(*args)
+    out_tree = jax.eval_shape(fn, *args)
+    outputs = [_arg_entry(o) for o in out_tree]
+    inputs = [_arg_entry(a) for a in args]
+    return to_hlo_text(lowered), inputs, outputs
+
+
+def build_artifacts(cfg: ModelConfig, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+    for name, fn in build_all(cfg).items():
+        if name.startswith("count_k"):
+            args = example_args(cfg, "count_step")
+        elif name == "denoise":
+            args = example_args(cfg, "denoise_step")
+        else:
+            args = example_args(cfg, name)
+        hlo, inputs, outputs = lower_artifact(name, fn, args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(hlo)
+        digest = hashlib.sha256(hlo.encode()).hexdigest()
+        artifacts[name] = {
+            "file": fname,
+            "sha256": digest,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(hlo)} chars -> {fname}")
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "geometry": {
+            "num_buckets": cfg.num_buckets,
+            "read_len": cfg.read_len,
+            "reads_per_call": cfg.reads_per_call,
+            "read_tile": cfg.read_tile,
+            "bucket_tile": cfg.bucket_tile,
+            "denoise_half_width": cfg.denoise_half_width,
+            "count_variant": cfg.count_variant,
+            "ks": list(cfg.ks),
+        },
+        "artifacts": artifacts,
+    }
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath} ({len(artifacts)} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument("--buckets", type=int, default=None)
+    ap.add_argument("--read-len", type=int, default=None)
+    ap.add_argument("--reads-per-call", type=int, default=None)
+    ap.add_argument(
+        "--ks", default=None, help="comma-separated k list (default paper's)"
+    )
+    ap.add_argument(
+        "--count-variant",
+        default=None,
+        choices=["onehot", "scatter"],
+        help="count-kernel accumulation strategy (default: scatter, the "
+        "CPU profile; onehot is the TPU-shaped formulation)",
+    )
+    ap.add_argument("--read-tile", type=int, default=None)
+    ap.add_argument("--bucket-tile", type=int, default=None)
+    args = ap.parse_args()
+    kw = {}
+    if args.count_variant is not None:
+        kw["count_variant"] = args.count_variant
+    if args.read_tile is not None:
+        kw["read_tile"] = args.read_tile
+    if args.bucket_tile is not None:
+        kw["bucket_tile"] = args.bucket_tile
+    if args.buckets is not None:
+        kw["num_buckets"] = args.buckets
+    if args.read_len is not None:
+        kw["read_len"] = args.read_len
+    if args.reads_per_call is not None:
+        kw["reads_per_call"] = args.reads_per_call
+    if args.ks:
+        kw["ks"] = [int(x) for x in args.ks.split(",")]
+    cfg = ModelConfig(**kw)
+    build_artifacts(cfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels for the MiniMeta assembler workload.
+
+Two hot kernels, designed TPU-first (see DESIGN.md section 3) and lowered
+with ``interpret=True`` so the resulting HLO runs on any PJRT backend,
+including the Rust CPU client on the request path:
+
+- :mod:`kmer_count` -- rolling-hash k-mer histogram restructured as a
+  one-hot x matmul accumulation (MXU-friendly), gridded over read tiles
+  and bucket tiles.
+- :mod:`denoise` -- banded spectral smoothing + soft-threshold iteration
+  (the assembly-graph cleaning analog).
+
+:mod:`ref` holds the pure-jnp oracles the pytest suite checks against.
+"""

@@ -1,0 +1,98 @@
+"""Pallas spectral-denoise kernel: banded smoothing + soft threshold.
+
+The assembly-graph-cleaning analog (DESIGN.md section 2): metaSPAdes spends
+each k-stage's tail simplifying its de Bruijn graph (tip clipping, bulge
+removal, low-coverage edge dropping).  On the bucketed k-mer spectrum this
+maps to an iterated local operator:
+
+    smooth[b] = sum_d stencil[d] * counts[b + d - w]      (banded matvec)
+    out[b]    = smooth[b]                  if smooth[b] >= threshold
+              = smooth[b] * decay          otherwise       (soft threshold)
+
+i.e. one Jacobi-style relaxation sweep followed by suppression of
+low-coverage buckets -- the same read/modify/threshold shape as coverage
+cutoffs in real assemblers.  Each denoise *step* is one sweep; a stage runs
+a configured number of sweeps, and mid-stage state (the evolving spectrum)
+is exactly what transparent checkpoints capture and application-native
+checkpoints lose.
+
+Kernel structure: the spectrum is tiny relative to VMEM (B f32 = 32 KiB at
+the default B=8192), so the whole array is a single block and the grid is
+1 -- the interesting blocking lives in :mod:`kmer_count`.  The stencil halo
+is handled with zero padding inside the kernel (edge buckets see a clipped
+neighbourhood, matching the reference oracle).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class DenoiseSpec:
+    """Static configuration of the denoise kernel."""
+
+    num_buckets: int  # B
+    half_width: int = 2  # w: stencil spans 2w+1 taps
+
+    def __post_init__(self) -> None:
+        if self.half_width < 0:
+            raise ValueError("half_width must be >= 0")
+        if self.num_buckets <= 2 * self.half_width:
+            raise ValueError("num_buckets too small for stencil width")
+
+    @property
+    def taps(self) -> int:
+        return 2 * self.half_width + 1
+
+
+def _denoise_kernel(spec: DenoiseSpec, c_ref, s_ref, t_ref, o_ref):
+    """c_ref: f32[B] counts; s_ref: f32[2w+1] stencil;
+    t_ref: f32[2] (threshold, decay); o_ref: f32[B]."""
+    b, w = spec.num_buckets, spec.half_width
+    c = c_ref[...]
+    # Zero-pad and take the 2w+1 shifted views; the taps are unrolled
+    # (compile-time constant width) into a flat mul/add chain.
+    padded = jnp.pad(c, (w, w))
+    smooth = jnp.zeros((b,), dtype=jnp.float32)
+    for d in range(spec.taps):
+        smooth = smooth + s_ref[d] * padded[d : d + b]
+    thr = t_ref[0]
+    decay = t_ref[1]
+    o_ref[...] = jnp.where(smooth >= thr, smooth, smooth * decay)
+
+
+def make_denoise_fn(spec: DenoiseSpec):
+    """Build ``denoise(counts f32[B], stencil f32[2w+1], params f32[2]) -> f32[B]``.
+
+    ``params = [threshold, decay]``.  Returned callable wraps the
+    pallas_call; jitted/lowered by `model.py`.
+    """
+
+    kernel = functools.partial(_denoise_kernel, spec)
+
+    def denoise(
+        counts: jnp.ndarray, stencil: jnp.ndarray, params: jnp.ndarray
+    ):
+        if counts.shape != (spec.num_buckets,):
+            raise ValueError(f"counts must be ({spec.num_buckets},)")
+        if stencil.shape != (spec.taps,):
+            raise ValueError(f"stencil must be ({spec.taps},)")
+        return pl.pallas_call(
+            kernel,
+            out_shape=jax.ShapeDtypeStruct(
+                (spec.num_buckets,), jnp.float32
+            ),
+            interpret=True,
+        )(
+            counts.astype(jnp.float32),
+            stencil.astype(jnp.float32),
+            params.astype(jnp.float32),
+        )
+
+    return denoise

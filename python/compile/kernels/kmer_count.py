@@ -1,0 +1,221 @@
+"""Pallas k-mer counting kernel: rolling-hash histogram as one-hot matmul.
+
+The GPU-native formulation of k-mer counting is a gather/scatter histogram
+(atomic adds into a global table).  On TPU there is no scatter unit; the
+MXU-friendly restructuring (DESIGN.md section 3, "Hardware adaptation") is:
+
+1. For a tile of reads ``(TR, L)`` (2-bit base codes 0..3, code 4 = N/pad),
+   compute the polynomial rolling hash of every k-window::
+
+       h[r, p] = sum_j base[r, p + j] * w[j]  (mod B),   w[j] = 4^(k-1-j) mod B
+
+   The weights are precomputed (arbitrary-precision in Python) and passed as
+   an ``i32[k]`` operand so the same kernel body serves every k.
+
+2. Windows containing an invalid base (code > 3) are redirected to the
+   sentinel value ``B`` which one-hot-encodes to the zero row -- masked
+   windows contribute nothing without a select on the accumulate path.
+
+3. One-hot encode the flattened hashes against the *bucket tile* currently
+   resident in VMEM and reduce with a matmul::
+
+       partial = ones[1, TR*P] @ onehot[TR*P, BB]        # MXU contraction
+
+   which is exactly a histogram restricted to buckets ``[jB*BB, (jB+1)*BB)``.
+
+Grid layout: ``(nB, nR)`` with the bucket dimension OUTER so each output
+block stays resident while all read tiles stream past it (the classic
+"stationary accumulator" schedule; on real TPU this is the
+``dimension_semantics=("parallel", "arbitrary")`` pattern).  The count tile
+is initialised from ``counts_in`` on the first read tile and accumulated in
+place afterwards.
+
+VMEM budget per grid step (defaults TR=8, L=160, k=33 -> P=128, BB=2048):
+reads tile 8*160*4 = 5 KiB, one-hot 1024*2048*4 = 8 MiB, count tile 8 KiB --
+comfortably under the ~16 MiB VMEM target.  MXU work per step:
+TR*P*BB ~= 2.1 MMACs.
+
+Lowered with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO with identical numerics (checked against :mod:`ref` by pytest).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+@dataclass(frozen=True)
+class KmerCountSpec:
+    """Static configuration of one compiled k-mer counting kernel.
+
+    ``variant`` selects the accumulation strategy (both share the hash +
+    masking front end and are checked against the same oracle):
+
+    - ``"onehot"`` — the TPU-shaped formulation: one-hot encode against
+      the resident bucket tile and reduce with a matmul (MXU systolic
+      contraction). This is the structure DESIGN.md section 3 argues for
+      on real hardware.
+    - ``"scatter"`` — the CPU-profile formulation: a scatter-add
+      histogram (``.at[].add``), which XLA's CPU backend executes ~500×
+      faster than materializing the one-hot (EXPERIMENTS.md §Perf).
+      Used for the shipped interpret-mode artifacts.
+    """
+
+    k: int  # k-mer length (window size)
+    read_len: int  # L: bases per (padded) read row
+    num_buckets: int  # B: histogram size; must be divisible by bucket_tile
+    read_tile: int = 8  # TR: reads per grid step
+    bucket_tile: int = 2048  # BB: bucket block per grid step
+    variant: str = "onehot"
+
+    def __post_init__(self) -> None:
+        if self.variant not in ("onehot", "scatter"):
+            raise ValueError(f"unknown variant '{self.variant}'")
+        if self.k < 2:
+            raise ValueError(f"k must be >= 2, got {self.k}")
+        if self.k > self.read_len:
+            raise ValueError(
+                f"k={self.k} longer than read_len={self.read_len}"
+            )
+        if self.num_buckets % self.bucket_tile != 0:
+            raise ValueError(
+                f"num_buckets={self.num_buckets} not divisible by "
+                f"bucket_tile={self.bucket_tile}"
+            )
+        # Hash accumulation is done in i32: the per-window partial sum is
+        # bounded by 3 * B * k which must stay below 2^31.
+        if 3 * self.num_buckets * self.k >= 2**31:
+            raise ValueError("num_buckets * k too large for i32 hash path")
+
+    @property
+    def positions(self) -> int:
+        """P: number of k-windows per read row."""
+        return self.read_len - self.k + 1
+
+    @property
+    def bucket_grid(self) -> int:
+        return self.num_buckets // self.bucket_tile
+
+    def weights(self) -> jnp.ndarray:
+        """Polynomial hash weights w[j] = 4^(k-1-j) mod B, as i32[k]."""
+        b = self.num_buckets
+        return jnp.asarray(
+            [pow(4, self.k - 1 - j, b) for j in range(self.k)],
+            dtype=jnp.int32,
+        )
+
+
+def _count_kernel(spec: KmerCountSpec, x_ref, w_ref, cin_ref, o_ref):
+    """Kernel body for one (bucket tile, read tile) grid step.
+
+    x_ref:   i32[TR, L]   read tile (base codes, 4 = invalid/pad)
+    w_ref:   i32[k]       hash weights (same block every step)
+    cin_ref: f32[BB]      incoming counts for this bucket tile
+    o_ref:   f32[BB]      accumulated counts for this bucket tile
+    """
+    k, p, bb = spec.k, spec.positions, spec.bucket_tile
+    x = x_ref[...]
+
+    # Rolling polynomial hash + validity, unrolled over the k taps (k is a
+    # compile-time constant; the slices are static so this lowers to a flat
+    # chain of slice/mul/add -- no dynamic indexing in the hot loop).
+    acc = jnp.zeros((spec.read_tile, p), dtype=jnp.int32)
+    bad = jnp.zeros((spec.read_tile, p), dtype=jnp.bool_)
+    for j in range(k):
+        col = x[:, j : j + p]
+        acc = acc + col * w_ref[j]
+        bad = bad | (col > 3)
+    h = jax.lax.rem(acc, jnp.int32(spec.num_buckets))
+    # Invalid windows -> sentinel B: one-hot against any bucket tile is the
+    # zero row, so they drop out of the histogram with no extra select.
+    h = jnp.where(bad, jnp.int32(spec.num_buckets), h)
+
+    # Restrict to the bucket tile owned by this grid step.
+    j_b = pl.program_id(0)
+    base = j_b * bb
+    flat = h.reshape((spec.read_tile * p,))
+    local = flat - base  # value in [0, BB) iff bucket lives in this tile
+
+    if spec.variant == "onehot":
+        # MXU contraction: ones[1, TR*P] @ onehot[TR*P, BB] == per-tile
+        # histogram (the TPU-shaped path, DESIGN.md section 3).
+        cols = jax.lax.broadcasted_iota(
+            jnp.int32, (spec.read_tile * p, bb), 1
+        )
+        onehot = (local[:, None] == cols).astype(jnp.float32)
+        ones = jnp.ones((1, spec.read_tile * p), dtype=jnp.float32)
+        partial = jnp.dot(ones, onehot, preferred_element_type=jnp.float32)
+        partial = partial.reshape((bb,))
+    else:
+        # CPU-profile scatter-add histogram. NOTE: negative indices would
+        # *wrap* under JAX indexing (mode="drop" only drops fully
+        # out-of-bounds values), so redirect everything outside this tile
+        # — including the sentinel B for masked windows — to `bb`, which
+        # "drop" then discards.
+        in_tile = (flat >= base) & (flat < base + bb)
+        safe = jnp.where(in_tile, local, bb)
+        partial = (
+            jnp.zeros((bb,), dtype=jnp.float32)
+            .at[safe]
+            .add(1.0, mode="drop")
+        )
+
+    i_r = pl.program_id(1)
+
+    @pl.when(i_r == 0)
+    def _init():
+        o_ref[...] = cin_ref[...] + partial
+
+    @pl.when(i_r != 0)
+    def _accum():
+        o_ref[...] = o_ref[...] + partial
+
+
+def make_count_fn(spec: KmerCountSpec):
+    """Build ``count(reads i32[R, L], counts f32[B], weights i32[k]) -> f32[B]``.
+
+    R must be a multiple of ``spec.read_tile``.  The returned function is a
+    plain jax-traceable callable wrapping the pallas_call; `model.py` jits
+    and AOT-lowers it per k.
+    """
+
+    kernel = functools.partial(_count_kernel, spec)
+
+    def count(reads: jnp.ndarray, counts: jnp.ndarray, weights: jnp.ndarray):
+        if reads.ndim != 2 or reads.shape[1] != spec.read_len:
+            raise ValueError(f"reads must be (R, {spec.read_len})")
+        n_r = reads.shape[0] // spec.read_tile
+        if n_r * spec.read_tile != reads.shape[0]:
+            raise ValueError(
+                f"R={reads.shape[0]} not a multiple of tile {spec.read_tile}"
+            )
+        grid = (spec.bucket_grid, n_r)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                # read tile: streams along the inner grid dim
+                pl.BlockSpec(
+                    (spec.read_tile, spec.read_len), lambda jb, ir: (ir, 0)
+                ),
+                # weights: one small block, same every step
+                pl.BlockSpec((spec.k,), lambda jb, ir: (0,)),
+                # incoming counts: the bucket tile owned by jb
+                pl.BlockSpec((spec.bucket_tile,), lambda jb, ir: (jb,)),
+            ],
+            out_specs=pl.BlockSpec(
+                (spec.bucket_tile,), lambda jb, ir: (jb,)
+            ),
+            out_shape=jax.ShapeDtypeStruct(
+                (spec.num_buckets,), jnp.float32
+            ),
+            interpret=True,
+        )(reads.astype(jnp.int32), weights, counts.astype(jnp.float32))
+
+    return count

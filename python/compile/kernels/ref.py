@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the CORE correctness signal: straight-line jnp implementations of
+exactly what the kernels must compute, with no blocking, no grid, no
+one-hot-matmul restructuring.  pytest (and hypothesis sweeps) assert
+allclose between each kernel and its oracle across shapes, k values and
+input distributions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .denoise import DenoiseSpec
+from .kmer_count import KmerCountSpec
+
+
+def ref_kmer_count(
+    spec: KmerCountSpec, reads: jnp.ndarray, counts: jnp.ndarray
+) -> jnp.ndarray:
+    """Histogram of polynomial k-mer hashes, windows with any base > 3 skipped.
+
+    reads: i32[R, L]; counts: f32[B] (accumulated into); returns f32[B].
+    """
+    reads = reads.astype(jnp.int32)
+    k, p, b = spec.k, spec.positions, spec.num_buckets
+    w = spec.weights()
+    # windows[r, i, j] = reads[r, i + j]
+    windows = jnp.stack(
+        [reads[:, j : j + p] for j in range(k)], axis=-1
+    )  # (R, P, k)
+    h = jnp.mod(jnp.sum(windows * w[None, None, :], axis=-1), b)
+    bad = jnp.any(windows > 3, axis=-1)
+    h = jnp.where(bad, b, h)  # sentinel bucket B is dropped below
+    hist = jnp.zeros((b + 1,), dtype=jnp.float32).at[h.reshape(-1)].add(1.0)
+    return counts.astype(jnp.float32) + hist[:b]
+
+
+def ref_denoise(
+    spec: DenoiseSpec,
+    counts: jnp.ndarray,
+    stencil: jnp.ndarray,
+    params: jnp.ndarray,
+) -> jnp.ndarray:
+    """Banded smoothing (zero-padded edges) + soft threshold.
+
+    counts: f32[B]; stencil: f32[2w+1]; params: f32[2] = [threshold, decay].
+    """
+    b, w = spec.num_buckets, spec.half_width
+    c = counts.astype(jnp.float32)
+    padded = jnp.pad(c, (w, w))
+    cols = jnp.stack(
+        [padded[d : d + b] for d in range(spec.taps)], axis=-1
+    )  # (B, taps)
+    smooth = jnp.sum(cols * stencil[None, :].astype(jnp.float32), axis=-1)
+    thr, decay = params[0], params[1]
+    return jnp.where(smooth >= thr, smooth, smooth * decay)
+
+
+def ref_spectrum_stats(counts: jnp.ndarray) -> tuple:
+    """Stage summary statistics: (total mass, occupied buckets, max)."""
+    c = counts.astype(jnp.float32)
+    return (
+        jnp.sum(c),
+        jnp.sum((c > 0).astype(jnp.float32)),
+        jnp.max(c),
+    )

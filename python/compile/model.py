@@ -1,0 +1,153 @@
+"""Layer-2 JAX model: the MiniMeta per-stage compute graph.
+
+metaSPAdes-analog pipeline (DESIGN.md section 2): each k-stage consumes the
+read set and evolves a bucketed k-mer spectrum:
+
+    for each read chunk:   counts = count_step_k(chunk, counts)   # Pallas
+    for each sweep:        counts = denoise_step(counts)          # Pallas
+    summary = spectrum_stats(counts)                              # jnp
+
+The Rust coordinator drives these step functions through PJRT; the *loop*
+lives in Rust (it is what gets checkpointed), the *math* lives here.  Every
+function below is AOT-lowered once by :mod:`aot` into an HLO-text artifact.
+
+Default geometry (must match `MiniMetaConfig` defaults on the Rust side;
+the artifact manifest is the single source of truth at runtime):
+
+    B  = 8192   buckets
+    L  = 160    bases per padded read row
+    RC = 1024   reads per count_step call (one "work unit")
+    ks = 33, 55, 77, 99, 127
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.denoise import DenoiseSpec, make_denoise_fn
+from .kernels.kmer_count import KmerCountSpec, make_count_fn
+
+DEFAULT_KS: List[int] = [33, 55, 77, 99, 127]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Geometry shared by all artifacts in one build."""
+
+    num_buckets: int = 8192
+    read_len: int = 160
+    reads_per_call: int = 1024
+    # CPU-profile tiling for the shipped interpret-mode artifacts: one
+    # resident bucket tile (no hash recompute across bucket tiles) and a
+    # large read tile (amortize grid-step overhead). The TPU profile
+    # (read_tile=8, bucket_tile=2048, variant="onehot") is what
+    # DESIGN.md section 3 sizes for VMEM/MXU; tests cover both.
+    read_tile: int = 32
+    bucket_tile: int = 8192
+    denoise_half_width: int = 2
+    count_variant: str = "scatter"
+    ks: List[int] = field(default_factory=lambda: list(DEFAULT_KS))
+
+    def count_spec(self, k: int) -> KmerCountSpec:
+        return KmerCountSpec(
+            k=k,
+            read_len=self.read_len,
+            num_buckets=self.num_buckets,
+            read_tile=self.read_tile,
+            bucket_tile=self.bucket_tile,
+            variant=self.count_variant,
+        )
+
+    def denoise_spec(self) -> DenoiseSpec:
+        return DenoiseSpec(
+            num_buckets=self.num_buckets,
+            half_width=self.denoise_half_width,
+        )
+
+
+def build_count_step(cfg: ModelConfig, k: int):
+    """``count_step_k(reads i32[RC, L], counts f32[B]) -> (f32[B],)``.
+
+    The hash weights for this k are baked in as a compile-time constant so
+    the runtime artifact takes only (reads, counts) -- the Rust hot path
+    never re-supplies static data.
+    """
+    spec = cfg.count_spec(k)
+    count = make_count_fn(spec)
+    weights = spec.weights()
+
+    def count_step(reads, counts):
+        return (count(reads, counts, weights),)
+
+    return count_step
+
+
+def build_denoise_step(cfg: ModelConfig):
+    """``denoise_step(counts f32[B], stencil f32[2w+1], params f32[2]) -> (f32[B],)``.
+
+    Stencil and [threshold, decay] stay runtime operands: the Rust stage
+    driver anneals the threshold across sweeps (coverage cutoff schedule),
+    so they change call-to-call.
+    """
+    denoise = make_denoise_fn(cfg.denoise_spec())
+
+    def denoise_step(counts, stencil, params):
+        return (denoise(counts, stencil, params),)
+
+    return denoise_step
+
+
+def build_spectrum_stats(cfg: ModelConfig):
+    """``spectrum_stats(counts f32[B]) -> (f32[3],)``: [mass, occupied, max].
+
+    Plain jnp (no Pallas): a cheap reduction the coordinator logs at stage
+    boundaries and uses to sanity-check restored checkpoints.
+    """
+
+    def spectrum_stats(counts):
+        c = counts.astype(jnp.float32)
+        return (
+            jnp.stack(
+                [
+                    jnp.sum(c),
+                    jnp.sum((c > 0).astype(jnp.float32)),
+                    jnp.max(c),
+                ]
+            ),
+        )
+
+    return spectrum_stats
+
+
+def example_args(cfg: ModelConfig, name: str, k: int = 0):
+    """ShapeDtypeStructs for AOT lowering of artifact `name`."""
+    b = cfg.num_buckets
+    if name == "count_step":
+        return (
+            jax.ShapeDtypeStruct((cfg.reads_per_call, cfg.read_len), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        )
+    if name == "denoise_step":
+        taps = 2 * cfg.denoise_half_width + 1
+        return (
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((taps,), jnp.float32),
+            jax.ShapeDtypeStruct((2,), jnp.float32),
+        )
+    if name == "spectrum_stats":
+        return (jax.ShapeDtypeStruct((b,), jnp.float32),)
+    raise KeyError(name)
+
+
+def build_all(cfg: ModelConfig) -> Dict[str, object]:
+    """All artifacts for one build: name -> traceable fn returning a tuple."""
+    out: Dict[str, object] = {}
+    for k in cfg.ks:
+        out[f"count_k{k}"] = build_count_step(cfg, k)
+    out["denoise"] = build_denoise_step(cfg)
+    out["spectrum_stats"] = build_spectrum_stats(cfg)
+    return out

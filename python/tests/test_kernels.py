@@ -1,0 +1,227 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes / k values / input distributions and asserts
+allclose between each Pallas kernel (interpret=True) and its pure-jnp
+oracle in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.denoise import DenoiseSpec, make_denoise_fn
+from compile.kernels.kmer_count import KmerCountSpec, make_count_fn
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_reads(rng, r, l, invalid_frac=0.0):
+    reads = rng.integers(0, 4, size=(r, l), dtype=np.int32)
+    if invalid_frac > 0:
+        mask = rng.random((r, l)) < invalid_frac
+        reads = np.where(mask, 4, reads)
+    return reads
+
+
+# ---------------------------------------------------------------- kmer_count
+
+
+class TestKmerCountFixed:
+    """Deterministic cases covering the paper's k values at small scale."""
+
+    @pytest.mark.parametrize("k", [3, 5, 33, 55, 77, 99, 127])
+    @pytest.mark.parametrize("variant", ["onehot", "scatter"])
+    def test_matches_ref_per_k(self, k, variant):
+        l = max(k + 7, 40)
+        spec = KmerCountSpec(
+            k=k, read_len=l, num_buckets=256, read_tile=4, bucket_tile=64,
+            variant=variant,
+        )
+        rng = np.random.default_rng(k)
+        reads = _mk_reads(rng, 8, l)
+        counts = np.zeros(256, np.float32)
+        got = make_count_fn(spec)(jnp.asarray(reads), jnp.asarray(counts),
+                                  spec.weights())
+        want = ref.ref_kmer_count(spec, jnp.asarray(reads), jnp.asarray(counts))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+    def test_accumulates_into_counts(self):
+        spec = KmerCountSpec(
+            k=5, read_len=20, num_buckets=64, read_tile=2, bucket_tile=32
+        )
+        rng = np.random.default_rng(0)
+        reads = _mk_reads(rng, 4, 20)
+        base = rng.random(64).astype(np.float32) * 10
+        fn = make_count_fn(spec)
+        got = fn(jnp.asarray(reads), jnp.asarray(base), spec.weights())
+        zero = fn(jnp.asarray(reads), jnp.zeros(64, jnp.float32),
+                  spec.weights())
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(zero) + base, rtol=1e-6
+        )
+
+    def test_invalid_bases_masked(self):
+        spec = KmerCountSpec(
+            k=4, read_len=16, num_buckets=64, read_tile=2, bucket_tile=32
+        )
+        reads = np.full((2, 16), 4, np.int32)  # all invalid
+        got = make_count_fn(spec)(
+            jnp.asarray(reads), jnp.zeros(64, jnp.float32), spec.weights()
+        )
+        assert float(jnp.sum(got)) == 0.0
+
+    def test_total_mass_equals_valid_windows(self):
+        spec = KmerCountSpec(
+            k=7, read_len=30, num_buckets=128, read_tile=4, bucket_tile=64
+        )
+        rng = np.random.default_rng(7)
+        reads = _mk_reads(rng, 8, 30)  # all valid
+        got = make_count_fn(spec)(
+            jnp.asarray(reads), jnp.zeros(128, jnp.float32), spec.weights()
+        )
+        assert float(jnp.sum(got)) == 8 * spec.positions
+
+    @pytest.mark.parametrize("variant", ["onehot", "scatter"])
+    def test_multi_grid_both_dims(self, variant):
+        # exercises bucket-outer accumulation across read tiles
+        spec = KmerCountSpec(
+            k=9, read_len=40, num_buckets=512, read_tile=4, bucket_tile=128,
+            variant=variant,
+        )
+        rng = np.random.default_rng(9)
+        reads = _mk_reads(rng, 16, 40, invalid_frac=0.05)
+        counts = rng.random(512).astype(np.float32)
+        got = make_count_fn(spec)(
+            jnp.asarray(reads), jnp.asarray(counts), spec.weights()
+        )
+        want = ref.ref_kmer_count(spec, jnp.asarray(reads), jnp.asarray(counts))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6)
+
+    def test_weights_match_python_pow(self):
+        spec = KmerCountSpec(k=127, read_len=160, num_buckets=8192)
+        w = np.asarray(spec.weights())
+        assert w[-1] == 1 and w[-2] == 4
+        assert all(0 <= x < 8192 for x in w)
+
+    def test_rejects_bad_geometry(self):
+        with pytest.raises(ValueError):
+            KmerCountSpec(k=1, read_len=10, num_buckets=64)
+        with pytest.raises(ValueError):
+            KmerCountSpec(k=20, read_len=10, num_buckets=64)
+        with pytest.raises(ValueError):
+            KmerCountSpec(k=5, read_len=10, num_buckets=100, bucket_tile=64)
+        with pytest.raises(ValueError):
+            KmerCountSpec(k=5, read_len=10, num_buckets=64, bucket_tile=64,
+                          variant="sorting")
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.integers(2, 12),
+    extra=st.integers(0, 12),
+    tiles=st.integers(1, 3),
+    bgrid=st.sampled_from([1, 2, 4]),
+    invalid=st.floats(0, 0.3),
+    variant=st.sampled_from(["onehot", "scatter"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmer_count_hypothesis(k, extra, tiles, bgrid, invalid, variant, seed):
+    """Property sweep: kernel == oracle over random geometry + inputs."""
+    l = k + extra
+    bucket_tile = 32
+    spec = KmerCountSpec(
+        k=k,
+        read_len=l,
+        num_buckets=bucket_tile * bgrid,
+        read_tile=2,
+        bucket_tile=bucket_tile,
+        variant=variant,
+    )
+    rng = np.random.default_rng(seed)
+    reads = _mk_reads(rng, 2 * tiles, l, invalid)
+    counts = rng.random(spec.num_buckets).astype(np.float32)
+    got = make_count_fn(spec)(
+        jnp.asarray(reads), jnp.asarray(counts), spec.weights()
+    )
+    want = ref.ref_kmer_count(spec, jnp.asarray(reads), jnp.asarray(counts))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+# ------------------------------------------------------------------- denoise
+
+
+class TestDenoiseFixed:
+    def test_identity_stencil_above_threshold(self):
+        spec = DenoiseSpec(num_buckets=64, half_width=1)
+        c = np.arange(64, dtype=np.float32) + 10
+        stencil = np.array([0, 1, 0], np.float32)
+        params = np.array([0.0, 0.5], np.float32)
+        got = make_denoise_fn(spec)(
+            jnp.asarray(c), jnp.asarray(stencil), jnp.asarray(params)
+        )
+        np.testing.assert_allclose(np.asarray(got), c)
+
+    def test_threshold_decays_low_coverage(self):
+        spec = DenoiseSpec(num_buckets=8, half_width=0)
+        c = np.array([1, 5, 1, 5, 1, 5, 1, 5], np.float32)
+        got = make_denoise_fn(spec)(
+            jnp.asarray(c),
+            jnp.asarray([1.0], dtype=jnp.float32),
+            jnp.asarray([2.0, 0.1], dtype=jnp.float32),
+        )
+        np.testing.assert_allclose(
+            np.asarray(got), [0.1, 5, 0.1, 5, 0.1, 5, 0.1, 5], rtol=1e-6
+        )
+
+    def test_edges_zero_padded(self):
+        spec = DenoiseSpec(num_buckets=16, half_width=2)
+        c = np.ones(16, np.float32)
+        stencil = np.ones(5, np.float32)
+        got = make_denoise_fn(spec)(
+            jnp.asarray(c),
+            jnp.asarray(stencil),
+            jnp.asarray([0.0, 1.0], dtype=jnp.float32),
+        )
+        # interior sums 5 ones; edges see clipped windows
+        np.testing.assert_allclose(np.asarray(got)[2:-2], 5.0)
+        np.testing.assert_allclose(np.asarray(got)[0], 3.0)
+        np.testing.assert_allclose(np.asarray(got)[1], 4.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([16, 64, 256]),
+    w=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_denoise_hypothesis(b, w, seed):
+    spec = DenoiseSpec(num_buckets=b, half_width=w)
+    rng = np.random.default_rng(seed)
+    c = (rng.random(b) * 20).astype(np.float32)
+    stencil = rng.standard_normal(spec.taps).astype(np.float32)
+    params = np.array([rng.random() * 5, rng.random()], np.float32)
+    got = np.asarray(
+        make_denoise_fn(spec)(
+            jnp.asarray(c), jnp.asarray(stencil), jnp.asarray(params)
+        )
+    )
+    want = np.asarray(
+        ref.ref_denoise(
+            spec, jnp.asarray(c), jnp.asarray(stencil), jnp.asarray(params)
+        )
+    )
+    # Positions whose smoothed value sits within float noise of the
+    # threshold may legitimately take either branch (kernel and oracle
+    # accumulate the taps in different orders); exclude them.
+    padded = np.pad(c, (w, w))
+    smooth = sum(
+        stencil[d] * padded[d : d + b] for d in range(spec.taps)
+    )
+    decisive = np.abs(smooth - params[0]) > 1e-4 * (1.0 + np.abs(smooth))
+    np.testing.assert_allclose(
+        got[decisive], want[decisive], rtol=2e-4, atol=1e-5
+    )

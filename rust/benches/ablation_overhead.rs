@@ -1,0 +1,75 @@
+//! Ablation: coordinator overhead (paper §III-C rows 1–2: "Spot-on
+//! introduces little overhead") and the periodic-checkpoint-interval
+//! trade-off (more frequent dumps = more freeze pauses but less lost work
+//! per eviction).
+
+use spoton::report::table::TextTable;
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+
+fn main() -> anyhow::Result<()> {
+    // 1. coordinator attach overhead
+    let off = Experiment::table1().spoton_off().run_sleeper()?;
+    let on = Experiment::table1().run_sleeper()?;
+    println!("\nAblation — coordinator overhead (no evictions, no ckpts)\n");
+    println!("  Spot-on OFF: {}", off.total.hms());
+    println!("  Spot-on ON : {}", on.total.hms());
+    let ratio =
+        on.total.as_millis() as f64 / off.total.as_millis() as f64 - 1.0;
+    println!(
+        "  overhead: {:.2}% (paper rows 1-2: {:.2}%)",
+        ratio * 100.0,
+        (11132.0 / 11006.0 - 1.0) * 100.0
+    );
+    assert!(ratio < 0.03);
+
+    // 2. periodic interval trade-off under fixed evictions
+    let mut t = TextTable::new(&[
+        "Ckpt interval",
+        "Total",
+        "Periodic ckpts",
+        "Steps lost",
+        "vs baseline",
+    ]);
+    println!(
+        "\nAblation — transparent checkpoint interval (evictions every \
+         60 min, 5 s notice so termination ckpts fail and periodic \
+         spacing is what matters)\n"
+    );
+    let mut totals = Vec::new();
+    for mins in [5u64, 10, 15, 30, 60, 120] {
+        let r = Experiment::table1()
+            .named("interval-sweep")
+            .eviction_every(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(mins))
+            .notice(SimDuration::from_secs(5))
+            .deadline(SimDuration::from_hours(24))
+            .run_sleeper()?;
+        // An interval sparser than the eviction period can never commit a
+        // checkpoint before the instance dies: the run starves (paper
+        // section IV) and is reported as DNF.
+        assert_eq!(r.completed, mins < 60, "interval {mins}min");
+        let delta =
+            r.total.as_millis() as f64 / off.total.as_millis() as f64 - 1.0;
+        totals.push((mins, r.total));
+        t.row(&[
+            format!("{mins} min"),
+            if r.completed { r.total.hms() } else { "DNF".into() },
+            r.periodic_ckpts.to_string(),
+            r.lost_steps.to_string(),
+            format!("{:+.1}%", delta * 100.0),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // Shape: very sparse checkpointing (120m > eviction interval) must be
+    // worse than a sensible interval (15m).
+    let t15 = totals.iter().find(|(m, _)| *m == 15).unwrap().1;
+    let t120 = totals.iter().find(|(m, _)| *m == 120).unwrap().1;
+    assert!(
+        t120 > t15,
+        "checkpointing sparser than the eviction interval must cost time"
+    );
+    println!("\noverhead/interval shape checks PASSED");
+    Ok(())
+}

@@ -1,0 +1,186 @@
+//! Perf micro-benches: the hot paths behind EXPERIMENTS.md §Perf.
+//!
+//! * L1/L2 via PJRT: k-mer count step, denoise sweep, stats reduction
+//!   (per-call latency on the request path).
+//! * L3: snapshot serialize/restore, checkpoint write/scan/restore
+//!   against the in-memory and directory-backed shares, IMDS document
+//!   serve+parse, HTTP poll round trip, end-to-end simulated experiment
+//!   throughput.
+
+use spoton::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind};
+use spoton::cloud::imds_http::ImdsHttp;
+use spoton::coordinator::ScheduledEventsMonitor;
+use spoton::runtime::{Arg, Runtime};
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::{SimDuration, SimTime};
+use spoton::storage::{BlobStore, NfsStore, SharedStore, TransferModel};
+use spoton::util::bench::{bench_fn, section};
+use spoton::workload::reads::{ReadGen, ReadGenCfg};
+use spoton::workload::sleeper::{Sleeper, SleeperCfg};
+use spoton::workload::Workload;
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- L1/L2: PJRT request path ----------------
+    match Runtime::load(&spoton::runtime::default_artifacts_dir()) {
+        Ok(mut rt) => {
+            let g = rt.geometry().clone();
+            let b = g.num_buckets as usize;
+            let gen = ReadGen::new(ReadGenCfg {
+                row_len: g.read_len as usize,
+                read_len: g.read_len as usize - 10,
+                ..ReadGenCfg::default()
+            });
+            let chunk = gen.chunk_i32(0, g.reads_per_call as usize);
+            let counts = vec![0f32; b];
+
+            section("L1 kmer-count step (PJRT, per chunk of 1024 reads)");
+            for k in [33u32, 127] {
+                let name = format!("count_k{k}");
+                rt.executable(&name)?; // compile outside timing
+                let exe = rt.executable(&name)?;
+                let stats = bench_fn(3, 20, || {
+                    let out = exe
+                        .call_f32(&[Arg::I32(&chunk), Arg::F32(&counts)])
+                        .unwrap();
+                    std::hint::black_box(out);
+                });
+                let windows = g.reads_per_call
+                    * (g.read_len - k as u64 + 1);
+                println!(
+                    "  k={k:<3} {stats}\n        -> {:.1} Mwindows/s",
+                    windows as f64 / stats.mean.as_secs_f64() / 1e6
+                );
+            }
+
+            section("L2 denoise sweep + stats (PJRT)");
+            let taps = 2 * g.denoise_half_width as usize + 1;
+            let stencil = vec![1.0 / taps as f32; taps];
+            let params = vec![1.5f32, 0.5];
+            rt.executable("denoise")?;
+            let exe = rt.executable("denoise")?;
+            let stats = bench_fn(3, 50, || {
+                let out = exe
+                    .call_f32(&[
+                        Arg::F32(&counts),
+                        Arg::F32(&stencil),
+                        Arg::F32(&params),
+                    ])
+                    .unwrap();
+                std::hint::black_box(out);
+            });
+            println!("  denoise        {stats}");
+            rt.executable("spectrum_stats")?;
+            let exe = rt.executable("spectrum_stats")?;
+            let stats = bench_fn(3, 50, || {
+                let out = exe.call_f32(&[Arg::F32(&counts)]).unwrap();
+                std::hint::black_box(out);
+            });
+            println!("  spectrum_stats {stats}");
+        }
+        Err(e) => {
+            eprintln!("skipping PJRT benches (artifacts unavailable: {e})")
+        }
+    }
+
+    // ---------------- L3: checkpoint engine ----------------
+    section("L3 snapshot serialize / restore (sleeper, 8-word state)");
+    let mut w = Sleeper::new(SleeperCfg::small(), 3);
+    for _ in 0..50 {
+        w.step()?;
+    }
+    let stats = bench_fn(10, 2000, || {
+        std::hint::black_box(w.snapshot().unwrap());
+    });
+    println!("  snapshot   {stats}");
+    let snap = w.snapshot()?;
+    let mut w2 = Sleeper::new(SleeperCfg::small(), 3);
+    let stats = bench_fn(10, 2000, || {
+        w2.restore(&snap.bytes).unwrap();
+    });
+    println!("  restore    {stats}");
+
+    section("L3 checkpoint write+commit (BlobStore vs NfsStore)");
+    let mut blob = BlobStore::for_tests();
+    let mut writer = CheckpointWriter::new();
+    let stats = bench_fn(5, 500, || {
+        let out = writer
+            .write(&mut blob, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+        std::hint::black_box(out);
+    });
+    println!("  blob  write  {stats}");
+    let nfs_dir = std::env::temp_dir()
+        .join(format!("spoton-perf-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&nfs_dir);
+    let mut nfs = NfsStore::open(
+        &nfs_dir,
+        TransferModel {
+            bandwidth_mib_s: 250.0,
+            latency: SimDuration::from_millis(20),
+        },
+        None,
+    )?;
+    let mut writer2 = CheckpointWriter::new();
+    let stats = bench_fn(5, 200, || {
+        let out = writer2
+            .write(&mut nfs, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+        std::hint::black_box(out);
+    });
+    println!("  nfs   write  {stats}");
+
+    section("L3 checkpoint scan + latest_valid (100 checkpoints on share)");
+    let mut blob2 = BlobStore::for_tests();
+    let mut writer3 = CheckpointWriter::new();
+    for _ in 0..100 {
+        writer3
+            .write(&mut blob2, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+    }
+    let stats = bench_fn(3, 100, || {
+        let m = CheckpointStore::latest_valid(&mut blob2, Some(true)).unwrap();
+        std::hint::black_box(m);
+    });
+    println!("  latest_valid {stats}");
+
+    section("L3 IMDS document serve + parse (in-proc)");
+    let mut svc = spoton::cloud::metadata::MetadataService::new();
+    for i in 0..4 {
+        svc.post_preempt(&format!("vm-{i}"), SimTime::from_secs(30));
+    }
+    let mut mon = ScheduledEventsMonitor::new("vm-3");
+    let stats = bench_fn(10, 2000, || {
+        mon.reset();
+        std::hint::black_box(mon.poll_inproc(&svc).unwrap());
+    });
+    println!("  poll_inproc  {stats}");
+
+    section("L3 IMDS HTTP poll round trip (localhost TCP)");
+    let imds = ImdsHttp::spawn(30)?;
+    let url = imds.events_url();
+    let mut mon2 = ScheduledEventsMonitor::new("vm-0");
+    let stats = bench_fn(5, 200, || {
+        mon2.reset();
+        std::hint::black_box(mon2.poll_http(&url).unwrap());
+    });
+    println!("  poll_http    {stats}");
+
+    section("L3 end-to-end simulated experiment (sleeper, full Table-I row)");
+    let stats = bench_fn(2, 20, || {
+        let r = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(15))
+            .run_sleeper()
+            .unwrap();
+        std::hint::black_box(r);
+    });
+    println!("  row-per-run  {stats}");
+    println!(
+        "  -> {:.1} simulated-runs/s ({} simulated hours each)",
+        stats.throughput_per_sec(),
+        3.2
+    );
+
+    let _ = std::fs::remove_dir_all(&nfs_dir);
+    Ok(())
+}

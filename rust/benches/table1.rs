@@ -1,0 +1,94 @@
+//! Bench: reproduce **Table I** — execution time of the metaSPAdes-analog
+//! workload under every Spot-on configuration the paper reports.
+//!
+//! Default runs the full three-layer stack (MiniMeta via PJRT). Set
+//! `SPOTON_BENCH_WORKLOAD=sleeper` for the fast calibration workload.
+//!
+//! We don't expect to match the paper's absolute numbers (their substrate
+//! was Azure; ours is a calibrated simulator) — the *shape* is the claim
+//! under test: rows 1–2 nearly equal (coordinator overhead ~1%),
+//! application-native rows blow up with eviction frequency, transparent
+//! rows stay near baseline.
+
+use spoton::report::{paper_rows, render_comparison};
+use spoton::runtime::Runtime;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let workload = std::env::var("SPOTON_BENCH_WORKLOAD")
+        .unwrap_or_else(|_| "minimeta".into());
+    let rt = if workload == "minimeta" {
+        let dir = spoton::runtime::default_artifacts_dir();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(Rc::new(RefCell::new(rt))),
+            Err(e) => {
+                eprintln!(
+                    "artifacts unavailable ({e}); falling back to sleeper"
+                );
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut results = Vec::new();
+    for row in paper_rows() {
+        let started = std::time::Instant::now();
+        let exp = row.experiment();
+        let result = match &rt {
+            Some(rt) => exp.run_minimeta(rt.clone())?,
+            None => exp.run_sleeper()?,
+        };
+        eprintln!(
+            "  {}: simulated {} of cloud time in {:?} wall",
+            row.id,
+            result.total,
+            started.elapsed()
+        );
+        results.push((row, result));
+    }
+
+    println!("\nTable I — Comparisons on execution time of the metaSPAdes-analog");
+    println!(
+        "workload ({} workload, {:?} total wall time)\n",
+        if rt.is_some() { "MiniMeta/PJRT" } else { "sleeper" },
+        t0.elapsed()
+    );
+    print!("{}", render_comparison(&results));
+
+    // Shape assertions (the paper's qualitative claims).
+    let total =
+        |id: &str| results.iter().find(|(r, _)| r.id == id).unwrap().1.total;
+    let baseline = total("row1");
+    let overhead = total("row2").as_millis() as f64
+        / baseline.as_millis() as f64
+        - 1.0;
+    println!("\nShape checks:");
+    println!(
+        "  coordinator overhead (row2 vs row1): {:.2}% (paper: ~1.1%)",
+        overhead * 100.0
+    );
+    let app90 = total("row3");
+    let app60 = total("row4");
+    let t90 = total("row5").min(total("row6"));
+    let t60 = total("row7").min(total("row8"));
+    println!(
+        "  app-native slowdown: 90min {:+.1}%, 60min {:+.1}% (paper: +17.9%, +46.3%)",
+        (app90.as_millis() as f64 / baseline.as_millis() as f64 - 1.0) * 100.0,
+        (app60.as_millis() as f64 / baseline.as_millis() as f64 - 1.0) * 100.0,
+    );
+    println!(
+        "  transparent slowdown: 90min {:+.1}%, 60min {:+.1}% (paper: ≈0%)",
+        (t90.as_millis() as f64 / baseline.as_millis() as f64 - 1.0) * 100.0,
+        (t60.as_millis() as f64 / baseline.as_millis() as f64 - 1.0) * 100.0,
+    );
+    assert!(app60 > app90, "more evictions must hurt app-native more");
+    assert!(app90 > t90, "transparent must beat app-native at 90min");
+    assert!(app60 > t60, "transparent must beat app-native at 60min");
+    assert!(overhead < 0.03, "coordinator overhead out of band");
+    println!("  all shape checks PASSED");
+    Ok(())
+}

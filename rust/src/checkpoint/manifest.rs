@@ -1,0 +1,222 @@
+//! Checkpoint manifests: metadata + integrity anchors.
+
+use crate::json::{self, Value};
+use anyhow::{bail, Result};
+
+/// Why this checkpoint was taken (paper §II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CkptKind {
+    /// Scheduled periodic checkpoint (transparent method).
+    Periodic,
+    /// Opportunistic checkpoint on an eviction notice.
+    Termination,
+    /// The application's own milestone checkpoint.
+    AppNative,
+}
+
+impl CkptKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CkptKind::Periodic => "periodic",
+            CkptKind::Termination => "termination",
+            CkptKind::AppNative => "application",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "periodic" => CkptKind::Periodic,
+            "termination" => CkptKind::Termination,
+            "application" => CkptKind::AppNative,
+            other => bail!("unknown checkpoint kind '{other}'"),
+        })
+    }
+
+    /// Does this checkpoint restore through the transparent surface?
+    pub fn is_transparent(self) -> bool {
+        matches!(self, CkptKind::Periodic | CkptKind::Termination)
+    }
+}
+
+/// Manifest schema version.
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Everything needed to find, validate and restore one checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointManifest {
+    pub version: u64,
+    pub id: u64,
+    pub kind: CkptKind,
+    /// Virtual creation time (ms).
+    pub created_at_ms: u64,
+    /// Workload identity — a restore refuses a mismatched workload.
+    pub workload: String,
+    /// Captured progress.
+    pub stage: u32,
+    pub step_in_stage: u64,
+    pub total_steps: u64,
+    /// Payload location + integrity.
+    pub payload_key: String,
+    pub payload_len: u64,
+    pub payload_crc32: u32,
+    pub payload_sha256: String,
+    /// Modeled transfer size (DESIGN.md §6).
+    pub charged_bytes: u64,
+    /// Workload state fingerprint at capture (resume verification).
+    pub fingerprint: u64,
+}
+
+impl CheckpointManifest {
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("version", self.version)
+            .set("id", self.id)
+            .set("kind", self.kind.as_str())
+            .set("created_at_ms", self.created_at_ms)
+            .set("workload", self.workload.as_str())
+            .set("stage", self.stage as u64)
+            .set("step_in_stage", self.step_in_stage)
+            .set("total_steps", self.total_steps)
+            .set("payload_key", self.payload_key.as_str())
+            .set("payload_len", self.payload_len)
+            .set("payload_crc32", self.payload_crc32 as u64)
+            .set("payload_sha256", self.payload_sha256.as_str())
+            .set("charged_bytes", self.charged_bytes)
+            // u64 fingerprints can exceed f64-exact range; store as hex.
+            .set("fingerprint_hex", format!("{:016x}", self.fingerprint));
+        v
+    }
+
+    pub fn to_json_string(&self) -> String {
+        json::to_string_pretty(&self.to_json())
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let version = v.req_u64("version")?;
+        if version != MANIFEST_VERSION {
+            bail!("unsupported manifest version {version}");
+        }
+        let fp_hex = v.req_str("fingerprint_hex")?;
+        let fingerprint = u64::from_str_radix(fp_hex, 16)
+            .map_err(|_| anyhow::anyhow!("bad fingerprint hex '{fp_hex}'"))?;
+        Ok(Self {
+            version,
+            id: v.req_u64("id")?,
+            kind: CkptKind::parse(v.req_str("kind")?)?,
+            created_at_ms: v.req_u64("created_at_ms")?,
+            workload: v.req_str("workload")?.to_string(),
+            stage: v.req_u64("stage")? as u32,
+            step_in_stage: v.req_u64("step_in_stage")?,
+            total_steps: v.req_u64("total_steps")?,
+            payload_key: v.req_str("payload_key")?.to_string(),
+            payload_len: v.req_u64("payload_len")?,
+            payload_crc32: v.req_u64("payload_crc32")? as u32,
+            payload_sha256: v.req_str("payload_sha256")?.to_string(),
+            charged_bytes: v.req_u64("charged_bytes")?,
+            fingerprint,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&v)
+    }
+
+    /// Check a payload against the recorded integrity anchors.
+    pub fn verify_payload(&self, payload: &[u8]) -> Result<()> {
+        if payload.len() as u64 != self.payload_len {
+            bail!(
+                "payload length mismatch: {} != recorded {}",
+                payload.len(),
+                self.payload_len
+            );
+        }
+        let crc = crate::util::crc32(payload);
+        if crc != self.payload_crc32 {
+            bail!(
+                "payload crc mismatch: {crc:#010x} != recorded {:#010x}",
+                self.payload_crc32
+            );
+        }
+        let sha = crate::util::sha256_hex(payload);
+        if sha != self.payload_sha256 {
+            bail!("payload sha256 mismatch");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> CheckpointManifest {
+        let payload = b"the state";
+        CheckpointManifest {
+            version: MANIFEST_VERSION,
+            id: 42,
+            kind: CkptKind::Termination,
+            created_at_ms: 5_400_000,
+            workload: "minimeta".into(),
+            stage: 2,
+            step_in_stage: 17,
+            total_steps: 97,
+            payload_key: "ckpt/0000000042-termination/payload.bin".into(),
+            payload_len: payload.len() as u64,
+            payload_crc32: crate::util::crc32(payload),
+            payload_sha256: crate::util::sha256_hex(payload),
+            charged_bytes: 3 << 30,
+            fingerprint: 0xDEAD_BEEF_F00D_CAFE,
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = mk();
+        let text = m.to_json_string();
+        let back = CheckpointManifest::parse(&text).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn big_fingerprint_survives_json() {
+        // u64 > 2^53 would corrupt through f64; the hex field must not.
+        let mut m = mk();
+        m.fingerprint = u64::MAX - 1;
+        let back = CheckpointManifest::parse(&m.to_json_string()).unwrap();
+        assert_eq!(back.fingerprint, u64::MAX - 1);
+    }
+
+    #[test]
+    fn verify_payload_catches_tampering() {
+        let m = mk();
+        m.verify_payload(b"the state").unwrap();
+        assert!(m.verify_payload(b"the stat").is_err()); // short
+        assert!(m.verify_payload(b"the statf").is_err()); // flipped
+        assert!(m.verify_payload(b"the state!").is_err()); // long
+    }
+
+    #[test]
+    fn kind_round_trip_and_transparency() {
+        for k in [CkptKind::Periodic, CkptKind::Termination, CkptKind::AppNative]
+        {
+            assert_eq!(CkptKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(CkptKind::Periodic.is_transparent());
+        assert!(CkptKind::Termination.is_transparent());
+        assert!(!CkptKind::AppNative.is_transparent());
+        assert!(CkptKind::parse("criu").is_err());
+    }
+
+    #[test]
+    fn rejects_future_versions_and_junk() {
+        let mut v = mk().to_json();
+        v.set("version", 999u64);
+        assert!(CheckpointManifest::from_json(&v).is_err());
+        assert!(CheckpointManifest::parse("{}").is_err());
+        assert!(CheckpointManifest::parse("not json").is_err());
+        let mut v2 = mk().to_json();
+        v2.set("fingerprint_hex", "zznotahex");
+        assert!(CheckpointManifest::from_json(&v2).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! The checkpoint engine: durable, integrity-checked state captures on
+//! shared storage.
+//!
+//! Layout on the share (one directory per checkpoint):
+//!
+//! ```text
+//! ckpt/0000000042-transparent/payload.bin      the serialized snapshot
+//! ckpt/0000000042-transparent/manifest.json    metadata + checksums
+//! ckpt/0000000042-transparent/COMMIT           two-phase commit marker
+//! ```
+//!
+//! A checkpoint is **valid** iff all three objects exist, the manifest
+//! parses, and the payload matches both its recorded length and checksums.
+//! The COMMIT marker is written last, so an instance dying at any point
+//! mid-write (the paper's "opportunistic" termination checkpoints that
+//! may fail on a short notice, §II) leaves an *invalid* checkpoint that
+//! [`store::CheckpointStore`] skips — never a silently-corrupt restore.
+//! [`writer::CheckpointWriter`] exposes crash points to tests.
+
+pub mod manifest;
+pub mod writer;
+pub mod store;
+pub mod compress;
+
+pub use manifest::{CheckpointManifest, CkptKind};
+pub use store::CheckpointStore;
+pub use writer::{CheckpointWriter, CrashPoint, WriteOutcome};
+
+/// Shared-store key prefix all checkpoints live under.
+pub const CKPT_PREFIX: &str = "ckpt";
+
+/// Directory key for a checkpoint id + kind.
+pub fn ckpt_dir(id: u64, kind: CkptKind) -> String {
+    format!("{CKPT_PREFIX}/{id:010}-{}", kind.as_str())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dir_layout_sorts_numerically() {
+        // zero-padded ids keep lexicographic order == numeric order
+        let a = ckpt_dir(9, CkptKind::Periodic);
+        let b = ckpt_dir(10, CkptKind::Termination);
+        let c = ckpt_dir(100, CkptKind::AppNative);
+        assert!(a < b && b < c);
+        assert_eq!(a, "ckpt/0000000009-periodic");
+        assert_eq!(b, "ckpt/0000000010-termination");
+        assert_eq!(c, "ckpt/0000000100-application");
+    }
+}

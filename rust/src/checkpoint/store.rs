@@ -1,0 +1,384 @@
+//! Checkpoint discovery, validation, latest-valid search and GC.
+//!
+//! After a replacement instance comes up, "the checkpoint coordinator
+//! automatically searches for the most recent valid checkpoint and
+//! resumes the workload" (paper §II). Validity is strict: COMMIT marker
+//! present, manifest parses, payload exists with matching length, CRC32
+//! and SHA-256 — partial termination checkpoints and bit-rot both fail
+//! closed.
+
+use super::manifest::CheckpointManifest;
+use super::CKPT_PREFIX;
+use crate::simclock::SimDuration;
+use crate::storage::SharedStore;
+use anyhow::Result;
+
+/// One discovered checkpoint and its validation status.
+#[derive(Debug, Clone)]
+pub struct CkptEntry {
+    pub dir: String,
+    pub manifest: Option<CheckpointManifest>,
+    /// `None` until validated; `Some(Err)` describes why it's unusable.
+    pub problem: Option<String>,
+}
+
+impl CkptEntry {
+    pub fn is_valid(&self) -> bool {
+        self.manifest.is_some() && self.problem.is_none()
+    }
+}
+
+/// Stateless facade over the share's `ckpt/` namespace.
+pub struct CheckpointStore;
+
+impl CheckpointStore {
+    /// All checkpoint directories (valid or not), ascending by id.
+    pub fn scan(store: &mut dyn SharedStore) -> Result<Vec<CkptEntry>> {
+        let keys = store.list(&format!("{CKPT_PREFIX}/"))?;
+        let mut dirs: Vec<String> = keys
+            .iter()
+            .filter_map(|k| {
+                let rest = k.strip_prefix(&format!("{CKPT_PREFIX}/"))?;
+                let dir = rest.split('/').next()?;
+                Some(format!("{CKPT_PREFIX}/{dir}"))
+            })
+            .collect();
+        dirs.sort();
+        dirs.dedup();
+
+        let mut entries = Vec::new();
+        for dir in dirs {
+            entries.push(Self::inspect(store, &dir));
+        }
+        Ok(entries)
+    }
+
+    /// Validate one checkpoint directory.
+    fn inspect(store: &mut dyn SharedStore, dir: &str) -> CkptEntry {
+        let commit_key = format!("{dir}/COMMIT");
+        let manifest_key = format!("{dir}/manifest.json");
+        if !store.exists(&commit_key) {
+            return CkptEntry {
+                dir: dir.to_string(),
+                manifest: None,
+                problem: Some("missing COMMIT marker (partial write)".into()),
+            };
+        }
+        let manifest = match store.get(&manifest_key) {
+            Ok((bytes, _)) => match std::str::from_utf8(&bytes)
+                .map_err(|e| e.to_string())
+                .and_then(|s| {
+                    CheckpointManifest::parse(s).map_err(|e| e.to_string())
+                }) {
+                Ok(m) => m,
+                Err(e) => {
+                    return CkptEntry {
+                        dir: dir.to_string(),
+                        manifest: None,
+                        problem: Some(format!("manifest unreadable: {e}")),
+                    }
+                }
+            },
+            Err(e) => {
+                return CkptEntry {
+                    dir: dir.to_string(),
+                    manifest: None,
+                    problem: Some(format!("manifest missing: {e}")),
+                }
+            }
+        };
+        // Payload integrity.
+        let problem = match store.get(&manifest.payload_key) {
+            Ok((payload, _)) => {
+                manifest.verify_payload(&payload).err().map(|e| e.to_string())
+            }
+            Err(e) => Some(format!("payload missing: {e}")),
+        };
+        CkptEntry { dir: dir.to_string(), manifest: Some(manifest), problem }
+    }
+
+    /// The most recent valid checkpoint, optionally filtered by restore
+    /// surface (`Some(true)` = transparent only, `Some(false)` =
+    /// application-native only).
+    pub fn latest_valid(
+        store: &mut dyn SharedStore,
+        transparent: Option<bool>,
+    ) -> Result<Option<CheckpointManifest>> {
+        let entries = Self::scan(store)?;
+        Ok(entries
+            .into_iter()
+            .filter(|e| e.is_valid())
+            .filter_map(|e| e.manifest)
+            .filter(|m| {
+                transparent.map_or(true, |t| m.kind.is_transparent() == t)
+            })
+            .max_by_key(|m| m.id))
+    }
+
+    /// Highest id present on the share (valid or not) — id allocation must
+    /// never collide with leftovers.
+    pub fn max_id(store: &mut dyn SharedStore) -> Result<Option<u64>> {
+        let entries = Self::scan(store)?;
+        Ok(entries
+            .iter()
+            .filter_map(|e| {
+                // parse the id from the directory name even when the
+                // manifest is unreadable
+                e.dir
+                    .strip_prefix(&format!("{CKPT_PREFIX}/"))?
+                    .split('-')
+                    .next()?
+                    .parse::<u64>()
+                    .ok()
+            })
+            .max())
+    }
+
+    /// Fetch + verify the payload for a manifest; returns (bytes, cost).
+    pub fn fetch_payload(
+        store: &mut dyn SharedStore,
+        manifest: &CheckpointManifest,
+    ) -> Result<(Vec<u8>, SimDuration)> {
+        let (payload, cost) = store.get(&manifest.payload_key)?;
+        manifest.verify_payload(&payload)?;
+        Ok((payload, cost))
+    }
+
+    /// Delete all but the newest `keep` *valid* checkpoints (and every
+    /// invalid leftover). Returns the number of directories removed.
+    pub fn gc(store: &mut dyn SharedStore, keep: usize) -> Result<usize> {
+        let entries = Self::scan(store)?;
+        let mut valid: Vec<&CkptEntry> =
+            entries.iter().filter(|e| e.is_valid()).collect();
+        valid.sort_by_key(|e| e.manifest.as_ref().unwrap().id);
+        let cutoff = valid.len().saturating_sub(keep);
+        let doomed: Vec<String> = valid[..cutoff]
+            .iter()
+            .map(|e| e.dir.clone())
+            .chain(
+                entries
+                    .iter()
+                    .filter(|e| !e.is_valid())
+                    .map(|e| e.dir.clone()),
+            )
+            .collect();
+        let mut removed = 0;
+        for dir in doomed {
+            for key in store.list(&format!("{dir}/"))? {
+                store.delete(&key)?;
+            }
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::writer::{CheckpointWriter, CrashPoint};
+    use crate::checkpoint::CkptKind;
+    use crate::simclock::SimTime;
+    use crate::storage::BlobStore;
+    use crate::workload::sleeper::{Sleeper, SleeperCfg};
+    use crate::workload::Workload;
+
+    fn write_n(
+        store: &mut BlobStore,
+        writer: &mut CheckpointWriter,
+        w: &mut Sleeper,
+        n: usize,
+        kind: CkptKind,
+    ) -> Vec<CheckpointManifest> {
+        let mut out = Vec::new();
+        for i in 0..n {
+            for _ in 0..3 {
+                w.step().unwrap();
+            }
+            let snap = w.snapshot().unwrap();
+            let m = writer
+                .write(store, SimTime::from_secs(i as u64 * 100), kind, w, &snap)
+                .unwrap()
+                .committed()
+                .unwrap()
+                .clone();
+            out.push(m);
+        }
+        out
+    }
+
+    #[test]
+    fn latest_valid_finds_newest() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 3, CkptKind::Periodic);
+        let latest =
+            CheckpointStore::latest_valid(&mut store, None).unwrap().unwrap();
+        assert_eq!(latest.id, ms[2].id);
+        assert_eq!(latest.total_steps, 9);
+    }
+
+    #[test]
+    fn partial_writes_are_skipped() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        write_n(&mut store, &mut writer, &mut w, 2, CkptKind::Periodic);
+        // a failed termination checkpoint lands after them
+        writer.crash_point = CrashPoint::MidPayload;
+        for _ in 0..3 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        let out = writer
+            .write(&mut store, SimTime::from_secs(999), CkptKind::Termination,
+                   &w, &snap)
+            .unwrap();
+        assert!(out.committed().is_none());
+        // scan sees 3 dirs, 1 invalid
+        let entries = CheckpointStore::scan(&mut store).unwrap();
+        assert_eq!(entries.len(), 3);
+        assert_eq!(entries.iter().filter(|e| e.is_valid()).count(), 2);
+        let bad = entries.iter().find(|e| !e.is_valid()).unwrap();
+        assert!(bad.problem.as_ref().unwrap().contains("COMMIT"));
+        // latest valid is the second periodic, not the newer partial
+        let latest =
+            CheckpointStore::latest_valid(&mut store, None).unwrap().unwrap();
+        assert_eq!(latest.total_steps, 6);
+        // but max_id sees the partial's id (no id reuse)
+        assert_eq!(CheckpointStore::max_id(&mut store).unwrap(), Some(2));
+    }
+
+    #[test]
+    fn corrupted_payload_detected() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 1, CkptKind::Periodic);
+        store.corrupt(&ms[0].payload_key, 5).unwrap();
+        let entries = CheckpointStore::scan(&mut store).unwrap();
+        assert!(!entries[0].is_valid());
+        assert!(entries[0].problem.as_ref().unwrap().contains("crc"));
+        assert!(CheckpointStore::latest_valid(&mut store, None)
+            .unwrap()
+            .is_none());
+        // fetch_payload double-checks too
+        assert!(
+            CheckpointStore::fetch_payload(&mut store, &ms[0]).is_err()
+        );
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 1, CkptKind::Periodic);
+        store.truncate(&ms[0].payload_key, 4).unwrap();
+        let entries = CheckpointStore::scan(&mut store).unwrap();
+        assert!(!entries[0].is_valid());
+        assert!(entries[0].problem.as_ref().unwrap().contains("length"));
+    }
+
+    #[test]
+    fn surface_filter() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        write_n(&mut store, &mut writer, &mut w, 1, CkptKind::AppNative);
+        write_n(&mut store, &mut writer, &mut w, 1, CkptKind::Periodic);
+        let t = CheckpointStore::latest_valid(&mut store, Some(true))
+            .unwrap()
+            .unwrap();
+        assert_eq!(t.kind, CkptKind::Periodic);
+        let a = CheckpointStore::latest_valid(&mut store, Some(false))
+            .unwrap()
+            .unwrap();
+        assert_eq!(a.kind, CkptKind::AppNative);
+    }
+
+    #[test]
+    fn gc_keeps_newest_and_purges_invalid() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        write_n(&mut store, &mut writer, &mut w, 5, CkptKind::Periodic);
+        writer.crash_point = CrashPoint::BeforeCommit;
+        let snap = w.snapshot().unwrap();
+        writer
+            .write(&mut store, SimTime::ZERO, CkptKind::Termination, &w, &snap)
+            .unwrap();
+        let removed = CheckpointStore::gc(&mut store, 2).unwrap();
+        assert_eq!(removed, 4); // 3 old valid + 1 invalid
+        let entries = CheckpointStore::scan(&mut store).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert!(entries.iter().all(|e| e.is_valid()));
+        // newest survived
+        let latest =
+            CheckpointStore::latest_valid(&mut store, None).unwrap().unwrap();
+        assert_eq!(latest.total_steps, 15);
+    }
+
+    #[test]
+    fn empty_share_is_fine() {
+        let mut store = BlobStore::for_tests();
+        assert!(CheckpointStore::scan(&mut store).unwrap().is_empty());
+        assert!(CheckpointStore::latest_valid(&mut store, None)
+            .unwrap()
+            .is_none());
+        assert_eq!(CheckpointStore::max_id(&mut store).unwrap(), None);
+        assert_eq!(CheckpointStore::gc(&mut store, 3).unwrap(), 0);
+    }
+
+    #[test]
+    fn prop_latest_valid_is_max_id_of_valid() {
+        use crate::util::proptest::{forall, shrink_none, Config};
+        forall(
+            Config::default().cases(60),
+            |rng| {
+                // sequence of (commit: bool) checkpoint writes
+                (0..rng.range_u64(0, 10))
+                    .map(|_| rng.chance(0.7))
+                    .collect::<Vec<bool>>()
+            },
+            shrink_none,
+            |commits| {
+                let mut store = BlobStore::for_tests();
+                let mut writer = CheckpointWriter::new();
+                let mut w = Sleeper::new(SleeperCfg::small(), 1);
+                let mut last_valid_id = None;
+                for &ok in commits {
+                    w.step().map_err(|e| e.to_string())?;
+                    writer.crash_point = if ok {
+                        CrashPoint::None
+                    } else {
+                        CrashPoint::BeforeCommit
+                    };
+                    let snap = w.snapshot().map_err(|e| e.to_string())?;
+                    let out = writer
+                        .write(
+                            &mut store,
+                            SimTime::ZERO,
+                            CkptKind::Periodic,
+                            &w,
+                            &snap,
+                        )
+                        .map_err(|e| e.to_string())?;
+                    if let Some(m) = out.committed() {
+                        last_valid_id = Some(m.id);
+                    }
+                }
+                let got = CheckpointStore::latest_valid(&mut store, None)
+                    .map_err(|e| e.to_string())?
+                    .map(|m| m.id);
+                if got != last_valid_id {
+                    return Err(format!(
+                        "latest_valid {got:?} != expected {last_valid_id:?}"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

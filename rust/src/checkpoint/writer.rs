@@ -1,0 +1,369 @@
+//! Two-phase checkpoint writer with crash-point injection and
+//! deadline-bounded (opportunistic) writes.
+//!
+//! Write order: `payload.bin` → `manifest.json` → `COMMIT`. Only the
+//! marker makes a checkpoint visible to [`super::CheckpointStore`], so
+//! death at any intermediate point (instance reclaimed mid-transfer)
+//! degrades to "checkpoint absent", never "checkpoint corrupt but
+//! accepted".
+//!
+//! Termination checkpoints race the eviction deadline (paper §II:
+//! "opportunistic due to their possible failures caused by the short
+//! eviction notification"). [`CheckpointWriter::write_with_budget`] models
+//! the race: if the modeled transfer cannot finish inside the budget the
+//! writer produces exactly the partial on-share state a mid-transfer
+//! death would leave.
+
+use super::manifest::{CheckpointManifest, CkptKind, MANIFEST_VERSION};
+use super::{ckpt_dir};
+use crate::simclock::{SimDuration, SimTime};
+use crate::storage::SharedStore;
+use crate::workload::{Snapshot, Workload};
+use anyhow::Result;
+
+/// Injectable crash points for fault-tolerance tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CrashPoint {
+    /// No injected failure.
+    #[default]
+    None,
+    /// Die before anything reaches the share.
+    BeforePayload,
+    /// Die mid-payload: a truncated payload.bin exists.
+    MidPayload,
+    /// Payload written, manifest missing.
+    BeforeManifest,
+    /// Payload + manifest written, COMMIT missing.
+    BeforeCommit,
+}
+
+/// Result of a deadline-bounded write.
+#[derive(Debug, Clone)]
+pub enum WriteOutcome {
+    /// Fully committed.
+    Committed { manifest: CheckpointManifest, cost: SimDuration },
+    /// Ran out of budget mid-transfer; a partial (invalid) checkpoint may
+    /// exist on the share. `cost` is the time burned before death.
+    Partial { cost: SimDuration },
+}
+
+impl WriteOutcome {
+    pub fn committed(&self) -> Option<&CheckpointManifest> {
+        match self {
+            WriteOutcome::Committed { manifest, .. } => Some(manifest),
+            WriteOutcome::Partial { .. } => None,
+        }
+    }
+
+    pub fn cost(&self) -> SimDuration {
+        match self {
+            WriteOutcome::Committed { cost, .. }
+            | WriteOutcome::Partial { cost } => *cost,
+        }
+    }
+}
+
+/// Monotonic checkpoint id allocator + writer.
+#[derive(Debug, Default)]
+pub struct CheckpointWriter {
+    next_id: u64,
+    pub crash_point: CrashPoint,
+}
+
+impl CheckpointWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resume id allocation above everything already on the share (a new
+    /// instance must not reuse ids).
+    pub fn resume_after(&mut self, max_existing_id: Option<u64>) {
+        if let Some(m) = max_existing_id {
+            self.next_id = self.next_id.max(m + 1);
+        }
+    }
+
+    fn build_manifest(
+        id: u64,
+        kind: CkptKind,
+        now: SimTime,
+        workload: &dyn Workload,
+        snapshot: &Snapshot,
+        payload_key: &str,
+    ) -> CheckpointManifest {
+        let p = workload.progress();
+        CheckpointManifest {
+            version: MANIFEST_VERSION,
+            id,
+            kind,
+            created_at_ms: now.as_millis(),
+            workload: workload.name().to_string(),
+            stage: p.stage,
+            step_in_stage: p.step_in_stage,
+            total_steps: p.total_steps,
+            payload_key: payload_key.to_string(),
+            payload_len: snapshot.bytes.len() as u64,
+            payload_crc32: crate::util::crc32(&snapshot.bytes),
+            payload_sha256: crate::util::sha256_hex(&snapshot.bytes),
+            charged_bytes: snapshot.charged_bytes,
+            fingerprint: workload.fingerprint(),
+        }
+    }
+
+    /// Write a checkpoint of `workload` (no deadline). Returns the
+    /// committed manifest and the total virtual cost, or — under an
+    /// injected crash point — the partial state and cost so far.
+    pub fn write(
+        &mut self,
+        store: &mut dyn SharedStore,
+        now: SimTime,
+        kind: CkptKind,
+        workload: &dyn Workload,
+        snapshot: &Snapshot,
+    ) -> Result<WriteOutcome> {
+        self.write_with_budget(store, now, kind, workload, snapshot, None)
+    }
+
+    /// Write with an optional time budget (the eviction-notice race).
+    pub fn write_with_budget(
+        &mut self,
+        store: &mut dyn SharedStore,
+        now: SimTime,
+        kind: CkptKind,
+        workload: &dyn Workload,
+        snapshot: &Snapshot,
+        budget: Option<SimDuration>,
+    ) -> Result<WriteOutcome> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let dir = ckpt_dir(id, kind);
+        let payload_key = format!("{dir}/payload.bin");
+        let manifest_key = format!("{dir}/manifest.json");
+        let commit_key = format!("{dir}/COMMIT");
+
+        if self.crash_point == CrashPoint::BeforePayload {
+            return Ok(WriteOutcome::Partial { cost: SimDuration::ZERO });
+        }
+
+        // The payload transfer dominates cost; check it against the budget
+        // *before* transferring (the coordinator knows the image size and
+        // share bandwidth up front — same estimate a CRIU pre-dump makes).
+        let payload_cost = store.transfer_cost(snapshot.charged_bytes);
+        let over_budget =
+            budget.map_or(false, |b| payload_cost > b);
+        if over_budget || self.crash_point == CrashPoint::MidPayload {
+            // Mid-transfer death: a truncated payload lands on the share.
+            let burn = budget.unwrap_or(payload_cost);
+            let frac = if payload_cost.is_zero() {
+                0.0
+            } else {
+                (burn.as_millis() as f64 / payload_cost.as_millis() as f64)
+                    .min(1.0)
+            };
+            let keep = (snapshot.bytes.len() as f64 * frac) as usize;
+            let partial = &snapshot.bytes[..keep.min(snapshot.bytes.len())];
+            let charged =
+                (snapshot.charged_bytes as f64 * frac) as u64;
+            // Best effort; if even this fails the share just has less.
+            let _ = store.put_sized(&payload_key, partial, charged);
+            return Ok(WriteOutcome::Partial { cost: burn });
+        }
+
+        let mut cost = store.put_sized(
+            &payload_key,
+            &snapshot.bytes,
+            snapshot.charged_bytes,
+        )?;
+
+        if self.crash_point == CrashPoint::BeforeManifest {
+            return Ok(WriteOutcome::Partial { cost });
+        }
+
+        let manifest =
+            Self::build_manifest(id, kind, now, workload, snapshot, &payload_key);
+        cost += store.put(&manifest_key, manifest.to_json_string().as_bytes())?;
+
+        if self.crash_point == CrashPoint::BeforeCommit {
+            return Ok(WriteOutcome::Partial { cost });
+        }
+
+        cost += store.put(&commit_key, b"1")?;
+
+        // Budget check over the full sequence: the manifest/commit objects
+        // are tiny but still take latency; a budget that can't cover them
+        // means the commit never landed.
+        if let Some(b) = budget {
+            if cost > b {
+                // Roll the visible commit back: the instance died during
+                // the final latency window, so the marker never hit disk.
+                let _ = store.delete(&commit_key);
+                return Ok(WriteOutcome::Partial { cost: b });
+            }
+        }
+
+        Ok(WriteOutcome::Committed { manifest, cost })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::{BlobStore, SharedStore, TransferModel};
+    use crate::workload::sleeper::{Sleeper, SleeperCfg};
+
+    fn setup() -> (BlobStore, Sleeper, CheckpointWriter) {
+        (
+            BlobStore::for_tests(),
+            Sleeper::new(SleeperCfg::small(), 7),
+            CheckpointWriter::new(),
+        )
+    }
+
+    #[test]
+    fn committed_write_produces_three_objects() {
+        let (mut store, mut w, mut writer) = setup();
+        for _ in 0..5 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        let out = writer
+            .write(&mut store, SimTime::from_secs(100), CkptKind::Periodic, &w,
+                   &snap)
+            .unwrap();
+        let m = out.committed().expect("committed");
+        assert_eq!(m.id, 0);
+        assert_eq!(m.total_steps, 5);
+        assert!(store.exists("ckpt/0000000000-periodic/payload.bin"));
+        assert!(store.exists("ckpt/0000000000-periodic/manifest.json"));
+        assert!(store.exists("ckpt/0000000000-periodic/COMMIT"));
+        assert!(out.cost() > SimDuration::ZERO);
+        // payload verifies
+        let (payload, _) =
+            store.get("ckpt/0000000000-periodic/payload.bin").unwrap();
+        m.verify_payload(&payload).unwrap();
+    }
+
+    #[test]
+    fn ids_monotonic_and_resumable() {
+        let (mut store, w, mut writer) = setup();
+        let snap = w.snapshot().unwrap();
+        for expect in 0..3u64 {
+            let out = writer
+                .write(&mut store, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+                .unwrap();
+            assert_eq!(out.committed().unwrap().id, expect);
+        }
+        let mut writer2 = CheckpointWriter::new();
+        writer2.resume_after(Some(2));
+        let out = writer2
+            .write(&mut store, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+        assert_eq!(out.committed().unwrap().id, 3);
+    }
+
+    #[test]
+    fn crash_points_leave_partial_state() {
+        let (_, w, _) = setup();
+        let snap = w.snapshot().unwrap();
+        let cases = [
+            (CrashPoint::BeforePayload, false, false, false),
+            (CrashPoint::MidPayload, true, false, false),
+            (CrashPoint::BeforeManifest, true, false, false),
+            (CrashPoint::BeforeCommit, true, true, false),
+        ];
+        for (cp, payload, manifest, commit) in cases {
+            let mut store = BlobStore::for_tests();
+            let mut writer = CheckpointWriter::new();
+            writer.crash_point = cp;
+            let out = writer
+                .write(&mut store, SimTime::ZERO, CkptKind::Termination, &w,
+                       &snap)
+                .unwrap();
+            assert!(out.committed().is_none(), "{cp:?} must not commit");
+            let dir = "ckpt/0000000000-termination";
+            assert_eq!(
+                store.exists(&format!("{dir}/payload.bin")),
+                payload,
+                "{cp:?} payload"
+            );
+            assert_eq!(
+                store.exists(&format!("{dir}/manifest.json")),
+                manifest,
+                "{cp:?} manifest"
+            );
+            assert_eq!(
+                store.exists(&format!("{dir}/COMMIT")),
+                commit,
+                "{cp:?} commit"
+            );
+        }
+    }
+
+    #[test]
+    fn budget_race_models_notice_deadline() {
+        let (_, w, _) = setup();
+        // 3 GiB at 250 MiB/s ≈ 12.3 s
+        let snap = w.snapshot().unwrap();
+        let mut store = BlobStore::new(
+            TransferModel {
+                bandwidth_mib_s: 250.0,
+                latency: SimDuration::from_millis(20),
+            },
+            None,
+        );
+        let mut writer = CheckpointWriter::new();
+        // 30 s notice: fits
+        let out = writer
+            .write_with_budget(
+                &mut store,
+                SimTime::ZERO,
+                CkptKind::Termination,
+                &w,
+                &snap,
+                Some(SimDuration::from_secs(30)),
+            )
+            .unwrap();
+        assert!(out.committed().is_some(), "30s notice must fit 3GiB");
+        // 5 s notice: cannot fit — partial, truncated payload on share
+        let out2 = writer
+            .write_with_budget(
+                &mut store,
+                SimTime::ZERO,
+                CkptKind::Termination,
+                &w,
+                &snap,
+                Some(SimDuration::from_secs(5)),
+            )
+            .unwrap();
+        match out2 {
+            WriteOutcome::Partial { cost } => {
+                assert_eq!(cost, SimDuration::from_secs(5));
+            }
+            other => panic!("expected partial, got {other:?}"),
+        }
+        let (partial, _) = store
+            .get("ckpt/0000000001-termination/payload.bin")
+            .unwrap();
+        assert!(partial.len() < snap.bytes.len());
+        assert!(!store.exists("ckpt/0000000001-termination/COMMIT"));
+    }
+
+    #[test]
+    fn zero_budget_writes_nothing_useful() {
+        let (_, w, _) = setup();
+        let snap = w.snapshot().unwrap();
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let out = writer
+            .write_with_budget(
+                &mut store,
+                SimTime::ZERO,
+                CkptKind::Termination,
+                &w,
+                &snap,
+                Some(SimDuration::ZERO),
+            )
+            .unwrap();
+        assert!(out.committed().is_none());
+    }
+}

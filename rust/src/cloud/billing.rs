@@ -1,0 +1,234 @@
+//! Billing meters and invoices.
+//!
+//! Every resource the experiment consumes books usage here: instance
+//! uptime at the applicable hourly price, and provisioned shared-storage
+//! capacity at $/100 GiB-month prorated by wall time (how Azure Files
+//! bills the NFS share the paper uses for checkpoint transfer). Fig 2 is
+//! rendered directly from these invoices.
+
+use crate::simclock::SimDuration;
+use std::fmt;
+
+/// One line item on an invoice.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LineItem {
+    pub resource: String,
+    pub detail: String,
+    pub amount: f64,
+}
+
+/// Accumulates usage over one experiment run.
+#[derive(Debug, Clone, Default)]
+pub struct BillingMeter {
+    compute_items: Vec<LineItem>,
+    storage_items: Vec<LineItem>,
+}
+
+/// Hours in the 30-day month Azure prorates against.
+const HOURS_PER_MONTH: f64 = 30.0 * 24.0;
+
+impl BillingMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Book instance uptime: `uptime` at `price_per_hour`.
+    pub fn book_instance(
+        &mut self,
+        instance: &str,
+        vm_size: &str,
+        spot: bool,
+        uptime: SimDuration,
+        price_per_hour: f64,
+    ) {
+        let hours = uptime.as_hours_f64();
+        self.compute_items.push(LineItem {
+            resource: format!("vm/{instance}"),
+            detail: format!(
+                "{vm_size} {} {:.4} h @ ${price_per_hour}/h",
+                if spot { "spot" } else { "on-demand" },
+                hours
+            ),
+            amount: hours * price_per_hour,
+        });
+    }
+
+    /// Book provisioned shared storage for the run's duration.
+    pub fn book_storage(
+        &mut self,
+        share: &str,
+        provisioned_gib: f64,
+        duration: SimDuration,
+        price_per_100gib_month: f64,
+    ) {
+        let months = duration.as_hours_f64() / HOURS_PER_MONTH;
+        let amount = provisioned_gib / 100.0 * price_per_100gib_month * months;
+        self.storage_items.push(LineItem {
+            resource: format!("storage/{share}"),
+            detail: format!(
+                "{provisioned_gib} GiB provisioned x {:.4} months",
+                months
+            ),
+            amount,
+        });
+    }
+
+    pub fn compute_total(&self) -> f64 {
+        self.compute_items.iter().map(|i| i.amount).sum()
+    }
+
+    pub fn storage_total(&self) -> f64 {
+        self.storage_items.iter().map(|i| i.amount).sum()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute_total() + self.storage_total()
+    }
+
+    pub fn invoice(&self) -> Invoice {
+        Invoice {
+            items: self
+                .compute_items
+                .iter()
+                .chain(self.storage_items.iter())
+                .cloned()
+                .collect(),
+        }
+    }
+}
+
+/// Finalized invoice for display.
+#[derive(Debug, Clone)]
+pub struct Invoice {
+    pub items: Vec<LineItem>,
+}
+
+impl Invoice {
+    pub fn total(&self) -> f64 {
+        self.items.iter().map(|i| i.amount).sum()
+    }
+}
+
+impl fmt::Display for Invoice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for item in &self.items {
+            writeln!(
+                f,
+                "  {:<24} {:<52} {:>9}",
+                item.resource,
+                item.detail,
+                crate::util::fmt::dollars(item.amount)
+            )?;
+        }
+        writeln!(
+            f,
+            "  {:<24} {:<52} {:>9}",
+            "TOTAL",
+            "",
+            crate::util::fmt::dollars(self.total())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    #[test]
+    fn paper_baseline_cost() {
+        // Table I row 1 on on-demand: 3:03:26 at $0.38/h ≈ $1.1617
+        let mut m = BillingMeter::new();
+        m.book_instance(
+            "vm-0",
+            "Standard_D8s_v3",
+            false,
+            SimDuration::from_secs(11006),
+            0.38,
+        );
+        assert!((m.total() - 11006.0 / 3600.0 * 0.38).abs() < 1e-9);
+        assert!((m.total() - 1.1618).abs() < 1e-3);
+    }
+
+    #[test]
+    fn spot_price_cut_is_80pct() {
+        let dur = SimDuration::from_secs(11006);
+        let mut od = BillingMeter::new();
+        od.book_instance("a", "D8s", false, dur, 0.38);
+        let mut spot = BillingMeter::new();
+        spot.book_instance("a", "D8s", true, dur, 0.076);
+        let saving = 1.0 - spot.total() / od.total();
+        assert!((saving - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn storage_prorated_by_month() {
+        let mut m = BillingMeter::new();
+        // 100 GiB for a full month at $16/100GiB-month = $16
+        m.book_storage(
+            "nfs",
+            100.0,
+            SimDuration::from_hours(720),
+            16.0,
+        );
+        assert!((m.storage_total() - 16.0).abs() < 1e-9);
+        // 3 hours is tiny
+        let mut m2 = BillingMeter::new();
+        m2.book_storage("nfs", 100.0, SimDuration::from_hours(3), 16.0);
+        assert!((m2.storage_total() - 16.0 * 3.0 / 720.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invoice_renders_and_totals() {
+        let mut m = BillingMeter::new();
+        m.book_instance("vm-0", "D8s", true, SimDuration::from_hours(2), 0.076);
+        m.book_storage("nfs", 100.0, SimDuration::from_hours(2), 16.0);
+        let inv = m.invoice();
+        assert_eq!(inv.items.len(), 2);
+        let s = inv.to_string();
+        assert!(s.contains("TOTAL"));
+        assert!((inv.total() - m.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_billing_additivity() {
+        // Booking uptime in pieces costs the same as booking it whole.
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                let pieces: Vec<u64> =
+                    (0..rng.range_u64(1, 6)).map(|_| rng.below(10_000)).collect();
+                (pieces, 0.01 + rng.f64())
+            },
+            shrink_none,
+            |(pieces, price)| {
+                let mut split = BillingMeter::new();
+                for (i, &p) in pieces.iter().enumerate() {
+                    split.book_instance(
+                        &format!("vm-{i}"),
+                        "D8s",
+                        true,
+                        SimDuration::from_millis(p),
+                        *price,
+                    );
+                }
+                let mut whole = BillingMeter::new();
+                whole.book_instance(
+                    "vm",
+                    "D8s",
+                    true,
+                    SimDuration::from_millis(pieces.iter().sum()),
+                    *price,
+                );
+                if (split.total() - whole.total()).abs() > 1e-9 {
+                    return Err(format!(
+                        "split {} != whole {}",
+                        split.total(),
+                        whole.total()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Eviction plans: when the spot market reclaims an instance.
+//!
+//! Real spot evictions are unpredictable, so the paper injects them with
+//! `az vmss simulate-eviction` at fixed intervals (Table I: every 60 or
+//! 90 minutes). [`EvictionPlan`] generalizes that: fixed interval
+//! (the paper's methodology), Poisson arrivals (spot-market model used by
+//! the ablation benches), and empirical traces. Offsets are measured from
+//! each instance's start, matching how the paper schedules its injections.
+
+use crate::config::EvictionPlanCfg;
+use crate::simclock::SimDuration;
+use crate::util::Prng;
+
+/// Stateful eviction-time generator for a sequence of instances.
+#[derive(Debug, Clone)]
+pub struct EvictionPlan {
+    cfg: EvictionPlanCfg,
+    rng: Prng,
+    /// Index of the next instance (trace plans consume one offset per
+    /// instance; fixed/poisson draw independently per instance).
+    instance_idx: usize,
+}
+
+impl EvictionPlan {
+    pub fn new(cfg: EvictionPlanCfg, seed: u64) -> Self {
+        Self { cfg, rng: Prng::new(seed ^ 0xE71C_7105), instance_idx: 0 }
+    }
+
+    /// Uptime offset at which the *next* instance will receive its
+    /// eviction notice, or `None` if it will never be evicted. Call once
+    /// per instance, in creation order.
+    pub fn next_eviction_offset(&mut self) -> Option<SimDuration> {
+        let idx = self.instance_idx;
+        self.instance_idx += 1;
+        match &self.cfg {
+            EvictionPlanCfg::None => None,
+            EvictionPlanCfg::Fixed { interval } => Some(*interval),
+            EvictionPlanCfg::Poisson { mean } => Some(
+                SimDuration::from_secs_f64(
+                    self.rng.exp(mean.as_secs_f64()).max(1.0),
+                ),
+            ),
+            EvictionPlanCfg::Trace { offsets } => offsets.get(idx).copied(),
+        }
+    }
+
+    pub fn cfg(&self) -> &EvictionPlanCfg {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    #[test]
+    fn none_never_evicts() {
+        let mut p = EvictionPlan::new(EvictionPlanCfg::None, 1);
+        for _ in 0..5 {
+            assert_eq!(p.next_eviction_offset(), None);
+        }
+    }
+
+    #[test]
+    fn fixed_matches_paper_injection() {
+        let mut p = EvictionPlan::new(
+            EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(90) },
+            1,
+        );
+        for _ in 0..4 {
+            assert_eq!(
+                p.next_eviction_offset(),
+                Some(SimDuration::from_mins(90))
+            );
+        }
+    }
+
+    #[test]
+    fn trace_consumed_in_order_then_exhausted() {
+        let offsets =
+            vec![SimDuration::from_mins(10), SimDuration::from_mins(45)];
+        let mut p =
+            EvictionPlan::new(EvictionPlanCfg::Trace { offsets: offsets.clone() }, 1);
+        assert_eq!(p.next_eviction_offset(), Some(offsets[0]));
+        assert_eq!(p.next_eviction_offset(), Some(offsets[1]));
+        assert_eq!(p.next_eviction_offset(), None);
+    }
+
+    #[test]
+    fn poisson_mean_and_determinism() {
+        let mean = SimDuration::from_mins(60);
+        let sample = |seed: u64| -> Vec<u64> {
+            let mut p = EvictionPlan::new(
+                EvictionPlanCfg::Poisson { mean },
+                seed,
+            );
+            (0..2000)
+                .map(|_| p.next_eviction_offset().unwrap().as_millis())
+                .collect()
+        };
+        let a = sample(9);
+        let b = sample(9);
+        assert_eq!(a, b, "same seed must replay identically");
+        let avg =
+            a.iter().map(|&ms| ms as f64).sum::<f64>() / a.len() as f64 / 60_000.0;
+        assert!((avg - 60.0).abs() < 4.0, "poisson mean off: {avg} min");
+    }
+
+    #[test]
+    fn prop_offsets_always_positive() {
+        forall(
+            Config::default().cases(100),
+            |rng| (rng.next_u64(), rng.range_u64(1, 10_000)),
+            shrink_none,
+            |&(seed, mean_secs)| {
+                let mut p = EvictionPlan::new(
+                    EvictionPlanCfg::Poisson {
+                        mean: SimDuration::from_secs(mean_secs),
+                    },
+                    seed,
+                );
+                for _ in 0..20 {
+                    let off = p.next_eviction_offset().unwrap();
+                    if off.is_zero() {
+                        return Err("zero eviction offset".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! IMDS scheduled-events HTTP facade: the real-wire version of
+//! [`super::metadata::MetadataService`].
+//!
+//! Azure serves scheduled events at
+//! `http://169.254.169.254/metadata/scheduledevents?api-version=...` with
+//! the mandatory `Metadata: true` header; inside the VM that address is
+//! non-routable. The facade binds the same document/ack protocol to
+//! `127.0.0.1:<port>` so real-time-mode integration tests drive the
+//! coordinator's monitor over an actual TCP round-trip:
+//!
+//! * `GET  /metadata/scheduledevents?api-version=2020-07-01` → document
+//! * `POST /metadata/scheduledevents?api-version=2020-07-01` → StartRequests
+//! * `POST /admin/simulate-eviction?resource=<vm>` → inject a Preempt
+//!   (the `az vmss simulate-eviction` analog; admin-only, not part of IMDS)
+//!
+//! Virtual-vs-real time: the HTTP facade stamps `NotBefore` from a shared
+//! wall-clock epoch so notices still mean "N seconds from now".
+
+use super::metadata::MetadataService;
+use crate::httpd::{HttpServer, Request, Response};
+use crate::json;
+use crate::simclock::SimTime;
+use anyhow::Result;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+pub const API_VERSION: &str = "2020-07-01";
+pub const EVENTS_PATH: &str = "/metadata/scheduledevents";
+pub const SIMULATE_PATH: &str = "/admin/simulate-eviction";
+
+/// Shared state behind the HTTP endpoint.
+pub struct ImdsState {
+    pub service: MetadataService,
+    epoch: Instant,
+    /// Notice duration for injected evictions (Azure: >= 30 s).
+    pub notice_secs: u64,
+}
+
+impl ImdsState {
+    /// Wall-clock "now" as a SimTime offset from the server epoch, so the
+    /// HTTP facade and in-proc service share one time representation.
+    pub fn now(&self) -> SimTime {
+        SimTime(self.epoch.elapsed().as_millis() as u64)
+    }
+}
+
+/// A running IMDS HTTP endpoint.
+pub struct ImdsHttp {
+    server: HttpServer,
+    state: Arc<Mutex<ImdsState>>,
+}
+
+impl ImdsHttp {
+    pub fn spawn(notice_secs: u64) -> Result<Self> {
+        let state = Arc::new(Mutex::new(ImdsState {
+            service: MetadataService::new(),
+            epoch: Instant::now(),
+            notice_secs,
+        }));
+        let state2 = state.clone();
+        let server = HttpServer::spawn(Arc::new(move |req: &Request| {
+            handle(&state2, req)
+        }))?;
+        Ok(Self { server, state })
+    }
+
+    pub fn base_url(&self) -> String {
+        self.server.base_url()
+    }
+
+    /// URL the coordinator's monitor polls.
+    pub fn events_url(&self) -> String {
+        format!(
+            "{}{}?api-version={}",
+            self.server.base_url(),
+            EVENTS_PATH,
+            API_VERSION
+        )
+    }
+
+    pub fn state(&self) -> &Arc<Mutex<ImdsState>> {
+        &self.state
+    }
+
+    pub fn shutdown(&mut self) {
+        self.server.shutdown();
+    }
+}
+
+fn handle(state: &Arc<Mutex<ImdsState>>, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", EVENTS_PATH) => {
+            // Azure rejects requests without the Metadata header and with
+            // a missing/unknown api-version.
+            if req.header("metadata") != Some("true") {
+                return Response::bad_request("Metadata: true header required");
+            }
+            if req.query_param("api-version") != Some(API_VERSION) {
+                return Response::bad_request("unsupported api-version");
+            }
+            let st = state.lock().unwrap();
+            Response::ok_json(json::to_string(&st.service.document()))
+        }
+        ("POST", EVENTS_PATH) => {
+            let body = match std::str::from_utf8(&req.body)
+                .ok()
+                .and_then(|s| json::parse(s).ok())
+            {
+                Some(v) => v,
+                None => return Response::bad_request("invalid JSON body"),
+            };
+            let mut st = state.lock().unwrap();
+            let n = st.service.start_requests(&body);
+            Response::ok_json(format!("{{\"acknowledged\":{n}}}"))
+        }
+        ("POST", SIMULATE_PATH) => {
+            let resource = match req.query_param("resource") {
+                Some(r) if !r.is_empty() => r.to_string(),
+                _ => return Response::bad_request("resource param required"),
+            };
+            let mut st = state.lock().unwrap();
+            let not_before = st.now()
+                + crate::simclock::SimDuration::from_secs(st.notice_secs);
+            let id = st.service.post_preempt(&resource, not_before);
+            Response::ok_json(format!("{{\"eventId\":\"{id}\"}}"))
+        }
+        _ => Response::not_found(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::metadata::parse_document;
+    use crate::httpd::{http_get, http_post};
+
+    #[test]
+    fn get_requires_metadata_header_and_api_version() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        // Our client always sends Metadata: true, so a wrong api-version is
+        // the reachable failure mode.
+        let (status, _) = http_get(&format!(
+            "{}{}?api-version=1999-01-01",
+            imds.base_url(),
+            EVENTS_PATH
+        ))
+        .unwrap();
+        assert_eq!(status, 400);
+        let (status, body) = http_get(&imds.events_url()).unwrap();
+        assert_eq!(status, 200);
+        let (inc, events) =
+            parse_document(&crate::json::parse(&body).unwrap()).unwrap();
+        assert_eq!(inc, 0);
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn simulate_eviction_round_trip() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        let (status, body) = http_post(
+            &format!("{}{}?resource=vm-0", imds.base_url(), SIMULATE_PATH),
+            "",
+        )
+        .unwrap();
+        assert_eq!(status, 200, "{body}");
+        assert!(body.contains("eventId"));
+
+        let (_, doc) = http_get(&imds.events_url()).unwrap();
+        let (inc, events) =
+            parse_document(&crate::json::parse(&doc).unwrap()).unwrap();
+        assert_eq!(inc, 1);
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].event_type, "Preempt");
+        assert_eq!(events[0].resource, "vm-0");
+        // notice is ~30 s out from the server's epoch-relative now
+        let st = imds.state().lock().unwrap();
+        let remaining = events[0].not_before.since(st.now());
+        assert!(remaining.as_secs() >= 29, "notice too short: {remaining}");
+    }
+
+    #[test]
+    fn ack_over_http() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        http_post(
+            &format!("{}{}?resource=vm-1", imds.base_url(), SIMULATE_PATH),
+            "",
+        )
+        .unwrap();
+        let (_, doc) = http_get(&imds.events_url()).unwrap();
+        let (_, events) =
+            parse_document(&crate::json::parse(&doc).unwrap()).unwrap();
+        let ack = format!(
+            "{{\"StartRequests\":[{{\"EventId\":\"{}\"}}]}}",
+            events[0].event_id
+        );
+        let (status, body) = http_post(
+            &format!("{}{}?api-version={}", imds.base_url(), EVENTS_PATH,
+                     API_VERSION),
+            &ack,
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("\"acknowledged\":1"), "{body}");
+    }
+
+    #[test]
+    fn simulate_requires_resource() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        let (status, _) =
+            http_post(&format!("{}{}", imds.base_url(), SIMULATE_PATH), "")
+                .unwrap();
+        assert_eq!(status, 400);
+    }
+
+    #[test]
+    fn bad_json_ack_rejected() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        let (status, _) = http_post(
+            &format!("{}{}?api-version={}", imds.base_url(), EVENTS_PATH,
+                     API_VERSION),
+            "not json",
+        )
+        .unwrap();
+        assert_eq!(status, 400);
+    }
+}

@@ -1,0 +1,130 @@
+//! VM instance lifecycle.
+//!
+//! An [`Instance`] models one spot (or on-demand) VM: provisioning →
+//! running → (notice received) → evicted/deallocated. The scale set
+//! ([`super::scale_set`]) owns creation and replacement; the billing meter
+//! books uptime on termination.
+
+use crate::simclock::SimTime;
+
+/// Opaque instance identifier, unique per experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstanceId(pub u64);
+
+impl std::fmt::Display for InstanceId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "vm-{}", self.0)
+    }
+}
+
+/// Lifecycle state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Being created by the scale set; not yet running workloads.
+    Provisioning,
+    /// Up and billable.
+    Running,
+    /// Eviction notice delivered; still running until the deadline.
+    Noticed,
+    /// Terminated (evicted or completed); no longer billable.
+    Terminated,
+}
+
+/// One virtual machine.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub vm_size: String,
+    pub spot: bool,
+    pub state: InstanceState,
+    /// When the VM entered `Running`.
+    pub started_at: SimTime,
+    /// When the VM was terminated (for uptime billing).
+    pub terminated_at: Option<SimTime>,
+}
+
+impl Instance {
+    pub fn new(id: InstanceId, vm_size: &str, spot: bool, now: SimTime) -> Self {
+        Self {
+            id,
+            vm_size: vm_size.to_string(),
+            spot,
+            state: InstanceState::Running,
+            started_at: now,
+            terminated_at: None,
+        }
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.state, InstanceState::Running | InstanceState::Noticed)
+    }
+
+    /// Mark the eviction notice as delivered.
+    pub fn notice(&mut self) {
+        assert_eq!(
+            self.state,
+            InstanceState::Running,
+            "notice on non-running instance {}",
+            self.id
+        );
+        self.state = InstanceState::Noticed;
+    }
+
+    /// Terminate at `now`; returns billable uptime.
+    pub fn terminate(&mut self, now: SimTime) -> crate::simclock::SimDuration {
+        assert!(
+            self.is_running(),
+            "terminate on non-running instance {}",
+            self.id
+        );
+        self.state = InstanceState::Terminated;
+        self.terminated_at = Some(now);
+        now.since(self.started_at)
+    }
+
+    /// Uptime so far (or final uptime once terminated).
+    pub fn uptime(&self, now: SimTime) -> crate::simclock::SimDuration {
+        match self.terminated_at {
+            Some(t) => t.since(self.started_at),
+            None => now.since(self.started_at),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimDuration;
+
+    #[test]
+    fn lifecycle() {
+        let mut vm = Instance::new(
+            InstanceId(1),
+            "Standard_D8s_v3",
+            true,
+            SimTime::from_secs(100),
+        );
+        assert!(vm.is_running());
+        vm.notice();
+        assert_eq!(vm.state, InstanceState::Noticed);
+        assert!(vm.is_running());
+        let uptime = vm.terminate(SimTime::from_secs(400));
+        assert_eq!(uptime, SimDuration::from_secs(300));
+        assert!(!vm.is_running());
+        assert_eq!(vm.uptime(SimTime::from_secs(999)).as_secs(), 300);
+    }
+
+    #[test]
+    #[should_panic(expected = "notice on non-running")]
+    fn cannot_notice_terminated() {
+        let mut vm =
+            Instance::new(InstanceId(2), "D8s", true, SimTime::ZERO);
+        vm.terminate(SimTime::from_secs(1));
+        vm.notice();
+    }
+
+    #[test]
+    fn display_id() {
+        assert_eq!(InstanceId(7).to_string(), "vm-7");
+    }
+}

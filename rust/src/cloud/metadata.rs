@@ -1,0 +1,275 @@
+//! Scheduled-events metadata service (Azure IMDS analog, paper §III-B).
+//!
+//! Azure exposes upcoming platform events — including spot `Preempt` — at
+//! a non-routable endpoint inside the VM:
+//!
+//! ```text
+//! GET http://169.254.169.254/metadata/scheduledevents?api-version=2020-07-01
+//! ```
+//!
+//! returning a JSON document with a `DocumentIncarnation` counter and an
+//! `Events` array; a VM acknowledges readiness by POSTing
+//! `{"StartRequests": [{"EventId": …}]}`. The eviction notice gives a
+//! minimum of 30 s (`NotBefore`).
+//!
+//! This module is the in-process service: the same document schema, the
+//! same ack protocol, driven by the virtual clock. [`super::imds_http`]
+//! exposes it over a real localhost HTTP endpoint for real-time mode, so
+//! the coordinator's monitor exercises the identical wire format the
+//! Azure integration would.
+
+use crate::json::Value;
+use crate::simclock::SimTime;
+use crate::util::next_seq;
+use std::collections::BTreeMap;
+
+/// Event lifecycle status (subset Azure exposes for Preempt).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventStatus {
+    /// Announced; the VM may prepare until `NotBefore`.
+    Scheduled,
+    /// The VM acknowledged (StartRequests) — the platform may proceed
+    /// immediately.
+    Started,
+}
+
+impl EventStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventStatus::Scheduled => "Scheduled",
+            EventStatus::Started => "Started",
+        }
+    }
+}
+
+/// One scheduled event.
+#[derive(Debug, Clone)]
+pub struct ScheduledEvent {
+    pub event_id: String,
+    pub event_type: String, // "Preempt" | "Reboot" | "Redeploy" | "Terminate"
+    pub resource: String,   // instance name
+    pub status: EventStatus,
+    pub not_before: SimTime,
+}
+
+impl ScheduledEvent {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("EventId", self.event_id.as_str())
+            .set("EventType", self.event_type.as_str())
+            .set("ResourceType", "VirtualMachine")
+            .set("Resources", vec![self.resource.as_str()])
+            .set("EventStatus", self.status.as_str())
+            // Azure renders an HTTP-date; the simulator's timeline is
+            // virtual, so we publish the virtual instant in both a human
+            // form and a machine-readable millisecond mirror.
+            .set("NotBefore", format!("{:?}", self.not_before))
+            .set("NotBeforeMs", self.not_before.as_millis())
+            .set("EventSource", "Platform")
+            .set("DurationInSeconds", -1i64);
+        v
+    }
+}
+
+/// The per-scale-set scheduled-events service.
+#[derive(Debug, Default)]
+pub struct MetadataService {
+    incarnation: u64,
+    events: BTreeMap<String, ScheduledEvent>,
+}
+
+impl MetadataService {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Platform announces a preempt of `resource` effective `not_before`.
+    /// Returns the event id.
+    pub fn post_preempt(&mut self, resource: &str, not_before: SimTime) -> String {
+        let event_id = format!("evt-{}", next_seq());
+        self.events.insert(
+            event_id.clone(),
+            ScheduledEvent {
+                event_id: event_id.clone(),
+                event_type: "Preempt".into(),
+                resource: resource.to_string(),
+                status: EventStatus::Scheduled,
+                not_before,
+            },
+        );
+        self.incarnation += 1;
+        event_id
+    }
+
+    /// The GET document, exactly the IMDS shape.
+    pub fn document(&self) -> Value {
+        let mut doc = Value::obj();
+        doc.set("DocumentIncarnation", self.incarnation);
+        doc.set(
+            "Events",
+            Value::Array(self.events.values().map(|e| e.to_json()).collect()),
+        );
+        doc
+    }
+
+    /// Handle a StartRequests ack body; returns the number of events
+    /// acknowledged. Unknown event ids are ignored (Azure semantics).
+    pub fn start_requests(&mut self, body: &Value) -> usize {
+        let mut n = 0;
+        if let Some(reqs) = body.get("StartRequests").and_then(Value::as_array) {
+            for r in reqs {
+                if let Some(id) = r.get("EventId").and_then(Value::as_str) {
+                    if let Some(ev) = self.events.get_mut(id) {
+                        if ev.status == EventStatus::Scheduled {
+                            ev.status = EventStatus::Started;
+                            self.incarnation += 1;
+                            n += 1;
+                        }
+                    }
+                }
+            }
+        }
+        n
+    }
+
+    /// Platform completed the event (the instance is gone): remove it.
+    pub fn complete(&mut self, event_id: &str) {
+        if self.events.remove(event_id).is_some() {
+            self.incarnation += 1;
+        }
+    }
+
+    /// Remove all events for a resource (instance terminated).
+    pub fn clear_resource(&mut self, resource: &str) {
+        let before = self.events.len();
+        self.events.retain(|_, e| e.resource != resource);
+        if self.events.len() != before {
+            self.incarnation += 1;
+        }
+    }
+
+    pub fn incarnation(&self) -> u64 {
+        self.incarnation
+    }
+
+    /// Current events (test/inspection helper).
+    pub fn events(&self) -> impl Iterator<Item = &ScheduledEvent> {
+        self.events.values()
+    }
+}
+
+/// Parse the IMDS document into typed events — the client half, used by
+/// the coordinator's monitor against both the in-proc service and the
+/// HTTP endpoint.
+pub fn parse_document(doc: &Value) -> anyhow::Result<(u64, Vec<ScheduledEvent>)> {
+    let incarnation = doc.req_u64("DocumentIncarnation")?;
+    let mut events = Vec::new();
+    for e in doc.req_array("Events")? {
+        let status = match e.req_str("EventStatus")? {
+            "Scheduled" => EventStatus::Scheduled,
+            "Started" => EventStatus::Started,
+            other => anyhow::bail!("unknown EventStatus '{other}'"),
+        };
+        events.push(ScheduledEvent {
+            event_id: e.req_str("EventId")?.to_string(),
+            event_type: e.req_str("EventType")?.to_string(),
+            resource: e
+                .req_array("Resources")?
+                .first()
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            status,
+            not_before: SimTime(e.req_u64("NotBeforeMs")?),
+        });
+    }
+    Ok((incarnation, events))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_document_shape() {
+        let svc = MetadataService::new();
+        let doc = svc.document();
+        assert_eq!(doc.req_u64("DocumentIncarnation").unwrap(), 0);
+        assert_eq!(doc.req_array("Events").unwrap().len(), 0);
+    }
+
+    #[test]
+    fn preempt_round_trips_through_wire_format() {
+        let mut svc = MetadataService::new();
+        let id = svc.post_preempt("vm-3", SimTime::from_secs(5400));
+        let doc = svc.document();
+        let (inc, events) = parse_document(&doc).unwrap();
+        assert_eq!(inc, 1);
+        assert_eq!(events.len(), 1);
+        let e = &events[0];
+        assert_eq!(e.event_id, id);
+        assert_eq!(e.event_type, "Preempt");
+        assert_eq!(e.resource, "vm-3");
+        assert_eq!(e.status, EventStatus::Scheduled);
+        assert_eq!(e.not_before, SimTime::from_secs(5400));
+    }
+
+    #[test]
+    fn ack_protocol() {
+        let mut svc = MetadataService::new();
+        let id = svc.post_preempt("vm-0", SimTime::from_secs(100));
+        let mut body = Value::obj();
+        let mut req = Value::obj();
+        req.set("EventId", id.as_str());
+        body.set("StartRequests", Value::Array(vec![req]));
+        assert_eq!(svc.start_requests(&body), 1);
+        // double-ack is a no-op
+        assert_eq!(svc.start_requests(&body), 0);
+        let (_, events) = parse_document(&svc.document()).unwrap();
+        assert_eq!(events[0].status, EventStatus::Started);
+    }
+
+    #[test]
+    fn unknown_ack_ignored() {
+        let mut svc = MetadataService::new();
+        let mut body = Value::obj();
+        let mut req = Value::obj();
+        req.set("EventId", "evt-nope");
+        body.set("StartRequests", Value::Array(vec![req]));
+        assert_eq!(svc.start_requests(&body), 0);
+    }
+
+    #[test]
+    fn incarnation_increments_on_every_change() {
+        let mut svc = MetadataService::new();
+        let base = svc.incarnation();
+        let id = svc.post_preempt("vm-1", SimTime::from_secs(1));
+        assert_eq!(svc.incarnation(), base + 1);
+        svc.complete(&id);
+        assert_eq!(svc.incarnation(), base + 2);
+        svc.complete(&id); // absent: no change
+        assert_eq!(svc.incarnation(), base + 2);
+    }
+
+    #[test]
+    fn clear_resource_removes_only_matching() {
+        let mut svc = MetadataService::new();
+        svc.post_preempt("vm-1", SimTime::from_secs(1));
+        svc.post_preempt("vm-2", SimTime::from_secs(2));
+        svc.clear_resource("vm-1");
+        let (_, events) = parse_document(&svc.document()).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].resource, "vm-2");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        let doc = crate::json::parse(r#"{"Events": []}"#).unwrap();
+        assert!(parse_document(&doc).is_err());
+        let doc = crate::json::parse(
+            r#"{"DocumentIncarnation": 1, "Events": [{"EventId": "e"}]}"#,
+        )
+        .unwrap();
+        assert!(parse_document(&doc).is_err());
+    }
+}

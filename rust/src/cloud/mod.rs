@@ -1,0 +1,22 @@
+//! The virtual cloud: spot/on-demand instances, scale sets, pricing,
+//! billing, eviction plans, and the scheduled-events metadata service.
+//!
+//! This is the substrate the paper assumes (Azure spot VMs + Scale Sets +
+//! IMDS + `az vmss simulate-eviction`), rebuilt so its behaviourally
+//! relevant parameters — when instances die, how long replacements take,
+//! how much notice evictions give, what compute-hours cost — are explicit,
+//! configurable, and metered (DESIGN.md §2).
+
+pub mod pricing;
+pub mod billing;
+pub mod instance;
+pub mod eviction;
+pub mod metadata;
+pub mod scale_set;
+pub mod imds_http;
+
+pub use eviction::EvictionPlan;
+pub use instance::{Instance, InstanceId, InstanceState};
+pub use metadata::{EventStatus, MetadataService, ScheduledEvent};
+pub use pricing::{PriceBook, VmSize};
+pub use scale_set::ScaleSet;

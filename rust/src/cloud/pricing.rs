@@ -1,0 +1,131 @@
+//! VM size catalog and price book.
+//!
+//! Prices default to the paper's testbed: Standard_D8s_v3 (8 vCPU, 32 GiB)
+//! at $0.38/h on-demand and $0.076/h spot (paper §III). Additional sizes
+//! let the OOM-resume example (paper §IV) restore a checkpoint onto a
+//! larger instance.
+
+use anyhow::{bail, Result};
+
+/// One VM size row in the catalog.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VmSize {
+    pub name: String,
+    pub vcpus: u32,
+    pub mem_gib: u32,
+    pub ondemand_per_hour: f64,
+    pub spot_per_hour: f64,
+}
+
+impl VmSize {
+    pub fn price_per_hour(&self, spot: bool) -> f64 {
+        if spot {
+            self.spot_per_hour
+        } else {
+            self.ondemand_per_hour
+        }
+    }
+
+    /// Spot discount fraction, e.g. 0.8 for 80% off.
+    pub fn spot_discount(&self) -> f64 {
+        1.0 - self.spot_per_hour / self.ondemand_per_hour
+    }
+}
+
+/// The size catalog (Azure Dsv3-series analog).
+#[derive(Debug, Clone)]
+pub struct PriceBook {
+    sizes: Vec<VmSize>,
+}
+
+impl Default for PriceBook {
+    fn default() -> Self {
+        // D2s..D32s v3: on-demand scales linearly with cores; spot keeps
+        // the paper's 80% discount.
+        let mk = |name: &str, vcpus: u32, mem: u32, od: f64, spot: f64| VmSize {
+            name: name.into(),
+            vcpus,
+            mem_gib: mem,
+            ondemand_per_hour: od,
+            spot_per_hour: spot,
+        };
+        Self {
+            sizes: vec![
+                mk("Standard_D2s_v3", 2, 8, 0.095, 0.019),
+                mk("Standard_D4s_v3", 4, 16, 0.19, 0.038),
+                mk("Standard_D8s_v3", 8, 32, 0.38, 0.076), // paper's VM
+                mk("Standard_D16s_v3", 16, 64, 0.76, 0.152),
+                mk("Standard_D32s_v3", 32, 128, 1.52, 0.304),
+            ],
+        }
+    }
+}
+
+impl PriceBook {
+    pub fn lookup(&self, name: &str) -> Result<&VmSize> {
+        match self.sizes.iter().find(|s| s.name == name) {
+            Some(s) => Ok(s),
+            None => bail!(
+                "unknown VM size '{name}' (have: {})",
+                self.sizes
+                    .iter()
+                    .map(|s| s.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        }
+    }
+
+    /// Smallest size with at least `mem_gib` memory (OOM-resume upsizing).
+    pub fn smallest_with_mem(&self, mem_gib: u32) -> Option<&VmSize> {
+        self.sizes
+            .iter()
+            .filter(|s| s.mem_gib >= mem_gib)
+            .min_by_key(|s| s.mem_gib)
+    }
+
+    pub fn sizes(&self) -> &[VmSize] {
+        &self.sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_vm_prices() {
+        let book = PriceBook::default();
+        let d8 = book.lookup("Standard_D8s_v3").unwrap();
+        assert_eq!(d8.ondemand_per_hour, 0.38);
+        assert_eq!(d8.spot_per_hour, 0.076);
+        assert_eq!(d8.vcpus, 8);
+        assert_eq!(d8.mem_gib, 32);
+        // the paper's "simply from the price cuts": 80% discount
+        assert!((d8.spot_discount() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_size_errors() {
+        assert!(PriceBook::default().lookup("Standard_Z1").is_err());
+    }
+
+    #[test]
+    fn upsizing_for_oom() {
+        let book = PriceBook::default();
+        assert_eq!(
+            book.smallest_with_mem(33).unwrap().name,
+            "Standard_D16s_v3"
+        );
+        assert_eq!(book.smallest_with_mem(64).unwrap().name, "Standard_D16s_v3");
+        assert!(book.smallest_with_mem(1024).is_none());
+    }
+
+    #[test]
+    fn price_selector() {
+        let book = PriceBook::default();
+        let d8 = book.lookup("Standard_D8s_v3").unwrap();
+        assert_eq!(d8.price_per_hour(true), 0.076);
+        assert_eq!(d8.price_per_hour(false), 0.38);
+    }
+}

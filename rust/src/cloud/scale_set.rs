@@ -1,0 +1,207 @@
+//! Scale set: the VM pool manager (Azure "Virtual Machine Scale Sets").
+//!
+//! The paper deploys workloads through scale sets because they "act as a
+//! VM pool manager that is capable of restarting new spot instances upon
+//! eviction of existing spot instances" (§III). This model keeps one
+//! instance alive (capacity 1, like the paper's runs): when the current
+//! instance is evicted, a replacement enters provisioning and comes up
+//! after `provisioning_delay`. Custom Data (the coordinator launch script)
+//! is re-run on every new instance — in this codebase that corresponds to
+//! the restart path of [`crate::coordinator`].
+
+use super::billing::BillingMeter;
+use super::instance::{Instance, InstanceId};
+use super::pricing::PriceBook;
+use crate::simclock::{SimDuration, SimTime};
+use anyhow::Result;
+
+/// Capacity-1 scale set with automatic replacement.
+#[derive(Debug)]
+pub struct ScaleSet {
+    vm_size: String,
+    spot: bool,
+    provisioning_delay: SimDuration,
+    price_book: PriceBook,
+    next_id: u64,
+    current: Option<Instance>,
+    /// Total instances launched over the experiment (for reporting).
+    launched: u32,
+}
+
+impl ScaleSet {
+    pub fn new(
+        vm_size: &str,
+        spot: bool,
+        provisioning_delay: SimDuration,
+        price_book: PriceBook,
+    ) -> Result<Self> {
+        // Validate the size exists up front.
+        price_book.lookup(vm_size)?;
+        Ok(Self {
+            vm_size: vm_size.to_string(),
+            spot,
+            provisioning_delay,
+            price_book,
+            next_id: 0,
+            current: None,
+            launched: 0,
+        })
+    }
+
+    /// Launch a new instance, immediately Running at `now`. (The
+    /// provisioning delay is charged by the driver between the eviction
+    /// and calling this — see [`Self::provisioning_delay`].)
+    pub fn launch(&mut self, now: SimTime) -> &Instance {
+        assert!(
+            self.current.as_ref().map_or(true, |i| !i.is_running()),
+            "scale set capacity is 1"
+        );
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        self.launched += 1;
+        self.current = Some(Instance::new(id, &self.vm_size, self.spot, now));
+        self.current.as_ref().unwrap()
+    }
+
+    /// The currently-live instance, if any.
+    pub fn current(&self) -> Option<&Instance> {
+        self.current.as_ref().filter(|i| i.is_running())
+    }
+
+    pub fn current_mut(&mut self) -> Option<&mut Instance> {
+        self.current.as_mut().filter(|i| i.is_running())
+    }
+
+    /// Terminate the current instance at `now`, booking its uptime.
+    pub fn terminate_current(
+        &mut self,
+        now: SimTime,
+        billing: &mut BillingMeter,
+    ) -> Option<InstanceId> {
+        let inst = self.current.as_mut()?;
+        if !inst.is_running() {
+            return None;
+        }
+        let uptime = inst.terminate(now);
+        let size = self
+            .price_book
+            .lookup(&inst.vm_size)
+            .expect("validated at construction");
+        billing.book_instance(
+            &inst.id.to_string(),
+            &inst.vm_size,
+            inst.spot,
+            uptime,
+            size.price_per_hour(inst.spot),
+        );
+        Some(inst.id)
+    }
+
+    /// Delay before a replacement instance is Running.
+    pub fn provisioning_delay(&self) -> SimDuration {
+        self.provisioning_delay
+    }
+
+    /// Change the VM size for future launches (OOM-resume upsizing,
+    /// paper §IV).
+    pub fn resize(&mut self, vm_size: &str) -> Result<()> {
+        self.price_book.lookup(vm_size)?;
+        self.vm_size = vm_size.to_string();
+        Ok(())
+    }
+
+    pub fn vm_size(&self) -> &str {
+        &self.vm_size
+    }
+
+    pub fn spot(&self) -> bool {
+        self.spot
+    }
+
+    pub fn launched(&self) -> u32 {
+        self.launched
+    }
+
+    pub fn price_book(&self) -> &PriceBook {
+        &self.price_book
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> ScaleSet {
+        ScaleSet::new(
+            "Standard_D8s_v3",
+            true,
+            SimDuration::from_secs(90),
+            PriceBook::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn launch_terminate_relaunch() {
+        let mut ss = mk();
+        let mut billing = BillingMeter::new();
+        let id0 = ss.launch(SimTime::ZERO).id;
+        assert!(ss.current().is_some());
+        let tid = ss
+            .terminate_current(SimTime::from_secs(3600), &mut billing)
+            .unwrap();
+        assert_eq!(tid, id0);
+        assert!(ss.current().is_none());
+        // one spot hour at $0.076
+        assert!((billing.total() - 0.076).abs() < 1e-9);
+        let id1 = ss.launch(SimTime::from_secs(3690)).id;
+        assert_ne!(id0, id1);
+        assert_eq!(ss.launched(), 2);
+    }
+
+    #[test]
+    fn terminate_when_empty_is_none() {
+        let mut ss = mk();
+        let mut billing = BillingMeter::new();
+        assert!(ss.terminate_current(SimTime::ZERO, &mut billing).is_none());
+        assert_eq!(billing.total(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity is 1")]
+    fn capacity_is_one() {
+        let mut ss = mk();
+        ss.launch(SimTime::ZERO);
+        ss.launch(SimTime::from_secs(1));
+    }
+
+    #[test]
+    fn rejects_unknown_size() {
+        assert!(ScaleSet::new(
+            "Standard_Zeppelin",
+            true,
+            SimDuration::ZERO,
+            PriceBook::default()
+        )
+        .is_err());
+        let mut ss = mk();
+        assert!(ss.resize("Standard_Zeppelin").is_err());
+        assert!(ss.resize("Standard_D16s_v3").is_ok());
+        assert_eq!(ss.vm_size(), "Standard_D16s_v3");
+    }
+
+    #[test]
+    fn ondemand_billing_price() {
+        let mut ss = ScaleSet::new(
+            "Standard_D8s_v3",
+            false,
+            SimDuration::ZERO,
+            PriceBook::default(),
+        )
+        .unwrap();
+        let mut billing = BillingMeter::new();
+        ss.launch(SimTime::ZERO);
+        ss.terminate_current(SimTime::from_secs(3600), &mut billing);
+        assert!((billing.total() - 0.38).abs() < 1e-9);
+    }
+}

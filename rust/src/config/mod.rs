@@ -1,0 +1,16 @@
+//! Configuration: a from-scratch TOML-subset parser plus the typed
+//! scenario schema the CLI and experiment drivers consume.
+//!
+//! The coordinator is configured through files (paper §II: "the
+//! coordinator is able to invoke the corresponding interfaces through its
+//! configuration files"); `scenario.rs` defines that schema and maps it
+//! onto the simulator and the real-time coordinator alike.
+
+pub mod toml;
+pub mod scenario;
+
+pub use scenario::{
+    CheckpointMethodCfg, EvictionPlanCfg, ScenarioConfig, StorageCfg,
+    WorkloadCfg,
+};
+pub use toml::{TomlDoc, TomlValue};

@@ -1,0 +1,519 @@
+//! Typed scenario schema: everything one experiment run needs.
+//!
+//! A scenario file (TOML subset) fully determines a run: the workload and
+//! its calibration, the eviction plan, the checkpoint policy, cloud
+//! pricing/latency parameters and the shared-storage model. Defaults
+//! reproduce the paper's testbed: Standard_D8s_v3 ($0.38 on-demand /
+//! $0.076 spot per hour), Azure Files NFS at $16 per 100 GiB-month, 30 s
+//! minimum eviction notice, and Table I row-1 baseline stage durations.
+
+use crate::config::toml::{TomlDoc, TomlValue};
+use crate::simclock::SimDuration;
+use anyhow::{bail, Context, Result};
+
+/// Which checkpoint mechanism protects the workload (paper §III-A).
+#[derive(Debug, Clone, PartialEq)]
+pub enum CheckpointMethodCfg {
+    /// No protection (Table I rows 1–2).
+    None,
+    /// Application-native: checkpoints only at the workload's own
+    /// milestones (metaSPAdes-style); cannot be taken on demand.
+    AppNative,
+    /// Transparent (CRIU-analog): periodic full-state snapshots at the
+    /// given interval, plus opportunistic termination checkpoints.
+    Transparent { interval: SimDuration },
+}
+
+impl CheckpointMethodCfg {
+    pub fn label(&self) -> String {
+        match self {
+            CheckpointMethodCfg::None => "none".into(),
+            CheckpointMethodCfg::AppNative => "application".into(),
+            CheckpointMethodCfg::Transparent { interval } => {
+                format!("transparent/{}m", interval.as_secs() / 60)
+            }
+        }
+    }
+}
+
+/// When the spot instance gets evicted (paper §III-B: evictions are
+/// injected, mirroring `az vmss simulate-eviction`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EvictionPlanCfg {
+    /// Never evicted (on-demand semantics, or lucky spot).
+    None,
+    /// Evict every `interval` of *instance uptime* (the paper's
+    /// "Eviction every 60/90 min").
+    Fixed { interval: SimDuration },
+    /// Poisson process with the given mean inter-arrival time.
+    Poisson { mean: SimDuration },
+    /// Explicit eviction instants measured from each instance's start —
+    /// replays an empirical spot-market trace.
+    Trace { offsets: Vec<SimDuration> },
+}
+
+impl EvictionPlanCfg {
+    pub fn label(&self) -> String {
+        match self {
+            EvictionPlanCfg::None => "N/A".into(),
+            EvictionPlanCfg::Fixed { interval } => {
+                format!("every {} min", interval.as_secs() / 60)
+            }
+            EvictionPlanCfg::Poisson { mean } => {
+                format!("poisson mean {} min", mean.as_secs() / 60)
+            }
+            EvictionPlanCfg::Trace { offsets } => {
+                format!("trace ({} events)", offsets.len())
+            }
+        }
+    }
+}
+
+/// Workload selection + calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadCfg {
+    /// "minimeta" (PJRT-backed assembler) or "sleeper" (pure-Rust
+    /// calibration workload used by unit tests and fast benches).
+    pub kind: String,
+    /// k values, one pipeline stage each (paper: 33,55,77,99,127).
+    pub ks: Vec<u32>,
+    /// Uninterrupted virtual duration of each stage, seconds (paper Table
+    /// I row 1: 33:50, 38:53, 39:51, 40:19, 30:33).
+    pub stage_secs: Vec<u64>,
+    /// Read count for the MiniMeta workload (drives real compute volume).
+    pub total_reads: u64,
+    /// Denoise sweeps per stage (real compute volume of the stage tail).
+    pub denoise_sweeps: u32,
+    /// App-native checkpoint milestones per stage (metaSPAdes writes
+    /// several internal checkpoints per k; restart loses progress since
+    /// the last milestone).
+    pub app_milestones_per_stage: u32,
+    /// Modeled (virtual) size of a transparent checkpoint image — the
+    /// CRIU memory-image analog. Real serialized bytes are small at this
+    /// scale; transfer time and NFS billing use this value (DESIGN.md §6).
+    pub state_gib: f64,
+    /// Modeled size of an app-native checkpoint (on-disk intermediate
+    /// files are typically smaller than a full memory image).
+    pub app_ckpt_gib: f64,
+    /// PRNG seed for read synthesis.
+    pub seed: u64,
+}
+
+impl Default for WorkloadCfg {
+    fn default() -> Self {
+        Self {
+            kind: "minimeta".into(),
+            ks: vec![33, 55, 77, 99, 127],
+            // Table I row 1 (baseline, Spot-on OFF).
+            stage_secs: vec![2030, 2333, 2391, 2419, 1833],
+            total_reads: 32 * 1024,
+            denoise_sweeps: 24,
+            app_milestones_per_stage: 2,
+            state_gib: 3.0,
+            app_ckpt_gib: 1.2,
+            seed: 2022,
+        }
+    }
+}
+
+/// Cloud model parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CloudCfg {
+    /// VM size name looked up in the price book.
+    pub vm_size: String,
+    /// Use spot pricing (and spot eviction semantics) or on-demand.
+    pub spot: bool,
+    /// Scale-set replacement provisioning delay after an eviction.
+    pub provisioning_delay: SimDuration,
+    /// Eviction notice the metadata service gives (Azure: minimum 30 s).
+    pub notice: SimDuration,
+    /// Coordinator's scheduled-events poll period.
+    pub poll_interval: SimDuration,
+    /// Fractional slowdown the coordinator imposes on the workload (the
+    /// paper's rows 1→2 delta: ~1%).
+    pub coordinator_overhead: f64,
+}
+
+impl Default for CloudCfg {
+    fn default() -> Self {
+        Self {
+            vm_size: "Standard_D8s_v3".into(),
+            spot: true,
+            provisioning_delay: SimDuration::from_secs(90),
+            notice: SimDuration::from_secs(30),
+            poll_interval: SimDuration::from_secs(10),
+            coordinator_overhead: 0.011,
+        }
+    }
+}
+
+/// Shared-storage (Azure-Files-NFS analog) parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageCfg {
+    /// Sustained transfer bandwidth, MiB/s.
+    pub bandwidth_mib_s: f64,
+    /// Per-operation latency.
+    pub latency: SimDuration,
+    /// Provisioned share size, GiB (billed whether used or not).
+    pub provisioned_gib: f64,
+    /// $ per 100 GiB provisioned per month (paper: $16.00).
+    pub price_per_100gib_month: f64,
+}
+
+impl Default for StorageCfg {
+    fn default() -> Self {
+        Self {
+            bandwidth_mib_s: 250.0,
+            latency: SimDuration::from_millis(20),
+            provisioned_gib: 100.0,
+            price_per_100gib_month: 16.0,
+        }
+    }
+}
+
+/// A complete experiment scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    pub name: String,
+    pub seed: u64,
+    /// Is the Spot-on coordinator attached? (Table I row 1 is OFF: no
+    /// polling overhead, no checkpoints, no eviction detection.)
+    pub coordinator_attached: bool,
+    pub workload: WorkloadCfg,
+    pub eviction: EvictionPlanCfg,
+    pub checkpoint: CheckpointMethodCfg,
+    pub cloud: CloudCfg,
+    pub storage: StorageCfg,
+    /// Abort threshold: give up if the run exceeds this much virtual time
+    /// (catches never-completing configurations — paper §IV).
+    pub deadline: SimDuration,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            seed: 7,
+            coordinator_attached: true,
+            workload: WorkloadCfg::default(),
+            eviction: EvictionPlanCfg::None,
+            checkpoint: CheckpointMethodCfg::None,
+            cloud: CloudCfg::default(),
+            storage: StorageCfg::default(),
+            deadline: SimDuration::from_hours(48),
+        }
+    }
+}
+
+fn mins(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
+    doc.get_f64(sec, key)
+        .map(|m| SimDuration::from_secs_f64(m * 60.0))
+}
+
+fn secs(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
+    doc.get_f64(sec, key).map(SimDuration::from_secs_f64)
+}
+
+impl ScenarioConfig {
+    /// Parse a scenario TOML document; unspecified fields keep defaults.
+    pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ScenarioConfig::default();
+        if let Some(n) = doc.get_str("", "name") {
+            cfg.name = n.to_string();
+        }
+        if let Some(s) = doc.get_u64("", "seed") {
+            cfg.seed = s;
+        }
+        if let Some(d) = mins(doc, "", "deadline_mins") {
+            cfg.deadline = d;
+        }
+        if let Some(v) = doc.get_bool("", "spoton") {
+            cfg.coordinator_attached = v;
+        }
+
+        // [workload]
+        if let Some(k) = doc.get_str("workload", "kind") {
+            if !["minimeta", "sleeper"].contains(&k) {
+                bail!("unknown workload.kind '{k}'");
+            }
+            cfg.workload.kind = k.to_string();
+        }
+        if let Some(arr) = doc.get("workload", "ks").and_then(TomlValue::as_array)
+        {
+            cfg.workload.ks = arr
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("workload.ks must be positive ints")
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(arr) =
+            doc.get("workload", "stage_secs").and_then(TomlValue::as_array)
+        {
+            cfg.workload.stage_secs = arr
+                .iter()
+                .map(|v| v.as_u64().context("workload.stage_secs must be ints"))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.get_u64("workload", "total_reads") {
+            cfg.workload.total_reads = v;
+        }
+        if let Some(v) = doc.get_u64("workload", "denoise_sweeps") {
+            cfg.workload.denoise_sweeps = v as u32;
+        }
+        if let Some(v) = doc.get_u64("workload", "app_milestones_per_stage") {
+            cfg.workload.app_milestones_per_stage = v as u32;
+        }
+        if let Some(v) = doc.get_f64("workload", "state_gib") {
+            cfg.workload.state_gib = v;
+        }
+        if let Some(v) = doc.get_f64("workload", "app_ckpt_gib") {
+            cfg.workload.app_ckpt_gib = v;
+        }
+        if let Some(v) = doc.get_u64("workload", "seed") {
+            cfg.workload.seed = v;
+        }
+        if cfg.workload.ks.len() != cfg.workload.stage_secs.len() {
+            bail!(
+                "workload.ks ({}) and workload.stage_secs ({}) lengths differ",
+                cfg.workload.ks.len(),
+                cfg.workload.stage_secs.len()
+            );
+        }
+
+        // [eviction]
+        if doc.has_section("eviction") {
+            let plan = doc.get_str("eviction", "plan").unwrap_or("none");
+            cfg.eviction = match plan {
+                "none" => EvictionPlanCfg::None,
+                "fixed" => EvictionPlanCfg::Fixed {
+                    interval: mins(doc, "eviction", "interval_mins")
+                        .context("eviction.interval_mins required for fixed")?,
+                },
+                "poisson" => EvictionPlanCfg::Poisson {
+                    mean: mins(doc, "eviction", "mean_mins")
+                        .context("eviction.mean_mins required for poisson")?,
+                },
+                "trace" => {
+                    let arr = doc
+                        .get("eviction", "offsets_mins")
+                        .and_then(TomlValue::as_array)
+                        .context("eviction.offsets_mins required for trace")?;
+                    EvictionPlanCfg::Trace {
+                        offsets: arr
+                            .iter()
+                            .map(|v| {
+                                v.as_f64()
+                                    .map(|m| SimDuration::from_secs_f64(m * 60.0))
+                                    .context("offsets_mins must be numbers")
+                            })
+                            .collect::<Result<_>>()?,
+                    }
+                }
+                other => bail!("unknown eviction.plan '{other}'"),
+            };
+        }
+
+        // [checkpoint]
+        if doc.has_section("checkpoint") {
+            let method = doc.get_str("checkpoint", "method").unwrap_or("none");
+            cfg.checkpoint = match method {
+                "none" => CheckpointMethodCfg::None,
+                "application" => CheckpointMethodCfg::AppNative,
+                "transparent" => CheckpointMethodCfg::Transparent {
+                    interval: mins(doc, "checkpoint", "interval_mins").context(
+                        "checkpoint.interval_mins required for transparent",
+                    )?,
+                },
+                other => bail!("unknown checkpoint.method '{other}'"),
+            };
+        }
+
+        // [cloud]
+        if let Some(v) = doc.get_str("cloud", "vm_size") {
+            cfg.cloud.vm_size = v.to_string();
+        }
+        if let Some(v) = doc.get_bool("cloud", "spot") {
+            cfg.cloud.spot = v;
+        }
+        if let Some(v) = secs(doc, "cloud", "provisioning_delay_secs") {
+            cfg.cloud.provisioning_delay = v;
+        }
+        if let Some(v) = secs(doc, "cloud", "notice_secs") {
+            cfg.cloud.notice = v;
+        }
+        if let Some(v) = secs(doc, "cloud", "poll_interval_secs") {
+            cfg.cloud.poll_interval = v;
+        }
+        if let Some(v) = doc.get_f64("cloud", "coordinator_overhead") {
+            if !(0.0..1.0).contains(&v) {
+                bail!("cloud.coordinator_overhead must be in [0,1)");
+            }
+            cfg.cloud.coordinator_overhead = v;
+        }
+
+        // [storage]
+        if let Some(v) = doc.get_f64("storage", "bandwidth_mib_s") {
+            if v <= 0.0 {
+                bail!("storage.bandwidth_mib_s must be positive");
+            }
+            cfg.storage.bandwidth_mib_s = v;
+        }
+        if let Some(v) = doc.get_f64("storage", "latency_ms") {
+            cfg.storage.latency = SimDuration::from_millis(v as u64);
+        }
+        if let Some(v) = doc.get_f64("storage", "provisioned_gib") {
+            cfg.storage.provisioned_gib = v;
+        }
+        if let Some(v) = doc.get_f64("storage", "price_per_100gib_month") {
+            cfg.storage.price_per_100gib_month = v;
+        }
+
+        Ok(cfg)
+    }
+
+    pub fn from_str_toml(src: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_toml(&doc)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_str_toml(&src)
+    }
+
+    /// Total uninterrupted virtual duration of the workload.
+    pub fn baseline_total(&self) -> SimDuration {
+        SimDuration::from_secs(self.workload.stage_secs.iter().sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let cfg = ScenarioConfig::default();
+        assert_eq!(cfg.cloud.vm_size, "Standard_D8s_v3");
+        assert_eq!(cfg.cloud.notice.as_secs(), 30);
+        assert_eq!(cfg.storage.price_per_100gib_month, 16.0);
+        assert_eq!(cfg.workload.ks, vec![33, 55, 77, 99, 127]);
+        // Table I row 1 total: 3:03:26
+        assert_eq!(cfg.baseline_total().hms(), "3:03:26");
+    }
+
+    #[test]
+    fn full_scenario_round_trip() {
+        let cfg = ScenarioConfig::from_str_toml(
+            r#"
+name = "row5"
+seed = 99
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [100, 200]
+total_reads = 4096
+app_milestones_per_stage = 3
+state_gib = 2.5
+
+[eviction]
+plan = "fixed"
+interval_mins = 90
+
+[checkpoint]
+method = "transparent"
+interval_mins = 30
+
+[cloud]
+spot = true
+notice_secs = 30
+provisioning_delay_secs = 120
+coordinator_overhead = 0.01
+
+[storage]
+bandwidth_mib_s = 100.0
+provisioned_gib = 200.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "row5");
+        assert_eq!(cfg.workload.kind, "sleeper");
+        assert_eq!(
+            cfg.eviction,
+            EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(90) }
+        );
+        assert_eq!(
+            cfg.checkpoint,
+            CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(30)
+            }
+        );
+        assert_eq!(cfg.cloud.provisioning_delay.as_secs(), 120);
+        assert_eq!(cfg.storage.provisioned_gib, 200.0);
+        assert_eq!(cfg.baseline_total().as_secs(), 300);
+    }
+
+    #[test]
+    fn trace_eviction_plan() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[eviction]\nplan = \"trace\"\noffsets_mins = [10, 25.5, 60]",
+        )
+        .unwrap();
+        match cfg.eviction {
+            EvictionPlanCfg::Trace { offsets } => {
+                assert_eq!(offsets.len(), 3);
+                assert_eq!(offsets[1].as_millis(), 1_530_000);
+            }
+            other => panic!("wrong plan: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(ScenarioConfig::from_str_toml(
+            "[workload]\nkind = \"sparkles\""
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[workload]\nks = [1, 2]\nstage_secs = [5]"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[eviction]\nplan = \"fixed\""
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[checkpoint]\nmethod = \"criu\""
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[cloud]\ncoordinator_overhead = 1.5"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[storage]\nbandwidth_mib_s = 0.0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(
+            CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(15)
+            }
+            .label(),
+            "transparent/15m"
+        );
+        assert_eq!(
+            EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(60) }
+                .label(),
+            "every 60 min"
+        );
+    }
+}

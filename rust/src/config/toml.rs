@@ -1,0 +1,432 @@
+//! TOML-subset parser (offline build: no `toml` crate — DESIGN.md §8).
+//!
+//! Supported: `[section]` / `[a.b]` headers, `key = value` pairs with
+//! string / integer / float / boolean / flat-array values, `#` comments,
+//! bare and quoted keys. Deliberately omitted: dates, inline tables,
+//! multiline strings, array-of-tables — the scenario schema doesn't need
+//! them, and a smaller grammar is easier to validate exhaustively.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A scalar or flat array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|v| u64::try_from(v).ok())
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted section path -> key -> value. Root-level keys
+/// live under the empty path `""`.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        doc.sections.entry(section.clone()).or_default();
+        for (idx, raw) in src.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or(TomlError {
+                    line: line_no,
+                    msg: "unterminated section header".into(),
+                })?;
+                let name = name.trim();
+                if name.is_empty()
+                    || !name.split('.').all(|p| is_bare_key(p.trim()))
+                {
+                    return Err(TomlError {
+                        line: line_no,
+                        msg: format!("bad section name '{name}'"),
+                    });
+                }
+                section = name
+                    .split('.')
+                    .map(|p| p.trim())
+                    .collect::<Vec<_>>()
+                    .join(".");
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let eq = line.find('=').ok_or(TomlError {
+                line: line_no,
+                msg: "expected 'key = value'".into(),
+            })?;
+            let key = line[..eq].trim();
+            let key = parse_key(key).ok_or(TomlError {
+                line: line_no,
+                msg: format!("bad key '{key}'"),
+            })?;
+            let (value, rest) =
+                parse_value(line[eq + 1..].trim()).map_err(|msg| TomlError {
+                    line: line_no,
+                    msg,
+                })?;
+            if !rest.trim().is_empty() {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: format!("trailing garbage '{rest}'"),
+                });
+            }
+            let sec = doc.sections.get_mut(&section).unwrap();
+            if sec.contains_key(&key) {
+                return Err(TomlError {
+                    line: line_no,
+                    msg: format!("duplicate key '{key}'"),
+                });
+            }
+            sec.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    /// Look up `section` + `key` (section `""` = root).
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.get(section, key)?.as_str()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Option<u64> {
+        self.get(section, key)?.as_u64()
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.as_f64()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        self.get(section, key)?.as_bool()
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+}
+
+impl fmt::Display for TomlDoc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (sec, kv) in &self.sections {
+            if kv.is_empty() && sec.is_empty() {
+                continue;
+            }
+            if !sec.is_empty() {
+                writeln!(f, "[{sec}]")?;
+            }
+            for (k, v) in kv {
+                writeln!(f, "{k} = {}", render(v))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn render(v: &TomlValue) -> String {
+    match v {
+        TomlValue::Str(s) => format!("{:?}", s),
+        TomlValue::Int(i) => i.to_string(),
+        TomlValue::Float(x) => {
+            if x.fract() == 0.0 {
+                format!("{x:.1}")
+            } else {
+                x.to_string()
+            }
+        }
+        TomlValue::Bool(b) => b.to_string(),
+        TomlValue::Array(items) => {
+            let inner: Vec<String> = items.iter().map(render).collect();
+            format!("[{}]", inner.join(", "))
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside a quoted string starts a comment.
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+        } else if c == '"' {
+            in_str = true;
+        } else if c == '#' {
+            return &line[..i];
+        }
+    }
+    line
+}
+
+fn is_bare_key(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+}
+
+fn parse_key(s: &str) -> Option<String> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        if inner.is_empty() {
+            return None;
+        }
+        return Some(inner.to_string());
+    }
+    if is_bare_key(s) {
+        Some(s.to_string())
+    } else {
+        None
+    }
+}
+
+/// Parse one value from the front of `s`; return (value, rest).
+fn parse_value(s: &str) -> Result<(TomlValue, &str), String> {
+    let s = s.trim_start();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let mut items = Vec::new();
+        let mut cur = rest.trim_start();
+        if let Some(r) = cur.strip_prefix(']') {
+            return Ok((TomlValue::Array(items), r));
+        }
+        loop {
+            let (v, rest) = parse_value(cur)?;
+            items.push(v);
+            cur = rest.trim_start();
+            if let Some(r) = cur.strip_prefix(',') {
+                cur = r.trim_start();
+                if let Some(r2) = cur.strip_prefix(']') {
+                    // allow trailing comma
+                    return Ok((TomlValue::Array(items), r2));
+                }
+                continue;
+            }
+            if let Some(r) = cur.strip_prefix(']') {
+                return Ok((TomlValue::Array(items), r));
+            }
+            return Err("expected ',' or ']' in array".into());
+        }
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let mut out = String::new();
+        let mut chars = rest.char_indices();
+        while let Some((i, c)) = chars.next() {
+            match c {
+                '"' => return Ok((TomlValue::Str(out), &rest[i + 1..])),
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => out.push('\n'),
+                    Some((_, 't')) => out.push('\t'),
+                    Some((_, 'r')) => out.push('\r'),
+                    Some((_, '"')) => out.push('"'),
+                    Some((_, '\\')) => out.push('\\'),
+                    other => {
+                        return Err(format!("bad escape {other:?}"));
+                    }
+                },
+                c => out.push(c),
+            }
+        }
+        return Err("unterminated string".into());
+    }
+    // bare scalar: read until delimiter
+    let end = s
+        .find(|c: char| c == ',' || c == ']' || c.is_whitespace())
+        .unwrap_or(s.len());
+    let (tok, rest) = s.split_at(end);
+    let v = match tok {
+        "true" => TomlValue::Bool(true),
+        "false" => TomlValue::Bool(false),
+        _ => {
+            if tok.contains('.') || tok.contains('e') || tok.contains('E') {
+                TomlValue::Float(
+                    tok.parse::<f64>().map_err(|_| format!("bad float '{tok}'"))?,
+                )
+            } else {
+                TomlValue::Int(
+                    tok.parse::<i64>().map_err(|_| format!("bad int '{tok}'"))?,
+                )
+            }
+        }
+    };
+    Ok((v, rest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            r#"
+# experiment scenario
+name = "table1-row5"
+seed = 42
+
+[eviction]
+plan = "fixed"
+interval_mins = 90
+enabled = true
+jitter = 0.25
+
+[checkpoint.transparent]
+interval_mins = 30
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("", "name"), Some("table1-row5"));
+        assert_eq!(doc.get_u64("", "seed"), Some(42));
+        assert_eq!(doc.get_str("eviction", "plan"), Some("fixed"));
+        assert_eq!(doc.get_u64("eviction", "interval_mins"), Some(90));
+        assert_eq!(doc.get_bool("eviction", "enabled"), Some(true));
+        assert_eq!(doc.get_f64("eviction", "jitter"), Some(0.25));
+        assert_eq!(
+            doc.get_u64("checkpoint.transparent", "interval_mins"),
+            Some(30)
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let doc = TomlDoc::parse("ks = [33, 55, 77]\nnames = [\"a\", \"b\"]\nempty = []\ntrail = [1, 2,]")
+            .unwrap();
+        let ks: Vec<i64> = doc
+            .get("", "ks")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(ks, [33, 55, 77]);
+        assert_eq!(doc.get("", "empty").unwrap().as_array().unwrap().len(), 0);
+        assert_eq!(doc.get("", "trail").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc =
+            TomlDoc::parse("a = \"x # not a comment\" # real comment\n").unwrap();
+        assert_eq!(doc.get_str("", "a"), Some("x # not a comment"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let doc = TomlDoc::parse(r#"s = "a\nb\t\"c\\""#).unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a\nb\t\"c\\"));
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let doc = TomlDoc::parse("a = -5\nb = -2.5\nc = 1e3").unwrap();
+        assert_eq!(doc.get("", "a").unwrap().as_i64(), Some(-5));
+        assert_eq!(doc.get_f64("", "b"), Some(-2.5));
+        assert_eq!(doc.get_f64("", "c"), Some(1000.0));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in [
+            "[unclosed",
+            "[]",
+            "[a..b]",
+            "novalue =",
+            "= 5",
+            "a = 1 2",
+            "a = \"unterminated",
+            "a = [1, 2",
+            "dup = 1\ndup = 2",
+            "a = @",
+            "a b = 1",
+        ] {
+            assert!(TomlDoc::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let src = r#"
+root_key = 5
+[a]
+s = "hi"
+f = 2.5
+g = 4.0
+arr = [1, 2]
+[b.c]
+flag = false
+"#;
+        let doc = TomlDoc::parse(src).unwrap();
+        let rendered = doc.to_string();
+        let re = TomlDoc::parse(&rendered).unwrap();
+        assert_eq!(doc, re);
+    }
+
+    #[test]
+    fn quoted_keys() {
+        let doc = TomlDoc::parse("\"weird key\" = 1").unwrap();
+        assert_eq!(doc.get_u64("", "weird key"), Some(1));
+    }
+}

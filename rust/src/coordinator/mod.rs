@@ -1,0 +1,34 @@
+//! The Spot-on checkpoint coordinator — the paper's contribution.
+//!
+//! "When a workload is launched on the spot instance, a checkpoint
+//! coordinator, Spot-On, is launched simultaneously. … it schedules
+//! periodic checkpointing and monitors VM eviction events using APIs
+//! provided by the cloud. Upon detecting an eviction event, the
+//! coordinator creates a 'termination checkpoint' in addition to periodic
+//! checkpoints. … After a spot instance is terminated … the checkpoint
+//! coordinator then automatically searches for the most recent valid
+//! checkpoint and resumes the workload." (§II)
+//!
+//! Pieces:
+//! * [`policy`] — which checkpoint method protects the run and when
+//!   checkpoints are due (from the coordinator's configuration file).
+//! * [`monitor`] — the eviction watcher over the scheduled-events
+//!   service, both in-process (simulation) and HTTP (real-time mode).
+//! * [`restart`] — find-latest-valid + restore with fingerprint
+//!   verification.
+//! * [`realtime`] — the wall-clock coordinator loop the CLI runs
+//!   (workload + periodic checkpoints + IMDS polling + termination
+//!   checkpoint on Preempt), exercised end-to-end by integration tests.
+//!
+//! The virtual-time experiment driver in [`crate::sim`] composes the same
+//! policy/monitor/restart pieces under the discrete-event clock.
+
+pub mod policy;
+pub mod monitor;
+pub mod restart;
+pub mod realtime;
+
+pub use monitor::{Notice, ScheduledEventsMonitor};
+pub use policy::CheckpointPolicy;
+pub use realtime::{RealtimeCoordinator, RealtimeOutcome, RealtimeParams};
+pub use restart::RestartManager;

@@ -1,0 +1,178 @@
+//! Eviction monitoring over the scheduled-events service (paper §III-B).
+//!
+//! The coordinator polls the metadata endpoint; a `Preempt` event for its
+//! own instance is an eviction notice with a `NotBefore` deadline (≥30 s
+//! out). The monitor works against both transports:
+//!
+//! * in-process [`MetadataService`] — the simulator's path;
+//! * the IMDS-compatible HTTP endpoint — real-time mode, a real GET +
+//!   JSON parse + POST ack round-trip per poll.
+
+use crate::cloud::metadata::{
+    parse_document, EventStatus, MetadataService,
+};
+use crate::httpd::{http_get, http_post};
+use crate::json::{self, Value};
+use crate::simclock::SimTime;
+use anyhow::{Context, Result};
+
+/// A detected eviction notice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Notice {
+    pub event_id: String,
+    /// The platform will not act before this instant.
+    pub not_before: SimTime,
+}
+
+/// Poller for Preempt events addressed to one instance.
+#[derive(Debug, Clone)]
+pub struct ScheduledEventsMonitor {
+    /// Instance (resource) name this coordinator protects.
+    resource: String,
+    /// Incarnation last seen (skip re-parsing unchanged documents — the
+    /// IMDS contract's intended cheap-poll pattern).
+    last_incarnation: Option<u64>,
+}
+
+impl ScheduledEventsMonitor {
+    pub fn new(resource: &str) -> Self {
+        Self { resource: resource.to_string(), last_incarnation: None }
+    }
+
+    pub fn resource(&self) -> &str {
+        &self.resource
+    }
+
+    /// Extract the first actionable Preempt notice from a document.
+    fn scan_document(&mut self, doc: &Value) -> Result<Option<Notice>> {
+        let (incarnation, events) = parse_document(doc)?;
+        if self.last_incarnation == Some(incarnation) {
+            return Ok(None);
+        }
+        self.last_incarnation = Some(incarnation);
+        for e in events {
+            if e.event_type == "Preempt"
+                && e.status == EventStatus::Scheduled
+                && e.resource == self.resource
+            {
+                return Ok(Some(Notice {
+                    event_id: e.event_id,
+                    not_before: e.not_before,
+                }));
+            }
+        }
+        Ok(None)
+    }
+
+    /// Poll the in-process service.
+    pub fn poll_inproc(
+        &mut self,
+        service: &MetadataService,
+    ) -> Result<Option<Notice>> {
+        self.scan_document(&service.document())
+    }
+
+    /// Poll the HTTP endpoint (real-time mode).
+    pub fn poll_http(&mut self, events_url: &str) -> Result<Option<Notice>> {
+        let (status, body) =
+            http_get(events_url).context("polling scheduled events")?;
+        if status != 200 {
+            anyhow::bail!("scheduled events GET returned {status}: {body}");
+        }
+        let doc =
+            json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+        self.scan_document(&doc)
+    }
+
+    /// Acknowledge readiness (StartRequests) against the in-proc service.
+    pub fn ack_inproc(&self, service: &mut MetadataService, event_id: &str) {
+        let mut body = Value::obj();
+        let mut req = Value::obj();
+        req.set("EventId", event_id);
+        body.set("StartRequests", Value::Array(vec![req]));
+        service.start_requests(&body);
+    }
+
+    /// Acknowledge readiness over HTTP.
+    pub fn ack_http(&self, events_url: &str, event_id: &str) -> Result<()> {
+        let body = format!(
+            "{{\"StartRequests\":[{{\"EventId\":\"{event_id}\"}}]}}"
+        );
+        let (status, resp) =
+            http_post(events_url, &body).context("acking event")?;
+        if status != 200 {
+            anyhow::bail!("StartRequests POST returned {status}: {resp}");
+        }
+        Ok(())
+    }
+
+    /// Reset incarnation tracking (new instance, fresh poller).
+    pub fn reset(&mut self) {
+        self.last_incarnation = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::imds_http::ImdsHttp;
+    use crate::httpd::http_post;
+
+    #[test]
+    fn detects_own_preempt_only() {
+        let mut svc = MetadataService::new();
+        let mut mon = ScheduledEventsMonitor::new("vm-7");
+        assert_eq!(mon.poll_inproc(&svc).unwrap(), None);
+        svc.post_preempt("vm-other", SimTime::from_secs(100));
+        assert_eq!(mon.poll_inproc(&svc).unwrap(), None);
+        let id = svc.post_preempt("vm-7", SimTime::from_secs(200));
+        let n = mon.poll_inproc(&svc).unwrap().unwrap();
+        assert_eq!(n.event_id, id);
+        assert_eq!(n.not_before, SimTime::from_secs(200));
+    }
+
+    #[test]
+    fn incarnation_skip_suppresses_duplicate_notices() {
+        let mut svc = MetadataService::new();
+        let mut mon = ScheduledEventsMonitor::new("vm-1");
+        svc.post_preempt("vm-1", SimTime::from_secs(50));
+        assert!(mon.poll_inproc(&svc).unwrap().is_some());
+        // unchanged document: no duplicate notice
+        assert!(mon.poll_inproc(&svc).unwrap().is_none());
+        // reset (new instance) sees it again
+        mon.reset();
+        assert!(mon.poll_inproc(&svc).unwrap().is_some());
+    }
+
+    #[test]
+    fn acked_event_no_longer_scheduled() {
+        let mut svc = MetadataService::new();
+        let mut mon = ScheduledEventsMonitor::new("vm-2");
+        let id = svc.post_preempt("vm-2", SimTime::from_secs(10));
+        let n = mon.poll_inproc(&svc).unwrap().unwrap();
+        mon.ack_inproc(&mut svc, &n.event_id);
+        assert_eq!(id, n.event_id);
+        mon.reset();
+        // after ack the event is Started, not Scheduled
+        assert!(mon.poll_inproc(&svc).unwrap().is_none());
+    }
+
+    #[test]
+    fn http_round_trip() {
+        let imds = ImdsHttp::spawn(30).unwrap();
+        let mut mon = ScheduledEventsMonitor::new("vm-0");
+        assert!(mon.poll_http(&imds.events_url()).unwrap().is_none());
+        http_post(
+            &format!(
+                "{}/admin/simulate-eviction?resource=vm-0",
+                imds.base_url()
+            ),
+            "",
+        )
+        .unwrap();
+        let n = mon.poll_http(&imds.events_url()).unwrap().unwrap();
+        mon.ack_http(&imds.events_url(), &n.event_id).unwrap();
+        mon.reset();
+        assert!(mon.poll_http(&imds.events_url()).unwrap().is_none());
+    }
+}

@@ -1,0 +1,121 @@
+//! Checkpoint policy: which method protects the run, when checkpoints are
+//! due, and which checkpoint kinds a restart may restore from.
+
+use crate::checkpoint::CkptKind;
+use crate::config::CheckpointMethodCfg;
+use crate::simclock::{SimDuration, SimTime};
+
+/// The coordinator's checkpointing behaviour, derived from its
+/// configuration file (paper §II: "the coordinator is able to invoke the
+/// corresponding interfaces through its configuration files").
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointPolicy {
+    method: CheckpointMethodCfg,
+}
+
+impl CheckpointPolicy {
+    pub fn new(method: CheckpointMethodCfg) -> Self {
+        Self { method }
+    }
+
+    pub fn method(&self) -> &CheckpointMethodCfg {
+        &self.method
+    }
+
+    pub fn label(&self) -> String {
+        self.method.label()
+    }
+
+    /// Periodic (transparent) checkpoint interval, if any.
+    pub fn periodic_interval(&self) -> Option<SimDuration> {
+        match &self.method {
+            CheckpointMethodCfg::Transparent { interval } => Some(*interval),
+            _ => None,
+        }
+    }
+
+    /// Is a periodic checkpoint due at `now` given the last one?
+    pub fn periodic_due(&self, now: SimTime, last: SimTime) -> bool {
+        match self.periodic_interval() {
+            Some(interval) => now.since(last) >= interval,
+            None => false,
+        }
+    }
+
+    /// Can this method take an on-demand checkpoint when an eviction
+    /// notice arrives? (Paper §III-A: "application-specific checkpointing
+    /// cannot be taken on demand.")
+    pub fn takes_termination_checkpoint(&self) -> bool {
+        matches!(self.method, CheckpointMethodCfg::Transparent { .. })
+    }
+
+    /// Should the application's milestone checkpoints be persisted?
+    pub fn persists_app_milestones(&self) -> bool {
+        matches!(self.method, CheckpointMethodCfg::AppNative)
+    }
+
+    /// Restore-surface filter for [`crate::checkpoint::CheckpointStore`]:
+    /// transparent methods restore transparent checkpoints, app-native
+    /// restores app checkpoints, unprotected runs restore nothing.
+    pub fn restore_surface(&self) -> Option<bool> {
+        match self.method {
+            CheckpointMethodCfg::None => None,
+            CheckpointMethodCfg::AppNative => Some(false),
+            CheckpointMethodCfg::Transparent { .. } => Some(true),
+        }
+    }
+
+    /// Does this policy protect the workload at all?
+    pub fn protected(&self) -> bool {
+        self.method != CheckpointMethodCfg::None
+    }
+
+    /// Kind tag for a periodic capture under this policy.
+    pub fn periodic_kind(&self) -> CkptKind {
+        match self.method {
+            CheckpointMethodCfg::AppNative => CkptKind::AppNative,
+            _ => CkptKind::Periodic,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transparent_policy() {
+        let p = CheckpointPolicy::new(CheckpointMethodCfg::Transparent {
+            interval: SimDuration::from_mins(30),
+        });
+        assert!(p.protected());
+        assert!(p.takes_termination_checkpoint());
+        assert!(!p.persists_app_milestones());
+        assert_eq!(p.restore_surface(), Some(true));
+        assert_eq!(p.periodic_interval(), Some(SimDuration::from_mins(30)));
+        let t0 = SimTime::ZERO;
+        assert!(!p.periodic_due(SimTime::from_secs(1799), t0));
+        assert!(p.periodic_due(SimTime::from_secs(1800), t0));
+    }
+
+    #[test]
+    fn app_native_policy() {
+        let p = CheckpointPolicy::new(CheckpointMethodCfg::AppNative);
+        assert!(p.protected());
+        assert!(!p.takes_termination_checkpoint(), "paper §III-A");
+        assert!(p.persists_app_milestones());
+        assert_eq!(p.restore_surface(), Some(false));
+        assert_eq!(p.periodic_interval(), None);
+        assert!(!p.periodic_due(SimTime::from_secs(99999), SimTime::ZERO));
+        assert_eq!(p.periodic_kind(), CkptKind::AppNative);
+    }
+
+    #[test]
+    fn unprotected_policy() {
+        let p = CheckpointPolicy::new(CheckpointMethodCfg::None);
+        assert!(!p.protected());
+        assert!(!p.takes_termination_checkpoint());
+        assert!(!p.persists_app_milestones());
+        assert_eq!(p.restore_surface(), None);
+    }
+}

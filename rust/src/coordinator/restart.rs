@@ -1,0 +1,241 @@
+//! Restart: find the most recent valid checkpoint and resume (paper §II).
+
+use super::policy::CheckpointPolicy;
+use crate::checkpoint::{CheckpointManifest, CheckpointStore};
+use crate::simclock::SimDuration;
+use crate::storage::SharedStore;
+use crate::workload::Workload;
+use anyhow::{bail, Context, Result};
+
+/// What a restart found and did.
+#[derive(Debug, Clone)]
+pub struct RestoreReport {
+    pub manifest: CheckpointManifest,
+    /// Virtual cost: payload fetch + (app-native) restart overhead.
+    pub cost: SimDuration,
+    /// Steps the workload lost relative to `steps_at_interruption`
+    /// (filled by the caller, which knows where the workload was).
+    pub resumed_total_steps: u64,
+}
+
+/// Stateless restart manager.
+pub struct RestartManager;
+
+impl RestartManager {
+    /// Search the share and restore `workload` from the most recent valid
+    /// checkpoint compatible with `policy`. Returns `None` (fresh start)
+    /// when nothing usable exists.
+    pub fn find_and_restore(
+        store: &mut dyn SharedStore,
+        policy: &CheckpointPolicy,
+        workload: &mut dyn Workload,
+    ) -> Result<Option<RestoreReport>> {
+        let Some(surface) = policy.restore_surface() else {
+            return Ok(None); // unprotected run: always fresh
+        };
+        let Some(manifest) = CheckpointStore::latest_valid(store, Some(surface))?
+        else {
+            return Ok(None);
+        };
+        if manifest.workload != workload.name() {
+            bail!(
+                "checkpoint on share belongs to workload '{}', running '{}'",
+                manifest.workload,
+                workload.name()
+            );
+        }
+        let (payload, fetch_cost) =
+            CheckpointStore::fetch_payload(store, &manifest)
+                .context("fetching checkpoint payload")?;
+        let mut cost = fetch_cost;
+        if surface {
+            workload
+                .restore(&payload)
+                .context("transparent restore")?;
+            // CRIU-analog restore lands in the exact captured state.
+            let fp = workload.fingerprint();
+            if fp != manifest.fingerprint {
+                bail!(
+                    "restored state fingerprint {fp:016x} does not match \
+                     manifest {:016x}",
+                    manifest.fingerprint
+                );
+            }
+        } else {
+            workload
+                .app_restore(&payload)
+                .context("application-native restore")?;
+            cost += workload.app_restart_overhead();
+        }
+        let p = workload.progress();
+        Ok(Some(RestoreReport {
+            manifest,
+            cost,
+            resumed_total_steps: p.total_steps,
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::{CheckpointWriter, CkptKind};
+    use crate::config::CheckpointMethodCfg;
+    use crate::simclock::SimTime;
+    use crate::storage::BlobStore;
+    use crate::workload::sleeper::{Sleeper, SleeperCfg};
+
+    fn transparent_policy() -> CheckpointPolicy {
+        CheckpointPolicy::new(CheckpointMethodCfg::Transparent {
+            interval: SimDuration::from_mins(30),
+        })
+    }
+
+    #[test]
+    fn fresh_start_when_no_checkpoints() {
+        let mut store = BlobStore::for_tests();
+        let mut w = Sleeper::new(SleeperCfg::small(), 1);
+        let got = RestartManager::find_and_restore(
+            &mut store,
+            &transparent_policy(),
+            &mut w,
+        )
+        .unwrap();
+        assert!(got.is_none());
+        assert_eq!(w.progress().total_steps, 0);
+    }
+
+    #[test]
+    fn restores_latest_transparent_checkpoint() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 1);
+        for _ in 0..30 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        writer
+            .write(&mut store, SimTime::from_secs(10), CkptKind::Periodic, &w,
+                   &snap)
+            .unwrap();
+        // crash: new workload instance
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 1);
+        let report = RestartManager::find_and_restore(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(report.resumed_total_steps, 30);
+        assert_eq!(fresh.progress().total_steps, 30);
+        assert_eq!(fresh.fingerprint(), w.fingerprint());
+        assert!(report.cost > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn app_restore_adds_restart_overhead() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 1);
+        for _ in 0..20 {
+            w.step().unwrap();
+        }
+        let app = w.app_snapshot().unwrap().expect("at milestone");
+        writer
+            .write(&mut store, SimTime::ZERO, CkptKind::AppNative, &w, &app)
+            .unwrap();
+        let policy = CheckpointPolicy::new(CheckpointMethodCfg::AppNative);
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 1);
+        let report =
+            RestartManager::find_and_restore(&mut store, &policy, &mut fresh)
+                .unwrap()
+                .unwrap();
+        assert!(report.cost >= fresh.app_restart_overhead());
+        assert_eq!(fresh.progress().total_steps, 20);
+    }
+
+    #[test]
+    fn surface_mismatch_is_invisible() {
+        // app-native run must not restore a transparent checkpoint
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 1);
+        for _ in 0..5 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        writer
+            .write(&mut store, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+        let policy = CheckpointPolicy::new(CheckpointMethodCfg::AppNative);
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 1);
+        let got =
+            RestartManager::find_and_restore(&mut store, &policy, &mut fresh)
+                .unwrap();
+        assert!(got.is_none());
+    }
+
+    #[test]
+    fn workload_name_mismatch_fails() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 1);
+        w.step().unwrap();
+        let snap = w.snapshot().unwrap();
+        // Forge a manifest claiming a different workload by writing with a
+        // renamed sleeper — easiest: write then tamper is complex, so use
+        // a direct manifest mutation through a custom write. Simpler:
+        // restore into a workload with a different name via a wrapper.
+        struct Renamed(Sleeper);
+        impl crate::workload::Workload for Renamed {
+            fn name(&self) -> &str {
+                "other"
+            }
+            fn num_stages(&self) -> u32 {
+                self.0.num_stages()
+            }
+            fn stage_label(&self, s: u32) -> String {
+                self.0.stage_label(s)
+            }
+            fn stage_steps(&self, s: u32) -> u64 {
+                self.0.stage_steps(s)
+            }
+            fn progress(&self) -> crate::workload::Progress {
+                self.0.progress()
+            }
+            fn is_done(&self) -> bool {
+                self.0.is_done()
+            }
+            fn step(&mut self) -> Result<crate::workload::StepOutcome> {
+                self.0.step()
+            }
+            fn snapshot(&self) -> Result<crate::workload::Snapshot> {
+                self.0.snapshot()
+            }
+            fn restore(&mut self, b: &[u8]) -> Result<()> {
+                self.0.restore(b)
+            }
+            fn app_snapshot(&self) -> Result<Option<crate::workload::Snapshot>> {
+                self.0.app_snapshot()
+            }
+            fn app_restore(&mut self, b: &[u8]) -> Result<()> {
+                self.0.app_restore(b)
+            }
+            fn fingerprint(&self) -> u64 {
+                self.0.fingerprint()
+            }
+        }
+        writer
+            .write(&mut store, SimTime::ZERO, CkptKind::Periodic, &w, &snap)
+            .unwrap();
+        let mut renamed = Renamed(Sleeper::new(SleeperCfg::small(), 1));
+        let err = RestartManager::find_and_restore(
+            &mut store,
+            &transparent_policy(),
+            &mut renamed,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("belongs to workload"));
+    }
+}

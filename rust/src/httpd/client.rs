@@ -1,0 +1,115 @@
+//! Blocking HTTP/1.1 client for `http://host:port/...` URLs.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(10);
+
+fn split_url(url: &str) -> Result<(String, String)> {
+    let rest = url
+        .strip_prefix("http://")
+        .context("only http:// URLs supported")?;
+    let (host, path) = match rest.split_once('/') {
+        Some((h, p)) => (h.to_string(), format!("/{p}")),
+        None => (rest.to_string(), "/".to_string()),
+    };
+    Ok((host, path))
+}
+
+fn request(method: &str, url: &str, body: Option<&str>) -> Result<(u16, String)> {
+    let (host, path) = split_url(url)?;
+    let mut stream =
+        TcpStream::connect(&host).with_context(|| format!("connect {host}"))?;
+    stream.set_read_timeout(Some(TIMEOUT))?;
+    stream.set_write_timeout(Some(TIMEOUT))?;
+    let body_bytes = body.unwrap_or("").as_bytes();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {host}\r\nMetadata: true\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body_bytes.len()
+    );
+    stream.write_all(req.as_bytes())?;
+    stream.write_all(body_bytes)?;
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line).context("status line")?;
+    let mut parts = status_line.trim_end().splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("bad status line: {status_line:?}");
+    }
+    let status: u16 = parts
+        .next()
+        .context("missing status code")?
+        .parse()
+        .context("bad status code")?;
+
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    Some(value.trim().parse().context("bad content-length")?);
+            }
+        }
+    }
+    let body = match content_length {
+        Some(n) => {
+            let mut buf = vec![0u8; n];
+            reader.read_exact(&mut buf).context("response body")?;
+            buf
+        }
+        None => {
+            // Connection: close semantics — read to EOF.
+            let mut buf = Vec::new();
+            reader.read_to_end(&mut buf)?;
+            buf
+        }
+    };
+    Ok((status, String::from_utf8_lossy(&body).into_owned()))
+}
+
+/// GET a URL; returns (status, body). The `Metadata: true` header required
+/// by Azure IMDS is always sent.
+pub fn http_get(url: &str) -> Result<(u16, String)> {
+    request("GET", url, None)
+}
+
+/// POST a string body.
+pub fn http_post(url: &str, body: &str) -> Result<(u16, String)> {
+    request("POST", url, Some(body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_splitting() {
+        assert_eq!(
+            split_url("http://127.0.0.1:8080/metadata?x=1").unwrap(),
+            ("127.0.0.1:8080".into(), "/metadata?x=1".into())
+        );
+        assert_eq!(
+            split_url("http://127.0.0.1:8080").unwrap(),
+            ("127.0.0.1:8080".into(), "/".into())
+        );
+        assert!(split_url("https://x").is_err());
+        assert!(split_url("ftp://x").is_err());
+    }
+
+    #[test]
+    fn connect_refused_errors() {
+        // Port 1 is essentially never listening.
+        assert!(http_get("http://127.0.0.1:1/x").is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! Minimal HTTP/1.1 server + client over `std::net` (no tokio offline —
+//! DESIGN.md §8).
+//!
+//! Purpose-built for the IMDS scheduled-events facade
+//! ([`crate::cloud::imds_http`]): GET/POST with `Content-Length` bodies,
+//! query strings, custom headers, keep-alive disabled (connection per
+//! request, which matches how short metadata polls behave and keeps the
+//! implementation obviously correct).
+
+mod server;
+mod client;
+
+pub use client::{http_get, http_post};
+pub use server::{HttpServer, Request, Response};
+
+use std::collections::BTreeMap;
+
+/// Parse `name: value` header lines (case-insensitive names).
+pub(crate) fn parse_headers(
+    lines: &[&str],
+) -> anyhow::Result<BTreeMap<String, String>> {
+    let mut headers = BTreeMap::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("malformed header line: {line}"))?;
+        headers.insert(
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        );
+    }
+    Ok(headers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_parsing() {
+        let h = parse_headers(&["Content-Length: 12", "X-Test:  hi "]).unwrap();
+        assert_eq!(h.get("content-length").map(String::as_str), Some("12"));
+        assert_eq!(h.get("x-test").map(String::as_str), Some("hi"));
+        assert!(parse_headers(&["garbage"]).is_err());
+    }
+}

@@ -1,0 +1,279 @@
+//! Threaded HTTP/1.1 server.
+
+use super::parse_headers;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A parsed request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Decoded query parameters (no %-decoding; IMDS uses plain tokens).
+    pub query: Vec<(String, String)>,
+    pub headers: std::collections::BTreeMap<String, String>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(&name.to_ascii_lowercase()).map(String::as_str)
+    }
+}
+
+/// A response under construction.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub status: u16,
+    pub reason: &'static str,
+    pub content_type: String,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn ok_json(body: String) -> Self {
+        Self {
+            status: 200,
+            reason: "OK",
+            content_type: "application/json".into(),
+            body: body.into_bytes(),
+        }
+    }
+
+    pub fn ok_text(body: &str) -> Self {
+        Self {
+            status: 200,
+            reason: "OK",
+            content_type: "text/plain".into(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn bad_request(msg: &str) -> Self {
+        Self {
+            status: 400,
+            reason: "Bad Request",
+            content_type: "text/plain".into(),
+            body: msg.as_bytes().to_vec(),
+        }
+    }
+
+    pub fn not_found() -> Self {
+        Self {
+            status: 404,
+            reason: "Not Found",
+            content_type: "text/plain".into(),
+            body: b"not found".to_vec(),
+        }
+    }
+
+    fn write_to(&self, stream: &mut TcpStream) -> std::io::Result<()> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+            self.status,
+            self.reason,
+            self.content_type,
+            self.body.len()
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.write_all(&self.body)?;
+        stream.flush()
+    }
+}
+
+pub(crate) fn read_request(stream: &mut TcpStream) -> Result<Request> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line).context("request line")?;
+    let mut parts = request_line.trim_end().split_whitespace();
+    let method = parts.next().context("missing method")?.to_string();
+    let target = parts.next().context("missing target")?.to_string();
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported HTTP version '{version}'");
+    }
+    let mut header_lines = Vec::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).context("header line")?;
+        let trimmed = line.trim_end().to_string();
+        if trimmed.is_empty() {
+            break;
+        }
+        header_lines.push(trimmed);
+    }
+    let refs: Vec<&str> = header_lines.iter().map(String::as_str).collect();
+    let headers = parse_headers(&refs)?;
+    let content_length: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().context("bad content-length"))
+        .transpose()?
+        .unwrap_or(0);
+    if content_length > 64 * 1024 * 1024 {
+        bail!("body too large");
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("request body")?;
+
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target, String::new()),
+    };
+    let query = query_str
+        .split('&')
+        .filter(|s| !s.is_empty())
+        .map(|pair| match pair.split_once('=') {
+            Some((k, v)) => (k.to_string(), v.to_string()),
+            None => (pair.to_string(), String::new()),
+        })
+        .collect();
+    Ok(Request { method, path, query, headers, body })
+}
+
+type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// A running server; drop or [`HttpServer::shutdown`] to stop.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind 127.0.0.1 on an ephemeral port and serve `handler` on a
+    /// background thread (connection-per-request).
+    pub fn spawn(handler: Handler) -> Result<Self> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("bind 127.0.0.1")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("imds-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(mut stream) = conn else { continue };
+                    let handler = handler.clone();
+                    // Handle inline: metadata polls are small and serial;
+                    // a thread per connection would only add schedule
+                    // noise to the latency benches.
+                    let resp = match read_request(&mut stream) {
+                        Ok(req) => handler(&req),
+                        Err(e) => Response::bad_request(&e.to_string()),
+                    };
+                    let _ = resp.write_to(&mut stream);
+                }
+            })?;
+        Ok(Self { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn base_url(&self) -> String {
+        format!("http://{}", self.addr)
+    }
+
+    /// Stop accepting and join the accept thread.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock accept() with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::client::{http_get, http_post};
+    use super::*;
+
+    fn echo_server() -> HttpServer {
+        HttpServer::spawn(Arc::new(|req: &Request| match req.path.as_str() {
+            "/echo" => Response::ok_json(format!(
+                "{{\"method\":\"{}\",\"len\":{},\"v\":\"{}\"}}",
+                req.method,
+                req.body.len(),
+                req.query_param("api-version").unwrap_or("")
+            )),
+            _ => Response::not_found(),
+        }))
+        .unwrap()
+    }
+
+    #[test]
+    fn get_with_query() {
+        let srv = echo_server();
+        let (status, body) =
+            http_get(&format!("{}/echo?api-version=2020-07-01", srv.base_url()))
+                .unwrap();
+        assert_eq!(status, 200);
+        let v = crate::json::parse(&body).unwrap();
+        assert_eq!(v.req_str("method").unwrap(), "GET");
+        assert_eq!(v.req_str("v").unwrap(), "2020-07-01");
+    }
+
+    #[test]
+    fn post_with_body() {
+        let srv = echo_server();
+        let (status, body) = http_post(
+            &format!("{}/echo", srv.base_url()),
+            "{\"StartRequests\":[]}",
+        )
+        .unwrap();
+        assert_eq!(status, 200);
+        let v = crate::json::parse(&body).unwrap();
+        assert_eq!(v.req_u64("len").unwrap(), 20);
+        assert_eq!(v.req_str("method").unwrap(), "POST");
+    }
+
+    #[test]
+    fn unknown_path_404() {
+        let srv = echo_server();
+        let (status, _) = http_get(&format!("{}/nope", srv.base_url())).unwrap();
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn many_sequential_requests() {
+        let srv = echo_server();
+        for _ in 0..50 {
+            let (status, _) =
+                http_get(&format!("{}/echo", srv.base_url())).unwrap();
+            assert_eq!(status, 200);
+        }
+    }
+
+    #[test]
+    fn shutdown_then_connect_fails() {
+        let mut srv = echo_server();
+        let url = format!("{}/echo", srv.base_url());
+        srv.shutdown();
+        // After shutdown the listener is dropped; request must error.
+        assert!(http_get(&url).is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! From-scratch JSON: parser, serializer, and a small builder API.
+//!
+//! Used for every structured interchange in the system: the Azure-IMDS
+//! scheduled-events wire format, checkpoint manifests, the AOT artifact
+//! manifest written by `python/compile/aot.py`, experiment reports.
+//! (`serde` is not in the offline vendored crate set — DESIGN.md §8.)
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+pub use write::{to_string, to_string_pretty};
+
+use std::collections::BTreeMap;
+
+/// A JSON value. Objects use `BTreeMap` so serialization is deterministic
+/// (manifest hashes must be stable across runs).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn obj() -> Value {
+        Value::Object(BTreeMap::new())
+    }
+
+    /// Insert into an object; panics if `self` is not an object.
+    pub fn set(&mut self, key: &str, v: impl Into<Value>) -> &mut Value {
+        match self {
+            Value::Object(m) => {
+                m.insert(key.to_string(), v.into());
+            }
+            _ => panic!("set() on non-object"),
+        }
+        self
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Array index lookup.
+    pub fn at(&self, idx: usize) -> Option<&Value> {
+        match self {
+            Value::Array(a) => a.get(idx),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() < 9.1e18 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|v| u64::try_from(v).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Required-field helpers that produce good error messages for
+    /// manifest parsing.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow::anyhow!("missing string field '{key}'"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .and_then(Value::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("missing u64 field '{key}'"))
+    }
+
+    pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Value::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing number field '{key}'"))
+    }
+
+    pub fn req_array(&self, key: &str) -> anyhow::Result<&[Value]> {
+        self.get(key)
+            .and_then(Value::as_array)
+            .ok_or_else(|| anyhow::anyhow!("missing array field '{key}'"))
+    }
+}
+
+impl From<bool> for Value {
+    fn from(v: bool) -> Self {
+        Value::Bool(v)
+    }
+}
+impl From<f64> for Value {
+    fn from(v: f64) -> Self {
+        Value::Num(v)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(v: u32) -> Self {
+        Value::Num(v as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Self {
+        Value::Str(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Self {
+        Value::Str(v)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Array(v.into_iter().map(Into::into).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_and_accessors() {
+        let mut v = Value::obj();
+        v.set("name", "ckpt-3")
+            .set("size", 1024u64)
+            .set("valid", true)
+            .set("tags", vec!["a", "b"]);
+        assert_eq!(v.req_str("name").unwrap(), "ckpt-3");
+        assert_eq!(v.req_u64("size").unwrap(), 1024);
+        assert_eq!(v.get("valid").unwrap().as_bool(), Some(true));
+        assert_eq!(v.req_array("tags").unwrap().len(), 2);
+        assert!(v.req_str("missing").is_err());
+    }
+
+    #[test]
+    fn as_i64_rejects_fractions() {
+        assert_eq!(Value::Num(1.5).as_i64(), None);
+        assert_eq!(Value::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Value::Num(-1.0).as_u64(), None);
+    }
+
+    #[test]
+    fn round_trip_parse_write() {
+        let src = r#"{"a":[1,2.5,null,true,"x\n"],"b":{"c":-7}}"#;
+        let v = parse(src).unwrap();
+        let out = to_string(&v);
+        assert_eq!(parse(&out).unwrap(), v);
+    }
+}

@@ -1,0 +1,64 @@
+//! # Spot-on — fault-tolerant long-running workloads on cloud spot instances
+//!
+//! Production-quality reproduction of *"Spot-on: A Checkpointing Framework
+//! for Fault-Tolerant Long-running Workloads on Cloud Spot Instances"*
+//! (CS.DC 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper's contribution is a **checkpoint coordinator** that runs beside
+//! a long-running workload on a spot instance: it schedules periodic
+//! checkpoints (application-native or transparent/CRIU-style), watches the
+//! cloud metadata service for eviction notices, takes opportunistic
+//! *termination checkpoints* on a notice, and — once the scale set has
+//! provisioned a replacement instance — finds the most recent valid
+//! checkpoint on shared storage and resumes the workload.
+//!
+//! ## Layer map
+//!
+//! * **Layer 3 (this crate)** — the coordinator ([`coordinator`]) plus every
+//!   substrate it needs: a virtual cloud with spot semantics ([`cloud`]),
+//!   metered shared storage ([`storage`]), the checkpoint engine
+//!   ([`checkpoint`]), a discrete-event simulation harness ([`sim`],
+//!   [`simclock`]), an IMDS-compatible scheduled-events HTTP service
+//!   ([`httpd`], [`cloud::imds_http`]), billing/pricing ([`cloud::billing`],
+//!   [`cloud::pricing`]) and a mini requeue scheduler ([`sched`]).
+//! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly
+//!   analog workload's compute: JAX stage functions calling Pallas kernels,
+//!   AOT-lowered to HLO-text artifacts (`python/compile/`), executed from
+//!   Rust through PJRT ([`runtime`]) by the [`workload::assembler`] driver.
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, after which the `spoton` binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use spoton::sim::experiment::Experiment;
+//! use spoton::simclock::SimDuration;
+//!
+//! // Row 5 of the paper's Table I: spot instance, evictions every 90 min,
+//! // transparent checkpointing every 30 min.
+//! let exp = Experiment::table1()
+//!     .eviction_every(SimDuration::from_mins(90))
+//!     .transparent(SimDuration::from_mins(30));
+//! let result = exp.run_sleeper().unwrap();
+//! println!("{}", result.summary());
+//! ```
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the Table I / Fig 2 / Fig 3 reproductions.
+
+pub mod util;
+pub mod json;
+pub mod config;
+pub mod simclock;
+pub mod httpd;
+pub mod cloud;
+pub mod storage;
+pub mod checkpoint;
+pub mod runtime;
+pub mod workload;
+pub mod coordinator;
+pub mod sim;
+pub mod metrics;
+pub mod report;
+pub mod sched;

@@ -1,0 +1,281 @@
+//! `spoton` — CLI for the Spot-on checkpointing framework.
+//!
+//! Subcommands (hand-rolled parser; no clap in the offline crate set):
+//!
+//! ```text
+//! spoton run --scenario cfg.toml [--workload sleeper|minimeta]
+//!            [--artifacts DIR] [--share DIR] [--timeline]
+//! spoton table1 [--workload sleeper|minimeta] [--artifacts DIR]
+//! spoton serve-metadata [--notice-secs 30]
+//! spoton simulate-eviction --url http://127.0.0.1:PORT --resource vm-0
+//! spoton coordinator --share DIR --instance vm-0 --events-url URL
+//! spoton artifacts-info [--artifacts DIR]
+//! spoton generate-reads [--count 8] [--seed 2022]
+//! ```
+
+use anyhow::{bail, Context, Result};
+use spoton::cloud::imds_http::ImdsHttp;
+use spoton::config::ScenarioConfig;
+use spoton::coordinator::realtime::Transport;
+use spoton::coordinator::{
+    CheckpointPolicy, RealtimeCoordinator, RealtimeParams,
+};
+use spoton::report;
+use spoton::runtime::Runtime;
+use spoton::sim::experiment::Experiment;
+use spoton::storage::{NfsStore, TransferModel};
+use spoton::workload::reads::{ReadGen, ReadGenCfg};
+use spoton::workload::sleeper::{Sleeper, SleeperCfg};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// Trivial `--key value` / `--flag` argument map.
+struct Args {
+    cmd: String,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse() -> Result<Self> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let key = a
+                .strip_prefix("--")
+                .with_context(|| format!("unexpected argument '{a}'"))?;
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                kv.insert(key.to_string(), rest[i + 1].clone());
+                i += 2;
+            } else {
+                flags.push(key.to_string());
+                i += 1;
+            }
+        }
+        Ok(Self { cmd, kv, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.kv.get(key).map(String::as_str)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(spoton::runtime::default_artifacts_dir)
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "run" => cmd_run(&args),
+        "table1" => cmd_table1(&args),
+        "serve-metadata" => cmd_serve_metadata(&args),
+        "simulate-eviction" => cmd_simulate_eviction(&args),
+        "coordinator" => cmd_coordinator(&args),
+        "artifacts-info" => cmd_artifacts_info(&args),
+        "generate-reads" => cmd_generate_reads(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `spoton help`)"),
+    }
+}
+
+const HELP: &str = "\
+spoton — fault-tolerant long-running workloads on cloud spot instances
+
+USAGE:
+  spoton run --scenario cfg.toml [--workload sleeper|minimeta]
+             [--artifacts DIR] [--share DIR] [--timeline]
+  spoton table1 [--workload sleeper|minimeta] [--artifacts DIR]
+  spoton serve-metadata [--notice-secs 30]
+  spoton simulate-eviction --url http://HOST:PORT --resource vm-0
+  spoton coordinator --share DIR --instance vm-0 [--events-url URL]
+  spoton artifacts-info [--artifacts DIR]
+  spoton generate-reads [--count 8] [--seed 2022]
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = match args.get("scenario") {
+        Some(path) => ScenarioConfig::load(Path::new(path))?,
+        None => ScenarioConfig::default(),
+    };
+    let workload = args.get("workload").unwrap_or(cfg.workload.kind.as_str());
+    let exp = Experiment { cfg: cfg.clone() };
+    let result = match workload {
+        "sleeper" => exp.run_sleeper()?,
+        "minimeta" => {
+            let dir = artifacts_dir(args);
+            let rt = Rc::new(RefCell::new(Runtime::load(&dir)?));
+            match args.get("share") {
+                Some(share) => exp.run_minimeta_on_nfs(rt, Path::new(share))?,
+                None => exp.run_minimeta(rt)?,
+            }
+        }
+        other => bail!("unknown workload '{other}'"),
+    };
+    println!("{}", result.summary());
+    println!("\nPer-stage wall time:");
+    for (label, d) in &result.stage_times {
+        println!("  {label:<6} {d}");
+    }
+    println!("\nInvoice:\n{}", result.invoice);
+    if args.flag("timeline") {
+        println!("Timeline:\n{}", result.timeline);
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let workload = args.get("workload").unwrap_or("sleeper");
+    let rows = report::paper_rows();
+    let mut results = Vec::new();
+    let rt = if workload == "minimeta" {
+        let dir = artifacts_dir(args);
+        Some(Rc::new(RefCell::new(Runtime::load(&dir)?)))
+    } else {
+        None
+    };
+    for row in rows {
+        eprintln!(
+            "running {} ({} / {} / {})…",
+            row.id, row.spoton, row.eviction, row.checkpoint
+        );
+        let exp = row.experiment();
+        let result = match &rt {
+            Some(rt) => exp.run_minimeta(rt.clone())?,
+            None => exp.run_sleeper()?,
+        };
+        results.push((row, result));
+    }
+    println!("\nTable I — execution time of the metaSPAdes-analog workload");
+    println!("(measured via the {workload} workload)\n");
+    print!("{}", report::render_comparison(&results));
+    Ok(())
+}
+
+fn cmd_serve_metadata(args: &Args) -> Result<()> {
+    let notice: u64 = args
+        .get("notice-secs")
+        .unwrap_or("30")
+        .parse()
+        .context("bad --notice-secs")?;
+    let imds = ImdsHttp::spawn(notice)?;
+    println!("scheduled-events endpoint: {}", imds.events_url());
+    println!(
+        "inject an eviction with:\n  spoton simulate-eviction --url {} \
+         --resource vm-0",
+        imds.base_url()
+    );
+    println!("serving… (Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate_eviction(args: &Args) -> Result<()> {
+    let url = args.get("url").context("--url required")?;
+    let resource = args.get("resource").context("--resource required")?;
+    let (status, body) = spoton::httpd::http_post(
+        &format!("{url}/admin/simulate-eviction?resource={resource}"),
+        "",
+    )?;
+    if status != 200 {
+        bail!("simulate-eviction failed ({status}): {body}");
+    }
+    println!("eviction scheduled: {body}");
+    Ok(())
+}
+
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    let share = args.get("share").context("--share required")?;
+    let instance = args.get("instance").unwrap_or("vm-0");
+    let mut store = NfsStore::open(
+        Path::new(share),
+        TransferModel {
+            bandwidth_mib_s: 250.0,
+            latency: spoton::simclock::SimDuration::from_millis(20),
+        },
+        None,
+    )?;
+    let mut workload = Sleeper::new(SleeperCfg::small(), 2022);
+    let policy = CheckpointPolicy::new(
+        spoton::config::CheckpointMethodCfg::Transparent {
+            interval: spoton::simclock::SimDuration::from_secs(5),
+        },
+    );
+    let mut coord = RealtimeCoordinator::new(
+        instance,
+        policy,
+        RealtimeParams {
+            poll_interval: std::time::Duration::from_millis(500),
+            periodic_interval: Some(std::time::Duration::from_secs(5)),
+            run_timeout: std::time::Duration::from_secs(600),
+            keep_checkpoints: 3,
+        },
+    );
+    let transport = match args.get("events-url") {
+        Some(url) => Transport::Http { events_url: url.to_string() },
+        None => {
+            bail!("--events-url required (start `spoton serve-metadata`)")
+        }
+    };
+    let outcome = coord.run(&mut workload, &mut store, &transport)?;
+    println!("coordinator outcome: {outcome:?}");
+    println!("timeline:\n{}", coord.timeline);
+    Ok(())
+}
+
+fn cmd_artifacts_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let mut rt = Runtime::load(&dir)?;
+    let g = rt.geometry().clone();
+    println!("artifacts dir: {}", dir.display());
+    println!("platform: {}", rt.platform());
+    println!(
+        "geometry: B={} L={} RC={} tile={}x{} taps={} ks={:?}",
+        g.num_buckets,
+        g.read_len,
+        g.reads_per_call,
+        g.read_tile,
+        g.bucket_tile,
+        2 * g.denoise_half_width + 1,
+        g.ks
+    );
+    let names: Vec<String> = rt.manifest().artifacts.keys().cloned().collect();
+    for name in names {
+        let start = std::time::Instant::now();
+        rt.executable(&name)?;
+        println!("  {name}: compiled in {:?}", start.elapsed());
+    }
+    Ok(())
+}
+
+fn cmd_generate_reads(args: &Args) -> Result<()> {
+    let count: u64 =
+        args.get("count").unwrap_or("8").parse().context("bad --count")?;
+    let seed: u64 =
+        args.get("seed").unwrap_or("2022").parse().context("bad --seed")?;
+    let gen = ReadGen::new(ReadGenCfg { seed, ..ReadGenCfg::default() });
+    const BASES: [char; 5] = ['A', 'C', 'G', 'T', 'N'];
+    for i in 0..count {
+        let row: String =
+            gen.read(i).iter().map(|&b| BASES[b as usize]).collect();
+        println!(">read_{i}\n{}", row.trim_end_matches('N'));
+    }
+    Ok(())
+}

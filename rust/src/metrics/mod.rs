@@ -1,0 +1,177 @@
+//! Run instrumentation: timelines and stage timers.
+//!
+//! Every experiment run produces a [`Timeline`] (ordered record of
+//! launches, checkpoints, notices, evictions, restores, stage
+//! completions) and a [`StageTimes`] accumulator whose per-stage *wall*
+//! durations — including interruptions, restores and re-done work — are
+//! exactly what the paper's Table I reports per k.
+
+use crate::simclock::{SimDuration, SimTime};
+use std::fmt;
+
+/// What happened.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    InstanceLaunch,
+    RestoreFromCheckpoint,
+    CheckpointCommitted,
+    CheckpointFailed,
+    EvictionNotice,
+    InstanceEvicted,
+    StageComplete,
+    WorkloadDone,
+    Aborted,
+}
+
+impl EventKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::InstanceLaunch => "launch",
+            EventKind::RestoreFromCheckpoint => "restore",
+            EventKind::CheckpointCommitted => "ckpt",
+            EventKind::CheckpointFailed => "ckpt-failed",
+            EventKind::EvictionNotice => "notice",
+            EventKind::InstanceEvicted => "evicted",
+            EventKind::StageComplete => "stage-done",
+            EventKind::WorkloadDone => "done",
+            EventKind::Aborted => "aborted",
+        }
+    }
+}
+
+/// One timeline record.
+#[derive(Debug, Clone)]
+pub struct TimelineEvent {
+    pub at: SimTime,
+    pub kind: EventKind,
+    pub detail: String,
+}
+
+/// Ordered event record for one run.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    events: Vec<TimelineEvent>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &mut self,
+        at: SimTime,
+        kind: EventKind,
+        detail: impl Into<String>,
+    ) {
+        let detail = detail.into();
+        log::debug!("{at:?} {}: {detail}", kind.as_str());
+        self.events.push(TimelineEvent { at, kind, detail });
+    }
+
+    pub fn events(&self) -> &[TimelineEvent] {
+        &self.events
+    }
+
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Events are recorded in nondecreasing time order (asserted by
+    /// tests; the DES must never reorder).
+    pub fn is_monotone(&self) -> bool {
+        self.events.windows(2).all(|w| w[0].at <= w[1].at)
+    }
+}
+
+impl fmt::Display for Timeline {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for e in &self.events {
+            writeln!(
+                f,
+                "  {:>10} {:<12} {}",
+                format!("{:?}", e.at),
+                e.kind.as_str(),
+                e.detail
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Per-stage wall-duration accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct StageTimes {
+    /// (label, wall duration) per completed stage, in completion order.
+    completed: Vec<(String, SimDuration)>,
+    current_started: Option<SimTime>,
+}
+
+impl StageTimes {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Call when a stage begins (first launch and after each stage ends).
+    pub fn stage_started(&mut self, at: SimTime) {
+        self.current_started = Some(at);
+    }
+
+    /// Call when a stage completes; records its wall duration.
+    pub fn stage_completed(&mut self, label: &str, at: SimTime) {
+        let started = self
+            .current_started
+            .expect("stage_completed without stage_started");
+        self.completed.push((label.to_string(), at.since(started)));
+        self.current_started = Some(at);
+    }
+
+    pub fn completed(&self) -> &[(String, SimDuration)] {
+        &self.completed
+    }
+
+    pub fn total(&self) -> SimDuration {
+        self.completed
+            .iter()
+            .fold(SimDuration::ZERO, |acc, (_, d)| acc + *d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeline_counts_and_order() {
+        let mut t = Timeline::new();
+        t.record(SimTime::from_secs(1), EventKind::InstanceLaunch, "vm-0");
+        t.record(SimTime::from_secs(5), EventKind::CheckpointCommitted, "id 0");
+        t.record(SimTime::from_secs(5), EventKind::EvictionNotice, "evt-1");
+        t.record(SimTime::from_secs(9), EventKind::InstanceEvicted, "vm-0");
+        assert_eq!(t.count(EventKind::CheckpointCommitted), 1);
+        assert_eq!(t.count(EventKind::EvictionNotice), 1);
+        assert_eq!(t.count(EventKind::Aborted), 0);
+        assert!(t.is_monotone());
+        let s = t.to_string();
+        assert!(s.contains("notice"));
+    }
+
+    #[test]
+    fn stage_times_accumulate_wall_durations() {
+        let mut s = StageTimes::new();
+        s.stage_started(SimTime::from_secs(0));
+        s.stage_completed("K33", SimTime::from_secs(2030));
+        // interruption inside K55 still lands in K55's wall time
+        s.stage_completed("K55", SimTime::from_secs(2030 + 2333 + 600));
+        assert_eq!(s.completed()[0].1.as_secs(), 2030);
+        assert_eq!(s.completed()[1].1.as_secs(), 2933);
+        assert_eq!(s.total().as_secs(), 2030 + 2933);
+    }
+
+    #[test]
+    #[should_panic(expected = "without stage_started")]
+    fn stage_completed_requires_start() {
+        let mut s = StageTimes::new();
+        s.stage_completed("K33", SimTime::from_secs(1));
+    }
+}

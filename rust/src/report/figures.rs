@@ -1,0 +1,125 @@
+//! Fig 2 (cost comparison) and Fig 3 (execution-time comparison)
+//! renderers.
+
+use super::table::{bar_chart, TextTable};
+use crate::sim::driver::RunResult;
+
+/// Fig 2: total cost per configuration, with savings relative to the
+/// on-demand baseline (first entry).
+pub fn render_fig2(results: &[(&str, &RunResult)]) -> String {
+    assert!(!results.is_empty());
+    let baseline = results[0].1.total_cost();
+    let mut out = String::new();
+    out.push_str(
+        "Fig 2 — Cost comparison, on-demand vs checkpoint-protected spot\n\n",
+    );
+    let bars: Vec<(String, f64)> = results
+        .iter()
+        .map(|(label, r)| (label.to_string(), r.total_cost()))
+        .collect();
+    out.push_str(&bar_chart(&bars, "USD", 40));
+    out.push('\n');
+    let mut t = TextTable::new(&[
+        "Configuration", "Compute", "Storage", "Total", "Saving vs on-demand",
+    ]);
+    for (label, r) in results {
+        let saving = 1.0 - r.total_cost() / baseline;
+        t.row(&[
+            label.to_string(),
+            crate::util::fmt::dollars(r.compute_cost),
+            crate::util::fmt::dollars(r.storage_cost),
+            crate::util::fmt::dollars(r.total_cost()),
+            if r.total_cost() == baseline {
+                "—".to_string()
+            } else {
+                crate::util::fmt::pct(-saving).replace('-', "")
+            },
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Fig 3: execution time, application-native vs transparent, grouped by
+/// eviction interval. `pairs` = (eviction label, app result, transparent
+/// result).
+pub fn render_fig3(pairs: &[(&str, &RunResult, &RunResult)]) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 3 — Execution time: application-native vs transparent \
+         checkpointing on spot\n\n",
+    );
+    let mut bars = Vec::new();
+    for (label, app, tr) in pairs {
+        bars.push((
+            format!("{label} / application"),
+            app.total.as_secs() as f64 / 3600.0,
+        ));
+        bars.push((
+            format!("{label} / transparent"),
+            tr.total.as_secs() as f64 / 3600.0,
+        ));
+    }
+    out.push_str(&bar_chart(&bars, "h", 40));
+    out.push('\n');
+    let mut t = TextTable::new(&[
+        "Eviction", "Application", "Transparent", "Time saved",
+    ]);
+    for (label, app, tr) in pairs {
+        let saving =
+            1.0 - tr.total.as_millis() as f64 / app.total.as_millis() as f64;
+        t.row(&[
+            label.to_string(),
+            app.total.hms(),
+            tr.total.hms(),
+            crate::util::fmt::pct(saving).replace('+', ""),
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::experiment::Experiment;
+    use crate::simclock::SimDuration;
+
+    #[test]
+    fn fig2_renders_with_savings() {
+        let od = Experiment::table1()
+            .spoton_off()
+            .ondemand()
+            .run_sleeper()
+            .unwrap();
+        let spot = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(90))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        let s = render_fig2(&[
+            ("on-demand baseline", &od),
+            ("spot + transparent 30m", &spot),
+        ]);
+        assert!(s.contains("on-demand baseline"));
+        assert!(s.contains("Saving"));
+        assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn fig3_renders_time_saved() {
+        let app = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .app_native()
+            .run_sleeper()
+            .unwrap();
+        let tr = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        let s = render_fig3(&[("every 60 min", &app, &tr)]);
+        assert!(s.contains("every 60 min / application"));
+        assert!(s.contains("Time saved"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Result rendering: the paper's tables and figures as text + CSV.
+//!
+//! * [`table`] — generic aligned text tables.
+//! * [`table1`] — the 8 rows of the paper's Table I: each row's scenario
+//!   builder, the paper's published numbers, and a renderer that prints
+//!   paper-vs-measured side by side.
+//! * [`figures`] — Fig 2 (cost comparison) and Fig 3 (app-native vs
+//!   transparent execution time) as ASCII bar charts + CSV series.
+
+pub mod table;
+pub mod table1;
+pub mod figures;
+
+pub use table::TextTable;
+pub use table1::{paper_rows, render_comparison, Table1Row};

@@ -1,0 +1,206 @@
+//! Table I of the paper: row definitions, published values, and the
+//! paper-vs-measured comparison renderer.
+
+use super::table::TextTable;
+use crate::sim::driver::RunResult;
+use crate::sim::experiment::Experiment;
+use crate::simclock::SimDuration;
+use crate::util::fmt::parse_hms;
+
+/// One row of the paper's Table I.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    /// Short row id, e.g. "row5".
+    pub id: &'static str,
+    pub spoton: &'static str,          // "ON" | "OFF"
+    pub eviction: &'static str,        // "N/A" | "Every 90 min" | ...
+    pub checkpoint: &'static str,      // "N/A" | "Application" | ...
+    /// Paper's published values: K33, K55, K77, K99, K127, Total.
+    pub paper: [&'static str; 6],
+}
+
+impl Table1Row {
+    /// The experiment reproducing this row.
+    pub fn experiment(&self) -> Experiment {
+        let mut e = Experiment::table1().named(self.id);
+        if self.spoton == "OFF" {
+            e = e.spoton_off();
+        }
+        e = match self.eviction {
+            "N/A" => e,
+            "Every 90 min" => e.eviction_every(SimDuration::from_mins(90)),
+            "Every 60 min" => e.eviction_every(SimDuration::from_mins(60)),
+            other => panic!("unknown eviction spec {other}"),
+        };
+        e = match self.checkpoint {
+            "N/A" => e.unprotected(),
+            "Application" => e.app_native(),
+            "Transparent 30 min" => e.transparent(SimDuration::from_mins(30)),
+            "Transparent 15 min" => e.transparent(SimDuration::from_mins(15)),
+            other => panic!("unknown checkpoint spec {other}"),
+        };
+        e
+    }
+
+    /// Paper total in seconds.
+    pub fn paper_total_secs(&self) -> u64 {
+        parse_hms(self.paper[5]).expect("paper value parses")
+    }
+}
+
+/// The paper's Table I, verbatim.
+pub fn paper_rows() -> Vec<Table1Row> {
+    vec![
+        Table1Row {
+            id: "row1",
+            spoton: "OFF",
+            eviction: "N/A",
+            checkpoint: "N/A",
+            paper: ["33:50", "38:53", "39:51", "40:19", "30:33", "3:03:26"],
+        },
+        Table1Row {
+            id: "row2",
+            spoton: "ON",
+            eviction: "N/A",
+            checkpoint: "N/A",
+            paper: ["33:57", "39:03", "41:35", "40:41", "31:01", "3:05:32"],
+        },
+        Table1Row {
+            id: "row3",
+            spoton: "ON",
+            eviction: "Every 90 min",
+            checkpoint: "Application",
+            paper: ["33:33", "40:15", "57:16", "38:56", "46:14", "3:36:14"],
+        },
+        Table1Row {
+            id: "row4",
+            spoton: "ON",
+            eviction: "Every 60 min",
+            checkpoint: "Application",
+            paper: ["29:22", "1:05:25", "1:03:03", "59:25", "51:07", "4:28:22"],
+        },
+        Table1Row {
+            id: "row5",
+            spoton: "ON",
+            eviction: "Every 90 min",
+            checkpoint: "Transparent 30 min",
+            paper: ["32:52", "37:03", "41:15", "39:53", "28:32", "2:59:35"],
+        },
+        Table1Row {
+            id: "row6",
+            spoton: "ON",
+            eviction: "Every 90 min",
+            checkpoint: "Transparent 15 min",
+            paper: ["32:45", "38:13", "41:58", "39:50", "32:22", "3:05:08"],
+        },
+        Table1Row {
+            id: "row7",
+            spoton: "ON",
+            eviction: "Every 60 min",
+            checkpoint: "Transparent 30 min",
+            paper: ["32:40", "38:52", "41:10", "39:45", "28:34", "3:01:01"],
+        },
+        Table1Row {
+            id: "row8",
+            spoton: "ON",
+            eviction: "Every 60 min",
+            checkpoint: "Transparent 15 min",
+            paper: ["31:10", "38:15", "42:05", "40:01", "30:29", "3:02:00"],
+        },
+    ]
+}
+
+/// Render the paper-vs-measured comparison for a set of (row, result)
+/// pairs.
+pub fn render_comparison(results: &[(Table1Row, RunResult)]) -> String {
+    let mut t = TextTable::new(&[
+        "Row", "Spot-on", "Eviction", "Checkpoint", "K33", "K55", "K77",
+        "K99", "K127", "Total", "Paper", "Δ",
+    ]);
+    for (row, r) in results {
+        let stage = |label: &str| {
+            r.stage(label).map(|d| d.hms()).unwrap_or_else(|| "—".into())
+        };
+        let measured = r.total.as_secs() as f64;
+        let paper = row.paper_total_secs() as f64;
+        let delta = (measured - paper) / paper;
+        t.row(&[
+            row.id.to_string(),
+            row.spoton.to_string(),
+            row.eviction.to_string(),
+            row.checkpoint.to_string(),
+            stage("K33"),
+            stage("K55"),
+            stage("K77"),
+            stage("K99"),
+            stage("K127"),
+            if r.completed {
+                r.total.hms()
+            } else {
+                "DNF".to_string()
+            },
+            row.paper[5].to_string(),
+            crate::util::fmt::pct(delta),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_rows_matching_paper() {
+        let rows = paper_rows();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].paper_total_secs(), 11006); // 3:03:26
+        assert_eq!(rows[3].paper_total_secs(), 16102); // 4:28:22
+        // per-stage values sum to ~the published total (±60s of rounding)
+        for row in &rows {
+            let sum: u64 = row.paper[..5]
+                .iter()
+                .map(|s| parse_hms(s).unwrap())
+                .sum();
+            let total = row.paper_total_secs();
+            assert!(
+                sum.abs_diff(total) <= 60,
+                "{}: stages sum {sum} vs total {total}",
+                row.id
+            );
+        }
+    }
+
+    #[test]
+    fn experiments_match_row_specs() {
+        use crate::config::{CheckpointMethodCfg, EvictionPlanCfg};
+        let rows = paper_rows();
+        let e1 = rows[0].experiment();
+        assert!(!e1.cfg.coordinator_attached);
+        assert_eq!(e1.cfg.eviction, EvictionPlanCfg::None);
+        let e4 = rows[3].experiment();
+        assert_eq!(
+            e4.cfg.eviction,
+            EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(60) }
+        );
+        assert_eq!(e4.cfg.checkpoint, CheckpointMethodCfg::AppNative);
+        let e8 = rows[7].experiment();
+        assert_eq!(
+            e8.cfg.checkpoint,
+            CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(15)
+            }
+        );
+    }
+
+    #[test]
+    fn comparison_renders_with_sleeper_run() {
+        let rows = paper_rows();
+        let row = rows[0].clone();
+        let result = row.experiment().run_sleeper().unwrap();
+        let s = render_comparison(&[(row, result)]);
+        assert!(s.contains("row1"));
+        assert!(s.contains("3:03:26"));
+        assert!(s.contains("Paper"));
+    }
+}

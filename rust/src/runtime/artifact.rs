@@ -1,0 +1,232 @@
+//! Artifact manifest: the build-time contract between `python/compile/`
+//! and the Rust runtime.
+
+use crate::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Supported manifest schema version (must match `aot.MANIFEST_VERSION`).
+pub const MANIFEST_VERSION: u64 = 1;
+
+/// Shape + dtype of one tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub shape: Vec<u64>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .req_array("shape")?
+            .iter()
+            .map(|d| d.as_u64().context("shape dims must be u64"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Self { shape, dtype: v.req_str("dtype")?.to_string() })
+    }
+}
+
+/// One compiled artifact's signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub sha256: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Kernel geometry shared by all artifacts in one build (must agree with
+/// the workload config at runtime).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Geometry {
+    pub num_buckets: u64,
+    pub read_len: u64,
+    pub reads_per_call: u64,
+    pub read_tile: u64,
+    pub bucket_tile: u64,
+    pub denoise_half_width: u64,
+    pub ks: Vec<u32>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub geometry: Geometry,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+}
+
+impl ArtifactManifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = v.req_u64("version")?;
+        if version != MANIFEST_VERSION {
+            bail!("unsupported artifact manifest version {version}");
+        }
+        let g = v
+            .get("geometry")
+            .context("missing geometry")?;
+        let geometry = Geometry {
+            num_buckets: g.req_u64("num_buckets")?,
+            read_len: g.req_u64("read_len")?,
+            reads_per_call: g.req_u64("reads_per_call")?,
+            read_tile: g.req_u64("read_tile")?,
+            bucket_tile: g.req_u64("bucket_tile")?,
+            denoise_half_width: g.req_u64("denoise_half_width")?,
+            ks: g
+                .req_array("ks")?
+                .iter()
+                .map(|k| {
+                    k.as_u64()
+                        .and_then(|x| u32::try_from(x).ok())
+                        .context("ks must be u32")
+                })
+                .collect::<Result<Vec<_>>>()?,
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = v
+            .get("artifacts")
+            .and_then(Value::as_object)
+            .context("missing artifacts object")?;
+        for (name, a) in arts {
+            let inputs = a
+                .req_array("inputs")?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req_array("outputs")?
+                .iter()
+                .map(TensorSig::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: a.req_str("file")?.to_string(),
+                    sha256: a.req_str("sha256")?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Self { geometry, artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    /// Verify every artifact file's SHA-256 against the manifest.
+    pub fn verify_digests(&self, dir: &Path) -> Result<()> {
+        for (name, sig) in &self.artifacts {
+            let path = dir.join(&sig.file);
+            let data = std::fs::read(&path)
+                .with_context(|| format!("reading artifact {name}"))?;
+            let digest = crate::util::sha256_hex(&data);
+            if digest != sig.sha256 {
+                bail!(
+                    "artifact '{name}' digest mismatch: {} on disk vs {} in \
+                     manifest — rerun `make artifacts`",
+                    &digest[..12],
+                    &sig.sha256[..12]
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The count artifact name for a k value.
+    pub fn count_artifact(k: u32) -> String {
+        format!("count_k{k}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "geometry": {
+        "num_buckets": 8192, "read_len": 160, "reads_per_call": 1024,
+        "read_tile": 8, "bucket_tile": 2048, "denoise_half_width": 2,
+        "ks": [33, 55]
+      },
+      "artifacts": {
+        "count_k33": {
+          "file": "count_k33.hlo.txt",
+          "sha256": "abc",
+          "inputs": [
+            {"shape": [1024, 160], "dtype": "int32"},
+            {"shape": [8192], "dtype": "float32"}
+          ],
+          "outputs": [{"shape": [8192], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.geometry.num_buckets, 8192);
+        assert_eq!(m.geometry.ks, vec![33, 55]);
+        let a = &m.artifacts["count_k33"];
+        assert_eq!(a.inputs[0].elements(), 1024 * 160);
+        assert_eq!(a.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn rejects_bad_versions_and_shapes() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        let v2 = SAMPLE.replace("\"version\": 1", "\"version\": 9");
+        assert!(ArtifactManifest::parse(&v2).is_err());
+        let noart = SAMPLE.replace("count_k33", "").replace(
+            r#""": {"#,
+            r#""x": {"#,
+        );
+        // even if that edit mangles, an empty artifacts map must fail:
+        let empty = r#"{"version":1,"geometry":{"num_buckets":1,"read_len":1,
+          "reads_per_call":1,"read_tile":1,"bucket_tile":1,
+          "denoise_half_width":0,"ks":[]},"artifacts":{}}"#;
+        assert!(ArtifactManifest::parse(empty).is_err());
+        let _ = noart;
+    }
+
+    #[test]
+    fn digest_verification_detects_drift() {
+        let dir = std::env::temp_dir().join(format!(
+            "spoton-manifest-{}-{}",
+            std::process::id(),
+            crate::util::next_seq()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let hlo = "HloModule fake";
+        std::fs::write(dir.join("count_k33.hlo.txt"), hlo).unwrap();
+        let good = SAMPLE.replace(
+            "\"sha256\": \"abc\"",
+            &format!("\"sha256\": \"{}\"", crate::util::sha256_hex(hlo.as_bytes())),
+        );
+        let m = ArtifactManifest::parse(&good).unwrap();
+        m.verify_digests(&dir).unwrap();
+        // drift the file
+        std::fs::write(dir.join("count_k33.hlo.txt"), "HloModule changed")
+            .unwrap();
+        let err = m.verify_digests(&dir).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"));
+    }
+
+    #[test]
+    fn count_artifact_names() {
+        assert_eq!(ArtifactManifest::count_artifact(127), "count_k127");
+    }
+}

@@ -1,0 +1,272 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them on the request path.
+//!
+//! `make artifacts` (the only Python invocation) leaves `artifacts/` with
+//! one HLO-text module per compiled function plus `manifest.json`
+//! describing shapes, dtypes and SHA-256 digests. This module is the
+//! Rust side of that contract:
+//!
+//! * [`ArtifactManifest`] — parse + validate the manifest, verify file
+//!   digests (a stale or hand-edited artifact fails closed).
+//! * [`Runtime`] — `PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//!   → `compile` → cached [`Executable`]s executed with concrete inputs.
+//!
+//! Interchange is HLO **text** (not serialized proto): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). Python lowers
+//! with `return_tuple=True`, so results unwrap via `decompose_tuple()`.
+
+pub mod artifact;
+
+pub use artifact::{ArtifactManifest, ArtifactSig, Geometry, TensorSig};
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled, callable artifact.
+pub struct Executable {
+    name: String,
+    sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Typed input for an execution.
+pub enum Arg<'a> {
+    I32(&'a [i32]),
+    F32(&'a [f32]),
+}
+
+impl Executable {
+    /// Execute with shape/dtype-checked args; returns the flattened f32
+    /// outputs (all artifacts in this project return f32 tensors).
+    pub fn call_f32(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        if args.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                args.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, sig)) in args.iter().zip(&self.sig.inputs).enumerate() {
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, sig.dtype.as_str()) {
+                (Arg::I32(v), "int32") => {
+                    if v.len() as u64 != sig.elements() {
+                        bail!(
+                            "{}: arg {i} has {} elements, expected {}",
+                            self.name,
+                            v.len(),
+                            sig.elements()
+                        );
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (Arg::F32(v), "float32") => {
+                    if v.len() as u64 != sig.elements() {
+                        bail!(
+                            "{}: arg {i} has {} elements, expected {}",
+                            self.name,
+                            v.len(),
+                            sig.elements()
+                        );
+                    }
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+                (_, dt) => bail!(
+                    "{}: arg {i} dtype mismatch (manifest says {dt})",
+                    self.name
+                ),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        // return_tuple=True: outputs arrive as a tuple literal.
+        let parts = tuple.decompose_tuple()?;
+        if parts.len() != self.sig.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                parts.len(),
+                self.sig.outputs.len()
+            );
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, osig) in parts.iter().zip(&self.sig.outputs) {
+            let v = part.to_vec::<f32>()?;
+            if v.len() as u64 != osig.elements() {
+                bail!(
+                    "{}: output has {} elements, expected {}",
+                    self.name,
+                    v.len(),
+                    osig.elements()
+                );
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    pub fn sig(&self) -> &ArtifactSig {
+        &self.sig
+    }
+}
+
+/// The PJRT client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: ArtifactManifest,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load `artifacts/` (manifest + digest verification; compilation is
+    /// lazy per artifact).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        manifest
+            .verify_digests(dir)
+            .context("artifact digest verification")?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.manifest.geometry
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn executable(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let sig = self
+                .manifest
+                .artifacts
+                .get(name)
+                .with_context(|| format!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(
+                name.to_string(),
+                Executable { name: name.to_string(), sig, exe },
+            );
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Compile every artifact up front (warm start for latency benches).
+    pub fn warm_all(&mut self) -> Result<()> {
+        let names: Vec<String> =
+            self.manifest.artifacts.keys().cloned().collect();
+        for n in names {
+            self.executable(&n)?;
+        }
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Default artifacts directory: `$SPOTON_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SPOTON_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_execute_denoise() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rt = Runtime::load(&dir).unwrap();
+        let b = rt.geometry().num_buckets as usize;
+        let taps = 2 * rt.geometry().denoise_half_width as usize + 1;
+        let exe = rt.executable("denoise").unwrap();
+        let counts: Vec<f32> = (0..b).map(|i| (i % 17) as f32).collect();
+        // identity stencil: output == input where above threshold 0
+        let mut stencil = vec![0f32; taps];
+        stencil[taps / 2] = 1.0;
+        let params = vec![0.0f32, 0.5];
+        let out = exe
+            .call_f32(&[Arg::F32(&counts), Arg::F32(&stencil), Arg::F32(&params)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), b);
+        assert_eq!(out[0], counts);
+    }
+
+    #[test]
+    fn execute_stats() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rt = Runtime::load(&dir).unwrap();
+        let b = rt.geometry().num_buckets as usize;
+        let exe = rt.executable("spectrum_stats").unwrap();
+        let mut counts = vec![0f32; b];
+        counts[3] = 5.0;
+        counts[100] = 2.0;
+        let out = exe.call_f32(&[Arg::F32(&counts)]).unwrap();
+        assert_eq!(out[0], vec![7.0, 2.0, 5.0]); // mass, occupied, max
+    }
+
+    #[test]
+    fn shape_and_dtype_mismatches_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rt = Runtime::load(&dir).unwrap();
+        let b = rt.geometry().num_buckets as usize;
+        let exe = rt.executable("spectrum_stats").unwrap();
+        let wrong = vec![0f32; 3];
+        assert!(exe.call_f32(&[Arg::F32(&wrong)]).is_err());
+        assert!(exe.call_f32(&[]).is_err());
+        let ints = vec![0i32; b];
+        assert!(exe.call_f32(&[Arg::I32(&ints)]).is_err(), "dtype mismatch");
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mut rt = Runtime::load(&dir).unwrap();
+        assert!(rt.executable("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,262 @@
+//! Mini requeue scheduler — the Slurm/LSF path of paper §II.
+//!
+//! "After a spot instance is terminated, a new one is created manually or
+//! automatically through a cloud vendor's spot scheduling system or a
+//! separate job/resource scheduler (e.g., Slurm and LSF)."
+//!
+//! The scale set covers the first path; this module models the second: a
+//! single-slot batch queue (like a Slurm partition of spot nodes with
+//! `--requeue`). Jobs run one at a time; an evicted job goes back to the
+//! *tail* of the queue and pays a scheduling delay before its next
+//! attempt, so queue wait — not just provisioning — contributes to
+//! turnaround. Used by the `eviction_storm` example and queue-behaviour
+//! tests.
+
+use crate::sim::experiment::Experiment;
+use crate::simclock::{SimDuration, SimTime};
+use anyhow::Result;
+
+/// A queued job: one scenario to completion.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub id: u32,
+    pub name: String,
+    pub experiment: Experiment,
+}
+
+/// Per-job outcome.
+#[derive(Debug)]
+pub struct JobRecord {
+    pub id: u32,
+    pub name: String,
+    pub submitted_at: SimTime,
+    pub started_at: SimTime,
+    pub finished_at: SimTime,
+    pub attempts: u32,
+    pub evictions: u32,
+    pub completed: bool,
+    pub cost: f64,
+}
+
+impl JobRecord {
+    pub fn wait(&self) -> SimDuration {
+        self.started_at.since(self.submitted_at)
+    }
+
+    pub fn turnaround(&self) -> SimDuration {
+        self.finished_at.since(self.submitted_at)
+    }
+}
+
+/// Single-slot requeue scheduler.
+pub struct RequeueScheduler {
+    /// Delay between an eviction and the next attempt starting (queue
+    /// scheduling latency; replaces the scale set's provisioning delay in
+    /// the requeue path).
+    pub requeue_delay: SimDuration,
+    /// Attempt cap per job (abandon pathological jobs).
+    pub max_attempts: u32,
+}
+
+impl Default for RequeueScheduler {
+    fn default() -> Self {
+        Self {
+            requeue_delay: SimDuration::from_secs(300),
+            max_attempts: 16,
+        }
+    }
+}
+
+impl RequeueScheduler {
+    /// Run all jobs to completion (or attempt exhaustion), FIFO with
+    /// requeue-at-tail. The slot-level clock advances by each attempt's
+    /// virtual duration.
+    ///
+    /// Each attempt reuses the job's shared checkpoint namespace: within
+    /// one scheduler run, a job's later attempts restore what earlier
+    /// attempts checkpointed (one run == one share), which is exactly how
+    /// a Slurm requeue with shared NFS behaves.
+    pub fn run(&self, jobs: Vec<Job>) -> Result<Vec<JobRecord>> {
+        // Each job gets its own share (BlobStore) that persists across
+        // its attempts.
+        struct Pending {
+            job: Job,
+            submitted_at: SimTime,
+            first_start: Option<SimTime>,
+            attempts: u32,
+            evictions: u32,
+            cost: f64,
+            store: crate::storage::BlobStore,
+        }
+
+        let mut now = SimTime::ZERO;
+        let mut queue: std::collections::VecDeque<Pending> = jobs
+            .into_iter()
+            .map(|job| {
+                let model = crate::storage::TransferModel {
+                    bandwidth_mib_s: job.experiment.cfg.storage.bandwidth_mib_s,
+                    latency: job.experiment.cfg.storage.latency,
+                };
+                Pending {
+                    store: crate::storage::BlobStore::new(
+                        model,
+                        Some(job.experiment.cfg.storage.provisioned_gib),
+                    ),
+                    job,
+                    submitted_at: SimTime::ZERO,
+                    first_start: None,
+                    attempts: 0,
+                    evictions: 0,
+                    cost: 0.0,
+                }
+            })
+            .collect();
+        let mut records = Vec::new();
+
+        while let Some(mut p) = queue.pop_front() {
+            if p.attempts > 0 {
+                now += self.requeue_delay;
+            }
+            if p.first_start.is_none() {
+                p.first_start = Some(now);
+            }
+            p.attempts += 1;
+
+            // One attempt = one experiment run *bounded to a single
+            // instance*: force the scale set to not auto-replace by
+            // setting an immediate deadline after the first eviction.
+            // Simpler: run the whole experiment (scale-set path) when the
+            // job is protected; the requeue model applies between whole-
+            // job failures. To surface requeue behaviour, treat each
+            // eviction inside the run as an attempt boundary is
+            // unnecessary — instead we run the experiment with
+            // provisioning_delay = requeue_delay, which is the requeue
+            // path's replacement semantics.
+            let mut exp = p.job.experiment.clone();
+            exp.cfg.cloud.provisioning_delay = self.requeue_delay;
+            let bumped = exp.cfg.seed.wrapping_add(p.attempts as u64);
+            exp = exp.seed(bumped);
+
+            let cfg_sleeper = exp.cfg.workload.clone();
+            let _ = cfg_sleeper;
+            let result = {
+                let mut factory = exp.sleeper_factory();
+                crate::sim::driver::SimDriver::new(&exp.cfg, &mut p.store)
+                    .run(&mut *factory)?
+            };
+            now += result.total;
+            p.evictions += result.evictions;
+            p.cost += result.total_cost();
+
+            if result.completed || p.attempts >= self.max_attempts {
+                records.push(JobRecord {
+                    id: p.job.id,
+                    name: p.job.name.clone(),
+                    submitted_at: p.submitted_at,
+                    started_at: p.first_start.unwrap(),
+                    finished_at: now,
+                    attempts: p.attempts,
+                    evictions: p.evictions,
+                    completed: result.completed,
+                    cost: p.cost,
+                });
+            } else {
+                queue.push_back(p);
+            }
+        }
+        Ok(records)
+    }
+}
+
+impl Experiment {
+    /// A boxed sleeper factory for scheduler use.
+    pub fn sleeper_factory(
+        &self,
+    ) -> Box<dyn FnMut() -> Result<Box<dyn crate::workload::Workload>>> {
+        let w = &self.cfg.workload;
+        let cfg = crate::workload::sleeper::SleeperCfg {
+            stages: w.ks.iter().map(|k| (format!("K{k}"), 40u64)).collect(),
+            milestones_per_stage: w.app_milestones_per_stage,
+            charged_bytes: (w.state_gib * (1u64 << 30) as f64) as u64,
+            app_charged_bytes: (w.app_ckpt_gib * (1u64 << 30) as f64) as u64,
+        };
+        let seed = w.seed;
+        Box::new(move || {
+            Ok(Box::new(crate::workload::sleeper::Sleeper::new(
+                cfg.clone(),
+                seed,
+            )))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimDuration;
+
+    #[test]
+    fn fifo_jobs_complete_in_order() {
+        let mk = |i: u32| Job {
+            id: i,
+            name: format!("job-{i}"),
+            experiment: Experiment::table1()
+                .named("queued")
+                .transparent(SimDuration::from_mins(30)),
+        };
+        let sched = RequeueScheduler::default();
+        let records = sched.run(vec![mk(0), mk(1)]).unwrap();
+        assert_eq!(records.len(), 2);
+        assert!(records.iter().all(|r| r.completed));
+        assert_eq!(records[0].id, 0);
+        assert_eq!(records[1].id, 1);
+        // job 1 waited for job 0
+        assert!(records[1].turnaround() > records[0].turnaround());
+        assert_eq!(records[0].attempts, 1);
+    }
+
+    #[test]
+    fn evicted_protected_jobs_still_finish_with_requeue_delay() {
+        let job = Job {
+            id: 7,
+            name: "stormy".into(),
+            experiment: Experiment::table1()
+                .eviction_every(SimDuration::from_mins(60))
+                .transparent(SimDuration::from_mins(15)),
+        };
+        let sched = RequeueScheduler {
+            requeue_delay: SimDuration::from_secs(600),
+            max_attempts: 4,
+        };
+        let records = sched.run(vec![job]).unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert!(r.completed, "protected job must finish");
+        assert!(r.evictions >= 2);
+        // requeue delay (600s) charged per replacement, visible in
+        // turnaround vs the 3:03 baseline + overheads
+        assert!(r.turnaround().as_secs() > 11006);
+    }
+
+    #[test]
+    fn attempt_cap_abandons_doomed_jobs() {
+        // unprotected + frequent evictions can never finish
+        let job = Job {
+            id: 1,
+            name: "doomed".into(),
+            experiment: Experiment::table1()
+                .named("doomed")
+                .eviction_every(SimDuration::from_mins(30))
+                .unprotected()
+                .deadline(SimDuration::from_hours(2)),
+        };
+        let sched = RequeueScheduler {
+            requeue_delay: SimDuration::from_secs(60),
+            max_attempts: 2,
+        };
+        let records = sched.run(vec![job]).unwrap();
+        assert_eq!(records.len(), 1);
+        assert!(!records[0].completed);
+        assert_eq!(records[0].attempts, 2);
+    }
+}

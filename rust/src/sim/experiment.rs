@@ -1,0 +1,404 @@
+//! Experiment presets and the builder API over [`super::driver`].
+//!
+//! `Experiment::table1()` carries the paper's testbed defaults
+//! (D8s_v3, $0.076/h spot, Azure Files NFS, 30 s notice, Table I row-1
+//! stage calibration); builder methods dial in each row's eviction plan
+//! and checkpoint method. `run_sleeper` executes with the pure-Rust
+//! calibration workload (fast; used by unit tests and the wide ablation
+//! sweeps), `run_minimeta` with the PJRT-backed assembler (the real
+//! three-layer stack; used by the headline benches and examples).
+
+pub use crate::config::{CheckpointMethodCfg, EvictionPlanCfg};
+use crate::config::ScenarioConfig;
+use crate::runtime::Runtime;
+use crate::sim::driver::{RunResult, SimDriver};
+use crate::simclock::SimDuration;
+use crate::storage::{BlobStore, NfsStore, SharedStore, TransferModel};
+use crate::workload::assembler::{MiniMeta, MiniMetaCfg};
+use crate::workload::sleeper::{Sleeper, SleeperCfg};
+use crate::workload::Workload;
+use anyhow::Result;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+/// A configured experiment, ready to run.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub cfg: ScenarioConfig,
+}
+
+impl Experiment {
+    /// Paper testbed defaults (Table I row 1 calibration, no evictions,
+    /// no checkpoints, coordinator attached).
+    pub fn table1() -> Self {
+        Self { cfg: ScenarioConfig::default() }
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.cfg.name = name.to_string();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Row 1: no coordinator at all.
+    pub fn spoton_off(mut self) -> Self {
+        self.cfg.coordinator_attached = false;
+        self
+    }
+
+    /// Run on on-demand pricing (no spot semantics).
+    pub fn ondemand(mut self) -> Self {
+        self.cfg.cloud.spot = false;
+        self.cfg.eviction = EvictionPlanCfg::None;
+        self
+    }
+
+    /// Inject an eviction every `interval` of instance uptime (the
+    /// paper's `simulate-eviction` schedule).
+    pub fn eviction_every(mut self, interval: SimDuration) -> Self {
+        self.cfg.eviction = EvictionPlanCfg::Fixed { interval };
+        self
+    }
+
+    /// Poisson spot-market evictions with the given mean inter-arrival.
+    pub fn eviction_poisson(mut self, mean: SimDuration) -> Self {
+        self.cfg.eviction = EvictionPlanCfg::Poisson { mean };
+        self
+    }
+
+    /// Replay an empirical eviction trace (uptime offsets per instance).
+    pub fn eviction_trace(mut self, offsets: Vec<SimDuration>) -> Self {
+        self.cfg.eviction = EvictionPlanCfg::Trace { offsets };
+        self
+    }
+
+    /// Transparent (CRIU-analog) checkpointing at `interval`.
+    pub fn transparent(mut self, interval: SimDuration) -> Self {
+        self.cfg.checkpoint = CheckpointMethodCfg::Transparent { interval };
+        self
+    }
+
+    /// Application-native (metaSPAdes-style) checkpointing.
+    pub fn app_native(mut self) -> Self {
+        self.cfg.checkpoint = CheckpointMethodCfg::AppNative;
+        self
+    }
+
+    /// No checkpoint protection.
+    pub fn unprotected(mut self) -> Self {
+        self.cfg.checkpoint = CheckpointMethodCfg::None;
+        self
+    }
+
+    pub fn deadline(mut self, d: SimDuration) -> Self {
+        self.cfg.deadline = d;
+        self
+    }
+
+    pub fn notice(mut self, d: SimDuration) -> Self {
+        self.cfg.cloud.notice = d;
+        self
+    }
+
+    pub fn state_gib(mut self, gib: f64) -> Self {
+        self.cfg.workload.state_gib = gib;
+        self
+    }
+
+    pub fn nfs_bandwidth(mut self, mib_s: f64) -> Self {
+        self.cfg.storage.bandwidth_mib_s = mib_s;
+        self
+    }
+
+    pub fn app_milestones(mut self, per_stage: u32) -> Self {
+        self.cfg.workload.app_milestones_per_stage = per_stage;
+        self
+    }
+
+    /// Scale the workload's *calibrated* stage durations (for fast test
+    /// runs) without touching eviction/checkpoint intervals.
+    pub fn scale_stages(mut self, factor: f64) -> Self {
+        for s in &mut self.cfg.workload.stage_secs {
+            *s = ((*s as f64) * factor).round().max(1.0) as u64;
+        }
+        self
+    }
+
+    fn transfer_model(&self) -> TransferModel {
+        TransferModel {
+            bandwidth_mib_s: self.cfg.storage.bandwidth_mib_s,
+            latency: self.cfg.storage.latency,
+        }
+    }
+
+    fn sleeper_cfg(&self) -> SleeperCfg {
+        let w = &self.cfg.workload;
+        SleeperCfg {
+            stages: w
+                .ks
+                .iter()
+                .map(|k| (format!("K{k}"), 40u64))
+                .collect(),
+            milestones_per_stage: w.app_milestones_per_stage,
+            charged_bytes: (w.state_gib * (1u64 << 30) as f64) as u64,
+            app_charged_bytes: (w.app_ckpt_gib * (1u64 << 30) as f64) as u64,
+        }
+    }
+
+    fn minimeta_cfg(&self) -> MiniMetaCfg {
+        let w = &self.cfg.workload;
+        MiniMetaCfg {
+            total_reads: w.total_reads,
+            denoise_sweeps: w.denoise_sweeps,
+            milestones_per_stage: w.app_milestones_per_stage,
+            charged_bytes: (w.state_gib * (1u64 << 30) as f64) as u64,
+            app_charged_bytes: (w.app_ckpt_gib * (1u64 << 30) as f64) as u64,
+            seed: w.seed,
+            base_threshold: 2.0,
+        }
+    }
+
+    /// Run with any workload factory against an in-memory share.
+    pub fn run_with_factory(
+        &self,
+        factory: &mut dyn FnMut() -> Result<Box<dyn Workload>>,
+    ) -> Result<RunResult> {
+        let mut store = BlobStore::new(
+            self.transfer_model(),
+            Some(self.cfg.storage.provisioned_gib),
+        );
+        SimDriver::new(&self.cfg, &mut store).run(factory)
+    }
+
+    /// Run with a workload factory against a real directory-backed NFS
+    /// share (integration tests / CLI).
+    pub fn run_with_factory_on_store(
+        &self,
+        store: &mut dyn SharedStore,
+        factory: &mut dyn FnMut() -> Result<Box<dyn Workload>>,
+    ) -> Result<RunResult> {
+        SimDriver::new(&self.cfg, store).run(factory)
+    }
+
+    /// Fast run with the pure-Rust sleeper workload.
+    pub fn run_sleeper(&self) -> Result<RunResult> {
+        let cfg = self.sleeper_cfg();
+        let seed = self.cfg.workload.seed;
+        self.run_with_factory(&mut || {
+            Ok(Box::new(Sleeper::new(cfg.clone(), seed)))
+        })
+    }
+
+    /// Full three-layer run with the PJRT-backed MiniMeta assembler.
+    pub fn run_minimeta(&self, rt: Rc<RefCell<Runtime>>) -> Result<RunResult> {
+        let cfg = self.minimeta_cfg();
+        self.run_with_factory(&mut || {
+            Ok(Box::new(MiniMeta::new(cfg.clone(), rt.clone())?))
+        })
+    }
+
+    /// MiniMeta run against a directory-backed share.
+    pub fn run_minimeta_on_nfs(
+        &self,
+        rt: Rc<RefCell<Runtime>>,
+        root: &std::path::Path,
+    ) -> Result<RunResult> {
+        let mut store = NfsStore::open(
+            root,
+            self.transfer_model(),
+            Some(self.cfg.storage.provisioned_gib),
+        )?;
+        let cfg = self.minimeta_cfg();
+        SimDriver::new(&self.cfg, &mut store).run(&mut || {
+            Ok(Box::new(MiniMeta::new(cfg.clone(), rt.clone())?))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EventKind;
+
+    #[test]
+    fn baseline_matches_calibration() {
+        // Row 1: Spot-on OFF, no evictions — total must equal the
+        // calibrated stage durations exactly.
+        let r = Experiment::table1()
+            .named("row1")
+            .spoton_off()
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed);
+        assert_eq!(r.total.hms(), "3:03:26");
+        assert_eq!(r.evictions, 0);
+        assert_eq!(r.instances, 1);
+        let expected = ["33:50", "38:53", "39:51", "40:19", "30:33"];
+        for ((label, d), want) in r.stage_times.iter().zip(expected) {
+            assert_eq!(d.hms(), want, "{label}");
+        }
+    }
+
+    #[test]
+    fn coordinator_overhead_is_small() {
+        // Row 2: ON, no ckpt, no evictions — ~1.1% overhead.
+        let r1 = Experiment::table1().spoton_off().run_sleeper().unwrap();
+        let r2 = Experiment::table1().run_sleeper().unwrap();
+        let ratio =
+            r2.total.as_millis() as f64 / r1.total.as_millis() as f64 - 1.0;
+        assert!(
+            (0.005..0.02).contains(&ratio),
+            "overhead ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn transparent_90_30_completes_near_baseline() {
+        // Row 5 analog: eviction every 90 min, transparent every 30 min.
+        let r = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(90))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed);
+        assert_eq!(r.evictions, 2, "3h run with 90min evictions");
+        assert_eq!(r.instances, 3);
+        assert!(r.termination_ok >= 1, "termination ckpts should commit");
+        assert_eq!(r.termination_failed, 0);
+        assert!(r.periodic_ckpts >= 4);
+        // within ~8% of baseline (paper: within noise)
+        let baseline = 11006.0;
+        let total = r.total.as_secs() as f64;
+        assert!(
+            total < baseline * 1.08,
+            "transparent total {} too far above baseline",
+            r.total
+        );
+        assert!(r.timeline.is_monotone());
+    }
+
+    #[test]
+    fn app_native_loses_more_time_than_transparent() {
+        let app = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .app_native()
+            .run_sleeper()
+            .unwrap();
+        let tr = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        assert!(app.completed && tr.completed);
+        assert!(
+            app.total > tr.total,
+            "app {} must exceed transparent {}",
+            app.total,
+            tr.total
+        );
+        assert!(app.lost_steps > tr.lost_steps);
+        // paper Fig 3: transparent saves 15-40% under frequent evictions;
+        // accept a broad 5-45% band for the sleeper calibration
+        let saving =
+            1.0 - tr.total.as_millis() as f64 / app.total.as_millis() as f64;
+        assert!(
+            (0.05..0.45).contains(&saving),
+            "transparent saving {saving} out of plausible band"
+        );
+    }
+
+    #[test]
+    fn unprotected_run_restarts_from_zero() {
+        // without checkpoints, each eviction loses everything so far
+        let r = Experiment::table1()
+            .named("unprotected")
+            .eviction_every(SimDuration::from_mins(100))
+            .unprotected()
+            .deadline(SimDuration::from_hours(9))
+            .run_sleeper()
+            .unwrap();
+        // 3h3m of work restarting every 100min of uptime: never finishes
+        assert!(!r.completed, "unprotected run should starve: {}", r.summary());
+        assert!(r.lost_steps > 0);
+        assert!(r.timeline.count(EventKind::Aborted) == 1);
+    }
+
+    #[test]
+    fn spot_cost_is_much_cheaper_than_ondemand() {
+        let od = Experiment::table1()
+            .spoton_off()
+            .ondemand()
+            .run_sleeper()
+            .unwrap();
+        let spot = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(90))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        assert!(od.completed && spot.completed);
+        let saving = 1.0 - spot.total_cost() / od.total_cost();
+        // paper Fig 2: ~77% (price cut + overheads + NFS)
+        assert!(
+            (0.70..0.85).contains(&saving),
+            "cost saving {saving:.3}, od ${:.4}, spot ${:.4}",
+            od.total_cost(),
+            spot.total_cost()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            Experiment::table1()
+                .eviction_poisson(SimDuration::from_mins(75))
+                .transparent(SimDuration::from_mins(15))
+                .seed(33)
+                .run_sleeper()
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.evictions, b.evictions);
+        assert_eq!(a.final_fingerprint, b.final_fingerprint);
+        assert_eq!(a.timeline.events().len(), b.timeline.events().len());
+    }
+
+    #[test]
+    fn resumed_state_matches_uninterrupted_state() {
+        // the headline correctness invariant: with transparent ckpts, the
+        // final workload state equals an uninterrupted run's state
+        let base = Experiment::table1().spoton_off().run_sleeper().unwrap();
+        let evicted = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(15))
+            .run_sleeper()
+            .unwrap();
+        assert!(evicted.completed);
+        assert!(evicted.evictions >= 2);
+        assert_eq!(
+            base.final_fingerprint, evicted.final_fingerprint,
+            "resume diverged from uninterrupted execution"
+        );
+    }
+
+    #[test]
+    fn short_notice_fails_termination_checkpoint() {
+        // 3 GiB at 250 MiB/s needs ~12.3s; a 5s notice cannot fit
+        let r = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(90))
+            .transparent(SimDuration::from_mins(30))
+            .notice(SimDuration::from_secs(5))
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed);
+        assert!(r.termination_failed >= 1, "{}", r.summary());
+        assert_eq!(r.termination_ok, 0);
+        // still completes via periodic checkpoints, just loses more
+        assert!(r.total.as_secs() > 11006);
+    }
+}

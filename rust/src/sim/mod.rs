@@ -1,0 +1,17 @@
+//! Virtual-time experiment harness.
+//!
+//! [`driver`] runs one scenario end to end on the discrete-event clock:
+//! the workload really computes (PJRT for MiniMeta), while eviction
+//! notices, checkpoint transfers, instance provisioning and billing are
+//! charged in virtual time calibrated so an uninterrupted run reproduces
+//! the paper's Table I row-1 stage durations (DESIGN.md §6).
+//!
+//! [`experiment`] is the builder/preset layer the benches and examples
+//! use: `Experiment::table1().eviction_every(90 min).transparent(30 min)`
+//! is the paper's Table I row 5.
+
+pub mod driver;
+pub mod experiment;
+
+pub use driver::{RunResult, SimDriver};
+pub use experiment::Experiment;

@@ -1,0 +1,247 @@
+//! Virtual time: the discrete-event backbone of the simulator.
+//!
+//! The paper's experiments span hours of Azure wall clock (Table I runs are
+//! ~3–4.5 h each). The hybrid design (DESIGN.md §6) runs workload compute
+//! for real through PJRT while *charging* time — compute progress,
+//! checkpoint I/O, instance provisioning, eviction notices — against this
+//! virtual clock, so a full Table I reproduction finishes in seconds
+//! without changing any code path.
+//!
+//! [`SimTime`]/[`SimDuration`] are millisecond-resolution fixed-point
+//! values; [`EventQueue`] is a deterministic priority queue (ties broken by
+//! insertion sequence, so identical seeds give identical timelines).
+
+mod queue;
+
+pub use queue::{EventQueue, Scheduled};
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (milliseconds since experiment start).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+/// A span of virtual time (milliseconds).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn from_secs(s: u64) -> Self {
+        SimTime(s * 1000)
+    }
+
+    pub fn as_millis(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs(self) -> u64 {
+        self.0 / 1000
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    /// Duration since an earlier instant (saturating).
+    pub fn since(self, earlier: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_millis(ms: u64) -> Self {
+        SimDuration(ms)
+    }
+
+    pub fn from_secs(s: u64) -> Self {
+        SimDuration(s * 1000)
+    }
+
+    pub fn from_secs_f64(s: f64) -> Self {
+        assert!(s >= 0.0 && s.is_finite(), "bad duration {s}");
+        SimDuration((s * 1000.0).round() as u64)
+    }
+
+    pub fn from_mins(m: u64) -> Self {
+        SimDuration(m * 60_000)
+    }
+
+    pub fn from_hours(h: u64) -> Self {
+        SimDuration(h * 3_600_000)
+    }
+
+    pub fn as_millis(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_secs(self) -> u64 {
+        self.0 / 1000
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1000.0
+    }
+
+    pub fn as_hours_f64(self) -> f64 {
+        self.0 as f64 / 3_600_000.0
+    }
+
+    /// Scale by a float factor (for overhead fractions / calibration).
+    pub fn mul_f64(self, f: f64) -> SimDuration {
+        assert!(f >= 0.0 && f.is_finite());
+        SimDuration((self.0 as f64 * f).round() as u64)
+    }
+
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Paper-style `H:MM:SS` rendering.
+    pub fn hms(self) -> String {
+        crate::util::fmt::hms(self.as_secs())
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimDuration) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Add for SimDuration {
+    type Output = SimDuration;
+    fn add(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimDuration {
+    fn add_assign(&mut self, rhs: SimDuration) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimDuration {
+    type Output = SimDuration;
+    fn sub(self, rhs: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "T+{}", SimDuration(self.0).hms())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+impl fmt::Debug for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hms())
+    }
+}
+
+impl fmt::Display for SimDuration {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.hms())
+    }
+}
+
+/// The virtual clock: strictly monotone, owned by the experiment driver.
+#[derive(Debug, Default, Clone)]
+pub struct Clock {
+    now: SimTime,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Self { now: SimTime::ZERO }
+    }
+
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Advance by a duration.
+    pub fn advance(&mut self, d: SimDuration) {
+        self.now += d;
+    }
+
+    /// Advance to an absolute instant; panics on time travel.
+    pub fn advance_to(&mut self, t: SimTime) {
+        assert!(
+            t >= self.now,
+            "clock moved backwards: {:?} -> {t:?}",
+            self.now
+        );
+        self.now = t;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let t = SimTime::from_secs(10) + SimDuration::from_secs(5);
+        assert_eq!(t.as_secs(), 15);
+        assert_eq!(t.since(SimTime::from_secs(9)).as_secs(), 6);
+        assert_eq!(t.since(SimTime::from_secs(99)), SimDuration::ZERO);
+        assert_eq!(
+            SimDuration::from_mins(90).as_secs(),
+            5400
+        );
+        assert_eq!(SimDuration::from_hours(3).as_millis(), 10_800_000);
+    }
+
+    #[test]
+    fn mul_f64_rounds() {
+        assert_eq!(SimDuration::from_millis(1000).mul_f64(1.5).as_millis(), 1500);
+        assert_eq!(SimDuration::from_millis(3).mul_f64(0.5).as_millis(), 2);
+    }
+
+    #[test]
+    fn from_secs_f64() {
+        assert_eq!(SimDuration::from_secs_f64(1.2345).as_millis(), 1235);
+    }
+
+    #[test]
+    fn display_matches_paper_format() {
+        assert_eq!(SimDuration::from_secs(11006).to_string(), "3:03:26");
+        assert_eq!(format!("{:?}", SimTime::from_secs(2030)), "T+33:50");
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = Clock::new();
+        c.advance(SimDuration::from_secs(5));
+        c.advance_to(SimTime::from_secs(7));
+        assert_eq!(c.now().as_secs(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn clock_rejects_time_travel() {
+        let mut c = Clock::new();
+        c.advance_to(SimTime::from_secs(10));
+        c.advance_to(SimTime::from_secs(9));
+    }
+}

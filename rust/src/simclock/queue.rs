@@ -1,0 +1,175 @@
+//! Deterministic discrete-event queue.
+//!
+//! A thin priority queue over `(SimTime, seq)` with FIFO tie-breaking:
+//! events scheduled for the same instant fire in scheduling order, which
+//! makes whole-experiment timelines reproducible byte-for-byte from a seed
+//! (a property the determinism tests and the resume invariant rely on).
+
+use super::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event of type `E` scheduled at a virtual instant.
+#[derive(Debug, Clone)]
+pub struct Scheduled<E> {
+    pub at: SimTime,
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Event queue with deterministic ordering.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `event` at absolute time `at`; returns its sequence id.
+    pub fn schedule(&mut self, at: SimTime, event: E) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { at, seq, event });
+        seq
+    }
+
+    /// Time of the next event, if any.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|s| s.at)
+    }
+
+    /// Pop the earliest event.
+    pub fn pop(&mut self) -> Option<Scheduled<E>> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Drop all pending events (e.g. when an instance dies, its timers go
+    /// with it).
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, shrinks_vec, Config};
+
+    #[test]
+    fn orders_by_time() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(30), "c");
+        q.schedule(SimTime::from_secs(10), "a");
+        q.schedule(SimTime::from_secs(20), "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event))
+            .collect();
+        assert_eq!(order, ["a", "b", "c"]);
+    }
+
+    #[test]
+    fn fifo_on_ties() {
+        let mut q = EventQueue::new();
+        let t = SimTime::from_secs(5);
+        for i in 0..10 {
+            q.schedule(t, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|s| s.event))
+            .collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(3), ());
+        q.schedule(SimTime::from_secs(1), ());
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(1)));
+        q.pop();
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(3)));
+        q.pop();
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut q = EventQueue::new();
+        q.schedule(SimTime::from_secs(1), ());
+        q.clear();
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn prop_pop_order_is_sorted_and_stable() {
+        // Property: popping yields (time, seq) in nondecreasing time order,
+        // and among equal times, increasing seq.
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                (0..rng.range_u64(0, 40))
+                    .map(|_| rng.below(20))
+                    .collect::<Vec<u64>>()
+            },
+            shrinks_vec,
+            |times| {
+                let mut q = EventQueue::new();
+                for &t in times {
+                    q.schedule(SimTime::from_secs(t), ());
+                }
+                let mut prev: Option<(SimTime, u64)> = None;
+                while let Some(s) = q.pop() {
+                    if let Some((pt, ps)) = prev {
+                        if s.at < pt {
+                            return Err(format!("time went back: {:?}", s.at));
+                        }
+                        if s.at == pt && s.seq < ps {
+                            return Err("tie broke out of order".into());
+                        }
+                    }
+                    prev = Some((s.at, s.seq));
+                }
+                Ok(())
+            },
+        );
+    }
+}

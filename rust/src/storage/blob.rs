@@ -1,0 +1,200 @@
+//! In-memory object store (blob-store backend).
+//!
+//! Same [`SharedStore`] contract as [`super::NfsStore`] without touching
+//! the filesystem: used by unit tests, the pure-simulation fast path of
+//! the benches, and as the "object and blob stores" alternative backend
+//! the paper lists for checkpoint sharing.
+
+use super::{validate_key, IoMeter, SharedStore, TransferModel};
+use crate::simclock::SimDuration;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+struct Object {
+    data: Vec<u8>,
+    charged: u64,
+}
+
+/// In-memory blob store with the same capacity/transfer semantics.
+#[derive(Debug)]
+pub struct BlobStore {
+    objects: BTreeMap<String, Object>,
+    model: TransferModel,
+    capacity: Option<u64>,
+    meter: IoMeter,
+}
+
+impl BlobStore {
+    pub fn new(model: TransferModel, capacity_gib: Option<f64>) -> Self {
+        Self {
+            objects: BTreeMap::new(),
+            model,
+            capacity: capacity_gib
+                .map(|g| (g * 1024.0 * 1024.0 * 1024.0) as u64),
+            meter: IoMeter::default(),
+        }
+    }
+
+    /// A fast default for tests: 250 MiB/s, 20 ms latency, unbounded.
+    pub fn for_tests() -> Self {
+        Self::new(
+            TransferModel {
+                bandwidth_mib_s: 250.0,
+                latency: SimDuration::from_millis(20),
+            },
+            None,
+        )
+    }
+
+    /// Corrupt a stored object in place (failure-injection helper used by
+    /// checkpoint-validation tests; not part of [`SharedStore`]).
+    pub fn corrupt(&mut self, key: &str, at: usize) -> Result<()> {
+        let obj = self
+            .objects
+            .get_mut(key)
+            .with_context(|| format!("no object {key}"))?;
+        if obj.data.is_empty() {
+            bail!("empty object");
+        }
+        let i = at % obj.data.len();
+        obj.data[i] ^= 0xff;
+        Ok(())
+    }
+
+    /// Truncate a stored object (models a partial write that lost its
+    /// tail when the instance died mid-transfer).
+    pub fn truncate(&mut self, key: &str, keep: usize) -> Result<()> {
+        let obj = self
+            .objects
+            .get_mut(key)
+            .with_context(|| format!("no object {key}"))?;
+        obj.data.truncate(keep);
+        Ok(())
+    }
+}
+
+impl SharedStore for BlobStore {
+    fn put_sized(
+        &mut self,
+        key: &str,
+        data: &[u8],
+        charged_bytes: u64,
+    ) -> Result<SimDuration> {
+        validate_key(key)?;
+        let new_total = self.used_bytes()
+            - self.objects.get(key).map_or(0, |o| o.charged)
+            + charged_bytes;
+        if let Some(cap) = self.capacity {
+            if new_total > cap {
+                bail!("blob store full");
+            }
+        }
+        self.objects.insert(
+            key.to_string(),
+            Object { data: data.to_vec(), charged: charged_bytes },
+        );
+        let cost = self.model.cost(charged_bytes);
+        self.meter.puts += 1;
+        self.meter.bytes_written += data.len() as u64;
+        self.meter.charged_written += charged_bytes;
+        self.meter.transfer_time += cost;
+        Ok(cost)
+    }
+
+    fn get(&mut self, key: &str) -> Result<(Vec<u8>, SimDuration)> {
+        validate_key(key)?;
+        let obj = self
+            .objects
+            .get(key)
+            .with_context(|| format!("no object {key}"))?;
+        let cost = self.model.cost(obj.charged);
+        let data = obj.data.clone();
+        self.meter.gets += 1;
+        self.meter.bytes_read += data.len() as u64;
+        self.meter.charged_read += obj.charged;
+        self.meter.transfer_time += cost;
+        Ok((data, cost))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        Ok(self
+            .objects
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.objects.contains_key(key)
+    }
+
+    fn delete(&mut self, key: &str) -> Result<bool> {
+        validate_key(key)?;
+        let existed = self.objects.remove(key).is_some();
+        if existed {
+            self.meter.deletes += 1;
+        }
+        Ok(existed)
+    }
+
+    fn transfer_cost(&self, bytes: u64) -> SimDuration {
+        self.model.cost(bytes)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.objects.values().map(|o| o.charged).sum()
+    }
+
+    fn capacity_bytes(&self) -> Option<u64> {
+        self.capacity
+    }
+
+    fn meter(&self) -> IoMeter {
+        self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn behaves_like_shared_store() {
+        let mut s = BlobStore::for_tests();
+        s.put("a/b", b"one").unwrap();
+        s.put_sized("a/c", b"two", 1000).unwrap();
+        assert_eq!(s.list("a/").unwrap(), vec!["a/b", "a/c"]);
+        assert_eq!(s.get("a/b").unwrap().0, b"one");
+        assert_eq!(s.used_bytes(), 3 + 1000);
+        assert!(s.delete("a/b").unwrap());
+        assert!(!s.delete("a/b").unwrap());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut s = BlobStore::new(
+            TransferModel {
+                bandwidth_mib_s: 1.0,
+                latency: SimDuration::ZERO,
+            },
+            Some(1.0 / 1024.0 / 1024.0), // 1 KiB
+        );
+        s.put_sized("a", b"x", 600).unwrap();
+        assert!(s.put_sized("b", b"y", 600).is_err());
+        // replacing a's charge is fine
+        s.put_sized("a", b"x", 1000).unwrap();
+    }
+
+    #[test]
+    fn corruption_helpers() {
+        let mut s = BlobStore::for_tests();
+        s.put("k", b"hello").unwrap();
+        s.corrupt("k", 1).unwrap();
+        assert_ne!(s.get("k").unwrap().0, b"hello");
+        s.truncate("k", 2).unwrap();
+        assert_eq!(s.get("k").unwrap().0.len(), 2);
+        assert!(s.corrupt("missing", 0).is_err());
+    }
+}

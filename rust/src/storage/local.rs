@@ -1,0 +1,67 @@
+//! Instance-local scratch storage — destroyed with the instance.
+//!
+//! Spot eviction "terminates all workloads running on the instance, and
+//! the instance is destroyed" (paper §I): anything on the local disk is
+//! gone. The coordinator must therefore never rely on local state across
+//! restarts; tests use this type to prove it (a restart after
+//! [`LocalScratch::wipe`] must still find everything it needs on the
+//! shared store).
+
+use std::collections::BTreeMap;
+
+/// Ephemeral per-instance key-value scratch.
+#[derive(Debug, Default)]
+pub struct LocalScratch {
+    data: BTreeMap<String, Vec<u8>>,
+    wipes: u32,
+}
+
+impl LocalScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, key: &str, data: &[u8]) {
+        self.data.insert(key.to_string(), data.to_vec());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&[u8]> {
+        self.data.get(key).map(Vec::as_slice)
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The eviction: all local state vanishes.
+    pub fn wipe(&mut self) {
+        self.data.clear();
+        self.wipes += 1;
+    }
+
+    pub fn wipes(&self) -> u32 {
+        self.wipes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wipe_destroys_everything() {
+        let mut s = LocalScratch::new();
+        s.put("tmp/kmer-cache", b"bytes");
+        s.put("tmp/log", b"more");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get("tmp/log"), Some(b"more".as_slice()));
+        s.wipe();
+        assert!(s.is_empty());
+        assert_eq!(s.get("tmp/log"), None);
+        assert_eq!(s.wipes(), 1);
+    }
+}

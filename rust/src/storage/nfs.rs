@@ -1,0 +1,311 @@
+//! Directory-backed NFS-share model (Azure Files analog).
+//!
+//! Real files on the local filesystem (checkpoint integrity is tested
+//! against real I/O, including partial-write crash injection), wrapped in
+//! a provisioned-capacity + transfer-time model so the virtual-time and
+//! billing behaviour matches a provisioned cloud share.
+
+use super::{validate_key, IoMeter, SharedStore, TransferModel};
+use crate::simclock::SimDuration;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Sidecar extension storing each object's charged size.
+const META_EXT: &str = ".charged";
+
+/// A provisioned file share rooted at a directory.
+#[derive(Debug)]
+pub struct NfsStore {
+    root: PathBuf,
+    model: TransferModel,
+    capacity: Option<u64>,
+    /// key -> charged bytes (rebuilt from sidecars on open).
+    charged: BTreeMap<String, u64>,
+    meter: IoMeter,
+}
+
+impl NfsStore {
+    /// Open (or create) a share rooted at `root`.
+    pub fn open(
+        root: &Path,
+        model: TransferModel,
+        capacity_gib: Option<f64>,
+    ) -> Result<Self> {
+        fs::create_dir_all(root)
+            .with_context(|| format!("creating share root {root:?}"))?;
+        let mut store = Self {
+            root: root.to_path_buf(),
+            model,
+            capacity: capacity_gib
+                .map(|g| (g * 1024.0 * 1024.0 * 1024.0) as u64),
+            charged: BTreeMap::new(),
+            meter: IoMeter::default(),
+        };
+        store.rescan()?;
+        Ok(store)
+    }
+
+    /// Rebuild the charged-size index from disk (share reattach after an
+    /// instance replacement — exactly what a new spot VM does on mount).
+    pub fn rescan(&mut self) -> Result<()> {
+        self.charged.clear();
+        let mut stack = vec![self.root.clone()];
+        while let Some(dir) = stack.pop() {
+            for entry in fs::read_dir(&dir)? {
+                let entry = entry?;
+                let path = entry.path();
+                if path.is_dir() {
+                    stack.push(path);
+                    continue;
+                }
+                let Some(name) = path.to_str() else { continue };
+                if name.ends_with(META_EXT) {
+                    continue;
+                }
+                let key = path
+                    .strip_prefix(&self.root)
+                    .unwrap()
+                    .to_string_lossy()
+                    .replace('\\', "/");
+                let charged = fs::read_to_string(sidecar(&path))
+                    .ok()
+                    .and_then(|s| s.trim().parse::<u64>().ok())
+                    .unwrap_or_else(|| {
+                        path.metadata().map(|m| m.len()).unwrap_or(0)
+                    });
+                self.charged.insert(key, charged);
+            }
+        }
+        Ok(())
+    }
+
+    fn path_for(&self, key: &str) -> PathBuf {
+        self.root.join(key)
+    }
+
+    pub fn model(&self) -> TransferModel {
+        self.model
+    }
+}
+
+fn sidecar(path: &Path) -> PathBuf {
+    let mut s = path.as_os_str().to_owned();
+    s.push(META_EXT);
+    PathBuf::from(s)
+}
+
+impl SharedStore for NfsStore {
+    fn put_sized(
+        &mut self,
+        key: &str,
+        data: &[u8],
+        charged_bytes: u64,
+    ) -> Result<SimDuration> {
+        validate_key(key)?;
+        let new_total = self.used_bytes()
+            - self.charged.get(key).copied().unwrap_or(0)
+            + charged_bytes;
+        if let Some(cap) = self.capacity {
+            if new_total > cap {
+                bail!(
+                    "share full: {} charged + {} requested exceeds provisioned {}",
+                    crate::util::fmt::bytes(self.used_bytes()),
+                    crate::util::fmt::bytes(charged_bytes),
+                    crate::util::fmt::bytes(cap)
+                );
+            }
+        }
+        let path = self.path_for(key);
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(&path, data).with_context(|| format!("writing {key}"))?;
+        fs::write(sidecar(&path), charged_bytes.to_string())?;
+        self.charged.insert(key.to_string(), charged_bytes);
+        let cost = self.model.cost(charged_bytes);
+        self.meter.puts += 1;
+        self.meter.bytes_written += data.len() as u64;
+        self.meter.charged_written += charged_bytes;
+        self.meter.transfer_time += cost;
+        Ok(cost)
+    }
+
+    fn get(&mut self, key: &str) -> Result<(Vec<u8>, SimDuration)> {
+        validate_key(key)?;
+        let path = self.path_for(key);
+        let data =
+            fs::read(&path).with_context(|| format!("reading {key}"))?;
+        let charged = self
+            .charged
+            .get(key)
+            .copied()
+            .unwrap_or(data.len() as u64);
+        let cost = self.model.cost(charged);
+        self.meter.gets += 1;
+        self.meter.bytes_read += data.len() as u64;
+        self.meter.charged_read += charged;
+        self.meter.transfer_time += cost;
+        Ok((data, cost))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        Ok(self
+            .charged
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.charged.contains_key(key) && self.path_for(key).exists()
+    }
+
+    fn delete(&mut self, key: &str) -> Result<bool> {
+        validate_key(key)?;
+        let path = self.path_for(key);
+        let existed = self.charged.remove(key).is_some();
+        if path.exists() {
+            fs::remove_file(&path)?;
+        }
+        let sc = sidecar(&path);
+        if sc.exists() {
+            fs::remove_file(sc)?;
+        }
+        if existed {
+            self.meter.deletes += 1;
+        }
+        Ok(existed)
+    }
+
+    fn transfer_cost(&self, bytes: u64) -> SimDuration {
+        self.model.cost(bytes)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.charged.values().sum()
+    }
+
+    fn capacity_bytes(&self) -> Option<u64> {
+        self.capacity
+    }
+
+    fn meter(&self) -> IoMeter {
+        self.meter
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "spoton-nfs-{tag}-{}-{}",
+            std::process::id(),
+            crate::util::next_seq()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn model() -> TransferModel {
+        TransferModel {
+            bandwidth_mib_s: 100.0,
+            latency: SimDuration::from_millis(10),
+        }
+    }
+
+    #[test]
+    fn put_get_round_trip() {
+        let mut s = NfsStore::open(&tmpdir("rt"), model(), None).unwrap();
+        let cost = s.put("ckpt/1/payload.bin", b"hello").unwrap();
+        assert!(cost >= SimDuration::from_millis(10));
+        let (data, _) = s.get("ckpt/1/payload.bin").unwrap();
+        assert_eq!(data, b"hello");
+        assert!(s.exists("ckpt/1/payload.bin"));
+        assert!(!s.exists("ckpt/2/payload.bin"));
+    }
+
+    #[test]
+    fn charged_size_drives_cost_and_capacity() {
+        let mut s =
+            NfsStore::open(&tmpdir("charged"), model(), Some(1.0)).unwrap();
+        // tiny real payload charged as 512 MiB
+        let half_gib = 512 * 1024 * 1024;
+        let cost = s.put_sized("a", b"x", half_gib).unwrap();
+        assert!(cost.as_secs() >= 5, "512MiB at 100MiB/s ≈ 5.1s, got {cost}");
+        assert_eq!(s.used_bytes(), half_gib);
+        // second 512 MiB fits exactly; third must fail
+        s.put_sized("b", b"y", half_gib).unwrap();
+        let err = s.put_sized("c", b"z", 1).unwrap_err();
+        assert!(err.to_string().contains("share full"), "{err}");
+        // overwrite replaces the charge rather than double-counting
+        s.put_sized("a", b"x2", half_gib).unwrap();
+        assert_eq!(s.used_bytes(), 2 * half_gib);
+    }
+
+    #[test]
+    fn list_sorted_by_prefix() {
+        let mut s = NfsStore::open(&tmpdir("list"), model(), None).unwrap();
+        s.put("ckpt/2/m", b"b").unwrap();
+        s.put("ckpt/10/m", b"c").unwrap();
+        s.put("ckpt/1/m", b"a").unwrap();
+        s.put("other/x", b"d").unwrap();
+        assert_eq!(
+            s.list("ckpt/").unwrap(),
+            vec!["ckpt/1/m", "ckpt/10/m", "ckpt/2/m"]
+        );
+        assert_eq!(s.list("").unwrap().len(), 4);
+    }
+
+    #[test]
+    fn delete_is_idempotent() {
+        let mut s = NfsStore::open(&tmpdir("del"), model(), None).unwrap();
+        s.put("k", b"v").unwrap();
+        assert!(s.delete("k").unwrap());
+        assert!(!s.delete("k").unwrap());
+        assert!(!s.exists("k"));
+        assert_eq!(s.used_bytes(), 0);
+    }
+
+    #[test]
+    fn rescan_survives_reopen() {
+        let dir = tmpdir("reopen");
+        {
+            let mut s = NfsStore::open(&dir, model(), None).unwrap();
+            s.put_sized("ckpt/5/payload", b"data", 12345).unwrap();
+        }
+        // a "new instance" mounts the same share
+        let mut s2 = NfsStore::open(&dir, model(), None).unwrap();
+        assert!(s2.exists("ckpt/5/payload"));
+        assert_eq!(s2.used_bytes(), 12345);
+        let (data, _) = s2.get("ckpt/5/payload").unwrap();
+        assert_eq!(data, b"data");
+    }
+
+    #[test]
+    fn meter_accumulates() {
+        let mut s = NfsStore::open(&tmpdir("meter"), model(), None).unwrap();
+        s.put_sized("a", b"aaaa", 100).unwrap();
+        s.get("a").unwrap();
+        s.delete("a").unwrap();
+        let m = s.meter();
+        assert_eq!(m.puts, 1);
+        assert_eq!(m.gets, 1);
+        assert_eq!(m.deletes, 1);
+        assert_eq!(m.bytes_written, 4);
+        assert_eq!(m.charged_written, 100);
+        assert_eq!(m.charged_read, 100);
+        assert!(m.transfer_time > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn get_missing_errors() {
+        let mut s = NfsStore::open(&tmpdir("missing"), model(), None).unwrap();
+        assert!(s.get("nope").is_err());
+        assert!(s.put("../escape", b"x").is_err());
+    }
+}

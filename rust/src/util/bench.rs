@@ -1,0 +1,95 @@
+//! Micro-bench harness (no criterion offline — DESIGN.md §8).
+//!
+//! `cargo bench` targets are `harness = false` binaries that use
+//! [`bench_fn`] for hot-path timing (warmup + N samples + mean/p50/p95)
+//! and plain experiment runs for the table/figure reproductions.
+
+use std::time::{Duration, Instant};
+
+/// Timing summary over samples.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub samples: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean.is_zero() {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {:>10.3?}  p50 {:>10.3?}  p95 {:>10.3?}  min {:>10.3?}  \
+             max {:>10.3?}  ({} samples)",
+            self.mean, self.p50, self.p95, self.min, self.max, self.samples
+        )
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `samples` timed iterations.
+pub fn bench_fn<F: FnMut()>(
+    warmup: usize,
+    samples: usize,
+    mut f: F,
+) -> BenchStats {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let total: Duration = times.iter().sum();
+    BenchStats {
+        samples,
+        mean: total / samples as u32,
+        p50: times[samples / 2],
+        p95: times[(samples * 95 / 100).min(samples - 1)],
+        min: times[0],
+        max: times[samples - 1],
+    }
+}
+
+/// Bench-report section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_ordered() {
+        let s = bench_fn(2, 50, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert_eq!(s.samples, 50);
+        assert!(s.min <= s.p50);
+        assert!(s.p50 <= s.p95);
+        assert!(s.p95 <= s.max);
+        assert!(s.throughput_per_sec() > 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_samples_rejected() {
+        bench_fn(0, 0, || {});
+    }
+}

@@ -1,0 +1,99 @@
+//! Human-readable formatting: durations (paper's `H:MM:SS` table format),
+//! byte sizes, dollars.
+
+/// Format whole seconds as the paper's Table I style: `MM:SS` under an
+/// hour, `H:MM:SS` above.
+pub fn hms(total_secs: u64) -> String {
+    let h = total_secs / 3600;
+    let m = (total_secs % 3600) / 60;
+    let s = total_secs % 60;
+    if h > 0 {
+        format!("{h}:{m:02}:{s:02}")
+    } else {
+        format!("{m}:{s:02}")
+    }
+}
+
+/// Parse `H:MM:SS` / `MM:SS` / `SS` into whole seconds.
+pub fn parse_hms(s: &str) -> Option<u64> {
+    let parts: Vec<&str> = s.split(':').collect();
+    if parts.is_empty() || parts.len() > 3 {
+        return None;
+    }
+    let mut secs: u64 = 0;
+    for p in &parts {
+        if p.is_empty() || !p.chars().all(|c| c.is_ascii_digit()) {
+            return None;
+        }
+        secs = secs * 60 + p.parse::<u64>().ok()?;
+    }
+    Some(secs)
+}
+
+/// Format bytes with binary units (`KiB`, `MiB`, `GiB`).
+pub fn bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format dollars with 4 decimal places (spot prices are sub-cent scale).
+pub fn dollars(v: f64) -> String {
+    let v = if v == 0.0 { 0.0 } else { v }; // normalize -0.0
+    format!("${v:.4}")
+}
+
+/// Format a ratio as a signed percentage, e.g. `-12.3%`.
+pub fn pct(ratio: f64) -> String {
+    format!("{:+.1}%", ratio * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hms_matches_paper_style() {
+        assert_eq!(hms(2030), "33:50"); // K33 baseline row
+        assert_eq!(hms(11006), "3:03:26"); // Table I row 1 total
+        assert_eq!(hms(0), "0:00");
+        assert_eq!(hms(59), "0:59");
+        assert_eq!(hms(3600), "1:00:00");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for s in [0u64, 59, 60, 61, 3599, 3600, 11006, 16102] {
+            assert_eq!(parse_hms(&hms(s)), Some(s), "{s}");
+        }
+        assert_eq!(parse_hms("33:50"), Some(2030));
+        assert_eq!(parse_hms("4:28:22"), Some(16102));
+        assert_eq!(parse_hms(""), None);
+        assert_eq!(parse_hms("1:2:3:4"), None);
+        assert_eq!(parse_hms("ab:cd"), None);
+    }
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.00 KiB");
+        assert_eq!(bytes(3 * 1024 * 1024), "3.00 MiB");
+        assert_eq!(bytes(5 * 1024 * 1024 * 1024), "5.00 GiB");
+    }
+
+    #[test]
+    fn dollars_and_pct() {
+        assert_eq!(dollars(0.076), "$0.0760");
+        assert_eq!(pct(-0.77), "-77.0%");
+        assert_eq!(pct(0.155), "+15.5%");
+    }
+}

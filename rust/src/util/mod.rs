@@ -1,0 +1,80 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, humantime, proptest, …)
+//! are re-implemented here at the size this project needs.
+
+pub mod prng;
+pub mod fmt;
+pub mod proptest;
+pub mod wire;
+pub mod bench;
+
+pub use prng::Prng;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic process-wide sequence numbers (checkpoint ids, event ids, …).
+static SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Next process-wide unique sequence number.
+pub fn next_seq() -> u64 {
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Hex-encode bytes (lowercase).
+pub fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// SHA-256 of a byte slice, hex-encoded.
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    h.update(bytes);
+    hex(&h.finalize())
+}
+
+/// CRC32 of a byte slice (fast integrity check for checkpoint payloads).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    h.update(bytes);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_is_monotonic() {
+        let a = next_seq();
+        let b = next_seq();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn hex_encodes() {
+        assert_eq!(hex(&[0x00, 0xff, 0x10]), "00ff10");
+        assert_eq!(hex(&[]), "");
+    }
+
+    #[test]
+    fn sha256_known_vector() {
+        // sha256("abc")
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // crc32("123456789") = 0xCBF43926 (IEEE)
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

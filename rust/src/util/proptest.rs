@@ -1,0 +1,182 @@
+//! Minimal property-testing framework (no `proptest` crate offline).
+//!
+//! Deterministic, seeded case generation with greedy shrinking:
+//!
+//! ```no_run
+//! use spoton::util::proptest::{forall, Config, shrinks_u64};
+//!
+//! forall(
+//!     Config::default().cases(200),
+//!     |rng| rng.range_u64(0, 1_000_000),
+//!     shrinks_u64,
+//!     |&n| {
+//!         if n.checked_add(1).is_some() { Ok(()) } else { Err("overflow".into()) }
+//!     },
+//! );
+//! ```
+//!
+//! On a failing case the framework greedily applies the supplied shrinker
+//! until no smaller counterexample fails, then panics with the minimal
+//! case and the seed that reproduces the run.
+
+use super::prng::Prng;
+use std::fmt::Debug;
+
+/// Run configuration for [`forall`].
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x5907_0A11, max_shrink_steps: 2000 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// No shrinking (for opaque case types).
+pub fn shrink_none<T>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Standard shrink candidates for a u64: 0, halves, decrements.
+pub fn shrinks_u64(&n: &u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    if n == 0 {
+        return out;
+    }
+    out.push(0);
+    out.push(n / 2);
+    out.push(n - 1);
+    out.dedup();
+    out.retain(|&m| m != n);
+    out
+}
+
+/// Standard shrink candidates for a vector: drop halves, drop single
+/// elements (first/last), shrink nothing element-wise (keep it cheap).
+pub fn shrinks_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(Vec::new());
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() > 1 {
+        out.push(v[1..].to_vec());
+        out.push(v[..v.len() - 1].to_vec());
+    }
+    out
+}
+
+/// Run `prop` against `cases` generated values; panic with a shrunk
+/// counterexample (and reproduction seed) on failure.
+pub fn forall<T, G, S, P>(cfg: Config, generate: G, shrink: S, prop: P)
+where
+    T: Clone + Debug,
+    G: Fn(&mut Prng) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Prng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let value = generate(&mut rng);
+        if let Err(first_err) = prop(&value) {
+            // Greedy shrink.
+            let mut best = value;
+            let mut best_err = first_err;
+            let mut steps = 0;
+            'outer: loop {
+                if steps >= cfg.max_shrink_steps {
+                    break;
+                }
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(e) = prop(&cand) {
+                        best = cand;
+                        best_err = e;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {:#x}):\n  \
+                 counterexample: {best:?}\n  error: {best_err}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(
+            Config::default().cases(50),
+            |rng| rng.below(100),
+            shrinks_u64,
+            |&n| if n < 100 { Ok(()) } else { Err("oob".into()) },
+        );
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall(
+                Config::default().cases(200),
+                |rng| rng.range_u64(0, 1000),
+                shrinks_u64,
+                // fails for everything >= 17; minimal counterexample is 17
+                |&n| if n < 17 { Ok(()) } else { Err(format!("{n} >= 17")) },
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("counterexample: 17"), "got: {msg}");
+    }
+
+    #[test]
+    fn vec_shrinker_produces_smaller() {
+        let v = vec![1, 2, 3, 4];
+        for s in shrinks_vec(&v) {
+            assert!(s.len() < v.len());
+        }
+        assert!(shrinks_vec::<u8>(&vec![]).is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            let mut rng = Prng::new(seed);
+            for _ in 0..10 {
+                out.push(rng.below(1000));
+            }
+            out
+        };
+        assert_eq!(collect(5), collect(5));
+    }
+}

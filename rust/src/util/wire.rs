@@ -1,0 +1,239 @@
+//! Tiny binary serialization helpers (length-prefixed, little-endian).
+//!
+//! Checkpoint payloads are hand-rolled binary (no serde offline): each
+//! snapshot is a magic + version header followed by typed fields written
+//! through [`WireWriter`] and read back with [`WireReader`], which checks
+//! bounds on every read so truncated/corrupt payloads fail loudly instead
+//! of yielding garbage state.
+
+use anyhow::{bail, Context, Result};
+
+/// Append-only binary writer.
+#[derive(Debug, Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    pub fn put_f32s(&mut self, v: &[f32]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Bounds-checked binary reader.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!(
+                "wire underrun: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_u64()? as usize;
+        if n > self.buf.len() {
+            bail!("wire length {n} exceeds buffer");
+        }
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        String::from_utf8(self.get_bytes()?).context("invalid utf-8 string")
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_u64()? as usize;
+        if n.saturating_mul(4) > self.buf.len() {
+            bail!("wire f32 array length {n} exceeds buffer");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_u64()? as usize;
+        if n.saturating_mul(8) > self.buf.len() {
+            bail!("wire u64 array length {n} exceeds buffer");
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_u64()?);
+        }
+        Ok(out)
+    }
+
+    /// Assert every byte was consumed (snapshot formats are exact).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "wire trailing bytes: consumed {} of {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        Ok(())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_all_types() {
+        let mut w = WireWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX);
+        w.put_f32(1.5);
+        w.put_f64(-2.25);
+        w.put_str("stage-k55");
+        w.put_bytes(&[1, 2, 3]);
+        w.put_f32s(&[0.0, -1.0, 3.5]);
+        w.put_u64s(&[9, 8]);
+        let buf = w.finish();
+
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_f32().unwrap(), 1.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert_eq!(r.get_str().unwrap(), "stage-k55");
+        assert_eq!(r.get_bytes().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_f32s().unwrap(), vec![0.0, -1.0, 3.5]);
+        assert_eq!(r.get_u64s().unwrap(), vec![9, 8]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let mut w = WireWriter::new();
+        w.put_f32s(&[1.0; 100]);
+        let buf = w.finish();
+        for cut in [0, 1, 7, 8, 9, 50, buf.len() - 1] {
+            let mut r = WireReader::new(&buf[..cut]);
+            assert!(r.get_f32s().is_err(), "cut at {cut} accepted");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut w = WireWriter::new();
+        w.put_u32(1);
+        let mut buf = w.finish();
+        buf.push(0);
+        let mut r = WireReader::new(&buf);
+        r.get_u32().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn absurd_length_rejected_without_alloc() {
+        // a corrupt length prefix must not cause a huge allocation
+        let mut w = WireWriter::new();
+        w.put_u64(u64::MAX);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert!(r.get_bytes().is_err());
+        let mut r2 = WireReader::new(&buf);
+        assert!(r2.get_f32s().is_err());
+    }
+}

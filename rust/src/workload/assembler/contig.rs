@@ -1,0 +1,121 @@
+//! Contig extraction over the bucketed k-mer spectrum.
+//!
+//! The Rust tail of each k-stage: after counting + denoising, occupied
+//! bucket runs are contracted into "contigs" (the bucket-graph analog of
+//! unitig extraction — DESIGN.md §2 documents the substitution) and
+//! summarized with the assembler's usual statistics (count, total length,
+//! max, N50).
+
+/// Summary statistics for one stage's assembly output.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContigStats {
+    pub n_contigs: u64,
+    pub total_len: u64,
+    pub max_len: u64,
+    pub n50: u64,
+}
+
+impl ContigStats {
+    pub fn empty() -> Self {
+        Self { n_contigs: 0, total_len: 0, max_len: 0, n50: 0 }
+    }
+}
+
+/// Extract maximal runs of buckets with coverage ≥ `threshold` and
+/// summarize them.
+pub fn extract_contigs(counts: &[f32], threshold: f32) -> ContigStats {
+    let mut lengths: Vec<u64> = Vec::new();
+    let mut run: u64 = 0;
+    for &c in counts {
+        if c >= threshold && c > 0.0 {
+            run += 1;
+        } else if run > 0 {
+            lengths.push(run);
+            run = 0;
+        }
+    }
+    if run > 0 {
+        lengths.push(run);
+    }
+    summarize(&lengths)
+}
+
+/// N50 etc. over a set of contig lengths.
+pub fn summarize(lengths: &[u64]) -> ContigStats {
+    if lengths.is_empty() {
+        return ContigStats::empty();
+    }
+    let total: u64 = lengths.iter().sum();
+    let max = *lengths.iter().max().unwrap();
+    let mut sorted: Vec<u64> = lengths.to_vec();
+    sorted.sort_unstable_by(|a, b| b.cmp(a)); // descending
+    let mut acc = 0u64;
+    let mut n50 = 0u64;
+    for &len in &sorted {
+        acc += len;
+        if acc * 2 >= total {
+            n50 = len;
+            break;
+        }
+    }
+    ContigStats { n_contigs: lengths.len() as u64, total_len: total, max_len: max, n50 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spectrum() {
+        assert_eq!(extract_contigs(&[], 1.0), ContigStats::empty());
+        assert_eq!(extract_contigs(&[0.0; 8], 1.0), ContigStats::empty());
+    }
+
+    #[test]
+    fn single_run() {
+        let counts = [0.0, 2.0, 3.0, 2.0, 0.0];
+        let s = extract_contigs(&counts, 1.0);
+        assert_eq!(s.n_contigs, 1);
+        assert_eq!(s.total_len, 3);
+        assert_eq!(s.max_len, 3);
+        assert_eq!(s.n50, 3);
+    }
+
+    #[test]
+    fn multiple_runs_and_threshold() {
+        //            run(2)     cut      run(1)  run(3 @>=2: only 5,9)
+        let counts = [2.0, 2.0, 0.5, 0.0, 1.0, 0.0, 5.0, 9.0, 2.0];
+        let s1 = extract_contigs(&counts, 1.0);
+        assert_eq!(s1.n_contigs, 3);
+        assert_eq!(s1.total_len, 2 + 1 + 3);
+        assert_eq!(s1.max_len, 3);
+        let s2 = extract_contigs(&counts, 2.0);
+        assert_eq!(s2.n_contigs, 2);
+        assert_eq!(s2.total_len, 2 + 3);
+    }
+
+    #[test]
+    fn run_at_end_is_closed() {
+        let s = extract_contigs(&[0.0, 1.0, 1.0], 1.0);
+        assert_eq!(s.n_contigs, 1);
+        assert_eq!(s.total_len, 2);
+    }
+
+    #[test]
+    fn n50_definition() {
+        // lengths 5, 4, 1 (total 10): cumulative 5 (>=5) -> n50 = 5
+        assert_eq!(summarize(&[1, 5, 4]).n50, 5);
+        // lengths 3, 3, 2, 2 (total 10): 3+3=6 >= 5 -> n50 = 3
+        assert_eq!(summarize(&[2, 3, 2, 3]).n50, 3);
+        // single contig
+        assert_eq!(summarize(&[7]).n50, 7);
+    }
+
+    #[test]
+    fn zero_counts_below_any_threshold() {
+        // threshold 0.0 must not count empty buckets as covered
+        let s = extract_contigs(&[0.0, 0.0, 3.0], 0.0);
+        assert_eq!(s.n_contigs, 1);
+        assert_eq!(s.total_len, 1);
+    }
+}

@@ -1,0 +1,607 @@
+//! MiniMeta: the metaSPAdes-analog multi-k assembly workload.
+//!
+//! The paper's case study assembles a metagenome with metaSPAdes over
+//! five k-mer sizes (33, 55, 77, 99, 127), each k a long-running stage.
+//! MiniMeta reproduces that *systems* shape with real compute
+//! (DESIGN.md §2):
+//!
+//! ```text
+//! per stage k:
+//!   count phase    — one step per read chunk: the Pallas k-mer-count
+//!                    artifact (count_k<k>) accumulates the bucketed
+//!                    spectrum via PJRT
+//!   denoise phase  — one step per sweep: the Pallas banded-smoothing
+//!                    artifact with an annealed coverage threshold
+//!   stage close    — spectrum_stats artifact + Rust contig extraction;
+//!                    the stage summary joins the cross-stage state
+//! ```
+//!
+//! All state that matters (the evolving spectrum, position counters,
+//! per-stage summaries) lives in this struct and serializes through the
+//! transparent snapshot surface at any step; application-native snapshots
+//! are only captured at metaSPAdes-style milestones. The read set is NOT
+//! state — chunks regenerate deterministically from (seed, index)
+//! (see [`super::reads`]).
+
+pub mod contig;
+
+use super::reads::{ReadGen, ReadGenCfg};
+use super::{fnv1a, Progress, Snapshot, StepOutcome, Workload};
+use crate::runtime::{Arg, ArtifactManifest, Runtime};
+use crate::util::wire::{WireReader, WireWriter};
+use anyhow::{bail, Context, Result};
+use contig::ContigStats;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+const MAGIC: u32 = 0x4D4D_4554; // "MMET"
+const APP_MAGIC: u32 = 0x4D4D_4150; // "MMAP"
+const VERSION: u32 = 1;
+
+/// Assembly parameters (geometry comes from the artifact manifest).
+#[derive(Debug, Clone)]
+pub struct MiniMetaCfg {
+    /// Total reads per stage (every k re-scans the read set, like
+    /// metaSPAdes re-reading the input for each k).
+    pub total_reads: u64,
+    /// Denoise sweeps per stage.
+    pub denoise_sweeps: u32,
+    /// App-native milestones per stage (metaSPAdes writes several
+    /// internal checkpoints per k).
+    pub milestones_per_stage: u32,
+    /// Modeled checkpoint image sizes (DESIGN.md §6).
+    pub charged_bytes: u64,
+    pub app_charged_bytes: u64,
+    /// Read synthesis seed.
+    pub seed: u64,
+    /// Coverage threshold floor for denoising / contig extraction.
+    pub base_threshold: f32,
+}
+
+impl Default for MiniMetaCfg {
+    fn default() -> Self {
+        Self {
+            total_reads: 32 * 1024,
+            denoise_sweeps: 24,
+            milestones_per_stage: 2,
+            charged_bytes: 3 << 30,
+            app_charged_bytes: 1 << 30,
+            seed: 2022,
+            base_threshold: 2.0,
+        }
+    }
+}
+
+/// Closed-stage summary carried across stages (cross-stage state).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageSummary {
+    pub k: u32,
+    pub mass: f32,
+    pub occupied: f32,
+    pub max_count: f32,
+    pub contigs: ContigStats,
+}
+
+/// Captured live state at the last milestone (what the application's own
+/// checkpoint files would contain).
+#[derive(Debug, Clone)]
+struct MilestoneState {
+    stage: u32,
+    step_in_stage: u64,
+    total_steps: u64,
+    counts: Vec<f32>,
+    summaries: Vec<StageSummary>,
+    done: bool,
+}
+
+/// The MiniMeta workload. Holds a shared PJRT runtime (compilation is
+/// per-process, not per-run).
+pub struct MiniMeta {
+    cfg: MiniMetaCfg,
+    rt: Rc<RefCell<Runtime>>,
+    ks: Vec<u32>,
+    reads: ReadGen,
+    // live state
+    stage: u32,
+    step_in_stage: u64,
+    total_steps: u64,
+    counts: Vec<f32>,
+    summaries: Vec<StageSummary>,
+    done: bool,
+    milestone: Option<MilestoneState>,
+    // derived per-build constants
+    num_buckets: usize,
+    reads_per_call: usize,
+    row_len: usize,
+    chunks_per_stage: u64,
+}
+
+impl MiniMeta {
+    pub fn new(cfg: MiniMetaCfg, rt: Rc<RefCell<Runtime>>) -> Result<Self> {
+        let (ks, num_buckets, reads_per_call, row_len, half_width) = {
+            let r = rt.borrow();
+            let g = r.geometry();
+            (
+                g.ks.clone(),
+                g.num_buckets as usize,
+                g.reads_per_call as usize,
+                g.read_len as usize,
+                g.denoise_half_width as usize,
+            )
+        };
+        if ks.is_empty() {
+            bail!("artifact manifest lists no k values");
+        }
+        let _ = half_width;
+        let chunks_per_stage =
+            (cfg.total_reads + reads_per_call as u64 - 1)
+                / reads_per_call as u64;
+        if chunks_per_stage == 0 {
+            bail!("total_reads must be positive");
+        }
+        let reads = ReadGen::new(ReadGenCfg {
+            seed: cfg.seed,
+            row_len,
+            read_len: row_len.saturating_sub(10),
+            ..ReadGenCfg::default()
+        });
+        let mut w = Self {
+            counts: vec![0.0; num_buckets],
+            cfg,
+            rt,
+            ks,
+            reads,
+            stage: 0,
+            step_in_stage: 0,
+            total_steps: 0,
+            summaries: Vec::new(),
+            done: false,
+            milestone: None,
+            num_buckets,
+            reads_per_call,
+            row_len,
+            chunks_per_stage,
+        };
+        w.record_milestone();
+        Ok(w)
+    }
+
+    fn record_milestone(&mut self) {
+        self.milestone = Some(MilestoneState {
+            stage: self.stage,
+            step_in_stage: self.step_in_stage,
+            total_steps: self.total_steps,
+            counts: self.counts.clone(),
+            summaries: self.summaries.clone(),
+            done: self.done,
+        });
+    }
+
+    fn steps_per_stage(&self) -> u64 {
+        self.chunks_per_stage + self.cfg.denoise_sweeps as u64
+    }
+
+    fn milestone_spacing(&self) -> u64 {
+        (self.steps_per_stage() / self.cfg.milestones_per_stage.max(1) as u64)
+            .max(1)
+    }
+
+    /// Denoise parameters for a sweep: annealed coverage threshold, fixed
+    /// smoothing stencil. Pure function of (stage, sweep) for resume
+    /// determinism.
+    fn denoise_params(&self, sweep: u32) -> (Vec<f32>, [f32; 2]) {
+        let r = self.rt.borrow();
+        let taps = 2 * r.geometry().denoise_half_width as usize + 1;
+        drop(r);
+        // smoothing kernel: center-heavy, normalized
+        let mut stencil = vec![0.0f32; taps];
+        let mid = taps / 2;
+        let mut total = 0.0;
+        for (i, s) in stencil.iter_mut().enumerate() {
+            let d = (i as i32 - mid as i32).abs() as f32;
+            *s = 1.0 / (1.0 + d * d);
+            total += *s;
+        }
+        for s in stencil.iter_mut() {
+            *s /= total;
+        }
+        // anneal: threshold ramps from base/4 to base over the sweeps
+        let frac = (sweep as f32 + 1.0) / self.cfg.denoise_sweeps.max(1) as f32;
+        let threshold = self.cfg.base_threshold * (0.25 + 0.75 * frac);
+        (stencil, [threshold, 0.5])
+    }
+
+    /// The read chunk for count step `chunk_idx`, padded to
+    /// `reads_per_call` rows with invalid bases (which the kernel masks).
+    fn chunk(&self, chunk_idx: u64) -> Vec<i32> {
+        let first = chunk_idx * self.reads_per_call as u64;
+        let remaining = self.cfg.total_reads.saturating_sub(first);
+        let real = remaining.min(self.reads_per_call as u64) as usize;
+        let mut chunk = self.reads.chunk_i32(first, real);
+        chunk.resize(self.reads_per_call * self.row_len, 4); // pad rows
+        chunk
+    }
+
+    fn close_stage(&mut self) -> Result<()> {
+        let k = self.ks[self.stage as usize];
+        let mut rt = self.rt.borrow_mut();
+        let stats = rt
+            .executable("spectrum_stats")?
+            .call_f32(&[Arg::F32(&self.counts)])
+            .context("spectrum_stats")?;
+        drop(rt);
+        let contigs =
+            contig::extract_contigs(&self.counts, self.cfg.base_threshold);
+        self.summaries.push(StageSummary {
+            k,
+            mass: stats[0][0],
+            occupied: stats[0][1],
+            max_count: stats[0][2],
+            contigs,
+        });
+        // next k starts from a fresh spectrum (the cross-stage signal is
+        // the summaries/contig set, as in multi-k assembly)
+        self.counts.iter_mut().for_each(|c| *c = 0.0);
+        Ok(())
+    }
+
+    pub fn summaries(&self) -> &[StageSummary] {
+        &self.summaries
+    }
+
+    fn encode(&self, app: bool) -> Vec<u8> {
+        let ms;
+        let (stage, step, total, counts, summaries, done) = if app {
+            ms = self.milestone.as_ref().expect("milestone exists");
+            (ms.stage, ms.step_in_stage, ms.total_steps, &ms.counts,
+             &ms.summaries, ms.done)
+        } else {
+            (self.stage, self.step_in_stage, self.total_steps, &self.counts,
+             &self.summaries, self.done)
+        };
+        let mut w = WireWriter::new();
+        w.put_u32(if app { APP_MAGIC } else { MAGIC });
+        w.put_u32(VERSION);
+        w.put_u64(self.cfg.seed);
+        w.put_u32(stage);
+        w.put_u64(step);
+        w.put_u64(total);
+        w.put_u8(done as u8);
+        w.put_f32s(counts);
+        w.put_u32(summaries.len() as u32);
+        for s in summaries {
+            w.put_u32(s.k);
+            w.put_f32(s.mass);
+            w.put_f32(s.occupied);
+            w.put_f32(s.max_count);
+            w.put_u64(s.contigs.n_contigs);
+            w.put_u64(s.contigs.total_len);
+            w.put_u64(s.contigs.max_len);
+            w.put_u64(s.contigs.n50);
+        }
+        w.finish()
+    }
+
+    fn decode(&mut self, bytes: &[u8], app: bool) -> Result<()> {
+        let mut r = WireReader::new(bytes);
+        let magic = r.get_u32()?;
+        let want = if app { APP_MAGIC } else { MAGIC };
+        if magic != want {
+            bail!("bad minimeta snapshot magic {magic:#x}");
+        }
+        if r.get_u32()? != VERSION {
+            bail!("unsupported minimeta snapshot version");
+        }
+        let seed = r.get_u64()?;
+        if seed != self.cfg.seed {
+            bail!(
+                "snapshot was taken with seed {seed}, workload configured \
+                 with {}",
+                self.cfg.seed
+            );
+        }
+        let stage = r.get_u32()?;
+        let step = r.get_u64()?;
+        let total = r.get_u64()?;
+        let done = r.get_u8()? != 0;
+        let counts = r.get_f32s()?;
+        if counts.len() != self.num_buckets {
+            bail!(
+                "snapshot spectrum has {} buckets, runtime geometry {}",
+                counts.len(),
+                self.num_buckets
+            );
+        }
+        if !done && stage as usize >= self.ks.len() {
+            bail!("snapshot stage {stage} out of range");
+        }
+        let n = r.get_u32()? as usize;
+        if n > self.ks.len() {
+            bail!("snapshot has too many stage summaries");
+        }
+        let mut summaries = Vec::with_capacity(n);
+        for _ in 0..n {
+            summaries.push(StageSummary {
+                k: r.get_u32()?,
+                mass: r.get_f32()?,
+                occupied: r.get_f32()?,
+                max_count: r.get_f32()?,
+                contigs: ContigStats {
+                    n_contigs: r.get_u64()?,
+                    total_len: r.get_u64()?,
+                    max_len: r.get_u64()?,
+                    n50: r.get_u64()?,
+                },
+            });
+        }
+        r.finish()?;
+        self.stage = stage;
+        self.step_in_stage = step;
+        self.total_steps = total;
+        self.done = done;
+        self.counts = counts;
+        self.summaries = summaries;
+        self.record_milestone();
+        Ok(())
+    }
+}
+
+impl Workload for MiniMeta {
+    fn name(&self) -> &str {
+        "minimeta"
+    }
+
+    fn num_stages(&self) -> u32 {
+        self.ks.len() as u32
+    }
+
+    fn stage_label(&self, stage: u32) -> String {
+        format!("K{}", self.ks[stage as usize])
+    }
+
+    fn stage_steps(&self, _stage: u32) -> u64 {
+        self.steps_per_stage()
+    }
+
+    fn progress(&self) -> Progress {
+        Progress {
+            stage: self.stage,
+            step_in_stage: self.step_in_stage,
+            total_steps: self.total_steps,
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.done {
+            bail!("step() after Done");
+        }
+        let k = self.ks[self.stage as usize];
+        if self.step_in_stage < self.chunks_per_stage {
+            // count phase: one chunk through the Pallas count kernel
+            let chunk = self.chunk(self.step_in_stage);
+            let name = ArtifactManifest::count_artifact(k);
+            let mut rt = self.rt.borrow_mut();
+            let out = rt
+                .executable(&name)?
+                .call_f32(&[Arg::I32(&chunk), Arg::F32(&self.counts)])
+                .with_context(|| format!("count step k={k}"))?;
+            drop(rt);
+            self.counts = out.into_iter().next().unwrap();
+        } else {
+            // denoise phase
+            let sweep =
+                (self.step_in_stage - self.chunks_per_stage) as u32;
+            let (stencil, params) = self.denoise_params(sweep);
+            let mut rt = self.rt.borrow_mut();
+            let out = rt
+                .executable("denoise")?
+                .call_f32(&[
+                    Arg::F32(&self.counts),
+                    Arg::F32(&stencil),
+                    Arg::F32(&params),
+                ])
+                .with_context(|| format!("denoise sweep {sweep} k={k}"))?;
+            drop(rt);
+            self.counts = out.into_iter().next().unwrap();
+        }
+
+        self.step_in_stage += 1;
+        self.total_steps += 1;
+
+        if self.step_in_stage >= self.steps_per_stage() {
+            let finished = self.stage;
+            self.close_stage()?;
+            self.stage += 1;
+            self.step_in_stage = 0;
+            self.record_milestone();
+            if self.stage as usize >= self.ks.len() {
+                self.done = true;
+                return Ok(StepOutcome::Done);
+            }
+            return Ok(StepOutcome::StageComplete(finished));
+        }
+        if self.step_in_stage % self.milestone_spacing() == 0 {
+            self.record_milestone();
+            return Ok(StepOutcome::Milestone);
+        }
+        Ok(StepOutcome::Advanced)
+    }
+
+    fn snapshot(&self) -> Result<Snapshot> {
+        Ok(Snapshot {
+            bytes: self.encode(false),
+            charged_bytes: self.cfg.charged_bytes,
+        })
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        self.decode(bytes, false)
+    }
+
+    fn app_snapshot(&self) -> Result<Option<Snapshot>> {
+        match &self.milestone {
+            Some(ms)
+                if ms.stage == self.stage
+                    && ms.step_in_stage == self.step_in_stage
+                    && ms.total_steps == self.total_steps =>
+            {
+                Ok(Some(Snapshot {
+                    bytes: self.encode(true),
+                    charged_bytes: self.cfg.app_charged_bytes,
+                }))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn app_restore(&mut self, bytes: &[u8]) -> Result<()> {
+        self.decode(bytes, true)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fnv1a(&self.encode(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Rc<RefCell<Runtime>>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+        Some(Rc::new(RefCell::new(Runtime::load(&dir).unwrap())))
+    }
+
+    fn tiny_cfg() -> MiniMetaCfg {
+        MiniMetaCfg {
+            total_reads: 2048, // 2 chunks per stage at RC=1024
+            denoise_sweeps: 3,
+            milestones_per_stage: 2,
+            seed: 7,
+            ..MiniMetaCfg::default()
+        }
+    }
+
+    #[test]
+    fn counts_accumulate_real_kmers() {
+        let Some(rt) = runtime() else { return };
+        let mut w = MiniMeta::new(tiny_cfg(), rt).unwrap();
+        // one count step: spectrum mass equals valid windows
+        w.step().unwrap();
+        let mass: f32 = w.counts.iter().sum();
+        assert!(mass > 0.0, "count kernel produced nothing");
+        // 1024 reads x up to (150 - 33 + 1) windows; Ns knock a few out
+        let max_possible = 1024.0 * (160 - 33 + 1) as f32;
+        assert!(mass <= max_possible);
+    }
+
+    #[test]
+    fn full_run_produces_summaries() {
+        let Some(rt) = runtime() else { return };
+        let cfg = MiniMetaCfg {
+            total_reads: 1024,
+            denoise_sweeps: 2,
+            ..tiny_cfg()
+        };
+        let mut w = MiniMeta::new(cfg, rt).unwrap();
+        let mut guard = 0;
+        while !w.is_done() {
+            w.step().unwrap();
+            guard += 1;
+            assert!(guard < 1000, "runaway");
+        }
+        assert_eq!(w.summaries().len(), 5);
+        for (s, k) in w.summaries().iter().zip([33u32, 55, 77, 99, 127]) {
+            assert_eq!(s.k, k);
+            assert!(s.mass >= 0.0);
+            assert!(s.contigs.n_contigs > 0, "k{k} produced no contigs");
+        }
+    }
+
+    #[test]
+    fn transparent_resume_is_bit_exact_mid_stage() {
+        let Some(rt) = runtime() else { return };
+        let mut w = MiniMeta::new(tiny_cfg(), rt.clone()).unwrap();
+        for _ in 0..3 {
+            w.step().unwrap(); // inside stage 0 (2 chunks + 3 sweeps)
+        }
+        let snap = w.snapshot().unwrap();
+        let fp = w.fingerprint();
+        // continue original 2 steps
+        w.step().unwrap();
+        w.step().unwrap();
+        let fp_after = w.fingerprint();
+        // restore into a fresh workload, replay
+        let mut w2 = MiniMeta::new(tiny_cfg(), rt).unwrap();
+        w2.restore(&snap.bytes).unwrap();
+        assert_eq!(w2.fingerprint(), fp);
+        w2.step().unwrap();
+        w2.step().unwrap();
+        assert_eq!(
+            w2.fingerprint(),
+            fp_after,
+            "resumed compute diverged from uninterrupted run"
+        );
+    }
+
+    #[test]
+    fn app_restore_rolls_back_to_milestone() {
+        let Some(rt) = runtime() else { return };
+        let mut w = MiniMeta::new(tiny_cfg(), rt.clone()).unwrap();
+        // steps_per_stage = 2 + 3 = 5; spacing = 2
+        w.step().unwrap();
+        let o = w.step().unwrap(); // step 2 -> milestone
+        assert_eq!(o, StepOutcome::Milestone);
+        let app = w.app_snapshot().unwrap().expect("at milestone");
+        w.step().unwrap(); // past milestone
+        assert!(w.app_snapshot().unwrap().is_none());
+        let mut w2 = MiniMeta::new(tiny_cfg(), rt).unwrap();
+        w2.app_restore(&app.bytes).unwrap();
+        assert_eq!(w2.progress().step_in_stage, 2);
+        assert_eq!(w2.progress().total_steps, 2);
+    }
+
+    #[test]
+    fn snapshot_guards_seed_and_geometry() {
+        let Some(rt) = runtime() else { return };
+        let w = MiniMeta::new(tiny_cfg(), rt.clone()).unwrap();
+        let snap = w.snapshot().unwrap();
+        let mut other = MiniMeta::new(
+            MiniMetaCfg { seed: 999, ..tiny_cfg() },
+            rt,
+        )
+        .unwrap();
+        let err = other.restore(&snap.bytes).unwrap_err();
+        assert!(err.to_string().contains("seed"));
+    }
+
+    #[test]
+    fn padded_final_chunk_masks_out() {
+        let Some(rt) = runtime() else { return };
+        // 1500 reads -> chunk 0 full, chunk 1 has 476 real + padding
+        let cfg = MiniMetaCfg {
+            total_reads: 1500,
+            denoise_sweeps: 1,
+            ..tiny_cfg()
+        };
+        let mut w = MiniMeta::new(cfg, rt).unwrap();
+        w.step().unwrap();
+        let mass_full: f32 = w.counts.iter().sum();
+        w.step().unwrap();
+        let mass_partial: f32 = w.counts.iter().sum::<f32>() - mass_full;
+        assert!(mass_partial > 0.0);
+        assert!(
+            mass_partial < mass_full,
+            "padded chunk must contribute less: {mass_partial} vs {mass_full}"
+        );
+    }
+}

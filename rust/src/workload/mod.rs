@@ -1,0 +1,133 @@
+//! The workload abstraction: what Spot-on protects.
+//!
+//! A [`Workload`] is a long-running, multi-stage computation driven one
+//! step at a time by the coordinator (the *loop* lives in Rust and is what
+//! gets checkpointed; the *math* of the flagship [`assembler`] workload
+//! lives in the AOT-compiled JAX/Pallas artifacts).
+//!
+//! Two checkpoint surfaces, mirroring the paper's §III-A comparison:
+//!
+//! * **transparent** ([`Workload::snapshot`] / [`Workload::restore`]) —
+//!   the CRIU analog: the *complete* live state, captureable at any step,
+//!   restoring to exactly the captured step (bit-exact, which tests
+//!   verify via [`Workload::fingerprint`]).
+//! * **application-native** ([`Workload::app_snapshot`] /
+//!   [`Workload::app_restore`]) — only available at the workload's own
+//!   milestones (metaSPAdes writes checkpoints at internal phase
+//!   boundaries); restoring loses all progress since that milestone and
+//!   cannot be triggered on demand by an eviction notice.
+
+pub mod sleeper;
+pub mod reads;
+pub mod assembler;
+
+use crate::simclock::SimDuration;
+use anyhow::Result;
+
+/// Where a workload currently is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Progress {
+    /// Current stage (0-based; the paper's K33..K127 are stages 0..4).
+    pub stage: u32,
+    /// Steps completed within the current stage.
+    pub step_in_stage: u64,
+    /// Total steps completed across all stages.
+    pub total_steps: u64,
+}
+
+/// Result of executing one step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// Normal progress.
+    Advanced,
+    /// Reached an application checkpoint milestone (app_snapshot is now
+    /// available for the coordinator to persist).
+    Milestone,
+    /// Finished a stage (also a milestone).
+    StageComplete(u32),
+    /// The whole workload finished with this step.
+    Done,
+}
+
+/// A serialized state capture.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// The real serialized bytes (integrity-checked end to end).
+    pub bytes: Vec<u8>,
+    /// Modeled transfer size (CRIU-image / intermediate-file analog) used
+    /// for virtual transfer time, capacity and billing — DESIGN.md §6.
+    pub charged_bytes: u64,
+}
+
+/// A long-running multi-stage computation under coordinator control.
+pub trait Workload {
+    fn name(&self) -> &str;
+
+    fn num_stages(&self) -> u32;
+
+    /// Human label for a stage ("K33", …).
+    fn stage_label(&self, stage: u32) -> String;
+
+    /// Steps in the given stage (drives virtual-time calibration).
+    fn stage_steps(&self, stage: u32) -> u64;
+
+    fn progress(&self) -> Progress;
+
+    fn is_done(&self) -> bool;
+
+    /// Execute one step of real compute.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    // --- transparent (CRIU-analog) surface --------------------------------
+
+    /// Full-state capture; valid at any step.
+    fn snapshot(&self) -> Result<Snapshot>;
+
+    /// Restore from a transparent snapshot.
+    fn restore(&mut self, bytes: &[u8]) -> Result<()>;
+
+    // --- application-native surface ---------------------------------------
+
+    /// State capture at the application's own milestone; `None` unless
+    /// the workload is exactly at a milestone boundary.
+    fn app_snapshot(&self) -> Result<Option<Snapshot>>;
+
+    /// Restore from an application checkpoint (milestone state).
+    fn app_restore(&mut self, bytes: &[u8]) -> Result<()>;
+
+    /// Extra virtual time an application-native restart burns re-loading
+    /// inputs and rebuilding in-memory indices (metaSPAdes
+    /// `--restart-from` re-reads its intermediate files).
+    fn app_restart_overhead(&self) -> SimDuration {
+        SimDuration::from_secs(120)
+    }
+
+    // --- verification ------------------------------------------------------
+
+    /// Order-sensitive hash of live state; two workloads with equal
+    /// fingerprints are in the same computational state (the bit-exact
+    /// resume invariant).
+    fn fingerprint(&self) -> u64;
+}
+
+/// FNV-1a for state fingerprints.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_ne!(fnv1a(b"ab"), fnv1a(b"ba"));
+    }
+}

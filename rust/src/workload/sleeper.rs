@@ -1,0 +1,363 @@
+//! Sleeper: a pure-Rust calibration workload.
+//!
+//! Same structural shape as the MiniMeta assembler (stages, steps,
+//! milestones, both checkpoint surfaces) with trivial deterministic
+//! compute, so unit tests, property tests and the fast benches can run
+//! thousands of simulated evictions per second without PJRT.
+
+use super::{fnv1a, Progress, Snapshot, StepOutcome, Workload};
+use crate::util::wire::{WireReader, WireWriter};
+use anyhow::{bail, Result};
+
+const MAGIC: u32 = 0x534C_4550; // "SLEP"
+const APP_MAGIC: u32 = 0x534C_4150; // "SLAP"
+const VERSION: u32 = 1;
+
+/// Configuration for a sleeper workload.
+#[derive(Debug, Clone)]
+pub struct SleeperCfg {
+    pub stages: Vec<(String, u64)>, // (label, steps)
+    pub milestones_per_stage: u32,
+    pub charged_bytes: u64,
+    pub app_charged_bytes: u64,
+}
+
+impl SleeperCfg {
+    /// Shape matching the paper's 5-k pipeline, tiny step counts.
+    pub fn small() -> Self {
+        Self {
+            stages: ["K33", "K55", "K77", "K99", "K127"]
+                .iter()
+                .map(|s| (s.to_string(), 40u64))
+                .collect(),
+            milestones_per_stage: 2,
+            charged_bytes: 3 << 30,     // 3 GiB CRIU-image analog
+            app_charged_bytes: 1 << 30, // 1 GiB intermediate files
+        }
+    }
+}
+
+/// The workload: a state vector mixed deterministically per step.
+#[derive(Debug, Clone)]
+pub struct Sleeper {
+    cfg: SleeperCfg,
+    stage: u32,
+    step_in_stage: u64,
+    total_steps: u64,
+    state: [u64; 8],
+    done: bool,
+    /// State as of the last milestone (what the "application" would have
+    /// written to its own checkpoint files).
+    milestone_state: Option<(u32, u64, u64, [u64; 8])>, // stage, step, total, state
+}
+
+impl Sleeper {
+    pub fn new(cfg: SleeperCfg, seed: u64) -> Self {
+        let mut state = [0u64; 8];
+        for (i, s) in state.iter_mut().enumerate() {
+            *s = seed.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(i as u32);
+        }
+        let mut w = Self {
+            cfg,
+            stage: 0,
+            step_in_stage: 0,
+            total_steps: 0,
+            state,
+            done: false,
+            milestone_state: None,
+        };
+        // step 0 is itself a milestone boundary ("start of stage")
+        w.record_milestone();
+        w
+    }
+
+    fn record_milestone(&mut self) {
+        self.milestone_state =
+            Some((self.stage, self.step_in_stage, self.total_steps, self.state));
+    }
+
+    fn mix(&mut self) {
+        // SplitMix-ish state evolution keyed by position, so identical
+        // (seed, step) always produce identical state — the bit-exact
+        // resume invariant is testable.
+        for i in 0..8 {
+            let x = self.state[i]
+                ^ (self.total_steps.wrapping_add(i as u64))
+                    .wrapping_mul(0xBF58476D1CE4E5B9);
+            self.state[i] = x.rotate_left(17).wrapping_mul(0x94D049BB133111EB);
+        }
+    }
+
+    fn steps_between_milestones(&self, stage: u32) -> u64 {
+        let steps = self.cfg.stages[stage as usize].1;
+        (steps / self.cfg.milestones_per_stage.max(1) as u64).max(1)
+    }
+
+    fn encode(&self, app: bool) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        w.put_u32(if app { APP_MAGIC } else { MAGIC });
+        w.put_u32(VERSION);
+        let (stage, step, total, state) = if app {
+            self.milestone_state.expect("milestone recorded at init")
+        } else {
+            (self.stage, self.step_in_stage, self.total_steps, self.state)
+        };
+        w.put_u32(stage);
+        w.put_u64(step);
+        w.put_u64(total);
+        w.put_u64s(&state);
+        w.put_u8(self.done as u8);
+        w.finish()
+    }
+
+    fn decode(&mut self, bytes: &[u8], app: bool) -> Result<()> {
+        let mut r = WireReader::new(bytes);
+        let magic = r.get_u32()?;
+        let want = if app { APP_MAGIC } else { MAGIC };
+        if magic != want {
+            bail!("bad sleeper snapshot magic {magic:#x}");
+        }
+        let version = r.get_u32()?;
+        if version != VERSION {
+            bail!("unsupported sleeper snapshot version {version}");
+        }
+        let stage = r.get_u32()?;
+        let step = r.get_u64()?;
+        let total = r.get_u64()?;
+        let state_v = r.get_u64s()?;
+        let done = r.get_u8()? != 0;
+        r.finish()?;
+        if state_v.len() != 8 {
+            bail!("bad state vector length {}", state_v.len());
+        }
+        if stage as usize >= self.cfg.stages.len() && !done {
+            bail!("snapshot stage {stage} out of range");
+        }
+        self.stage = stage;
+        self.step_in_stage = step;
+        self.total_steps = total;
+        self.state.copy_from_slice(&state_v);
+        self.done = done;
+        self.record_milestone();
+        Ok(())
+    }
+}
+
+impl Workload for Sleeper {
+    fn name(&self) -> &str {
+        "sleeper"
+    }
+
+    fn num_stages(&self) -> u32 {
+        self.cfg.stages.len() as u32
+    }
+
+    fn stage_label(&self, stage: u32) -> String {
+        self.cfg.stages[stage as usize].0.clone()
+    }
+
+    fn stage_steps(&self, stage: u32) -> u64 {
+        self.cfg.stages[stage as usize].1
+    }
+
+    fn progress(&self) -> Progress {
+        Progress {
+            stage: self.stage,
+            step_in_stage: self.step_in_stage,
+            total_steps: self.total_steps,
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self) -> Result<StepOutcome> {
+        if self.done {
+            bail!("step() after Done");
+        }
+        self.mix();
+        self.step_in_stage += 1;
+        self.total_steps += 1;
+        let stage_steps = self.stage_steps(self.stage);
+        if self.step_in_stage >= stage_steps {
+            let finished = self.stage;
+            self.stage += 1;
+            self.step_in_stage = 0;
+            self.record_milestone();
+            if self.stage as usize >= self.cfg.stages.len() {
+                self.done = true;
+                return Ok(StepOutcome::Done);
+            }
+            return Ok(StepOutcome::StageComplete(finished));
+        }
+        if self.step_in_stage % self.steps_between_milestones(self.stage) == 0 {
+            self.record_milestone();
+            return Ok(StepOutcome::Milestone);
+        }
+        Ok(StepOutcome::Advanced)
+    }
+
+    fn snapshot(&self) -> Result<Snapshot> {
+        Ok(Snapshot {
+            bytes: self.encode(false),
+            charged_bytes: self.cfg.charged_bytes,
+        })
+    }
+
+    fn restore(&mut self, bytes: &[u8]) -> Result<()> {
+        self.decode(bytes, false)
+    }
+
+    fn app_snapshot(&self) -> Result<Option<Snapshot>> {
+        // Only at the boundary itself (milestone state == live state).
+        match self.milestone_state {
+            Some((s, st, t, _)) if s == self.stage
+                && st == self.step_in_stage
+                && t == self.total_steps =>
+            {
+                Ok(Some(Snapshot {
+                    bytes: self.encode(true),
+                    charged_bytes: self.cfg.app_charged_bytes,
+                }))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    fn app_restore(&mut self, bytes: &[u8]) -> Result<()> {
+        self.decode(bytes, true)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        fnv1a(&self.encode(false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> Sleeper {
+        Sleeper::new(SleeperCfg::small(), 42)
+    }
+
+    #[test]
+    fn runs_to_completion_with_expected_steps() {
+        let mut w = mk();
+        let mut stages_done = 0;
+        let mut milestones = 0;
+        let mut steps = 0;
+        loop {
+            match w.step().unwrap() {
+                StepOutcome::Advanced => {}
+                StepOutcome::Milestone => milestones += 1,
+                StepOutcome::StageComplete(_) => stages_done += 1,
+                StepOutcome::Done => break,
+            }
+            steps += 1;
+            assert!(steps < 10_000, "runaway");
+        }
+        assert!(w.is_done());
+        assert_eq!(w.progress().total_steps, 5 * 40);
+        assert_eq!(stages_done, 4); // last stage ends with Done
+        assert_eq!(milestones, 5); // one interior milestone per stage (m=2)
+    }
+
+    #[test]
+    fn transparent_snapshot_restores_bit_exact() {
+        let mut w = mk();
+        for _ in 0..57 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        let fp = w.fingerprint();
+        // keep running the original
+        let mut cont = w.clone();
+        for _ in 0..10 {
+            cont.step().unwrap();
+        }
+        // restore a fresh instance and replay the same 10 steps
+        let mut fresh = mk();
+        fresh.restore(&snap.bytes).unwrap();
+        assert_eq!(fresh.fingerprint(), fp);
+        for _ in 0..10 {
+            fresh.step().unwrap();
+        }
+        assert_eq!(fresh.fingerprint(), cont.fingerprint());
+    }
+
+    #[test]
+    fn app_snapshot_only_at_milestones() {
+        let mut w = mk();
+        assert!(w.app_snapshot().unwrap().is_some(), "start is a milestone");
+        w.step().unwrap(); // step 1 of 40, milestone spacing 20
+        assert!(w.app_snapshot().unwrap().is_none());
+        for _ in 1..20 {
+            w.step().unwrap();
+        }
+        // at step 20: milestone
+        assert!(w.app_snapshot().unwrap().is_some());
+    }
+
+    #[test]
+    fn app_restore_loses_mid_milestone_progress() {
+        let mut w = mk();
+        // run to milestone at step 20, grab app ckpt
+        for _ in 0..20 {
+            w.step().unwrap();
+        }
+        let app = w.app_snapshot().unwrap().unwrap();
+        // run 15 more steps (inside the milestone window)
+        for _ in 0..15 {
+            w.step().unwrap();
+        }
+        assert_eq!(w.progress().step_in_stage, 35);
+        let mut fresh = mk();
+        fresh.app_restore(&app.bytes).unwrap();
+        // back to step 20 — the 15 steps are lost
+        assert_eq!(fresh.progress().step_in_stage, 20);
+        assert_eq!(fresh.progress().total_steps, 20);
+    }
+
+    #[test]
+    fn charged_sizes_differ_by_surface() {
+        let w = mk();
+        assert_eq!(w.snapshot().unwrap().charged_bytes, 3 << 30);
+        assert_eq!(
+            w.app_snapshot().unwrap().unwrap().charged_bytes,
+            1 << 30
+        );
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption() {
+        let w = mk();
+        let snap = w.snapshot().unwrap();
+        let mut fresh = mk();
+        // truncated
+        assert!(fresh.restore(&snap.bytes[..snap.bytes.len() - 3]).is_err());
+        // wrong magic
+        let mut bad = snap.bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(fresh.restore(&bad).is_err());
+        // cross-surface confusion rejected
+        assert!(fresh.app_restore(&snap.bytes).is_err());
+    }
+
+    #[test]
+    fn step_after_done_errors() {
+        let mut w = mk();
+        while !w.is_done() {
+            w.step().unwrap();
+        }
+        assert!(w.step().is_err());
+    }
+
+    #[test]
+    fn different_seeds_different_fingerprints() {
+        let a = Sleeper::new(SleeperCfg::small(), 1);
+        let b = Sleeper::new(SleeperCfg::small(), 2);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+    }
+}

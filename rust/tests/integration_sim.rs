@@ -1,0 +1,204 @@
+//! Integration: whole-system simulated runs across module boundaries
+//! (config → experiment → driver → cloud + checkpoint engine + storage).
+
+use spoton::config::ScenarioConfig;
+use spoton::metrics::EventKind;
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+use spoton::storage::{NfsStore, SharedStore, TransferModel};
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "spoton-it-{tag}-{}-{:x}",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos() as u64
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn scenario_file_drives_a_full_run() {
+    // the CLI path: TOML -> ScenarioConfig -> Experiment -> result
+    let toml = r#"
+name = "it-row7"
+seed = 11
+[workload]
+kind = "sleeper"
+[eviction]
+plan = "fixed"
+interval_mins = 60
+[checkpoint]
+method = "transparent"
+interval_mins = 30
+"#;
+    let cfg = ScenarioConfig::from_str_toml(toml).unwrap();
+    let r = Experiment { cfg }.run_sleeper().unwrap();
+    assert!(r.completed);
+    assert!(r.evictions >= 2);
+    assert!(r.termination_ok > 0);
+    assert!(r.timeline.is_monotone());
+}
+
+#[test]
+fn all_eight_table1_rows_reproduce_the_paper_shape() {
+    let rows = spoton::report::paper_rows();
+    let mut totals = std::collections::HashMap::new();
+    for row in &rows {
+        let r = row.experiment().run_sleeper().unwrap();
+        assert!(r.completed, "{} did not finish", row.id);
+        totals.insert(row.id, r.total);
+    }
+    let t = |id: &str| totals[id].as_millis() as f64;
+    // row1 is exactly the calibration
+    assert_eq!(totals["row1"].hms(), "3:03:26");
+    // overhead ~1%
+    assert!((t("row2") / t("row1") - 1.0) < 0.02);
+    // app-native degrades with eviction frequency
+    assert!(t("row4") > t("row3"));
+    assert!(t("row3") > t("row1") * 1.05);
+    // transparent stays within 8% of baseline
+    for id in ["row5", "row6", "row7", "row8"] {
+        assert!(
+            t(id) < t("row1") * 1.08,
+            "{id} drifted too far from baseline"
+        );
+        // and always beats the matching app-native row
+    }
+    assert!(t("row5") < t("row3"));
+    assert!(t("row7") < t("row4"));
+}
+
+#[test]
+fn nfs_backed_run_survives_share_reattach() {
+    // run against a real directory; verify checkpoints really land on
+    // disk and the share contents outlive the run (what a replacement
+    // instance would mount)
+    let dir = tmpdir("nfs");
+    let model = TransferModel {
+        bandwidth_mib_s: 250.0,
+        latency: SimDuration::from_millis(20),
+    };
+    let exp = Experiment::table1()
+        .named("nfs-run")
+        .eviction_every(SimDuration::from_mins(75))
+        .transparent(SimDuration::from_mins(20));
+    {
+        let mut store = NfsStore::open(&dir, model, Some(100.0)).unwrap();
+        let mut factory = exp.sleeper_factory();
+        let r = spoton::sim::driver::SimDriver::new(&exp.cfg, &mut store)
+            .run(&mut *factory)
+            .unwrap();
+        assert!(r.completed);
+        assert!(r.evictions >= 2);
+    }
+    // reattach: a fresh NfsStore over the same root sees the checkpoints
+    let mut store2 = NfsStore::open(&dir, model, Some(100.0)).unwrap();
+    let latest =
+        spoton::checkpoint::CheckpointStore::latest_valid(&mut store2, None)
+            .unwrap();
+    assert!(latest.is_some(), "checkpoints must persist on the share");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn local_scratch_is_never_needed_across_restarts() {
+    // the eviction wipes instance-local state; the run must complete
+    // regardless (everything restart-critical lives on the share)
+    let mut scratch = spoton::storage::LocalScratch::new();
+    scratch.put("tmp/intermediate", b"cache");
+    let r = Experiment::table1()
+        .eviction_every(SimDuration::from_mins(60))
+        .transparent(SimDuration::from_mins(15))
+        .run_sleeper()
+        .unwrap();
+    scratch.wipe(); // what the eviction does
+    assert!(r.completed);
+    assert!(scratch.is_empty());
+}
+
+#[test]
+fn starvation_detected_not_hung() {
+    // boundary-only app checkpoints + lifetime < longest stage: the
+    // driver must terminate via the deadline, not loop forever
+    let r = Experiment::table1()
+        .named("starved")
+        .eviction_every(SimDuration::from_mins(30))
+        .app_native()
+        .app_milestones(1)
+        .deadline(SimDuration::from_hours(8))
+        .run_sleeper()
+        .unwrap();
+    assert!(!r.completed);
+    assert_eq!(r.timeline.count(EventKind::Aborted), 1);
+    assert!(r.total >= SimDuration::from_hours(8));
+    // it kept trying the whole time
+    assert!(r.evictions >= 10);
+}
+
+#[test]
+fn poisson_storms_complete_with_transparent_protection() {
+    for seed in [1u64, 2, 3, 4, 5] {
+        let r = Experiment::table1()
+            .eviction_poisson(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(15))
+            .deadline(SimDuration::from_hours(30))
+            .seed(seed)
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed, "seed {seed}: {}", r.summary());
+        // resumed state must match the uninterrupted fingerprint
+        let base = Experiment::table1()
+            .spoton_off()
+            .run_sleeper()
+            .unwrap();
+        assert_eq!(
+            r.final_fingerprint, base.final_fingerprint,
+            "seed {seed} diverged"
+        );
+    }
+}
+
+#[test]
+fn billing_reconciles_instance_uptimes() {
+    let r = Experiment::table1()
+        .eviction_every(SimDuration::from_mins(90))
+        .transparent(SimDuration::from_mins(30))
+        .run_sleeper()
+        .unwrap();
+    // sum of booked instance-hours x price == compute cost
+    let total: f64 = r
+        .invoice
+        .items
+        .iter()
+        .filter(|i| i.resource.starts_with("vm/"))
+        .map(|i| i.amount)
+        .sum();
+    assert!((total - r.compute_cost).abs() < 1e-9);
+    // storage line exists for protected runs
+    assert!(r
+        .invoice
+        .items
+        .iter()
+        .any(|i| i.resource.starts_with("storage/")));
+}
+
+#[test]
+fn eviction_trace_replay_is_exact() {
+    // a trace with two eviction offsets: exactly two evictions happen,
+    // the third instance runs to completion
+    let r = Experiment::table1()
+        .eviction_trace(vec![
+            SimDuration::from_mins(50),
+            SimDuration::from_mins(40),
+        ])
+        .transparent(SimDuration::from_mins(15))
+        .run_sleeper()
+        .unwrap();
+    assert!(r.completed);
+    assert_eq!(r.evictions, 2);
+    assert_eq!(r.instances, 3);
+}

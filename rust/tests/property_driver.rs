@@ -1,0 +1,210 @@
+//! Property tests over the experiment driver: whole-run invariants that
+//! must hold for *every* scenario, not just the paper's eight.
+//!
+//! Random scenarios (eviction plan × checkpoint method × notice ×
+//! intervals × seeds) are generated with the in-repo proptest framework;
+//! each run is checked against coordinator invariants.
+
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+use spoton::util::proptest::{forall, shrink_none, Config};
+use spoton::util::Prng;
+
+/// Generate a random-but-plausible experiment.
+fn gen_experiment(rng: &mut Prng) -> Experiment {
+    let mut e = Experiment::table1()
+        .named("prop")
+        .seed(rng.next_u64())
+        .deadline(SimDuration::from_hours(40));
+    // eviction plan
+    e = match rng.below(4) {
+        0 => e, // none
+        1 => e.eviction_every(SimDuration::from_mins(rng.range_u64(20, 180))),
+        2 => e.eviction_poisson(SimDuration::from_mins(rng.range_u64(30, 240))),
+        _ => {
+            let n = rng.range_u64(1, 5);
+            e.eviction_trace(
+                (0..n)
+                    .map(|_| SimDuration::from_mins(rng.range_u64(10, 120)))
+                    .collect(),
+            )
+        }
+    };
+    // checkpoint method — bias toward protected configs so most runs
+    // complete
+    e = match rng.below(6) {
+        0 => e.unprotected(),
+        1 | 2 => e.app_native(),
+        _ => e.transparent(SimDuration::from_mins(rng.range_u64(5, 45))),
+    };
+    // notice + image size perturbations
+    e = e
+        .notice(SimDuration::from_secs(rng.range_u64(5, 120)))
+        .state_gib(0.5 + rng.f64() * 6.0);
+    e
+}
+
+#[test]
+fn prop_run_invariants() {
+    forall(
+        Config::default().cases(60),
+        gen_experiment,
+        shrink_none,
+        |exp| {
+            let r = exp.run_sleeper().map_err(|e| e.to_string())?;
+
+            // 1. timeline is time-ordered
+            if !r.timeline.is_monotone() {
+                return Err("timeline not monotone".into());
+            }
+            // 2. instance count == evictions + 1 when completed
+            if r.completed && r.instances != r.evictions + 1 {
+                return Err(format!(
+                    "instances {} != evictions {} + 1",
+                    r.instances, r.evictions
+                ));
+            }
+            // 3. completed runs account every stage; totals are the sum
+            if r.completed {
+                if r.stage_times.len() != 5 {
+                    return Err(format!(
+                        "{} stage times recorded",
+                        r.stage_times.len()
+                    ));
+                }
+                let sum: u64 = r
+                    .stage_times
+                    .iter()
+                    .map(|(_, d)| d.as_millis())
+                    .sum();
+                if sum != r.total.as_millis() {
+                    return Err(format!(
+                        "stage sum {sum} != total {}",
+                        r.total.as_millis()
+                    ));
+                }
+            }
+            // 4. no-eviction runs lose nothing and use one instance
+            if r.evictions == 0
+                && (r.lost_steps != 0 || r.instances != 1 || r.restores != 0)
+            {
+                return Err("loss without evictions".into());
+            }
+            // 5. costs are non-negative and compute>0
+            if r.compute_cost <= 0.0 || r.storage_cost < 0.0 {
+                return Err("implausible costs".into());
+            }
+            // 6. termination checkpoints only exist for transparent runs
+            let transparent = matches!(
+                exp.cfg.checkpoint,
+                spoton::config::CheckpointMethodCfg::Transparent { .. }
+            );
+            if !transparent && (r.termination_ok + r.termination_failed) > 0 {
+                return Err("termination ckpt under non-transparent".into());
+            }
+            // 7. app checkpoints only exist for app-native runs
+            let app = matches!(
+                exp.cfg.checkpoint,
+                spoton::config::CheckpointMethodCfg::AppNative
+            );
+            if !app && r.app_ckpts > 0 {
+                return Err("app ckpt under non-app policy".into());
+            }
+            // 8. completed protected runs end bit-exact vs the
+            //    uninterrupted reference
+            if r.completed {
+                let base = Experiment::table1()
+                    .spoton_off()
+                    .run_sleeper()
+                    .map_err(|e| e.to_string())?;
+                if r.final_fingerprint != base.final_fingerprint {
+                    return Err("final state diverged".into());
+                }
+            }
+            // 9. deterministic replay
+            let again = exp.run_sleeper().map_err(|e| e.to_string())?;
+            if again.total != r.total
+                || again.evictions != r.evictions
+                || again.final_fingerprint != r.final_fingerprint
+            {
+                return Err("rerun not deterministic".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_restores_never_exceed_crash_point() {
+    // For every eviction+restore pair in the timeline, the restored step
+    // must be <= the max step reached before the eviction (no time
+    // travel forward), and restore events only follow launches.
+    forall(
+        Config::default().cases(40).seed(0xBEEF),
+        gen_experiment,
+        shrink_none,
+        |exp| {
+            let r = exp.run_sleeper().map_err(|e| e.to_string())?;
+            use spoton::metrics::EventKind;
+            let mut last: Option<EventKind> = None;
+            for ev in r.timeline.events() {
+                if ev.kind == EventKind::RestoreFromCheckpoint {
+                    if last != Some(EventKind::InstanceLaunch) {
+                        return Err(format!(
+                            "restore not preceded by launch (was {last:?})"
+                        ));
+                    }
+                }
+                last = Some(ev.kind);
+            }
+            // every eviction notice precedes an instance eviction
+            let notices = r.timeline.count(EventKind::EvictionNotice);
+            let evicted = r.timeline.count(EventKind::InstanceEvicted);
+            if notices != evicted {
+                return Err(format!(
+                    "{notices} notices vs {evicted} evictions"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_transparent_dominates_app_native() {
+    // Under identical fixed-interval evictions, transparent-protected
+    // total time never exceeds app-native total time by more than noise
+    // (the paper's central comparison, generalized over intervals).
+    forall(
+        Config::default().cases(20).seed(0x5EED),
+        |rng| rng.range_u64(30, 150),
+        spoton::util::proptest::shrinks_u64,
+        |&mins| {
+            let app = Experiment::table1()
+                .eviction_every(SimDuration::from_mins(mins))
+                .app_native()
+                .deadline(SimDuration::from_hours(30))
+                .run_sleeper()
+                .map_err(|e| e.to_string())?;
+            let tr = Experiment::table1()
+                .eviction_every(SimDuration::from_mins(mins))
+                .transparent(SimDuration::from_mins(15))
+                .deadline(SimDuration::from_hours(30))
+                .run_sleeper()
+                .map_err(|e| e.to_string())?;
+            if !tr.completed {
+                return Err("transparent DNF".into());
+            }
+            // allow 2% slack for checkpoint-pause overhead at sparse
+            // evictions where app-native loses almost nothing
+            let limit = (app.total.as_millis() as f64 * 1.02) as u64;
+            if tr.total.as_millis() > limit {
+                return Err(format!(
+                    "transparent {} slower than app {} at {mins}min",
+                    tr.total, app.total
+                ));
+            }
+            Ok(())
+        },
+    );
+}
