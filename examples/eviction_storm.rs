@@ -64,22 +64,25 @@ fn main() -> anyhow::Result<()> {
 
     // 3. Requeue scheduler: a small batch queue of protected jobs.
     println!("\nRequeue scheduler (batch of 4 jobs, single spot slot):\n");
-    let jobs: Vec<Job> = (0..4)
-        .map(|i| Job {
-            id: i,
-            name: format!("assembly-{i}"),
-            experiment: Experiment::table1()
-                .named("queued")
-                .eviction_every(SimDuration::from_mins(75))
-                .transparent(SimDuration::from_mins(15))
-                .seed(100 + i as u64),
-        })
-        .collect();
+    let mk_jobs = || -> Vec<Job> {
+        (0..4)
+            .map(|i| Job {
+                id: i,
+                name: format!("assembly-{i}"),
+                experiment: Experiment::table1()
+                    .named("queued")
+                    .eviction_every(SimDuration::from_mins(75))
+                    .transparent(SimDuration::from_mins(15))
+                    .seed(100 + i as u64),
+            })
+            .collect()
+    };
     let sched = RequeueScheduler {
         requeue_delay: SimDuration::from_secs(300),
         max_attempts: 8,
+        slots: 1,
     };
-    let records = sched.run(jobs)?;
+    let records = sched.run(mk_jobs())?;
     let mut t = TextTable::new(&[
         "Job", "Attempts", "Evictions", "Wait", "Turnaround", "Cost", "Done",
     ]);
@@ -96,6 +99,29 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", t.render());
     assert!(records.iter().all(|r| r.completed));
+    let makespan = |rs: &[spoton::sched::JobRecord]| {
+        rs.iter().map(|r| r.finished_at).max().unwrap()
+    };
+    let serial_makespan = makespan(&records);
+
+    // 4. Same batch on a 2-slot cluster: jobs share the event queue and
+    //    run concurrently, so the makespan roughly halves.
+    println!("\nSame batch, 2 concurrent spot slots:\n");
+    let wide = RequeueScheduler {
+        requeue_delay: SimDuration::from_secs(300),
+        max_attempts: 8,
+        slots: 2,
+    };
+    let (records2, timeline) = wide.run_with_timeline(mk_jobs())?;
+    assert!(records2.iter().all(|r| r.completed));
+    let wide_makespan = makespan(&records2);
+    println!(
+        "  makespan 1 slot: {}   2 slots: {}   ({} job-lifecycle events)",
+        serial_makespan,
+        wide_makespan,
+        timeline.events().len()
+    );
+    assert!(wide_makespan < serial_makespan);
     println!("\nall jobs completed under continuous spot churn");
     Ok(())
 }

@@ -181,6 +181,28 @@ fn main() -> anyhow::Result<()> {
         3.2
     );
 
+    section("L3 event engine vs legacy loop (same scenario, fresh shares)");
+    let exp = Experiment::table1()
+        .eviction_every(SimDuration::from_mins(60))
+        .transparent(SimDuration::from_mins(15));
+    let engine_stats = bench_fn(2, 20, || {
+        std::hint::black_box(exp.run_sleeper().unwrap());
+    });
+    println!("  engine       {engine_stats}");
+    let legacy_stats = bench_fn(2, 20, || {
+        let mut store = exp.fresh_store();
+        let mut factory = exp.sleeper_factory();
+        std::hint::black_box(
+            spoton::sim::legacy::run_reference(
+                &exp.cfg,
+                &mut store,
+                &mut *factory,
+            )
+            .unwrap(),
+        );
+    });
+    println!("  legacy loop  {legacy_stats}");
+
     let _ = std::fs::remove_dir_all(&nfs_dir);
     Ok(())
 }

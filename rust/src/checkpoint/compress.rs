@@ -7,11 +7,8 @@
 //! with a magic + original length so restores are self-describing and
 //! uncompressed payloads from older runs keep working.
 
-use anyhow::{bail, Context, Result};
-use flate2::read::ZlibDecoder;
-use flate2::write::ZlibEncoder;
-use flate2::Compression;
-use std::io::{Read, Write};
+use crate::util::zlib;
+use anyhow::{bail, Result};
 
 /// Frame magic ("SPZ1").
 const MAGIC: [u8; 4] = *b"SPZ1";
@@ -20,14 +17,13 @@ const MAGIC: [u8; 4] = *b"SPZ1";
 /// length field allocating unbounded memory).
 const MAX_DECOMPRESSED: u64 = 64 << 30;
 
-/// Compress a checkpoint payload (zlib, balanced level).
+/// Compress a checkpoint payload (zlib frame, in-repo codec).
 pub fn compress(payload: &[u8]) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(payload.len() / 2 + 16);
     out.extend_from_slice(&MAGIC);
     out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
-    let mut enc = ZlibEncoder::new(out, Compression::new(6));
-    enc.write_all(payload).context("compressing payload")?;
-    Ok(enc.finish().context("finishing compression")?)
+    out.extend_from_slice(&zlib::deflate(payload));
+    Ok(out)
 }
 
 /// Is this buffer a compressed frame?
@@ -46,9 +42,7 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
     if expected > MAX_DECOMPRESSED {
         bail!("compressed frame claims absurd size {expected}");
     }
-    let mut dec = ZlibDecoder::new(&data[12..]);
-    let mut out = Vec::with_capacity(expected as usize);
-    dec.read_to_end(&mut out).context("decompressing payload")?;
+    let out = zlib::inflate(&data[12..], expected as usize)?;
     if out.len() as u64 != expected {
         bail!(
             "decompressed {} bytes, frame header claims {expected}",

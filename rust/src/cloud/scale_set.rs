@@ -102,6 +102,18 @@ impl ScaleSet {
         self.provisioning_delay
     }
 
+    /// The instant a launch requested at `now` is Running — the event the
+    /// simulation engine schedules instead of blocking the clock. The
+    /// first launch of a scale set is immediate (capacity was free);
+    /// replacements pay the provisioning delay.
+    pub fn replacement_ready_at(&self, now: SimTime) -> SimTime {
+        if self.launched == 0 {
+            now
+        } else {
+            now + self.provisioning_delay
+        }
+    }
+
     /// Change the VM size for future launches (OOM-resume upsizing,
     /// paper §IV).
     pub fn resize(&mut self, vm_size: &str) -> Result<()> {

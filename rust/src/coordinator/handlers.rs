@@ -1,0 +1,182 @@
+//! Coordinator reactions as discrete-event handlers.
+//!
+//! The simulation engine ([`crate::sim::engine`]) owns *when* things
+//! happen; this module owns *what the coordinator does* when they do —
+//! the same policy/monitor/writer composition the real-time loop uses,
+//! factored so the engine's `PollTick` / `TerminationCkptDone` events
+//! dispatch here instead of inlining coordinator logic in driver code.
+
+use super::monitor::{Notice, ScheduledEventsMonitor};
+use super::policy::CheckpointPolicy;
+use crate::checkpoint::{CheckpointWriter, CkptKind, WriteOutcome};
+use crate::cloud::metadata::MetadataService;
+use crate::simclock::SimTime;
+use crate::storage::SharedStore;
+use crate::workload::Workload;
+use anyhow::{Context, Result};
+
+/// What the coordinator decided at a poll tick that surfaced a Preempt.
+#[derive(Debug)]
+pub enum PollReaction {
+    /// A termination checkpoint is racing the notice deadline; it finishes
+    /// (committed or dead mid-transfer) after `outcome.cost()`. The notice
+    /// must be acked once the write completes.
+    TerminationCkpt { notice: Notice, outcome: WriteOutcome },
+    /// The policy cannot checkpoint on demand (paper §III-A); the notice
+    /// was acked immediately and the instance just waits to die.
+    AckOnly,
+}
+
+/// Coordinator reaction to its poll tick detecting an eviction notice:
+/// poll the scheduled-events document, and — if the policy supports
+/// on-demand capture — start an opportunistic termination checkpoint
+/// bounded by the time left until `reclaim_deadline` (paper §II).
+#[allow(clippy::too_many_arguments)]
+pub fn on_poll_tick(
+    monitor: &mut ScheduledEventsMonitor,
+    metadata: &mut MetadataService,
+    policy: &CheckpointPolicy,
+    writer: &mut CheckpointWriter,
+    store: &mut dyn SharedStore,
+    workload: &dyn Workload,
+    now: SimTime,
+    reclaim_deadline: SimTime,
+) -> Result<PollReaction> {
+    let notice = monitor
+        .poll_inproc(metadata)?
+        .context("notice must be visible")?;
+    if policy.takes_termination_checkpoint() {
+        let budget = reclaim_deadline.since(now);
+        let snap = workload.snapshot()?;
+        let outcome = writer.write_with_budget(
+            store,
+            now,
+            CkptKind::Termination,
+            workload,
+            &snap,
+            Some(budget),
+        )?;
+        Ok(PollReaction::TerminationCkpt { notice, outcome })
+    } else {
+        monitor.ack_inproc(metadata, &notice.event_id);
+        Ok(PollReaction::AckOnly)
+    }
+}
+
+/// Acknowledge a notice (StartRequests) once the termination checkpoint
+/// attempt — successful or not — has finished.
+pub fn ack_notice(
+    monitor: &ScheduledEventsMonitor,
+    metadata: &mut MetadataService,
+    notice: &Notice,
+) {
+    monitor.ack_inproc(metadata, &notice.event_id);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CheckpointMethodCfg;
+    use crate::simclock::SimDuration;
+    use crate::storage::BlobStore;
+    use crate::workload::sleeper::{Sleeper, SleeperCfg};
+
+    fn setup(
+        method: CheckpointMethodCfg,
+    ) -> (
+        ScheduledEventsMonitor,
+        MetadataService,
+        CheckpointPolicy,
+        CheckpointWriter,
+        BlobStore,
+        Sleeper,
+    ) {
+        (
+            ScheduledEventsMonitor::new("vm-0"),
+            MetadataService::new(),
+            CheckpointPolicy::new(method),
+            CheckpointWriter::new(),
+            BlobStore::for_tests(),
+            Sleeper::new(SleeperCfg::small(), 9),
+        )
+    }
+
+    #[test]
+    fn transparent_policy_races_a_termination_checkpoint() {
+        let (mut mon, mut md, policy, mut writer, mut store, w) =
+            setup(CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(30),
+            });
+        let now = SimTime::from_secs(100);
+        let dl = now + SimDuration::from_secs(30);
+        md.post_preempt("vm-0", dl);
+        let r = on_poll_tick(
+            &mut mon, &mut md, &policy, &mut writer, &mut store, &w, now, dl,
+        )
+        .unwrap();
+        match r {
+            PollReaction::TerminationCkpt { notice, outcome } => {
+                assert_eq!(notice.not_before, dl);
+                // 3 GiB at the test store's generous bandwidth commits
+                assert!(outcome.committed().is_some());
+                ack_notice(&mon, &mut md, &notice);
+                // acked event no longer Scheduled
+                mon.reset();
+                assert!(mon.poll_inproc(&md).unwrap().is_none());
+            }
+            other => panic!("expected termination ckpt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_budget_yields_partial_outcome() {
+        let (mut mon, mut md, policy, mut writer, mut store, w) =
+            setup(CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(30),
+            });
+        let now = SimTime::from_secs(50);
+        md.post_preempt("vm-0", now); // deadline already here
+        let r = on_poll_tick(
+            &mut mon, &mut md, &policy, &mut writer, &mut store, &w, now, now,
+        )
+        .unwrap();
+        match r {
+            PollReaction::TerminationCkpt { outcome, .. } => {
+                assert!(outcome.committed().is_none());
+                assert_eq!(outcome.cost(), SimDuration::ZERO);
+            }
+            other => panic!("expected partial termination ckpt, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn app_native_policy_acks_without_checkpoint() {
+        let (mut mon, mut md, policy, mut writer, mut store, w) =
+            setup(CheckpointMethodCfg::AppNative);
+        let now = SimTime::from_secs(10);
+        let dl = now + SimDuration::from_secs(30);
+        md.post_preempt("vm-0", dl);
+        let r = on_poll_tick(
+            &mut mon, &mut md, &policy, &mut writer, &mut store, &w, now, dl,
+        )
+        .unwrap();
+        assert!(matches!(r, PollReaction::AckOnly));
+        // nothing written to the share
+        assert!(store.list("ckpt/").unwrap().is_empty());
+        // and the notice is already acked
+        mon.reset();
+        assert!(mon.poll_inproc(&md).unwrap().is_none());
+    }
+
+    #[test]
+    fn missing_notice_is_a_hard_error() {
+        let (mut mon, mut md, policy, mut writer, mut store, w) =
+            setup(CheckpointMethodCfg::AppNative);
+        let now = SimTime::from_secs(10);
+        let err = on_poll_tick(
+            &mut mon, &mut md, &policy, &mut writer, &mut store, &w, now, now,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("visible"));
+    }
+}

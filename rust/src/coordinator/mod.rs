@@ -16,18 +16,24 @@
 //!   service, both in-process (simulation) and HTTP (real-time mode).
 //! * [`restart`] — find-latest-valid + restore with fingerprint
 //!   verification.
+//! * [`handlers`] — the coordinator's reactions (poll-tick detection,
+//!   termination-checkpoint race, notice ack) as discrete-event handlers
+//!   the simulation engine dispatches to.
 //! * [`realtime`] — the wall-clock coordinator loop the CLI runs
 //!   (workload + periodic checkpoints + IMDS polling + termination
 //!   checkpoint on Preempt), exercised end-to-end by integration tests.
 //!
-//! The virtual-time experiment driver in [`crate::sim`] composes the same
-//! policy/monitor/restart pieces under the discrete-event clock.
+//! The event-driven engine in [`crate::sim::engine`] composes the same
+//! policy/monitor/restart pieces under the discrete-event clock, routing
+//! its `PollTick`/`TerminationCkptDone` events through [`handlers`].
 
 pub mod policy;
 pub mod monitor;
 pub mod restart;
+pub mod handlers;
 pub mod realtime;
 
+pub use handlers::PollReaction;
 pub use monitor::{Notice, ScheduledEventsMonitor};
 pub use policy::CheckpointPolicy;
 pub use realtime::{RealtimeCoordinator, RealtimeOutcome, RealtimeParams};

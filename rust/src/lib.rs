@@ -15,16 +15,34 @@
 //! ## Layer map
 //!
 //! * **Layer 3 (this crate)** — the coordinator ([`coordinator`]) plus every
-//!   substrate it needs: a virtual cloud with spot semantics ([`cloud`]),
-//!   metered shared storage ([`storage`]), the checkpoint engine
-//!   ([`checkpoint`]), a discrete-event simulation harness ([`sim`],
-//!   [`simclock`]), an IMDS-compatible scheduled-events HTTP service
-//!   ([`httpd`], [`cloud::imds_http`]), billing/pricing ([`cloud::billing`],
-//!   [`cloud::pricing`]) and a mini requeue scheduler ([`sched`]).
+//!   substrate it needs, built around a **discrete-event core**: virtual
+//!   time and the deterministic event queue live in [`simclock`]
+//!   ([`simclock::EventQueue`] with FIFO tie-breaking and token
+//!   cancellation), and the experiment engine ([`sim::engine`]) runs each
+//!   scenario as a chain of typed `SimEvent`s — step completions,
+//!   checkpoint commits, eviction notices, coordinator poll ticks,
+//!   provisioning completions — dispatched to per-concern handlers (the
+//!   coordinator's reactions live in [`coordinator::handlers`]). Around
+//!   it: a virtual cloud with spot semantics ([`cloud`]; provisioning
+//!   completes as a scheduled event via
+//!   [`cloud::scale_set::ScaleSet::replacement_ready_at`]), metered shared
+//!   storage ([`storage`]), the checkpoint engine ([`checkpoint`]), an
+//!   IMDS-compatible scheduled-events HTTP service ([`httpd`],
+//!   [`cloud::imds_http`]), billing/pricing ([`cloud::billing`],
+//!   [`cloud::pricing`]), run instrumentation ([`metrics`]), and an
+//!   event-driven multi-slot requeue scheduler ([`sched`]) that
+//!   interleaves whole jobs on the same queue (the Slurm/LSF path of
+//!   paper §II). [`sim::driver::SimDriver`] is the stable facade over the
+//!   engine; [`sim::legacy`] preserves the pre-refactor loop as the
+//!   equivalence oracle.
 //! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly
 //!   analog workload's compute: JAX stage functions calling Pallas kernels,
 //!   AOT-lowered to HLO-text artifacts (`python/compile/`), executed from
 //!   Rust through PJRT ([`runtime`]) by the [`workload::assembler`] driver.
+//!   The PJRT binding is gated behind the `pjrt` cargo feature (the `xla`
+//!   crate and its native library are only present on kernel-provisioned
+//!   machines); without it, the whole coordination/simulation stack and
+//!   the sleeper calibration workload remain fully functional.
 //!
 //! Python never runs on the request path: `make artifacts` is the only
 //! Python invocation, after which the `spoton` binary is self-contained.

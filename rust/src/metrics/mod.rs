@@ -21,6 +21,11 @@ pub enum EventKind {
     StageComplete,
     WorkloadDone,
     Aborted,
+    // --- job-queue events (the requeue scheduler's cluster timeline) ---
+    JobSubmitted,
+    JobStarted,
+    JobRequeued,
+    JobFinished,
 }
 
 impl EventKind {
@@ -35,6 +40,10 @@ impl EventKind {
             EventKind::StageComplete => "stage-done",
             EventKind::WorkloadDone => "done",
             EventKind::Aborted => "aborted",
+            EventKind::JobSubmitted => "job-submitted",
+            EventKind::JobStarted => "job-started",
+            EventKind::JobRequeued => "job-requeued",
+            EventKind::JobFinished => "job-finished",
         }
     }
 }

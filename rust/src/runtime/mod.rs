@@ -15,6 +15,18 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md). Python lowers
 //! with `return_tuple=True`, so results unwrap via `decompose_tuple()`.
+//!
+//! ## The `pjrt` feature
+//!
+//! The `xla` binding (and the xla_extension native library behind it) is
+//! only present on machines provisioned for kernel work, so the PJRT
+//! execution path is gated behind the `pjrt` cargo feature. Without it,
+//! [`Runtime::load`] still parses and digest-verifies the artifact
+//! manifest (so `spoton artifacts-info` and workload construction work),
+//! but [`Executable::call_f32`] returns an error directing the caller to
+//! rebuild with `--features pjrt`. Everything else in the crate — the
+//! coordinator, checkpoint engine, simulator, scheduler, and the sleeper
+//! calibration workload — is pure Rust and fully functional either way.
 
 pub mod artifact;
 
@@ -28,6 +40,7 @@ use std::path::{Path, PathBuf};
 pub struct Executable {
     name: String,
     sig: ArtifactSig,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
@@ -38,9 +51,8 @@ pub enum Arg<'a> {
 }
 
 impl Executable {
-    /// Execute with shape/dtype-checked args; returns the flattened f32
-    /// outputs (all artifacts in this project return f32 tensors).
-    pub fn call_f32(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+    /// Shape/dtype-check `args` against the manifest signature.
+    fn check_args(&self, args: &[Arg<'_>]) -> Result<()> {
         if args.len() != self.sig.inputs.len() {
             bail!(
                 "{}: expected {} args, got {}",
@@ -49,36 +61,42 @@ impl Executable {
                 args.len()
             );
         }
-        let mut literals = Vec::with_capacity(args.len());
         for (i, (arg, sig)) in args.iter().zip(&self.sig.inputs).enumerate() {
+            let (len, ok) = match (arg, sig.dtype.as_str()) {
+                (Arg::I32(v), "int32") => (v.len(), true),
+                (Arg::F32(v), "float32") => (v.len(), true),
+                _ => (0, false),
+            };
+            if !ok {
+                bail!(
+                    "{}: arg {i} dtype mismatch (manifest says {})",
+                    self.name,
+                    sig.dtype
+                );
+            }
+            if len as u64 != sig.elements() {
+                bail!(
+                    "{}: arg {i} has {} elements, expected {}",
+                    self.name,
+                    len,
+                    sig.elements()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with shape/dtype-checked args; returns the flattened f32
+    /// outputs (all artifacts in this project return f32 tensors).
+    #[cfg(feature = "pjrt")]
+    pub fn call_f32(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.check_args(args)?;
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, sig) in args.iter().zip(&self.sig.inputs) {
             let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
-            let lit = match (arg, sig.dtype.as_str()) {
-                (Arg::I32(v), "int32") => {
-                    if v.len() as u64 != sig.elements() {
-                        bail!(
-                            "{}: arg {i} has {} elements, expected {}",
-                            self.name,
-                            v.len(),
-                            sig.elements()
-                        );
-                    }
-                    xla::Literal::vec1(v).reshape(&dims)?
-                }
-                (Arg::F32(v), "float32") => {
-                    if v.len() as u64 != sig.elements() {
-                        bail!(
-                            "{}: arg {i} has {} elements, expected {}",
-                            self.name,
-                            v.len(),
-                            sig.elements()
-                        );
-                    }
-                    xla::Literal::vec1(v).reshape(&dims)?
-                }
-                (_, dt) => bail!(
-                    "{}: arg {i} dtype mismatch (manifest says {dt})",
-                    self.name
-                ),
+            let lit = match arg {
+                Arg::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+                Arg::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
             };
             literals.push(lit);
         }
@@ -110,6 +128,19 @@ impl Executable {
         Ok(out)
     }
 
+    /// Without the `pjrt` feature no execution backend exists; argument
+    /// validation still runs so shape bugs surface identically.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn call_f32(&self, args: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        self.check_args(args)?;
+        bail!(
+            "{}: spoton was built without the `pjrt` feature; rebuild with \
+             `--features pjrt` (requires the vendored xla crate) to execute \
+             compiled artifacts",
+            self.name
+        );
+    }
+
     pub fn sig(&self) -> &ArtifactSig {
         &self.sig
     }
@@ -117,6 +148,7 @@ impl Executable {
 
 /// The PJRT client + compiled-executable cache.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: ArtifactManifest,
@@ -131,10 +163,10 @@ impl Runtime {
         manifest
             .verify_digests(dir)
             .context("artifact digest verification")?;
-        let client =
-            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self {
-            client,
+            #[cfg(feature = "pjrt")]
+            client: xla::PjRtClient::cpu()
+                .context("creating PJRT CPU client")?,
             dir: dir.to_path_buf(),
             manifest,
             cache: HashMap::new(),
@@ -158,20 +190,43 @@ impl Runtime {
                 .get(name)
                 .with_context(|| format!("unknown artifact '{name}'"))?
                 .clone();
-            let path = self.dir.join(&sig.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.cache.insert(
-                name.to_string(),
-                Executable { name: name.to_string(), sig, exe },
-            );
+            let exe = self.build_executable(name, sig)?;
+            self.cache.insert(name.to_string(), exe);
         }
         Ok(&self.cache[name])
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_executable(
+        &mut self,
+        name: &str,
+        sig: ArtifactSig,
+    ) -> Result<Executable> {
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { name: name.to_string(), sig, exe })
+    }
+
+    /// Feature-off build: hand back a stub whose `call_f32` explains how
+    /// to enable execution. The artifact file must still exist, so missing
+    /// or renamed artifacts fail here exactly as the real path would.
+    #[cfg(not(feature = "pjrt"))]
+    fn build_executable(
+        &mut self,
+        name: &str,
+        sig: ArtifactSig,
+    ) -> Result<Executable> {
+        let path = self.dir.join(&sig.file);
+        if !path.exists() {
+            bail!("artifact file missing: {}", path.display());
+        }
+        Ok(Executable { name: name.to_string(), sig })
     }
 
     /// Compile every artifact up front (warm start for latency benches).
@@ -184,8 +239,14 @@ impl Runtime {
         Ok(())
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    pub fn platform(&self) -> String {
+        "unavailable (built without the `pjrt` feature)".to_string()
     }
 }
 
@@ -196,7 +257,7 @@ pub fn default_artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
 

@@ -5,16 +5,34 @@
 //! separate job/resource scheduler (e.g., Slurm and LSF)."
 //!
 //! The scale set covers the first path; this module models the second: a
-//! single-slot batch queue (like a Slurm partition of spot nodes with
-//! `--requeue`). Jobs run one at a time; an evicted job goes back to the
-//! *tail* of the queue and pays a scheduling delay before its next
-//! attempt, so queue wait — not just provisioning — contributes to
-//! turnaround. Used by the `eviction_storm` example and queue-behaviour
-//! tests.
+//! batch queue (like a Slurm partition of spot nodes with `--requeue`)
+//! driven by the same deterministic `simclock::EventQueue` the experiment
+//! engine runs on. The cluster has `slots` concurrent spot slots; jobs
+//! are FIFO; an evicted/failed job goes back to the *tail* of the queue
+//! after a scheduling delay, so queue wait — not just provisioning —
+//! contributes to turnaround.
+//!
+//! Unlike the pre-event-core version (which serialized whole experiments
+//! and charged requeue delays inline), the scheduler is genuinely
+//! event-driven: while job A waits out its requeue delay, job B runs in
+//! the freed slot — the [`SchedEvent::RequeueReady`] timer and job B's
+//! [`SchedEvent::AttemptDone`] interleave on the shared queue. One
+//! attempt occupies one slot for its whole (virtual) duration; jobs
+//! interact only through slot contention, so each attempt's internals run
+//! through the experiment engine as an atomic slot occupancy, with the
+//! scale set's provisioning delay replaced by the requeue delay (the
+//! requeue path's replacement semantics).
+//!
+//! Each job keeps one share (BlobStore) across its attempts: later
+//! attempts restore what earlier attempts checkpointed — exactly how a
+//! Slurm requeue with shared NFS behaves.
 
+use crate::metrics::{EventKind, Timeline};
+use crate::sim::driver::SimDriver;
 use crate::sim::experiment::Experiment;
-use crate::simclock::{SimDuration, SimTime};
+use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
 use anyhow::Result;
+use std::collections::VecDeque;
 
 /// A queued job: one scenario to completion.
 #[derive(Debug, Clone)]
@@ -48,14 +66,28 @@ impl JobRecord {
     }
 }
 
-/// Single-slot requeue scheduler.
+/// Cluster-level scheduler events on the shared queue.
+#[derive(Debug, Clone, Copy)]
+enum SchedEvent {
+    /// A job enters the pending queue.
+    Submitted(usize),
+    /// A running attempt's virtual duration elapsed; its slot frees.
+    AttemptDone(usize),
+    /// A requeued job's scheduling delay elapsed; it rejoins the tail.
+    RequeueReady(usize),
+}
+
+/// Multi-slot requeue scheduler.
 pub struct RequeueScheduler {
-    /// Delay between an eviction and the next attempt starting (queue
-    /// scheduling latency; replaces the scale set's provisioning delay in
-    /// the requeue path).
+    /// Delay between an eviction/failure and the next attempt becoming
+    /// eligible (queue scheduling latency; also replaces the scale set's
+    /// provisioning delay inside each attempt — the requeue path's
+    /// replacement semantics).
     pub requeue_delay: SimDuration,
     /// Attempt cap per job (abandon pathological jobs).
     pub max_attempts: u32,
+    /// Concurrent spot slots in the cluster (a Slurm partition's width).
+    pub slots: u32,
 }
 
 impl Default for RequeueScheduler {
@@ -63,108 +95,175 @@ impl Default for RequeueScheduler {
         Self {
             requeue_delay: SimDuration::from_secs(300),
             max_attempts: 16,
+            slots: 1,
         }
     }
 }
 
+/// Live state of one job across its attempts.
+struct JobState {
+    job: Job,
+    /// The job's share, persistent across attempts (one job == one share).
+    store: crate::storage::BlobStore,
+    first_start: Option<SimTime>,
+    attempts: u32,
+    evictions: u32,
+    cost: f64,
+    last_completed: bool,
+}
+
 impl RequeueScheduler {
     /// Run all jobs to completion (or attempt exhaustion), FIFO with
-    /// requeue-at-tail. The slot-level clock advances by each attempt's
-    /// virtual duration.
-    ///
-    /// Each attempt reuses the job's shared checkpoint namespace: within
-    /// one scheduler run, a job's later attempts restore what earlier
-    /// attempts checkpointed (one run == one share), which is exactly how
-    /// a Slurm requeue with shared NFS behaves.
+    /// requeue-at-tail. Returns records in completion order.
     pub fn run(&self, jobs: Vec<Job>) -> Result<Vec<JobRecord>> {
-        // Each job gets its own share (BlobStore) that persists across
-        // its attempts.
-        struct Pending {
-            job: Job,
-            submitted_at: SimTime,
-            first_start: Option<SimTime>,
-            attempts: u32,
-            evictions: u32,
-            cost: f64,
-            store: crate::storage::BlobStore,
-        }
+        Ok(self.run_with_timeline(jobs)?.0)
+    }
 
-        let mut now = SimTime::ZERO;
-        let mut queue: std::collections::VecDeque<Pending> = jobs
+    /// Like [`RequeueScheduler::run`], also returning the cluster-level
+    /// timeline (`JobSubmitted` / `JobStarted` / `JobRequeued` /
+    /// `JobFinished` events) for queue-behaviour analysis and tests.
+    pub fn run_with_timeline(
+        &self,
+        jobs: Vec<Job>,
+    ) -> Result<(Vec<JobRecord>, Timeline)> {
+        let slots = self.slots.max(1);
+        let mut clock = Clock::new();
+        let mut queue: EventQueue<SchedEvent> = EventQueue::new();
+        let mut timeline = Timeline::new();
+        let mut pending: VecDeque<usize> = VecDeque::new();
+        let mut free_slots = slots;
+        let mut records: Vec<JobRecord> = Vec::new();
+
+        let mut states: Vec<JobState> = jobs
             .into_iter()
-            .map(|job| {
-                let model = crate::storage::TransferModel {
-                    bandwidth_mib_s: job.experiment.cfg.storage.bandwidth_mib_s,
-                    latency: job.experiment.cfg.storage.latency,
-                };
-                Pending {
-                    store: crate::storage::BlobStore::new(
-                        model,
-                        Some(job.experiment.cfg.storage.provisioned_gib),
-                    ),
-                    job,
-                    submitted_at: SimTime::ZERO,
-                    first_start: None,
-                    attempts: 0,
-                    evictions: 0,
-                    cost: 0.0,
-                }
+            .map(|job| JobState {
+                store: job.experiment.fresh_store(),
+                job,
+                first_start: None,
+                attempts: 0,
+                evictions: 0,
+                cost: 0.0,
+                last_completed: false,
             })
             .collect();
-        let mut records = Vec::new();
+        for i in 0..states.len() {
+            queue.schedule(SimTime::ZERO, SchedEvent::Submitted(i));
+        }
 
-        while let Some(mut p) = queue.pop_front() {
-            if p.attempts > 0 {
-                now += self.requeue_delay;
+        while let Some(sch) = queue.pop() {
+            clock.advance_to(sch.at);
+            let now = clock.now();
+            match sch.event {
+                SchedEvent::Submitted(i) => {
+                    timeline.record(
+                        now,
+                        EventKind::JobSubmitted,
+                        states[i].job.name.clone(),
+                    );
+                    pending.push_back(i);
+                }
+                SchedEvent::RequeueReady(i) => {
+                    pending.push_back(i);
+                }
+                SchedEvent::AttemptDone(i) => {
+                    free_slots += 1;
+                    let state = &mut states[i];
+                    let exhausted = state.attempts >= self.max_attempts;
+                    if state.last_completed || exhausted {
+                        timeline.record(
+                            now,
+                            EventKind::JobFinished,
+                            format!(
+                                "{} ({})",
+                                state.job.name,
+                                if state.last_completed {
+                                    "completed"
+                                } else {
+                                    "abandoned"
+                                }
+                            ),
+                        );
+                        records.push(JobRecord {
+                            id: state.job.id,
+                            name: state.job.name.clone(),
+                            submitted_at: SimTime::ZERO,
+                            started_at: state
+                                .first_start
+                                .expect("finished job must have started"),
+                            finished_at: now,
+                            attempts: state.attempts,
+                            evictions: state.evictions,
+                            completed: state.last_completed,
+                            cost: state.cost,
+                        });
+                    } else {
+                        timeline.record(
+                            now,
+                            EventKind::JobRequeued,
+                            format!(
+                                "{} (attempt {} of {})",
+                                state.job.name,
+                                state.attempts,
+                                self.max_attempts
+                            ),
+                        );
+                        queue.schedule_in(
+                            now,
+                            self.requeue_delay,
+                            SchedEvent::RequeueReady(i),
+                        );
+                    }
+                }
             }
-            if p.first_start.is_none() {
-                p.first_start = Some(now);
-            }
-            p.attempts += 1;
 
-            // One attempt = one experiment run *bounded to a single
-            // instance*: force the scale set to not auto-replace by
-            // setting an immediate deadline after the first eviction.
-            // Simpler: run the whole experiment (scale-set path) when the
-            // job is protected; the requeue model applies between whole-
-            // job failures. To surface requeue behaviour, treat each
-            // eviction inside the run as an attempt boundary is
-            // unnecessary — instead we run the experiment with
-            // provisioning_delay = requeue_delay, which is the requeue
-            // path's replacement semantics.
-            let mut exp = p.job.experiment.clone();
-            exp.cfg.cloud.provisioning_delay = self.requeue_delay;
-            let bumped = exp.cfg.seed.wrapping_add(p.attempts as u64);
-            exp = exp.seed(bumped);
-
-            let cfg_sleeper = exp.cfg.workload.clone();
-            let _ = cfg_sleeper;
-            let result = {
-                let mut factory = exp.sleeper_factory();
-                crate::sim::driver::SimDriver::new(&exp.cfg, &mut p.store)
-                    .run(&mut *factory)?
-            };
-            now += result.total;
-            p.evictions += result.evictions;
-            p.cost += result.total_cost();
-
-            if result.completed || p.attempts >= self.max_attempts {
-                records.push(JobRecord {
-                    id: p.job.id,
-                    name: p.job.name.clone(),
-                    submitted_at: p.submitted_at,
-                    started_at: p.first_start.unwrap(),
-                    finished_at: now,
-                    attempts: p.attempts,
-                    evictions: p.evictions,
-                    completed: result.completed,
-                    cost: p.cost,
-                });
-            } else {
-                queue.push_back(p);
+            // Fill freed slots from the pending queue at this instant.
+            while free_slots > 0 {
+                let Some(i) = pending.pop_front() else { break };
+                free_slots -= 1;
+                let attempt_total =
+                    self.start_attempt(&mut states[i], now, &mut timeline)?;
+                queue.schedule_in(now, attempt_total, SchedEvent::AttemptDone(i));
             }
         }
-        Ok(records)
+
+        Ok((records, timeline))
+    }
+
+    /// Begin one attempt in a slot at `now`: run the experiment (engine,
+    /// virtual time) against the job's persistent share and return the
+    /// attempt's virtual duration.
+    fn start_attempt(
+        &self,
+        state: &mut JobState,
+        now: SimTime,
+        timeline: &mut Timeline,
+    ) -> Result<SimDuration> {
+        state.attempts += 1;
+        if state.first_start.is_none() {
+            state.first_start = Some(now);
+        }
+        timeline.record(
+            now,
+            EventKind::JobStarted,
+            format!("{} attempt {}", state.job.name, state.attempts),
+        );
+
+        let mut exp = state.job.experiment.clone();
+        // In the requeue path, replacements go through the batch queue,
+        // not the scale set: the scheduling delay is the provisioning
+        // delay.
+        exp.cfg.cloud.provisioning_delay = self.requeue_delay;
+        let bumped = exp.cfg.seed.wrapping_add(state.attempts as u64);
+        exp = exp.seed(bumped);
+
+        let result = {
+            let mut factory = exp.sleeper_factory();
+            SimDriver::new(&exp.cfg, &mut state.store).run(&mut *factory)?
+        };
+        state.evictions += result.evictions;
+        state.cost += result.total_cost();
+        state.last_completed = result.completed;
+        Ok(result.total)
     }
 }
 
@@ -227,6 +326,7 @@ mod tests {
         let sched = RequeueScheduler {
             requeue_delay: SimDuration::from_secs(600),
             max_attempts: 4,
+            slots: 1,
         };
         let records = sched.run(vec![job]).unwrap();
         assert_eq!(records.len(), 1);
@@ -253,10 +353,139 @@ mod tests {
         let sched = RequeueScheduler {
             requeue_delay: SimDuration::from_secs(60),
             max_attempts: 2,
+            slots: 1,
         };
         let records = sched.run(vec![job]).unwrap();
         assert_eq!(records.len(), 1);
         assert!(!records[0].completed);
         assert_eq!(records[0].attempts, 2);
+    }
+
+    #[test]
+    fn jobs_interleave_during_requeue_delay() {
+        // Job A is doomed (unprotected, aborts at its 2 h deadline) and
+        // requeues with a 1 h delay; job B is clean. On one slot, B must
+        // run in the slot A freed — during A's requeue wait — instead of
+        // the cluster serializing whole jobs.
+        use crate::metrics::EventKind;
+        let job_a = Job {
+            id: 0,
+            name: "doomed-a".into(),
+            experiment: Experiment::table1()
+                .named("doomed-a")
+                .eviction_every(SimDuration::from_mins(30))
+                .unprotected()
+                .deadline(SimDuration::from_hours(2)),
+        };
+        let job_b = Job {
+            id: 1,
+            name: "clean-b".into(),
+            experiment: Experiment::table1()
+                .named("clean-b")
+                .transparent(SimDuration::from_mins(30)),
+        };
+        let sched = RequeueScheduler {
+            requeue_delay: SimDuration::from_hours(1),
+            max_attempts: 2,
+            slots: 1,
+        };
+        let (records, timeline) =
+            sched.run_with_timeline(vec![job_a, job_b]).unwrap();
+        assert!(timeline.is_monotone());
+        assert_eq!(records.len(), 2);
+        let a = records.iter().find(|r| r.id == 0).unwrap();
+        let b = records.iter().find(|r| r.id == 1).unwrap();
+        assert!(!a.completed);
+        assert_eq!(a.attempts, 2);
+        assert!(b.completed);
+
+        // A's first attempt ends exactly when it is requeued; B starts in
+        // the freed slot at that same instant — strictly inside A's
+        // requeue-delay window, so B makes progress while A waits.
+        let requeued_at = timeline
+            .events()
+            .iter()
+            .find(|e| e.kind == EventKind::JobRequeued)
+            .expect("job A must requeue")
+            .at;
+        assert_eq!(b.started_at, requeued_at);
+        assert!(
+            b.started_at + sched.requeue_delay < b.finished_at,
+            "B's run must span A's whole requeue window"
+        );
+        // B finishes before A's second attempt does
+        assert!(b.finished_at < a.finished_at);
+
+        // A's second attempt starts only when B frees the slot (B's run
+        // outlives the requeue delay), i.e. at B's finish instant.
+        let second_start_a = timeline
+            .events()
+            .iter()
+            .filter(|e| {
+                e.kind == EventKind::JobStarted
+                    && e.detail.starts_with("doomed-a")
+            })
+            .nth(1)
+            .expect("job A runs twice")
+            .at;
+        assert_eq!(second_start_a, b.finished_at);
+    }
+
+    #[test]
+    fn multi_slot_cluster_runs_jobs_concurrently() {
+        let mk = |i: u32| Job {
+            id: i,
+            name: format!("job-{i}"),
+            experiment: Experiment::table1()
+                .named("parallel")
+                .transparent(SimDuration::from_mins(30)),
+        };
+        let sched = RequeueScheduler {
+            requeue_delay: SimDuration::from_secs(300),
+            max_attempts: 4,
+            slots: 2,
+        };
+        let records = sched.run(vec![mk(0), mk(1), mk(2)]).unwrap();
+        assert_eq!(records.len(), 3);
+        assert!(records.iter().all(|r| r.completed));
+        let r = |id: u32| records.iter().find(|r| r.id == id).unwrap();
+        // two slots: jobs 0 and 1 start immediately, job 2 queues
+        assert_eq!(r(0).started_at, SimTime::ZERO);
+        assert_eq!(r(1).started_at, SimTime::ZERO);
+        assert!(r(2).started_at > SimTime::ZERO);
+        // identical jobs: job 2 starts exactly when job 0's slot frees
+        assert_eq!(r(2).started_at, r(0).finished_at);
+        // makespan beats the single-slot serialization of 3 runs
+        let makespan = records
+            .iter()
+            .map(|r| r.finished_at)
+            .max()
+            .unwrap();
+        let single = r(0).turnaround().as_millis() * 3;
+        assert!(
+            makespan.as_millis() < single,
+            "2 slots must beat serialized: {} vs {}",
+            makespan.as_millis(),
+            single
+        );
+    }
+
+    #[test]
+    fn cluster_timeline_records_job_lifecycle() {
+        let job = Job {
+            id: 3,
+            name: "solo".into(),
+            experiment: Experiment::table1()
+                .named("solo")
+                .transparent(SimDuration::from_mins(30)),
+        };
+        let sched = RequeueScheduler::default();
+        let (records, timeline) = sched.run_with_timeline(vec![job]).unwrap();
+        assert_eq!(records.len(), 1);
+        assert_eq!(timeline.count(EventKind::JobSubmitted), 1);
+        assert_eq!(timeline.count(EventKind::JobStarted), 1);
+        assert_eq!(timeline.count(EventKind::JobRequeued), 0);
+        assert_eq!(timeline.count(EventKind::JobFinished), 1);
+        assert!(timeline.is_monotone());
     }
 }

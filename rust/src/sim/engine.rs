@@ -1,0 +1,750 @@
+//! The discrete-event simulation engine.
+//!
+//! One experiment run is a chain of typed [`SimEvent`]s on the
+//! deterministic [`EventQueue`]: the engine pops the earliest event,
+//! advances the [`Clock`] to it, and dispatches to a small per-concern
+//! handler. Handlers never move time themselves — they do their work *at*
+//! the current instant and schedule follow-up events at absolute times
+//! (`queue.schedule`) or after a modeled cost (`queue.schedule_in`), so
+//! every wait the old imperative loop expressed as hand-interleaved
+//! `clock.advance` calls is now an explicit event:
+//!
+//! * provisioning completes → [`SimEvent::InstanceProvisioned`] (from
+//!   [`ScaleSet::replacement_ready_at`], not a blocking advance);
+//! * a restore's transfer cost elapses → [`SimEvent::RestoreDone`];
+//! * a workload step's virtual compute elapses → [`SimEvent::StepDone`];
+//! * a checkpoint write lands → [`SimEvent::CkptDone`] /
+//!   [`SimEvent::TerminationCkptDone`];
+//! * the platform posts a Preempt → [`SimEvent::NoticePosted`], the
+//!   coordinator's poll tick sees it → [`SimEvent::PollTick`] (handled by
+//!   [`crate::coordinator::handlers`]), or nobody reacts and the notice
+//!   expires → [`SimEvent::NoticeDeadline`].
+//!
+//! Every schedule is tracked by its cancellation token; when an instance
+//! dies or the run finishes, the engine cancels that run's pending timers
+//! individually ([`EventQueue::cancel`]) instead of `clear()`-ing the
+//! queue — which is what lets multiple runs (the fleet scheduler in
+//! [`crate::sched`]) share one queue without trampling each other.
+//!
+//! ## Semantics
+//!
+//! The engine reproduces the legacy loop ([`super::legacy`]) **exactly** —
+//! same decisions at the same instants, byte-identical [`RunResult`]s
+//! including `final_fingerprint`, billing and timeline order. The
+//! equivalence suite (`tests/engine_equivalence.rs`) enforces this over
+//! every Table I row and randomized eviction/checkpoint sweeps. Two
+//! deliberate consequences:
+//!
+//! * eviction detection happens at step granularity: the step that would
+//!   cross the detection instant never starts (no partial steps), exactly
+//!   as the legacy loop decided at each step boundary;
+//! * in-flight checkpoint writes are never preempted by a notice — the
+//!   notice reaction begins at the next step boundary, as before.
+
+use super::driver::RunResult;
+use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind, WriteOutcome};
+use crate::cloud::billing::BillingMeter;
+use crate::cloud::eviction::EvictionPlan;
+use crate::cloud::metadata::MetadataService;
+use crate::cloud::pricing::PriceBook;
+use crate::cloud::scale_set::ScaleSet;
+use crate::config::ScenarioConfig;
+use crate::coordinator::handlers::{self, PollReaction};
+use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
+use crate::coordinator::policy::CheckpointPolicy;
+use crate::coordinator::restart::{RestartManager, RestoreReport};
+use crate::metrics::{EventKind, Timeline};
+use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
+use crate::storage::SharedStore;
+use crate::workload::{StepOutcome, Workload};
+use anyhow::{Context, Result};
+
+/// Everything that can happen in a simulated run.
+#[derive(Debug)]
+pub enum SimEvent {
+    /// A (replacement) instance finished provisioning and is Running.
+    InstanceProvisioned,
+    /// The restore transfer from the share finished.
+    RestoreDone { report: RestoreReport },
+    /// The workload sits at a step boundary: decide what happens next
+    /// (abort, periodic checkpoint, eviction reaction, or the next step).
+    BoundaryReached,
+    /// One workload step's virtual compute elapsed; execute it.
+    StepDone,
+    /// A periodic (`periodic == true`) or application-milestone checkpoint
+    /// write finished.
+    CkptDone { periodic: bool, outcome: WriteOutcome },
+    /// The platform posted the Preempt for the current instance.
+    NoticePosted,
+    /// The coordinator's scheduled-events poll tick that surfaces the
+    /// posted notice.
+    PollTick,
+    /// The notice expired with nobody reacting (no coordinator, or the
+    /// poll tick lands after the reclaim instant): the platform kills the
+    /// instance.
+    NoticeDeadline,
+    /// The opportunistic termination checkpoint race finished (committed
+    /// or dead mid-transfer).
+    TerminationCkptDone { outcome: WriteOutcome, notice: Notice },
+    /// The instance is reclaimed.
+    InstanceEvicted,
+}
+
+/// When the platform will post/enforce the eviction of one instance.
+#[derive(Debug, Clone, Copy)]
+struct EvictionSchedule {
+    /// Preempt appears in the scheduled-events document.
+    post: SimTime,
+    /// First coordinator poll tick at/after `post` (== `deadline` when no
+    /// coordinator is attached: nothing ever detects).
+    detect: SimTime,
+    /// `NotBefore`: the platform reclaims at this instant.
+    deadline: SimTime,
+}
+
+/// The currently-running instance.
+#[derive(Debug)]
+struct InstanceCtx {
+    id: String,
+    schedule: Option<EvictionSchedule>,
+}
+
+/// The engine: event queue + clock + run accounting around the same
+/// policy/monitor/restart/writer pieces the real-time coordinator uses.
+pub struct Engine<'a> {
+    cfg: &'a ScenarioConfig,
+    store: &'a mut dyn SharedStore,
+    factory: &'a mut dyn FnMut() -> Result<Box<dyn Workload>>,
+
+    clock: Clock,
+    queue: EventQueue<SimEvent>,
+    /// Cancellation tokens of this run's in-flight events. On a shared
+    /// queue, instance death cancels exactly these — never other runs'.
+    live_tokens: Vec<u64>,
+
+    policy: CheckpointPolicy,
+    billing: BillingMeter,
+    timeline: Timeline,
+    metadata: MetadataService,
+    plan: EvictionPlan,
+    scale_set: ScaleSet,
+    writer: CheckpointWriter,
+    workload: Box<dyn Workload>,
+    monitor: Option<ScheduledEventsMonitor>,
+    inst: Option<InstanceCtx>,
+
+    spoton: bool,
+    overhead_factor: f64,
+    last_ckpt_at: SimTime,
+    completion_at: Vec<Option<SimTime>>,
+    notices: u32,
+    evictions: u32,
+    periodic_ckpts: u32,
+    termination_ok: u32,
+    termination_failed: u32,
+    app_ckpts: u32,
+    restores: u32,
+    lost_steps: u64,
+    max_steps_seen: u64,
+    completed: bool,
+    aborted_reason: Option<String>,
+    finished: bool,
+}
+
+impl<'a> Engine<'a> {
+    /// Build the engine for one scenario (validates the workload against
+    /// the scenario calibration, exactly like the legacy driver did).
+    pub fn new(
+        cfg: &'a ScenarioConfig,
+        store: &'a mut dyn SharedStore,
+        factory: &'a mut dyn FnMut() -> Result<Box<dyn Workload>>,
+    ) -> Result<Self> {
+        let workload = factory().context("building workload")?;
+        let n_stages = workload.num_stages() as usize;
+        if cfg.workload.stage_secs.len() != n_stages {
+            anyhow::bail!(
+                "scenario has {} stage durations but workload has {} stages",
+                cfg.workload.stage_secs.len(),
+                n_stages
+            );
+        }
+        let scale_set = ScaleSet::new(
+            &cfg.cloud.vm_size,
+            cfg.cloud.spot,
+            cfg.cloud.provisioning_delay,
+            PriceBook::default(),
+        )?;
+        let spoton = cfg.coordinator_attached;
+        Ok(Self {
+            policy: CheckpointPolicy::new(cfg.checkpoint.clone()),
+            plan: EvictionPlan::new(cfg.eviction.clone(), cfg.seed),
+            overhead_factor: if spoton {
+                1.0 + cfg.cloud.coordinator_overhead
+            } else {
+                1.0
+            },
+            spoton,
+            clock: Clock::new(),
+            queue: EventQueue::new(),
+            live_tokens: Vec::new(),
+            billing: BillingMeter::new(),
+            timeline: Timeline::new(),
+            metadata: MetadataService::new(),
+            scale_set,
+            writer: CheckpointWriter::new(),
+            completion_at: vec![None; n_stages],
+            workload,
+            monitor: None,
+            inst: None,
+            last_ckpt_at: SimTime::ZERO,
+            notices: 0,
+            evictions: 0,
+            periodic_ckpts: 0,
+            termination_ok: 0,
+            termination_failed: 0,
+            app_ckpts: 0,
+            restores: 0,
+            lost_steps: 0,
+            max_steps_seen: 0,
+            completed: false,
+            aborted_reason: None,
+            finished: false,
+            cfg,
+            store,
+            factory,
+        })
+    }
+
+    /// Run to completion (workload Done) or abort (scenario deadline).
+    pub fn run(mut self) -> Result<RunResult> {
+        self.writer.resume_after(CheckpointStore::max_id(self.store)?);
+        self.schedule(SimTime::ZERO, SimEvent::InstanceProvisioned);
+        while let Some(sch) = self.queue.pop() {
+            self.live_tokens.retain(|&t| t != sch.seq);
+            self.clock.advance_to(sch.at);
+            self.dispatch(sch.event)?;
+            if self.finished {
+                break;
+            }
+        }
+        self.finalize()
+    }
+
+    // ---------------------------------------------------- event plumbing
+
+    fn schedule(&mut self, at: SimTime, event: SimEvent) {
+        let token = self.queue.schedule(at, event);
+        self.live_tokens.push(token);
+    }
+
+    fn schedule_in(&mut self, delay: SimDuration, event: SimEvent) {
+        let now = self.clock.now();
+        let token = self.queue.schedule_in(now, delay, event);
+        self.live_tokens.push(token);
+    }
+
+    /// Drop this run's pending timers (instance death / run end) without
+    /// touching anything else that may share the queue.
+    fn cancel_pending(&mut self) {
+        for token in self.live_tokens.drain(..) {
+            self.queue.cancel(token);
+        }
+    }
+
+    fn dispatch(&mut self, event: SimEvent) -> Result<()> {
+        match event {
+            SimEvent::InstanceProvisioned => self.on_instance_provisioned(),
+            SimEvent::RestoreDone { report } => self.on_restore_done(report),
+            SimEvent::BoundaryReached => self.on_boundary(),
+            SimEvent::StepDone => self.on_step_done(),
+            SimEvent::CkptDone { periodic, outcome } => {
+                self.on_ckpt_done(periodic, outcome)
+            }
+            SimEvent::NoticePosted => self.on_notice_posted(),
+            SimEvent::PollTick => self.on_poll_tick(),
+            SimEvent::NoticeDeadline => self.on_instance_reclaimed(),
+            SimEvent::TerminationCkptDone { outcome, notice } => {
+                self.on_termination_ckpt_done(outcome, notice)
+            }
+            SimEvent::InstanceEvicted => self.on_instance_reclaimed(),
+        }
+    }
+
+    // --------------------------------------------------------- handlers
+
+    /// A fresh instance is Running: record it, derive its eviction
+    /// schedule from the plan, and restore from the share (Spot-on) or
+    /// start over (unprotected).
+    fn on_instance_provisioned(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let inst_id = self.scale_set.launch(now).id.to_string();
+        self.timeline
+            .record(now, EventKind::InstanceLaunch, inst_id.clone());
+        let mut monitor = ScheduledEventsMonitor::new(&inst_id);
+        monitor.reset();
+        self.monitor = Some(monitor);
+
+        let spoton = self.spoton;
+        let notice = self.cfg.cloud.notice;
+        let poll_interval = self.cfg.cloud.poll_interval;
+        let schedule = self.plan.next_eviction_offset().map(|offset| {
+            let post = now + offset;
+            let deadline = post + notice;
+            let detect = if !spoton {
+                // no coordinator: nothing detects; death at deadline
+                deadline
+            } else {
+                // first poll tick at/after the post, ticks measured from
+                // this instance's start
+                let since_start = post.since(now).as_millis();
+                let poll = poll_interval.as_millis().max(1);
+                let ticks = since_start.div_ceil(poll);
+                now + SimDuration::from_millis(ticks * poll)
+            };
+            EvictionSchedule { post, detect, deadline }
+        });
+        self.inst = Some(InstanceCtx { id: inst_id, schedule });
+
+        if self.spoton {
+            match RestartManager::find_and_restore(
+                self.store,
+                &self.policy,
+                self.workload.as_mut(),
+            ) {
+                Ok(Some(report)) => {
+                    let cost = report.cost;
+                    self.schedule_in(cost, SimEvent::RestoreDone { report });
+                    return Ok(());
+                }
+                Ok(None) => {
+                    if self.evictions > 0 {
+                        // unprotected restart: begin from scratch
+                        self.workload = (self.factory)()?;
+                        self.lost_steps += self.max_steps_seen;
+                    }
+                }
+                Err(e) => return Err(e).context("restart"),
+            }
+        } else if self.evictions > 0 {
+            self.workload = (self.factory)()?;
+            self.lost_steps += self.max_steps_seen;
+        }
+
+        self.last_ckpt_at = now;
+        self.schedule(now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    fn on_restore_done(&mut self, report: RestoreReport) -> Result<()> {
+        let now = self.clock.now();
+        self.restores += 1;
+        self.lost_steps += self
+            .max_steps_seen
+            .saturating_sub(report.resumed_total_steps);
+        self.timeline.record(
+            now,
+            EventKind::RestoreFromCheckpoint,
+            format!(
+                "ckpt {} ({}) -> step {}",
+                report.manifest.id,
+                report.manifest.kind.as_str(),
+                report.resumed_total_steps
+            ),
+        );
+        self.last_ckpt_at = now;
+        self.schedule(now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    /// Step boundary: abort on scenario deadline, else take a due periodic
+    /// checkpoint, else either begin the eviction reaction (if the notice
+    /// interrupts the upcoming step) or run the step.
+    fn on_boundary(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        if now.since(SimTime::ZERO) >= self.cfg.deadline {
+            let reason = format!("deadline {} exceeded", self.cfg.deadline);
+            self.scale_set.terminate_current(now, &mut self.billing);
+            self.timeline
+                .record(now, EventKind::Aborted, reason.clone());
+            self.aborted_reason = Some(reason);
+            self.finish();
+            return Ok(());
+        }
+
+        // periodic transparent checkpoint at step boundary
+        if self.spoton && self.policy.periodic_due(now, self.last_ckpt_at) {
+            let snap = self.workload.snapshot()?;
+            let outcome = self.writer.write(
+                self.store,
+                now,
+                CkptKind::Periodic,
+                self.workload.as_ref(),
+                &snap,
+            )?;
+            let cost = outcome.cost(); // workload frozen while dumping
+            self.schedule_in(cost, SimEvent::CkptDone {
+                periodic: true,
+                outcome,
+            });
+            return Ok(());
+        }
+
+        self.decide_step()
+    }
+
+    /// Commit to the next step — or, when the posted notice / reclaim
+    /// instant falls inside it, begin the eviction reaction instead.
+    fn decide_step(&mut self) -> Result<()> {
+        let now = self.clock.now();
+
+        // next step's virtual cost
+        let stage = self.workload.progress().stage as usize;
+        let step_cost = SimDuration::from_secs_f64(
+            self.cfg.workload.stage_secs[stage] as f64
+                / self.workload.stage_steps(stage as u32) as f64
+                * self.overhead_factor,
+        );
+
+        // does the eviction interrupt before this step finishes?
+        if let Some(es) =
+            self.inst.as_ref().and_then(|inst| inst.schedule)
+        {
+            let step_end = now + step_cost;
+            if es.detect <= step_end || es.deadline <= step_end {
+                // the platform's post becomes visible no earlier than the
+                // boundary that observes it (legacy-loop semantics)
+                let post_visible = es.post.max(now);
+                self.schedule(post_visible, SimEvent::NoticePosted);
+                return Ok(());
+            }
+        }
+
+        self.schedule_in(step_cost, SimEvent::StepDone);
+        Ok(())
+    }
+
+    fn on_step_done(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let outcome = self.workload.step()?;
+        self.max_steps_seen = self
+            .max_steps_seen
+            .max(self.workload.progress().total_steps);
+
+        let mut milestone = false;
+        match outcome {
+            StepOutcome::Advanced => {}
+            StepOutcome::Milestone => milestone = true,
+            StepOutcome::StageComplete(s) => {
+                milestone = true;
+                self.completion_at[s as usize] = Some(now);
+                self.timeline.record(
+                    now,
+                    EventKind::StageComplete,
+                    self.workload.stage_label(s),
+                );
+            }
+            StepOutcome::Done => {
+                let s = (self.workload.num_stages() - 1) as usize;
+                self.completion_at[s] = Some(now);
+                self.timeline.record(
+                    now,
+                    EventKind::StageComplete,
+                    self.workload.stage_label(s as u32),
+                );
+                self.timeline.record(
+                    now,
+                    EventKind::WorkloadDone,
+                    format!("{} steps", self.workload.progress().total_steps),
+                );
+                self.completed = true;
+                self.scale_set.terminate_current(now, &mut self.billing);
+                self.finish();
+                return Ok(());
+            }
+        }
+
+        // application milestone checkpoint (the app writes its own files
+        // when app-native checkpointing is enabled)
+        if milestone && self.spoton && self.policy.persists_app_milestones() {
+            if let Some(snap) = self.workload.app_snapshot()? {
+                let outcome = self.writer.write(
+                    self.store,
+                    now,
+                    CkptKind::AppNative,
+                    self.workload.as_ref(),
+                    &snap,
+                )?;
+                let cost = outcome.cost();
+                self.schedule_in(cost, SimEvent::CkptDone {
+                    periodic: false,
+                    outcome,
+                });
+                return Ok(());
+            }
+        }
+
+        self.schedule(now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    fn on_ckpt_done(
+        &mut self,
+        periodic: bool,
+        outcome: WriteOutcome,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        if let Some(manifest) = outcome.committed() {
+            if periodic {
+                self.periodic_ckpts += 1;
+                self.timeline.record(
+                    now,
+                    EventKind::CheckpointCommitted,
+                    format!("periodic ckpt {}", manifest.id),
+                );
+            } else {
+                self.app_ckpts += 1;
+                self.timeline.record(
+                    now,
+                    EventKind::CheckpointCommitted,
+                    format!("application ckpt {}", manifest.id),
+                );
+            }
+        }
+        CheckpointStore::gc(self.store, 3)?;
+        if periodic {
+            self.last_ckpt_at = now;
+            // Legacy-loop shape: after a periodic checkpoint the driver
+            // proceeded straight to the step decision — the scenario
+            // deadline is only re-checked at the next true boundary.
+            self.decide_step()
+        } else {
+            // An application-milestone checkpoint ended the iteration:
+            // back to the full boundary (deadline + periodic checks).
+            self.schedule(now, SimEvent::BoundaryReached);
+            Ok(())
+        }
+    }
+
+    /// The Preempt hits the metadata service. Route to the coordinator's
+    /// poll tick, or — when nothing will react in time — straight to the
+    /// reclaim deadline.
+    fn on_notice_posted(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let (inst_id, es) = {
+            let inst = self
+                .inst
+                .as_ref()
+                .expect("notice events require a live instance");
+            (
+                inst.id.clone(),
+                inst.schedule.expect("notice without an eviction schedule"),
+            )
+        };
+        let detail = self.metadata.post_preempt(&inst_id, es.deadline);
+        self.timeline.record(now, EventKind::EvictionNotice, detail);
+        self.notices += 1;
+
+        if !self.spoton || es.detect >= es.deadline {
+            // nobody reacts in time: death at deadline
+            self.schedule(es.deadline.max(now), SimEvent::NoticeDeadline);
+        } else {
+            self.schedule(es.detect.max(now), SimEvent::PollTick);
+        }
+        Ok(())
+    }
+
+    /// The coordinator's poll tick surfaces the notice; its reaction
+    /// (termination-checkpoint race or immediate ack) lives in
+    /// [`crate::coordinator::handlers`].
+    fn on_poll_tick(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let deadline = self
+            .inst
+            .as_ref()
+            .and_then(|inst| inst.schedule)
+            .expect("poll tick without an eviction schedule")
+            .deadline;
+        let reaction = handlers::on_poll_tick(
+            self.monitor.as_mut().expect("live instance has a monitor"),
+            &mut self.metadata,
+            &self.policy,
+            &mut self.writer,
+            self.store,
+            self.workload.as_ref(),
+            now,
+            deadline,
+        )?;
+        match reaction {
+            PollReaction::TerminationCkpt { notice, outcome } => {
+                let cost = outcome.cost();
+                self.schedule_in(cost, SimEvent::TerminationCkptDone {
+                    outcome,
+                    notice,
+                });
+            }
+            PollReaction::AckOnly => {
+                self.schedule(now, SimEvent::InstanceEvicted);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_termination_ckpt_done(
+        &mut self,
+        outcome: WriteOutcome,
+        notice: Notice,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        if let Some(manifest) = outcome.committed() {
+            self.termination_ok += 1;
+            self.timeline.record(
+                now,
+                EventKind::CheckpointCommitted,
+                format!("termination ckpt {}", manifest.id),
+            );
+        } else {
+            self.termination_failed += 1;
+            self.timeline.record(
+                now,
+                EventKind::CheckpointFailed,
+                "termination ckpt missed deadline",
+            );
+        }
+        handlers::ack_notice(
+            self.monitor.as_ref().expect("live instance has a monitor"),
+            &mut self.metadata,
+            &notice,
+        );
+        self.schedule(now, SimEvent::InstanceEvicted);
+        Ok(())
+    }
+
+    /// The instance dies (notice expiry or post-checkpoint reclaim): bill
+    /// its uptime, drop its pending timers, and schedule the replacement's
+    /// provisioning completion.
+    fn on_instance_reclaimed(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let inst = self
+            .inst
+            .take()
+            .expect("reclaim events require a live instance");
+        self.scale_set.terminate_current(now, &mut self.billing);
+        self.metadata.clear_resource(&inst.id);
+        self.evictions += 1;
+        self.timeline
+            .record(now, EventKind::InstanceEvicted, inst.id);
+        // the dead instance's timers die with it — cancel by token, never
+        // clear(): other runs may share this queue
+        self.cancel_pending();
+        let ready = self.scale_set.replacement_ready_at(now);
+        self.schedule(ready, SimEvent::InstanceProvisioned);
+        Ok(())
+    }
+
+    // ------------------------------------------------------- run ending
+
+    fn finish(&mut self) {
+        self.finished = true;
+        self.cancel_pending();
+    }
+
+    fn finalize(mut self) -> Result<RunResult> {
+        // ---- storage billing over the whole run ----
+        let total = self.clock.now().since(SimTime::ZERO);
+        if self.spoton && self.policy.protected() {
+            self.billing.book_storage(
+                "nfs-share",
+                self.cfg.storage.provisioned_gib,
+                total,
+                self.cfg.storage.price_per_100gib_month,
+            );
+        }
+
+        // ---- stage durations from final completion times ----
+        let mut stage_times = Vec::new();
+        let mut prev = SimTime::ZERO;
+        for (i, at) in self.completion_at.iter().enumerate() {
+            if let Some(t) = at {
+                stage_times.push((
+                    self.workload.stage_label(i as u32),
+                    t.since(prev),
+                ));
+                prev = *t;
+            }
+        }
+
+        if let Some(reason) = &self.aborted_reason {
+            log::warn!("{}: {reason}", self.cfg.name);
+        }
+
+        Ok(RunResult {
+            scenario: self.cfg.name.clone(),
+            completed: self.completed,
+            stage_times,
+            total,
+            notices: self.notices,
+            evictions: self.evictions,
+            instances: self.scale_set.launched(),
+            periodic_ckpts: self.periodic_ckpts,
+            termination_ok: self.termination_ok,
+            termination_failed: self.termination_failed,
+            app_ckpts: self.app_ckpts,
+            restores: self.restores,
+            lost_steps: self.lost_steps,
+            compute_cost: self.billing.compute_total(),
+            storage_cost: self.billing.storage_total(),
+            invoice: self.billing.invoice(),
+            timeline: self.timeline,
+            final_fingerprint: self.workload.fingerprint(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::experiment::Experiment;
+
+    #[test]
+    fn engine_smoke_row5() {
+        // Full engine path through the public facade: Table I row 5.
+        let r = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(90))
+            .transparent(SimDuration::from_mins(30))
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed);
+        assert_eq!(r.evictions, 2);
+        assert_eq!(r.instances, 3);
+        assert!(r.timeline.is_monotone());
+    }
+
+    #[test]
+    fn engine_leaves_no_dangling_events() {
+        // After a completed run every scheduled token was either popped or
+        // cancelled — the queue the engine leaves behind is empty.
+        let exp = Experiment::table1()
+            .eviction_every(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(15));
+        let mut store = crate::storage::BlobStore::for_tests();
+        let mut factory = exp.sleeper_factory();
+        let mut engine =
+            Engine::new(&exp.cfg, &mut store, &mut *factory).unwrap();
+        engine.writer.resume_after(None);
+        engine
+            .queue
+            .schedule(SimTime::ZERO, SimEvent::InstanceProvisioned);
+        loop {
+            let Some(sch) = engine.queue.pop() else { break };
+            engine.live_tokens.retain(|&t| t != sch.seq);
+            engine.clock.advance_to(sch.at);
+            engine.dispatch(sch.event).unwrap();
+            if engine.finished {
+                break;
+            }
+        }
+        assert!(engine.finished);
+        assert!(engine.queue.is_empty(), "stale events left behind");
+        assert!(engine.live_tokens.is_empty());
+    }
+}

@@ -135,6 +135,18 @@ impl Experiment {
         }
     }
 
+    /// A fresh in-memory share built from this scenario's storage config —
+    /// exactly the store [`Experiment::run_with_factory`] runs against.
+    /// Exposed so the equivalence oracle, benches and the requeue
+    /// scheduler construct byte-identical substrates instead of
+    /// re-deriving the transfer model by hand.
+    pub fn fresh_store(&self) -> BlobStore {
+        BlobStore::new(
+            self.transfer_model(),
+            Some(self.cfg.storage.provisioned_gib),
+        )
+    }
+
     fn sleeper_cfg(&self) -> SleeperCfg {
         let w = &self.cfg.workload;
         SleeperCfg {
@@ -167,10 +179,7 @@ impl Experiment {
         &self,
         factory: &mut dyn FnMut() -> Result<Box<dyn Workload>>,
     ) -> Result<RunResult> {
-        let mut store = BlobStore::new(
-            self.transfer_model(),
-            Some(self.cfg.storage.provisioned_gib),
-        );
+        let mut store = self.fresh_store();
         SimDriver::new(&self.cfg, &mut store).run(factory)
     }
 

@@ -1,0 +1,388 @@
+//! The original monolithic driver loop, kept verbatim as the frozen
+//! reference semantics for the event-driven engine.
+//!
+//! [`run_reference`] is the pre-refactor `SimDriver::run` body: one
+//! ~300-line imperative loop with hand-interleaved time math. It is
+//! **not** called by any production path — [`super::engine`] is — but the
+//! equivalence suite (`tests/engine_equivalence.rs`) replays every
+//! scenario through both and asserts identical [`RunResult`]s, including
+//! `final_fingerprint`, costs and timeline ordering. Do not "fix" or
+//! extend this file: its value is that it does not change. New behavior
+//! goes in the engine, where the equivalence suite will flag any
+//! unintended divergence from these semantics.
+
+use super::driver::RunResult;
+use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind};
+use crate::cloud::billing::BillingMeter;
+use crate::cloud::eviction::EvictionPlan;
+use crate::cloud::metadata::MetadataService;
+use crate::cloud::pricing::PriceBook;
+use crate::cloud::scale_set::ScaleSet;
+use crate::config::ScenarioConfig;
+use crate::coordinator::monitor::ScheduledEventsMonitor;
+use crate::coordinator::policy::CheckpointPolicy;
+use crate::coordinator::restart::RestartManager;
+use crate::metrics::{EventKind, Timeline};
+use crate::simclock::{Clock, SimDuration, SimTime};
+use crate::storage::SharedStore;
+use crate::workload::{StepOutcome, Workload};
+use anyhow::{Context, Result};
+
+/// Run one scenario with the legacy imperative loop. Semantics are the
+/// contract the event-driven engine must reproduce bit-for-bit.
+pub fn run_reference(
+    cfg: &ScenarioConfig,
+    store: &mut dyn SharedStore,
+    factory: &mut dyn FnMut() -> Result<Box<dyn Workload>>,
+) -> Result<RunResult> {
+    let policy = CheckpointPolicy::new(cfg.checkpoint.clone());
+    let mut clock = Clock::new();
+    let mut billing = BillingMeter::new();
+    let mut timeline = Timeline::new();
+    let mut metadata = MetadataService::new();
+    let mut plan = EvictionPlan::new(cfg.eviction.clone(), cfg.seed);
+    let mut scale_set = ScaleSet::new(
+        &cfg.cloud.vm_size,
+        cfg.cloud.spot,
+        cfg.cloud.provisioning_delay,
+        PriceBook::default(),
+    )?;
+    let mut writer = CheckpointWriter::new();
+    writer.resume_after(CheckpointStore::max_id(store)?);
+
+    let mut workload = factory().context("building workload")?;
+    let n_stages = workload.num_stages() as usize;
+    if cfg.workload.stage_secs.len() != n_stages {
+        anyhow::bail!(
+            "scenario has {} stage durations but workload has {} stages",
+            cfg.workload.stage_secs.len(),
+            n_stages
+        );
+    }
+    let overhead_factor = if cfg.coordinator_attached {
+        1.0 + cfg.cloud.coordinator_overhead
+    } else {
+        1.0
+    };
+    let spoton = cfg.coordinator_attached;
+
+    // final completion time per stage (re-completions overwrite)
+    let mut completion_at: Vec<Option<SimTime>> = vec![None; n_stages];
+
+    let mut notices = 0u32;
+    let mut evictions = 0u32;
+    let mut periodic_ckpts = 0u32;
+    let mut termination_ok = 0u32;
+    let mut termination_failed = 0u32;
+    let mut app_ckpts = 0u32;
+    let mut restores = 0u32;
+    let mut lost_steps = 0u64;
+    let mut max_steps_seen = 0u64;
+    let mut completed = false;
+    let mut aborted_reason: Option<String> = None;
+
+    'instances: loop {
+        // ---- launch (replacements pay the provisioning delay) ----
+        if scale_set.launched() > 0 {
+            clock.advance(scale_set.provisioning_delay());
+        }
+        let inst_id = scale_set.launch(clock.now()).id;
+        let inst_start = clock.now();
+        timeline.record(
+            clock.now(),
+            EventKind::InstanceLaunch,
+            inst_id.to_string(),
+        );
+        let mut monitor = ScheduledEventsMonitor::new(&inst_id.to_string());
+        monitor.reset();
+
+        // ---- eviction schedule for this instance ----
+        // The plan posts the Preempt at `offset` of uptime; the
+        // platform will reclaim at notice expiry.
+        let notice_post_at =
+            plan.next_eviction_offset().map(|o| inst_start + o);
+        let deadline = notice_post_at.map(|t| t + cfg.cloud.notice);
+        // Coordinator detects at its next poll tick after the post.
+        let detect_at = notice_post_at.map(|post| {
+            if !spoton {
+                // no coordinator: nothing detects; death at deadline
+                return post + cfg.cloud.notice;
+            }
+            let since_start = post.since(inst_start).as_millis();
+            let poll = cfg.cloud.poll_interval.as_millis().max(1);
+            let ticks = since_start.div_ceil(poll);
+            inst_start + SimDuration::from_millis(ticks * poll)
+        });
+
+        // ---- restart from the share ----
+        if spoton {
+            match RestartManager::find_and_restore(
+                store,
+                &policy,
+                workload.as_mut(),
+            ) {
+                Ok(Some(report)) => {
+                    clock.advance(report.cost);
+                    restores += 1;
+                    lost_steps += max_steps_seen
+                        .saturating_sub(report.resumed_total_steps);
+                    timeline.record(
+                        clock.now(),
+                        EventKind::RestoreFromCheckpoint,
+                        format!(
+                            "ckpt {} ({}) -> step {}",
+                            report.manifest.id,
+                            report.manifest.kind.as_str(),
+                            report.resumed_total_steps
+                        ),
+                    );
+                }
+                Ok(None) => {
+                    if evictions > 0 {
+                        // unprotected restart: begin from scratch
+                        workload = factory()?;
+                        lost_steps += max_steps_seen;
+                    }
+                }
+                Err(e) => return Err(e).context("restart"),
+            }
+        } else if evictions > 0 {
+            workload = factory()?;
+            lost_steps += max_steps_seen;
+        }
+
+        let mut last_ckpt_at = clock.now();
+
+        // ---- drive the workload on this instance ----
+        loop {
+            if clock.now().since(SimTime::ZERO) >= cfg.deadline {
+                aborted_reason = Some(format!(
+                    "deadline {} exceeded",
+                    cfg.deadline
+                ));
+                scale_set.terminate_current(clock.now(), &mut billing);
+                timeline.record(
+                    clock.now(),
+                    EventKind::Aborted,
+                    aborted_reason.clone().unwrap(),
+                );
+                break 'instances;
+            }
+
+            // periodic transparent checkpoint at step boundary
+            if spoton && policy.periodic_due(clock.now(), last_ckpt_at) {
+                let snap = workload.snapshot()?;
+                let out = writer.write(
+                    store,
+                    clock.now(),
+                    CkptKind::Periodic,
+                    workload.as_ref(),
+                    &snap,
+                )?;
+                clock.advance(out.cost()); // freeze while dumping
+                if let Some(m) = out.committed() {
+                    periodic_ckpts += 1;
+                    timeline.record(
+                        clock.now(),
+                        EventKind::CheckpointCommitted,
+                        format!("periodic ckpt {}", m.id),
+                    );
+                }
+                CheckpointStore::gc(store, 3)?;
+                last_ckpt_at = clock.now();
+            }
+
+            // next step's virtual cost
+            let stage = workload.progress().stage as usize;
+            let step_cost = SimDuration::from_secs_f64(
+                cfg.workload.stage_secs[stage] as f64
+                    / workload.stage_steps(stage as u32) as f64
+                    * overhead_factor,
+            );
+
+            // does the eviction interrupt before this step finishes?
+            if let (Some(post), Some(detect), Some(dl)) =
+                (notice_post_at, detect_at, deadline)
+            {
+                let step_end = clock.now() + step_cost;
+                if detect <= step_end || dl <= step_end {
+                    // the platform posts the notice...
+                    let post_visible = post.max(clock.now());
+                    timeline.record(
+                        post_visible,
+                        EventKind::EvictionNotice,
+                        metadata.post_preempt(&inst_id.to_string(), dl),
+                    );
+                    notices += 1;
+
+                    let term_at;
+                    if !spoton || detect >= dl {
+                        // nobody reacts in time: death at deadline
+                        clock.advance_to(dl.max(clock.now()));
+                        term_at = clock.now();
+                    } else {
+                        clock.advance_to(detect.max(clock.now()));
+                        // coordinator sees the Preempt
+                        let notice = monitor
+                            .poll_inproc(&metadata)?
+                            .context("notice must be visible")?;
+                        if policy.takes_termination_checkpoint() {
+                            let budget = dl.since(clock.now());
+                            let snap = workload.snapshot()?;
+                            let out = writer.write_with_budget(
+                                store,
+                                clock.now(),
+                                CkptKind::Termination,
+                                workload.as_ref(),
+                                &snap,
+                                Some(budget),
+                            )?;
+                            clock.advance(out.cost());
+                            if let Some(m) = out.committed() {
+                                termination_ok += 1;
+                                timeline.record(
+                                    clock.now(),
+                                    EventKind::CheckpointCommitted,
+                                    format!("termination ckpt {}", m.id),
+                                );
+                            } else {
+                                termination_failed += 1;
+                                timeline.record(
+                                    clock.now(),
+                                    EventKind::CheckpointFailed,
+                                    "termination ckpt missed deadline",
+                                );
+                            }
+                        }
+                        monitor.ack_inproc(&mut metadata, &notice.event_id);
+                        term_at = clock.now();
+                    }
+
+                    scale_set.terminate_current(term_at, &mut billing);
+                    metadata.clear_resource(&inst_id.to_string());
+                    evictions += 1;
+                    timeline.record(
+                        term_at,
+                        EventKind::InstanceEvicted,
+                        inst_id.to_string(),
+                    );
+                    continue 'instances;
+                }
+            }
+
+            // run the step (real compute)
+            clock.advance(step_cost);
+            let outcome = workload.step()?;
+            max_steps_seen =
+                max_steps_seen.max(workload.progress().total_steps);
+
+            let mut milestone = false;
+            match outcome {
+                StepOutcome::Advanced => {}
+                StepOutcome::Milestone => milestone = true,
+                StepOutcome::StageComplete(s) => {
+                    milestone = true;
+                    completion_at[s as usize] = Some(clock.now());
+                    timeline.record(
+                        clock.now(),
+                        EventKind::StageComplete,
+                        workload.stage_label(s),
+                    );
+                }
+                StepOutcome::Done => {
+                    let s = (workload.num_stages() - 1) as usize;
+                    completion_at[s] = Some(clock.now());
+                    timeline.record(
+                        clock.now(),
+                        EventKind::StageComplete,
+                        workload.stage_label(s as u32),
+                    );
+                    timeline.record(
+                        clock.now(),
+                        EventKind::WorkloadDone,
+                        format!(
+                            "{} steps",
+                            workload.progress().total_steps
+                        ),
+                    );
+                    completed = true;
+                    scale_set.terminate_current(clock.now(), &mut billing);
+                    break 'instances;
+                }
+            }
+
+            // application milestone checkpoint (the app writes its own
+            // files when app-native checkpointing is enabled)
+            if milestone && spoton && policy.persists_app_milestones() {
+                if let Some(snap) = workload.app_snapshot()? {
+                    let out = writer.write(
+                        store,
+                        clock.now(),
+                        CkptKind::AppNative,
+                        workload.as_ref(),
+                        &snap,
+                    )?;
+                    clock.advance(out.cost());
+                    if let Some(m) = out.committed() {
+                        app_ckpts += 1;
+                        timeline.record(
+                            clock.now(),
+                            EventKind::CheckpointCommitted,
+                            format!("application ckpt {}", m.id),
+                        );
+                    }
+                    CheckpointStore::gc(store, 3)?;
+                }
+            }
+        }
+    }
+
+    // ---- storage billing over the whole run ----
+    let total = clock.now().since(SimTime::ZERO);
+    if spoton && policy.protected() {
+        billing.book_storage(
+            "nfs-share",
+            cfg.storage.provisioned_gib,
+            total,
+            cfg.storage.price_per_100gib_month,
+        );
+    }
+
+    // ---- stage durations from final completion times ----
+    let mut stage_times = Vec::new();
+    let mut prev = SimTime::ZERO;
+    for (i, at) in completion_at.iter().enumerate() {
+        if let Some(t) = at {
+            stage_times.push((
+                workload.stage_label(i as u32),
+                t.since(prev),
+            ));
+            prev = *t;
+        }
+    }
+
+    if let Some(reason) = aborted_reason {
+        log::warn!("{}: {reason}", cfg.name);
+    }
+
+    Ok(RunResult {
+        scenario: cfg.name.clone(),
+        completed,
+        stage_times,
+        total,
+        notices,
+        evictions,
+        instances: scale_set.launched(),
+        periodic_ckpts,
+        termination_ok,
+        termination_failed,
+        app_ckpts,
+        restores,
+        lost_steps,
+        compute_cost: billing.compute_total(),
+        storage_cost: billing.storage_total(),
+        invoice: billing.invoice(),
+        timeline,
+        final_fingerprint: workload.fingerprint(),
+    })
+}

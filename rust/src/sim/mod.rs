@@ -1,17 +1,27 @@
 //! Virtual-time experiment harness.
 //!
-//! [`driver`] runs one scenario end to end on the discrete-event clock:
-//! the workload really computes (PJRT for MiniMeta), while eviction
-//! notices, checkpoint transfers, instance provisioning and billing are
-//! charged in virtual time calibrated so an uninterrupted run reproduces
-//! the paper's Table I row-1 stage durations (DESIGN.md §6).
+//! The core is a discrete-event engine ([`engine`]): every run is a chain
+//! of typed [`engine::SimEvent`]s — step completions, checkpoint commits,
+//! eviction notices, poll ticks, provisioning completions — on the
+//! deterministic `simclock::EventQueue`. The workload really computes
+//! (PJRT for MiniMeta) while its time is charged virtually, calibrated so
+//! an uninterrupted run reproduces the paper's Table I row-1 stage
+//! durations (DESIGN.md §6).
 //!
-//! [`experiment`] is the builder/preset layer the benches and examples
-//! use: `Experiment::table1().eviction_every(90 min).transparent(30 min)`
-//! is the paper's Table I row 5.
+//! * [`driver`] — the stable facade ([`SimDriver`], [`RunResult`]) every
+//!   bench, test and example drives.
+//! * [`engine`] — the event loop + per-concern handlers.
+//! * [`legacy`] — the pre-refactor imperative loop, frozen as the oracle
+//!   for `tests/engine_equivalence.rs`.
+//! * [`experiment`] — the builder/preset layer:
+//!   `Experiment::table1().eviction_every(90 min).transparent(30 min)` is
+//!   the paper's Table I row 5.
 
 pub mod driver;
+pub mod engine;
 pub mod experiment;
+pub mod legacy;
 
 pub use driver::{RunResult, SimDriver};
+pub use engine::SimEvent;
 pub use experiment::Experiment;

@@ -9,7 +9,11 @@
 //!
 //! [`SimTime`]/[`SimDuration`] are millisecond-resolution fixed-point
 //! values; [`EventQueue`] is a deterministic priority queue (ties broken by
-//! insertion sequence, so identical seeds give identical timelines).
+//! insertion sequence, so identical seeds give identical timelines) with
+//! relative scheduling (`schedule_in`) and per-event cancellation tokens.
+//! It is the spine of the whole simulator: [`crate::sim::engine`] runs
+//! every experiment as typed events on it, and [`crate::sched`]'s
+//! multi-slot requeue scheduler interleaves whole jobs on a shared one.
 
 mod queue;
 

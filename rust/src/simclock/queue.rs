@@ -4,10 +4,17 @@
 //! events scheduled for the same instant fire in scheduling order, which
 //! makes whole-experiment timelines reproducible byte-for-byte from a seed
 //! (a property the determinism tests and the resume invariant rely on).
+//!
+//! Every `schedule` returns a **token** (the sequence id) that can later
+//! be passed to [`EventQueue::cancel`]. Cancellation is lazy — tombstoned
+//! entries are skipped at pop time — so dropping one instance's pending
+//! timers never disturbs other instances' (or other jobs') events the way
+//! [`EventQueue::clear`] would. This is what lets the simulation engine
+//! and the multi-slot scheduler share one queue.
 
-use super::SimTime;
+use super::{SimDuration, SimTime};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 /// An event of type `E` scheduled at a virtual instant.
 #[derive(Debug, Clone)]
@@ -40,11 +47,13 @@ impl<E> PartialOrd for Scheduled<E> {
     }
 }
 
-/// Event queue with deterministic ordering.
+/// Event queue with deterministic ordering and token cancellation.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
     next_seq: u64,
+    /// Sequence ids still live (scheduled, not yet popped or cancelled).
+    pending: HashSet<u64>,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -55,39 +64,80 @@ impl<E> Default for EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), next_seq: 0 }
+        Self {
+            heap: BinaryHeap::new(),
+            next_seq: 0,
+            pending: HashSet::new(),
+        }
     }
 
-    /// Schedule `event` at absolute time `at`; returns its sequence id.
+    /// Schedule `event` at absolute time `at`; returns its cancellation
+    /// token (the sequence id).
     pub fn schedule(&mut self, at: SimTime, event: E) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Scheduled { at, seq, event });
+        self.pending.insert(seq);
         seq
     }
 
-    /// Time of the next event, if any.
-    pub fn peek_time(&self) -> Option<SimTime> {
+    /// Schedule `event` `delay` after `now` (the common handler idiom:
+    /// "this completes after its modeled cost").
+    pub fn schedule_in(
+        &mut self,
+        now: SimTime,
+        delay: SimDuration,
+        event: E,
+    ) -> u64 {
+        self.schedule(now + delay, event)
+    }
+
+    /// Cancel a previously scheduled event by token. Returns whether the
+    /// event was still pending (false: already fired or already
+    /// cancelled). O(1); the entry is dropped lazily at pop time.
+    pub fn cancel(&mut self, token: u64) -> bool {
+        self.pending.remove(&token)
+    }
+
+    /// Drop any cancelled entries sitting on top of the heap.
+    fn purge_top(&mut self) {
+        while let Some(top) = self.heap.peek() {
+            if self.pending.contains(&top.seq) {
+                return;
+            }
+            self.heap.pop();
+        }
+    }
+
+    /// Time of the next (live) event, if any.
+    pub fn peek_time(&mut self) -> Option<SimTime> {
+        self.purge_top();
         self.heap.peek().map(|s| s.at)
     }
 
-    /// Pop the earliest event.
+    /// Pop the earliest live event.
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
-        self.heap.pop()
+        self.purge_top();
+        let s = self.heap.pop()?;
+        self.pending.remove(&s.seq);
+        Some(s)
     }
 
+    /// Number of live (non-cancelled) events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.pending.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.pending.is_empty()
     }
 
-    /// Drop all pending events (e.g. when an instance dies, its timers go
-    /// with it).
+    /// Drop all pending events. Prefer [`EventQueue::cancel`] with the
+    /// tokens you own when the queue is shared — `clear` nukes everyone's
+    /// timers, not just yours.
     pub fn clear(&mut self) {
         self.heap.clear();
+        self.pending.clear();
     }
 }
 
@@ -140,6 +190,65 @@ mod tests {
     }
 
     #[test]
+    fn schedule_in_is_relative() {
+        let mut q = EventQueue::new();
+        let now = SimTime::from_secs(100);
+        q.schedule_in(now, SimDuration::from_secs(5), "later");
+        q.schedule_in(now, SimDuration::ZERO, "now");
+        let first = q.pop().unwrap();
+        assert_eq!(first.event, "now");
+        assert_eq!(first.at, now);
+        let second = q.pop().unwrap();
+        assert_eq!(second.event, "later");
+        assert_eq!(second.at, SimTime::from_secs(105));
+    }
+
+    #[test]
+    fn cancel_drops_only_the_target() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(SimTime::from_secs(1), "a");
+        let b = q.schedule(SimTime::from_secs(2), "b");
+        let c = q.schedule(SimTime::from_secs(3), "c");
+        assert_eq!(q.len(), 3);
+        assert!(q.cancel(b));
+        assert_eq!(q.len(), 2);
+        // cancelling twice (or a popped/unknown token) is a no-op
+        assert!(!q.cancel(b));
+        assert!(!q.cancel(9999));
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event))
+            .collect();
+        assert_eq!(order, ["a", "c"]);
+        // tokens of popped events are dead
+        assert!(!q.cancel(a));
+        assert!(!q.cancel(c));
+    }
+
+    #[test]
+    fn cancelled_head_is_skipped_by_peek_and_pop() {
+        let mut q = EventQueue::new();
+        let head = q.schedule(SimTime::from_secs(1), "head");
+        q.schedule(SimTime::from_secs(2), "tail");
+        q.cancel(head);
+        assert_eq!(q.peek_time(), Some(SimTime::from_secs(2)));
+        assert_eq!(q.pop().unwrap().event, "tail");
+        assert!(q.is_empty());
+        assert_eq!(q.peek_time(), None);
+    }
+
+    #[test]
+    fn cancel_everything_leaves_empty_queue() {
+        let mut q = EventQueue::new();
+        let tokens: Vec<u64> =
+            (0..5).map(|i| q.schedule(SimTime::from_secs(i), i)).collect();
+        for t in tokens {
+            assert!(q.cancel(t));
+        }
+        assert!(q.is_empty());
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
     fn prop_pop_order_is_sorted_and_stable() {
         // Property: popping yields (time, seq) in nondecreasing time order,
         // and among equal times, increasing seq.
@@ -167,6 +276,55 @@ mod tests {
                         }
                     }
                     prev = Some((s.at, s.seq));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_cancellation_preserves_order_of_survivors() {
+        // Schedule N events, cancel a pseudo-random subset, verify the
+        // survivors pop in exactly the order they would have anyway.
+        forall(
+            Config::default().cases(100),
+            |rng| {
+                let n = rng.range_u64(0, 30);
+                (0..n)
+                    .map(|_| (rng.below(10), rng.chance(0.4)))
+                    .collect::<Vec<(u64, bool)>>()
+            },
+            shrinks_vec,
+            |plan| {
+                let mut q = EventQueue::new();
+                let mut keep = Vec::new();
+                let mut tokens = Vec::new();
+                for (i, &(t, _)) in plan.iter().enumerate() {
+                    tokens.push(q.schedule(SimTime::from_secs(t), i));
+                }
+                for (i, &(t, cancel)) in plan.iter().enumerate() {
+                    if cancel {
+                        if !q.cancel(tokens[i]) {
+                            return Err("live token refused cancel".into());
+                        }
+                    } else {
+                        keep.push((t, i));
+                    }
+                }
+                keep.sort();
+                if q.len() != keep.len() {
+                    return Err(format!(
+                        "len {} != survivors {}",
+                        q.len(),
+                        keep.len()
+                    ));
+                }
+                let got: Vec<(u64, usize)> =
+                    std::iter::from_fn(|| q.pop())
+                        .map(|s| (s.at.as_secs(), s.event))
+                        .collect();
+                if got != keep {
+                    return Err(format!("order {got:?} != {keep:?}"));
                 }
                 Ok(())
             },

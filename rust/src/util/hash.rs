@@ -1,0 +1,224 @@
+//! In-repo digest primitives: SHA-256, CRC32 (IEEE) and Adler-32.
+//!
+//! The offline build environment vendors no hashing crates, so — like the
+//! PRNG and the property-test framework — the digests the checkpoint
+//! engine depends on are implemented here at the size this project needs.
+//! All three are verified against published test vectors in the unit
+//! tests below; SHA-256 follows FIPS 180-4, CRC32 is the reflected IEEE
+//! polynomial (the one zlib/PNG use), Adler-32 is RFC 1950's checksum
+//! (used by [`super::zlib`]).
+
+/// SHA-256 round constants: frac(cbrt(p)) * 2^32 for the first 64 primes.
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5,
+    0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+    0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc,
+    0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+    0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+    0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3,
+    0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5,
+    0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+    0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+/// Initial hash state: frac(sqrt(p)) * 2^32 for the first 8 primes.
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a,
+    0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+/// One FIPS 180-4 compression round over a 64-byte block.
+fn compress_block(h: &mut [u32; 8], block: &[u8]) {
+    let mut w = [0u32; 64];
+    for (i, word) in block.chunks_exact(4).enumerate() {
+        w[i] = u32::from_be_bytes([word[0], word[1], word[2], word[3]]);
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7)
+            ^ w[i - 15].rotate_right(18)
+            ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17)
+            ^ w[i - 2].rotate_right(19)
+            ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh] = *h;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = hh
+            .wrapping_add(s1)
+            .wrapping_add(ch)
+            .wrapping_add(K[i])
+            .wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        hh = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    for (s, v) in h.iter_mut().zip([a, b, c, d, e, f, g, hh]) {
+        *s = s.wrapping_add(v);
+    }
+}
+
+/// SHA-256 digest of a byte slice. Streams the input block by block —
+/// checkpoint payloads are hashed on every write, so the digest must not
+/// allocate a second copy of the payload.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    let mut h = H0;
+    for block in data.chunks_exact(64) {
+        compress_block(&mut h, block);
+    }
+
+    // FIPS 180-4 padding for the tail: 0x80, zeros, then the 64-bit
+    // big-endian bit length — one final block, or two when the tail
+    // leaves fewer than 8 spare bytes.
+    let rem = data.len() % 64;
+    let tail = &data[data.len() - rem..];
+    let mut buf = [0u8; 128];
+    buf[..rem].copy_from_slice(tail);
+    buf[rem] = 0x80;
+    let total = if rem < 56 { 64 } else { 128 };
+    let bit_len = (data.len() as u64).wrapping_mul(8);
+    buf[total - 8..total].copy_from_slice(&bit_len.to_be_bytes());
+    for block in buf[..total].chunks_exact(64) {
+        compress_block(&mut h, block);
+    }
+
+    let mut out = [0u8; 32];
+    for (chunk, word) in out.chunks_exact_mut(4).zip(h) {
+        chunk.copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+/// Reflected-IEEE CRC32 lookup table (polynomial 0xEDB88320).
+const CRC_TABLE: [u32; 256] = build_crc_table();
+
+const fn build_crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ 0xEDB8_8320 } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// CRC32 (IEEE, reflected — the zlib/PNG variant).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = u32::MAX;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ u32::MAX
+}
+
+/// Adler-32 (RFC 1950), the zlib stream checksum.
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let mut a: u32 = 1;
+    let mut b: u32 = 0;
+    // Deferred modulo: 5552 is the largest n with worst-case sums in u32.
+    for chunk in data.chunks(5552) {
+        for &byte in chunk {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_fips_vectors() {
+        let hex = |d: [u8; 32]| crate::util::hex(&d);
+        assert_eq!(
+            hex(sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(sha256(
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"
+            )),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn sha256_padding_boundaries() {
+        // Each length crosses a different padding case (55/56/63/64/65).
+        let known = [
+            (55usize,
+             "9f4390f8d30c2dd92ec9f095b65e2b9ae9b0a925a5258e241c9f1e910f734318"),
+            (56,
+             "b35439a4ac6f0948b6d6f9e3c6af0f5f590ce20f1bde7090ef7970686ec6738a"),
+            (63,
+             "7d3e74a05d7db15bce4ad9ec0658ea98e3f06eeecf16b4c6fff2da457ddc2f34"),
+            (64,
+             "ffe054fe7ae0cb6dc65c3af9b61d5209f439851db43d0ba5997337df154668eb"),
+            (65,
+             "635361c48bb9eab14198e76ea8ab7f1a41685d6ad62aa9146d301d4f17eb0ae0"),
+        ];
+        for (n, want) in known {
+            assert_eq!(crate::util::hex(&sha256(&vec![b'a'; n])), want, "len {n}");
+        }
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+                   0x414FA339);
+    }
+
+    #[test]
+    fn adler32_known_vectors() {
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"Wikipedia"), 0x11E60398);
+        // chunked path (> 5552 bytes) matches the naive definition
+        let big = vec![0xABu8; 20_000];
+        let naive = {
+            let (mut a, mut b) = (1u64, 0u64);
+            for &byte in &big {
+                a = (a + byte as u64) % 65521;
+                b = (b + a) % 65521;
+            }
+            ((b << 16) | a) as u32
+        };
+        assert_eq!(adler32(&big), naive);
+    }
+}

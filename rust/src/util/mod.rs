@@ -1,14 +1,18 @@
 //! Small self-contained utilities shared across the crate.
 //!
 //! The offline build environment vendors only the `xla` crate's dependency
-//! closure, so the usual ecosystem crates (rand, humantime, proptest, …)
-//! are re-implemented here at the size this project needs.
+//! closure, so the usual ecosystem crates (rand, humantime, proptest,
+//! sha2, flate2, …) are re-implemented here at the size this project
+//! needs: [`prng`], [`proptest`], [`hash`] (SHA-256 / CRC32 / Adler-32)
+//! and [`zlib`] (checkpoint payload compression).
 
 pub mod prng;
 pub mod fmt;
 pub mod proptest;
 pub mod wire;
 pub mod bench;
+pub mod hash;
+pub mod zlib;
 
 pub use prng::Prng;
 
@@ -33,17 +37,12 @@ pub fn hex(bytes: &[u8]) -> String {
 
 /// SHA-256 of a byte slice, hex-encoded.
 pub fn sha256_hex(bytes: &[u8]) -> String {
-    use sha2::{Digest, Sha256};
-    let mut h = Sha256::new();
-    h.update(bytes);
-    hex(&h.finalize())
+    hex(&hash::sha256(bytes))
 }
 
 /// CRC32 of a byte slice (fast integrity check for checkpoint payloads).
 pub fn crc32(bytes: &[u8]) -> u32 {
-    let mut h = crc32fast::Hasher::new();
-    h.update(bytes);
-    h.finalize()
+    hash::crc32(bytes)
 }
 
 #[cfg(test)]

@@ -1,0 +1,503 @@
+//! Minimal zlib (RFC 1950/1951) codec for checkpoint payloads.
+//!
+//! The compressor emits a single fixed-Huffman DEFLATE block using greedy
+//! run-length matching (distance-1 matches up to 258 bytes) — exactly the
+//! redundancy checkpoint payloads have (sparse count tables, zeroed
+//! regions), at a fraction of the code a full LZ77 matcher needs. The
+//! output is a standards-conforming zlib stream any inflater accepts.
+//!
+//! The decompressor handles stored and fixed-Huffman blocks with the full
+//! length/distance code tables (so it also accepts third-party `Z_FIXED`
+//! streams), verifies the Adler-32 trailer, and fails closed on any
+//! malformed input. Dynamic-Huffman blocks are rejected: nothing in this
+//! codebase produces them, and a checkpoint restore must never guess.
+
+use anyhow::{bail, Result};
+
+/// Match-length code table (RFC 1951 §3.2.5): base length per code
+/// 257..=285 and the number of extra bits that follow it.
+const LENGTH_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51,
+    59, 67, 83, 99, 115, 131, 163, 195, 227, 258,
+];
+const LENGTH_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4,
+    4, 5, 5, 5, 5, 0,
+];
+
+/// Distance code table: base distance per code 0..=29 and extra bits.
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385,
+    513, 769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385,
+    24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10,
+    10, 11, 11, 12, 12, 13, 13,
+];
+
+const END_OF_BLOCK: u16 = 256;
+const MAX_MATCH: usize = 258;
+const MIN_MATCH: usize = 3;
+
+// ---------------------------------------------------------------- writer
+
+struct BitWriter {
+    out: Vec<u8>,
+    bit: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    fn new() -> Self {
+        Self { out: Vec::new(), bit: 0, nbits: 0 }
+    }
+
+    /// LSB-first packing (block headers, extra bits) — RFC 1951 §3.1.1.
+    fn write_bits(&mut self, value: u32, n: u8) {
+        for i in 0..n {
+            self.bit |= (((value >> i) & 1) as u8) << self.nbits;
+            self.nbits += 1;
+            if self.nbits == 8 {
+                self.out.push(self.bit);
+                self.bit = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Huffman codes pack most-significant code bit first.
+    fn write_huff(&mut self, code: u16, n: u8) {
+        for i in (0..n).rev() {
+            self.write_bits(((code >> i) & 1) as u32, 1);
+        }
+    }
+
+    fn align(&mut self) {
+        if self.nbits > 0 {
+            self.out.push(self.bit);
+            self.bit = 0;
+            self.nbits = 0;
+        }
+    }
+}
+
+/// Fixed-Huffman (code, bit-count) for a literal/length symbol.
+fn litlen_code(sym: u16) -> (u16, u8) {
+    match sym {
+        0..=143 => (0x30 + sym, 8),
+        144..=255 => (0x190 + (sym - 144), 9),
+        256..=279 => (sym - 256, 7),
+        _ => (0xC0 + (sym - 280), 8),
+    }
+}
+
+/// (symbol, extra-bit count, extra value) for a match length 3..=258.
+fn length_symbol(len: usize) -> (u16, u8, u32) {
+    debug_assert!((MIN_MATCH..=MAX_MATCH).contains(&len));
+    let mut idx = LENGTH_BASE.len() - 1;
+    while LENGTH_BASE[idx] as usize > len {
+        idx -= 1;
+    }
+    (
+        257 + idx as u16,
+        LENGTH_EXTRA[idx],
+        (len - LENGTH_BASE[idx] as usize) as u32,
+    )
+}
+
+/// One fixed-Huffman final block with greedy distance-1 run matches
+/// (everything after the zlib header, before the Adler-32 trailer).
+fn fixed_block_body(data: &[u8]) -> Vec<u8> {
+    let mut w = BitWriter::new();
+    w.write_bits(1, 1); // BFINAL
+    w.write_bits(1, 2); // BTYPE = 01: fixed Huffman
+
+    let mut i = 0;
+    while i < data.len() {
+        if i > 0 {
+            let b = data[i - 1];
+            let mut run = 0;
+            while i + run < data.len() && data[i + run] == b && run < MAX_MATCH
+            {
+                run += 1;
+            }
+            if run >= MIN_MATCH {
+                let (sym, ebits, eval) = length_symbol(run);
+                let (code, n) = litlen_code(sym);
+                w.write_huff(code, n);
+                w.write_bits(eval, ebits);
+                w.write_huff(0, 5); // distance code 0 == distance 1
+                i += run;
+                continue;
+            }
+        }
+        let (code, n) = litlen_code(data[i] as u16);
+        w.write_huff(code, n);
+        i += 1;
+    }
+    let (code, n) = litlen_code(END_OF_BLOCK);
+    w.write_huff(code, n);
+    w.align();
+    w.out
+}
+
+/// Stored blocks only cap a 16-bit LEN each (RFC 1951 §3.2.4).
+const STORED_MAX: usize = 65535;
+
+/// Incompressible fallback: raw stored blocks, ≤ 5 bytes overhead per
+/// 64 KiB instead of the fixed tree's ~6–12 % literal expansion.
+fn stored_blocks_body(data: &[u8]) -> Vec<u8> {
+    debug_assert!(!data.is_empty());
+    let n_blocks = data.len().div_ceil(STORED_MAX);
+    let mut out = Vec::with_capacity(data.len() + 5 * n_blocks);
+    for (idx, chunk) in data.chunks(STORED_MAX).enumerate() {
+        // BFINAL in bit 0, BTYPE=00 in bits 1-2, rest of the byte padding
+        // (stored block headers are byte-aligned).
+        out.push(u8::from(idx == n_blocks - 1));
+        let len = chunk.len() as u16;
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&(!len).to_le_bytes());
+        out.extend_from_slice(chunk);
+    }
+    out
+}
+
+/// Compress `data` into a zlib stream: a fixed-Huffman block with greedy
+/// distance-1 run matches, falling back to stored (raw) blocks whenever
+/// that would be smaller — so incompressible payloads pay bytes of
+/// overhead, not percent.
+pub fn deflate(data: &[u8]) -> Vec<u8> {
+    let fixed = fixed_block_body(data);
+    let stored_len = data.len() + 5 * data.len().div_ceil(STORED_MAX);
+    let body = if !data.is_empty() && stored_len < fixed.len() {
+        stored_blocks_body(data)
+    } else {
+        fixed
+    };
+    // CM=8 (deflate), CINFO=7 (32 KiB window); FLG chosen so the header
+    // passes the mod-31 check — the conventional 0x78 0x9C pair.
+    let mut out = Vec::with_capacity(body.len() + 6);
+    out.extend_from_slice(&[0x78, 0x9C]);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&super::hash::adler32(data).to_be_bytes());
+    out
+}
+
+// ---------------------------------------------------------------- reader
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    pos: usize,
+    nbits: u8,
+}
+
+impl<'a> BitReader<'a> {
+    fn read_bit(&mut self) -> Result<u32> {
+        let Some(&byte) = self.data.get(self.pos) else {
+            bail!("unexpected end of zlib stream");
+        };
+        let bit = (byte >> self.nbits) & 1;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.nbits = 0;
+            self.pos += 1;
+        }
+        Ok(bit as u32)
+    }
+
+    /// LSB-first field.
+    fn read_bits(&mut self, n: u8) -> Result<u32> {
+        let mut v = 0;
+        for i in 0..n {
+            v |= self.read_bit()? << i;
+        }
+        Ok(v)
+    }
+
+    /// Append one bit to a Huffman accumulator (MSB-first).
+    fn read_huff_bit(&mut self, acc: u32) -> Result<u32> {
+        Ok((acc << 1) | self.read_bit()?)
+    }
+
+    fn align(&mut self) {
+        if self.nbits > 0 {
+            self.nbits = 0;
+            self.pos += 1;
+        }
+    }
+}
+
+/// Decode one fixed-Huffman literal/length symbol.
+fn decode_litlen(r: &mut BitReader<'_>) -> Result<u16> {
+    let mut c = 0u32;
+    for _ in 0..7 {
+        c = r.read_huff_bit(c)?;
+    }
+    if c <= 0b0010111 {
+        return Ok(256 + c as u16);
+    }
+    c = r.read_huff_bit(c)?; // 8 bits
+    if (0x30..=0xBF).contains(&c) {
+        return Ok((c - 0x30) as u16);
+    }
+    if (0xC0..=0xC7).contains(&c) {
+        return Ok(280 + (c - 0xC0) as u16);
+    }
+    c = r.read_huff_bit(c)?; // 9 bits
+    if (0x190..=0x1FF).contains(&c) {
+        return Ok(144 + (c - 0x190) as u16);
+    }
+    bail!("invalid fixed-Huffman literal/length code");
+}
+
+/// Decompress a zlib stream, refusing to produce more than `limit` bytes.
+pub fn inflate(data: &[u8], limit: usize) -> Result<Vec<u8>> {
+    if data.len() < 6 {
+        bail!("zlib stream too short ({} bytes)", data.len());
+    }
+    let (cmf, flg) = (data[0], data[1]);
+    if cmf & 0x0F != 8 {
+        bail!("not a deflate stream (CM={})", cmf & 0x0F);
+    }
+    if (cmf as u32 * 256 + flg as u32) % 31 != 0 {
+        bail!("zlib header check failed");
+    }
+    if flg & 0x20 != 0 {
+        bail!("preset dictionaries unsupported");
+    }
+
+    let mut r = BitReader { data, pos: 2, nbits: 0 };
+    let mut out: Vec<u8> = Vec::new();
+    loop {
+        let bfinal = r.read_bit()?;
+        let btype = r.read_bits(2)?;
+        match btype {
+            0 => {
+                // Stored block: byte-aligned LEN/NLEN then raw bytes.
+                r.align();
+                let Some(hdr) = data.get(r.pos..r.pos + 4) else {
+                    bail!("truncated stored-block header");
+                };
+                let len = hdr[0] as usize | ((hdr[1] as usize) << 8);
+                let nlen = hdr[2] as usize | ((hdr[3] as usize) << 8);
+                if (len ^ nlen) != 0xFFFF {
+                    bail!("stored-block length check failed");
+                }
+                r.pos += 4;
+                let Some(body) = data.get(r.pos..r.pos + len) else {
+                    bail!("truncated stored block");
+                };
+                out.extend_from_slice(body);
+                r.pos += len;
+                if out.len() > limit {
+                    bail!("decompressed output exceeds {limit} bytes");
+                }
+            }
+            1 => loop {
+                let sym = decode_litlen(&mut r)?;
+                if sym == END_OF_BLOCK {
+                    break;
+                }
+                if sym <= 255 {
+                    out.push(sym as u8);
+                } else {
+                    if sym > 285 {
+                        bail!("invalid length symbol {sym}");
+                    }
+                    let idx = (sym - 257) as usize;
+                    let len = LENGTH_BASE[idx] as usize
+                        + r.read_bits(LENGTH_EXTRA[idx])? as usize;
+                    let mut dcode = 0u32;
+                    for _ in 0..5 {
+                        dcode = r.read_huff_bit(dcode)?;
+                    }
+                    if dcode > 29 {
+                        bail!("invalid distance code {dcode}");
+                    }
+                    let dist = DIST_BASE[dcode as usize] as usize
+                        + r.read_bits(DIST_EXTRA[dcode as usize])? as usize;
+                    if dist > out.len() {
+                        bail!(
+                            "distance {dist} reaches before stream start"
+                        );
+                    }
+                    let start = out.len() - dist;
+                    // Overlapping copies are the point (RLE): byte by byte.
+                    for k in 0..len {
+                        let b = out[start + k];
+                        out.push(b);
+                    }
+                }
+                if out.len() > limit {
+                    bail!("decompressed output exceeds {limit} bytes");
+                }
+            },
+            2 => bail!("dynamic-Huffman blocks unsupported"),
+            _ => bail!("reserved block type"),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    r.align();
+    let Some(trailer) = data.get(r.pos..r.pos + 4) else {
+        bail!("truncated adler32 trailer");
+    };
+    let want =
+        u32::from_be_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    let got = super::hash::adler32(&out);
+    if got != want {
+        bail!("adler32 mismatch: stream {want:#010x}, payload {got:#010x}");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn mixed(rng: &mut Prng, n: usize) -> Vec<u8> {
+        let mut v = Vec::with_capacity(n);
+        while v.len() < n {
+            let run = (rng.below(64) + 1) as usize;
+            let b = if rng.chance(0.5) { 0 } else { rng.next_u64() as u8 };
+            v.extend(std::iter::repeat(b).take(run.min(n - v.len())));
+        }
+        v
+    }
+
+    #[test]
+    fn round_trips() {
+        let mut rng = Prng::new(1);
+        let mut cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"ab".to_vec(),
+            b"abc".to_vec(),
+            vec![0u8; 32768],
+            (0..=255u8).collect(),
+        ];
+        for _ in 0..100 {
+            let n = rng.below(4096) as usize;
+            cases.push(mixed(&mut rng, n));
+        }
+        for data in cases {
+            let z = deflate(&data);
+            let back = inflate(&z, data.len().max(1) * 2 + 64).unwrap();
+            assert_eq!(back, data, "len {}", data.len());
+        }
+    }
+
+    #[test]
+    fn runs_compress_well() {
+        let z = deflate(&vec![0u8; 32768]);
+        assert!(z.len() < 300, "all-zero 32k compressed to {}", z.len());
+        // mixed-run data compresses too
+        let mut rng = Prng::new(2);
+        let data = mixed(&mut rng, 65536);
+        let z = deflate(&data);
+        assert!(z.len() < data.len() / 4, "{} vs {}", z.len(), data.len());
+    }
+
+    #[test]
+    fn incompressible_data_falls_back_to_stored_blocks() {
+        // Random bytes can't beat the stored encoding; expansion must be
+        // bytes of framing, not the fixed tree's ~6% literal bloat.
+        let mut rng = Prng::new(4);
+        let mut data = vec![0u8; 2048];
+        rng.fill_bytes(&mut data);
+        let z = deflate(&data);
+        assert!(
+            z.len() <= data.len() + 5 + 6,
+            "incompressible 2 KiB expanded to {}",
+            z.len()
+        );
+        assert_eq!(inflate(&z, data.len() * 2 + 64).unwrap(), data);
+        // corruption detection holds on the stored path too
+        for pos in 0..z.len() {
+            let mut bad = z.clone();
+            bad[pos] ^= 0xFF;
+            assert!(
+                inflate(&bad, data.len() * 2 + 64).is_err(),
+                "stored-path flip at {pos} produced a valid stream"
+            );
+        }
+    }
+
+    #[test]
+    fn stored_fallback_spans_multiple_blocks() {
+        // > 65535 bytes forces several stored blocks (16-bit LEN each).
+        let mut rng = Prng::new(5);
+        let mut data = vec![0u8; 70_000];
+        rng.fill_bytes(&mut data);
+        let z = deflate(&data);
+        assert!(z.len() <= data.len() + 2 * 5 + 6, "got {}", z.len());
+        assert_eq!(inflate(&z, data.len() * 2 + 64).unwrap(), data);
+    }
+
+    #[test]
+    fn header_and_trailer_are_zlib() {
+        let z = deflate(b"hello hello hello hello");
+        assert_eq!(z[0], 0x78);
+        assert_eq!((z[0] as u32 * 256 + z[1] as u32) % 31, 0);
+        let want = crate::util::hash::adler32(b"hello hello hello hello");
+        assert_eq!(&z[z.len() - 4..], want.to_be_bytes());
+    }
+
+    #[test]
+    fn corruption_rejected_everywhere() {
+        let mut rng = Prng::new(3);
+        let data = mixed(&mut rng, 2048);
+        let z = deflate(&data);
+        for pos in 0..z.len() {
+            let mut bad = z.clone();
+            bad[pos] ^= 0xFF;
+            // the adler32 gate (plus structural checks) must reject every
+            // flip — a "successful" decode of corrupt data is the failure
+            // mode two-phase checkpointing exists to prevent
+            assert!(
+                inflate(&bad, data.len() * 2 + 64).is_err(),
+                "flip at {pos} produced a valid stream"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_rejected() {
+        let z = deflate(&vec![7u8; 4096]);
+        for cut in [0, 1, 3, z.len() / 2, z.len() - 1] {
+            assert!(inflate(&z[..cut], 10_000).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn limit_enforced() {
+        let z = deflate(&vec![0u8; 10_000]);
+        assert!(inflate(&z, 100).is_err());
+        assert!(inflate(&z, 10_000).is_ok());
+    }
+
+    #[test]
+    fn stored_block_decodes() {
+        // Hand-built zlib stream with one stored block: "hi".
+        let payload = b"hi";
+        let mut z = vec![0x78, 0x9C];
+        z.push(0x01); // BFINAL=1, BTYPE=00 (bits 0b001 LSB-first), aligned
+        z.extend_from_slice(&[0x02, 0x00, 0xFD, 0xFF]); // LEN / NLEN
+        z.extend_from_slice(payload);
+        z.extend_from_slice(
+            &crate::util::hash::adler32(payload).to_be_bytes(),
+        );
+        assert_eq!(inflate(&z, 100).unwrap(), payload);
+    }
+
+    #[test]
+    fn dynamic_blocks_rejected() {
+        // BFINAL=1, BTYPE=10 -> first byte 0b101 LSB-first = 0x05
+        let z = [0x78, 0x9C, 0x05, 0, 0, 0, 0, 0];
+        let err = inflate(&z, 100).unwrap_err().to_string();
+        assert!(err.contains("dynamic"), "{err}");
+    }
+}

@@ -1,0 +1,331 @@
+//! Equivalence suite: the event-driven engine must reproduce the legacy
+//! imperative loop's `RunResult` **exactly** — completion, durations,
+//! eviction/checkpoint/restore counts, billing (bitwise f64), stage
+//! times, `final_fingerprint`, and the timeline's (time, kind) sequence —
+//! on every Table I scenario and across seeded eviction/checkpoint
+//! sweeps.
+//!
+//! The only field not compared byte-for-byte is the `EvictionNotice`
+//! event *detail*: it carries the metadata service's event id, which
+//! draws from a process-global sequence and so differs between any two
+//! runs in the same process (legacy vs legacy included). Every other
+//! detail string — instance ids, checkpoint ids, restore provenance — is
+//! per-run deterministic and compared verbatim.
+
+use spoton::metrics::EventKind;
+use spoton::sim::driver::RunResult;
+use spoton::sim::experiment::Experiment;
+use spoton::sim::legacy;
+use spoton::simclock::SimDuration;
+use spoton::util::proptest::{forall, shrink_none, Config};
+use spoton::util::Prng;
+
+/// Run through the engine (the production path: `SimDriver::run`).
+fn run_engine(exp: &Experiment) -> RunResult {
+    exp.run_sleeper().expect("engine run")
+}
+
+/// Run through the frozen legacy loop on an identical fresh share.
+fn run_legacy(exp: &Experiment) -> RunResult {
+    let mut store = exp.fresh_store();
+    let mut factory = exp.sleeper_factory();
+    legacy::run_reference(&exp.cfg, &mut store, &mut *factory)
+        .expect("legacy run")
+}
+
+/// Field-by-field equality, with a diagnostic label.
+fn assert_equivalent(label: &str, exp: &Experiment) {
+    let eng = run_engine(exp);
+    let leg = run_legacy(exp);
+
+    assert_eq!(eng.completed, leg.completed, "{label}: completed");
+    assert_eq!(eng.total, leg.total, "{label}: total");
+    assert_eq!(eng.notices, leg.notices, "{label}: notices");
+    assert_eq!(eng.evictions, leg.evictions, "{label}: evictions");
+    assert_eq!(eng.instances, leg.instances, "{label}: instances");
+    assert_eq!(
+        eng.periodic_ckpts, leg.periodic_ckpts,
+        "{label}: periodic_ckpts"
+    );
+    assert_eq!(
+        eng.termination_ok, leg.termination_ok,
+        "{label}: termination_ok"
+    );
+    assert_eq!(
+        eng.termination_failed, leg.termination_failed,
+        "{label}: termination_failed"
+    );
+    assert_eq!(eng.app_ckpts, leg.app_ckpts, "{label}: app_ckpts");
+    assert_eq!(eng.restores, leg.restores, "{label}: restores");
+    assert_eq!(eng.lost_steps, leg.lost_steps, "{label}: lost_steps");
+    assert_eq!(
+        eng.compute_cost.to_bits(),
+        leg.compute_cost.to_bits(),
+        "{label}: compute_cost ({} vs {})",
+        eng.compute_cost,
+        leg.compute_cost
+    );
+    assert_eq!(
+        eng.storage_cost.to_bits(),
+        leg.storage_cost.to_bits(),
+        "{label}: storage_cost ({} vs {})",
+        eng.storage_cost,
+        leg.storage_cost
+    );
+    assert_eq!(eng.stage_times, leg.stage_times, "{label}: stage_times");
+    assert_eq!(
+        eng.final_fingerprint, leg.final_fingerprint,
+        "{label}: final_fingerprint"
+    );
+
+    // timeline: identical (time, kind) sequence; details identical except
+    // the EvictionNotice event-id (process-global counter).
+    assert_eq!(
+        eng.timeline.events().len(),
+        leg.timeline.events().len(),
+        "{label}: timeline length"
+    );
+    for (i, (a, b)) in eng
+        .timeline
+        .events()
+        .iter()
+        .zip(leg.timeline.events())
+        .enumerate()
+    {
+        assert_eq!(a.at, b.at, "{label}: timeline[{i}] time");
+        assert_eq!(a.kind, b.kind, "{label}: timeline[{i}] kind");
+        if a.kind != EventKind::EvictionNotice {
+            assert_eq!(a.detail, b.detail, "{label}: timeline[{i}] detail");
+        }
+    }
+}
+
+/// String-based equivalence check for proptest integration: returns the
+/// first divergence instead of panicking.
+fn check_equivalent(exp: &Experiment) -> Result<(), String> {
+    let eng = exp.run_sleeper().map_err(|e| e.to_string())?;
+    let mut store = exp.fresh_store();
+    let mut factory = exp.sleeper_factory();
+    let leg = legacy::run_reference(&exp.cfg, &mut store, &mut *factory)
+        .map_err(|e| e.to_string())?;
+    let pairs: [(&str, String, String); 10] = [
+        ("completed", format!("{:?}", eng.completed), format!("{:?}", leg.completed)),
+        ("total", format!("{:?}", eng.total), format!("{:?}", leg.total)),
+        ("evictions", eng.evictions.to_string(), leg.evictions.to_string()),
+        ("instances", eng.instances.to_string(), leg.instances.to_string()),
+        (
+            "ckpts",
+            format!(
+                "{}p/{}t/{}f/{}a",
+                eng.periodic_ckpts,
+                eng.termination_ok,
+                eng.termination_failed,
+                eng.app_ckpts
+            ),
+            format!(
+                "{}p/{}t/{}f/{}a",
+                leg.periodic_ckpts,
+                leg.termination_ok,
+                leg.termination_failed,
+                leg.app_ckpts
+            ),
+        ),
+        ("restores", eng.restores.to_string(), leg.restores.to_string()),
+        ("lost", eng.lost_steps.to_string(), leg.lost_steps.to_string()),
+        (
+            "cost",
+            format!("{:x}", eng.compute_cost.to_bits()),
+            format!("{:x}", leg.compute_cost.to_bits()),
+        ),
+        (
+            "fingerprint",
+            format!("{:016x}", eng.final_fingerprint),
+            format!("{:016x}", leg.final_fingerprint),
+        ),
+        (
+            "timeline",
+            eng.timeline
+                .events()
+                .iter()
+                .map(|e| format!("{}@{}", e.kind.as_str(), e.at.as_millis()))
+                .collect::<Vec<_>>()
+                .join(","),
+            leg.timeline
+                .events()
+                .iter()
+                .map(|e| format!("{}@{}", e.kind.as_str(), e.at.as_millis()))
+                .collect::<Vec<_>>()
+                .join(","),
+        ),
+    ];
+    for (name, a, b) in pairs {
+        if a != b {
+            return Err(format!("{name} diverged: engine {a} != legacy {b}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn all_table1_rows_are_byte_identical() {
+    for row in spoton::report::paper_rows() {
+        assert_equivalent(row.id, &row.experiment());
+    }
+}
+
+#[test]
+fn fixed_eviction_interval_sweep() {
+    for mins in [20u64, 30, 45, 60, 75, 90, 120, 150] {
+        let exp = Experiment::table1()
+            .named("sweep")
+            .eviction_every(SimDuration::from_mins(mins))
+            .transparent(SimDuration::from_mins(15))
+            .deadline(SimDuration::from_hours(30));
+        assert_equivalent(&format!("fixed-{mins}m"), &exp);
+    }
+}
+
+#[test]
+fn app_native_eviction_sweep() {
+    for mins in [30u64, 45, 60, 90] {
+        let exp = Experiment::table1()
+            .named("app-sweep")
+            .eviction_every(SimDuration::from_mins(mins))
+            .app_native()
+            .deadline(SimDuration::from_hours(30));
+        assert_equivalent(&format!("app-{mins}m"), &exp);
+    }
+}
+
+#[test]
+fn poisson_storm_seeds() {
+    for seed in 1u64..=6 {
+        let exp = Experiment::table1()
+            .named("poisson")
+            .eviction_poisson(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(15))
+            .deadline(SimDuration::from_hours(30))
+            .seed(seed);
+        assert_equivalent(&format!("poisson-seed{seed}"), &exp);
+    }
+}
+
+#[test]
+fn trace_replay() {
+    let exp = Experiment::table1()
+        .named("trace")
+        .eviction_trace(
+            [73u64, 22, 48, 95, 31, 180, 60]
+                .iter()
+                .map(|m| SimDuration::from_mins(*m))
+                .collect(),
+        )
+        .transparent(SimDuration::from_mins(15))
+        .deadline(SimDuration::from_hours(24));
+    assert_equivalent("trace", &exp);
+}
+
+#[test]
+fn short_notice_failed_termination_checkpoints() {
+    let exp = Experiment::table1()
+        .named("short-notice")
+        .eviction_every(SimDuration::from_mins(90))
+        .transparent(SimDuration::from_mins(30))
+        .notice(SimDuration::from_secs(5));
+    assert_equivalent("notice-5s", &exp);
+}
+
+#[test]
+fn slow_poll_never_detects_in_time() {
+    // poll interval ≫ notice: the coordinator's tick lands after the
+    // reclaim instant, so even attached runs die at the deadline.
+    let mut exp = Experiment::table1()
+        .named("slow-poll")
+        .eviction_every(SimDuration::from_mins(60))
+        .transparent(SimDuration::from_mins(20))
+        .deadline(SimDuration::from_hours(30));
+    exp.cfg.cloud.poll_interval = SimDuration::from_secs(300);
+    assert_equivalent("slow-poll", &exp);
+}
+
+#[test]
+fn unprotected_starvation_aborts_identically() {
+    let exp = Experiment::table1()
+        .named("starved")
+        .eviction_every(SimDuration::from_mins(100))
+        .unprotected()
+        .deadline(SimDuration::from_hours(9));
+    assert_equivalent("starvation", &exp);
+}
+
+#[test]
+fn detached_coordinator_dies_at_deadline() {
+    let exp = Experiment::table1()
+        .named("off")
+        .spoton_off()
+        .eviction_every(SimDuration::from_mins(80))
+        .deadline(SimDuration::from_hours(12));
+    assert_equivalent("spoton-off-evicted", &exp);
+}
+
+#[test]
+fn milestone_starvation_app_native() {
+    let exp = Experiment::table1()
+        .named("milestone-starved")
+        .eviction_every(SimDuration::from_mins(30))
+        .app_native()
+        .app_milestones(1)
+        .deadline(SimDuration::from_hours(8));
+    assert_equivalent("milestone-starvation", &exp);
+}
+
+#[test]
+fn prop_engine_equals_legacy_on_random_scenarios() {
+    // The randomized generator from the driver property suite: eviction
+    // plan × checkpoint method × notice × poll × image size × seed.
+    forall(
+        Config::default().cases(45).seed(0xE0_07),
+        |rng: &mut Prng| {
+            let mut e = Experiment::table1()
+                .named("prop-eq")
+                .seed(rng.next_u64())
+                .deadline(SimDuration::from_hours(40));
+            e = match rng.below(4) {
+                0 => e,
+                1 => e.eviction_every(SimDuration::from_mins(
+                    rng.range_u64(20, 180),
+                )),
+                2 => e.eviction_poisson(SimDuration::from_mins(
+                    rng.range_u64(30, 240),
+                )),
+                _ => {
+                    let n = rng.range_u64(1, 5);
+                    e.eviction_trace(
+                        (0..n)
+                            .map(|_| {
+                                SimDuration::from_mins(
+                                    rng.range_u64(10, 120),
+                                )
+                            })
+                            .collect(),
+                    )
+                }
+            };
+            e = match rng.below(6) {
+                0 => e.unprotected(),
+                1 | 2 => e.app_native(),
+                _ => e.transparent(SimDuration::from_mins(
+                    rng.range_u64(5, 45),
+                )),
+            };
+            e = e
+                .notice(SimDuration::from_secs(rng.range_u64(5, 120)))
+                .state_gib(0.5 + rng.f64() * 6.0);
+            e.cfg.cloud.poll_interval =
+                SimDuration::from_secs(rng.range_u64(2, 60));
+            e
+        },
+        shrink_none,
+        check_equivalent,
+    );
+}
