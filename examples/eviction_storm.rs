@@ -81,6 +81,7 @@ fn main() -> anyhow::Result<()> {
         requeue_delay: SimDuration::from_secs(300),
         max_attempts: 8,
         slots: 1,
+        fleet: None,
     };
     let records = sched.run(mk_jobs())?;
     let mut t = TextTable::new(&[
@@ -111,6 +112,7 @@ fn main() -> anyhow::Result<()> {
         requeue_delay: SimDuration::from_secs(300),
         max_attempts: 8,
         slots: 2,
+        fleet: None,
     };
     let (records2, timeline) = wide.run_with_timeline(mk_jobs())?;
     assert!(records2.iter().all(|r| r.completed));

@@ -52,6 +52,18 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
     Ok(out)
 }
 
+/// Compress and report the achieved ratio in one pass (the
+/// termination-notice race path needs both and must not deflate twice).
+pub fn compress_with_ratio(payload: &[u8]) -> Result<(Vec<u8>, f64)> {
+    let compressed = compress(payload)?;
+    let ratio = if payload.is_empty() {
+        1.0
+    } else {
+        compressed.len() as f64 / payload.len() as f64
+    };
+    Ok((compressed, ratio))
+}
+
 /// Compression ratio estimate on a sample (used by the coordinator to
 /// decide whether compressing shrinks the termination-race window:
 /// effective transfer size = charged_bytes × ratio).
@@ -59,8 +71,7 @@ pub fn ratio(payload: &[u8]) -> Result<f64> {
     if payload.is_empty() {
         return Ok(1.0);
     }
-    let compressed = compress(payload)?;
-    Ok(compressed.len() as f64 / payload.len() as f64)
+    Ok(compress_with_ratio(payload)?.1)
 }
 
 #[cfg(test)]

@@ -15,6 +15,9 @@ pub struct LineItem {
     pub resource: String,
     pub detail: String,
     pub amount: f64,
+    /// Fleet pool this item is attributed to (multi-pool runs); `None`
+    /// for storage and for pre-fleet single-scale-set booking.
+    pub pool: Option<String>,
 }
 
 /// Accumulates usage over one experiment run.
@@ -41,6 +44,39 @@ impl BillingMeter {
         uptime: SimDuration,
         price_per_hour: f64,
     ) {
+        self.book_instance_tagged(None, instance, vm_size, spot, uptime, price_per_hour);
+    }
+
+    /// Book instance uptime attributed to a fleet pool (per-pool cost
+    /// breakdown next to the run total).
+    pub fn book_instance_in_pool(
+        &mut self,
+        pool: &str,
+        instance: &str,
+        vm_size: &str,
+        spot: bool,
+        uptime: SimDuration,
+        price_per_hour: f64,
+    ) {
+        self.book_instance_tagged(
+            Some(pool),
+            instance,
+            vm_size,
+            spot,
+            uptime,
+            price_per_hour,
+        );
+    }
+
+    fn book_instance_tagged(
+        &mut self,
+        pool: Option<&str>,
+        instance: &str,
+        vm_size: &str,
+        spot: bool,
+        uptime: SimDuration,
+        price_per_hour: f64,
+    ) {
         let hours = uptime.as_hours_f64();
         self.compute_items.push(LineItem {
             resource: format!("vm/{instance}"),
@@ -50,7 +86,17 @@ impl BillingMeter {
                 hours
             ),
             amount: hours * price_per_hour,
+            pool: pool.map(str::to_string),
         });
+    }
+
+    /// Compute total attributed to one fleet pool.
+    pub fn pool_compute_total(&self, pool: &str) -> f64 {
+        self.compute_items
+            .iter()
+            .filter(|i| i.pool.as_deref() == Some(pool))
+            .map(|i| i.amount)
+            .sum()
     }
 
     /// Book provisioned shared storage for the run's duration.
@@ -70,6 +116,7 @@ impl BillingMeter {
                 months
             ),
             amount,
+            pool: None,
         });
     }
 
@@ -112,10 +159,14 @@ impl Invoice {
 impl fmt::Display for Invoice {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         for item in &self.items {
+            let resource = match &item.pool {
+                Some(pool) => format!("{}@{pool}", item.resource),
+                None => item.resource.clone(),
+            };
             writeln!(
                 f,
                 "  {:<24} {:<52} {:>9}",
-                item.resource,
+                resource,
                 item.detail,
                 crate::util::fmt::dollars(item.amount)
             )?;
@@ -188,6 +239,30 @@ mod tests {
         let s = inv.to_string();
         assert!(s.contains("TOTAL"));
         assert!((inv.total() - m.total()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_attribution_partitions_compute_total() {
+        let mut m = BillingMeter::new();
+        let h = SimDuration::from_hours(1);
+        m.book_instance_in_pool("east", "vm-0", "D8s", true, h, 0.076);
+        m.book_instance_in_pool("west", "vm-1", "D8s", true, h, 0.090);
+        m.book_instance_in_pool("east", "vm-2", "D8s", true, h, 0.076);
+        m.book_storage("nfs", 100.0, h, 16.0);
+        assert!((m.pool_compute_total("east") - 0.152).abs() < 1e-12);
+        assert!((m.pool_compute_total("west") - 0.090).abs() < 1e-12);
+        assert_eq!(m.pool_compute_total("nowhere"), 0.0);
+        // pools partition the compute total exactly
+        assert!(
+            (m.pool_compute_total("east") + m.pool_compute_total("west")
+                - m.compute_total())
+            .abs()
+                < 1e-12
+        );
+        // pool tag surfaces on the rendered invoice
+        let s = m.invoice().to_string();
+        assert!(s.contains("vm/vm-0@east"), "{s}");
+        assert!(s.contains("vm/vm-1@west"), "{s}");
     }
 
     #[test]

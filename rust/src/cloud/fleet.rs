@@ -1,0 +1,534 @@
+//! Multi-pool replacement fleets with pluggable placement.
+//!
+//! The paper runs every workload on a single capacity-1 scale set; this
+//! module generalizes that into a [`Fleet`] of N pools — each a
+//! [`ScaleSet`] with its own [`PriceBook`] (via a per-pool price factor),
+//! its own [`EvictionPlan`], and its own provisioning delay — so a
+//! replacement after an eviction can land in a *different* region /
+//! VM-size pool with different price and eviction behaviour
+//! (heterogeneous spot provisioning à la Qu et al. / Voorsluys & Buyya).
+//!
+//! Replacement is an event chain on the simulation engine, not a direct
+//! call: `ReplacementRequested → PlacementDecided(pool) →
+//! InstanceProvisioned` ([`crate::sim::engine::SimEvent`]). The pool is
+//! picked by a [`PlacementPolicy`]:
+//!
+//! * [`StickyPool`] — replace in the pool the instance died in. On a
+//!   1-pool fleet this reproduces the single-scale-set world
+//!   byte-for-byte (the equivalence suite pins it against
+//!   [`crate::sim::legacy`]).
+//! * [`CheapestSpot`] — always the lowest hourly price.
+//! * [`EvictionAware`] — minimize `price × (1 + penalty ×
+//!   evictions/launches)`, steering away from pools observed to churn.
+//!
+//! The fleet keeps one experiment-wide instance-id sequence across its
+//! pools and tags every booked uptime with the pool name, so
+//! [`BillingMeter::pool_compute_total`] attributes the run's compute cost
+//! pool by pool (the per-pool cost table in [`crate::report::fleet`]).
+
+use super::billing::BillingMeter;
+use super::eviction::EvictionPlan;
+use super::instance::{Instance, InstanceId};
+use super::pricing::PriceBook;
+use super::scale_set::ScaleSet;
+use crate::config::{PlacementPolicyCfg, PoolCfg, ScenarioConfig};
+use crate::simclock::{SimDuration, SimTime};
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Index of a pool within its fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PoolId(pub usize);
+
+impl fmt::Display for PoolId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pool-{}", self.0)
+    }
+}
+
+/// Read-only view of one pool, handed to placement policies.
+#[derive(Debug, Clone)]
+pub struct PoolView {
+    pub id: PoolId,
+    pub name: String,
+    pub vm_size: String,
+    pub spot: bool,
+    /// Hourly price of this pool's VM size at the pool's price level.
+    pub price_per_hour: f64,
+    pub provisioning_delay: SimDuration,
+    /// Instances launched into this pool so far.
+    pub launched: u32,
+    /// Evictions observed in this pool so far.
+    pub evictions: u32,
+}
+
+impl PoolView {
+    /// Observed evictions per launch (0 for an untried pool — policies
+    /// stay optimistic about pools they have no evidence against).
+    pub fn eviction_rate(&self) -> f64 {
+        self.evictions as f64 / self.launched.max(1) as f64
+    }
+}
+
+/// Picks the pool for the next replacement. `active` is the pool the
+/// dying (or initial) instance belongs to; `pools` always has ≥ 1 entry.
+pub trait PlacementPolicy: fmt::Debug {
+    fn name(&self) -> &'static str;
+    fn place(&mut self, active: PoolId, pools: &[PoolView]) -> PoolId;
+}
+
+/// Replace in the same pool, always — the paper's single-scale-set
+/// semantics generalized to "never move".
+#[derive(Debug, Default)]
+pub struct StickyPool;
+
+impl PlacementPolicy for StickyPool {
+    fn name(&self) -> &'static str {
+        "sticky"
+    }
+
+    fn place(&mut self, active: PoolId, _pools: &[PoolView]) -> PoolId {
+        active
+    }
+}
+
+/// Always the lowest hourly price; ties go to the lowest pool index.
+#[derive(Debug, Default)]
+pub struct CheapestSpot;
+
+impl PlacementPolicy for CheapestSpot {
+    fn name(&self) -> &'static str {
+        "cheapest-spot"
+    }
+
+    fn place(&mut self, _active: PoolId, pools: &[PoolView]) -> PoolId {
+        let mut best = &pools[0];
+        for p in &pools[1..] {
+            if p.price_per_hour < best.price_per_hour {
+                best = p;
+            }
+        }
+        best.id
+    }
+}
+
+/// Minimize `price × (1 + penalty × eviction_rate)`: price still matters,
+/// but a pool that keeps evicting gets progressively more expensive in
+/// the policy's eyes. Ties go to the lowest pool index.
+#[derive(Debug)]
+pub struct EvictionAware {
+    pub penalty: f64,
+}
+
+impl EvictionAware {
+    fn score(&self, p: &PoolView) -> f64 {
+        p.price_per_hour * (1.0 + self.penalty * p.eviction_rate())
+    }
+}
+
+impl PlacementPolicy for EvictionAware {
+    fn name(&self) -> &'static str {
+        "eviction-aware"
+    }
+
+    fn place(&mut self, _active: PoolId, pools: &[PoolView]) -> PoolId {
+        let mut best = &pools[0];
+        let mut best_score = self.score(best);
+        for p in &pools[1..] {
+            let s = self.score(p);
+            if s < best_score {
+                best = p;
+                best_score = s;
+            }
+        }
+        best.id
+    }
+}
+
+/// Build the policy a config names.
+pub fn build_policy(cfg: &PlacementPolicyCfg) -> Box<dyn PlacementPolicy> {
+    match cfg {
+        PlacementPolicyCfg::Sticky => Box::new(StickyPool),
+        PlacementPolicyCfg::CheapestSpot => Box::new(CheapestSpot),
+        PlacementPolicyCfg::EvictionAware { penalty } => {
+            Box::new(EvictionAware { penalty: *penalty })
+        }
+    }
+}
+
+/// Per-pool outcome of a run, carried on
+/// [`crate::sim::RunResult::pool_stats`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolStats {
+    pub pool: String,
+    pub vm_size: String,
+    pub spot: bool,
+    pub launches: u32,
+    pub evictions: u32,
+    /// Compute cost attributed to this pool's instances.
+    pub compute_cost: f64,
+}
+
+/// One pool of the fleet: a scale set plus the pool's eviction plan and
+/// observed-eviction counter.
+#[derive(Debug)]
+struct Pool {
+    name: String,
+    set: ScaleSet,
+    plan: EvictionPlan,
+    evictions: u32,
+}
+
+/// N pools, one live-instance slot, one experiment-wide id sequence.
+///
+/// The fleet keeps the engine's capacity-1 workload model: at most one
+/// instance runs the workload at a time, but each replacement may be
+/// placed in any pool. (Multi-slot batch clusters get their fleet by
+/// sharing a [`crate::config::FleetCfg`] across jobs — see
+/// [`crate::sched`].)
+#[derive(Debug)]
+pub struct Fleet {
+    pools: Vec<Pool>,
+    /// Where the next launch goes (set by the placement decision).
+    active: PoolId,
+    /// Pool of the currently-live instance, if any.
+    current_pool: Option<PoolId>,
+    next_id: u64,
+    total_launched: u32,
+}
+
+impl Fleet {
+    /// Build a fleet from explicit pool configs. Pool 0's eviction plan
+    /// draws from `seed` exactly as the pre-fleet single scale set did
+    /// (1-pool fleets must replay the legacy world bit-for-bit); later
+    /// pools decorrelate their plans with an index-keyed seed.
+    pub fn new(pool_cfgs: &[PoolCfg], seed: u64) -> Result<Self> {
+        if pool_cfgs.is_empty() {
+            bail!("fleet needs at least one pool");
+        }
+        let mut pools = Vec::with_capacity(pool_cfgs.len());
+        for (i, pc) in pool_cfgs.iter().enumerate() {
+            if pools.iter().any(|p: &Pool| p.name == pc.name) {
+                bail!("duplicate pool name '{}'", pc.name);
+            }
+            let book = PriceBook::default().with_price_factor(pc.price_factor)?;
+            let mut set = ScaleSet::new(
+                &pc.vm_size,
+                pc.spot,
+                pc.provisioning_delay,
+                book,
+            )?;
+            // Pool tags exist for multi-pool attribution; a 1-pool fleet
+            // books exactly like the pre-fleet scale set so legacy-world
+            // invoices (and the equivalence oracle's) stay byte-identical.
+            if pool_cfgs.len() > 1 {
+                set = set.with_pool_label(&pc.name);
+            }
+            let pool_seed = if i == 0 {
+                seed
+            } else {
+                seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            };
+            pools.push(Pool {
+                name: pc.name.clone(),
+                set,
+                plan: EvictionPlan::new(pc.eviction.clone(), pool_seed),
+                evictions: 0,
+            });
+        }
+        Ok(Self {
+            pools,
+            active: PoolId(0),
+            current_pool: None,
+            next_id: 0,
+            total_launched: 0,
+        })
+    }
+
+    /// The fleet a scenario describes: its explicit `[pool.*]` sections,
+    /// or — when none are given — the single pool the `[cloud]` +
+    /// `[eviction]` sections define (the paper's testbed).
+    pub fn from_scenario(cfg: &ScenarioConfig) -> Result<Self> {
+        if cfg.fleet.pools.is_empty() {
+            let pool = PoolCfg::from_cloud(&cfg.cloud, cfg.eviction.clone());
+            Self::new(&[pool], cfg.seed)
+        } else {
+            Self::new(&cfg.fleet.pools, cfg.seed)
+        }
+    }
+
+    pub fn num_pools(&self) -> usize {
+        self.pools.len()
+    }
+
+    pub fn is_multi_pool(&self) -> bool {
+        self.pools.len() > 1
+    }
+
+    pub fn active_pool(&self) -> PoolId {
+        self.active
+    }
+
+    pub fn pool_name(&self, pool: PoolId) -> &str {
+        &self.pools[pool.0].name
+    }
+
+    /// Direct replacement target for the next launch (the engine's
+    /// `PlacementDecided` handler).
+    pub fn set_active(&mut self, pool: PoolId) -> Result<()> {
+        if pool.0 >= self.pools.len() {
+            bail!(
+                "placement picked {pool} but the fleet has {} pool(s)",
+                self.pools.len()
+            );
+        }
+        self.active = pool;
+        Ok(())
+    }
+
+    /// Policy-facing views of every pool.
+    pub fn views(&self) -> Vec<PoolView> {
+        self.pools
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let price = p
+                    .set
+                    .price_book()
+                    .lookup(p.set.vm_size())
+                    .expect("validated at construction")
+                    .price_per_hour(p.set.spot());
+                PoolView {
+                    id: PoolId(i),
+                    name: p.name.clone(),
+                    vm_size: p.set.vm_size().to_string(),
+                    spot: p.set.spot(),
+                    price_per_hour: price,
+                    provisioning_delay: p.set.provisioning_delay(),
+                    launched: p.set.launched(),
+                    evictions: p.evictions,
+                }
+            })
+            .collect()
+    }
+
+    /// Launch an instance in the active pool, immediately Running at
+    /// `now`. Ids are sequential fleet-wide, matching the single-scale-set
+    /// sequence on a 1-pool fleet.
+    pub fn launch(&mut self, now: SimTime) -> &Instance {
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        self.total_launched += 1;
+        self.current_pool = Some(self.active);
+        self.pools[self.active.0].set.launch_with_id(id, now)
+    }
+
+    /// The currently-live instance, if any.
+    pub fn current(&self) -> Option<&Instance> {
+        self.pools[self.current_pool?.0].set.current()
+    }
+
+    /// Eviction-notice offset for the instance just launched, drawn from
+    /// its pool's plan. Call once per launch, in launch order.
+    pub fn next_eviction_offset(&mut self) -> Option<SimDuration> {
+        let pool = self.current_pool.unwrap_or(self.active);
+        self.pools[pool.0].plan.next_eviction_offset()
+    }
+
+    /// Terminate the live instance at `now`, booking its uptime against
+    /// its pool. Returns the instance id and the pool it lived in.
+    pub fn terminate_current(
+        &mut self,
+        now: SimTime,
+        billing: &mut BillingMeter,
+    ) -> Option<(InstanceId, PoolId)> {
+        let pool = self.current_pool?;
+        let id = self.pools[pool.0].set.terminate_current(now, billing)?;
+        self.current_pool = None;
+        Some((id, pool))
+    }
+
+    /// Record an observed eviction in `pool` (placement-policy evidence).
+    pub fn note_eviction(&mut self, pool: PoolId) {
+        self.pools[pool.0].evictions += 1;
+    }
+
+    /// When a launch placed in `pool` at `now` is Running. The fleet's
+    /// very first launch is immediate (capacity was free — same rule the
+    /// single scale set applied); replacements pay the pool's
+    /// provisioning delay.
+    pub fn ready_at(&self, pool: PoolId, now: SimTime) -> SimTime {
+        if self.total_launched == 0 {
+            now
+        } else {
+            now + self.pools[pool.0].set.provisioning_delay()
+        }
+    }
+
+    pub fn total_launched(&self) -> u32 {
+        self.total_launched
+    }
+
+    /// Per-pool stats with compute cost attributed via the meter. A
+    /// 1-pool fleet books untagged (legacy-identical invoices), so its
+    /// single pool owns the whole compute total by construction.
+    pub fn stats(&self, billing: &BillingMeter) -> Vec<PoolStats> {
+        let multi = self.is_multi_pool();
+        self.pools
+            .iter()
+            .map(|p| PoolStats {
+                pool: p.name.clone(),
+                vm_size: p.set.vm_size().to_string(),
+                spot: p.set.spot(),
+                launches: p.set.launched(),
+                evictions: p.evictions,
+                compute_cost: if multi {
+                    billing.pool_compute_total(&p.name)
+                } else {
+                    billing.compute_total()
+                },
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvictionPlanCfg;
+
+    fn three_pools() -> Vec<PoolCfg> {
+        vec![
+            PoolCfg::named("east").price_factor(0.85).eviction(
+                EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(5) },
+            ),
+            PoolCfg::named("west").price_factor(1.2),
+            PoolCfg::named("south").price_factor(1.0),
+        ]
+    }
+
+    #[test]
+    fn fleet_launches_with_global_id_sequence() {
+        let mut fleet = Fleet::new(&three_pools(), 7).unwrap();
+        let mut billing = BillingMeter::new();
+        assert_eq!(fleet.num_pools(), 3);
+        assert!(fleet.is_multi_pool());
+
+        // first launch in pool 0 is immediate
+        assert_eq!(fleet.ready_at(PoolId(0), SimTime::ZERO), SimTime::ZERO);
+        let id0 = fleet.launch(SimTime::ZERO).id;
+        assert_eq!(id0, InstanceId(0));
+        assert!(fleet.current().is_some());
+
+        let (tid, pool) = fleet
+            .terminate_current(SimTime::from_secs(3600), &mut billing)
+            .unwrap();
+        assert_eq!(tid, id0);
+        assert_eq!(pool, PoolId(0));
+        fleet.note_eviction(pool);
+        assert!(fleet.current().is_none());
+
+        // replacement into a different pool continues the id sequence
+        fleet.set_active(PoolId(2)).unwrap();
+        let ready = fleet.ready_at(PoolId(2), SimTime::from_secs(3600));
+        assert!(ready > SimTime::from_secs(3600), "replacement pays delay");
+        let id1 = fleet.launch(ready).id;
+        assert_eq!(id1, InstanceId(1));
+
+        let views = fleet.views();
+        assert_eq!(views[0].launched, 1);
+        assert_eq!(views[0].evictions, 1);
+        assert!((views[0].eviction_rate() - 1.0).abs() < 1e-12);
+        assert_eq!(views[2].launched, 1);
+        assert_eq!(views[2].evictions, 0);
+        // east is 0.85 × $0.076
+        assert!((views[0].price_per_hour - 0.0646).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_validates_configs() {
+        assert!(Fleet::new(&[], 1).is_err());
+        let dup = vec![PoolCfg::named("a"), PoolCfg::named("a")];
+        assert!(Fleet::new(&dup, 1).is_err());
+        let bad_size = vec![PoolCfg::named("a").vm_size("Standard_Zeppelin")];
+        assert!(Fleet::new(&bad_size, 1).is_err());
+        let bad_factor = vec![PoolCfg::named("a").price_factor(-1.0)];
+        assert!(Fleet::new(&bad_factor, 1).is_err());
+        let mut fleet = Fleet::new(&three_pools(), 1).unwrap();
+        assert!(fleet.set_active(PoolId(3)).is_err());
+    }
+
+    #[test]
+    fn sticky_stays_cheapest_moves() {
+        let fleet = Fleet::new(&three_pools(), 7).unwrap();
+        let views = fleet.views();
+
+        let mut sticky = StickyPool;
+        assert_eq!(sticky.place(PoolId(1), &views), PoolId(1));
+
+        let mut cheapest = CheapestSpot;
+        // east (0.85×) is the cheapest
+        assert_eq!(cheapest.place(PoolId(1), &views), PoolId(0));
+    }
+
+    #[test]
+    fn eviction_aware_abandons_churning_pools() {
+        let mut fleet = Fleet::new(&three_pools(), 7).unwrap();
+        let mut policy = EvictionAware { penalty: 4.0 };
+
+        // no evidence yet: price decides — east
+        assert_eq!(policy.place(PoolId(0), &fleet.views()), PoolId(0));
+
+        // east churns: launch + evict
+        let mut billing = BillingMeter::new();
+        fleet.launch(SimTime::ZERO);
+        let (_, pool) = fleet
+            .terminate_current(SimTime::from_secs(60), &mut billing)
+            .unwrap();
+        fleet.note_eviction(pool);
+
+        // east now scores 0.0646 × 5 = 0.323; south (0.076) wins
+        assert_eq!(policy.place(PoolId(0), &fleet.views()), PoolId(2));
+    }
+
+    #[test]
+    fn single_pool_fleet_mirrors_scale_set_rules() {
+        let cfg = ScenarioConfig::default();
+        let mut fleet = Fleet::from_scenario(&cfg).unwrap();
+        assert_eq!(fleet.num_pools(), 1);
+        assert!(!fleet.is_multi_pool());
+        assert_eq!(fleet.pool_name(PoolId(0)), "pool-0");
+        // first launch free, replacement pays the cloud cfg delay
+        assert_eq!(fleet.ready_at(PoolId(0), SimTime::ZERO), SimTime::ZERO);
+        fleet.launch(SimTime::ZERO);
+        let t = SimTime::from_secs(100);
+        assert_eq!(
+            fleet.ready_at(PoolId(0), t),
+            t + cfg.cloud.provisioning_delay
+        );
+        // default scenario has no evictions
+        assert_eq!(fleet.next_eviction_offset(), None);
+    }
+
+    #[test]
+    fn pool_stats_attribute_costs() {
+        let mut fleet = Fleet::new(&three_pools(), 7).unwrap();
+        let mut billing = BillingMeter::new();
+        fleet.launch(SimTime::ZERO);
+        fleet
+            .terminate_current(SimTime::from_secs(3600), &mut billing)
+            .unwrap();
+        fleet.set_active(PoolId(1)).unwrap();
+        fleet.launch(SimTime::from_secs(3700));
+        fleet
+            .terminate_current(SimTime::from_secs(7300), &mut billing)
+            .unwrap();
+        let stats = fleet.stats(&billing);
+        assert_eq!(stats.len(), 3);
+        assert!((stats[0].compute_cost - 0.0646).abs() < 1e-9);
+        assert!((stats[1].compute_cost - 0.0912).abs() < 1e-9);
+        assert_eq!(stats[2].compute_cost, 0.0);
+        let total: f64 = stats.iter().map(|s| s.compute_cost).sum();
+        assert!((total - billing.compute_total()).abs() < 1e-12);
+    }
+}

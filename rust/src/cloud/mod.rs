@@ -1,11 +1,20 @@
-//! The virtual cloud: spot/on-demand instances, scale sets, pricing,
-//! billing, eviction plans, and the scheduled-events metadata service.
+//! The virtual cloud: spot/on-demand instances, scale sets, multi-pool
+//! fleets, pricing, billing, eviction plans, and the scheduled-events
+//! metadata service.
 //!
 //! This is the substrate the paper assumes (Azure spot VMs + Scale Sets +
 //! IMDS + `az vmss simulate-eviction`), rebuilt so its behaviourally
 //! relevant parameters — when instances die, how long replacements take,
 //! how much notice evictions give, what compute-hours cost — are explicit,
 //! configurable, and metered (DESIGN.md §2).
+//!
+//! Above the single scale set sits the [`fleet`] layer: a [`fleet::Fleet`]
+//! owns N pools (each a [`ScaleSet`] with its own price level, eviction
+//! plan and provisioning delay) and a pluggable
+//! [`fleet::PlacementPolicy`] decides which pool every replacement lands
+//! in. The engine drives it through the `ReplacementRequested →
+//! PlacementDecided → InstanceProvisioned` event chain; billing is
+//! attributed per pool ([`billing::BillingMeter::pool_compute_total`]).
 
 pub mod pricing;
 pub mod billing;
@@ -13,9 +22,11 @@ pub mod instance;
 pub mod eviction;
 pub mod metadata;
 pub mod scale_set;
+pub mod fleet;
 pub mod imds_http;
 
 pub use eviction::EvictionPlan;
+pub use fleet::{Fleet, PlacementPolicy, PoolId, PoolStats, PoolView};
 pub use instance::{Instance, InstanceId, InstanceState};
 pub use metadata::{EventStatus, MetadataService, ScheduledEvent};
 pub use pricing::{PriceBook, VmSize};

@@ -33,6 +33,11 @@ impl VmSize {
 }
 
 /// The size catalog (Azure Dsv3-series analog).
+///
+/// Catalogs are validated at construction ([`PriceBook::new`]): every
+/// price must be positive and finite and size names unique, so downstream
+/// arithmetic — [`VmSize::spot_discount`]'s division, billing totals,
+/// placement-policy scores — never meets a zero/negative price.
 #[derive(Debug, Clone)]
 pub struct PriceBook {
     sizes: Vec<VmSize>,
@@ -49,19 +54,72 @@ impl Default for PriceBook {
             ondemand_per_hour: od,
             spot_per_hour: spot,
         };
-        Self {
-            sizes: vec![
-                mk("Standard_D2s_v3", 2, 8, 0.095, 0.019),
-                mk("Standard_D4s_v3", 4, 16, 0.19, 0.038),
-                mk("Standard_D8s_v3", 8, 32, 0.38, 0.076), // paper's VM
-                mk("Standard_D16s_v3", 16, 64, 0.76, 0.152),
-                mk("Standard_D32s_v3", 32, 128, 1.52, 0.304),
-            ],
-        }
+        Self::new(vec![
+            mk("Standard_D2s_v3", 2, 8, 0.095, 0.019),
+            mk("Standard_D4s_v3", 4, 16, 0.19, 0.038),
+            mk("Standard_D8s_v3", 8, 32, 0.38, 0.076), // paper's VM
+            mk("Standard_D16s_v3", 16, 64, 0.76, 0.152),
+            mk("Standard_D32s_v3", 32, 128, 1.52, 0.304),
+        ])
+        .expect("default catalog is valid")
     }
 }
 
 impl PriceBook {
+    /// Build a catalog, rejecting zero/negative/non-finite prices and
+    /// duplicate size names up front (instead of letting
+    /// [`VmSize::spot_discount`] or billing divide by / multiply with
+    /// garbage later).
+    pub fn new(sizes: Vec<VmSize>) -> Result<Self> {
+        if sizes.is_empty() {
+            bail!("price book must contain at least one VM size");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &sizes {
+            if !(s.ondemand_per_hour.is_finite() && s.ondemand_per_hour > 0.0) {
+                bail!(
+                    "VM size '{}': on-demand price {} must be positive and \
+                     finite",
+                    s.name,
+                    s.ondemand_per_hour
+                );
+            }
+            if !(s.spot_per_hour.is_finite() && s.spot_per_hour > 0.0) {
+                bail!(
+                    "VM size '{}': spot price {} must be positive and finite",
+                    s.name,
+                    s.spot_per_hour
+                );
+            }
+            if !seen.insert(s.name.clone()) {
+                bail!("duplicate VM size '{}' in price book", s.name);
+            }
+        }
+        Ok(Self { sizes })
+    }
+
+    /// Derive a region-priced catalog: every price scaled by `factor`
+    /// (a cheap region < 1, an expensive one > 1). `1.0` returns the
+    /// catalog unchanged, bit-for-bit.
+    pub fn with_price_factor(&self, factor: f64) -> Result<Self> {
+        if !(factor.is_finite() && factor > 0.0) {
+            bail!("price factor {factor} must be positive and finite");
+        }
+        if factor == 1.0 {
+            return Ok(self.clone());
+        }
+        Self::new(
+            self.sizes
+                .iter()
+                .map(|s| VmSize {
+                    ondemand_per_hour: s.ondemand_per_hour * factor,
+                    spot_per_hour: s.spot_per_hour * factor,
+                    ..s.clone()
+                })
+                .collect(),
+        )
+    }
+
     pub fn lookup(&self, name: &str) -> Result<&VmSize> {
         match self.sizes.iter().find(|s| s.name == name) {
             Some(s) => Ok(s),
@@ -108,6 +166,58 @@ mod tests {
     #[test]
     fn unknown_size_errors() {
         assert!(PriceBook::default().lookup("Standard_Z1").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_catalogs() {
+        let good = |name: &str| VmSize {
+            name: name.into(),
+            vcpus: 2,
+            mem_gib: 8,
+            ondemand_per_hour: 0.1,
+            spot_per_hour: 0.02,
+        };
+        // zero / negative / non-finite on-demand price
+        for bad_od in [0.0, -0.38, f64::NAN, f64::INFINITY] {
+            let mut s = good("A");
+            s.ondemand_per_hour = bad_od;
+            let err = PriceBook::new(vec![s]).unwrap_err();
+            assert!(err.to_string().contains("on-demand price"), "{err}");
+        }
+        // zero / negative spot price
+        for bad_spot in [0.0, -0.01] {
+            let mut s = good("A");
+            s.spot_per_hour = bad_spot;
+            assert!(PriceBook::new(vec![s]).is_err());
+        }
+        // duplicate names
+        let err =
+            PriceBook::new(vec![good("A"), good("A")]).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        // empty catalog
+        assert!(PriceBook::new(vec![]).is_err());
+        // a valid catalog passes
+        assert!(PriceBook::new(vec![good("A"), good("B")]).is_ok());
+    }
+
+    #[test]
+    fn price_factor_scales_and_validates() {
+        let base = PriceBook::default();
+        let cheap = base.with_price_factor(0.5).unwrap();
+        let d8 = cheap.lookup("Standard_D8s_v3").unwrap();
+        assert!((d8.ondemand_per_hour - 0.19).abs() < 1e-12);
+        assert!((d8.spot_per_hour - 0.038).abs() < 1e-12);
+        // discount ratio is preserved under scaling
+        assert!((d8.spot_discount() - 0.8).abs() < 1e-9);
+        // factor 1.0 is bit-identical
+        let same = base.with_price_factor(1.0).unwrap();
+        let a = same.lookup("Standard_D8s_v3").unwrap();
+        let b = base.lookup("Standard_D8s_v3").unwrap();
+        assert_eq!(a.ondemand_per_hour.to_bits(), b.ondemand_per_hour.to_bits());
+        // invalid factors are rejected
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(base.with_price_factor(bad).is_err());
+        }
     }
 
     #[test]

@@ -2,12 +2,20 @@
 //!
 //! The paper deploys workloads through scale sets because they "act as a
 //! VM pool manager that is capable of restarting new spot instances upon
-//! eviction of existing spot instances" (§III). This model keeps one
-//! instance alive (capacity 1, like the paper's runs): when the current
-//! instance is evicted, a replacement enters provisioning and comes up
-//! after `provisioning_delay`. Custom Data (the coordinator launch script)
-//! is re-run on every new instance — in this codebase that corresponds to
+//! eviction of existing spot instances" (§III). The paper's runs use
+//! capacity 1 (the [`ScaleSet::new`] default): when the current instance
+//! is evicted, a replacement enters provisioning and comes up after
+//! `provisioning_delay`. Custom Data (the coordinator launch script) is
+//! re-run on every new instance — in this codebase that corresponds to
 //! the restart path of [`crate::coordinator`].
+//!
+//! Since the fleet refactor the capacity-1 assumption is no longer baked
+//! in: [`ScaleSet::with_capacity`] admits N concurrent instances, and
+//! [`ScaleSet::launch_with_id`] lets an owner ([`super::fleet::Fleet`])
+//! allocate instance ids across several sets so a multi-pool fleet keeps
+//! one experiment-wide id sequence. [`ScaleSet::with_pool_label`] tags the
+//! uptime this set books so [`super::billing::BillingMeter`] can attribute
+//! cost per pool.
 
 use super::billing::BillingMeter;
 use super::instance::{Instance, InstanceId};
@@ -15,15 +23,20 @@ use super::pricing::PriceBook;
 use crate::simclock::{SimDuration, SimTime};
 use anyhow::Result;
 
-/// Capacity-1 scale set with automatic replacement.
+/// A pool of up to `capacity` concurrent instances with automatic
+/// replacement semantics (capacity 1 by default, the paper's setup).
 #[derive(Debug)]
 pub struct ScaleSet {
     vm_size: String,
     spot: bool,
+    capacity: u32,
     provisioning_delay: SimDuration,
     price_book: PriceBook,
+    /// Billing attribution tag when this set is one pool of a fleet.
+    pool_label: Option<String>,
     next_id: u64,
-    current: Option<Instance>,
+    /// Currently-running instances (≤ capacity).
+    running: Vec<Instance>,
     /// Total instances launched over the experiment (for reporting).
     launched: u32,
 }
@@ -40,78 +53,127 @@ impl ScaleSet {
         Ok(Self {
             vm_size: vm_size.to_string(),
             spot,
+            capacity: 1,
             provisioning_delay,
             price_book,
+            pool_label: None,
             next_id: 0,
-            current: None,
+            running: Vec::new(),
             launched: 0,
         })
     }
 
-    /// Launch a new instance, immediately Running at `now`. (The
-    /// provisioning delay is charged by the driver between the eviction
-    /// and calling this — see [`Self::provisioning_delay`].)
-    pub fn launch(&mut self, now: SimTime) -> &Instance {
-        assert!(
-            self.current.as_ref().map_or(true, |i| !i.is_running()),
-            "scale set capacity is 1"
-        );
-        let id = InstanceId(self.next_id);
-        self.next_id += 1;
-        self.launched += 1;
-        self.current = Some(Instance::new(id, &self.vm_size, self.spot, now));
-        self.current.as_ref().unwrap()
+    /// Allow up to `capacity` concurrent instances (batch-cluster pools).
+    pub fn with_capacity(mut self, capacity: u32) -> Self {
+        assert!(capacity >= 1, "scale set capacity must be >= 1");
+        self.capacity = capacity;
+        self
     }
 
-    /// The currently-live instance, if any.
+    /// Attribute this set's billed uptime to a named fleet pool.
+    pub fn with_pool_label(mut self, label: &str) -> Self {
+        self.pool_label = Some(label.to_string());
+        self
+    }
+
+    /// Launch a new instance, immediately Running at `now`. (The
+    /// provisioning delay is charged by the engine between the eviction
+    /// and calling this — see [`Self::provisioning_delay`].)
+    pub fn launch(&mut self, now: SimTime) -> &Instance {
+        let id = InstanceId(self.next_id);
+        self.launch_with_id(id, now)
+    }
+
+    /// Launch with an externally-allocated id (a fleet keeps one id
+    /// sequence across its pools' sets).
+    pub fn launch_with_id(&mut self, id: InstanceId, now: SimTime) -> &Instance {
+        assert!(
+            (self.running.len() as u32) < self.capacity,
+            "scale set at capacity ({})",
+            self.capacity
+        );
+        self.next_id = self.next_id.max(id.0 + 1);
+        self.launched += 1;
+        self.running
+            .push(Instance::new(id, &self.vm_size, self.spot, now));
+        self.running.last().expect("just pushed")
+    }
+
+    /// The oldest currently-live instance, if any (the only instance in a
+    /// capacity-1 set).
     pub fn current(&self) -> Option<&Instance> {
-        self.current.as_ref().filter(|i| i.is_running())
+        self.running.first()
     }
 
     pub fn current_mut(&mut self) -> Option<&mut Instance> {
-        self.current.as_mut().filter(|i| i.is_running())
+        self.running.first_mut()
     }
 
-    /// Terminate the current instance at `now`, booking its uptime.
+    /// All currently-running instances.
+    pub fn running(&self) -> &[Instance] {
+        &self.running
+    }
+
+    pub fn running_count(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Terminate the oldest running instance at `now`, booking its uptime.
     pub fn terminate_current(
         &mut self,
         now: SimTime,
         billing: &mut BillingMeter,
     ) -> Option<InstanceId> {
-        let inst = self.current.as_mut()?;
-        if !inst.is_running() {
-            return None;
-        }
+        let id = self.running.first()?.id;
+        self.terminate(id, now, billing)
+    }
+
+    /// Terminate a specific running instance at `now`, booking its uptime.
+    /// Returns `None` if no such instance is running.
+    pub fn terminate(
+        &mut self,
+        id: InstanceId,
+        now: SimTime,
+        billing: &mut BillingMeter,
+    ) -> Option<InstanceId> {
+        let idx = self.running.iter().position(|i| i.id == id)?;
+        let mut inst = self.running.remove(idx);
         let uptime = inst.terminate(now);
         let size = self
             .price_book
             .lookup(&inst.vm_size)
             .expect("validated at construction");
-        billing.book_instance(
-            &inst.id.to_string(),
-            &inst.vm_size,
-            inst.spot,
-            uptime,
-            size.price_per_hour(inst.spot),
-        );
+        let price = size.price_per_hour(inst.spot);
+        match &self.pool_label {
+            Some(pool) => billing.book_instance_in_pool(
+                pool,
+                &inst.id.to_string(),
+                &inst.vm_size,
+                inst.spot,
+                uptime,
+                price,
+            ),
+            None => billing.book_instance(
+                &inst.id.to_string(),
+                &inst.vm_size,
+                inst.spot,
+                uptime,
+                price,
+            ),
+        }
         Some(inst.id)
     }
 
-    /// Delay before a replacement instance is Running.
+    /// Delay before a replacement instance is Running. (The instant a
+    /// replacement is actually Running is the fleet's call —
+    /// [`super::fleet::Fleet::ready_at`] — scheduled as an event by the
+    /// engine, never a blocking wait.)
     pub fn provisioning_delay(&self) -> SimDuration {
         self.provisioning_delay
-    }
-
-    /// The instant a launch requested at `now` is Running — the event the
-    /// simulation engine schedules instead of blocking the clock. The
-    /// first launch of a scale set is immediate (capacity was free);
-    /// replacements pay the provisioning delay.
-    pub fn replacement_ready_at(&self, now: SimTime) -> SimTime {
-        if self.launched == 0 {
-            now
-        } else {
-            now + self.provisioning_delay
-        }
     }
 
     /// Change the VM size for future launches (OOM-resume upsizing,
@@ -180,11 +242,56 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "capacity is 1")]
-    fn capacity_is_one() {
+    #[should_panic(expected = "at capacity (1)")]
+    fn default_capacity_is_one() {
         let mut ss = mk();
         ss.launch(SimTime::ZERO);
         ss.launch(SimTime::from_secs(1));
+    }
+
+    #[test]
+    fn capacity_n_runs_concurrent_instances() {
+        let mut ss = mk().with_capacity(3);
+        let mut billing = BillingMeter::new();
+        let a = ss.launch(SimTime::ZERO).id;
+        let b = ss.launch(SimTime::from_secs(10)).id;
+        let c = ss.launch(SimTime::from_secs(20)).id;
+        assert_eq!(ss.running_count(), 3);
+        assert_eq!(ss.launched(), 3);
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        // terminate the middle instance specifically
+        let tid = ss.terminate(b, SimTime::from_secs(3610), &mut billing);
+        assert_eq!(tid, Some(b));
+        assert_eq!(ss.running_count(), 2);
+        // 1 hour spot uptime booked for b only
+        assert!((billing.total() - 0.076).abs() < 1e-9);
+        // a is still the oldest running instance
+        assert_eq!(ss.current().unwrap().id, a);
+        // unknown id is a no-op
+        assert!(ss.terminate(b, SimTime::from_secs(4000), &mut billing).is_none());
+    }
+
+    #[test]
+    fn external_ids_keep_sequence_monotone() {
+        let mut ss = mk().with_capacity(2);
+        let mut billing = BillingMeter::new();
+        ss.launch_with_id(InstanceId(7), SimTime::ZERO);
+        // internal allocation resumes above the external id
+        let id = ss.launch(SimTime::from_secs(1)).id;
+        assert_eq!(id, InstanceId(8));
+        ss.terminate(InstanceId(7), SimTime::from_secs(2), &mut billing);
+        ss.terminate(InstanceId(8), SimTime::from_secs(2), &mut billing);
+    }
+
+    #[test]
+    fn pool_label_attributes_billing() {
+        let mut ss = mk().with_pool_label("east");
+        let mut billing = BillingMeter::new();
+        ss.launch(SimTime::ZERO);
+        ss.terminate_current(SimTime::from_secs(3600), &mut billing);
+        assert!((billing.pool_compute_total("east") - 0.076).abs() < 1e-9);
+        assert_eq!(billing.pool_compute_total("west"), 0.0);
     }
 
     #[test]

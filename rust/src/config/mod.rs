@@ -10,7 +10,7 @@ pub mod toml;
 pub mod scenario;
 
 pub use scenario::{
-    CheckpointMethodCfg, EvictionPlanCfg, ScenarioConfig, StorageCfg,
-    WorkloadCfg,
+    CheckpointMethodCfg, CloudCfg, EvictionPlanCfg, FleetCfg,
+    PlacementPolicyCfg, PoolCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

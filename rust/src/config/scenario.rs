@@ -69,6 +69,122 @@ impl EvictionPlanCfg {
     }
 }
 
+/// One pool of a [`FleetCfg`]: a region / VM-size combination with its
+/// own price level, eviction behaviour and provisioning delay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolCfg {
+    /// Pool name (billing attribution tag; must be unique in the fleet).
+    pub name: String,
+    /// VM size looked up in the pool's price book.
+    pub vm_size: String,
+    /// Spot pricing/eviction semantics, or on-demand.
+    pub spot: bool,
+    /// Replacement provisioning delay for instances placed in this pool.
+    pub provisioning_delay: SimDuration,
+    /// Multiplier applied to the default price catalog (a cheap region is
+    /// < 1, an expensive one > 1). Must be positive and finite.
+    pub price_factor: f64,
+    /// Eviction behaviour of instances placed in this pool.
+    pub eviction: EvictionPlanCfg,
+}
+
+impl Default for PoolCfg {
+    fn default() -> Self {
+        Self {
+            name: "pool-0".into(),
+            vm_size: "Standard_D8s_v3".into(),
+            spot: true,
+            provisioning_delay: SimDuration::from_secs(90),
+            price_factor: 1.0,
+            eviction: EvictionPlanCfg::None,
+        }
+    }
+}
+
+impl PoolCfg {
+    /// A default pool with the given name.
+    pub fn named(name: &str) -> Self {
+        Self { name: name.into(), ..Self::default() }
+    }
+
+    /// The single pool the paper's testbed corresponds to: the `[cloud]`
+    /// section's scale set plus the scenario-level eviction plan.
+    pub fn from_cloud(cloud: &CloudCfg, eviction: EvictionPlanCfg) -> Self {
+        Self {
+            name: "pool-0".into(),
+            vm_size: cloud.vm_size.clone(),
+            spot: cloud.spot,
+            provisioning_delay: cloud.provisioning_delay,
+            price_factor: 1.0,
+            eviction,
+        }
+    }
+
+    pub fn vm_size(mut self, size: &str) -> Self {
+        self.vm_size = size.to_string();
+        self
+    }
+
+    pub fn spot(mut self, spot: bool) -> Self {
+        self.spot = spot;
+        self
+    }
+
+    pub fn provisioning_delay(mut self, delay: SimDuration) -> Self {
+        self.provisioning_delay = delay;
+        self
+    }
+
+    pub fn price_factor(mut self, factor: f64) -> Self {
+        self.price_factor = factor;
+        self
+    }
+
+    pub fn eviction(mut self, plan: EvictionPlanCfg) -> Self {
+        self.eviction = plan;
+        self
+    }
+}
+
+/// Which placement policy picks the pool for each replacement
+/// ([`crate::cloud::fleet`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PlacementPolicyCfg {
+    /// Always replace in the pool the evicted instance came from —
+    /// byte-for-byte the single-scale-set world on a 1-pool fleet.
+    #[default]
+    Sticky,
+    /// Always pick the pool with the lowest hourly price.
+    CheapestSpot,
+    /// Pick the pool minimizing `price × (1 + penalty × eviction_rate)`,
+    /// where the eviction rate is the pool's observed evictions per
+    /// launch — heterogeneous-spot placement à la Qu et al.
+    EvictionAware { penalty: f64 },
+}
+
+impl PlacementPolicyCfg {
+    pub fn label(&self) -> String {
+        match self {
+            PlacementPolicyCfg::Sticky => "sticky".into(),
+            PlacementPolicyCfg::CheapestSpot => "cheapest-spot".into(),
+            PlacementPolicyCfg::EvictionAware { penalty } => {
+                format!("eviction-aware/{penalty}")
+            }
+        }
+    }
+}
+
+/// The fleet: which pools replacements may be placed in, and the policy
+/// that picks among them.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetCfg {
+    /// Explicit pools. Empty (the default) means "one pool derived from
+    /// `[cloud]` + `[eviction]`" — the paper's single capacity-1 scale
+    /// set.
+    pub pools: Vec<PoolCfg>,
+    pub placement: PlacementPolicyCfg,
+}
+
 /// Workload selection + calibration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadCfg {
@@ -182,7 +298,15 @@ pub struct ScenarioConfig {
     pub workload: WorkloadCfg,
     pub eviction: EvictionPlanCfg,
     pub checkpoint: CheckpointMethodCfg,
+    /// Compress the opportunistic termination checkpoint when the raw
+    /// image would not fit the notice window (the coordinator samples the
+    /// snapshot's compression ratio to decide — `checkpoint::compress`).
+    pub compress_termination: bool,
     pub cloud: CloudCfg,
+    /// Replacement pools + placement policy. Defaults to a single pool
+    /// derived from `cloud`/`eviction` with sticky placement (the paper's
+    /// capacity-1 scale set).
+    pub fleet: FleetCfg,
     pub storage: StorageCfg,
     /// Abort threshold: give up if the run exceeds this much virtual time
     /// (catches never-completing configurations — paper §IV).
@@ -198,7 +322,9 @@ impl Default for ScenarioConfig {
             workload: WorkloadCfg::default(),
             eviction: EvictionPlanCfg::None,
             checkpoint: CheckpointMethodCfg::None,
+            compress_termination: false,
             cloud: CloudCfg::default(),
+            fleet: FleetCfg::default(),
             storage: StorageCfg::default(),
             deadline: SimDuration::from_hours(48),
         }
@@ -212,6 +338,42 @@ fn mins(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
 
 fn secs(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
     doc.get_f64(sec, key).map(SimDuration::from_secs_f64)
+}
+
+/// Parse an eviction plan out of `sec` (used by both the scenario-level
+/// `[eviction]` section and per-pool `[pool.NAME]` sections).
+fn eviction_plan_from(doc: &TomlDoc, sec: &str) -> Result<EvictionPlanCfg> {
+    let plan = doc.get_str(sec, "plan").unwrap_or("none");
+    Ok(match plan {
+        "none" => EvictionPlanCfg::None,
+        "fixed" => EvictionPlanCfg::Fixed {
+            interval: mins(doc, sec, "interval_mins")
+                .with_context(|| format!("{sec}.interval_mins required for fixed"))?,
+        },
+        "poisson" => EvictionPlanCfg::Poisson {
+            mean: mins(doc, sec, "mean_mins")
+                .with_context(|| format!("{sec}.mean_mins required for poisson"))?,
+        },
+        "trace" => {
+            let arr = doc
+                .get(sec, "offsets_mins")
+                .and_then(TomlValue::as_array)
+                .with_context(|| {
+                    format!("{sec}.offsets_mins required for trace")
+                })?;
+            EvictionPlanCfg::Trace {
+                offsets: arr
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|m| SimDuration::from_secs_f64(m * 60.0))
+                            .context("offsets_mins must be numbers")
+                    })
+                    .collect::<Result<_>>()?,
+            }
+        }
+        other => bail!("unknown {sec}.plan '{other}'"),
+    })
 }
 
 impl ScenarioConfig {
@@ -285,35 +447,7 @@ impl ScenarioConfig {
 
         // [eviction]
         if doc.has_section("eviction") {
-            let plan = doc.get_str("eviction", "plan").unwrap_or("none");
-            cfg.eviction = match plan {
-                "none" => EvictionPlanCfg::None,
-                "fixed" => EvictionPlanCfg::Fixed {
-                    interval: mins(doc, "eviction", "interval_mins")
-                        .context("eviction.interval_mins required for fixed")?,
-                },
-                "poisson" => EvictionPlanCfg::Poisson {
-                    mean: mins(doc, "eviction", "mean_mins")
-                        .context("eviction.mean_mins required for poisson")?,
-                },
-                "trace" => {
-                    let arr = doc
-                        .get("eviction", "offsets_mins")
-                        .and_then(TomlValue::as_array)
-                        .context("eviction.offsets_mins required for trace")?;
-                    EvictionPlanCfg::Trace {
-                        offsets: arr
-                            .iter()
-                            .map(|v| {
-                                v.as_f64()
-                                    .map(|m| SimDuration::from_secs_f64(m * 60.0))
-                                    .context("offsets_mins must be numbers")
-                            })
-                            .collect::<Result<_>>()?,
-                    }
-                }
-                other => bail!("unknown eviction.plan '{other}'"),
-            };
+            cfg.eviction = eviction_plan_from(doc, "eviction")?;
         }
 
         // [checkpoint]
@@ -329,6 +463,9 @@ impl ScenarioConfig {
                 },
                 other => bail!("unknown checkpoint.method '{other}'"),
             };
+            if let Some(v) = doc.get_bool("checkpoint", "compress") {
+                cfg.compress_termination = v;
+            }
         }
 
         // [cloud]
@@ -369,6 +506,72 @@ impl ScenarioConfig {
         }
         if let Some(v) = doc.get_f64("storage", "price_per_100gib_month") {
             cfg.storage.price_per_100gib_month = v;
+        }
+
+        // [fleet] + [pool.NAME] sections (multi-pool replacement fleets).
+        // Pools are collected in section-name order (the parser keeps
+        // sections in a sorted map), which fixes pool indices and thereby
+        // per-pool eviction-plan seeds.
+        if doc.has_section("fleet") {
+            cfg.fleet.placement = match doc.get_str("fleet", "placement") {
+                None | Some("sticky") => PlacementPolicyCfg::Sticky,
+                Some("cheapest-spot") => PlacementPolicyCfg::CheapestSpot,
+                Some("eviction-aware") => {
+                    let penalty =
+                        doc.get_f64("fleet", "penalty").unwrap_or(4.0);
+                    if !(penalty.is_finite() && penalty >= 0.0) {
+                        bail!(
+                            "fleet.penalty must be finite and non-negative, \
+                             got {penalty}"
+                        );
+                    }
+                    PlacementPolicyCfg::EvictionAware { penalty }
+                }
+                Some(other) => bail!("unknown fleet.placement '{other}'"),
+            };
+        }
+        let pool_sections: Vec<String> = doc
+            .sections
+            .keys()
+            .filter(|s| s.starts_with("pool."))
+            .cloned()
+            .collect();
+        for sec in pool_sections {
+            let name = sec["pool.".len()..].to_string();
+            if name.is_empty() {
+                bail!("pool section needs a name: [pool.NAME]");
+            }
+            if cfg.fleet.pools.iter().any(|p| p.name == name) {
+                bail!("duplicate pool '{name}'");
+            }
+            let mut pool = PoolCfg::named(&name);
+            if let Some(v) = doc.get_str(&sec, "vm_size") {
+                pool.vm_size = v.to_string();
+            }
+            if let Some(v) = doc.get_bool(&sec, "spot") {
+                pool.spot = v;
+            }
+            if let Some(v) = secs(doc, &sec, "provisioning_delay_secs") {
+                pool.provisioning_delay = v;
+            }
+            if let Some(v) = doc.get_f64(&sec, "price_factor") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("{sec}.price_factor must be positive and finite");
+                }
+                pool.price_factor = v;
+            }
+            pool.eviction = eviction_plan_from(doc, &sec)?;
+            cfg.fleet.pools.push(pool);
+        }
+        // With explicit pools, eviction behaviour lives on the pools; a
+        // scenario-level [eviction] plan would be silently ignored, so
+        // reject the ambiguous combination outright.
+        if !cfg.fleet.pools.is_empty() && cfg.eviction != EvictionPlanCfg::None
+        {
+            bail!(
+                "[eviction] conflicts with explicit [pool.*] sections — move \
+                 the plan into the pools (each pool has its own)"
+            );
         }
 
         Ok(cfg)
@@ -499,6 +702,89 @@ provisioned_gib = 200.0
             "[storage]\nbandwidth_mib_s = 0.0"
         )
         .is_err());
+    }
+
+    #[test]
+    fn fleet_and_pool_sections_parse() {
+        let cfg = ScenarioConfig::from_str_toml(
+            r#"
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+compress = true
+
+[fleet]
+placement = "eviction-aware"
+penalty = 3.5
+
+[pool.east]
+vm_size = "Standard_D8s_v3"
+price_factor = 0.85
+plan = "fixed"
+interval_mins = 5
+provisioning_delay_secs = 1200
+
+[pool.west]
+price_factor = 1.2
+plan = "poisson"
+mean_mins = 480
+"#,
+        )
+        .unwrap();
+        assert!(cfg.compress_termination);
+        assert_eq!(
+            cfg.fleet.placement,
+            PlacementPolicyCfg::EvictionAware { penalty: 3.5 }
+        );
+        assert_eq!(cfg.fleet.pools.len(), 2);
+        // sections arrive in sorted order: east before west
+        let east = &cfg.fleet.pools[0];
+        assert_eq!(east.name, "east");
+        assert_eq!(east.price_factor, 0.85);
+        assert_eq!(east.provisioning_delay.as_secs(), 1200);
+        assert_eq!(
+            east.eviction,
+            EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(5) }
+        );
+        let west = &cfg.fleet.pools[1];
+        assert_eq!(west.name, "west");
+        assert!(west.spot);
+        assert_eq!(
+            west.eviction,
+            EvictionPlanCfg::Poisson { mean: SimDuration::from_mins(480) }
+        );
+        // defaults: no fleet section → empty pools, sticky placement
+        let plain = ScenarioConfig::from_str_toml("name = \"x\"").unwrap();
+        assert!(plain.fleet.pools.is_empty());
+        assert_eq!(plain.fleet.placement, PlacementPolicyCfg::Sticky);
+        assert!(!plain.compress_termination);
+    }
+
+    #[test]
+    fn bad_fleet_configs_rejected() {
+        assert!(ScenarioConfig::from_str_toml(
+            "[fleet]\nplacement = \"round-robin\""
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[fleet]\nplacement = \"eviction-aware\"\npenalty = -2.0"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a]\nprice_factor = 0.0"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a]\nplan = \"fixed\""
+        )
+        .is_err());
+        // a scenario-level eviction plan would be silently shadowed by
+        // explicit pools — rejected as ambiguous
+        let err = ScenarioConfig::from_str_toml(
+            "[eviction]\nplan = \"fixed\"\ninterval_mins = 90\n\n[pool.a]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("conflicts"), "{err}");
     }
 
     #[test]

@@ -11,11 +11,28 @@ use crate::simclock::{SimDuration, SimTime};
 #[derive(Debug, Clone, PartialEq)]
 pub struct CheckpointPolicy {
     method: CheckpointMethodCfg,
+    /// Compress the termination checkpoint when the raw image would not
+    /// fit the notice window (see
+    /// [`crate::coordinator::handlers::on_poll_tick`]).
+    compress_termination: bool,
 }
 
 impl CheckpointPolicy {
     pub fn new(method: CheckpointMethodCfg) -> Self {
-        Self { method }
+        Self { method, compress_termination: false }
+    }
+
+    /// Enable/disable termination-checkpoint compression (off by
+    /// default, matching the paper's setup).
+    pub fn with_compression(mut self, on: bool) -> Self {
+        self.compress_termination = on;
+        self
+    }
+
+    /// Should the coordinator try compressing a termination checkpoint
+    /// that would otherwise miss the notice deadline?
+    pub fn compress_termination(&self) -> bool {
+        self.compress_termination
     }
 
     pub fn method(&self) -> &CheckpointMethodCfg {

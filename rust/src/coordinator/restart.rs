@@ -47,6 +47,10 @@ impl RestartManager {
         let (payload, fetch_cost) =
             CheckpointStore::fetch_payload(store, &manifest)
                 .context("fetching checkpoint payload")?;
+        // Compressed termination checkpoints (notice-window rescue) are
+        // framed; anything else passes through untouched.
+        let payload = crate::checkpoint::compress::decompress(&payload)
+            .context("decompressing checkpoint payload")?;
         let mut cost = fetch_cost;
         if surface {
             workload
@@ -131,6 +135,44 @@ mod tests {
         assert_eq!(fresh.progress().total_steps, 30);
         assert_eq!(fresh.fingerprint(), w.fingerprint());
         assert!(report.cost > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn restores_compressed_payload() {
+        // A termination checkpoint written as a compressed frame (the
+        // notice-window rescue) restores transparently: fetch verifies
+        // the frame bytes, decompress recovers the raw state.
+        use crate::checkpoint::compress;
+        use crate::workload::Snapshot;
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 5);
+        for _ in 0..17 {
+            w.step().unwrap();
+        }
+        let raw = w.snapshot().unwrap();
+        let framed = compress::compress(&raw.bytes).unwrap();
+        let ratio = compress::ratio(&raw.bytes).unwrap();
+        let snap = Snapshot {
+            bytes: framed,
+            charged_bytes: (raw.charged_bytes as f64 * ratio).ceil() as u64,
+        };
+        writer
+            .write(&mut store, SimTime::from_secs(9), CkptKind::Termination,
+                   &w, &snap)
+            .unwrap()
+            .committed()
+            .expect("compressed write commits");
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 5);
+        let report = RestartManager::find_and_restore(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(report.resumed_total_steps, 17);
+        assert_eq!(fresh.fingerprint(), w.fingerprint());
     }
 
     #[test]

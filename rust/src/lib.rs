@@ -23,16 +23,21 @@
 //!   checkpoint commits, eviction notices, coordinator poll ticks,
 //!   provisioning completions — dispatched to per-concern handlers (the
 //!   coordinator's reactions live in [`coordinator::handlers`]). Around
-//!   it: a virtual cloud with spot semantics ([`cloud`]; provisioning
-//!   completes as a scheduled event via
-//!   [`cloud::scale_set::ScaleSet::replacement_ready_at`]), metered shared
-//!   storage ([`storage`]), the checkpoint engine ([`checkpoint`]), an
-//!   IMDS-compatible scheduled-events HTTP service ([`httpd`],
-//!   [`cloud::imds_http`]), billing/pricing ([`cloud::billing`],
-//!   [`cloud::pricing`]), run instrumentation ([`metrics`]), and an
-//!   event-driven multi-slot requeue scheduler ([`sched`]) that
-//!   interleaves whole jobs on the same queue (the Slurm/LSF path of
-//!   paper §II). [`sim::driver::SimDriver`] is the stable facade over the
+//!   it: a virtual cloud with spot semantics ([`cloud`]), whose
+//!   [`cloud::fleet`] layer runs each experiment on N replacement pools —
+//!   per-pool price books, eviction plans and provisioning delays — with
+//!   a pluggable placement policy deciding where every replacement lands
+//!   (`ReplacementRequested → PlacementDecided → InstanceProvisioned` on
+//!   the queue, cost attributed per pool); metered shared storage
+//!   ([`storage`]), the checkpoint engine ([`checkpoint`]; compressible
+//!   images can rescue termination checkpoints from short notice windows
+//!   via [`checkpoint::compress`]), an IMDS-compatible scheduled-events
+//!   HTTP service ([`httpd`], [`cloud::imds_http`]), billing/pricing
+//!   ([`cloud::billing`], [`cloud::pricing`]), run instrumentation
+//!   ([`metrics`]), and an event-driven multi-slot requeue scheduler
+//!   ([`sched`]) that interleaves whole jobs on the same queue and can
+//!   draw every job's replacements from one shared fleet (the Slurm/LSF
+//!   path of paper §II). [`sim::SimDriver`] is the stable facade over the
 //!   engine; [`sim::legacy`] preserves the pre-refactor loop as the
 //!   equivalence oracle.
 //! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly

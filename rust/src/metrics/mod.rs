@@ -18,6 +18,11 @@ pub enum EventKind {
     CheckpointFailed,
     EvictionNotice,
     InstanceEvicted,
+    /// A replacement was requested from the fleet (multi-pool runs).
+    ReplacementRequested,
+    /// The placement policy picked the replacement's pool (multi-pool
+    /// runs; detail names the pool).
+    PlacementDecided,
     StageComplete,
     WorkloadDone,
     Aborted,
@@ -37,6 +42,8 @@ impl EventKind {
             EventKind::CheckpointFailed => "ckpt-failed",
             EventKind::EvictionNotice => "notice",
             EventKind::InstanceEvicted => "evicted",
+            EventKind::ReplacementRequested => "replace-req",
+            EventKind::PlacementDecided => "placement",
             EventKind::StageComplete => "stage-done",
             EventKind::WorkloadDone => "done",
             EventKind::Aborted => "aborted",

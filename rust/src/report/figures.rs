@@ -2,7 +2,7 @@
 //! renderers.
 
 use super::table::{bar_chart, TextTable};
-use crate::sim::driver::RunResult;
+use crate::sim::RunResult;
 
 /// Fig 2: total cost per configuration, with savings relative to the
 /// on-demand baseline (first entry).

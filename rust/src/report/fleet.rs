@@ -1,0 +1,116 @@
+//! Fleet reporting: per-pool cost attribution and placement-policy
+//! comparison tables (the multi-pool companion to Table I).
+
+use super::table::TextTable;
+use crate::sim::RunResult;
+use crate::util::fmt::{dollars, pct};
+
+/// Per-pool breakdown of one run: launches, evictions, and the compute
+/// cost attributed to each pool, with the attribution total against the
+/// run's compute cost (they must match — the billing invariant
+/// `tests/fleet_placement.rs` pins).
+pub fn render_pool_breakdown(r: &RunResult) -> String {
+    let mut t = TextTable::new(&[
+        "Pool", "VM size", "Type", "Launches", "Evictions", "Compute",
+        "Share",
+    ]);
+    let attributed: f64 = r.pool_stats.iter().map(|p| p.compute_cost).sum();
+    for p in &r.pool_stats {
+        t.row(&[
+            p.pool.clone(),
+            p.vm_size.clone(),
+            if p.spot { "spot" } else { "on-demand" }.to_string(),
+            p.launches.to_string(),
+            p.evictions.to_string(),
+            dollars(p.compute_cost),
+            if attributed > 0.0 {
+                pct(p.compute_cost / attributed)
+            } else {
+                "—".to_string()
+            },
+        ]);
+    }
+    t.row(&[
+        "TOTAL".to_string(),
+        String::new(),
+        String::new(),
+        r.instances.to_string(),
+        r.evictions.to_string(),
+        dollars(attributed),
+        String::new(),
+    ]);
+    let mut out = t.render();
+    out.push_str(&format!(
+        "  compute {} + storage {} = {}\n",
+        dollars(r.compute_cost),
+        dollars(r.storage_cost),
+        dollars(r.total_cost()),
+    ));
+    out
+}
+
+/// Side-by-side comparison of several runs of the same scenario under
+/// different placement policies (the `fleet_failover` example's table).
+pub fn render_policy_comparison(results: &[(&str, &RunResult)]) -> String {
+    let mut t = TextTable::new(&[
+        "Policy", "Completed", "Makespan", "Evictions", "Instances",
+        "Compute", "Storage", "Total",
+    ]);
+    for (label, r) in results {
+        t.row(&[
+            label.to_string(),
+            if r.completed { "yes" } else { "DNF" }.to_string(),
+            r.total.hms(),
+            r.evictions.to_string(),
+            r.instances.to_string(),
+            dollars(r.compute_cost),
+            dollars(r.storage_cost),
+            dollars(r.total_cost()),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EvictionPlanCfg, PlacementPolicyCfg, PoolCfg};
+    use crate::sim::experiment::Experiment;
+    use crate::simclock::SimDuration;
+
+    fn two_pool_run() -> RunResult {
+        Experiment::table1()
+            .named("fleet-report")
+            .transparent(SimDuration::from_mins(15))
+            .pool(PoolCfg::named("storm").price_factor(0.9).eviction(
+                EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(30) },
+            ))
+            .pool(PoolCfg::named("stable").price_factor(1.1))
+            .placement(PlacementPolicyCfg::EvictionAware { penalty: 4.0 })
+            .run_sleeper()
+            .unwrap()
+    }
+
+    #[test]
+    fn pool_breakdown_renders_attribution() {
+        let r = two_pool_run();
+        assert!(r.completed);
+        let s = render_pool_breakdown(&r);
+        assert!(s.contains("storm"), "{s}");
+        assert!(s.contains("stable"), "{s}");
+        assert!(s.contains("TOTAL"), "{s}");
+        assert!(s.contains("compute"), "{s}");
+    }
+
+    #[test]
+    fn policy_comparison_renders_rows() {
+        let r = two_pool_run();
+        let s = render_policy_comparison(&[
+            ("eviction-aware", &r),
+            ("again", &r),
+        ]);
+        assert!(s.contains("eviction-aware"), "{s}");
+        assert!(s.contains("Makespan"), "{s}");
+        assert!(s.contains("yes"), "{s}");
+    }
+}

@@ -6,10 +6,14 @@
 //!   paper-vs-measured side by side.
 //! * [`figures`] — Fig 2 (cost comparison) and Fig 3 (app-native vs
 //!   transparent execution time) as ASCII bar charts + CSV series.
+//! * [`fleet`] — per-pool cost attribution and placement-policy
+//!   comparison for multi-pool fleet runs.
 
 pub mod table;
 pub mod table1;
 pub mod figures;
+pub mod fleet;
 
+pub use fleet::{render_policy_comparison, render_pool_breakdown};
 pub use table::TextTable;
 pub use table1::{paper_rows, render_comparison, Table1Row};

@@ -2,7 +2,7 @@
 //! paper-vs-measured comparison renderer.
 
 use super::table::TextTable;
-use crate::sim::driver::RunResult;
+use crate::sim::RunResult;
 use crate::sim::experiment::Experiment;
 use crate::simclock::SimDuration;
 use crate::util::fmt::parse_hms;

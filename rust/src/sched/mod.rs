@@ -26,9 +26,18 @@
 //! Each job keeps one share (BlobStore) across its attempts: later
 //! attempts restore what earlier attempts checkpointed — exactly how a
 //! Slurm requeue with shared NFS behaves.
+//!
+//! With [`RequeueScheduler::fleet`] set, every job draws its instances
+//! from the same multi-pool replacement fleet
+//! ([`crate::cloud::fleet::Fleet`]) instead of each experiment's own
+//! single scale set: the cluster's slots allocate from shared
+//! heterogeneous spot pools, and [`aggregate_pool_stats`] reports the
+//! cluster-wide per-pool usage and cost.
 
+use crate::cloud::fleet::PoolStats;
+use crate::config::FleetCfg;
 use crate::metrics::{EventKind, Timeline};
-use crate::sim::driver::SimDriver;
+use crate::sim::SimDriver;
 use crate::sim::experiment::Experiment;
 use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
 use anyhow::Result;
@@ -54,6 +63,9 @@ pub struct JobRecord {
     pub evictions: u32,
     pub completed: bool,
     pub cost: f64,
+    /// Per-pool launches/evictions/cost across all of this job's
+    /// attempts (merged by pool name).
+    pub pool_stats: Vec<PoolStats>,
 }
 
 impl JobRecord {
@@ -88,6 +100,13 @@ pub struct RequeueScheduler {
     pub max_attempts: u32,
     /// Concurrent spot slots in the cluster (a Slurm partition's width).
     pub slots: u32,
+    /// Shared replacement fleet: when set, every job's attempts draw
+    /// their instances from these pools (overriding each experiment's own
+    /// fleet config), with the requeue delay as each pool's provisioning
+    /// delay — the cluster analog of "all partitions allocate from the
+    /// same heterogeneous spot pools". Per-job [`JobRecord::pool_stats`]
+    /// (and [`aggregate_pool_stats`] across jobs) attribute the usage.
+    pub fleet: Option<FleetCfg>,
 }
 
 impl Default for RequeueScheduler {
@@ -96,8 +115,32 @@ impl Default for RequeueScheduler {
             requeue_delay: SimDuration::from_secs(300),
             max_attempts: 16,
             slots: 1,
+            fleet: None,
         }
     }
+}
+
+/// Merge `add` into `acc` by pool name (cluster-wide fleet accounting).
+fn merge_pool_stats(acc: &mut Vec<PoolStats>, add: &[PoolStats]) {
+    for s in add {
+        match acc.iter_mut().find(|e| e.pool == s.pool) {
+            Some(e) => {
+                e.launches += s.launches;
+                e.evictions += s.evictions;
+                e.compute_cost += s.compute_cost;
+            }
+            None => acc.push(s.clone()),
+        }
+    }
+}
+
+/// Fleet usage aggregated over a set of job records (pool by pool).
+pub fn aggregate_pool_stats(records: &[JobRecord]) -> Vec<PoolStats> {
+    let mut out = Vec::new();
+    for r in records {
+        merge_pool_stats(&mut out, &r.pool_stats);
+    }
+    out
 }
 
 /// Live state of one job across its attempts.
@@ -109,6 +152,7 @@ struct JobState {
     attempts: u32,
     evictions: u32,
     cost: f64,
+    pool_stats: Vec<PoolStats>,
     last_completed: bool,
 }
 
@@ -143,6 +187,7 @@ impl RequeueScheduler {
                 attempts: 0,
                 evictions: 0,
                 cost: 0.0,
+                pool_stats: Vec::new(),
                 last_completed: false,
             })
             .collect();
@@ -195,6 +240,7 @@ impl RequeueScheduler {
                             evictions: state.evictions,
                             completed: state.last_completed,
                             cost: state.cost,
+                            pool_stats: std::mem::take(&mut state.pool_stats),
                         });
                     } else {
                         timeline.record(
@@ -253,6 +299,15 @@ impl RequeueScheduler {
         // not the scale set: the scheduling delay is the provisioning
         // delay.
         exp.cfg.cloud.provisioning_delay = self.requeue_delay;
+        // A cluster-level fleet overrides the job's own: every attempt
+        // draws replacements from the shared pools, and pool replacements
+        // ride the batch queue too.
+        if let Some(fleet) = &self.fleet {
+            exp.cfg.fleet = fleet.clone();
+            for pool in &mut exp.cfg.fleet.pools {
+                pool.provisioning_delay = self.requeue_delay;
+            }
+        }
         let bumped = exp.cfg.seed.wrapping_add(state.attempts as u64);
         exp = exp.seed(bumped);
 
@@ -262,6 +317,7 @@ impl RequeueScheduler {
         };
         state.evictions += result.evictions;
         state.cost += result.total_cost();
+        merge_pool_stats(&mut state.pool_stats, &result.pool_stats);
         state.last_completed = result.completed;
         Ok(result.total)
     }
@@ -327,6 +383,7 @@ mod tests {
             requeue_delay: SimDuration::from_secs(600),
             max_attempts: 4,
             slots: 1,
+            fleet: None,
         };
         let records = sched.run(vec![job]).unwrap();
         assert_eq!(records.len(), 1);
@@ -354,6 +411,7 @@ mod tests {
             requeue_delay: SimDuration::from_secs(60),
             max_attempts: 2,
             slots: 1,
+            fleet: None,
         };
         let records = sched.run(vec![job]).unwrap();
         assert_eq!(records.len(), 1);
@@ -388,6 +446,7 @@ mod tests {
             requeue_delay: SimDuration::from_hours(1),
             max_attempts: 2,
             slots: 1,
+            fleet: None,
         };
         let (records, timeline) =
             sched.run_with_timeline(vec![job_a, job_b]).unwrap();
@@ -444,6 +503,7 @@ mod tests {
             requeue_delay: SimDuration::from_secs(300),
             max_attempts: 4,
             slots: 2,
+            fleet: None,
         };
         let records = sched.run(vec![mk(0), mk(1), mk(2)]).unwrap();
         assert_eq!(records.len(), 3);
@@ -468,6 +528,64 @@ mod tests {
             makespan.as_millis(),
             single
         );
+    }
+
+    #[test]
+    fn shared_fleet_attributes_cluster_usage_per_pool() {
+        use crate::config::{
+            EvictionPlanCfg, FleetCfg, PlacementPolicyCfg, PoolCfg,
+        };
+        let mk = |i: u32| Job {
+            id: i,
+            name: format!("job-{i}"),
+            experiment: Experiment::table1()
+                .named("fleeted")
+                .transparent(SimDuration::from_mins(15)),
+        };
+        // storm pool evicts every 20 min; stable pool never does
+        let fleet = FleetCfg {
+            pools: vec![
+                PoolCfg::named("storm").price_factor(0.9).eviction(
+                    EvictionPlanCfg::Fixed {
+                        interval: SimDuration::from_mins(20),
+                    },
+                ),
+                PoolCfg::named("stable").price_factor(1.1),
+            ],
+            placement: PlacementPolicyCfg::EvictionAware { penalty: 4.0 },
+        };
+        let sched = RequeueScheduler {
+            requeue_delay: SimDuration::from_secs(120),
+            max_attempts: 8,
+            slots: 2,
+            fleet: Some(fleet),
+        };
+        let records = sched.run(vec![mk(0), mk(1)]).unwrap();
+        assert_eq!(records.len(), 2);
+        assert!(records.iter().all(|r| r.completed));
+        // every record carries both pools' stats
+        for r in &records {
+            assert_eq!(r.pool_stats.len(), 2);
+            let total: f64 =
+                r.pool_stats.iter().map(|p| p.compute_cost).sum();
+            assert!(total > 0.0);
+        }
+        let agg = aggregate_pool_stats(&records);
+        assert_eq!(agg.len(), 2);
+        let storm = agg.iter().find(|p| p.pool == "storm").unwrap();
+        let stable = agg.iter().find(|p| p.pool == "stable").unwrap();
+        // eviction-aware placement starts in the cheap storm pool, gets
+        // burned, and finishes in the stable pool
+        assert!(storm.evictions >= 2, "both jobs see storm evictions");
+        assert!(stable.launches >= 2, "both jobs fail over to stable");
+        // cluster-wide attribution sums to the jobs' compute spend
+        let agg_cost: f64 = agg.iter().map(|p| p.compute_cost).sum();
+        let rec_compute: f64 = records
+            .iter()
+            .flat_map(|r| r.pool_stats.iter())
+            .map(|p| p.compute_cost)
+            .sum();
+        assert!((agg_cost - rec_compute).abs() < 1e-9);
     }
 
     #[test]

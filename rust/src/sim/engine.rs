@@ -9,8 +9,12 @@
 //! every wait the old imperative loop expressed as hand-interleaved
 //! `clock.advance` calls is now an explicit event:
 //!
-//! * provisioning completes → [`SimEvent::InstanceProvisioned`] (from
-//!   [`ScaleSet::replacement_ready_at`], not a blocking advance);
+//! * an instance dies (or the run begins) →
+//!   [`SimEvent::ReplacementRequested`]: the fleet's
+//!   [`PlacementPolicy`](crate::cloud::fleet::PlacementPolicy) picks the
+//!   pool → [`SimEvent::PlacementDecided`] → the pool provisions →
+//!   [`SimEvent::InstanceProvisioned`] (at [`Fleet::ready_at`], not a
+//!   blocking advance);
 //! * a restore's transfer cost elapses → [`SimEvent::RestoreDone`];
 //! * a workload step's virtual compute elapses → [`SimEvent::StepDone`];
 //! * a checkpoint write lands → [`SimEvent::CkptDone`] /
@@ -28,26 +32,30 @@
 //!
 //! ## Semantics
 //!
-//! The engine reproduces the legacy loop ([`super::legacy`]) **exactly** —
-//! same decisions at the same instants, byte-identical [`RunResult`]s
-//! including `final_fingerprint`, billing and timeline order. The
-//! equivalence suite (`tests/engine_equivalence.rs`) enforces this over
-//! every Table I row and randomized eviction/checkpoint sweeps. Two
-//! deliberate consequences:
+//! On the default single-pool fleet the engine reproduces the legacy loop
+//! ([`super::legacy`]) **exactly** — same decisions at the same instants,
+//! byte-identical [`RunResult`]s including `final_fingerprint`, billing
+//! and timeline order. The equivalence suite
+//! (`tests/engine_equivalence.rs`) enforces this over every Table I row
+//! and randomized eviction/checkpoint sweeps. Three deliberate
+//! consequences:
 //!
 //! * eviction detection happens at step granularity: the step that would
 //!   cross the detection instant never starts (no partial steps), exactly
 //!   as the legacy loop decided at each step boundary;
 //! * in-flight checkpoint writes are never preempted by a notice — the
-//!   notice reaction begins at the next step boundary, as before.
+//!   notice reaction begins at the next step boundary, as before;
+//! * the placement events (`ReplacementRequested`, `PlacementDecided`)
+//!   fire at the eviction instant with zero cost and are recorded on the
+//!   timeline only for multi-pool fleets, so a 1-pool
+//!   [`StickyPool`](crate::cloud::fleet::StickyPool) run's timeline stays
+//!   byte-identical to the legacy loop's.
 
-use super::driver::RunResult;
+use super::RunResult;
 use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind, WriteOutcome};
 use crate::cloud::billing::BillingMeter;
-use crate::cloud::eviction::EvictionPlan;
+use crate::cloud::fleet::{build_policy, Fleet, PlacementPolicy, PoolId};
 use crate::cloud::metadata::MetadataService;
-use crate::cloud::pricing::PriceBook;
-use crate::cloud::scale_set::ScaleSet;
 use crate::config::ScenarioConfig;
 use crate::coordinator::handlers::{self, PollReaction};
 use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
@@ -62,6 +70,11 @@ use anyhow::{Context, Result};
 /// Everything that can happen in a simulated run.
 #[derive(Debug)]
 pub enum SimEvent {
+    /// The run needs an instance (start of run, or after an eviction):
+    /// ask the placement policy for a pool.
+    ReplacementRequested,
+    /// The placement policy picked `pool`; provisioning starts there.
+    PlacementDecided { pool: PoolId },
     /// A (replacement) instance finished provisioning and is Running.
     InstanceProvisioned,
     /// The restore transfer from the share finished.
@@ -110,7 +123,8 @@ struct InstanceCtx {
 }
 
 /// The engine: event queue + clock + run accounting around the same
-/// policy/monitor/restart/writer pieces the real-time coordinator uses.
+/// policy/monitor/restart/writer pieces the real-time coordinator uses,
+/// drawing instances from a multi-pool [`Fleet`].
 pub struct Engine<'a> {
     cfg: &'a ScenarioConfig,
     store: &'a mut dyn SharedStore,
@@ -126,8 +140,8 @@ pub struct Engine<'a> {
     billing: BillingMeter,
     timeline: Timeline,
     metadata: MetadataService,
-    plan: EvictionPlan,
-    scale_set: ScaleSet,
+    fleet: Fleet,
+    placement: Box<dyn PlacementPolicy>,
     writer: CheckpointWriter,
     workload: Box<dyn Workload>,
     monitor: Option<ScheduledEventsMonitor>,
@@ -168,16 +182,12 @@ impl<'a> Engine<'a> {
                 n_stages
             );
         }
-        let scale_set = ScaleSet::new(
-            &cfg.cloud.vm_size,
-            cfg.cloud.spot,
-            cfg.cloud.provisioning_delay,
-            PriceBook::default(),
-        )?;
+        let fleet = Fleet::from_scenario(cfg)?;
+        let placement = build_policy(&cfg.fleet.placement);
         let spoton = cfg.coordinator_attached;
         Ok(Self {
-            policy: CheckpointPolicy::new(cfg.checkpoint.clone()),
-            plan: EvictionPlan::new(cfg.eviction.clone(), cfg.seed),
+            policy: CheckpointPolicy::new(cfg.checkpoint.clone())
+                .with_compression(cfg.compress_termination),
             overhead_factor: if spoton {
                 1.0 + cfg.cloud.coordinator_overhead
             } else {
@@ -190,7 +200,8 @@ impl<'a> Engine<'a> {
             billing: BillingMeter::new(),
             timeline: Timeline::new(),
             metadata: MetadataService::new(),
-            scale_set,
+            fleet,
+            placement,
             writer: CheckpointWriter::new(),
             completion_at: vec![None; n_stages],
             workload,
@@ -218,7 +229,7 @@ impl<'a> Engine<'a> {
     /// Run to completion (workload Done) or abort (scenario deadline).
     pub fn run(mut self) -> Result<RunResult> {
         self.writer.resume_after(CheckpointStore::max_id(self.store)?);
-        self.schedule(SimTime::ZERO, SimEvent::InstanceProvisioned);
+        self.schedule(SimTime::ZERO, SimEvent::ReplacementRequested);
         while let Some(sch) = self.queue.pop() {
             self.live_tokens.retain(|&t| t != sch.seq);
             self.clock.advance_to(sch.at);
@@ -253,6 +264,10 @@ impl<'a> Engine<'a> {
 
     fn dispatch(&mut self, event: SimEvent) -> Result<()> {
         match event {
+            SimEvent::ReplacementRequested => self.on_replacement_requested(),
+            SimEvent::PlacementDecided { pool } => {
+                self.on_placement_decided(pool)
+            }
             SimEvent::InstanceProvisioned => self.on_instance_provisioned(),
             SimEvent::RestoreDone { report } => self.on_restore_done(report),
             SimEvent::BoundaryReached => self.on_boundary(),
@@ -272,14 +287,65 @@ impl<'a> Engine<'a> {
 
     // --------------------------------------------------------- handlers
 
+    /// The run needs an instance: consult the placement policy. The
+    /// decision itself is instantaneous (it happens at the eviction
+    /// instant); the pool's provisioning delay is paid between the
+    /// decision and `InstanceProvisioned`.
+    fn on_replacement_requested(&mut self) -> Result<()> {
+        let now = self.clock.now();
+        let views = self.fleet.views();
+        let pool = self.placement.place(self.fleet.active_pool(), &views);
+        if self.fleet.is_multi_pool() {
+            self.timeline.record(
+                now,
+                EventKind::ReplacementRequested,
+                format!("placement via {}", self.placement.name()),
+            );
+        }
+        self.schedule(now, SimEvent::PlacementDecided { pool });
+        Ok(())
+    }
+
+    /// The pool is chosen: start provisioning there.
+    fn on_placement_decided(&mut self, pool: PoolId) -> Result<()> {
+        let now = self.clock.now();
+        self.fleet.set_active(pool)?;
+        if self.fleet.is_multi_pool() {
+            let views = self.fleet.views();
+            let view = &views[pool.0];
+            self.timeline.record(
+                now,
+                EventKind::PlacementDecided,
+                format!(
+                    "{} ({} {} @ ${:.4}/h)",
+                    view.name,
+                    view.vm_size,
+                    if view.spot { "spot" } else { "on-demand" },
+                    view.price_per_hour
+                ),
+            );
+        }
+        let ready = self.fleet.ready_at(pool, now);
+        self.schedule(ready, SimEvent::InstanceProvisioned);
+        Ok(())
+    }
+
     /// A fresh instance is Running: record it, derive its eviction
-    /// schedule from the plan, and restore from the share (Spot-on) or
-    /// start over (unprotected).
+    /// schedule from its pool's plan, and restore from the share
+    /// (Spot-on) or start over (unprotected).
     fn on_instance_provisioned(&mut self) -> Result<()> {
         let now = self.clock.now();
-        let inst_id = self.scale_set.launch(now).id.to_string();
+        let inst_id = self.fleet.launch(now).id.to_string();
+        let launch_detail = if self.fleet.is_multi_pool() {
+            format!(
+                "{inst_id} in {}",
+                self.fleet.pool_name(self.fleet.active_pool())
+            )
+        } else {
+            inst_id.clone()
+        };
         self.timeline
-            .record(now, EventKind::InstanceLaunch, inst_id.clone());
+            .record(now, EventKind::InstanceLaunch, launch_detail);
         let mut monitor = ScheduledEventsMonitor::new(&inst_id);
         monitor.reset();
         self.monitor = Some(monitor);
@@ -287,7 +353,7 @@ impl<'a> Engine<'a> {
         let spoton = self.spoton;
         let notice = self.cfg.cloud.notice;
         let poll_interval = self.cfg.cloud.poll_interval;
-        let schedule = self.plan.next_eviction_offset().map(|offset| {
+        let schedule = self.fleet.next_eviction_offset().map(|offset| {
             let post = now + offset;
             let deadline = post + notice;
             let detect = if !spoton {
@@ -363,7 +429,7 @@ impl<'a> Engine<'a> {
         let now = self.clock.now();
         if now.since(SimTime::ZERO) >= self.cfg.deadline {
             let reason = format!("deadline {} exceeded", self.cfg.deadline);
-            self.scale_set.terminate_current(now, &mut self.billing);
+            self.fleet.terminate_current(now, &mut self.billing);
             self.timeline
                 .record(now, EventKind::Aborted, reason.clone());
             self.aborted_reason = Some(reason);
@@ -457,7 +523,7 @@ impl<'a> Engine<'a> {
                     format!("{} steps", self.workload.progress().total_steps),
                 );
                 self.completed = true;
-                self.scale_set.terminate_current(now, &mut self.billing);
+                self.fleet.terminate_current(now, &mut self.billing);
                 self.finish();
                 return Ok(());
             }
@@ -620,15 +686,18 @@ impl<'a> Engine<'a> {
     }
 
     /// The instance dies (notice expiry or post-checkpoint reclaim): bill
-    /// its uptime, drop its pending timers, and schedule the replacement's
-    /// provisioning completion.
+    /// its uptime against its pool, record the eviction as placement
+    /// evidence, drop its pending timers, and open the replacement chain.
     fn on_instance_reclaimed(&mut self) -> Result<()> {
         let now = self.clock.now();
         let inst = self
             .inst
             .take()
             .expect("reclaim events require a live instance");
-        self.scale_set.terminate_current(now, &mut self.billing);
+        let terminated = self.fleet.terminate_current(now, &mut self.billing);
+        if let Some((_, pool)) = terminated {
+            self.fleet.note_eviction(pool);
+        }
         self.metadata.clear_resource(&inst.id);
         self.evictions += 1;
         self.timeline
@@ -636,8 +705,7 @@ impl<'a> Engine<'a> {
         // the dead instance's timers die with it — cancel by token, never
         // clear(): other runs may share this queue
         self.cancel_pending();
-        let ready = self.scale_set.replacement_ready_at(now);
-        self.schedule(ready, SimEvent::InstanceProvisioned);
+        self.schedule(now, SimEvent::ReplacementRequested);
         Ok(())
     }
 
@@ -684,7 +752,7 @@ impl<'a> Engine<'a> {
             total,
             notices: self.notices,
             evictions: self.evictions,
-            instances: self.scale_set.launched(),
+            instances: self.fleet.total_launched(),
             periodic_ckpts: self.periodic_ckpts,
             termination_ok: self.termination_ok,
             termination_failed: self.termination_failed,
@@ -694,6 +762,7 @@ impl<'a> Engine<'a> {
             compute_cost: self.billing.compute_total(),
             storage_cost: self.billing.storage_total(),
             invoice: self.billing.invoice(),
+            pool_stats: self.fleet.stats(&self.billing),
             timeline: self.timeline,
             final_fingerprint: self.workload.fingerprint(),
         })
@@ -717,6 +786,13 @@ mod tests {
         assert_eq!(r.evictions, 2);
         assert_eq!(r.instances, 3);
         assert!(r.timeline.is_monotone());
+        // the default fleet is a single pool carrying the whole run
+        assert_eq!(r.pool_stats.len(), 1);
+        assert_eq!(r.pool_stats[0].launches, 3);
+        assert_eq!(r.pool_stats[0].evictions, 2);
+        assert!(
+            (r.pool_stats[0].compute_cost - r.compute_cost).abs() < 1e-12
+        );
     }
 
     #[test]
@@ -733,7 +809,7 @@ mod tests {
         engine.writer.resume_after(None);
         engine
             .queue
-            .schedule(SimTime::ZERO, SimEvent::InstanceProvisioned);
+            .schedule(SimTime::ZERO, SimEvent::ReplacementRequested);
         loop {
             let Some(sch) = engine.queue.pop() else { break };
             engine.live_tokens.retain(|&t| t != sch.seq);

@@ -1,4 +1,4 @@
-//! Experiment presets and the builder API over [`super::driver`].
+//! Experiment presets and the builder API over [`super::SimDriver`].
 //!
 //! `Experiment::table1()` carries the paper's testbed defaults
 //! (D8s_v3, $0.076/h spot, Azure Files NFS, 30 s notice, Table I row-1
@@ -8,10 +8,12 @@
 //! sweeps), `run_minimeta` with the PJRT-backed assembler (the real
 //! three-layer stack; used by the headline benches and examples).
 
-pub use crate::config::{CheckpointMethodCfg, EvictionPlanCfg};
+pub use crate::config::{
+    CheckpointMethodCfg, EvictionPlanCfg, PlacementPolicyCfg, PoolCfg,
+};
 use crate::config::ScenarioConfig;
 use crate::runtime::Runtime;
-use crate::sim::driver::{RunResult, SimDriver};
+use crate::sim::{RunResult, SimDriver};
 use crate::simclock::SimDuration;
 use crate::storage::{BlobStore, NfsStore, SharedStore, TransferModel};
 use crate::workload::assembler::{MiniMeta, MiniMetaCfg};
@@ -91,6 +93,28 @@ impl Experiment {
     /// No checkpoint protection.
     pub fn unprotected(mut self) -> Self {
         self.cfg.checkpoint = CheckpointMethodCfg::None;
+        self
+    }
+
+    /// Compress the termination checkpoint when the raw image would miss
+    /// the notice window (`checkpoint::compress` rescue path).
+    pub fn compress_termination(mut self, on: bool) -> Self {
+        self.cfg.compress_termination = on;
+        self
+    }
+
+    /// Add a replacement pool to the fleet. The first call switches the
+    /// run from the implicit single pool (derived from the `cloud` +
+    /// `eviction` config) to the explicit pool list; pool order fixes
+    /// pool ids and per-pool eviction seeds.
+    pub fn pool(mut self, pool: PoolCfg) -> Self {
+        self.cfg.fleet.pools.push(pool);
+        self
+    }
+
+    /// Placement policy deciding which pool each replacement lands in.
+    pub fn placement(mut self, policy: PlacementPolicyCfg) -> Self {
+        self.cfg.fleet.placement = policy;
         self
     }
 

@@ -11,7 +11,7 @@
 //! goes in the engine, where the equivalence suite will flag any
 //! unintended divergence from these semantics.
 
-use super::driver::RunResult;
+use super::RunResult;
 use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind};
 use crate::cloud::billing::BillingMeter;
 use crate::cloud::eviction::EvictionPlan;
@@ -382,6 +382,9 @@ pub fn run_reference(
         compute_cost: billing.compute_total(),
         storage_cost: billing.storage_total(),
         invoice: billing.invoice(),
+        // The legacy loop predates the fleet; no per-pool attribution.
+        // (Mechanical field addition only — semantics untouched.)
+        pool_stats: Vec::new(),
         timeline,
         final_fingerprint: workload.fingerprint(),
     })

@@ -2,26 +2,138 @@
 //!
 //! The core is a discrete-event engine ([`engine`]): every run is a chain
 //! of typed [`engine::SimEvent`]s — step completions, checkpoint commits,
-//! eviction notices, poll ticks, provisioning completions — on the
-//! deterministic `simclock::EventQueue`. The workload really computes
-//! (PJRT for MiniMeta) while its time is charged virtually, calibrated so
-//! an uninterrupted run reproduces the paper's Table I row-1 stage
-//! durations (DESIGN.md §6).
+//! eviction notices, poll ticks, placement decisions, provisioning
+//! completions — on the deterministic `simclock::EventQueue`. The
+//! workload really computes (PJRT for MiniMeta) while its time is charged
+//! virtually, calibrated so an uninterrupted run reproduces the paper's
+//! Table I row-1 stage durations (DESIGN.md §6).
 //!
-//! * [`driver`] — the stable facade ([`SimDriver`], [`RunResult`]) every
-//!   bench, test and example drives.
-//! * [`engine`] — the event loop + per-concern handlers.
+//! * [`SimDriver`] / [`RunResult`] (this module) — the stable facade
+//!   every bench, test and example drives.
+//! * [`engine`] — the event loop + per-concern handlers, running each
+//!   scenario on a [`crate::cloud::fleet::Fleet`] of replacement pools.
 //! * [`legacy`] — the pre-refactor imperative loop, frozen as the oracle
 //!   for `tests/engine_equivalence.rs`.
 //! * [`experiment`] — the builder/preset layer:
 //!   `Experiment::table1().eviction_every(90 min).transparent(30 min)` is
 //!   the paper's Table I row 5.
+//!
+//! ## Time accounting
+//!
+//! * compute: each workload step costs
+//!   `stage_secs[stage] / stage_steps(stage)` virtual seconds, scaled by
+//!   `1 + coordinator_overhead` when Spot-on is attached (Table I rows
+//!   1→2 delta);
+//! * checkpoints: the workload freezes for the modeled transfer time of
+//!   the snapshot's charged size (CRIU dump / app checkpoint file write);
+//! * eviction: the notice posts at the pool plan's uptime offset; the
+//!   coordinator detects it at its next scheduled-events poll tick; a
+//!   transparent termination checkpoint races `NotBefore`; the instance
+//!   dies, the placement policy picks the replacement's pool, the pool
+//!   provisions it (a scheduled event, not a blocking wait), the
+//!   coordinator restores from the most recent valid checkpoint.
 
-pub mod driver;
 pub mod engine;
 pub mod experiment;
 pub mod legacy;
 
-pub use driver::{RunResult, SimDriver};
 pub use engine::SimEvent;
 pub use experiment::Experiment;
+
+use crate::cloud::billing::Invoice;
+use crate::cloud::fleet::PoolStats;
+use crate::config::ScenarioConfig;
+use crate::metrics::Timeline;
+use crate::simclock::SimDuration;
+use crate::storage::SharedStore;
+use crate::workload::Workload;
+use anyhow::Result;
+
+/// Everything one run produced.
+#[derive(Debug)]
+pub struct RunResult {
+    pub scenario: String,
+    pub completed: bool,
+    /// (stage label, wall duration) — final completion times, so re-done
+    /// work lands in the stage where it was re-done (what the paper's
+    /// per-k columns report).
+    pub stage_times: Vec<(String, SimDuration)>,
+    pub total: SimDuration,
+    pub notices: u32,
+    pub evictions: u32,
+    pub instances: u32,
+    pub periodic_ckpts: u32,
+    pub termination_ok: u32,
+    pub termination_failed: u32,
+    pub app_ckpts: u32,
+    pub restores: u32,
+    /// Workload steps lost to evictions (re-executed after restore).
+    pub lost_steps: u64,
+    pub compute_cost: f64,
+    pub storage_cost: f64,
+    pub invoice: Invoice,
+    /// Per-pool launches/evictions/cost attribution (one entry per fleet
+    /// pool; empty only for the frozen legacy oracle, which predates the
+    /// fleet).
+    pub pool_stats: Vec<PoolStats>,
+    pub timeline: Timeline,
+    pub final_fingerprint: u64,
+}
+
+impl RunResult {
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} in {} | {} eviction(s), {} instance(s), ckpts: {}p/{}t(+{}f)/{}a, \
+             {} restore(s), {} steps lost | compute {} + storage {}",
+            self.scenario,
+            if self.completed { "completed" } else { "DID NOT FINISH" },
+            self.total,
+            self.evictions,
+            self.instances,
+            self.periodic_ckpts,
+            self.termination_ok,
+            self.termination_failed,
+            self.app_ckpts,
+            self.restores,
+            self.lost_steps,
+            crate::util::fmt::dollars(self.compute_cost),
+            crate::util::fmt::dollars(self.storage_cost),
+        )
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.compute_cost + self.storage_cost
+    }
+
+    /// Stage duration by label.
+    pub fn stage(&self, label: &str) -> Option<SimDuration> {
+        self.stage_times
+            .iter()
+            .find(|(l, _)| l == label)
+            .map(|(_, d)| *d)
+    }
+}
+
+/// The driver: public facade over the event-driven engine. Owns nothing
+/// itself; borrows the scenario and the share, and builds a fresh
+/// [`engine::Engine`] per run. `factory` builds a fresh workload (used at
+/// start and when an unprotected run must restart from zero).
+pub struct SimDriver<'a> {
+    cfg: &'a ScenarioConfig,
+    store: &'a mut dyn SharedStore,
+}
+
+impl<'a> SimDriver<'a> {
+    pub fn new(cfg: &'a ScenarioConfig, store: &'a mut dyn SharedStore) -> Self {
+        Self { cfg, store }
+    }
+
+    /// Run the scenario on the event engine.
+    pub fn run(
+        &mut self,
+        factory: &mut dyn FnMut() -> Result<Box<dyn Workload>>,
+    ) -> Result<RunResult> {
+        engine::Engine::new(self.cfg, self.store, factory)?.run()
+    }
+}

@@ -13,7 +13,7 @@
 //! per-run deterministic and compared verbatim.
 
 use spoton::metrics::EventKind;
-use spoton::sim::driver::RunResult;
+use spoton::sim::RunResult;
 use spoton::sim::experiment::Experiment;
 use spoton::sim::legacy;
 use spoton::simclock::SimDuration;

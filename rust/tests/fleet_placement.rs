@@ -1,0 +1,233 @@
+//! Fleet placement suite: cross-pool failover, placement-policy
+//! comparison on seeded eviction storms, billing-attribution invariants,
+//! and the 1-pool `StickyPool` fleet's byte-identity with the legacy
+//! single-scale-set loop.
+
+use spoton::config::{EvictionPlanCfg, PlacementPolicyCfg, PoolCfg};
+use spoton::metrics::EventKind;
+use spoton::sim::experiment::Experiment;
+use spoton::sim::legacy;
+use spoton::simclock::SimDuration;
+
+/// The three-pool storm fleet the `fleet_failover` example demonstrates:
+/// a cheap but heavily contended pool (frequent evictions, slow
+/// replacements), a pricier stable pool, and a mid-price mid-churn pool.
+fn storm_fleet(exp: Experiment) -> Experiment {
+    exp.pool(
+        PoolCfg::named("east-contended")
+            .price_factor(0.9)
+            .eviction(EvictionPlanCfg::Fixed {
+                interval: SimDuration::from_mins(5),
+            })
+            .provisioning_delay(SimDuration::from_mins(20)),
+    )
+    .pool(
+        PoolCfg::named("south-balanced")
+            .price_factor(1.0)
+            .eviction(EvictionPlanCfg::Poisson {
+                mean: SimDuration::from_mins(45),
+            })
+            .provisioning_delay(SimDuration::from_secs(180)),
+    )
+    .pool(
+        // on-demand-like reliability at a markup: never reclaimed
+        PoolCfg::named("west-stable")
+            .price_factor(1.2)
+            .provisioning_delay(SimDuration::from_secs(90)),
+    )
+}
+
+fn storm_experiment(policy: PlacementPolicyCfg) -> Experiment {
+    storm_fleet(
+        Experiment::table1()
+            .named("storm")
+            .transparent(SimDuration::from_mins(15))
+            .seed(42),
+    )
+    .placement(policy)
+}
+
+#[test]
+fn one_pool_sticky_fleet_matches_legacy_byte_for_byte() {
+    // An explicit 1-pool fleet whose pool equals the cloud config must
+    // reproduce the legacy single-scale-set loop exactly — the same
+    // guarantee the equivalence suite pins for the implicit fleet.
+    let eviction = EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(90) };
+    let exp = Experiment::table1()
+        .named("one-pool")
+        .eviction_every(SimDuration::from_mins(90))
+        .transparent(SimDuration::from_mins(30))
+        .pool(PoolCfg::named("pool-0").eviction(eviction))
+        .placement(PlacementPolicyCfg::Sticky);
+
+    let eng = exp.run_sleeper().expect("engine run");
+    let mut store = exp.fresh_store();
+    let mut factory = exp.sleeper_factory();
+    let leg = legacy::run_reference(&exp.cfg, &mut store, &mut *factory)
+        .expect("legacy run");
+
+    assert_eq!(eng.completed, leg.completed);
+    assert_eq!(eng.total, leg.total);
+    assert_eq!(eng.evictions, leg.evictions);
+    assert_eq!(eng.instances, leg.instances);
+    assert_eq!(eng.termination_ok, leg.termination_ok);
+    assert_eq!(eng.restores, leg.restores);
+    assert_eq!(eng.lost_steps, leg.lost_steps);
+    assert_eq!(eng.compute_cost.to_bits(), leg.compute_cost.to_bits());
+    assert_eq!(eng.storage_cost.to_bits(), leg.storage_cost.to_bits());
+    assert_eq!(eng.final_fingerprint, leg.final_fingerprint);
+    assert_eq!(eng.stage_times, leg.stage_times);
+    // identical (time, kind) timeline — no placement events leak into
+    // single-pool runs
+    assert_eq!(eng.timeline.events().len(), leg.timeline.events().len());
+    for (a, b) in eng.timeline.events().iter().zip(leg.timeline.events()) {
+        assert_eq!(a.at, b.at);
+        assert_eq!(a.kind, b.kind);
+    }
+    assert_eq!(eng.timeline.count(EventKind::ReplacementRequested), 0);
+    assert_eq!(eng.timeline.count(EventKind::PlacementDecided), 0);
+}
+
+#[test]
+fn cross_pool_failover_moves_to_stable_pool() {
+    let r = Experiment::table1()
+        .named("failover")
+        .transparent(SimDuration::from_mins(15))
+        .pool(PoolCfg::named("storm").eviction(EvictionPlanCfg::Fixed {
+            interval: SimDuration::from_mins(30),
+        }))
+        .pool(PoolCfg::named("stable").price_factor(1.2))
+        .placement(PlacementPolicyCfg::EvictionAware { penalty: 4.0 })
+        .run_sleeper()
+        .unwrap();
+
+    assert!(r.completed, "{}", r.summary());
+    assert_eq!(r.pool_stats.len(), 2);
+    let storm = &r.pool_stats[0];
+    let stable = &r.pool_stats[1];
+    // first instance lands in the cheap storm pool, gets evicted once,
+    // and the policy fails over to the stable pool for the rest
+    assert_eq!(storm.pool, "storm");
+    assert_eq!(storm.launches, 1);
+    assert_eq!(storm.evictions, 1);
+    assert_eq!(stable.pool, "stable");
+    assert_eq!(stable.launches, 1);
+    assert_eq!(stable.evictions, 0);
+    assert_eq!(r.instances, 2);
+    assert_eq!(r.evictions, 1);
+
+    // the placement chain is on the timeline, one request + decision per
+    // launch, and the failover decision names the stable pool
+    assert_eq!(
+        r.timeline.count(EventKind::ReplacementRequested),
+        r.instances as usize
+    );
+    assert_eq!(
+        r.timeline.count(EventKind::PlacementDecided),
+        r.instances as usize
+    );
+    let last_placement = r
+        .timeline
+        .events()
+        .iter()
+        .rev()
+        .find(|e| e.kind == EventKind::PlacementDecided)
+        .unwrap();
+    assert!(
+        last_placement.detail.contains("stable"),
+        "failover placement: {}",
+        last_placement.detail
+    );
+    assert!(r.timeline.is_monotone());
+}
+
+#[test]
+fn billing_attribution_sums_to_run_cost() {
+    for policy in [
+        PlacementPolicyCfg::Sticky,
+        PlacementPolicyCfg::CheapestSpot,
+        PlacementPolicyCfg::EvictionAware { penalty: 4.0 },
+    ] {
+        let r = storm_experiment(policy.clone()).run_sleeper().unwrap();
+        let attributed: f64 =
+            r.pool_stats.iter().map(|p| p.compute_cost).sum();
+        assert!(
+            (attributed - r.compute_cost).abs() < 1e-9,
+            "{}: pool attribution {attributed} != compute {}",
+            policy.label(),
+            r.compute_cost
+        );
+        let launches: u32 = r.pool_stats.iter().map(|p| p.launches).sum();
+        assert_eq!(launches, r.instances, "{}", policy.label());
+        let evictions: u32 = r.pool_stats.iter().map(|p| p.evictions).sum();
+        assert_eq!(evictions, r.evictions, "{}", policy.label());
+    }
+}
+
+#[test]
+fn eviction_aware_beats_sticky_on_seeded_storm() {
+    // Sticky rides the cheap contended pool through every eviction
+    // (paying a 20-minute replacement each time, ballooning makespan and
+    // the prorated storage bill); eviction-aware abandons it after being
+    // burned and finishes hours earlier and cheaper.
+    let sticky = storm_experiment(PlacementPolicyCfg::Sticky)
+        .run_sleeper()
+        .unwrap();
+    let aware =
+        storm_experiment(PlacementPolicyCfg::EvictionAware { penalty: 4.0 })
+            .run_sleeper()
+            .unwrap();
+    assert!(sticky.completed, "{}", sticky.summary());
+    assert!(aware.completed, "{}", aware.summary());
+    assert!(
+        sticky.evictions > aware.evictions,
+        "sticky {} vs aware {} evictions",
+        sticky.evictions,
+        aware.evictions
+    );
+    assert!(
+        aware.total < sticky.total,
+        "aware makespan {} must beat sticky {}",
+        aware.total,
+        sticky.total
+    );
+    assert!(
+        aware.total_cost() < sticky.total_cost(),
+        "aware ${:.4} must beat sticky ${:.4}",
+        aware.total_cost(),
+        sticky.total_cost()
+    );
+}
+
+#[test]
+fn cheapest_spot_always_picks_the_cheapest_pool() {
+    let r = Experiment::table1()
+        .named("cheapest")
+        .transparent(SimDuration::from_mins(30))
+        .pool(PoolCfg::named("pricey").price_factor(1.3))
+        .pool(PoolCfg::named("bargain").price_factor(0.8))
+        .placement(PlacementPolicyCfg::CheapestSpot)
+        .run_sleeper()
+        .unwrap();
+    assert!(r.completed);
+    // no evictions anywhere: the single launch goes to the bargain pool
+    assert_eq!(r.pool_stats[0].launches, 0, "pricey pool unused");
+    assert_eq!(r.pool_stats[1].launches, 1);
+    assert!((r.pool_stats[1].compute_cost - r.compute_cost).abs() < 1e-12);
+}
+
+#[test]
+fn multi_pool_runs_are_deterministic_given_seed() {
+    let run = || {
+        storm_experiment(PlacementPolicyCfg::EvictionAware { penalty: 4.0 })
+            .run_sleeper()
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.total, b.total);
+    assert_eq!(a.evictions, b.evictions);
+    assert_eq!(a.final_fingerprint, b.final_fingerprint);
+    assert_eq!(a.pool_stats, b.pool_stats);
+    assert_eq!(a.timeline.events().len(), b.timeline.events().len());
+}

@@ -89,7 +89,7 @@ fn nfs_backed_run_survives_share_reattach() {
     {
         let mut store = NfsStore::open(&dir, model, Some(100.0)).unwrap();
         let mut factory = exp.sleeper_factory();
-        let r = spoton::sim::driver::SimDriver::new(&exp.cfg, &mut store)
+        let r = spoton::sim::SimDriver::new(&exp.cfg, &mut store)
             .run(&mut *factory)
             .unwrap();
         assert!(r.completed);

@@ -1,0 +1,175 @@
+//! Property suite for the requeue scheduler's interleaving invariants:
+//! over randomized job mixes, slot counts and requeue delays, no two
+//! running attempts ever share a slot (concurrency never exceeds the
+//! cluster width) and total busy time never exceeds slots × makespan.
+
+use std::collections::HashMap;
+
+use spoton::metrics::{EventKind, Timeline};
+use spoton::sched::{Job, RequeueScheduler};
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+use spoton::util::proptest::{forall, shrink_none, Config};
+use spoton::util::Prng;
+
+/// One scheduler scenario drawn by the generator.
+#[derive(Debug, Clone)]
+struct Scenario {
+    slots: u32,
+    requeue_secs: u64,
+    max_attempts: u32,
+    /// Per job: (eviction interval minutes or 0 for none, protected).
+    jobs: Vec<(u64, bool)>,
+}
+
+fn build_jobs(s: &Scenario) -> Vec<Job> {
+    s.jobs
+        .iter()
+        .enumerate()
+        .map(|(i, &(evict_mins, protected))| {
+            let mut exp = Experiment::table1()
+                .named("prop")
+                .scale_stages(0.3)
+                .seed(1000 + i as u64);
+            if evict_mins > 0 {
+                exp = exp.eviction_every(SimDuration::from_mins(evict_mins));
+            }
+            exp = if protected {
+                exp.transparent(SimDuration::from_mins(10))
+            } else {
+                // unprotected + evictions can never finish: exercises the
+                // requeue/abandon path within a bounded deadline
+                exp.unprotected().deadline(SimDuration::from_hours(2))
+            };
+            Job { id: i as u32, name: format!("job-{i}"), experiment: exp }
+        })
+        .collect()
+}
+
+/// Reconstruct attempt intervals [(start_ms, end_ms)] from the cluster
+/// timeline: each `JobStarted` opens an interval for its job, closed by
+/// that job's next `JobRequeued` or `JobFinished`.
+fn attempt_intervals(timeline: &Timeline) -> Result<Vec<(u64, u64)>, String> {
+    let mut open: HashMap<String, u64> = HashMap::new();
+    let mut intervals = Vec::new();
+    for e in timeline.events() {
+        match e.kind {
+            EventKind::JobStarted => {
+                let name = e
+                    .detail
+                    .split(" attempt")
+                    .next()
+                    .ok_or("unparseable JobStarted detail")?
+                    .to_string();
+                if open.insert(name.clone(), e.at.as_millis()).is_some() {
+                    return Err(format!(
+                        "{name} started while already running"
+                    ));
+                }
+            }
+            EventKind::JobRequeued | EventKind::JobFinished => {
+                let name = e
+                    .detail
+                    .rsplit_once(" (")
+                    .ok_or("unparseable end detail")?
+                    .0
+                    .to_string();
+                let start = open.remove(&name).ok_or(format!(
+                    "{name} ended without a running attempt"
+                ))?;
+                intervals.push((start, e.at.as_millis()));
+            }
+            _ => {}
+        }
+    }
+    if !open.is_empty() {
+        return Err(format!("attempts never ended: {:?}", open.keys()));
+    }
+    Ok(intervals)
+}
+
+fn check_scenario(s: &Scenario) -> Result<(), String> {
+    let sched = RequeueScheduler {
+        requeue_delay: SimDuration::from_secs(s.requeue_secs),
+        max_attempts: s.max_attempts,
+        slots: s.slots,
+        fleet: None,
+    };
+    let (records, timeline) = sched
+        .run_with_timeline(build_jobs(s))
+        .map_err(|e| e.to_string())?;
+    if records.len() != s.jobs.len() {
+        return Err(format!(
+            "{} jobs in, {} records out",
+            s.jobs.len(),
+            records.len()
+        ));
+    }
+    if !timeline.is_monotone() {
+        return Err("timeline not monotone".into());
+    }
+
+    let intervals = attempt_intervals(&timeline)?;
+
+    // ---- no two attempts share a slot: concurrency ≤ slots ----
+    // Sweep: close intervals before opening new ones at the same instant
+    // (the scheduler fills freed slots at the same event time).
+    let mut points: Vec<(u64, i64)> = Vec::new();
+    for &(start, end) in &intervals {
+        if end < start {
+            return Err(format!("interval ends before it starts: {start}..{end}"));
+        }
+        points.push((start, 1));
+        points.push((end, -1));
+    }
+    points.sort_by_key(|&(t, delta)| (t, delta));
+    let mut running = 0i64;
+    for (t, delta) in points {
+        running += delta;
+        if running > s.slots as i64 {
+            return Err(format!(
+                "{running} attempts share {} slot(s) at t={t}ms",
+                s.slots
+            ));
+        }
+    }
+
+    // ---- total busy time ≤ slots × makespan ----
+    let busy: u64 = intervals.iter().map(|(a, b)| b - a).sum();
+    let makespan = intervals.iter().map(|&(_, b)| b).max().unwrap_or(0);
+    if busy > s.slots as u64 * makespan {
+        return Err(format!(
+            "busy {busy}ms exceeds {} slot(s) x makespan {makespan}ms",
+            s.slots
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_no_slot_sharing_and_bounded_busy_time() {
+    forall(
+        Config::default().cases(18).seed(0x5C_4ED),
+        |rng: &mut Prng| Scenario {
+            slots: 1 + rng.below(3) as u32,
+            requeue_secs: rng.range_u64(30, 1200),
+            max_attempts: 2 + rng.below(2) as u32,
+            jobs: (0..1 + rng.below(4))
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        // doomed: unprotected with evictions
+                        (rng.range_u64(20, 40), false)
+                    } else if rng.chance(0.5) {
+                        // stormy but protected
+                        (rng.range_u64(15, 90), true)
+                    } else {
+                        // clean
+                        (0, true)
+                    }
+                })
+                .collect(),
+        },
+        shrink_none,
+        check_scenario,
+    );
+}
