@@ -4,22 +4,30 @@
 //!   (per-call latency on the request path).
 //! * L3: snapshot serialize/restore, checkpoint write/scan/restore
 //!   against the in-memory and directory-backed shares, IMDS document
-//!   serve+parse, HTTP poll round trip, end-to-end simulated experiment
-//!   throughput.
+//!   serve+parse, HTTP poll round trip, event-queue schedule/cancel/pop
+//!   churn, end-to-end simulated experiment throughput (full metrics and
+//!   the sweep's lean `RecordLevel::Counts` configuration).
+//!
+//! Timed results are also written to `BENCH_hotpath.json`
+//! (`util::bench::BenchReport`) so the perf trajectory is diffable
+//! across commits.
 
 use spoton::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind};
 use spoton::cloud::imds_http::ImdsHttp;
 use spoton::coordinator::ScheduledEventsMonitor;
+use spoton::metrics::RecordLevel;
 use spoton::runtime::{Arg, Runtime};
 use spoton::sim::experiment::Experiment;
-use spoton::simclock::{SimDuration, SimTime};
+use spoton::simclock::{EventQueue, SimDuration, SimTime};
 use spoton::storage::{BlobStore, NfsStore, SharedStore, TransferModel};
-use spoton::util::bench::{bench_fn, section};
+use spoton::util::bench::{bench_fn, section, BenchReport};
+use spoton::util::Prng;
 use spoton::workload::reads::{ReadGen, ReadGenCfg};
 use spoton::workload::sleeper::{Sleeper, SleeperCfg};
 use spoton::workload::Workload;
 
 fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("hotpath");
     // ---------------- L1/L2: PJRT request path ----------------
     match Runtime::load(&spoton::runtime::default_artifacts_dir()) {
         Ok(mut rt) => {
@@ -92,12 +100,21 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(w.snapshot().unwrap());
     });
     println!("  snapshot   {stats}");
+    report.stat("l3.snapshot", &stats);
+    let mut reuse = w.snapshot()?;
+    let stats = bench_fn(10, 2000, || {
+        w.snapshot_into(&mut reuse).unwrap();
+        std::hint::black_box(&reuse);
+    });
+    println!("  snap_into  {stats}");
+    report.stat("l3.snapshot_into", &stats);
     let snap = w.snapshot()?;
     let mut w2 = Sleeper::new(SleeperCfg::small(), 3);
     let stats = bench_fn(10, 2000, || {
         w2.restore(&snap.bytes).unwrap();
     });
     println!("  restore    {stats}");
+    report.stat("l3.restore", &stats);
 
     section("L3 checkpoint write+commit (BlobStore vs NfsStore)");
     let mut blob = BlobStore::for_tests();
@@ -109,6 +126,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(out);
     });
     println!("  blob  write  {stats}");
+    report.stat("l3.ckpt_write_blob", &stats);
     let nfs_dir = std::env::temp_dir()
         .join(format!("spoton-perf-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&nfs_dir);
@@ -128,6 +146,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(out);
     });
     println!("  nfs   write  {stats}");
+    report.stat("l3.ckpt_write_nfs", &stats);
 
     section("L3 checkpoint scan + latest_valid (100 checkpoints on share)");
     let mut blob2 = BlobStore::for_tests();
@@ -142,6 +161,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(m);
     });
     println!("  latest_valid {stats}");
+    report.stat("l3.latest_valid", &stats);
 
     section("L3 IMDS document serve + parse (in-proc)");
     let mut svc = spoton::cloud::metadata::MetadataService::new();
@@ -154,6 +174,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(mon.poll_inproc(&svc).unwrap());
     });
     println!("  poll_inproc  {stats}");
+    report.stat("l3.poll_inproc", &stats);
 
     section("L3 IMDS HTTP poll round trip (localhost TCP)");
     let imds = ImdsHttp::spawn(30)?;
@@ -164,6 +185,45 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(mon2.poll_http(&url).unwrap());
     });
     println!("  poll_http    {stats}");
+    report.stat("l3.poll_http", &stats);
+
+    section("L3 event-queue schedule/cancel/pop churn (simclock::EventQueue)");
+    const QUEUE_N: usize = 4096;
+    let stats = bench_fn(5, 200, || {
+        let mut q = EventQueue::new();
+        let mut rng = Prng::new(42);
+        for _ in 0..QUEUE_N {
+            q.schedule(SimTime::from_secs(rng.below(1_000_000)), ());
+        }
+        while let Some(s) = q.pop() {
+            std::hint::black_box(&s);
+        }
+    });
+    println!("  schedule+pop   {stats}");
+    println!(
+        "        -> {:.1} Mevents/s",
+        QUEUE_N as f64 / stats.mean.as_secs_f64() / 1e6
+    );
+    report.stat("l3.queue_schedule_pop", &stats);
+    let stats = bench_fn(5, 200, || {
+        let mut q = EventQueue::new();
+        let mut rng = Prng::new(42);
+        let mut tokens = Vec::with_capacity(QUEUE_N);
+        for _ in 0..QUEUE_N {
+            tokens
+                .push(q.schedule(SimTime::from_secs(rng.below(1_000_000)), ()));
+        }
+        for (i, &t) in tokens.iter().enumerate() {
+            if i % 3 == 0 {
+                q.cancel(t);
+            }
+        }
+        while let Some(s) = q.pop() {
+            std::hint::black_box(&s);
+        }
+    });
+    println!("  +cancel churn  {stats}");
+    report.stat("l3.queue_cancel_churn", &stats);
 
     section("L3 end-to-end simulated experiment (sleeper, full Table-I row)");
     let stats = bench_fn(2, 20, || {
@@ -180,6 +240,16 @@ fn main() -> anyhow::Result<()> {
         stats.throughput_per_sec(),
         3.2
     );
+    report.stat("l3.row_per_run", &stats);
+    let lean_exp = Experiment::table1()
+        .eviction_every(SimDuration::from_mins(60))
+        .transparent(SimDuration::from_mins(15))
+        .metrics(RecordLevel::Counts);
+    let lean = bench_fn(2, 20, || {
+        std::hint::black_box(lean_exp.run_sleeper().unwrap());
+    });
+    println!("  row lean     {lean} (Counts metrics level)");
+    report.stat("l3.row_per_run_lean", &lean);
 
     section("L3 event engine vs legacy loop (same scenario, fresh shares)");
     let exp = Experiment::table1()
@@ -189,6 +259,7 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(exp.run_sleeper().unwrap());
     });
     println!("  engine       {engine_stats}");
+    report.stat("l3.engine", &engine_stats);
     let legacy_stats = bench_fn(2, 20, || {
         let mut store = exp.fresh_store();
         let mut factory = exp.sleeper_factory();
@@ -202,7 +273,9 @@ fn main() -> anyhow::Result<()> {
         );
     });
     println!("  legacy loop  {legacy_stats}");
+    report.stat("l3.legacy_loop", &legacy_stats);
 
     let _ = std::fs::remove_dir_all(&nfs_dir);
+    report.write()?;
     Ok(())
 }

@@ -1,0 +1,142 @@
+//! Monte Carlo sweep throughput: thousands of seeded Table-I runs.
+//!
+//! Reproduction-scale evaluation needs distributions, not point
+//! estimates, so this bench measures the population path end to end:
+//!
+//! * single-run baselines — the same Table-I row once with full metrics
+//!   (the `perf_hotpath` "row-per-run" baseline) and once on the sweep's
+//!   lean per-run configuration (`RecordLevel::Counts` + queue/buffer
+//!   optimizations);
+//! * the parallel sweep — `SWEEP_RUNS` seeded runs (default 10,000)
+//!   fanned over `SWEEP_THREADS` workers, reporting aggregate
+//!   simulated-runs/s and the per-run mean;
+//! * a Poisson eviction sweep whose merged population feeds the
+//!   `report::distribution` summaries, with a digest spot-check that the
+//!   merge is byte-identical across thread counts.
+//!
+//! Results land in `BENCH_sweep.json` (see `util::bench::BenchReport`).
+
+use spoton::metrics::RecordLevel;
+use spoton::report::distribution;
+use spoton::sim::experiment::Experiment;
+use spoton::sim::sweep::run_digest;
+use spoton::simclock::SimDuration;
+use spoton::util::bench::{bench_fn, section, BenchReport};
+use std::time::Instant;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let runs = env_usize("SWEEP_RUNS", 10_000);
+    let threads = env_usize(
+        "SWEEP_THREADS",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    );
+    let mut report = BenchReport::new("sweep");
+    report.value("runs", runs as u64).value("threads", threads as u64);
+
+    // The perf_hotpath "row-per-run" scenario: Table I row-5 analog.
+    let row = Experiment::table1()
+        .named("mc-row5")
+        .eviction_every(SimDuration::from_mins(60))
+        .transparent(SimDuration::from_mins(15));
+
+    section("single run, full metrics (perf_hotpath row-per-run baseline)");
+    let full_exp = row.clone();
+    let full = bench_fn(2, 20, || {
+        std::hint::black_box(full_exp.run_sleeper().unwrap());
+    });
+    println!("  row-per-run       {full}");
+    report.stat("single.row_per_run_full", &full);
+
+    section("single run, lean sweep config (Counts level)");
+    let lean_exp = row.clone().metrics(RecordLevel::Counts);
+    let lean = bench_fn(2, 20, || {
+        std::hint::black_box(lean_exp.run_sleeper().unwrap());
+    });
+    println!("  row-per-run lean  {lean}");
+    report.stat("single.row_per_run_lean", &lean);
+
+    // The honest per-run comparison is single-thread vs single-thread:
+    // lean (Counts level + queue/buffer optimizations) against the full
+    // row-per-run baseline. Thread fan-out must not be allowed to mask a
+    // per-run regression in the tracked trajectory.
+    let per_run_speedup =
+        full.mean.as_nanos() as f64 / (lean.mean.as_nanos().max(1) as f64);
+    println!(
+        "  per-run mean (lean) vs row-per-run baseline: {per_run_speedup:.2}x"
+    );
+    report.value("single.per_run_speedup_vs_full", per_run_speedup);
+
+    section("parallel sweep (fixed-eviction Table-I row)");
+    let sweep = row.sweep().seed_range(0, runs).threads(threads);
+    let t0 = Instant::now();
+    let merged = sweep.run()?;
+    let wall = t0.elapsed();
+    let completed = merged.iter().filter(|r| r.result.completed).count();
+    // wall/run at N threads: the aggregate throughput number, NOT a
+    // per-run cost (that's single.row_per_run_lean above).
+    let wall_per_run_ns = wall.as_nanos() as u64 / (runs.max(1) as u64);
+    let runs_per_sec = runs as f64 / wall.as_secs_f64();
+    let parallel_speedup =
+        lean.mean.as_nanos() as f64 / (wall_per_run_ns.max(1) as f64);
+    println!(
+        "  {runs} runs on {threads} thread(s): {wall:.3?} wall, \
+         {runs_per_sec:.1} simulated-runs/s, {wall_per_run_ns} ns wall/run \
+         ({completed} completed)"
+    );
+    println!(
+        "  thread-level speedup vs lean single run: {parallel_speedup:.2}x"
+    );
+    report
+        .value("sweep.wall_ns", wall.as_nanos() as u64)
+        .value("sweep.runs_per_sec", runs_per_sec)
+        .value("sweep.wall_per_run_ns", wall_per_run_ns)
+        .value("sweep.completed", completed as u64)
+        .value("sweep.parallel_speedup_vs_lean", parallel_speedup);
+    drop(merged);
+
+    section("Poisson eviction sweep -> distribution summary");
+    let poisson = Experiment::table1()
+        .named("mc-poisson75")
+        .eviction_poisson(SimDuration::from_mins(75))
+        .transparent(SimDuration::from_mins(15));
+    let n_dist = runs.min(2000);
+    let t0 = Instant::now();
+    let merged = poisson.sweep().seed_range(0, n_dist).threads(threads).run()?;
+    let wall = t0.elapsed();
+    let dist = distribution::summarize("mc-poisson75", &merged);
+    println!(
+        "  {n_dist} runs in {wall:.3?} ({:.1} runs/s)",
+        n_dist as f64 / wall.as_secs_f64()
+    );
+    print!("{}", distribution::render(&dist));
+    report.value("poisson.distributions", dist.to_json());
+    report.value(
+        "poisson.runs_per_sec",
+        n_dist as f64 / wall.as_secs_f64(),
+    );
+
+    section("merge determinism spot check (threads = 1 vs sweep threads)");
+    let n_check = runs.min(200);
+    let base = poisson.sweep().seed_range(0, n_check);
+    let a = base.clone().threads(1).run()?;
+    let b = base.clone().threads(threads.max(2)).run()?;
+    let identical = a
+        .iter()
+        .zip(&b)
+        .all(|(x, y)| {
+            x.seed == y.seed && run_digest(&x.result) == run_digest(&y.result)
+        });
+    assert!(identical, "merged sweep output diverged across thread counts");
+    println!("  {n_check} seeds byte-identical across thread counts: ok");
+    report.value("determinism.checked_seeds", n_check as u64);
+
+    report.write()?;
+    Ok(())
+}

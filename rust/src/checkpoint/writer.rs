@@ -68,6 +68,9 @@ impl WriteOutcome {
 pub struct CheckpointWriter {
     next_id: u64,
     pub crash_point: CrashPoint,
+    /// Scratch for the manifest/COMMIT object keys, reused across writes
+    /// (the payload key must be owned — it lands in the manifest).
+    key_buf: String,
 }
 
 impl CheckpointWriter {
@@ -134,12 +137,11 @@ impl CheckpointWriter {
         snapshot: &Snapshot,
         budget: Option<SimDuration>,
     ) -> Result<WriteOutcome> {
+        use std::fmt::Write as _;
         let id = self.next_id;
         self.next_id += 1;
         let dir = ckpt_dir(id, kind);
         let payload_key = format!("{dir}/payload.bin");
-        let manifest_key = format!("{dir}/manifest.json");
-        let commit_key = format!("{dir}/COMMIT");
 
         if self.crash_point == CrashPoint::BeforePayload {
             return Ok(WriteOutcome::Partial { cost: SimDuration::ZERO });
@@ -181,13 +183,17 @@ impl CheckpointWriter {
 
         let manifest =
             Self::build_manifest(id, kind, now, workload, snapshot, &payload_key);
-        cost += store.put(&manifest_key, manifest.to_json_string().as_bytes())?;
+        self.key_buf.clear();
+        let _ = write!(self.key_buf, "{dir}/manifest.json");
+        cost += store.put(&self.key_buf, manifest.to_json_string().as_bytes())?;
 
         if self.crash_point == CrashPoint::BeforeCommit {
             return Ok(WriteOutcome::Partial { cost });
         }
 
-        cost += store.put(&commit_key, b"1")?;
+        self.key_buf.clear();
+        let _ = write!(self.key_buf, "{dir}/COMMIT");
+        cost += store.put(&self.key_buf, b"1")?;
 
         // Budget check over the full sequence: the manifest/commit objects
         // are tiny but still take latency; a budget that can't cover them
@@ -196,7 +202,13 @@ impl CheckpointWriter {
             if cost > b {
                 // Roll the visible commit back: the instance died during
                 // the final latency window, so the marker never hit disk.
-                let _ = store.delete(&commit_key);
+                // Re-derive the key rather than trusting key_buf still
+                // holds it — deleting a stale key here would leave a
+                // committed marker for a checkpoint the instance died
+                // writing.
+                self.key_buf.clear();
+                let _ = write!(self.key_buf, "{dir}/COMMIT");
+                let _ = store.delete(&self.key_buf);
                 return Ok(WriteOutcome::Partial { cost: b });
             }
         }

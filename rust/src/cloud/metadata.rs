@@ -20,7 +20,6 @@
 
 use crate::json::Value;
 use crate::simclock::SimTime;
-use crate::util::next_seq;
 use std::collections::BTreeMap;
 
 /// Event lifecycle status (subset Azure exposes for Preempt).
@@ -72,9 +71,16 @@ impl ScheduledEvent {
 }
 
 /// The per-scale-set scheduled-events service.
+///
+/// Event ids are drawn from a per-service counter (not a process-global
+/// sequence): ids only need to be unique within one service's document,
+/// and a local counter makes every seeded run's timeline byte-identical
+/// regardless of process history or how many sweep threads are running
+/// other experiments concurrently.
 #[derive(Debug, Default)]
 pub struct MetadataService {
     incarnation: u64,
+    next_event_id: u64,
     events: BTreeMap<String, ScheduledEvent>,
 }
 
@@ -86,7 +92,8 @@ impl MetadataService {
     /// Platform announces a preempt of `resource` effective `not_before`.
     /// Returns the event id.
     pub fn post_preempt(&mut self, resource: &str, not_before: SimTime) -> String {
-        let event_id = format!("evt-{}", next_seq());
+        self.next_event_id += 1;
+        let event_id = format!("evt-{}", self.next_event_id);
         self.events.insert(
             event_id.clone(),
             ScheduledEvent {
@@ -237,6 +244,21 @@ mod tests {
         req.set("EventId", "evt-nope");
         body.set("StartRequests", Value::Array(vec![req]));
         assert_eq!(svc.start_requests(&body), 0);
+    }
+
+    #[test]
+    fn event_ids_are_per_service_deterministic() {
+        // Two services issue the same id sequence independently: seeded
+        // runs stay byte-identical no matter what else ran first in the
+        // process (the sweep determinism invariant).
+        let mut a = MetadataService::new();
+        let mut b = MetadataService::new();
+        let a1 = a.post_preempt("vm-0", SimTime::from_secs(1));
+        let a2 = a.post_preempt("vm-1", SimTime::from_secs(2));
+        let b1 = b.post_preempt("vm-9", SimTime::from_secs(3));
+        assert_eq!(a1, "evt-1");
+        assert_eq!(a2, "evt-2");
+        assert_eq!(b1, "evt-1");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! minimum eviction notice, and Table I row-1 baseline stage durations.
 
 use crate::config::toml::{TomlDoc, TomlValue};
+use crate::metrics::RecordLevel;
 use crate::simclock::SimDuration;
 use anyhow::{bail, Context, Result};
 
@@ -311,6 +312,10 @@ pub struct ScenarioConfig {
     /// Abort threshold: give up if the run exceeds this much virtual time
     /// (catches never-completing configurations — paper §IV).
     pub deadline: SimDuration,
+    /// Timeline recording level. [`RecordLevel::Full`] keeps every event
+    /// with its detail string; [`RecordLevel::Counts`] keeps per-kind
+    /// counters only (the Monte Carlo sweep hot path).
+    pub metrics: RecordLevel,
 }
 
 impl Default for ScenarioConfig {
@@ -327,6 +332,7 @@ impl Default for ScenarioConfig {
             fleet: FleetCfg::default(),
             storage: StorageCfg::default(),
             deadline: SimDuration::from_hours(48),
+            metrics: RecordLevel::Full,
         }
     }
 }
@@ -391,6 +397,13 @@ impl ScenarioConfig {
         }
         if let Some(v) = doc.get_bool("", "spoton") {
             cfg.coordinator_attached = v;
+        }
+        if let Some(v) = doc.get_str("", "metrics_level") {
+            cfg.metrics = match v {
+                "full" => RecordLevel::Full,
+                "counts" => RecordLevel::Counts,
+                other => bail!("unknown metrics_level '{other}'"),
+            };
         }
 
         // [workload]
@@ -674,6 +687,20 @@ provisioned_gib = 200.0
             }
             other => panic!("wrong plan: {other:?}"),
         }
+    }
+
+    #[test]
+    fn metrics_level_parses() {
+        let cfg = ScenarioConfig::from_str_toml("metrics_level = \"counts\"")
+            .unwrap();
+        assert_eq!(cfg.metrics, RecordLevel::Counts);
+        let cfg = ScenarioConfig::from_str_toml("metrics_level = \"full\"")
+            .unwrap();
+        assert_eq!(cfg.metrics, RecordLevel::Full);
+        assert_eq!(ScenarioConfig::default().metrics, RecordLevel::Full);
+        assert!(
+            ScenarioConfig::from_str_toml("metrics_level = \"loud\"").is_err()
+        );
     }
 
     #[test]

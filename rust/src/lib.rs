@@ -39,7 +39,11 @@
 //!   draw every job's replacements from one shared fleet (the Slurm/LSF
 //!   path of paper §II). [`sim::SimDriver`] is the stable facade over the
 //!   engine; [`sim::legacy`] preserves the pre-refactor loop as the
-//!   equivalence oracle.
+//!   equivalence oracle; [`sim::sweep`] fans thousands of seeded runs
+//!   across threads (merged deterministically by seed) and
+//!   [`report::distribution`] reduces the population to mean/percentile
+//!   summaries — distributions, not point estimates, for the paper's
+//!   figures and the placement-policy comparisons.
 //! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly
 //!   analog workload's compute: JAX stage functions calling Pallas kernels,
 //!   AOT-lowered to HLO-text artifacts (`python/compile/`), executed from

@@ -5,8 +5,18 @@
 //! completions) and a [`StageTimes`] accumulator whose per-stage *wall*
 //! durations — including interruptions, restores and re-done work — are
 //! exactly what the paper's Table I reports per k.
+//!
+//! Recording is gated by a [`RecordLevel`]: at [`RecordLevel::Full`]
+//! (the default) every event is kept with its detail string; at
+//! [`RecordLevel::Counts`] the timeline keeps only per-kind counters —
+//! no event `Vec` growth, no detail `String` allocation, no debug-log
+//! formatting — which is what lets the Monte Carlo sweep driver
+//! ([`crate::sim::sweep`]) run thousands of seeded experiments per
+//! second. Use [`Timeline::record_with`] on hot paths so the detail
+//! closure is never even called at the reduced level.
 
 use crate::simclock::{SimDuration, SimTime};
+use std::borrow::Cow;
 use std::fmt;
 
 /// What happened.
@@ -30,10 +40,35 @@ pub enum EventKind {
     JobSubmitted,
     JobStarted,
     JobRequeued,
+    // When adding a variant, extend [`EventKind::ALL`] too — the
+    // exhaustive match in `tests::kind_indices_are_dense` refuses to
+    // compile until every variant is listed, which keeps the per-kind
+    // counter array correctly sized.
     JobFinished,
 }
 
+/// Number of [`EventKind`] variants (sizes the per-kind counter array).
+const N_KINDS: usize = EventKind::ALL.len();
+
 impl EventKind {
+    /// Every variant, in discriminant order.
+    pub const ALL: [EventKind; 15] = [
+        EventKind::InstanceLaunch,
+        EventKind::RestoreFromCheckpoint,
+        EventKind::CheckpointCommitted,
+        EventKind::CheckpointFailed,
+        EventKind::EvictionNotice,
+        EventKind::InstanceEvicted,
+        EventKind::ReplacementRequested,
+        EventKind::PlacementDecided,
+        EventKind::StageComplete,
+        EventKind::WorkloadDone,
+        EventKind::Aborted,
+        EventKind::JobSubmitted,
+        EventKind::JobStarted,
+        EventKind::JobRequeued,
+        EventKind::JobFinished,
+    ];
     pub fn as_str(self) -> &'static str {
         match self {
             EventKind::InstanceLaunch => "launch",
@@ -55,18 +90,34 @@ impl EventKind {
     }
 }
 
+/// How much the timeline records per event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecordLevel {
+    /// Every event with its detail string (the default; what reports,
+    /// examples and the equivalence suite consume).
+    #[default]
+    Full,
+    /// Per-kind counters only: `Timeline::count` still works, but no
+    /// event records or detail strings are kept. The sweep hot path.
+    Counts,
+}
+
 /// One timeline record.
 #[derive(Debug, Clone)]
 pub struct TimelineEvent {
     pub at: SimTime,
     pub kind: EventKind,
-    pub detail: String,
+    /// Borrowed for the fixed messages, owned for formatted ones — no
+    /// allocation when the detail is a static literal.
+    pub detail: Cow<'static, str>,
 }
 
 /// Ordered event record for one run.
 #[derive(Debug, Clone, Default)]
 pub struct Timeline {
+    level: RecordLevel,
     events: Vec<TimelineEvent>,
+    counts: [u32; N_KINDS],
 }
 
 impl Timeline {
@@ -74,23 +125,61 @@ impl Timeline {
         Self::default()
     }
 
+    /// A timeline recording at the given level.
+    pub fn with_level(level: RecordLevel) -> Self {
+        Self { level, ..Self::default() }
+    }
+
+    pub fn level(&self) -> RecordLevel {
+        self.level
+    }
+
+    /// Record an event whose detail is already built (or free: a static
+    /// literal, or a `String` that exists anyway). For details that need
+    /// a `format!`, prefer [`Timeline::record_with`].
     pub fn record(
         &mut self,
         at: SimTime,
         kind: EventKind,
-        detail: impl Into<String>,
+        detail: impl Into<Cow<'static, str>>,
     ) {
-        let detail = detail.into();
-        log::debug!("{at:?} {}: {detail}", kind.as_str());
-        self.events.push(TimelineEvent { at, kind, detail });
+        self.counts[kind as usize] += 1;
+        if self.level == RecordLevel::Full {
+            let detail = detail.into();
+            log::debug!("{at:?} {}: {detail}", kind.as_str());
+            self.events.push(TimelineEvent { at, kind, detail });
+        }
     }
 
+    /// Record an event with a lazily-built detail: the closure runs only
+    /// at [`RecordLevel::Full`], so reduced-level runs skip the `format!`
+    /// allocation entirely.
+    pub fn record_with<F: FnOnce() -> String>(
+        &mut self,
+        at: SimTime,
+        kind: EventKind,
+        detail: F,
+    ) {
+        self.counts[kind as usize] += 1;
+        if self.level == RecordLevel::Full {
+            let detail = detail();
+            log::debug!("{at:?} {}: {detail}", kind.as_str());
+            self.events.push(TimelineEvent {
+                at,
+                kind,
+                detail: Cow::Owned(detail),
+            });
+        }
+    }
+
+    /// Recorded events (empty at [`RecordLevel::Counts`]).
     pub fn events(&self) -> &[TimelineEvent] {
         &self.events
     }
 
+    /// How many events of `kind` were recorded. Counted at every level.
     pub fn count(&self, kind: EventKind) -> usize {
-        self.events.iter().filter(|e| e.kind == kind).count()
+        self.counts[kind as usize] as usize
     }
 
     /// Events are recorded in nondecreasing time order (asserted by
@@ -170,6 +259,64 @@ mod tests {
         assert!(t.is_monotone());
         let s = t.to_string();
         assert!(s.contains("notice"));
+    }
+
+    #[test]
+    fn kind_indices_are_dense() {
+        // Every variant's discriminant indexes the counter array; the
+        // exhaustive match below breaks the build when a variant is
+        // added without extending EventKind::ALL (and thereby N_KINDS).
+        let mut t = Timeline::new();
+        for (i, &k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(k as usize, i, "{}", k.as_str());
+            t.record(SimTime::from_secs(i as u64), k, "x");
+            assert_eq!(t.count(k), 1, "{}", k.as_str());
+            match k {
+                EventKind::InstanceLaunch
+                | EventKind::RestoreFromCheckpoint
+                | EventKind::CheckpointCommitted
+                | EventKind::CheckpointFailed
+                | EventKind::EvictionNotice
+                | EventKind::InstanceEvicted
+                | EventKind::ReplacementRequested
+                | EventKind::PlacementDecided
+                | EventKind::StageComplete
+                | EventKind::WorkloadDone
+                | EventKind::Aborted
+                | EventKind::JobSubmitted
+                | EventKind::JobStarted
+                | EventKind::JobRequeued
+                | EventKind::JobFinished => {}
+            }
+        }
+        assert_eq!(t.events().len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn counts_level_keeps_counters_but_no_events() {
+        let mut t = Timeline::with_level(RecordLevel::Counts);
+        let mut detail_built = false;
+        t.record(SimTime::from_secs(1), EventKind::InstanceLaunch, "vm-0");
+        t.record_with(SimTime::from_secs(2), EventKind::EvictionNotice, || {
+            detail_built = true;
+            "expensive".to_string()
+        });
+        assert_eq!(t.count(EventKind::InstanceLaunch), 1);
+        assert_eq!(t.count(EventKind::EvictionNotice), 1);
+        assert!(t.events().is_empty(), "Counts level must not keep events");
+        assert!(!detail_built, "detail closure must not run at Counts level");
+        assert!(t.is_monotone());
+    }
+
+    #[test]
+    fn full_level_evaluates_lazy_detail() {
+        let mut t = Timeline::new();
+        t.record_with(SimTime::from_secs(3), EventKind::Aborted, || {
+            format!("deadline {}", 42)
+        });
+        assert_eq!(t.events().len(), 1);
+        assert_eq!(t.events()[0].detail, "deadline 42");
+        assert_eq!(t.count(EventKind::Aborted), 1);
     }
 
     #[test]

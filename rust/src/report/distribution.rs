@@ -1,0 +1,310 @@
+//! Distribution summaries over Monte Carlo sweeps.
+//!
+//! The paper reports point estimates; the sweep driver
+//! ([`crate::sim::sweep`]) produces populations. This module reduces a
+//! merged sweep into per-metric [`Summary`] statistics (mean / p50 / p95
+//! / p99 / min / max) — makespan, cost, evictions, restores, lost steps —
+//! plus per-pool attribution, and renders them as aligned text tables or
+//! deterministic JSON (the `BENCH_sweep.json` payload).
+//!
+//! Every reduction walks the merged runs in seed order with a fixed
+//! summation order, so two sweeps that merged identically summarize
+//! identically — bit-for-bit, across thread counts.
+
+use crate::json::Value;
+use crate::report::table::TextTable;
+use crate::sim::sweep::SeededRun;
+use crate::simclock::SimDuration;
+use crate::util::fmt::dollars;
+
+/// Order statistics + mean over one metric's samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Empty-sample summary (all zeros).
+    pub const ZERO: Summary = Summary {
+        n: 0,
+        mean: 0.0,
+        p50: 0.0,
+        p95: 0.0,
+        p99: 0.0,
+        min: 0.0,
+        max: 0.0,
+    };
+
+    /// Summarize `samples` (nearest-rank percentiles over a total-order
+    /// sort; the mean sums in input order — deterministic for a
+    /// deterministic input sequence).
+    pub fn from_samples(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::ZERO;
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(f64::total_cmp);
+        let pct = |q: f64| sorted[(((n - 1) as f64) * q).round() as usize];
+        Summary {
+            n,
+            mean,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            min: sorted[0],
+            max: sorted[n - 1],
+        }
+    }
+
+    fn to_json(self) -> Value {
+        let mut v = Value::obj();
+        v.set("n", self.n)
+            .set("mean", self.mean)
+            .set("p50", self.p50)
+            .set("p95", self.p95)
+            .set("p99", self.p99)
+            .set("min", self.min)
+            .set("max", self.max);
+        v
+    }
+}
+
+/// One pool's aggregate usage plus its per-run compute-cost distribution.
+#[derive(Debug, Clone)]
+pub struct PoolDistribution {
+    pub pool: String,
+    /// Launches summed across every run.
+    pub launches: u32,
+    /// Evictions summed across every run.
+    pub evictions: u32,
+    /// Distribution of the pool's attributed compute cost per run.
+    pub compute_cost: Summary,
+}
+
+/// The reduced shape of one sweep.
+#[derive(Debug, Clone)]
+pub struct SweepDistributions {
+    pub scenario: String,
+    pub runs: usize,
+    /// Runs that finished the workload (vs aborted at the deadline).
+    pub completed: usize,
+    pub makespan_secs: Summary,
+    pub total_cost: Summary,
+    pub evictions: Summary,
+    pub restores: Summary,
+    pub lost_steps: Summary,
+    pub pools: Vec<PoolDistribution>,
+}
+
+/// Reduce a merged sweep (seed order) into distribution summaries.
+pub fn summarize(scenario: &str, runs: &[SeededRun]) -> SweepDistributions {
+    let metric = |f: &dyn Fn(&SeededRun) -> f64| -> Vec<f64> {
+        runs.iter().map(f).collect()
+    };
+    let makespan = metric(&|r| r.result.total.as_secs_f64());
+    let cost = metric(&|r| r.result.total_cost());
+    let evictions = metric(&|r| r.result.evictions as f64);
+    let restores = metric(&|r| r.result.restores as f64);
+    let lost = metric(&|r| r.result.lost_steps as f64);
+
+    // Per-pool attribution: pools keyed by first-seen order (identical in
+    // every run of one sweep — pool ids come from the shared config).
+    let mut pools: Vec<(String, u32, u32, Vec<f64>)> = Vec::new();
+    for run in runs {
+        for p in &run.result.pool_stats {
+            match pools.iter_mut().find(|e| e.0 == p.pool) {
+                Some(e) => {
+                    e.1 += p.launches;
+                    e.2 += p.evictions;
+                    e.3.push(p.compute_cost);
+                }
+                None => pools.push((
+                    p.pool.clone(),
+                    p.launches,
+                    p.evictions,
+                    vec![p.compute_cost],
+                )),
+            }
+        }
+    }
+
+    SweepDistributions {
+        scenario: scenario.to_string(),
+        runs: runs.len(),
+        completed: runs.iter().filter(|r| r.result.completed).count(),
+        makespan_secs: Summary::from_samples(&makespan),
+        total_cost: Summary::from_samples(&cost),
+        evictions: Summary::from_samples(&evictions),
+        restores: Summary::from_samples(&restores),
+        lost_steps: Summary::from_samples(&lost),
+        pools: pools
+            .into_iter()
+            .map(|(pool, launches, evictions, costs)| PoolDistribution {
+                pool,
+                launches,
+                evictions,
+                compute_cost: Summary::from_samples(&costs),
+            })
+            .collect(),
+    }
+}
+
+fn hms(secs: f64) -> String {
+    SimDuration::from_secs_f64(secs.max(0.0)).hms()
+}
+
+/// Aligned text table: one row per metric, one column per statistic.
+pub fn render(d: &SweepDistributions) -> String {
+    let mut t = TextTable::new(&[
+        "Metric", "Mean", "P50", "P95", "P99", "Min", "Max",
+    ]);
+    let time_row = |label: &str, s: &Summary| -> Vec<String> {
+        vec![
+            label.to_string(),
+            hms(s.mean),
+            hms(s.p50),
+            hms(s.p95),
+            hms(s.p99),
+            hms(s.min),
+            hms(s.max),
+        ]
+    };
+    let cost_row = |label: &str, s: &Summary| -> Vec<String> {
+        vec![
+            label.to_string(),
+            dollars(s.mean),
+            dollars(s.p50),
+            dollars(s.p95),
+            dollars(s.p99),
+            dollars(s.min),
+            dollars(s.max),
+        ]
+    };
+    let count_row = |label: &str, s: &Summary| -> Vec<String> {
+        vec![
+            label.to_string(),
+            format!("{:.2}", s.mean),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.p95),
+            format!("{:.0}", s.p99),
+            format!("{:.0}", s.min),
+            format!("{:.0}", s.max),
+        ]
+    };
+    t.row(&time_row("makespan", &d.makespan_secs));
+    t.row(&cost_row("total cost", &d.total_cost));
+    t.row(&count_row("evictions", &d.evictions));
+    t.row(&count_row("restores", &d.restores));
+    t.row(&count_row("lost steps", &d.lost_steps));
+    for p in &d.pools {
+        t.row(&cost_row(&format!("pool {} cost", p.pool), &p.compute_cost));
+    }
+    let mut out = format!(
+        "{}: {} runs, {} completed ({:.1}%)\n",
+        d.scenario,
+        d.runs,
+        d.completed,
+        if d.runs > 0 {
+            100.0 * d.completed as f64 / d.runs as f64
+        } else {
+            0.0
+        }
+    );
+    out.push_str(&t.render());
+    for p in &d.pools {
+        out.push_str(&format!(
+            "  pool {}: {} launches, {} evictions across the sweep\n",
+            p.pool, p.launches, p.evictions
+        ));
+    }
+    out
+}
+
+impl SweepDistributions {
+    /// Deterministic JSON shape (the `BENCH_sweep.json` payload; object
+    /// keys serialize sorted).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("scenario", self.scenario.as_str())
+            .set("runs", self.runs)
+            .set("completed", self.completed)
+            .set("makespan_secs", self.makespan_secs.to_json())
+            .set("total_cost", self.total_cost.to_json())
+            .set("evictions", self.evictions.to_json())
+            .set("restores", self.restores.to_json())
+            .set("lost_steps", self.lost_steps.to_json());
+        let pools: Vec<Value> = self
+            .pools
+            .iter()
+            .map(|p| {
+                let mut pv = Value::obj();
+                pv.set("pool", p.pool.as_str())
+                    .set("launches", p.launches)
+                    .set("evictions", p.evictions)
+                    .set("compute_cost", p.compute_cost.to_json());
+                pv
+            })
+            .collect();
+        v.set("pools", Value::Array(pools));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::experiment::Experiment;
+
+    #[test]
+    fn summary_order_statistics() {
+        let s = Summary::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(s.n, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert_eq!(Summary::from_samples(&[]), Summary::ZERO);
+        let one = Summary::from_samples(&[7.5]);
+        assert_eq!(one.mean, 7.5);
+        assert_eq!(one.p99, 7.5);
+    }
+
+    #[test]
+    fn summarize_and_render_a_small_sweep() {
+        use crate::simclock::SimDuration;
+        let runs = Experiment::table1()
+            .named("dist-unit")
+            .eviction_poisson(SimDuration::from_mins(75))
+            .transparent(SimDuration::from_mins(20))
+            .sweep()
+            .seed_range(0, 8)
+            .threads(2)
+            .run()
+            .unwrap();
+        let d = summarize("dist-unit", &runs);
+        assert_eq!(d.runs, 8);
+        assert_eq!(d.completed, 8);
+        assert!(d.makespan_secs.min >= 11006.0, "below uninterrupted total");
+        assert!(d.makespan_secs.min <= d.makespan_secs.p50);
+        assert!(d.makespan_secs.p50 <= d.makespan_secs.max);
+        assert!(d.total_cost.mean > 0.0);
+        // single implicit pool carries every run
+        assert_eq!(d.pools.len(), 1);
+        assert!(d.pools[0].launches >= 8);
+        let text = render(&d);
+        assert!(text.contains("makespan"), "{text}");
+        assert!(text.contains("8 runs"), "{text}");
+        let json = crate::json::to_string(&d.to_json());
+        assert!(json.contains("\"runs\":8"), "{json}");
+        assert!(json.contains("\"p99\""), "{json}");
+    }
+}

@@ -8,12 +8,16 @@
 //!   transparent execution time) as ASCII bar charts + CSV series.
 //! * [`fleet`] — per-pool cost attribution and placement-policy
 //!   comparison for multi-pool fleet runs.
+//! * [`distribution`] — mean/percentile summaries over Monte Carlo
+//!   sweeps ([`crate::sim::sweep`]): distributions, not point estimates.
 
 pub mod table;
 pub mod table1;
 pub mod figures;
 pub mod fleet;
+pub mod distribution;
 
+pub use distribution::{summarize, SweepDistributions};
 pub use fleet::{render_policy_comparison, render_pool_breakdown};
 pub use table::TextTable;
 pub use table1::{paper_rows, render_comparison, Table1Row};

@@ -64,7 +64,7 @@ use crate::coordinator::restart::{RestartManager, RestoreReport};
 use crate::metrics::{EventKind, Timeline};
 use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
 use crate::storage::SharedStore;
-use crate::workload::{StepOutcome, Workload};
+use crate::workload::{Snapshot, StepOutcome, Workload};
 use anyhow::{Context, Result};
 
 /// Everything that can happen in a simulated run.
@@ -146,6 +146,9 @@ pub struct Engine<'a> {
     workload: Box<dyn Workload>,
     monitor: Option<ScheduledEventsMonitor>,
     inst: Option<InstanceCtx>,
+    /// Reusable periodic-snapshot buffer: one allocation per run, not one
+    /// per checkpoint (`Workload::snapshot_into`).
+    snap_buf: Snapshot,
 
     spoton: bool,
     overhead_factor: f64,
@@ -198,7 +201,7 @@ impl<'a> Engine<'a> {
             queue: EventQueue::new(),
             live_tokens: Vec::new(),
             billing: BillingMeter::new(),
-            timeline: Timeline::new(),
+            timeline: Timeline::with_level(cfg.metrics),
             metadata: MetadataService::new(),
             fleet,
             placement,
@@ -207,6 +210,7 @@ impl<'a> Engine<'a> {
             workload,
             monitor: None,
             inst: None,
+            snap_buf: Snapshot { bytes: Vec::new(), charged_bytes: 0 },
             last_ckpt_at: SimTime::ZERO,
             notices: 0,
             evictions: 0,
@@ -296,11 +300,9 @@ impl<'a> Engine<'a> {
         let views = self.fleet.views();
         let pool = self.placement.place(self.fleet.active_pool(), &views);
         if self.fleet.is_multi_pool() {
-            self.timeline.record(
-                now,
-                EventKind::ReplacementRequested,
-                format!("placement via {}", self.placement.name()),
-            );
+            self.timeline.record_with(now, EventKind::ReplacementRequested, || {
+                format!("placement via {}", self.placement.name())
+            });
         }
         self.schedule(now, SimEvent::PlacementDecided { pool });
         Ok(())
@@ -313,17 +315,15 @@ impl<'a> Engine<'a> {
         if self.fleet.is_multi_pool() {
             let views = self.fleet.views();
             let view = &views[pool.0];
-            self.timeline.record(
-                now,
-                EventKind::PlacementDecided,
+            self.timeline.record_with(now, EventKind::PlacementDecided, || {
                 format!(
                     "{} ({} {} @ ${:.4}/h)",
                     view.name,
                     view.vm_size,
                     if view.spot { "spot" } else { "on-demand" },
                     view.price_per_hour
-                ),
-            );
+                )
+            });
         }
         let ready = self.fleet.ready_at(pool, now);
         self.schedule(ready, SimEvent::InstanceProvisioned);
@@ -336,16 +336,16 @@ impl<'a> Engine<'a> {
     fn on_instance_provisioned(&mut self) -> Result<()> {
         let now = self.clock.now();
         let inst_id = self.fleet.launch(now).id.to_string();
-        let launch_detail = if self.fleet.is_multi_pool() {
-            format!(
-                "{inst_id} in {}",
-                self.fleet.pool_name(self.fleet.active_pool())
-            )
-        } else {
-            inst_id.clone()
-        };
-        self.timeline
-            .record(now, EventKind::InstanceLaunch, launch_detail);
+        self.timeline.record_with(now, EventKind::InstanceLaunch, || {
+            if self.fleet.is_multi_pool() {
+                format!(
+                    "{inst_id} in {}",
+                    self.fleet.pool_name(self.fleet.active_pool())
+                )
+            } else {
+                inst_id.clone()
+            }
+        });
         let mut monitor = ScheduledEventsMonitor::new(&inst_id);
         monitor.reset();
         self.monitor = Some(monitor);
@@ -407,16 +407,14 @@ impl<'a> Engine<'a> {
         self.lost_steps += self
             .max_steps_seen
             .saturating_sub(report.resumed_total_steps);
-        self.timeline.record(
-            now,
-            EventKind::RestoreFromCheckpoint,
+        self.timeline.record_with(now, EventKind::RestoreFromCheckpoint, || {
             format!(
                 "ckpt {} ({}) -> step {}",
                 report.manifest.id,
                 report.manifest.kind.as_str(),
                 report.resumed_total_steps
-            ),
-        );
+            )
+        });
         self.last_ckpt_at = now;
         self.schedule(now, SimEvent::BoundaryReached);
         Ok(())
@@ -437,15 +435,16 @@ impl<'a> Engine<'a> {
             return Ok(());
         }
 
-        // periodic transparent checkpoint at step boundary
+        // periodic transparent checkpoint at step boundary (the snapshot
+        // buffer is reused across every checkpoint of the run)
         if self.spoton && self.policy.periodic_due(now, self.last_ckpt_at) {
-            let snap = self.workload.snapshot()?;
+            self.workload.snapshot_into(&mut self.snap_buf)?;
             let outcome = self.writer.write(
                 self.store,
                 now,
                 CkptKind::Periodic,
                 self.workload.as_ref(),
-                &snap,
+                &self.snap_buf,
             )?;
             let cost = outcome.cost(); // workload frozen while dumping
             self.schedule_in(cost, SimEvent::CkptDone {
@@ -503,25 +502,19 @@ impl<'a> Engine<'a> {
             StepOutcome::StageComplete(s) => {
                 milestone = true;
                 self.completion_at[s as usize] = Some(now);
-                self.timeline.record(
-                    now,
-                    EventKind::StageComplete,
-                    self.workload.stage_label(s),
-                );
+                self.timeline.record_with(now, EventKind::StageComplete, || {
+                    self.workload.stage_label(s)
+                });
             }
             StepOutcome::Done => {
                 let s = (self.workload.num_stages() - 1) as usize;
                 self.completion_at[s] = Some(now);
-                self.timeline.record(
-                    now,
-                    EventKind::StageComplete,
-                    self.workload.stage_label(s as u32),
-                );
-                self.timeline.record(
-                    now,
-                    EventKind::WorkloadDone,
-                    format!("{} steps", self.workload.progress().total_steps),
-                );
+                self.timeline.record_with(now, EventKind::StageComplete, || {
+                    self.workload.stage_label(s as u32)
+                });
+                self.timeline.record_with(now, EventKind::WorkloadDone, || {
+                    format!("{} steps", self.workload.progress().total_steps)
+                });
                 self.completed = true;
                 self.fleet.terminate_current(now, &mut self.billing);
                 self.finish();
@@ -562,17 +555,17 @@ impl<'a> Engine<'a> {
         if let Some(manifest) = outcome.committed() {
             if periodic {
                 self.periodic_ckpts += 1;
-                self.timeline.record(
+                self.timeline.record_with(
                     now,
                     EventKind::CheckpointCommitted,
-                    format!("periodic ckpt {}", manifest.id),
+                    || format!("periodic ckpt {}", manifest.id),
                 );
             } else {
                 self.app_ckpts += 1;
-                self.timeline.record(
+                self.timeline.record_with(
                     now,
                     EventKind::CheckpointCommitted,
-                    format!("application ckpt {}", manifest.id),
+                    || format!("application ckpt {}", manifest.id),
                 );
             }
         }
@@ -663,10 +656,10 @@ impl<'a> Engine<'a> {
         let now = self.clock.now();
         if let Some(manifest) = outcome.committed() {
             self.termination_ok += 1;
-            self.timeline.record(
+            self.timeline.record_with(
                 now,
                 EventKind::CheckpointCommitted,
-                format!("termination ckpt {}", manifest.id),
+                || format!("termination ckpt {}", manifest.id),
             );
         } else {
             self.termination_failed += 1;

@@ -123,6 +123,13 @@ impl Experiment {
         self
     }
 
+    /// Timeline recording level ([`crate::metrics::RecordLevel::Counts`]
+    /// skips per-event records — the sweep/bench hot path).
+    pub fn metrics(mut self, level: crate::metrics::RecordLevel) -> Self {
+        self.cfg.metrics = level;
+        self
+    }
+
     pub fn notice(mut self, d: SimDuration) -> Self {
         self.cfg.cloud.notice = d;
         self

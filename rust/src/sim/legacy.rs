@@ -38,7 +38,7 @@ pub fn run_reference(
     let policy = CheckpointPolicy::new(cfg.checkpoint.clone());
     let mut clock = Clock::new();
     let mut billing = BillingMeter::new();
-    let mut timeline = Timeline::new();
+    let mut timeline = Timeline::with_level(cfg.metrics);
     let mut metadata = MetadataService::new();
     let mut plan = EvictionPlan::new(cfg.eviction.clone(), cfg.seed);
     let mut scale_set = ScaleSet::new(

@@ -17,6 +17,9 @@
 //! * [`experiment`] — the builder/preset layer:
 //!   `Experiment::table1().eviction_every(90 min).transparent(30 min)` is
 //!   the paper's Table I row 5.
+//! * [`sweep`] — the parallel Monte Carlo driver: thousands of seeded
+//!   runs fanned across threads, merged deterministically by seed, fed
+//!   into [`crate::report::distribution`] summaries.
 //!
 //! ## Time accounting
 //!
@@ -36,9 +39,11 @@
 pub mod engine;
 pub mod experiment;
 pub mod legacy;
+pub mod sweep;
 
 pub use engine::SimEvent;
 pub use experiment::Experiment;
+pub use sweep::{SeededRun, Sweep};
 
 use crate::cloud::billing::Invoice;
 use crate::cloud::fleet::PoolStats;

@@ -1,0 +1,286 @@
+//! Parallel Monte Carlo sweep driver: thousands of seeded runs, merged
+//! deterministically.
+//!
+//! The paper's headline numbers (Table I runtimes, Fig 2 cost, Fig 3
+//! completion time) are point estimates from single eviction schedules.
+//! This module turns the ms-per-run event engine into a population-scale
+//! evaluator: a [`Sweep`] fans one base [`Experiment`] across a seed
+//! list on `std::thread` workers — one engine + one fresh store per run,
+//! **no shared mutable state** beyond an atomic work index — and merges
+//! the [`RunResult`]s back *by seed position*, so the output vector is
+//! byte-identical at any thread count (pinned by
+//! `tests/sweep_determinism.rs`). Distribution summaries over the merged
+//! vector live in [`crate::report::distribution`].
+//!
+//! Sweeps default to [`RecordLevel::Counts`]: the per-event timeline
+//! (detail `String`s, event `Vec` growth) is skipped and only per-kind
+//! counters are kept, which is most of the difference between a
+//! "row-per-run" single experiment and the sweep's per-run mean (see
+//! `benches/sweep_montecarlo.rs`). Runs are deterministic per seed even
+//! at [`RecordLevel::Full`] — event ids are per-metadata-service, not
+//! process-global — so timeline-carrying sweeps merge byte-identically
+//! too, just slower.
+//!
+//! ```no_run
+//! use spoton::sim::experiment::Experiment;
+//! use spoton::simclock::SimDuration;
+//!
+//! let runs = Experiment::table1()
+//!     .eviction_poisson(SimDuration::from_mins(75))
+//!     .transparent(SimDuration::from_mins(15))
+//!     .sweep()
+//!     .seed_range(0, 10_000)
+//!     .threads(8)
+//!     .run()
+//!     .unwrap();
+//! let dist = spoton::report::distribution::summarize("poisson-75", &runs);
+//! println!("{}", spoton::report::distribution::render(&dist));
+//! ```
+
+use super::experiment::Experiment;
+use super::RunResult;
+use crate::metrics::RecordLevel;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// One merged sweep entry: the scenario seed and everything its run
+/// produced.
+#[derive(Debug)]
+pub struct SeededRun {
+    pub seed: u64,
+    pub result: RunResult,
+}
+
+/// A configured Monte Carlo sweep over one base experiment.
+#[derive(Debug, Clone)]
+pub struct Sweep {
+    base: Experiment,
+    seeds: Vec<u64>,
+    threads: usize,
+    record: RecordLevel,
+}
+
+impl Experiment {
+    /// Start a sweep over this experiment (seeds override the scenario
+    /// seed run by run; everything else is shared).
+    pub fn sweep(&self) -> Sweep {
+        Sweep::new(self.clone())
+    }
+}
+
+impl Sweep {
+    /// A sweep with no seeds yet, one worker per available core, and the
+    /// lean [`RecordLevel::Counts`] metrics level.
+    pub fn new(base: Experiment) -> Self {
+        Self {
+            base,
+            seeds: Vec::new(),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            record: RecordLevel::Counts,
+        }
+    }
+
+    /// Explicit seed list (merge order == this order).
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    /// The contiguous seed range `first .. first + n`.
+    pub fn seed_range(self, first: u64, n: usize) -> Self {
+        let seeds: Vec<u64> =
+            (0..n as u64).map(|i| first.wrapping_add(i)).collect();
+        self.seeds(seeds)
+    }
+
+    /// Worker thread count (clamped to at least 1; 1 runs inline without
+    /// spawning).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Timeline recording level for every run (default
+    /// [`RecordLevel::Counts`]; use [`RecordLevel::Full`] when the
+    /// per-run timelines are the point of the sweep).
+    pub fn record(mut self, level: RecordLevel) -> Self {
+        self.record = level;
+        self
+    }
+
+    pub fn seed_count(&self) -> usize {
+        self.seeds.len()
+    }
+
+    /// One run at `seed`, exactly as the sweep executes it (exposed so
+    /// single-run baselines in benches measure the identical path).
+    pub fn run_one(&self, seed: u64) -> Result<RunResult> {
+        let mut exp = self.base.clone().seed(seed);
+        exp.cfg.metrics = self.record;
+        exp.run_sleeper()
+    }
+
+    /// Run every seed and merge the results by seed position.
+    ///
+    /// Workers pull indices from a shared atomic counter (so a straggler
+    /// run never idles the other threads) and stash `(index, result)`
+    /// pairs locally; the merge writes each result into its seed's slot
+    /// after joining. Which worker ran which seed is scheduling noise —
+    /// the merged vector never reflects it. The first run error (in seed
+    /// order) aborts the sweep.
+    pub fn run(&self) -> Result<Vec<SeededRun>> {
+        let n = self.seeds.len();
+        let workers = self.threads.min(n.max(1));
+        let mut slots: Vec<Option<Result<RunResult>>> =
+            (0..n).map(|_| None).collect();
+
+        if workers <= 1 {
+            for (i, &seed) in self.seeds.iter().enumerate() {
+                slots[i] = Some(self.run_one(seed));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for _ in 0..workers {
+                    let next = &next;
+                    handles.push(scope.spawn(move || {
+                        let mut local: Vec<(usize, Result<RunResult>)> =
+                            Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, self.run_one(self.seeds[i])));
+                        }
+                        local
+                    }));
+                }
+                for h in handles {
+                    for (i, r) in h.join().expect("sweep worker panicked") {
+                        slots[i] = Some(r);
+                    }
+                }
+            });
+        }
+
+        self.seeds
+            .iter()
+            .zip(slots)
+            .map(|(&seed, slot)| {
+                slot.expect("every seed index visited exactly once")
+                    .map(|result| SeededRun { seed, result })
+            })
+            .collect()
+    }
+}
+
+/// Canonical digest of everything a run produced — every `RunResult`
+/// field (costs bitwise), per-pool attribution, and the full timeline.
+/// Two runs are byte-identical iff their digests match; the determinism
+/// suite compares digest vectors across thread counts.
+pub fn run_digest(r: &RunResult) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{}|completed={}|total={}|notices={}|evictions={}|instances={}|\
+         ckpts={}p/{}t/{}f/{}a|restores={}|lost={}|compute={:016x}|\
+         storage={:016x}|fp={:016x}",
+        r.scenario,
+        r.completed,
+        r.total.as_millis(),
+        r.notices,
+        r.evictions,
+        r.instances,
+        r.periodic_ckpts,
+        r.termination_ok,
+        r.termination_failed,
+        r.app_ckpts,
+        r.restores,
+        r.lost_steps,
+        r.compute_cost.to_bits(),
+        r.storage_cost.to_bits(),
+        r.final_fingerprint,
+    );
+    for (label, d) in &r.stage_times {
+        let _ = write!(out, "|stage:{label}={}", d.as_millis());
+    }
+    for p in &r.pool_stats {
+        let _ = write!(
+            out,
+            "|pool:{}={}l/{}e/{:016x}",
+            p.pool,
+            p.launches,
+            p.evictions,
+            p.compute_cost.to_bits()
+        );
+    }
+    // Per-kind counters are the only timeline data a Counts-level run
+    // keeps — they must enter the digest for the iff contract to hold.
+    for k in crate::metrics::EventKind::ALL {
+        let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));
+    }
+    for e in r.timeline.events() {
+        let _ = write!(
+            out,
+            "|{}@{}:{}",
+            e.kind.as_str(),
+            e.at.as_millis(),
+            e.detail
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimDuration;
+
+    fn base() -> Experiment {
+        Experiment::table1()
+            .named("sweep-unit")
+            .eviction_poisson(SimDuration::from_mins(60))
+            .transparent(SimDuration::from_mins(20))
+    }
+
+    #[test]
+    fn merged_order_follows_seed_list() {
+        let runs = base().sweep().seeds([9, 2, 7]).threads(2).run().unwrap();
+        let seeds: Vec<u64> = runs.iter().map(|r| r.seed).collect();
+        assert_eq!(seeds, [9, 2, 7]);
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(base().sweep().run().unwrap().is_empty());
+    }
+
+    #[test]
+    fn sweep_runs_default_to_counts_level() {
+        let runs = base().sweep().seeds([5]).threads(1).run().unwrap();
+        let r = &runs[0].result;
+        assert!(r.completed);
+        assert!(
+            r.timeline.events().is_empty(),
+            "Counts level must not keep timeline events"
+        );
+        // counters still work
+        assert_eq!(
+            r.timeline.count(crate::metrics::EventKind::InstanceEvicted),
+            r.evictions as usize
+        );
+    }
+
+    #[test]
+    fn run_one_matches_sweep_entry() {
+        let sweep = base().sweep().seeds([33]).threads(1);
+        let solo = sweep.run_one(33).unwrap();
+        let merged = sweep.run().unwrap();
+        assert_eq!(run_digest(&solo), run_digest(&merged[0].result));
+    }
+}

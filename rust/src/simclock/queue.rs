@@ -11,10 +11,19 @@
 //! timers never disturbs other instances' (or other jobs') events the way
 //! [`EventQueue::clear`] would. This is what lets the simulation engine
 //! and the multi-slot scheduler share one queue.
+//!
+//! Tokens are dense (0, 1, 2, …), so liveness is tracked as a flat
+//! per-token state vector plus a live counter instead of a `HashSet`:
+//! `schedule`/`cancel`/`pop`/`peek_time` touch one byte by index — no
+//! hashing on the engine's hot path (every event pop used to probe the
+//! set at least twice). The state vector grows one byte per event ever
+//! scheduled on this queue, which for even the largest simulated runs is
+//! a few KiB; lazy-purge semantics are unchanged and pinned by the
+//! property tests below.
 
 use super::{SimDuration, SimTime};
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::BinaryHeap;
 
 /// An event of type `E` scheduled at a virtual instant.
 #[derive(Debug, Clone)]
@@ -47,13 +56,26 @@ impl<E> PartialOrd for Scheduled<E> {
     }
 }
 
+/// Lifecycle of one issued token (one byte per token ever issued).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TokenState {
+    /// Scheduled, not yet popped or cancelled.
+    Live,
+    /// Cancelled; its heap entry is a tombstone awaiting lazy purge.
+    Cancelled,
+    /// Popped, purged, or cleared — no heap entry remains.
+    Dead,
+}
+
 /// Event queue with deterministic ordering and token cancellation.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     heap: BinaryHeap<Scheduled<E>>,
-    next_seq: u64,
-    /// Sequence ids still live (scheduled, not yet popped or cancelled).
-    pending: HashSet<u64>,
+    /// `states[seq]` is the lifecycle of token `seq`; `states.len()` is
+    /// the next sequence id.
+    states: Vec<TokenState>,
+    /// Number of `Live` tokens (== the queue's logical length).
+    live: usize,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -66,18 +88,18 @@ impl<E> EventQueue<E> {
     pub fn new() -> Self {
         Self {
             heap: BinaryHeap::new(),
-            next_seq: 0,
-            pending: HashSet::new(),
+            states: Vec::new(),
+            live: 0,
         }
     }
 
     /// Schedule `event` at absolute time `at`; returns its cancellation
     /// token (the sequence id).
     pub fn schedule(&mut self, at: SimTime, event: E) -> u64 {
-        let seq = self.next_seq;
-        self.next_seq += 1;
+        let seq = self.states.len() as u64;
         self.heap.push(Scheduled { at, seq, event });
-        self.pending.insert(seq);
+        self.states.push(TokenState::Live);
+        self.live += 1;
         seq
     }
 
@@ -96,15 +118,24 @@ impl<E> EventQueue<E> {
     /// event was still pending (false: already fired or already
     /// cancelled). O(1); the entry is dropped lazily at pop time.
     pub fn cancel(&mut self, token: u64) -> bool {
-        self.pending.remove(&token)
+        match self.states.get_mut(token as usize) {
+            Some(state) if *state == TokenState::Live => {
+                *state = TokenState::Cancelled;
+                self.live -= 1;
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Drop any cancelled entries sitting on top of the heap.
     fn purge_top(&mut self) {
         while let Some(top) = self.heap.peek() {
-            if self.pending.contains(&top.seq) {
+            let state = &mut self.states[top.seq as usize];
+            if *state == TokenState::Live {
                 return;
             }
+            *state = TokenState::Dead;
             self.heap.pop();
         }
     }
@@ -119,17 +150,18 @@ impl<E> EventQueue<E> {
     pub fn pop(&mut self) -> Option<Scheduled<E>> {
         self.purge_top();
         let s = self.heap.pop()?;
-        self.pending.remove(&s.seq);
+        self.states[s.seq as usize] = TokenState::Dead;
+        self.live -= 1;
         Some(s)
     }
 
     /// Number of live (non-cancelled) events.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.live == 0
     }
 
     /// Drop all pending events. Prefer [`EventQueue::cancel`] with the
@@ -137,7 +169,10 @@ impl<E> EventQueue<E> {
     /// timers, not just yours.
     pub fn clear(&mut self) {
         self.heap.clear();
-        self.pending.clear();
+        for s in &mut self.states {
+            *s = TokenState::Dead;
+        }
+        self.live = 0;
     }
 }
 
@@ -187,6 +222,22 @@ mod tests {
         q.schedule(SimTime::from_secs(1), ());
         q.clear();
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn tokens_are_dead_after_clear() {
+        let mut q = EventQueue::new();
+        let a = q.schedule(SimTime::from_secs(1), "a");
+        let b = q.schedule(SimTime::from_secs(2), "b");
+        q.cancel(b);
+        q.clear();
+        assert!(!q.cancel(a), "cleared token must refuse cancel");
+        assert!(!q.cancel(b), "cancelled-then-cleared token too");
+        // the sequence keeps counting; fresh schedules work normally
+        let c = q.schedule(SimTime::from_secs(3), "c");
+        assert!(c > b);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().event, "c");
     }
 
     #[test]

@@ -3,7 +3,16 @@
 //! `cargo bench` targets are `harness = false` binaries that use
 //! [`bench_fn`] for hot-path timing (warmup + N samples + mean/p50/p95)
 //! and plain experiment runs for the table/figure reproductions.
+//!
+//! Results are machine-readable too: a [`BenchReport`] collects named
+//! [`BenchStats`] (and free-form values) and writes `BENCH_<name>.json`
+//! via the in-repo [`crate::json`] writer, so the perf trajectory can be
+//! tracked across commits and uploaded as a CI artifact. The output
+//! directory defaults to the working directory and is overridable with
+//! `BENCH_JSON_DIR`.
 
+use crate::json::Value;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// Timing summary over samples.
@@ -24,6 +33,20 @@ impl BenchStats {
         } else {
             1.0 / self.mean.as_secs_f64()
         }
+    }
+
+    /// JSON shape (nanosecond integers + derived per-second rate).
+    pub fn to_json(&self) -> Value {
+        let ns = |d: Duration| d.as_nanos() as u64;
+        let mut v = Value::obj();
+        v.set("samples", self.samples)
+            .set("mean_ns", ns(self.mean))
+            .set("p50_ns", ns(self.p50))
+            .set("p95_ns", ns(self.p95))
+            .set("min_ns", ns(self.min))
+            .set("max_ns", ns(self.max))
+            .set("per_sec", self.throughput_per_sec());
+        v
     }
 }
 
@@ -71,6 +94,53 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Collects a bench target's results and writes `BENCH_<name>.json`.
+#[derive(Debug)]
+pub struct BenchReport {
+    name: String,
+    root: Value,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> Self {
+        let mut root = Value::obj();
+        root.set("bench", name);
+        Self { name: name.to_string(), root }
+    }
+
+    /// Record one timed result under `key` (dotted keys are plain keys —
+    /// the object stays flat and sorted).
+    pub fn stat(&mut self, key: &str, stats: &BenchStats) -> &mut Self {
+        self.root.set(key, stats.to_json());
+        self
+    }
+
+    /// Record a free-form value (run counts, throughput aggregates,
+    /// nested summaries like `SweepDistributions::to_json`).
+    pub fn value(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
+        self.root.set(key, v);
+        self
+    }
+
+    /// Target path: `$BENCH_JSON_DIR` (default `.`) `/BENCH_<name>.json`.
+    pub fn path(&self) -> PathBuf {
+        let dir = std::env::var_os("BENCH_JSON_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write the pretty-printed report; returns where it landed.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let path = self.path();
+        let mut body = crate::json::to_string_pretty(&self.root);
+        body.push('\n');
+        std::fs::write(&path, body)?;
+        println!("\nwrote {}", path.display());
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +161,24 @@ mod tests {
     #[should_panic]
     fn zero_samples_rejected() {
         bench_fn(0, 0, || {});
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let s = bench_fn(1, 10, || {
+            std::hint::black_box((0..10_000u64).sum::<u64>());
+        });
+        let mut report = BenchReport::new("unit");
+        report.stat("hot.loop", &s).value("runs", 10u64);
+        let v = report.root.clone();
+        assert_eq!(v.req_str("bench").unwrap(), "unit");
+        assert_eq!(v.req_u64("runs").unwrap(), 10);
+        let stat = v.get("hot.loop").unwrap();
+        assert_eq!(stat.req_u64("samples").unwrap(), 10);
+        assert!(stat.req_u64("mean_ns").unwrap() > 0);
+        // serialized form parses back
+        let text = crate::json::to_string_pretty(&v);
+        assert!(crate::json::parse(&text).is_ok());
+        assert!(report.path().ends_with("BENCH_unit.json"));
     }
 }

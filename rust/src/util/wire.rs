@@ -19,6 +19,14 @@ impl WireWriter {
         Self::default()
     }
 
+    /// A writer reusing an existing buffer (cleared, capacity kept) —
+    /// checkpoint hot paths recycle their snapshot allocation instead of
+    /// growing a fresh `Vec` per write.
+    pub fn with_buf(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        Self { buf }
+    }
+
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }

@@ -83,6 +83,15 @@ pub trait Workload {
     /// Full-state capture; valid at any step.
     fn snapshot(&self) -> Result<Snapshot>;
 
+    /// Capture into an existing [`Snapshot`], reusing its byte buffer.
+    /// The default allocates via [`Workload::snapshot`]; workloads on the
+    /// periodic-checkpoint hot path (thousands of sweep runs) override it
+    /// to serialize in place.
+    fn snapshot_into(&self, out: &mut Snapshot) -> Result<()> {
+        *out = self.snapshot()?;
+        Ok(())
+    }
+
     /// Restore from a transparent snapshot.
     fn restore(&mut self, bytes: &[u8]) -> Result<()>;
 

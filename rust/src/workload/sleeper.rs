@@ -94,7 +94,12 @@ impl Sleeper {
     }
 
     fn encode(&self, app: bool) -> Vec<u8> {
-        let mut w = WireWriter::new();
+        self.encode_to(app, Vec::new())
+    }
+
+    /// Encode into `buf` (cleared, capacity reused) and hand it back.
+    fn encode_to(&self, app: bool, buf: Vec<u8>) -> Vec<u8> {
+        let mut w = WireWriter::with_buf(buf);
         w.put_u32(if app { APP_MAGIC } else { MAGIC });
         w.put_u32(VERSION);
         let (stage, step, total, state) = if app {
@@ -205,6 +210,12 @@ impl Workload for Sleeper {
         })
     }
 
+    fn snapshot_into(&self, out: &mut Snapshot) -> Result<()> {
+        out.bytes = self.encode_to(false, std::mem::take(&mut out.bytes));
+        out.charged_bytes = self.cfg.charged_bytes;
+        Ok(())
+    }
+
     fn restore(&mut self, bytes: &[u8]) -> Result<()> {
         self.decode(bytes, false)
     }
@@ -262,6 +273,26 @@ mod tests {
         assert_eq!(w.progress().total_steps, 5 * 40);
         assert_eq!(stages_done, 4); // last stage ends with Done
         assert_eq!(milestones, 5); // one interior milestone per stage (m=2)
+    }
+
+    #[test]
+    fn snapshot_into_matches_snapshot_and_reuses_buffer() {
+        let mut w = mk();
+        for _ in 0..13 {
+            w.step().unwrap();
+        }
+        let fresh = w.snapshot().unwrap();
+        let mut reused = Snapshot { bytes: Vec::new(), charged_bytes: 0 };
+        w.snapshot_into(&mut reused).unwrap();
+        assert_eq!(reused.bytes, fresh.bytes);
+        assert_eq!(reused.charged_bytes, fresh.charged_bytes);
+        // a second capture reuses the allocation (same or larger capacity,
+        // no fresh Vec) and stays byte-identical
+        let cap = reused.bytes.capacity();
+        w.step().unwrap();
+        w.snapshot_into(&mut reused).unwrap();
+        assert!(reused.bytes.capacity() >= cap);
+        assert_eq!(reused.bytes, w.snapshot().unwrap().bytes);
     }
 
     #[test]

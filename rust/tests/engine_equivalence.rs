@@ -1,18 +1,16 @@
 //! Equivalence suite: the event-driven engine must reproduce the legacy
 //! imperative loop's `RunResult` **exactly** — completion, durations,
 //! eviction/checkpoint/restore counts, billing (bitwise f64), stage
-//! times, `final_fingerprint`, and the timeline's (time, kind) sequence —
-//! on every Table I scenario and across seeded eviction/checkpoint
-//! sweeps.
+//! times, `final_fingerprint`, and the timeline's full
+//! (time, kind, detail) sequence — on every Table I scenario and across
+//! seeded eviction/checkpoint sweeps.
 //!
-//! The only field not compared byte-for-byte is the `EvictionNotice`
-//! event *detail*: it carries the metadata service's event id, which
-//! draws from a process-global sequence and so differs between any two
-//! runs in the same process (legacy vs legacy included). Every other
-//! detail string — instance ids, checkpoint ids, restore provenance — is
-//! per-run deterministic and compared verbatim.
+//! Every detail string is compared verbatim, including the
+//! `EvictionNotice` event ids: the metadata service issues them from a
+//! per-service counter (not a process-global sequence), so any two runs
+//! of the same scenario — engine or legacy, whatever ran before them in
+//! the process — produce identical timelines byte for byte.
 
-use spoton::metrics::EventKind;
 use spoton::sim::RunResult;
 use spoton::sim::experiment::Experiment;
 use spoton::sim::legacy;
@@ -78,8 +76,8 @@ fn assert_equivalent(label: &str, exp: &Experiment) {
         "{label}: final_fingerprint"
     );
 
-    // timeline: identical (time, kind) sequence; details identical except
-    // the EvictionNotice event-id (process-global counter).
+    // timeline: identical (time, kind, detail) sequence — event ids are
+    // per-metadata-service, so even notice details must match verbatim.
     assert_eq!(
         eng.timeline.events().len(),
         leg.timeline.events().len(),
@@ -94,9 +92,7 @@ fn assert_equivalent(label: &str, exp: &Experiment) {
     {
         assert_eq!(a.at, b.at, "{label}: timeline[{i}] time");
         assert_eq!(a.kind, b.kind, "{label}: timeline[{i}] kind");
-        if a.kind != EventKind::EvictionNotice {
-            assert_eq!(a.detail, b.detail, "{label}: timeline[{i}] detail");
-        }
+        assert_eq!(a.detail, b.detail, "{label}: timeline[{i}] detail");
     }
 }
 
