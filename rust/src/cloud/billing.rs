@@ -5,8 +5,20 @@
 //! capacity at $/100 GiB-month prorated by wall time (how Azure Files
 //! bills the NFS share the paper uses for checkpoint transfer). Fig 2 is
 //! rendered directly from these invoices.
+//!
+//! Prices, capacities and price factors are validated at booking time
+//! (mirroring [`PriceBook::new`](super::pricing::PriceBook)): a negative
+//! or non-finite input would silently poison every downstream total —
+//! sweep summaries, Fig 2, policy comparisons — so it panics here, at the
+//! line item that introduced it, instead.
+//!
+//! Pools with traced spot markets ([`super::trace`]) book uptime through
+//! [`BillingMeter::book_instance_piecewise`]: the uptime is segmented at
+//! the pool's price-change boundaries and each segment is billed at its
+//! own price, so an instance that straddles a price move is invoiced
+//! correctly per segment.
 
-use crate::simclock::SimDuration;
+use crate::simclock::{SimDuration, SimTime};
 use std::fmt;
 
 /// One line item on an invoice.
@@ -68,6 +80,85 @@ impl BillingMeter {
         );
     }
 
+    /// Book instance uptime split at price-change boundaries: `epochs`
+    /// is the pool's price-factor history — `(since, factor)` pairs,
+    /// time-ordered, the first at or before `start` — and each segment
+    /// of `[start, end]` is billed at `base_price_per_hour × factor`.
+    /// Consecutive epochs with the same factor coalesce into one
+    /// segment, so a constant-factor history books exactly one line item
+    /// with bit-identical arithmetic to [`BillingMeter::book_instance`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn book_instance_piecewise(
+        &mut self,
+        pool: Option<&str>,
+        instance: &str,
+        vm_size: &str,
+        spot: bool,
+        start: SimTime,
+        end: SimTime,
+        base_price_per_hour: f64,
+        epochs: &[(SimTime, f64)],
+    ) {
+        assert!(
+            end >= start,
+            "instance {instance}: uptime ends ({end}) before it starts \
+             ({start})"
+        );
+        assert!(
+            !epochs.is_empty(),
+            "instance {instance}: piecewise booking needs at least one \
+             price epoch"
+        );
+        assert!(
+            epochs.windows(2).all(|w| w[0].0 <= w[1].0),
+            "instance {instance}: price epochs must be time-ordered"
+        );
+        assert!(
+            epochs[0].0 <= start,
+            "instance {instance}: first price epoch ({}) must cover the \
+             instance start ({start})",
+            epochs[0].0
+        );
+        for &(at, factor) in epochs {
+            assert!(
+                factor.is_finite() && factor >= 0.0,
+                "instance {instance}: price factor {factor} at {at} must \
+                 be finite and non-negative"
+            );
+        }
+        // factor in force when the instance started
+        let mut factor = epochs
+            .iter()
+            .take_while(|e| e.0 <= start)
+            .last()
+            .expect("first epoch covers start")
+            .1;
+        let mut seg_start = start;
+        for &(at, f) in epochs.iter().filter(|e| e.0 > start && e.0 < end) {
+            if f == factor {
+                continue; // no-op move: coalesce into the running segment
+            }
+            self.book_instance_tagged(
+                pool,
+                instance,
+                vm_size,
+                spot,
+                at.since(seg_start),
+                base_price_per_hour * factor,
+            );
+            seg_start = at;
+            factor = f;
+        }
+        self.book_instance_tagged(
+            pool,
+            instance,
+            vm_size,
+            spot,
+            end.since(seg_start),
+            base_price_per_hour * factor,
+        );
+    }
+
     fn book_instance_tagged(
         &mut self,
         pool: Option<&str>,
@@ -77,6 +168,11 @@ impl BillingMeter {
         uptime: SimDuration,
         price_per_hour: f64,
     ) {
+        assert!(
+            price_per_hour.is_finite() && price_per_hour >= 0.0,
+            "instance {instance}: price ${price_per_hour}/h must be finite \
+             and non-negative"
+        );
         let hours = uptime.as_hours_f64();
         self.compute_items.push(LineItem {
             resource: format!("vm/{instance}"),
@@ -107,6 +203,16 @@ impl BillingMeter {
         duration: SimDuration,
         price_per_100gib_month: f64,
     ) {
+        assert!(
+            provisioned_gib.is_finite() && provisioned_gib >= 0.0,
+            "share {share}: provisioned capacity {provisioned_gib} GiB must \
+             be finite and non-negative"
+        );
+        assert!(
+            price_per_100gib_month.is_finite() && price_per_100gib_month >= 0.0,
+            "share {share}: price ${price_per_100gib_month}/100GiB-month \
+             must be finite and non-negative"
+        );
         let months = duration.as_hours_f64() / HOURS_PER_MONTH;
         let amount = provisioned_gib / 100.0 * price_per_100gib_month * months;
         self.storage_items.push(LineItem {
@@ -263,6 +369,241 @@ mod tests {
         let s = m.invoice().to_string();
         assert!(s.contains("vm/vm-0@east"), "{s}");
         assert!(s.contains("vm/vm-1@west"), "{s}");
+    }
+
+    #[test]
+    fn piecewise_bills_each_price_segment() {
+        // 2 h of uptime straddling a price move at the 30-minute mark:
+        // 0.5 h at $0.076 + 1.5 h at $0.152.
+        let mut m = BillingMeter::new();
+        let epochs = [
+            (SimTime::ZERO, 1.0),
+            (SimTime::from_secs(1800), 2.0),
+        ];
+        m.book_instance_piecewise(
+            Some("east"),
+            "vm-0",
+            "D8s",
+            true,
+            SimTime::ZERO,
+            SimTime::from_secs(7200),
+            0.076,
+            &epochs,
+        );
+        let inv = m.invoice();
+        assert_eq!(inv.items.len(), 2);
+        assert!((inv.items[0].amount - 0.5 * 0.076).abs() < 1e-12);
+        assert!((inv.items[1].amount - 1.5 * 0.152).abs() < 1e-12);
+        assert!((m.pool_compute_total("east") - m.compute_total()).abs() < 1e-12);
+        // epochs entirely before the launch don't split anything
+        let mut late = BillingMeter::new();
+        late.book_instance_piecewise(
+            None,
+            "vm-1",
+            "D8s",
+            true,
+            SimTime::from_secs(3600),
+            SimTime::from_secs(7200),
+            0.076,
+            &epochs,
+        );
+        assert_eq!(late.invoice().items.len(), 1);
+        assert!((late.compute_total() - 0.152).abs() < 1e-12);
+    }
+
+    #[test]
+    fn piecewise_constant_factor_is_bitwise_whole_booking() {
+        // However many epochs repeat the same factor, the booking must
+        // coalesce to ONE line item with arithmetic bit-identical to the
+        // whole-uptime path — the constant-price-trace oracle guarantee.
+        let mut split = BillingMeter::new();
+        let epochs: Vec<(SimTime, f64)> = (0u64..5)
+            .map(|i| (SimTime::from_secs(i * 600), 1.0))
+            .collect();
+        split.book_instance_piecewise(
+            None,
+            "vm-0",
+            "D8s",
+            true,
+            SimTime::ZERO,
+            SimTime::from_secs(11006),
+            0.076,
+            &epochs,
+        );
+        let mut whole = BillingMeter::new();
+        whole.book_instance(
+            "vm-0",
+            "D8s",
+            true,
+            SimDuration::from_secs(11006),
+            0.076,
+        );
+        assert_eq!(split.invoice().items.len(), 1);
+        assert_eq!(
+            split.compute_total().to_bits(),
+            whole.compute_total().to_bits()
+        );
+        assert_eq!(split.invoice().items[0].detail, whole.invoice().items[0].detail);
+    }
+
+    #[test]
+    fn prop_piecewise_matches_hand_computed_segments() {
+        // Piecewise booking across N random price moves equals booking
+        // each hand-computed segment individually — and when every epoch
+        // carries the same factor, it equals the whole-uptime booking.
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                let n = rng.range_u64(1, 6);
+                let mut epochs = vec![(SimTime::ZERO, 0.5 + rng.f64())];
+                let mut t = 0u64;
+                for _ in 1..n {
+                    t += rng.range_u64(1, 5_000);
+                    epochs.push((SimTime(t), 0.5 + rng.f64()));
+                }
+                let start = SimTime(rng.below(3_000));
+                let end = start + SimDuration::from_millis(rng.below(10_000));
+                (epochs, start, end, 0.01 + rng.f64())
+            },
+            shrink_none,
+            |(epochs, start, end, base)| {
+                let mut piecewise = BillingMeter::new();
+                piecewise.book_instance_piecewise(
+                    None, "vm", "D8s", true, *start, *end, *base, epochs,
+                );
+                // hand-computed: walk the boundaries independently
+                let mut manual = BillingMeter::new();
+                let mut cuts: Vec<SimTime> = vec![*start];
+                cuts.extend(
+                    epochs
+                        .iter()
+                        .map(|e| e.0)
+                        .filter(|&t| t > *start && t < *end),
+                );
+                cuts.push(*end);
+                for w in cuts.windows(2) {
+                    let factor = epochs
+                        .iter()
+                        .take_while(|e| e.0 <= w[0])
+                        .last()
+                        .unwrap()
+                        .1;
+                    manual.book_instance(
+                        "vm",
+                        "D8s",
+                        true,
+                        w[1].since(w[0]),
+                        base * factor,
+                    );
+                }
+                if (piecewise.total() - manual.total()).abs() > 1e-9 {
+                    return Err(format!(
+                        "piecewise {} != manual {}",
+                        piecewise.total(),
+                        manual.total()
+                    ));
+                }
+                // constant factor: bitwise equal to the whole booking
+                let flat: Vec<(SimTime, f64)> =
+                    epochs.iter().map(|e| (e.0, epochs[0].1)).collect();
+                let mut coalesced = BillingMeter::new();
+                coalesced.book_instance_piecewise(
+                    None, "vm", "D8s", true, *start, *end, *base, &flat,
+                );
+                let mut whole = BillingMeter::new();
+                whole.book_instance(
+                    "vm",
+                    "D8s",
+                    true,
+                    end.since(*start),
+                    base * epochs[0].1,
+                );
+                if coalesced.total().to_bits() != whole.total().to_bits() {
+                    return Err(format!(
+                        "constant-factor piecewise {} != whole {}",
+                        coalesced.total(),
+                        whole.total()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn rejects_nan_instance_price() {
+        BillingMeter::new().book_instance(
+            "vm-0",
+            "D8s",
+            true,
+            SimDuration::from_hours(1),
+            f64::NAN,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn rejects_negative_instance_price() {
+        BillingMeter::new().book_instance(
+            "vm-0",
+            "D8s",
+            true,
+            SimDuration::from_hours(1),
+            -0.076,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn rejects_negative_storage_capacity() {
+        BillingMeter::new().book_storage(
+            "nfs",
+            -100.0,
+            SimDuration::from_hours(1),
+            16.0,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn rejects_infinite_storage_price() {
+        BillingMeter::new().book_storage(
+            "nfs",
+            100.0,
+            SimDuration::from_hours(1),
+            f64::INFINITY,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "time-ordered")]
+    fn rejects_unordered_price_epochs() {
+        BillingMeter::new().book_instance_piecewise(
+            None,
+            "vm-0",
+            "D8s",
+            true,
+            SimTime::ZERO,
+            SimTime::from_secs(100),
+            0.076,
+            &[(SimTime::from_secs(50), 1.0), (SimTime::ZERO, 2.0)],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cover the instance start")]
+    fn rejects_epochs_starting_after_launch() {
+        BillingMeter::new().book_instance_piecewise(
+            None,
+            "vm-0",
+            "D8s",
+            true,
+            SimTime::ZERO,
+            SimTime::from_secs(100),
+            0.076,
+            &[(SimTime::from_secs(50), 1.0)],
+        );
     }
 
     #[test]

@@ -25,13 +25,26 @@
 //! pools and tags every booked uptime with the pool name, so
 //! [`BillingMeter::pool_compute_total`] attributes the run's compute cost
 //! pool by pool (the per-pool cost table in [`crate::report::fleet`]).
+//!
+//! Pools may carry a **price trace** ([`super::trace`]): the pool's
+//! effective hourly price becomes `catalog × price_factor ×
+//! trace_factor(t)`, replayed by the engine as `PoolPriceChanged` events
+//! ([`Fleet::price_points`] → [`Fleet::apply_price_factor`]). Placement
+//! policies see the moving price through [`PoolView::price_per_hour`]
+//! and re-decide at every replacement, and a traced pool bills uptime
+//! piecewise at its price-epoch boundaries
+//! ([`BillingMeter::book_instance_piecewise`]), so an instance that
+//! straddles a price move is invoiced per segment.
 
 use super::billing::BillingMeter;
 use super::eviction::EvictionPlan;
 use super::instance::{Instance, InstanceId};
 use super::pricing::PriceBook;
 use super::scale_set::ScaleSet;
-use crate::config::{PlacementPolicyCfg, PoolCfg, ScenarioConfig};
+use super::trace::PricePoint;
+use crate::config::{
+    PlacementPolicyCfg, PoolCfg, PoolPricingCfg, ScenarioConfig,
+};
 use crate::simclock::{SimDuration, SimTime};
 use anyhow::{bail, Result};
 use std::fmt;
@@ -145,15 +158,25 @@ impl PlacementPolicy for EvictionAware {
     }
 }
 
-/// Build the policy a config names.
-pub fn build_policy(cfg: &PlacementPolicyCfg) -> Box<dyn PlacementPolicy> {
-    match cfg {
+/// Build the policy a config names. Rejects a non-finite or negative
+/// `EvictionAware` penalty (mirroring `PriceBook::new`'s validation): a
+/// NaN penalty makes every score NaN, so `place()` would silently
+/// degrade to "always pool 0", and a negative one *rewards* churning
+/// pools.
+pub fn build_policy(cfg: &PlacementPolicyCfg) -> Result<Box<dyn PlacementPolicy>> {
+    Ok(match cfg {
         PlacementPolicyCfg::Sticky => Box::new(StickyPool),
         PlacementPolicyCfg::CheapestSpot => Box::new(CheapestSpot),
         PlacementPolicyCfg::EvictionAware { penalty } => {
+            if !(penalty.is_finite() && *penalty >= 0.0) {
+                bail!(
+                    "eviction-aware penalty {penalty} must be finite and \
+                     non-negative"
+                );
+            }
             Box::new(EvictionAware { penalty: *penalty })
         }
-    }
+    })
 }
 
 /// Per-pool outcome of a run, carried on
@@ -169,14 +192,52 @@ pub struct PoolStats {
     pub compute_cost: f64,
 }
 
-/// One pool of the fleet: a scale set plus the pool's eviction plan and
-/// observed-eviction counter.
+/// One pool of the fleet: a scale set plus the pool's eviction plan,
+/// observed-eviction counter, and (for traced spot markets) its price
+/// history.
 #[derive(Debug)]
 struct Pool {
     name: String,
     set: ScaleSet,
     plan: EvictionPlan,
     evictions: u32,
+    /// Does this pool's price move over time? Static pools keep the
+    /// legacy single-price booking path bit-for-bit.
+    traced: bool,
+    /// Price-factor history: `(since, factor)`, time-ordered, seeded
+    /// with `(t=0, initial factor)` at construction. Terminations bill
+    /// uptime piecewise at these boundaries.
+    price_epochs: Vec<(SimTime, f64)>,
+    /// Trace points still to be replayed by the engine (offsets > 0).
+    price_points: Vec<PricePoint>,
+}
+
+impl Pool {
+    /// Hourly price at the pool's *static* level (catalog ×
+    /// `price_factor`) — what the trace factor multiplies.
+    fn base_price(&self) -> f64 {
+        self.set
+            .price_book()
+            .lookup(self.set.vm_size())
+            .expect("validated at construction")
+            .price_per_hour(self.set.spot())
+    }
+
+    fn current_factor(&self) -> f64 {
+        self.price_epochs.last().expect("seeded at construction").1
+    }
+
+    /// Effective hourly price right now. Skips the multiply at factor
+    /// 1.0 so untraced (and constant-1.0-traced) pools stay bit-identical
+    /// to the pre-trace world.
+    fn current_price(&self) -> f64 {
+        let factor = self.current_factor();
+        if factor == 1.0 {
+            self.base_price()
+        } else {
+            self.base_price() * factor
+        }
+    }
 }
 
 /// N pools, one live-instance slot, one experiment-wide id sequence.
@@ -229,11 +290,36 @@ impl Fleet {
             } else {
                 seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
             };
+            // Expand the pool's price dynamics: a walk generates its
+            // trace here (deterministic per pool seed), an explicit
+            // trace is used as-is, and an offset-0 point becomes the
+            // initial epoch instead of a scheduled t=0 event.
+            let (traced, initial_factor, price_points) = match &pc.pricing {
+                PoolPricingCfg::Static => (false, 1.0, Vec::new()),
+                PoolPricingCfg::Trace(trace) => (
+                    true,
+                    trace.initial_factor(),
+                    trace.scheduled_points().to_vec(),
+                ),
+                PoolPricingCfg::Walk(walk) => {
+                    let trace = walk.generate(pool_seed).map_err(|e| {
+                        e.context(format!("pool '{}' price walk", pc.name))
+                    })?;
+                    (
+                        true,
+                        trace.initial_factor(),
+                        trace.scheduled_points().to_vec(),
+                    )
+                }
+            };
             pools.push(Pool {
                 name: pc.name.clone(),
                 set,
                 plan: EvictionPlan::new(pc.eviction.clone(), pool_seed),
                 evictions: 0,
+                traced,
+                price_epochs: vec![(SimTime::ZERO, initial_factor)],
+                price_points,
             });
         }
         Ok(Self {
@@ -286,18 +372,16 @@ impl Fleet {
         Ok(())
     }
 
-    /// Policy-facing views of every pool.
+    /// Policy-facing views of every pool. `price_per_hour` is the
+    /// *current* price — for traced pools it moves as the engine replays
+    /// price points, which is what lets [`CheapestSpot`] /
+    /// [`EvictionAware`] re-decide as the market moves.
     pub fn views(&self) -> Vec<PoolView> {
         self.pools
             .iter()
             .enumerate()
             .map(|(i, p)| {
-                let price = p
-                    .set
-                    .price_book()
-                    .lookup(p.set.vm_size())
-                    .expect("validated at construction")
-                    .price_per_hour(p.set.spot());
+                let price = p.current_price();
                 PoolView {
                     id: PoolId(i),
                     name: p.name.clone(),
@@ -337,13 +421,44 @@ impl Fleet {
 
     /// Terminate the live instance at `now`, booking its uptime against
     /// its pool. Returns the instance id and the pool it lived in.
+    ///
+    /// Static-priced pools book through the scale set exactly as before
+    /// the trace layer (bit-identical invoices); traced pools bill
+    /// piecewise at their price-epoch boundaries, so an instance that
+    /// straddled a price move gets one line item per price segment.
     pub fn terminate_current(
         &mut self,
         now: SimTime,
         billing: &mut BillingMeter,
     ) -> Option<(InstanceId, PoolId)> {
         let pool = self.current_pool?;
-        let id = self.pools[pool.0].set.terminate_current(now, billing)?;
+        let multi = self.is_multi_pool();
+        let p = &mut self.pools[pool.0];
+        let id = if !p.traced {
+            p.set.terminate_current(now, billing)?
+        } else {
+            let inst = p.set.reclaim_current_unbilled(now)?;
+            // price the *instance's* size (it may differ from the set's
+            // current size after an OOM-resume upsizing), exactly as
+            // `ScaleSet::terminate` does on the static path
+            let base = p
+                .set
+                .price_book()
+                .lookup(&inst.vm_size)
+                .expect("validated at launch")
+                .price_per_hour(inst.spot);
+            billing.book_instance_piecewise(
+                if multi { Some(p.name.as_str()) } else { None },
+                &inst.id.to_string(),
+                &inst.vm_size,
+                inst.spot,
+                inst.started_at,
+                now,
+                base,
+                &p.price_epochs,
+            );
+            inst.id
+        };
         self.current_pool = None;
         Some((id, pool))
     }
@@ -351,6 +466,28 @@ impl Fleet {
     /// Record an observed eviction in `pool` (placement-policy evidence).
     pub fn note_eviction(&mut self, pool: PoolId) {
         self.pools[pool.0].evictions += 1;
+    }
+
+    /// The trace points the engine must replay for `pool` as
+    /// `PoolPriceChanged` events (time-ordered, offsets > 0; empty for
+    /// static pools).
+    pub fn price_points(&self, pool: PoolId) -> &[PricePoint] {
+        &self.pools[pool.0].price_points
+    }
+
+    /// Apply a traced price move at `now`: the pool's effective price
+    /// becomes `base × factor` from `now` on (a new billing epoch).
+    /// Returns the (old, new) hourly price for the timeline.
+    pub fn apply_price_factor(
+        &mut self,
+        pool: PoolId,
+        factor: f64,
+        now: SimTime,
+    ) -> (f64, f64) {
+        let p = &mut self.pools[pool.0];
+        let old = p.current_price();
+        p.price_epochs.push((now, factor));
+        (old, p.current_price())
     }
 
     /// When a launch placed in `pool` at `now` is Running. The fleet's
@@ -395,6 +532,7 @@ impl Fleet {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cloud::trace::{PriceTrace, PriceWalkCfg};
     use crate::config::EvictionPlanCfg;
 
     fn three_pools() -> Vec<PoolCfg> {
@@ -489,6 +627,124 @@ mod tests {
 
         // east now scores 0.0646 × 5 = 0.323; south (0.076) wins
         assert_eq!(policy.place(PoolId(0), &fleet.views()), PoolId(2));
+    }
+
+    #[test]
+    fn placement_ties_go_to_the_lowest_pool_index() {
+        // Regression pin for the documented tie rule: with equal prices
+        // (and equal eviction evidence) every price-driven policy must
+        // return pool 0 — a refactor that flips iteration order or
+        // switches `<` to `<=` would silently reorder sweep winners.
+        let cfgs =
+            vec![PoolCfg::named("a"), PoolCfg::named("b"), PoolCfg::named("c")];
+        let mut fleet = Fleet::new(&cfgs, 1).unwrap();
+        let views = fleet.views();
+        assert!(views
+            .windows(2)
+            .all(|w| w[0].price_per_hour == w[1].price_per_hour));
+
+        let mut cheapest = CheapestSpot;
+        assert_eq!(cheapest.place(PoolId(2), &views), PoolId(0));
+        let mut aware = EvictionAware { penalty: 4.0 };
+        assert_eq!(aware.place(PoolId(2), &views), PoolId(0));
+
+        // identical nonzero evidence everywhere still ties → pool 0
+        let mut billing = BillingMeter::new();
+        for i in 0..3 {
+            fleet.set_active(PoolId(i)).unwrap();
+            fleet.launch(SimTime::from_secs(i as u64 * 100));
+            let (_, pool) = fleet
+                .terminate_current(
+                    SimTime::from_secs(i as u64 * 100 + 50),
+                    &mut billing,
+                )
+                .unwrap();
+            fleet.note_eviction(pool);
+        }
+        let views = fleet.views();
+        assert!(views.iter().all(|v| v.launched == 1 && v.evictions == 1));
+        assert_eq!(aware.place(PoolId(2), &views), PoolId(0));
+        assert_eq!(cheapest.place(PoolId(1), &views), PoolId(0));
+    }
+
+    #[test]
+    fn build_policy_rejects_invalid_penalties() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -1.0] {
+            let err =
+                build_policy(&PlacementPolicyCfg::EvictionAware { penalty: bad })
+                    .unwrap_err();
+            assert!(err.to_string().contains("penalty"), "{bad}: {err}");
+        }
+        assert!(build_policy(&PlacementPolicyCfg::EvictionAware {
+            penalty: 0.0
+        })
+        .is_ok());
+        assert!(build_policy(&PlacementPolicyCfg::Sticky).is_ok());
+        assert!(build_policy(&PlacementPolicyCfg::CheapestSpot).is_ok());
+    }
+
+    #[test]
+    fn traced_pool_price_moves_and_bills_piecewise() {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let cfgs = vec![
+            PoolCfg::named("traced")
+                .pricing(PoolPricingCfg::Trace(trace.clone())),
+            PoolCfg::named("static"),
+        ];
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        assert_eq!(fleet.price_points(PoolId(0)).len(), 1);
+        assert!(fleet.price_points(PoolId(1)).is_empty());
+
+        // launch in the traced pool, price doubles mid-uptime
+        let mut billing = BillingMeter::new();
+        fleet.launch(SimTime::ZERO);
+        let d8_spot = 0.076;
+        assert_eq!(fleet.views()[0].price_per_hour, d8_spot);
+        let (old, new) = fleet.apply_price_factor(
+            PoolId(0),
+            2.0,
+            SimTime::from_secs(1800),
+        );
+        assert_eq!(old, d8_spot);
+        assert!((new - 0.152).abs() < 1e-12);
+        assert_eq!(fleet.views()[0].price_per_hour, new);
+
+        // terminate after 1 h: 0.5 h at $0.076 + 0.5 h at $0.152
+        fleet
+            .terminate_current(SimTime::from_secs(3600), &mut billing)
+            .unwrap();
+        let inv = billing.invoice();
+        assert_eq!(inv.items.len(), 2, "{inv}");
+        assert!((billing.compute_total() - 0.5 * (0.076 + 0.152)).abs() < 1e-12);
+        assert!(
+            (billing.pool_compute_total("traced") - billing.compute_total())
+                .abs()
+                < 1e-12
+        );
+        let stats = fleet.stats(&billing);
+        assert!((stats[0].compute_cost - billing.compute_total()).abs() < 1e-12);
+        assert_eq!(stats[1].compute_cost, 0.0);
+    }
+
+    #[test]
+    fn walk_priced_pools_are_deterministic_per_seed() {
+        let cfgs = vec![PoolCfg::named("walker")
+            .pricing(PoolPricingCfg::Walk(PriceWalkCfg::default()))];
+        let a = Fleet::new(&cfgs, 99).unwrap();
+        let b = Fleet::new(&cfgs, 99).unwrap();
+        assert_eq!(a.price_points(PoolId(0)), b.price_points(PoolId(0)));
+        assert!(!a.price_points(PoolId(0)).is_empty());
+        let c = Fleet::new(&cfgs, 100).unwrap();
+        assert_ne!(a.price_points(PoolId(0)), c.price_points(PoolId(0)));
+        // an invalid walk is rejected at fleet construction
+        let bad = vec![PoolCfg::named("w").pricing(PoolPricingCfg::Walk(
+            PriceWalkCfg { start: -1.0, ..PriceWalkCfg::default() },
+        ))];
+        assert!(Fleet::new(&bad, 1).is_err());
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! in. The engine drives it through the `ReplacementRequested →
 //! PlacementDecided → InstanceProvisioned` event chain; billing is
 //! attributed per pool ([`billing::BillingMeter::pool_compute_total`]).
+//!
+//! Pool prices need not be flat: the [`trace`] module replays empirical
+//! (or seeded random-walk) spot-price histories per pool as
+//! `PoolPriceChanged` events, placement re-decides as the market moves,
+//! and [`billing`] books an instance that straddles a price move
+//! piecewise, one line item per price segment (trace files live under
+//! `traces/`).
 
 pub mod pricing;
 pub mod billing;
@@ -23,6 +30,7 @@ pub mod eviction;
 pub mod metadata;
 pub mod scale_set;
 pub mod fleet;
+pub mod trace;
 pub mod imds_http;
 
 pub use eviction::EvictionPlan;
@@ -31,3 +39,4 @@ pub use instance::{Instance, InstanceId, InstanceState};
 pub use metadata::{EventStatus, MetadataService, ScheduledEvent};
 pub use pricing::{PriceBook, VmSize};
 pub use scale_set::ScaleSet;
+pub use trace::{PoolTrace, PricePoint, PriceTrace, PriceWalkCfg};

@@ -168,6 +168,20 @@ impl ScaleSet {
         Some(inst.id)
     }
 
+    /// Remove and terminate the oldest running instance at `now`
+    /// **without booking** its uptime — callers whose price varies over
+    /// the uptime ([`super::fleet::Fleet`] pools with price traces) book
+    /// piecewise themselves via
+    /// [`BillingMeter::book_instance_piecewise`].
+    pub fn reclaim_current_unbilled(&mut self, now: SimTime) -> Option<Instance> {
+        if self.running.is_empty() {
+            return None;
+        }
+        let mut inst = self.running.remove(0);
+        inst.terminate(now);
+        Some(inst)
+    }
+
     /// Delay before a replacement instance is Running. (The instant a
     /// replacement is actually Running is the fleet's call —
     /// [`super::fleet::Fleet::ready_at`] — scheduled as an event by the
@@ -292,6 +306,19 @@ mod tests {
         ss.terminate_current(SimTime::from_secs(3600), &mut billing);
         assert!((billing.pool_compute_total("east") - 0.076).abs() < 1e-9);
         assert_eq!(billing.pool_compute_total("west"), 0.0);
+    }
+
+    #[test]
+    fn reclaim_unbilled_terminates_without_booking() {
+        let mut ss = mk();
+        ss.launch(SimTime::ZERO);
+        let inst =
+            ss.reclaim_current_unbilled(SimTime::from_secs(3600)).unwrap();
+        assert_eq!(inst.id, InstanceId(0));
+        assert!(!inst.is_running());
+        assert_eq!(inst.uptime(SimTime::from_secs(9999)).as_secs(), 3600);
+        assert!(ss.current().is_none());
+        assert!(ss.reclaim_current_unbilled(SimTime::from_secs(3700)).is_none());
     }
 
     #[test]

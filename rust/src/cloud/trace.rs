@@ -1,0 +1,482 @@
+//! Spot-market traces: replayed price histories and eviction timestamps.
+//!
+//! The paper's economics (§III, Fig 2) assume a flat 80% spot discount,
+//! but real spot markets move: Khatua & Mukherjee provision against EC2
+//! price *history*, and Alourani & Kshemkalyani show eviction risk is
+//! likewise time-varying. This module makes a pool's price a function of
+//! time:
+//!
+//! * [`PriceTrace`] — a validated, time-ordered sequence of
+//!   [`PricePoint`]s. Each point's `factor` multiplies the pool's static
+//!   price level (catalog × `price_factor`) from `offset` onwards, as a
+//!   step function. A point at offset 0 sets the initial factor; before
+//!   any point the factor is `1.0`, so the empty trace is the static
+//!   world.
+//! * [`PoolTrace`] — the on-disk trace format (`traces/*.trace`): price
+//!   points plus per-instance eviction offsets, one directive per line
+//!   (see `traces/README.md`). Eviction offsets feed
+//!   [`EvictionPlanCfg::Trace`](crate::config::EvictionPlanCfg) — the
+//!   k-th `evict` line is the k-th launched instance's notice offset,
+//!   measured from that instance's start, matching how the paper
+//!   schedules its injections.
+//! * [`PriceWalkCfg`] — a seeded geometric random walk that *generates* a
+//!   [`PriceTrace`] at fleet construction, so Monte Carlo sweeps get a
+//!   different market per seed with no files on disk.
+//!
+//! The engine replays a pool's trace as a chain of
+//! `PoolPriceChanged` events ([`crate::sim::engine::SimEvent`]):
+//! placement policies see the moving price through
+//! [`PoolView::price_per_hour`](crate::cloud::fleet::PoolView) and
+//! re-decide at each replacement, and
+//! [`BillingMeter::book_instance_piecewise`](crate::cloud::billing::BillingMeter)
+//! bills an instance that straddles a price move per segment.
+
+use crate::simclock::{SimDuration, SimTime};
+use crate::util::Prng;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One step of a price trace: from `offset` (experiment time) onwards,
+/// the pool's price is its static level multiplied by `factor`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PricePoint {
+    pub offset: SimDuration,
+    pub factor: f64,
+}
+
+/// A validated price history: strictly time-ordered points with positive
+/// finite factors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceTrace {
+    points: Vec<PricePoint>,
+}
+
+impl PriceTrace {
+    /// Build a trace, rejecting non-finite/non-positive factors and
+    /// out-of-order or duplicate offsets up front (mirroring
+    /// [`PriceBook::new`](crate::cloud::pricing::PriceBook) — downstream
+    /// billing and placement arithmetic never meets garbage).
+    pub fn new(points: Vec<PricePoint>) -> Result<Self> {
+        for (i, p) in points.iter().enumerate() {
+            if !(p.factor.is_finite() && p.factor > 0.0) {
+                bail!(
+                    "price trace point {i}: factor {} must be positive and \
+                     finite",
+                    p.factor
+                );
+            }
+            if i > 0 && p.offset <= points[i - 1].offset {
+                bail!(
+                    "price trace point {i}: offset {} must be strictly after \
+                     the previous point ({})",
+                    p.offset,
+                    points[i - 1].offset
+                );
+            }
+        }
+        Ok(Self { points })
+    }
+
+    /// A trace that pins the factor to `factor` for the whole run.
+    pub fn constant(factor: f64) -> Result<Self> {
+        Self::new(vec![PricePoint { offset: SimDuration::ZERO, factor }])
+    }
+
+    /// Every point, time-ordered.
+    pub fn points(&self) -> &[PricePoint] {
+        &self.points
+    }
+
+    /// The factor in force at `t` (1.0 before the first point).
+    pub fn factor_at(&self, t: SimTime) -> f64 {
+        self.points
+            .iter()
+            .take_while(|p| SimTime::ZERO + p.offset <= t)
+            .last()
+            .map(|p| p.factor)
+            .unwrap_or(1.0)
+    }
+
+    /// The factor in force at experiment start (an offset-0 point, else
+    /// 1.0). The fleet folds this into the pool's initial price epoch
+    /// instead of scheduling an event at t=0.
+    pub fn initial_factor(&self) -> f64 {
+        match self.points.first() {
+            Some(p) if p.offset.is_zero() => p.factor,
+            _ => 1.0,
+        }
+    }
+
+    /// The points the engine must replay as scheduled events — everything
+    /// after t=0 (the offset-0 point, if any, is the initial factor).
+    pub fn scheduled_points(&self) -> &[PricePoint] {
+        match self.points.first() {
+            Some(p) if p.offset.is_zero() => &self.points[1..],
+            _ => &self.points[..],
+        }
+    }
+}
+
+/// A parsed trace file: the price history plus per-instance eviction
+/// offsets (`traces/README.md` documents the format).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolTrace {
+    pub price: PriceTrace,
+    /// Uptime offset at which the k-th launched instance receives its
+    /// eviction notice (consumed in launch order; instances beyond the
+    /// list are never evicted).
+    pub evictions: Vec<SimDuration>,
+}
+
+impl PoolTrace {
+    /// Parse the line-oriented trace format:
+    ///
+    /// ```text
+    /// # comment
+    /// price <offset_mins> <factor>
+    /// evict <uptime_mins>
+    /// ```
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut points = Vec::new();
+        let mut evictions = Vec::new();
+        for (idx, raw) in src.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = match raw.find('#') {
+                Some(i) => raw[..i].trim(),
+                None => raw.trim(),
+            };
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let directive = parts.next().expect("non-empty line has a token");
+            match directive {
+                "price" => {
+                    let (off, factor) = (parts.next(), parts.next());
+                    let (Some(off), Some(factor), None) =
+                        (off, factor, parts.next())
+                    else {
+                        bail!(
+                            "line {line_no}: expected 'price <offset_mins> \
+                             <factor>'"
+                        );
+                    };
+                    let off = parse_mins(off, line_no)?;
+                    let factor: f64 = factor.parse().with_context(|| {
+                        format!("line {line_no}: bad factor '{factor}'")
+                    })?;
+                    points.push(PricePoint { offset: off, factor });
+                }
+                "evict" => {
+                    let (Some(off), None) = (parts.next(), parts.next())
+                    else {
+                        bail!("line {line_no}: expected 'evict <uptime_mins>'");
+                    };
+                    let off = parse_mins(off, line_no)?;
+                    if off.is_zero() {
+                        bail!(
+                            "line {line_no}: eviction offset must be positive"
+                        );
+                    }
+                    evictions.push(off);
+                }
+                other => bail!(
+                    "line {line_no}: unknown directive '{other}' (expected \
+                     'price' or 'evict')"
+                ),
+            }
+        }
+        Ok(Self { price: PriceTrace::new(points)?, evictions })
+    }
+
+    /// Load and parse a trace file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading trace {}", path.display()))?;
+        Self::parse(&src)
+            .with_context(|| format!("parsing trace {}", path.display()))
+    }
+}
+
+fn parse_mins(tok: &str, line_no: usize) -> Result<SimDuration> {
+    let mins: f64 = tok
+        .parse()
+        .with_context(|| format!("line {line_no}: bad offset '{tok}'"))?;
+    if !(mins.is_finite() && mins >= 0.0) {
+        bail!("line {line_no}: offset {mins} must be finite and non-negative");
+    }
+    Ok(SimDuration::from_secs_f64(mins * 60.0))
+}
+
+/// Seeded geometric random walk over the price factor — generates a
+/// [`PriceTrace`] per pool at fleet construction, so wide Monte Carlo
+/// sweeps replay a different market per seed without trace files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PriceWalkCfg {
+    /// Factor at experiment start.
+    pub start: f64,
+    /// Maximum fractional move per step: each step multiplies the factor
+    /// by a uniform draw from `[1 - volatility, 1 + volatility]`.
+    pub volatility: f64,
+    /// Time between change points.
+    pub interval: SimDuration,
+    /// Number of change points after the start.
+    pub steps: u32,
+    /// Factor floor (clamp).
+    pub floor: f64,
+    /// Factor ceiling (clamp).
+    pub ceil: f64,
+}
+
+impl Default for PriceWalkCfg {
+    fn default() -> Self {
+        Self {
+            start: 1.0,
+            volatility: 0.15,
+            interval: SimDuration::from_mins(30),
+            steps: 16,
+            floor: 0.5,
+            ceil: 2.0,
+        }
+    }
+}
+
+impl PriceWalkCfg {
+    /// Most change points a walk may generate — far above any plausible
+    /// market (100k steps at the default 30-minute interval is ~5.7
+    /// simulated years) but low enough that a typo'd `steps` fails fast
+    /// instead of sizing a multi-gigabyte per-run allocation.
+    pub const MAX_STEPS: u32 = 100_000;
+
+    /// Reject parameter combinations that would generate an invalid
+    /// trace (non-positive/non-finite factors, inverted clamp band,
+    /// zero step interval, absurd step counts).
+    pub fn validate(&self) -> Result<()> {
+        if self.steps > Self::MAX_STEPS {
+            bail!(
+                "price walk steps {} exceeds the {} cap",
+                self.steps,
+                Self::MAX_STEPS
+            );
+        }
+        for (name, v) in
+            [("start", self.start), ("floor", self.floor), ("ceil", self.ceil)]
+        {
+            if !(v.is_finite() && v > 0.0) {
+                bail!("price walk {name} {v} must be positive and finite");
+            }
+        }
+        if !(self.volatility.is_finite()
+            && (0.0..1.0).contains(&self.volatility))
+        {
+            bail!(
+                "price walk volatility {} must be in [0, 1)",
+                self.volatility
+            );
+        }
+        if self.floor > self.ceil {
+            bail!(
+                "price walk floor {} exceeds ceiling {}",
+                self.floor,
+                self.ceil
+            );
+        }
+        if !(self.floor..=self.ceil).contains(&self.start) {
+            bail!(
+                "price walk start {} outside [{}, {}]",
+                self.start,
+                self.floor,
+                self.ceil
+            );
+        }
+        if self.interval.is_zero() {
+            bail!("price walk interval must be positive");
+        }
+        Ok(())
+    }
+
+    /// Generate the walk deterministically from `seed`: the start factor
+    /// at offset 0, then `steps` multiplicative moves clamped to
+    /// `[floor, ceil]`, one per `interval`.
+    pub fn generate(&self, seed: u64) -> Result<PriceTrace> {
+        self.validate()?;
+        let mut rng = Prng::new(seed ^ 0x5EED_FAC7);
+        let mut factor = self.start;
+        let mut points =
+            vec![PricePoint { offset: SimDuration::ZERO, factor }];
+        for i in 1..=self.steps as u64 {
+            let step = 1.0 + self.volatility * (2.0 * rng.f64() - 1.0);
+            factor = (factor * step).clamp(self.floor, self.ceil);
+            points.push(PricePoint {
+                offset: SimDuration::from_millis(
+                    i * self.interval.as_millis(),
+                ),
+                factor,
+            });
+        }
+        PriceTrace::new(points)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(mins: u64, factor: f64) -> PricePoint {
+        PricePoint { offset: SimDuration::from_mins(mins), factor }
+    }
+
+    #[test]
+    fn factor_is_a_step_function() {
+        let t = PriceTrace::new(vec![pt(10, 0.8), pt(60, 1.5)]).unwrap();
+        assert_eq!(t.factor_at(SimTime::ZERO), 1.0);
+        assert_eq!(t.factor_at(SimTime::from_secs(599)), 1.0);
+        assert_eq!(t.factor_at(SimTime::from_secs(600)), 0.8);
+        assert_eq!(t.factor_at(SimTime::from_secs(3599)), 0.8);
+        assert_eq!(t.factor_at(SimTime::from_secs(3600)), 1.5);
+        assert_eq!(t.factor_at(SimTime::from_secs(999_999)), 1.5);
+        // no offset-0 point: initial factor is 1.0, both points replay
+        assert_eq!(t.initial_factor(), 1.0);
+        assert_eq!(t.scheduled_points().len(), 2);
+    }
+
+    #[test]
+    fn offset_zero_point_folds_into_initial_factor() {
+        let t = PriceTrace::new(vec![pt(0, 0.7), pt(30, 1.2)]).unwrap();
+        assert_eq!(t.initial_factor(), 0.7);
+        assert_eq!(t.scheduled_points(), &[pt(30, 1.2)]);
+        let c = PriceTrace::constant(0.9).unwrap();
+        assert_eq!(c.initial_factor(), 0.9);
+        assert!(c.scheduled_points().is_empty());
+        // the empty trace is the static world
+        let none = PriceTrace::new(vec![]).unwrap();
+        assert_eq!(none.initial_factor(), 1.0);
+        assert_eq!(none.factor_at(SimTime::from_secs(1)), 1.0);
+    }
+
+    #[test]
+    fn rejects_invalid_traces() {
+        for bad in [0.0, -0.5, f64::NAN, f64::INFINITY] {
+            assert!(PriceTrace::new(vec![pt(0, bad)]).is_err(), "{bad}");
+            assert!(PriceTrace::constant(bad).is_err(), "{bad}");
+        }
+        // out-of-order and duplicate offsets
+        assert!(PriceTrace::new(vec![pt(60, 1.0), pt(30, 1.1)]).is_err());
+        assert!(PriceTrace::new(vec![pt(30, 1.0), pt(30, 1.1)]).is_err());
+    }
+
+    #[test]
+    fn parses_trace_files() {
+        let t = PoolTrace::parse(
+            "# spot market sample\n\
+             price 0 0.8   # cheap early\n\
+             evict 40\n\
+             price 80 1.6\n\
+             evict 35.5\n",
+        )
+        .unwrap();
+        assert_eq!(
+            t.price.points(),
+            &[pt(0, 0.8), pt(80, 1.6)]
+        );
+        assert_eq!(
+            t.evictions,
+            vec![SimDuration::from_mins(40), SimDuration::from_millis(2_130_000)]
+        );
+        // empty file: static prices, no evictions
+        let empty = PoolTrace::parse("# nothing\n").unwrap();
+        assert!(empty.price.points().is_empty());
+        assert!(empty.evictions.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_trace_files() {
+        for bad in [
+            "price 10",                // missing factor
+            "price 10 0.8 extra",     // trailing token
+            "price ten 0.8",          // bad offset
+            "price 10 fast",          // bad factor
+            "price -5 0.8",           // negative offset
+            "price 10 -0.8",          // negative factor
+            "price 20 1.0\nprice 10 1.1", // out of order
+            "evict 0",                // zero eviction offset
+            "evict",                  // missing offset
+            "surge 10 2.0",           // unknown directive
+        ] {
+            assert!(PoolTrace::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn walk_is_deterministic_and_clamped() {
+        let cfg = PriceWalkCfg::default();
+        let a = cfg.generate(7).unwrap();
+        let b = cfg.generate(7).unwrap();
+        assert_eq!(a, b, "same seed must generate the same trace");
+        let c = cfg.generate(8).unwrap();
+        assert_ne!(a, c, "different seeds must decorrelate");
+        assert_eq!(a.points().len(), cfg.steps as usize + 1);
+        assert_eq!(a.initial_factor(), cfg.start);
+        for p in a.points() {
+            assert!(
+                (cfg.floor..=cfg.ceil).contains(&p.factor),
+                "factor {} outside clamp band",
+                p.factor
+            );
+        }
+        // offsets advance by exactly one interval per step
+        for (i, p) in a.points().iter().enumerate() {
+            assert_eq!(
+                p.offset.as_millis(),
+                i as u64 * cfg.interval.as_millis()
+            );
+        }
+    }
+
+    #[test]
+    fn walk_validates_parameters() {
+        let ok = PriceWalkCfg::default();
+        assert!(ok.validate().is_ok());
+        assert!(
+            PriceWalkCfg { start: 0.0, ..ok.clone() }.validate().is_err()
+        );
+        assert!(
+            PriceWalkCfg { start: f64::NAN, ..ok.clone() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            PriceWalkCfg { volatility: 1.0, ..ok.clone() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            PriceWalkCfg { volatility: -0.1, ..ok.clone() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            PriceWalkCfg { floor: 3.0, ..ok.clone() }.validate().is_err(),
+            "floor above ceiling"
+        );
+        assert!(
+            PriceWalkCfg { start: 0.1, ..ok.clone() }.validate().is_err(),
+            "start below floor"
+        );
+        assert!(
+            PriceWalkCfg { interval: SimDuration::ZERO, ..ok.clone() }
+                .validate()
+                .is_err()
+        );
+        assert!(
+            PriceWalkCfg { steps: PriceWalkCfg::MAX_STEPS + 1, ..ok.clone() }
+                .validate()
+                .is_err(),
+            "absurd step counts must fail fast"
+        );
+        // steps = 0 is a legal constant market
+        let flat = PriceWalkCfg { steps: 0, ..ok }.generate(1).unwrap();
+        assert_eq!(flat.points().len(), 1);
+        assert!(flat.scheduled_points().is_empty());
+    }
+}

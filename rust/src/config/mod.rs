@@ -11,6 +11,7 @@ pub mod scenario;
 
 pub use scenario::{
     CheckpointMethodCfg, CloudCfg, EvictionPlanCfg, FleetCfg,
-    PlacementPolicyCfg, PoolCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
+    PlacementPolicyCfg, PoolCfg, PoolPricingCfg, ScenarioConfig, StorageCfg,
+    WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -7,10 +7,12 @@
 //! $0.076 spot per hour), Azure Files NFS at $16 per 100 GiB-month, 30 s
 //! minimum eviction notice, and Table I row-1 baseline stage durations.
 
+use crate::cloud::trace::{PoolTrace, PriceTrace, PriceWalkCfg};
 use crate::config::toml::{TomlDoc, TomlValue};
 use crate::metrics::RecordLevel;
 use crate::simclock::SimDuration;
 use anyhow::{bail, Context, Result};
+use std::path::Path;
 
 /// Which checkpoint mechanism protects the workload (paper §III-A).
 #[derive(Debug, Clone, PartialEq)]
@@ -70,6 +72,23 @@ impl EvictionPlanCfg {
     }
 }
 
+/// How a pool's price moves over the experiment
+/// ([`crate::cloud::trace`]).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum PoolPricingCfg {
+    /// Flat price for the whole run (the paper's 80%-off spot market).
+    #[default]
+    Static,
+    /// Replay an explicit price trace: each point's factor multiplies
+    /// the pool's static level (catalog × `price_factor`) from its
+    /// offset on. TOML: `price_trace = "traces/east-spike.trace"`.
+    Trace(PriceTrace),
+    /// Generate a seeded random-walk trace at fleet construction
+    /// (decorrelated per pool — Monte Carlo sweeps replay a different
+    /// market per seed). TOML: a `[pool.NAME.price_walk]` section.
+    Walk(PriceWalkCfg),
+}
+
 /// One pool of a [`FleetCfg`]: a region / VM-size combination with its
 /// own price level, eviction behaviour and provisioning delay.
 #[derive(Debug, Clone, PartialEq)]
@@ -87,6 +106,8 @@ pub struct PoolCfg {
     pub price_factor: f64,
     /// Eviction behaviour of instances placed in this pool.
     pub eviction: EvictionPlanCfg,
+    /// Price dynamics on top of `price_factor` (static by default).
+    pub pricing: PoolPricingCfg,
 }
 
 impl Default for PoolCfg {
@@ -98,6 +119,7 @@ impl Default for PoolCfg {
             provisioning_delay: SimDuration::from_secs(90),
             price_factor: 1.0,
             eviction: EvictionPlanCfg::None,
+            pricing: PoolPricingCfg::Static,
         }
     }
 }
@@ -118,6 +140,7 @@ impl PoolCfg {
             provisioning_delay: cloud.provisioning_delay,
             price_factor: 1.0,
             eviction,
+            pricing: PoolPricingCfg::Static,
         }
     }
 
@@ -143,6 +166,11 @@ impl PoolCfg {
 
     pub fn eviction(mut self, plan: EvictionPlanCfg) -> Self {
         self.eviction = plan;
+        self
+    }
+
+    pub fn pricing(mut self, pricing: PoolPricingCfg) -> Self {
+        self.pricing = pricing;
         self
     }
 }
@@ -384,7 +412,20 @@ fn eviction_plan_from(doc: &TomlDoc, sec: &str) -> Result<EvictionPlanCfg> {
 
 impl ScenarioConfig {
     /// Parse a scenario TOML document; unspecified fields keep defaults.
+    /// `price_trace` paths resolve relative to the process working
+    /// directory — use [`ScenarioConfig::load`] (or
+    /// [`ScenarioConfig::from_toml_with_base`]) to resolve them relative
+    /// to the scenario file instead.
     pub fn from_toml(doc: &TomlDoc) -> Result<Self> {
+        Self::from_toml_with_base(doc, None)
+    }
+
+    /// Parse a scenario TOML document, resolving relative `price_trace`
+    /// paths against `base`.
+    pub fn from_toml_with_base(
+        doc: &TomlDoc,
+        base: Option<&Path>,
+    ) -> Result<Self> {
         let mut cfg = ScenarioConfig::default();
         if let Some(n) = doc.get_str("", "name") {
             cfg.name = n.to_string();
@@ -515,9 +556,18 @@ impl ScenarioConfig {
             cfg.storage.latency = SimDuration::from_millis(v as u64);
         }
         if let Some(v) = doc.get_f64("storage", "provisioned_gib") {
+            if !(v.is_finite() && v >= 0.0) {
+                bail!("storage.provisioned_gib must be finite and non-negative");
+            }
             cfg.storage.provisioned_gib = v;
         }
         if let Some(v) = doc.get_f64("storage", "price_per_100gib_month") {
+            if !(v.is_finite() && v >= 0.0) {
+                bail!(
+                    "storage.price_per_100gib_month must be finite and \
+                     non-negative"
+                );
+            }
             cfg.storage.price_per_100gib_month = v;
         }
 
@@ -543,17 +593,27 @@ impl ScenarioConfig {
                 Some(other) => bail!("unknown fleet.placement '{other}'"),
             };
         }
-        let pool_sections: Vec<String> = doc
-            .sections
-            .keys()
-            .filter(|s| s.starts_with("pool."))
-            .cloned()
-            .collect();
-        for sec in pool_sections {
-            let name = sec["pool.".len()..].to_string();
-            if name.is_empty() {
-                bail!("pool section needs a name: [pool.NAME]");
+        let mut pool_names: Vec<String> = Vec::new();
+        for sec in doc.sections.keys() {
+            let Some(rest) = sec.strip_prefix("pool.") else { continue };
+            match rest.split_once('.') {
+                None => pool_names.push(rest.to_string()),
+                Some((name, "price_walk")) => {
+                    if !doc.has_section(&format!("pool.{name}")) {
+                        bail!(
+                            "[pool.{name}.price_walk] without a [pool.{name}] \
+                             section"
+                        );
+                    }
+                }
+                Some((name, other)) => bail!(
+                    "unknown pool subsection [pool.{name}.{other}] (only \
+                     price_walk is recognized)"
+                ),
             }
+        }
+        for name in pool_names {
+            let sec = format!("pool.{name}");
             if cfg.fleet.pools.iter().any(|p| p.name == name) {
                 bail!("duplicate pool '{name}'");
             }
@@ -574,6 +634,58 @@ impl ScenarioConfig {
                 pool.price_factor = v;
             }
             pool.eviction = eviction_plan_from(doc, &sec)?;
+            // price dynamics: a replayed trace file, or a generated walk
+            let wsec = format!("{sec}.price_walk");
+            if let Some(path) = doc.get_str(&sec, "price_trace") {
+                if doc.has_section(&wsec) {
+                    bail!(
+                        "{sec}.price_trace conflicts with [{wsec}] — a pool's \
+                         prices are traced or walked, not both"
+                    );
+                }
+                let full = match base {
+                    Some(dir) => dir.join(path),
+                    None => Path::new(path).to_path_buf(),
+                };
+                let trace = PoolTrace::load(&full)?;
+                if !trace.evictions.is_empty() {
+                    // the trace file carries this pool's eviction
+                    // schedule; a section-level plan would shadow it
+                    if doc.get(&sec, "plan").is_some() {
+                        bail!(
+                            "{sec}: trace file {path} carries eviction \
+                             offsets, which conflict with {sec}.plan"
+                        );
+                    }
+                    pool.eviction =
+                        EvictionPlanCfg::Trace { offsets: trace.evictions };
+                }
+                pool.pricing = PoolPricingCfg::Trace(trace.price);
+            } else if doc.has_section(&wsec) {
+                let mut walk = PriceWalkCfg::default();
+                if let Some(v) = doc.get_f64(&wsec, "start") {
+                    walk.start = v;
+                }
+                if let Some(v) = doc.get_f64(&wsec, "volatility") {
+                    walk.volatility = v;
+                }
+                if let Some(v) = mins(doc, &wsec, "step_mins") {
+                    walk.interval = v;
+                }
+                if let Some(v) = doc.get_u64(&wsec, "steps") {
+                    walk.steps = u32::try_from(v).map_err(|_| {
+                        anyhow::anyhow!("{wsec}.steps {v} is out of range")
+                    })?;
+                }
+                if let Some(v) = doc.get_f64(&wsec, "floor") {
+                    walk.floor = v;
+                }
+                if let Some(v) = doc.get_f64(&wsec, "ceil") {
+                    walk.ceil = v;
+                }
+                walk.validate().with_context(|| format!("[{wsec}]"))?;
+                pool.pricing = PoolPricingCfg::Walk(walk);
+            }
             cfg.fleet.pools.push(pool);
         }
         // With explicit pools, eviction behaviour lives on the pools; a
@@ -598,7 +710,9 @@ impl ScenarioConfig {
     pub fn load(path: &std::path::Path) -> Result<Self> {
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
-        Self::from_str_toml(&src)
+        let doc = TomlDoc::parse(&src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        // trace files referenced by the scenario live next to it
+        Self::from_toml_with_base(&doc, path.parent())
     }
 
     /// Total uninterrupted virtual duration of the workload.
@@ -729,6 +843,14 @@ provisioned_gib = 200.0
             "[storage]\nbandwidth_mib_s = 0.0"
         )
         .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[storage]\nprovisioned_gib = -5.0"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[storage]\nprice_per_100gib_month = -16.0"
+        )
+        .is_err());
     }
 
     #[test]
@@ -785,6 +907,135 @@ mean_mins = 480
         assert!(plain.fleet.pools.is_empty());
         assert_eq!(plain.fleet.placement, PlacementPolicyCfg::Sticky);
         assert!(!plain.compress_termination);
+    }
+
+    #[test]
+    fn price_walk_section_parses_and_validates() {
+        let cfg = ScenarioConfig::from_str_toml(
+            r#"
+[fleet]
+placement = "cheapest-spot"
+
+[pool.east]
+price_factor = 0.9
+
+[pool.east.price_walk]
+start = 0.8
+volatility = 0.2
+step_mins = 45
+steps = 8
+floor = 0.4
+ceil = 1.6
+
+[pool.west]
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.pools.len(), 2);
+        let east = &cfg.fleet.pools[0];
+        assert_eq!(east.name, "east");
+        match &east.pricing {
+            PoolPricingCfg::Walk(w) => {
+                assert_eq!(w.start, 0.8);
+                assert_eq!(w.volatility, 0.2);
+                assert_eq!(w.interval, SimDuration::from_mins(45));
+                assert_eq!(w.steps, 8);
+                assert_eq!(w.floor, 0.4);
+                assert_eq!(w.ceil, 1.6);
+            }
+            other => panic!("expected walk pricing: {other:?}"),
+        }
+        assert_eq!(cfg.fleet.pools[1].pricing, PoolPricingCfg::Static);
+
+        // invalid walk parameters are rejected at parse time
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a]\n[pool.a.price_walk]\nvolatility = 1.5"
+        )
+        .is_err());
+        // steps beyond u32 must error, not silently truncate; huge
+        // in-range counts hit the MAX_STEPS cap instead of allocating
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a]\n[pool.a.price_walk]\nsteps = 4294967297"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a]\n[pool.a.price_walk]\nsteps = 3000000000"
+        )
+        .is_err());
+        // a walk for a pool that was never declared is rejected
+        assert!(ScenarioConfig::from_str_toml(
+            "[pool.a.price_walk]\nsteps = 4"
+        )
+        .is_err());
+        // unknown pool subsections are rejected, not silently ignored
+        let err = ScenarioConfig::from_str_toml("[pool.a]\n[pool.a.surge]\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("price_walk"), "{err}");
+    }
+
+    #[test]
+    fn price_trace_file_parses_with_evictions() {
+        let dir = std::env::temp_dir().join("spoton-scenario-trace-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let trace_path = dir.join("east.trace");
+        std::fs::write(
+            &trace_path,
+            "price 0 0.8\nprice 80 1.6\nevict 40\nevict 40\n",
+        )
+        .unwrap();
+        let scenario_path = dir.join("scenario.toml");
+        std::fs::write(
+            &scenario_path,
+            "[pool.east]\nprice_trace = \"east.trace\"\n\n[pool.west]\n",
+        )
+        .unwrap();
+
+        // load() resolves the trace relative to the scenario file
+        let cfg = ScenarioConfig::load(&scenario_path).unwrap();
+        let east = &cfg.fleet.pools[0];
+        match &east.pricing {
+            PoolPricingCfg::Trace(t) => {
+                assert_eq!(t.points().len(), 2);
+                assert_eq!(t.initial_factor(), 0.8);
+            }
+            other => panic!("expected trace pricing: {other:?}"),
+        }
+        assert_eq!(
+            east.eviction,
+            EvictionPlanCfg::Trace {
+                offsets: vec![
+                    SimDuration::from_mins(40),
+                    SimDuration::from_mins(40)
+                ]
+            }
+        );
+
+        // trace-file evictions conflict with an explicit plan
+        std::fs::write(
+            &scenario_path,
+            "[pool.east]\nprice_trace = \"east.trace\"\nplan = \"fixed\"\n\
+             interval_mins = 90\n",
+        )
+        .unwrap();
+        let err = ScenarioConfig::load(&scenario_path).unwrap_err();
+        assert!(err.to_string().contains("conflict"), "{err}");
+
+        // price_trace conflicts with a price_walk section
+        std::fs::write(
+            &scenario_path,
+            "[pool.east]\nprice_trace = \"east.trace\"\n\
+             [pool.east.price_walk]\nsteps = 2\n",
+        )
+        .unwrap();
+        assert!(ScenarioConfig::load(&scenario_path).is_err());
+
+        // a missing trace file is a load error, not a silent default
+        std::fs::write(
+            &scenario_path,
+            "[pool.east]\nprice_trace = \"nonexistent.trace\"\n",
+        )
+        .unwrap();
+        assert!(ScenarioConfig::load(&scenario_path).is_err());
     }
 
     #[test]

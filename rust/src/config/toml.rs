@@ -63,12 +63,19 @@ pub struct TomlDoc {
     pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("toml parse error on line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 impl TomlDoc {
     pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {

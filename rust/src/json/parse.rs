@@ -5,12 +5,19 @@ use super::Value;
 use std::collections::BTreeMap;
 
 /// Parse error with byte offset for diagnostics.
-#[derive(Debug, thiserror::Error, PartialEq)]
-#[error("json parse error at byte {offset}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     bytes: &'a [u8],

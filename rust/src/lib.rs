@@ -28,7 +28,12 @@
 //!   per-pool price books, eviction plans and provisioning delays — with
 //!   a pluggable placement policy deciding where every replacement lands
 //!   (`ReplacementRequested → PlacementDecided → InstanceProvisioned` on
-//!   the queue, cost attributed per pool); metered shared storage
+//!   the queue, cost attributed per pool), and whose [`cloud::trace`]
+//!   layer makes those prices *move*: empirical or seeded-random-walk
+//!   spot-price histories (files under `traces/`) replayed as
+//!   `PoolPriceChanged` events, so placement re-decides as the market
+//!   shifts and billing splits instance uptime piecewise at every price
+//!   boundary; metered shared storage
 //!   ([`storage`]), the checkpoint engine ([`checkpoint`]; compressible
 //!   images can rescue termination checkpoints from short notice windows
 //!   via [`checkpoint::compress`]), an IMDS-compatible scheduled-events

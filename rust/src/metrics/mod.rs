@@ -33,6 +33,9 @@ pub enum EventKind {
     /// The placement policy picked the replacement's pool (multi-pool
     /// runs; detail names the pool).
     PlacementDecided,
+    /// A pool's traced spot price moved (detail names the pool and the
+    /// old/new hourly price).
+    PoolPriceChanged,
     StageComplete,
     WorkloadDone,
     Aborted,
@@ -52,7 +55,7 @@ const N_KINDS: usize = EventKind::ALL.len();
 
 impl EventKind {
     /// Every variant, in discriminant order.
-    pub const ALL: [EventKind; 15] = [
+    pub const ALL: [EventKind; 16] = [
         EventKind::InstanceLaunch,
         EventKind::RestoreFromCheckpoint,
         EventKind::CheckpointCommitted,
@@ -61,6 +64,7 @@ impl EventKind {
         EventKind::InstanceEvicted,
         EventKind::ReplacementRequested,
         EventKind::PlacementDecided,
+        EventKind::PoolPriceChanged,
         EventKind::StageComplete,
         EventKind::WorkloadDone,
         EventKind::Aborted,
@@ -79,6 +83,7 @@ impl EventKind {
             EventKind::InstanceEvicted => "evicted",
             EventKind::ReplacementRequested => "replace-req",
             EventKind::PlacementDecided => "placement",
+            EventKind::PoolPriceChanged => "price",
             EventKind::StageComplete => "stage-done",
             EventKind::WorkloadDone => "done",
             EventKind::Aborted => "aborted",
@@ -280,6 +285,7 @@ mod tests {
                 | EventKind::InstanceEvicted
                 | EventKind::ReplacementRequested
                 | EventKind::PlacementDecided
+                | EventKind::PoolPriceChanged
                 | EventKind::StageComplete
                 | EventKind::WorkloadDone
                 | EventKind::Aborted

@@ -1,7 +1,9 @@
-//! Fleet reporting: per-pool cost attribution and placement-policy
-//! comparison tables (the multi-pool companion to Table I).
+//! Fleet reporting: per-pool cost attribution, placement-policy
+//! comparison tables (the multi-pool companion to Table I), and the
+//! price-over-time view of traced spot markets.
 
 use super::table::TextTable;
+use crate::metrics::EventKind;
 use crate::sim::RunResult;
 use crate::util::fmt::{dollars, pct};
 
@@ -47,6 +49,28 @@ pub fn render_pool_breakdown(r: &RunResult) -> String {
         dollars(r.total_cost()),
     ));
     out
+}
+
+/// Price-over-time attribution for traced spot markets: every
+/// `PoolPriceChanged` event the run recorded (requires
+/// [`RecordLevel::Full`](crate::metrics::RecordLevel)), i.e. when each
+/// pool's hourly price moved and to what — read next to the invoice,
+/// whose per-segment line items bill exactly these spans.
+pub fn render_price_timeline(r: &RunResult) -> String {
+    let moves: Vec<_> = r
+        .timeline
+        .events()
+        .iter()
+        .filter(|e| e.kind == EventKind::PoolPriceChanged)
+        .collect();
+    if moves.is_empty() {
+        return "  (no price moves recorded)\n".to_string();
+    }
+    let mut t = TextTable::new(&["Time", "Price move"]);
+    for e in moves {
+        t.row(&[format!("{:?}", e.at), e.detail.to_string()]);
+    }
+    t.render()
 }
 
 /// Side-by-side comparison of several runs of the same scenario under
@@ -100,6 +124,30 @@ mod tests {
         assert!(s.contains("stable"), "{s}");
         assert!(s.contains("TOTAL"), "{s}");
         assert!(s.contains("compute"), "{s}");
+    }
+
+    #[test]
+    fn price_timeline_renders_moves() {
+        use crate::cloud::trace::{PricePoint, PriceTrace};
+        use crate::config::PoolPricingCfg;
+        let spike = PriceTrace::new(vec![PricePoint {
+            offset: SimDuration::from_mins(30),
+            factor: 1.5,
+        }])
+        .unwrap();
+        let r = Experiment::table1()
+            .named("price-report")
+            .transparent(SimDuration::from_mins(15))
+            .pool(PoolCfg::named("traced").pricing(PoolPricingCfg::Trace(spike)))
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed);
+        let s = render_price_timeline(&r);
+        assert!(s.contains("traced"), "{s}");
+        assert!(s.contains("->"), "{s}");
+        // a run without traces renders the empty note
+        let none = render_price_timeline(&two_pool_run());
+        assert!(none.contains("no price moves"), "{none}");
     }
 
     #[test]

@@ -18,6 +18,8 @@ pub mod fleet;
 pub mod distribution;
 
 pub use distribution::{summarize, SweepDistributions};
-pub use fleet::{render_policy_comparison, render_pool_breakdown};
+pub use fleet::{
+    render_policy_comparison, render_pool_breakdown, render_price_timeline,
+};
 pub use table::TextTable;
 pub use table1::{paper_rows, render_comparison, Table1Row};

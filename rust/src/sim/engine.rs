@@ -22,7 +22,12 @@
 //! * the platform posts a Preempt → [`SimEvent::NoticePosted`], the
 //!   coordinator's poll tick sees it → [`SimEvent::PollTick`] (handled by
 //!   [`crate::coordinator::handlers`]), or nobody reacts and the notice
-//!   expires → [`SimEvent::NoticeDeadline`].
+//!   expires → [`SimEvent::NoticeDeadline`];
+//! * a traced spot market moves → [`SimEvent::PoolPriceChanged`]
+//!   (replayed chain, one pending point per pool —
+//!   [`Fleet::price_points`]): the pool opens a new billing epoch, so
+//!   placement re-decides at the new price and a straddling instance is
+//!   billed per price segment.
 //!
 //! Every schedule is tracked by its cancellation token; when an instance
 //! dies or the run finishes, the engine cancels that run's pending timers
@@ -101,6 +106,10 @@ pub enum SimEvent {
     TerminationCkptDone { outcome: WriteOutcome, notice: Notice },
     /// The instance is reclaimed.
     InstanceEvicted,
+    /// The spot market moved: apply point `idx` of `pool`'s price trace
+    /// (and schedule the next point). These events belong to the *run*,
+    /// not to any instance — an eviction never cancels them.
+    PoolPriceChanged { pool: PoolId, idx: usize },
 }
 
 /// When the platform will post/enforce the eviction of one instance.
@@ -135,6 +144,10 @@ pub struct Engine<'a> {
     /// Cancellation tokens of this run's in-flight events. On a shared
     /// queue, instance death cancels exactly these — never other runs'.
     live_tokens: Vec<u64>,
+    /// Tokens of pending price-trace replays. Tracked apart from
+    /// `live_tokens`: price changes outlive instances (an eviction must
+    /// not cancel the market), but the run's end still drains them.
+    price_tokens: Vec<u64>,
 
     policy: CheckpointPolicy,
     billing: BillingMeter,
@@ -186,7 +199,7 @@ impl<'a> Engine<'a> {
             );
         }
         let fleet = Fleet::from_scenario(cfg)?;
-        let placement = build_policy(&cfg.fleet.placement);
+        let placement = build_policy(&cfg.fleet.placement)?;
         let spoton = cfg.coordinator_attached;
         Ok(Self {
             policy: CheckpointPolicy::new(cfg.checkpoint.clone())
@@ -200,6 +213,7 @@ impl<'a> Engine<'a> {
             clock: Clock::new(),
             queue: EventQueue::new(),
             live_tokens: Vec::new(),
+            price_tokens: Vec::new(),
             billing: BillingMeter::new(),
             timeline: Timeline::with_level(cfg.metrics),
             metadata: MetadataService::new(),
@@ -234,8 +248,10 @@ impl<'a> Engine<'a> {
     pub fn run(mut self) -> Result<RunResult> {
         self.writer.resume_after(CheckpointStore::max_id(self.store)?);
         self.schedule(SimTime::ZERO, SimEvent::ReplacementRequested);
+        self.schedule_price_traces();
         while let Some(sch) = self.queue.pop() {
             self.live_tokens.retain(|&t| t != sch.seq);
+            self.price_tokens.retain(|&t| t != sch.seq);
             self.clock.advance_to(sch.at);
             self.dispatch(sch.event)?;
             if self.finished {
@@ -243,6 +259,24 @@ impl<'a> Engine<'a> {
             }
         }
         self.finalize()
+    }
+
+    /// Open each traced pool's price-replay chain: one pending event per
+    /// pool at a time, each handler scheduling the next point. Offset-0
+    /// points were folded into the fleet's initial epochs, so a
+    /// constant-price trace schedules nothing and the run stays
+    /// byte-identical to the static world.
+    fn schedule_price_traces(&mut self) {
+        for i in 0..self.fleet.num_pools() {
+            let pool = PoolId(i);
+            if let Some(first) = self.fleet.price_points(pool).first() {
+                let at = SimTime::ZERO + first.offset;
+                let token = self
+                    .queue
+                    .schedule(at, SimEvent::PoolPriceChanged { pool, idx: 0 });
+                self.price_tokens.push(token);
+            }
+        }
     }
 
     // ---------------------------------------------------- event plumbing
@@ -286,6 +320,9 @@ impl<'a> Engine<'a> {
                 self.on_termination_ckpt_done(outcome, notice)
             }
             SimEvent::InstanceEvicted => self.on_instance_reclaimed(),
+            SimEvent::PoolPriceChanged { pool, idx } => {
+                self.on_price_changed(pool, idx)
+            }
         }
     }
 
@@ -702,11 +739,43 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
+    /// A traced pool's price moved: open a new billing epoch (placement
+    /// sees the new price at the next replacement; the live instance's
+    /// uptime is split here when it terminates) and schedule the trace's
+    /// next point.
+    fn on_price_changed(&mut self, pool: PoolId, idx: usize) -> Result<()> {
+        let now = self.clock.now();
+        let (point, next) = {
+            let points = self.fleet.price_points(pool);
+            (points[idx], points.get(idx + 1).copied())
+        };
+        let (old, new) = self.fleet.apply_price_factor(pool, point.factor, now);
+        self.timeline.record_with(now, EventKind::PoolPriceChanged, || {
+            format!(
+                "{}: ${old:.4}/h -> ${new:.4}/h (x{})",
+                self.fleet.pool_name(pool),
+                point.factor
+            )
+        });
+        if let Some(next) = next {
+            let token = self.queue.schedule(
+                SimTime::ZERO + next.offset,
+                SimEvent::PoolPriceChanged { pool, idx: idx + 1 },
+            );
+            self.price_tokens.push(token);
+        }
+        Ok(())
+    }
+
     // ------------------------------------------------------- run ending
 
     fn finish(&mut self) {
         self.finished = true;
         self.cancel_pending();
+        // un-replayed market moves die with the run
+        for token in self.price_tokens.drain(..) {
+            self.queue.cancel(token);
+        }
     }
 
     fn finalize(mut self) -> Result<RunResult> {
@@ -786,6 +855,76 @@ mod tests {
         assert!(
             (r.pool_stats[0].compute_cost - r.compute_cost).abs() < 1e-12
         );
+    }
+
+    #[test]
+    fn traced_market_flips_cheapest_spot_mid_run() {
+        use crate::cloud::trace::{PricePoint, PriceTrace};
+        use crate::config::{
+            EvictionPlanCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+        };
+        // "spiky" starts 20% cheap but the market spikes at the 60-minute
+        // mark; "steady" holds the catalog price. CheapestSpot rides
+        // spiky until an eviction lands after the spike, then flips.
+        let spike = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+            PricePoint { offset: SimDuration::from_mins(60), factor: 1.8 },
+        ])
+        .unwrap();
+        let r = Experiment::table1()
+            .named("flip")
+            .transparent(SimDuration::from_mins(15))
+            .pool(
+                PoolCfg::named("spiky")
+                    .pricing(PoolPricingCfg::Trace(spike))
+                    .eviction(EvictionPlanCfg::Fixed {
+                        interval: SimDuration::from_mins(40),
+                    }),
+            )
+            .pool(PoolCfg::named("steady"))
+            .placement(PlacementPolicyCfg::CheapestSpot)
+            .run_sleeper()
+            .unwrap();
+        assert!(r.completed, "{}", r.summary());
+        assert_eq!(
+            r.timeline.count(crate::metrics::EventKind::PoolPriceChanged),
+            1
+        );
+        let placements: Vec<&str> = r
+            .timeline
+            .events()
+            .iter()
+            .filter(|e| {
+                e.kind == crate::metrics::EventKind::PlacementDecided
+            })
+            .map(|e| e.detail.as_ref())
+            .collect();
+        assert!(placements.len() >= 3, "placements: {placements:?}");
+        assert!(
+            placements.first().unwrap().contains("spiky"),
+            "first placement chases the discount: {placements:?}"
+        );
+        assert!(
+            placements.last().unwrap().contains("steady"),
+            "post-spike placement flips pools: {placements:?}"
+        );
+        // the instance straddling the spike was billed per price segment
+        let vm_items = r
+            .invoice
+            .items
+            .iter()
+            .filter(|i| i.resource.starts_with("vm/"))
+            .count();
+        assert!(
+            vm_items > r.instances as usize,
+            "expected a straddling instance to book >1 segment \
+             ({vm_items} items for {} instances)",
+            r.instances
+        );
+        // attribution still partitions the compute total
+        let attributed: f64 =
+            r.pool_stats.iter().map(|p| p.compute_cost).sum();
+        assert!((attributed - r.compute_cost).abs() < 1e-9);
     }
 
     #[test]

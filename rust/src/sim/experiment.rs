@@ -10,6 +10,7 @@
 
 pub use crate::config::{
     CheckpointMethodCfg, EvictionPlanCfg, PlacementPolicyCfg, PoolCfg,
+    PoolPricingCfg,
 };
 use crate::config::ScenarioConfig;
 use crate::runtime::Runtime;

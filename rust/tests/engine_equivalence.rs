@@ -222,6 +222,34 @@ fn trace_replay() {
 }
 
 #[test]
+fn constant_price_trace_is_byte_identical_to_legacy() {
+    // A 1-pool fleet whose pool carries a *constant* price trace (factor
+    // 1.0 pinned at t=0) must replay the legacy single-scale-set loop
+    // byte for byte: no PoolPriceChanged events, identical invoices
+    // (piecewise booking coalesces to the whole-uptime arithmetic), and
+    // identical timelines — the oracle guarantee for the trace layer.
+    use spoton::cloud::trace::PriceTrace;
+    use spoton::config::{
+        EvictionPlanCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+    };
+    let eviction =
+        EvictionPlanCfg::Fixed { interval: SimDuration::from_mins(90) };
+    let exp = Experiment::table1()
+        .named("trace-const")
+        .eviction_every(SimDuration::from_mins(90))
+        .transparent(SimDuration::from_mins(30))
+        .pool(
+            PoolCfg::named("pool-0")
+                .eviction(eviction)
+                .pricing(PoolPricingCfg::Trace(
+                    PriceTrace::constant(1.0).expect("valid trace"),
+                )),
+        )
+        .placement(PlacementPolicyCfg::Sticky);
+    assert_equivalent("trace-const", &exp);
+}
+
+#[test]
 fn short_notice_failed_termination_checkpoints() {
     let exp = Experiment::table1()
         .named("short-notice")

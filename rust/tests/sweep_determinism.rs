@@ -92,6 +92,55 @@ fn sweep_reruns_are_reproducible_in_one_process() {
 }
 
 #[test]
+fn traced_pool_sweeps_merge_deterministically() {
+    // Traced spot markets on a sweep: an explicit price spike in one
+    // pool, a seeded random walk in the other (regenerated per sweep
+    // seed). The merged digests — including per-segment billing and the
+    // PoolPriceChanged counters — must be identical at any thread count.
+    use spoton::cloud::trace::{PricePoint, PriceTrace, PriceWalkCfg};
+    use spoton::config::{
+        EvictionPlanCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+    };
+    let spike = PriceTrace::new(vec![
+        PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+        PricePoint { offset: SimDuration::from_mins(60), factor: 1.7 },
+    ])
+    .expect("valid trace");
+    let exp = Experiment::table1()
+        .named("trace-determinism")
+        .transparent(SimDuration::from_mins(15))
+        .deadline(SimDuration::from_hours(30))
+        .pool(
+            PoolCfg::named("spiky")
+                .pricing(PoolPricingCfg::Trace(spike))
+                .eviction(EvictionPlanCfg::Poisson {
+                    mean: SimDuration::from_mins(40),
+                }),
+        )
+        .pool(
+            PoolCfg::named("walker")
+                .pricing(PoolPricingCfg::Walk(PriceWalkCfg::default()))
+                .eviction(EvictionPlanCfg::Poisson {
+                    mean: SimDuration::from_mins(90),
+                }),
+        )
+        .placement(PlacementPolicyCfg::CheapestSpot);
+    let sweep = exp.sweep().seed_range(0, 12);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t2 = sweep.clone().threads(2).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    assert_eq!(digests(&t1), digests(&t2), "threads=2 diverged");
+    assert_eq!(digests(&t1), digests(&t8), "threads=8 diverged");
+    // the runs really replayed moving prices (counted even at the lean
+    // Counts metrics level)
+    assert!(t1.iter().all(|r| r
+        .result
+        .timeline
+        .count(spoton::metrics::EventKind::PoolPriceChanged)
+        > 0));
+}
+
+#[test]
 fn multi_pool_sweeps_merge_deterministically() {
     use spoton::config::{EvictionPlanCfg, PlacementPolicyCfg, PoolCfg};
     let exp = Experiment::table1()
