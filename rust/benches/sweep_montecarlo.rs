@@ -122,6 +122,68 @@ fn main() -> anyhow::Result<()> {
         n_dist as f64 / wall.as_secs_f64(),
     );
 
+    section("adaptive interval controllers (BENCH_policy.json)");
+    // The policy/ subsystem on the sweep path: the same storm once per
+    // controller, reporting per-controller throughput and distribution
+    // summaries to a separate BENCH_policy.json payload.
+    let mut policy_report = BenchReport::new("policy");
+    let n_policy = runs.min(1000);
+    policy_report
+        .value("runs", n_policy as u64)
+        .value("threads", threads as u64);
+    let storm = Experiment::table1()
+        .named("mc-adaptive")
+        .eviction_poisson(SimDuration::from_mins(35))
+        .transparent(SimDuration::from_mins(30))
+        .notice(SimDuration::from_secs(10))
+        .deadline(SimDuration::from_hours(30));
+    let controllers = [
+        spoton::config::IntervalControllerCfg::Fixed,
+        spoton::config::IntervalControllerCfg::young_daly(),
+        spoton::config::IntervalControllerCfg::cost_aware(1.0),
+    ];
+    for cfg in &controllers {
+        let label = cfg.label();
+        let sweep = storm
+            .clone()
+            .adaptive(cfg.clone())
+            .sweep()
+            .seed_range(0, n_policy)
+            .threads(threads);
+        let t0 = Instant::now();
+        let merged = sweep.run()?;
+        let wall = t0.elapsed();
+        let dist = distribution::summarize(&label, &merged);
+        println!(
+            "  {label:<14} {n_policy} runs in {wall:.3?} ({:.1} runs/s), \
+             cost mean ${:.4}, makespan p95 {:.0}s",
+            n_policy as f64 / wall.as_secs_f64(),
+            dist.total_cost.mean,
+            dist.makespan_secs.p95,
+        );
+        let key = label.replace('/', "_");
+        policy_report
+            .value(format!("{key}.runs_per_sec").as_str(),
+                   n_policy as f64 / wall.as_secs_f64())
+            .value(format!("{key}.distributions").as_str(), dist.to_json());
+    }
+    // adaptive sweeps must stay thread-invariant like everything else
+    let check = storm
+        .clone()
+        .adaptive(spoton::config::IntervalControllerCfg::young_daly())
+        .sweep()
+        .seed_range(0, runs.min(100));
+    let a = check.clone().threads(1).run()?;
+    let b = check.clone().threads(threads.max(2)).run()?;
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| {
+            x.seed == y.seed && run_digest(&x.result) == run_digest(&y.result)
+        }),
+        "adaptive sweep diverged across thread counts"
+    );
+    println!("  young-daly digests byte-identical across thread counts: ok");
+    policy_report.write()?;
+
     section("merge determinism spot check (threads = 1 vs sweep threads)");
     let n_check = runs.min(200);
     let base = poisson.sweep().seed_range(0, n_check);

@@ -475,6 +475,13 @@ impl Fleet {
         &self.pools[pool.0].price_points
     }
 
+    /// Current traced price factor of `pool` (1.0 for static pools and
+    /// before a traced pool's first move) — the market signal cost-aware
+    /// interval controllers ([`crate::policy`]) read at each boundary.
+    pub fn price_factor(&self, pool: PoolId) -> f64 {
+        self.pools[pool.0].current_factor()
+    }
+
     /// Apply a traced price move at `now`: the pool's effective price
     /// becomes `base × factor` from `now` on (a new billing epoch).
     /// Returns the (old, new) hourly price for the timeline.
@@ -712,6 +719,9 @@ mod tests {
         assert_eq!(old, d8_spot);
         assert!((new - 0.152).abs() < 1e-12);
         assert_eq!(fleet.views()[0].price_per_hour, new);
+        // the raw factor is exposed for cost-aware interval controllers
+        assert_eq!(fleet.price_factor(PoolId(0)), 2.0);
+        assert_eq!(fleet.price_factor(PoolId(1)), 1.0);
 
         // terminate after 1 h: 0.5 h at $0.076 + 0.5 h at $0.152
         fleet

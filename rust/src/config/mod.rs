@@ -10,8 +10,8 @@ pub mod toml;
 pub mod scenario;
 
 pub use scenario::{
-    CheckpointMethodCfg, CloudCfg, EvictionPlanCfg, FleetCfg,
-    PlacementPolicyCfg, PoolCfg, PoolPricingCfg, ScenarioConfig, StorageCfg,
-    WorkloadCfg,
+    CheckpointMethodCfg, ClampCfg, CloudCfg, EvictionPlanCfg, FleetCfg,
+    IntervalControllerCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+    ScenarioConfig, StorageCfg, WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

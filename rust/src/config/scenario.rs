@@ -175,6 +175,85 @@ impl PoolCfg {
     }
 }
 
+/// Clamp around an adaptive interval controller's raw output
+/// ([`crate::policy::Clamp`]): hard min/max bounds plus a hysteresis
+/// dead-band so a noisy online estimate cannot thrash the checkpoint
+/// cadence. All knobs are validated — at TOML parse and again at
+/// controller construction — so a zero, non-finite or inverted
+/// (`min > max`) clamp never reaches a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClampCfg {
+    /// Shortest interval the controller may emit. Must be non-zero.
+    pub min: SimDuration,
+    /// Longest interval the controller may emit. Must be >= `min`.
+    pub max: SimDuration,
+    /// Dead-band fraction in `[0, 1)`: a newly computed interval within
+    /// this relative distance of the last emitted one keeps the old
+    /// value (0 disables hysteresis).
+    pub hysteresis: f64,
+}
+
+impl Default for ClampCfg {
+    fn default() -> Self {
+        Self {
+            min: SimDuration::from_mins(2),
+            max: SimDuration::from_mins(120),
+            hysteresis: 0.0,
+        }
+    }
+}
+
+/// Which interval controller tunes the periodic (transparent) checkpoint
+/// cadence ([`crate::policy`]). TOML: the `[checkpoint.adaptive]`
+/// section.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum IntervalControllerCfg {
+    /// Always the configured `[checkpoint] interval_mins` — byte-for-byte
+    /// the pre-policy engine (pinned against the legacy oracle).
+    #[default]
+    Fixed,
+    /// Young/Daly first-order optimum `√(2 · ckpt_cost · MTBF)` from an
+    /// online per-pool eviction-rate estimate seeded with `prior_mtbf`.
+    YoungDaly { prior_mtbf: SimDuration, clamp: ClampCfg },
+    /// Young/Daly scaled by the active pool's current traced price
+    /// factor raised to `sensitivity`: checkpoints cluster when the pool
+    /// is cheap, spread out across a price spike.
+    CostAware {
+        sensitivity: f64,
+        prior_mtbf: SimDuration,
+        clamp: ClampCfg,
+    },
+}
+
+impl IntervalControllerCfg {
+    /// Young/Daly with the default prior and clamp.
+    pub fn young_daly() -> Self {
+        Self::YoungDaly {
+            prior_mtbf: SimDuration::from_mins(60),
+            clamp: ClampCfg::default(),
+        }
+    }
+
+    /// Cost-aware Young/Daly with the default prior and clamp.
+    pub fn cost_aware(sensitivity: f64) -> Self {
+        Self::CostAware {
+            sensitivity,
+            prior_mtbf: SimDuration::from_mins(60),
+            clamp: ClampCfg::default(),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            IntervalControllerCfg::Fixed => "fixed".into(),
+            IntervalControllerCfg::YoungDaly { .. } => "young-daly".into(),
+            IntervalControllerCfg::CostAware { sensitivity, .. } => {
+                format!("cost-aware/{sensitivity}")
+            }
+        }
+    }
+}
+
 /// Which placement policy picks the pool for each replacement
 /// ([`crate::cloud::fleet`]).
 #[derive(Debug, Clone, PartialEq, Default)]
@@ -327,6 +406,11 @@ pub struct ScenarioConfig {
     pub workload: WorkloadCfg,
     pub eviction: EvictionPlanCfg,
     pub checkpoint: CheckpointMethodCfg,
+    /// Adaptive checkpoint-interval controller tuning the periodic
+    /// cadence online ([`crate::policy`]); the default
+    /// [`IntervalControllerCfg::Fixed`] reproduces the static
+    /// `interval_mins` behaviour byte for byte.
+    pub adaptive: IntervalControllerCfg,
     /// Compress the opportunistic termination checkpoint when the raw
     /// image would not fit the notice window (the coordinator samples the
     /// snapshot's compression ratio to decide — `checkpoint::compress`).
@@ -355,6 +439,7 @@ impl Default for ScenarioConfig {
             workload: WorkloadCfg::default(),
             eviction: EvictionPlanCfg::None,
             checkpoint: CheckpointMethodCfg::None,
+            adaptive: IntervalControllerCfg::default(),
             compress_termination: false,
             cloud: CloudCfg::default(),
             fleet: FleetCfg::default(),
@@ -520,6 +605,104 @@ impl ScenarioConfig {
             if let Some(v) = doc.get_bool("checkpoint", "compress") {
                 cfg.compress_termination = v;
             }
+        }
+
+        // [checkpoint.adaptive] — interval-controller selection + knobs.
+        // Every knob is validated here, in PR-4 `build_policy` style: a
+        // non-finite, zero or inverted value is a parse error naming the
+        // offending key, never a silently-degraded controller.
+        if doc.has_section("checkpoint.adaptive") {
+            let sec = "checkpoint.adaptive";
+            if !matches!(cfg.checkpoint, CheckpointMethodCfg::Transparent { .. })
+            {
+                bail!(
+                    "[{sec}] requires checkpoint.method = \"transparent\" \
+                     (adaptive controllers tune the periodic interval)"
+                );
+            }
+            let pos_mins = |key: &str| -> Result<Option<SimDuration>> {
+                match doc.get_f64(sec, key) {
+                    None => Ok(None),
+                    Some(v) if v.is_finite() && v > 0.0 => {
+                        Ok(Some(SimDuration::from_secs_f64(v * 60.0)))
+                    }
+                    Some(v) => bail!(
+                        "{sec}.{key} must be positive and finite, got {v}"
+                    ),
+                }
+            };
+            let mut clamp = ClampCfg::default();
+            if let Some(v) = pos_mins("min_interval_mins")? {
+                clamp.min = v;
+            }
+            if let Some(v) = pos_mins("max_interval_mins")? {
+                clamp.max = v;
+            }
+            if clamp.min > clamp.max {
+                bail!(
+                    "{sec}: min_interval_mins ({}) exceeds max_interval_mins \
+                     ({}) — the clamp is inverted",
+                    clamp.min,
+                    clamp.max
+                );
+            }
+            if let Some(v) = doc.get_f64(sec, "hysteresis") {
+                if !(v.is_finite() && (0.0..1.0).contains(&v)) {
+                    bail!("{sec}.hysteresis must be in [0, 1), got {v}");
+                }
+                clamp.hysteresis = v;
+            }
+            let prior_mtbf = pos_mins("mtbf_prior_mins")?
+                .unwrap_or(SimDuration::from_mins(60));
+            let sensitivity = doc.get_f64(sec, "sensitivity");
+            if let Some(v) = sensitivity {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!(
+                        "{sec}.sensitivity must be positive and finite, \
+                         got {v}"
+                    );
+                }
+            }
+            cfg.adaptive = match doc.get_str(sec, "controller").unwrap_or("fixed")
+            {
+                "fixed" => {
+                    // every other knob configures the adaptive
+                    // controllers; accepting them here would silently
+                    // run the static interval the user thought they
+                    // replaced
+                    for key in [
+                        "min_interval_mins",
+                        "max_interval_mins",
+                        "hysteresis",
+                        "mtbf_prior_mins",
+                        "sensitivity",
+                    ] {
+                        if doc.get(sec, key).is_some() {
+                            bail!(
+                                "{sec}.{key} has no effect with controller \
+                                 = \"fixed\" — remove it or pick an \
+                                 adaptive controller"
+                            );
+                        }
+                    }
+                    IntervalControllerCfg::Fixed
+                }
+                "young-daly" => {
+                    if sensitivity.is_some() {
+                        bail!(
+                            "{sec}.sensitivity only applies to the \
+                             cost-aware controller"
+                        );
+                    }
+                    IntervalControllerCfg::YoungDaly { prior_mtbf, clamp }
+                }
+                "cost-aware" => IntervalControllerCfg::CostAware {
+                    sensitivity: sensitivity.unwrap_or(1.0),
+                    prior_mtbf,
+                    clamp,
+                },
+                other => bail!("unknown {sec}.controller '{other}'"),
+            };
         }
 
         // [cloud]
@@ -850,6 +1033,126 @@ provisioned_gib = 200.0
         assert!(ScenarioConfig::from_str_toml(
             "[storage]\nprice_per_100gib_month = -16.0"
         )
+        .is_err());
+    }
+
+    #[test]
+    fn checkpoint_adaptive_section_parses() {
+        let cfg = ScenarioConfig::from_str_toml(
+            r#"
+[checkpoint]
+method = "transparent"
+interval_mins = 30
+
+[checkpoint.adaptive]
+controller = "young-daly"
+min_interval_mins = 5
+max_interval_mins = 90
+hysteresis = 0.15
+mtbf_prior_mins = 45
+"#,
+        )
+        .unwrap();
+        match cfg.adaptive {
+            IntervalControllerCfg::YoungDaly { prior_mtbf, clamp } => {
+                assert_eq!(prior_mtbf, SimDuration::from_mins(45));
+                assert_eq!(clamp.min, SimDuration::from_mins(5));
+                assert_eq!(clamp.max, SimDuration::from_mins(90));
+                assert_eq!(clamp.hysteresis, 0.15);
+            }
+            other => panic!("wrong controller: {other:?}"),
+        }
+
+        // cost-aware picks up sensitivity (default 1.0)
+        let cfg = ScenarioConfig::from_str_toml(
+            "[checkpoint]\nmethod = \"transparent\"\ninterval_mins = 30\n\
+             [checkpoint.adaptive]\ncontroller = \"cost-aware\"\n\
+             sensitivity = 2.0\n",
+        )
+        .unwrap();
+        match cfg.adaptive {
+            IntervalControllerCfg::CostAware { sensitivity, .. } => {
+                assert_eq!(sensitivity, 2.0);
+            }
+            other => panic!("wrong controller: {other:?}"),
+        }
+
+        // no section → Fixed, byte-identical to the pre-policy engine
+        assert_eq!(
+            ScenarioConfig::from_str_toml("name = \"x\"").unwrap().adaptive,
+            IntervalControllerCfg::Fixed
+        );
+        // explicit fixed round-trips
+        let cfg = ScenarioConfig::from_str_toml(
+            "[checkpoint]\nmethod = \"transparent\"\ninterval_mins = 30\n\
+             [checkpoint.adaptive]\ncontroller = \"fixed\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.adaptive, IntervalControllerCfg::Fixed);
+    }
+
+    #[test]
+    fn checkpoint_adaptive_rejects_bad_knobs() {
+        let transparent = "[checkpoint]\nmethod = \"transparent\"\n\
+                           interval_mins = 30\n";
+        // requires the transparent method
+        assert!(ScenarioConfig::from_str_toml(
+            "[checkpoint.adaptive]\ncontroller = \"young-daly\"\n"
+        )
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[checkpoint]\nmethod = \"application\"\n\
+             [checkpoint.adaptive]\ncontroller = \"young-daly\"\n"
+        )
+        .is_err());
+        // unknown controller name
+        assert!(ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\ncontroller = \"daily\"\n"
+        ))
+        .is_err());
+        // zero / negative / inverted interval knobs
+        for bad in [
+            "min_interval_mins = 0",
+            "min_interval_mins = -3",
+            "max_interval_mins = 0",
+            "mtbf_prior_mins = 0",
+            "min_interval_mins = 60\nmax_interval_mins = 5",
+            "hysteresis = 1.0",
+            "hysteresis = -0.2",
+        ] {
+            let src = format!(
+                "{transparent}[checkpoint.adaptive]\n\
+                 controller = \"young-daly\"\n{bad}\n"
+            );
+            let err = ScenarioConfig::from_str_toml(&src)
+                .expect_err(&format!("{bad} must be rejected"));
+            assert!(
+                err.to_string().contains("checkpoint.adaptive"),
+                "{bad}: {err}"
+            );
+        }
+        // sensitivity is a cost-aware-only knob
+        assert!(ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\n\
+             controller = \"young-daly\"\nsensitivity = 2.0\n"
+        ))
+        .is_err());
+        // adaptive knobs on the fixed controller would be silently
+        // dropped — rejected instead (incl. when "fixed" is implicit)
+        for src in [
+            "controller = \"fixed\"\nmin_interval_mins = 5",
+            "mtbf_prior_mins = 20",
+        ] {
+            let err = ScenarioConfig::from_str_toml(&format!(
+                "{transparent}[checkpoint.adaptive]\n{src}\n"
+            ))
+            .expect_err(&format!("{src} must be rejected under fixed"));
+            assert!(err.to_string().contains("fixed"), "{src}: {err}");
+        }
+        assert!(ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\n\
+             controller = \"cost-aware\"\nsensitivity = 0\n"
+        ))
         .is_err());
     }
 

@@ -1,8 +1,18 @@
 //! Checkpoint policy: which method protects the run, when checkpoints are
 //! due, and which checkpoint kinds a restart may restore from.
+//!
+//! The *cadence* of periodic checkpoints has two layers: this policy
+//! carries the statically configured interval ([`periodic_interval`] /
+//! [`periodic_due`](CheckpointPolicy::periodic_due), what the legacy loop
+//! consults directly) plus an [`IntervalControllerCfg`] naming the
+//! adaptive controller ([`crate::policy`]) the engine builds to tune that
+//! interval online — `Fixed` (the default) reproduces the static
+//! behaviour byte for byte.
+//!
+//! [`periodic_interval`]: CheckpointPolicy::periodic_interval
 
 use crate::checkpoint::CkptKind;
-use crate::config::CheckpointMethodCfg;
+use crate::config::{CheckpointMethodCfg, IntervalControllerCfg};
 use crate::simclock::{SimDuration, SimTime};
 
 /// The coordinator's checkpointing behaviour, derived from its
@@ -15,11 +25,18 @@ pub struct CheckpointPolicy {
     /// fit the notice window (see
     /// [`crate::coordinator::handlers::on_poll_tick`]).
     compress_termination: bool,
+    /// Which interval controller tunes the periodic cadence online
+    /// (`[checkpoint.adaptive]`; [`crate::policy::build_controller`]).
+    controller: IntervalControllerCfg,
 }
 
 impl CheckpointPolicy {
     pub fn new(method: CheckpointMethodCfg) -> Self {
-        Self { method, compress_termination: false }
+        Self {
+            method,
+            compress_termination: false,
+            controller: IntervalControllerCfg::Fixed,
+        }
     }
 
     /// Enable/disable termination-checkpoint compression (off by
@@ -33,6 +50,20 @@ impl CheckpointPolicy {
     /// that would otherwise miss the notice deadline?
     pub fn compress_termination(&self) -> bool {
         self.compress_termination
+    }
+
+    /// Select the adaptive interval controller tuning the periodic
+    /// cadence (default [`IntervalControllerCfg::Fixed`] — the static
+    /// interval, byte-identical to the pre-policy engine).
+    pub fn with_controller(mut self, cfg: IntervalControllerCfg) -> Self {
+        self.controller = cfg;
+        self
+    }
+
+    /// The configured interval controller
+    /// ([`crate::policy::build_controller`] turns it into a live one).
+    pub fn controller(&self) -> &IntervalControllerCfg {
+        &self.controller
     }
 
     pub fn method(&self) -> &CheckpointMethodCfg {
@@ -125,6 +156,22 @@ mod tests {
         assert_eq!(p.periodic_interval(), None);
         assert!(!p.periodic_due(SimTime::from_secs(99999), SimTime::ZERO));
         assert_eq!(p.periodic_kind(), CkptKind::AppNative);
+    }
+
+    #[test]
+    fn carries_the_interval_controller_cfg() {
+        let p = CheckpointPolicy::new(CheckpointMethodCfg::Transparent {
+            interval: SimDuration::from_mins(30),
+        });
+        assert_eq!(p.controller(), &IntervalControllerCfg::Fixed);
+        let p = p.with_controller(IntervalControllerCfg::young_daly());
+        assert_eq!(
+            p.controller(),
+            &IntervalControllerCfg::young_daly(),
+            "controller cfg must survive the builder"
+        );
+        // the static due test is untouched by the controller selection
+        assert!(p.periodic_due(SimTime::from_secs(1800), SimTime::ZERO));
     }
 
     #[test]

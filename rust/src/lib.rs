@@ -33,7 +33,11 @@
 //!   spot-price histories (files under `traces/`) replayed as
 //!   `PoolPriceChanged` events, so placement re-decides as the market
 //!   shifts and billing splits instance uptime piecewise at every price
-//!   boundary; metered shared storage
+//!   boundary. The checkpoint cadence itself is tuned online by the
+//!   [`policy`] subsystem: pluggable interval controllers (fixed,
+//!   Young/Daly from an online per-pool eviction-rate estimator,
+//!   cost-aware scaling with the traced price) consulted at every step
+//!   boundary, clamped so noisy estimates can't thrash; metered shared storage
 //!   ([`storage`]), the checkpoint engine ([`checkpoint`]; compressible
 //!   images can rescue termination checkpoints from short notice windows
 //!   via [`checkpoint::compress`]), an IMDS-compatible scheduled-events
@@ -90,6 +94,7 @@ pub mod checkpoint;
 pub mod runtime;
 pub mod workload;
 pub mod coordinator;
+pub mod policy;
 pub mod sim;
 pub mod metrics;
 pub mod report;

@@ -1,0 +1,169 @@
+//! The cost-aware controller: Young/Daly scaled by the live spot price.
+//!
+//! A periodic checkpoint freezes the workload for the write, and that
+//! frozen time is billed at the pool's *current* hourly price — which
+//! the traced markets of [`crate::cloud::trace`] move mid-run. This
+//! controller prices that in: it composes on an inner [`YoungDaly`]
+//! (same estimator, same δ refinement, same clamp) and multiplies the
+//! unclamped optimum by `price_factor ^ sensitivity`, so a pool trading
+//! below its catalog level (factor < 1) gets a tighter cadence —
+//! checkpoints cluster while the overhead is cheap and the discount
+//! signals reclaim risk — while a price spike stretches the interval
+//! and stops paying premium rates for protection. `sensitivity` dials
+//! how hard the price signal bites (1.0 = linear; validated positive
+//! and finite at construction).
+
+use super::young_daly::YoungDaly;
+use super::{Clamp, IntervalController, PolicyCtx};
+use crate::cloud::fleet::PoolId;
+use crate::simclock::{SimDuration, SimTime};
+
+/// `√(2 · δ · MTBF) · price_factor^sensitivity`, clamped.
+#[derive(Debug)]
+pub struct CostAware {
+    /// The Young/Daly core this controller scales: one copy of the
+    /// estimator / δ-refinement / clamp logic, not two.
+    inner: YoungDaly,
+    sensitivity: f64,
+    /// Price epochs replayed so far (diagnostic: proves the controller
+    /// really saw the market move).
+    price_epochs_seen: u64,
+}
+
+impl CostAware {
+    pub fn new(
+        sensitivity: f64,
+        prior_mtbf: SimDuration,
+        clamp: Clamp,
+    ) -> Self {
+        Self {
+            inner: YoungDaly::new(prior_mtbf, clamp),
+            sensitivity,
+            price_epochs_seen: 0,
+        }
+    }
+
+    pub fn price_epochs_seen(&self) -> u64 {
+        self.price_epochs_seen
+    }
+}
+
+impl IntervalController for CostAware {
+    fn name(&self) -> &'static str {
+        "cost-aware"
+    }
+
+    fn next_interval(&mut self, ctx: &PolicyCtx) -> SimDuration {
+        let raw = self.inner.raw_interval(ctx);
+        // price_factor is validated positive/finite at trace
+        // construction, but an extreme factor^sensitivity can still
+        // overflow to infinity — saturate at the clamp ceiling instead
+        // of feeding mul_f64 a non-finite scale.
+        let scale = ctx.price_factor.powf(self.sensitivity);
+        let scaled = if scale.is_finite() {
+            raw.mul_f64(scale)
+        } else {
+            self.inner.clamp_max()
+        };
+        self.inner.clamp_apply(scaled)
+    }
+
+    fn observe_launch(&mut self, pool: PoolId, at: SimTime) {
+        self.inner.observe_launch(pool, at);
+    }
+
+    fn observe_eviction(&mut self, pool: PoolId, at: SimTime) {
+        self.inner.observe_eviction(pool, at);
+    }
+
+    fn observe_ckpt_cost(&mut self, cost: SimDuration) {
+        self.inner.observe_ckpt_cost(cost);
+    }
+
+    fn observe_price(&mut self, _pool: PoolId, _factor: f64) {
+        self.price_epochs_seen += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClampCfg;
+
+    fn wide_clamp() -> Clamp {
+        Clamp::new(&ClampCfg {
+            min: SimDuration::from_millis(1),
+            max: SimDuration::from_hours(1000),
+            hysteresis: 0.0,
+        })
+        .unwrap()
+    }
+
+    fn ctx(price_factor: f64) -> PolicyCtx {
+        PolicyCtx {
+            now: SimTime::from_secs(3600),
+            last_ckpt: SimTime::ZERO,
+            base_interval: SimDuration::from_mins(30),
+            ckpt_cost: SimDuration::from_secs(12),
+            pool: PoolId(0),
+            price_factor,
+        }
+    }
+
+    #[test]
+    fn cheap_pools_checkpoint_more_often() {
+        let mut c =
+            CostAware::new(1.0, SimDuration::from_mins(60), wide_clamp());
+        let discount = c.next_interval(&ctx(0.8));
+        let catalog = c.next_interval(&ctx(1.0));
+        let spiked = c.next_interval(&ctx(1.8));
+        assert!(discount < catalog, "{discount} !< {catalog}");
+        assert!(catalog < spiked, "{catalog} !< {spiked}");
+        // linear sensitivity: the 0.8 factor scales the interval by ~0.8
+        let want = catalog.mul_f64(0.8).as_millis() as i64;
+        assert!((discount.as_millis() as i64 - want).abs() <= 1);
+    }
+
+    #[test]
+    fn sensitivity_dials_the_price_response() {
+        let mut linear =
+            CostAware::new(1.0, SimDuration::from_mins(60), wide_clamp());
+        let mut sharp =
+            CostAware::new(2.0, SimDuration::from_mins(60), wide_clamp());
+        // a spike stretches the sharp controller further
+        assert!(sharp.next_interval(&ctx(1.8)) > linear.next_interval(&ctx(1.8)));
+        // and a discount tightens it further
+        assert!(sharp.next_interval(&ctx(0.8)) < linear.next_interval(&ctx(0.8)));
+    }
+
+    #[test]
+    fn shares_young_dalys_observations() {
+        // The composed inner core sees evictions and commit costs, so
+        // at factor 1.0 cost-aware tracks young-daly exactly.
+        let mut ca =
+            CostAware::new(1.0, SimDuration::from_mins(60), wide_clamp());
+        let mut yd = YoungDaly::new(SimDuration::from_mins(60), wide_clamp());
+        let mut t = SimTime::ZERO;
+        for _ in 0..3 {
+            ca.observe_launch(PoolId(0), t);
+            yd.observe_launch(PoolId(0), t);
+            t = t + SimDuration::from_mins(10);
+            ca.observe_eviction(PoolId(0), t);
+            yd.observe_eviction(PoolId(0), t);
+        }
+        ca.observe_ckpt_cost(SimDuration::from_secs(20));
+        yd.observe_ckpt_cost(SimDuration::from_secs(20));
+        let ctx1 = PolicyCtx { now: t, ..ctx(1.0) };
+        assert_eq!(ca.next_interval(&ctx1), yd.next_interval(&ctx1));
+    }
+
+    #[test]
+    fn counts_observed_price_epochs() {
+        let mut c =
+            CostAware::new(1.0, SimDuration::from_mins(60), wide_clamp());
+        assert_eq!(c.price_epochs_seen(), 0);
+        c.observe_price(PoolId(0), 1.6);
+        c.observe_price(PoolId(1), 0.9);
+        assert_eq!(c.price_epochs_seen(), 2);
+    }
+}

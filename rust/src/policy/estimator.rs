@@ -1,0 +1,193 @@
+//! Online per-pool eviction-rate (MTBF) estimation.
+//!
+//! Adaptive interval controllers need the mean time between evictions of
+//! the pool the workload currently runs in. The fleet already counts
+//! launches and evictions per pool; this estimator turns those
+//! observations into a running MTBF estimate that survives across
+//! attempts within a run:
+//!
+//! * every launch opens a live uptime interval in its pool;
+//! * every eviction closes it, adding the instance's uptime to the
+//!   pool's observed-uptime total and bumping its eviction count;
+//! * a Bayesian-style prior (one pseudo-eviction after `prior_mtbf` of
+//!   uptime) keeps the earliest estimates sane before any eviction has
+//!   been observed, and washes out as real evidence accumulates.
+//!
+//! The estimate at `now` is
+//!
+//! ```text
+//! MTBF(pool, now) = (prior_mtbf + closed_uptime + live_uptime) / (1 + evictions)
+//! ```
+//!
+//! — the censored (still-alive) uptime counts as survival evidence, so a
+//! quiet pool's MTBF drifts *up* between evictions instead of freezing at
+//! its last failure. On a seeded Poisson eviction plan the estimate
+//! converges to the plan's configured mean (property-tested below).
+
+use crate::cloud::fleet::PoolId;
+use crate::simclock::{SimDuration, SimTime};
+
+/// Per-pool observations.
+#[derive(Debug, Clone, Copy, Default)]
+struct PoolObs {
+    /// Uptime closed by evictions, milliseconds.
+    closed_ms: u64,
+    evictions: u64,
+    /// Launch instant of the pool's live instance, if any.
+    live_since: Option<SimTime>,
+}
+
+/// Running MTBF estimator over the fleet's per-pool launch/eviction
+/// stream.
+#[derive(Debug, Clone)]
+pub struct EvictionRateEstimator {
+    prior_mtbf: SimDuration,
+    pools: Vec<PoolObs>,
+}
+
+impl EvictionRateEstimator {
+    pub fn new(prior_mtbf: SimDuration) -> Self {
+        Self { prior_mtbf, pools: Vec::new() }
+    }
+
+    fn obs_mut(&mut self, pool: PoolId) -> &mut PoolObs {
+        if pool.0 >= self.pools.len() {
+            self.pools.resize_with(pool.0 + 1, PoolObs::default);
+        }
+        &mut self.pools[pool.0]
+    }
+
+    /// An instance started running in `pool` at `at`.
+    pub fn observe_launch(&mut self, pool: PoolId, at: SimTime) {
+        self.obs_mut(pool).live_since = Some(at);
+    }
+
+    /// The instance running in `pool` was reclaimed at `at`.
+    pub fn observe_eviction(&mut self, pool: PoolId, at: SimTime) {
+        let obs = self.obs_mut(pool);
+        if let Some(since) = obs.live_since.take() {
+            obs.closed_ms += at.since(since).as_millis();
+        }
+        obs.evictions += 1;
+    }
+
+    /// Evictions observed in `pool` so far.
+    pub fn evictions(&self, pool: PoolId) -> u64 {
+        self.pools.get(pool.0).map_or(0, |o| o.evictions)
+    }
+
+    /// MTBF estimate for `pool` at `now` (includes the live instance's
+    /// censored uptime as survival evidence). With no observations this
+    /// is exactly the prior.
+    pub fn mtbf(&self, pool: PoolId, now: SimTime) -> SimDuration {
+        let (uptime_ms, evictions) = match self.pools.get(pool.0) {
+            None => (0, 0),
+            Some(o) => {
+                let live_ms = o
+                    .live_since
+                    .map_or(0, |since| now.since(since).as_millis());
+                (o.closed_ms + live_ms, o.evictions)
+            }
+        };
+        let total = self.prior_mtbf.as_millis() + uptime_ms;
+        SimDuration::from_millis(total / (1 + evictions))
+    }
+
+    /// Eviction rate (per hour) — `1 / MTBF`, 0 if the estimate is
+    /// unbounded.
+    pub fn rate_per_hour(&self, pool: PoolId, now: SimTime) -> f64 {
+        let mtbf = self.mtbf(pool, now);
+        if mtbf.is_zero() {
+            0.0
+        } else {
+            3_600_000.0 / mtbf.as_millis() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::eviction::EvictionPlan;
+    use crate::config::EvictionPlanCfg;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    const POOL: PoolId = PoolId(0);
+
+    #[test]
+    fn prior_holds_until_evidence_arrives() {
+        let est = EvictionRateEstimator::new(SimDuration::from_mins(60));
+        assert_eq!(est.mtbf(POOL, SimTime::ZERO), SimDuration::from_mins(60));
+        assert_eq!(est.evictions(POOL), 0);
+    }
+
+    #[test]
+    fn censored_uptime_raises_the_estimate() {
+        let mut est = EvictionRateEstimator::new(SimDuration::from_mins(60));
+        est.observe_launch(POOL, SimTime::ZERO);
+        // 2 h alive without an eviction: MTBF grows past the prior
+        let at = SimTime::from_secs(7200);
+        assert_eq!(est.mtbf(POOL, at), SimDuration::from_mins(180));
+    }
+
+    #[test]
+    fn evictions_pull_the_estimate_down() {
+        let mut est = EvictionRateEstimator::new(SimDuration::from_mins(60));
+        let mut t = SimTime::ZERO;
+        // four instances each reclaimed after 10 minutes of uptime
+        for _ in 0..4 {
+            est.observe_launch(POOL, t);
+            t = t + SimDuration::from_mins(10);
+            est.observe_eviction(POOL, t);
+        }
+        // (60 + 40) min over 5 intervals = 20 min — well below the prior
+        assert_eq!(est.mtbf(POOL, t), SimDuration::from_mins(20));
+        assert_eq!(est.evictions(POOL), 4);
+        assert!((est.rate_per_hour(POOL, t) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pools_are_estimated_independently(){
+        let mut est = EvictionRateEstimator::new(SimDuration::from_mins(60));
+        est.observe_launch(PoolId(1), SimTime::ZERO);
+        est.observe_eviction(PoolId(1), SimTime::from_secs(60));
+        assert_eq!(est.mtbf(POOL, SimTime::ZERO), SimDuration::from_mins(60));
+        assert!(est.mtbf(PoolId(1), SimTime::from_secs(60)) < est.mtbf(POOL, SimTime::from_secs(60)));
+    }
+
+    #[test]
+    fn prop_estimator_converges_to_seeded_poisson_rate() {
+        // Feed the estimator the exact offsets a seeded Poisson eviction
+        // plan produces: after many observations the MTBF estimate must
+        // sit within 10% of the plan's configured mean.
+        forall(
+            Config::default().cases(20).seed(0xE57),
+            |rng| (rng.next_u64(), rng.range_u64(20, 180)),
+            shrink_none,
+            |&(seed, mean_mins)| {
+                let mean = SimDuration::from_mins(mean_mins);
+                let mut plan =
+                    EvictionPlan::new(EvictionPlanCfg::Poisson { mean }, seed);
+                let mut est =
+                    EvictionRateEstimator::new(SimDuration::from_mins(60));
+                let mut t = SimTime::ZERO;
+                for _ in 0..3000 {
+                    let offset = plan
+                        .next_eviction_offset()
+                        .ok_or("poisson plan ran dry")?;
+                    est.observe_launch(PoolId(0), t);
+                    t = t + offset;
+                    est.observe_eviction(PoolId(0), t);
+                }
+                let got = est.mtbf(PoolId(0), t).as_secs_f64();
+                let want = mean.as_secs_f64();
+                if (got - want).abs() / want > 0.10 {
+                    return Err(format!(
+                        "estimate {got:.1}s vs configured {want:.1}s"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}

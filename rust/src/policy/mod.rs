@@ -1,0 +1,376 @@
+//! Adaptive checkpoint-interval controllers.
+//!
+//! The paper picks one periodic checkpoint interval offline and keeps it
+//! for the whole run (Table I: transparent/30m), yet its own cost/runtime
+//! trade-off hinges on how well that cadence matches the eviction
+//! process — and the traced spot markets of [`crate::cloud::trace`] make
+//! both eviction risk and price *time-varying* within a run. This module
+//! closes that loop online: an [`IntervalController`] is consulted by the
+//! engine at every step boundary (the `BoundaryReached` handler in
+//! [`crate::sim::engine`]) and answers "how long should the gap to the
+//! next periodic checkpoint be, given everything this run has observed?"
+//!
+//! * [`FixedInterval`] — the identity controller: always the configured
+//!   `[checkpoint] interval_mins`, byte-identical to the pre-policy
+//!   engine (pinned against the legacy oracle by
+//!   `tests/engine_equivalence.rs`).
+//! * [`YoungDaly`](young_daly::YoungDaly) — the classic first-order
+//!   optimum `√(2 · δ · MTBF)` (Young 1974 / Daly 2006) with δ the
+//!   modeled checkpoint write cost and the MTBF estimated online, per
+//!   pool, by [`estimator::EvictionRateEstimator`] — fed by the fleet's
+//!   launch/eviction observations and surviving across attempts within a
+//!   run.
+//! * [`CostAware`](cost_aware::CostAware) — Young/Daly scaled by the
+//!   active pool's *current* traced price factor raised to a
+//!   `sensitivity` exponent: checkpoints cluster while the pool is cheap
+//!   (the freeze is billed at the low price) and spread out across a
+//!   price spike.
+//!
+//! Raw controller outputs pass through a composable [`Clamp`] — hard
+//! min/max bounds plus a hysteresis dead-band — so a noisy online
+//! estimate can never thrash the cadence.
+//!
+//! ## `[checkpoint.adaptive]` scenario reference
+//!
+//! ```toml
+//! [checkpoint]
+//! method = "transparent"      # adaptive controllers require transparent
+//! interval_mins = 30          # FixedInterval's cadence
+//!
+//! [checkpoint.adaptive]
+//! controller = "young-daly"   # "fixed" (default) | "young-daly" | "cost-aware"
+//! min_interval_mins = 2       # clamp floor    (> 0; default 2)
+//! max_interval_mins = 120     # clamp ceiling  (>= floor; default 120)
+//! hysteresis = 0.1            # dead-band fraction in [0, 1) (default 0)
+//! mtbf_prior_mins = 60        # estimator prior (> 0; default 60)
+//! sensitivity = 1.0           # cost-aware only: price-factor exponent (> 0)
+//! ```
+//!
+//! Every knob is validated at parse ([`crate::config::ScenarioConfig`])
+//! and again at construction ([`build_controller`], mirroring
+//! `cloud::fleet::build_policy`): non-finite, zero, or inverted
+//! (`min > max`) values are rejected with an error naming the offending
+//! key — a NaN sensitivity or a zero floor would otherwise degrade the
+//! controller silently.
+
+pub mod cost_aware;
+pub mod estimator;
+pub mod young_daly;
+
+pub use cost_aware::CostAware;
+pub use estimator::EvictionRateEstimator;
+pub use young_daly::YoungDaly;
+
+use crate::cloud::fleet::PoolId;
+use crate::config::{ClampCfg, IntervalControllerCfg};
+use crate::simclock::{SimDuration, SimTime};
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// Everything a controller may consult when asked for the next interval.
+/// Built fresh by the engine at each step boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCtx {
+    /// The boundary's instant.
+    pub now: SimTime,
+    /// When the last periodic checkpoint (or restore/launch reset)
+    /// happened — the due test is `now - last_ckpt >= next_interval()`.
+    pub last_ckpt: SimTime,
+    /// The statically configured transparent interval
+    /// (`[checkpoint] interval_mins`): [`FixedInterval`]'s answer.
+    pub base_interval: SimDuration,
+    /// Modeled cost of one periodic checkpoint write (the snapshot's
+    /// transfer time; updated from observed commits as the run goes).
+    pub ckpt_cost: SimDuration,
+    /// Pool the live instance runs in.
+    pub pool: PoolId,
+    /// The active pool's current traced price factor (1.0 for static
+    /// pools) — what [`CostAware`] scales by.
+    pub price_factor: f64,
+}
+
+/// Decides the periodic checkpoint cadence online. The engine consults
+/// [`IntervalController::next_interval`] at every step boundary and feeds
+/// the `observe_*` hooks as the run unfolds; controllers carry their own
+/// state (estimators, clamps) across attempts within a run.
+pub trait IntervalController: fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// Interval the periodic-checkpoint due test should use at this
+    /// boundary.
+    fn next_interval(&mut self, ctx: &PolicyCtx) -> SimDuration;
+
+    /// An instance launched (or resumed) in `pool` at `at`.
+    fn observe_launch(&mut self, _pool: PoolId, _at: SimTime) {}
+
+    /// The instance running in `pool` was reclaimed at `at`.
+    fn observe_eviction(&mut self, _pool: PoolId, _at: SimTime) {}
+
+    /// A restore from shared storage finished at `at`.
+    fn observe_restore(&mut self, _at: SimTime) {}
+
+    /// A periodic checkpoint committed with this write cost.
+    fn observe_ckpt_cost(&mut self, _cost: SimDuration) {}
+
+    /// A traced pool's price epoch changed (`PoolPriceChanged`).
+    fn observe_price(&mut self, _pool: PoolId, _factor: f64) {}
+}
+
+/// The identity controller: the statically configured interval, forever.
+/// `FixedInterval` runs are byte-identical to the pre-policy engine — the
+/// equivalence suite pins them against the frozen legacy loop.
+#[derive(Debug, Default)]
+pub struct FixedInterval;
+
+impl IntervalController for FixedInterval {
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+
+    fn next_interval(&mut self, ctx: &PolicyCtx) -> SimDuration {
+        ctx.base_interval
+    }
+}
+
+/// Validated min/max bounds + hysteresis dead-band over a controller's
+/// raw output. The dead-band compares against the last *emitted*
+/// interval, so the clamp's output is always within `[min, max]` even
+/// while hysteresis is holding an older value.
+#[derive(Debug, Clone)]
+pub struct Clamp {
+    min: SimDuration,
+    max: SimDuration,
+    hysteresis: f64,
+    last: Option<SimDuration>,
+}
+
+impl Clamp {
+    /// Build from config, rejecting zero bounds, an inverted range, or a
+    /// hysteresis outside `[0, 1)` (construction-level mirror of the TOML
+    /// validation — builder-API callers get the same errors).
+    pub fn new(cfg: &ClampCfg) -> Result<Self> {
+        if cfg.min.is_zero() {
+            bail!("clamp min interval must be non-zero");
+        }
+        if cfg.min > cfg.max {
+            bail!(
+                "clamp min interval ({}) exceeds max ({}) — inverted range",
+                cfg.min,
+                cfg.max
+            );
+        }
+        if !(cfg.hysteresis.is_finite() && (0.0..1.0).contains(&cfg.hysteresis))
+        {
+            bail!(
+                "clamp hysteresis must be in [0, 1), got {}",
+                cfg.hysteresis
+            );
+        }
+        Ok(Self {
+            min: cfg.min,
+            max: cfg.max,
+            hysteresis: cfg.hysteresis,
+            last: None,
+        })
+    }
+
+    /// Clamp `raw` into `[min, max]`, holding the previously emitted
+    /// interval when the new one lands inside the hysteresis dead-band.
+    pub fn apply(&mut self, raw: SimDuration) -> SimDuration {
+        let clamped = raw.clamp(self.min, self.max);
+        if let Some(prev) = self.last {
+            let delta =
+                (clamped.as_millis() as f64 - prev.as_millis() as f64).abs();
+            if delta <= self.hysteresis * prev.as_millis() as f64 {
+                return prev;
+            }
+        }
+        self.last = Some(clamped);
+        clamped
+    }
+
+    pub fn min(&self) -> SimDuration {
+        self.min
+    }
+
+    pub fn max(&self) -> SimDuration {
+        self.max
+    }
+}
+
+/// Build the controller a config names, validating its knobs (the
+/// interval-controller mirror of [`crate::cloud::fleet::build_policy`]).
+pub fn build_controller(
+    cfg: &IntervalControllerCfg,
+) -> Result<Box<dyn IntervalController>> {
+    Ok(match cfg {
+        IntervalControllerCfg::Fixed => Box::new(FixedInterval),
+        IntervalControllerCfg::YoungDaly { prior_mtbf, clamp } => {
+            if prior_mtbf.is_zero() {
+                bail!("young-daly mtbf prior must be non-zero");
+            }
+            Box::new(YoungDaly::new(*prior_mtbf, Clamp::new(clamp)?))
+        }
+        IntervalControllerCfg::CostAware {
+            sensitivity,
+            prior_mtbf,
+            clamp,
+        } => {
+            if !(sensitivity.is_finite() && *sensitivity > 0.0) {
+                bail!(
+                    "cost-aware sensitivity {sensitivity} must be positive \
+                     and finite"
+                );
+            }
+            if prior_mtbf.is_zero() {
+                bail!("cost-aware mtbf prior must be non-zero");
+            }
+            Box::new(CostAware::new(
+                *sensitivity,
+                *prior_mtbf,
+                Clamp::new(clamp)?,
+            ))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    fn ctx(base_mins: u64) -> PolicyCtx {
+        PolicyCtx {
+            now: SimTime::from_secs(3600),
+            last_ckpt: SimTime::ZERO,
+            base_interval: SimDuration::from_mins(base_mins),
+            ckpt_cost: SimDuration::from_secs(12),
+            pool: PoolId(0),
+            price_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn fixed_interval_is_the_identity() {
+        let mut c = FixedInterval;
+        assert_eq!(c.name(), "fixed");
+        for mins in [5u64, 30, 90] {
+            assert_eq!(
+                c.next_interval(&ctx(mins)),
+                SimDuration::from_mins(mins)
+            );
+        }
+    }
+
+    #[test]
+    fn clamp_bounds_and_hysteresis() {
+        let mut c = Clamp::new(&ClampCfg {
+            min: SimDuration::from_mins(5),
+            max: SimDuration::from_mins(60),
+            hysteresis: 0.2,
+        })
+        .unwrap();
+        // out-of-range raw values hit the bounds
+        assert_eq!(c.apply(SimDuration::from_mins(1)), SimDuration::from_mins(5));
+        assert_eq!(
+            c.apply(SimDuration::from_hours(5)),
+            SimDuration::from_mins(60)
+        );
+        // a move within 20% of the last emitted value is held...
+        assert_eq!(
+            c.apply(SimDuration::from_mins(55)),
+            SimDuration::from_mins(60)
+        );
+        // ...a larger one goes through
+        assert_eq!(
+            c.apply(SimDuration::from_mins(20)),
+            SimDuration::from_mins(20)
+        );
+    }
+
+    #[test]
+    fn clamp_rejects_invalid_configs() {
+        let bad = [
+            ClampCfg {
+                min: SimDuration::ZERO,
+                max: SimDuration::from_mins(10),
+                hysteresis: 0.0,
+            },
+            ClampCfg {
+                min: SimDuration::from_mins(30),
+                max: SimDuration::from_mins(10),
+                hysteresis: 0.0,
+            },
+            ClampCfg { hysteresis: 1.0, ..ClampCfg::default() },
+            ClampCfg { hysteresis: f64::NAN, ..ClampCfg::default() },
+            ClampCfg { hysteresis: -0.1, ..ClampCfg::default() },
+        ];
+        for cfg in &bad {
+            assert!(Clamp::new(cfg).is_err(), "{cfg:?} must be rejected");
+        }
+        assert!(Clamp::new(&ClampCfg::default()).is_ok());
+    }
+
+    #[test]
+    fn prop_clamp_output_always_within_bounds() {
+        // Whatever the raw stream and hysteresis, every emitted interval
+        // lies in [min, max].
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                let min = rng.range_u64(1, 10_000);
+                let max = min + rng.range_u64(0, 100_000);
+                let hysteresis = rng.f64() * 0.999;
+                let raws: Vec<u64> =
+                    (0..20).map(|_| rng.range_u64(0, 1_000_000)).collect();
+                (min, max, hysteresis, raws)
+            },
+            shrink_none,
+            |&(min, max, hysteresis, ref raws)| {
+                let mut clamp = Clamp::new(&ClampCfg {
+                    min: SimDuration::from_millis(min),
+                    max: SimDuration::from_millis(max),
+                    hysteresis,
+                })
+                .map_err(|e| e.to_string())?;
+                for &raw in raws {
+                    let out = clamp.apply(SimDuration::from_millis(raw));
+                    if out < clamp.min() || out > clamp.max() {
+                        return Err(format!(
+                            "raw {raw} escaped [{min}, {max}]: {out:?}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn build_controller_rejects_invalid_knobs() {
+        use crate::config::IntervalControllerCfg as C;
+        assert!(build_controller(&C::Fixed).is_ok());
+        assert!(build_controller(&C::young_daly()).is_ok());
+        assert!(build_controller(&C::cost_aware(1.0)).is_ok());
+        for bad in [f64::NAN, f64::INFINITY, 0.0, -2.0] {
+            assert!(
+                build_controller(&C::cost_aware(bad)).is_err(),
+                "sensitivity {bad} must be rejected"
+            );
+        }
+        assert!(build_controller(&C::YoungDaly {
+            prior_mtbf: SimDuration::ZERO,
+            clamp: ClampCfg::default(),
+        })
+        .is_err());
+        assert!(build_controller(&C::YoungDaly {
+            prior_mtbf: SimDuration::from_mins(60),
+            clamp: ClampCfg {
+                min: SimDuration::from_mins(30),
+                max: SimDuration::from_mins(5),
+                hysteresis: 0.0,
+            },
+        })
+        .is_err());
+    }
+}

@@ -1,0 +1,238 @@
+//! The Young/Daly optimal-interval controller.
+//!
+//! For a workload with checkpoint write cost δ on a machine with mean
+//! time between failures M, the first-order optimum periodic checkpoint
+//! interval is `√(2 · δ · M)` (Young 1974; Daly 2006 refines the same
+//! expansion). The paper fixes its interval offline; this controller
+//! derives M online from the run's own eviction stream
+//! ([`EvictionRateEstimator`]) and re-evaluates the optimum at every
+//! step boundary, so an eviction storm tightens the cadence and a quiet
+//! market relaxes it — through the [`Clamp`] so one noisy estimate can't
+//! thrash it.
+
+use super::estimator::EvictionRateEstimator;
+use super::{Clamp, IntervalController, PolicyCtx};
+use crate::cloud::fleet::PoolId;
+use crate::simclock::{SimDuration, SimTime};
+
+/// `√(2 · ckpt_cost · MTBF)` from the online per-pool estimator.
+#[derive(Debug)]
+pub struct YoungDaly {
+    estimator: EvictionRateEstimator,
+    clamp: Clamp,
+    /// Last observed periodic-commit cost (`observe_ckpt_cost`): once a
+    /// real write has landed, its cost replaces the a-priori
+    /// `PolicyCtx::ckpt_cost` estimate as δ.
+    observed_cost: Option<SimDuration>,
+}
+
+impl YoungDaly {
+    pub fn new(prior_mtbf: SimDuration, clamp: Clamp) -> Self {
+        Self {
+            estimator: EvictionRateEstimator::new(prior_mtbf),
+            clamp,
+            observed_cost: None,
+        }
+    }
+
+    /// The Young/Daly first-order optimum, unclamped.
+    pub fn optimal_interval(
+        ckpt_cost: SimDuration,
+        mtbf: SimDuration,
+    ) -> SimDuration {
+        SimDuration::from_secs_f64(
+            (2.0 * ckpt_cost.as_secs_f64() * mtbf.as_secs_f64()).sqrt(),
+        )
+    }
+
+    /// The unclamped optimum at this boundary: δ selection (observed
+    /// commit cost over the a-priori estimate) + the online MTBF.
+    /// [`CostAware`](super::CostAware) composes on this before applying
+    /// its price scaling.
+    pub fn raw_interval(&self, ctx: &PolicyCtx) -> SimDuration {
+        let cost = self.observed_cost.unwrap_or(ctx.ckpt_cost);
+        Self::optimal_interval(cost, self.estimator.mtbf(ctx.pool, ctx.now))
+    }
+
+    pub(crate) fn clamp_apply(&mut self, raw: SimDuration) -> SimDuration {
+        self.clamp.apply(raw)
+    }
+
+    pub(crate) fn clamp_max(&self) -> SimDuration {
+        self.clamp.max()
+    }
+
+    pub fn estimator(&self) -> &EvictionRateEstimator {
+        &self.estimator
+    }
+}
+
+impl IntervalController for YoungDaly {
+    fn name(&self) -> &'static str {
+        "young-daly"
+    }
+
+    fn next_interval(&mut self, ctx: &PolicyCtx) -> SimDuration {
+        let raw = self.raw_interval(ctx);
+        self.clamp.apply(raw)
+    }
+
+    fn observe_launch(&mut self, pool: PoolId, at: SimTime) {
+        self.estimator.observe_launch(pool, at);
+    }
+
+    fn observe_eviction(&mut self, pool: PoolId, at: SimTime) {
+        self.estimator.observe_eviction(pool, at);
+    }
+
+    fn observe_ckpt_cost(&mut self, cost: SimDuration) {
+        self.observed_cost = Some(cost);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClampCfg;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    fn wide_clamp() -> Clamp {
+        Clamp::new(&ClampCfg {
+            min: SimDuration::from_millis(1),
+            max: SimDuration::from_hours(1000),
+            hysteresis: 0.0,
+        })
+        .unwrap()
+    }
+
+    fn ctx(now: SimTime) -> PolicyCtx {
+        PolicyCtx {
+            now,
+            last_ckpt: SimTime::ZERO,
+            base_interval: SimDuration::from_mins(30),
+            ckpt_cost: SimDuration::from_secs(12),
+            pool: PoolId(0),
+            price_factor: 1.0,
+        }
+    }
+
+    #[test]
+    fn matches_the_closed_form() {
+        // δ = 12 s, M = 60 min → √(2 · 12 · 3600) ≈ 293.9 s
+        let got =
+            YoungDaly::optimal_interval(
+                SimDuration::from_secs(12),
+                SimDuration::from_mins(60),
+            );
+        assert_eq!(got.as_millis(), 293_939);
+    }
+
+    #[test]
+    fn observed_commit_costs_refine_delta() {
+        let mut c = YoungDaly::new(SimDuration::from_mins(60), wide_clamp());
+        let a_priori = c.next_interval(&ctx(SimTime::ZERO));
+        assert_eq!(a_priori.as_millis(), 293_939);
+        // a real commit lands 4x the estimate: δ quadruples, the
+        // optimum doubles (√ scaling)
+        c.observe_ckpt_cost(SimDuration::from_secs(48));
+        let refined = c.next_interval(&ctx(SimTime::ZERO));
+        assert_eq!(refined.as_millis(), 587_878);
+    }
+
+    #[test]
+    fn an_eviction_storm_tightens_the_cadence() {
+        let mut c = YoungDaly::new(SimDuration::from_mins(60), wide_clamp());
+        let calm = c.next_interval(&ctx(SimTime::ZERO));
+        // four quick evictions: MTBF collapses, interval shrinks
+        let mut t = SimTime::ZERO;
+        for _ in 0..4 {
+            c.observe_launch(PoolId(0), t);
+            t = t + SimDuration::from_mins(10);
+            c.observe_eviction(PoolId(0), t);
+        }
+        let stormy = c.next_interval(&ctx(t));
+        assert!(
+            stormy < calm,
+            "storm interval {stormy} should undercut calm {calm}"
+        );
+    }
+
+    #[test]
+    fn prop_interval_shrinks_monotonically_as_rate_rises() {
+        // The headline controller-math property: with the checkpoint cost
+        // held fixed, a higher estimated eviction rate (smaller MTBF)
+        // never yields a longer interval.
+        forall(
+            Config::default().cases(200),
+            |rng| {
+                let cost_ms = rng.range_u64(100, 120_000);
+                let mut mtbfs: Vec<u64> =
+                    (0..8).map(|_| rng.range_u64(1_000, 36_000_000)).collect();
+                mtbfs.sort_unstable();
+                (cost_ms, mtbfs)
+            },
+            shrink_none,
+            |&(cost_ms, ref mtbfs)| {
+                let cost = SimDuration::from_millis(cost_ms);
+                let mut prev = SimDuration::ZERO;
+                // ascending MTBF == descending rate: intervals ascend
+                for &mtbf_ms in mtbfs {
+                    let i = YoungDaly::optimal_interval(
+                        cost,
+                        SimDuration::from_millis(mtbf_ms),
+                    );
+                    if i < prev {
+                        return Err(format!(
+                            "interval {i} at mtbf {mtbf_ms}ms below {prev} \
+                             at a lower mtbf"
+                        ));
+                    }
+                    prev = i;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_emitted_intervals_respect_the_clamp() {
+        // Through the full controller (estimator + clamp): whatever the
+        // eviction history, every emitted interval stays within bounds.
+        forall(
+            Config::default().cases(100),
+            |rng| {
+                let min = rng.range_u64(1_000, 600_000);
+                let max = min + rng.range_u64(0, 3_600_000);
+                let evictions: Vec<u64> =
+                    (0..rng.range_u64(0, 10))
+                        .map(|_| rng.range_u64(1_000, 7_200_000))
+                        .collect();
+                (min, max, evictions)
+            },
+            shrink_none,
+            |&(min, max, ref evictions)| {
+                let clamp = Clamp::new(&ClampCfg {
+                    min: SimDuration::from_millis(min),
+                    max: SimDuration::from_millis(max),
+                    hysteresis: 0.0,
+                })
+                .map_err(|e| e.to_string())?;
+                let mut c =
+                    YoungDaly::new(SimDuration::from_mins(60), clamp);
+                let mut t = SimTime::ZERO;
+                for &uptime in evictions {
+                    c.observe_launch(PoolId(0), t);
+                    t = t + SimDuration::from_millis(uptime);
+                    c.observe_eviction(PoolId(0), t);
+                    let i = c.next_interval(&ctx(t));
+                    if i.as_millis() < min || i.as_millis() > max {
+                        return Err(format!(
+                            "interval {i} escaped [{min}ms, {max}ms]"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

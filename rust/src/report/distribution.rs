@@ -14,14 +14,16 @@
 use crate::json::Value;
 use crate::report::table::TextTable;
 use crate::sim::sweep::SeededRun;
-use crate::simclock::SimDuration;
-use crate::util::fmt::dollars;
+use crate::util::fmt::{dollars, hms_f64 as hms};
 
-/// Order statistics + mean over one metric's samples.
+/// Order statistics + mean over one metric's samples. `p05`/`p95` bound
+/// the uncertainty band the Fig 2/3 renderers plot around `p50`
+/// ([`crate::report::figures::render_fig2_bands`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
     pub n: usize,
     pub mean: f64,
+    pub p05: f64,
     pub p50: f64,
     pub p95: f64,
     pub p99: f64,
@@ -34,6 +36,7 @@ impl Summary {
     pub const ZERO: Summary = Summary {
         n: 0,
         mean: 0.0,
+        p05: 0.0,
         p50: 0.0,
         p95: 0.0,
         p99: 0.0,
@@ -56,6 +59,7 @@ impl Summary {
         Summary {
             n,
             mean,
+            p05: pct(0.05),
             p50: pct(0.50),
             p95: pct(0.95),
             p99: pct(0.99),
@@ -68,6 +72,7 @@ impl Summary {
         let mut v = Value::obj();
         v.set("n", self.n)
             .set("mean", self.mean)
+            .set("p05", self.p05)
             .set("p50", self.p50)
             .set("p95", self.p95)
             .set("p99", self.p99)
@@ -157,19 +162,16 @@ pub fn summarize(scenario: &str, runs: &[SeededRun]) -> SweepDistributions {
     }
 }
 
-fn hms(secs: f64) -> String {
-    SimDuration::from_secs_f64(secs.max(0.0)).hms()
-}
-
 /// Aligned text table: one row per metric, one column per statistic.
 pub fn render(d: &SweepDistributions) -> String {
     let mut t = TextTable::new(&[
-        "Metric", "Mean", "P50", "P95", "P99", "Min", "Max",
+        "Metric", "Mean", "P5", "P50", "P95", "P99", "Min", "Max",
     ]);
     let time_row = |label: &str, s: &Summary| -> Vec<String> {
         vec![
             label.to_string(),
             hms(s.mean),
+            hms(s.p05),
             hms(s.p50),
             hms(s.p95),
             hms(s.p99),
@@ -181,6 +183,7 @@ pub fn render(d: &SweepDistributions) -> String {
         vec![
             label.to_string(),
             dollars(s.mean),
+            dollars(s.p05),
             dollars(s.p50),
             dollars(s.p95),
             dollars(s.p99),
@@ -192,6 +195,7 @@ pub fn render(d: &SweepDistributions) -> String {
         vec![
             label.to_string(),
             format!("{:.2}", s.mean),
+            format!("{:.0}", s.p05),
             format!("{:.0}", s.p50),
             format!("{:.0}", s.p95),
             format!("{:.0}", s.p99),
@@ -271,6 +275,7 @@ mod tests {
         assert_eq!(s.p50, 3.0);
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
+        assert!(s.min <= s.p05 && s.p05 <= s.p50);
         assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
         assert_eq!(Summary::from_samples(&[]), Summary::ZERO);
         let one = Summary::from_samples(&[7.5]);

@@ -1,8 +1,17 @@
 //! Fig 2 (cost comparison) and Fig 3 (execution-time comparison)
 //! renderers.
+//!
+//! Two families: the point-estimate variants ([`render_fig2`] /
+//! [`render_fig3`]) reproduce the paper's single-schedule bars, and the
+//! band variants ([`render_fig2_bands`] / [`render_fig3_bands`]) plot
+//! each configuration's p50 with its p5–p95 band from a Monte Carlo
+//! sweep population ([`crate::report::distribution`]) — the spread a
+//! single eviction schedule hides.
 
+use super::distribution::SweepDistributions;
 use super::table::{bar_chart, TextTable};
 use crate::sim::RunResult;
+use crate::util::fmt::hms_f64 as hms;
 
 /// Fig 2: total cost per configuration, with savings relative to the
 /// on-demand baseline (first entry).
@@ -79,9 +88,104 @@ pub fn render_fig3(pairs: &[(&str, &RunResult, &RunResult)]) -> String {
     out
 }
 
+/// Fig 2 with uncertainty: total-cost p50 bars with the p5–p95 band of
+/// each configuration's sweep population; savings are quoted at the p50
+/// against the first entry (the on-demand baseline).
+pub fn render_fig2_bands(entries: &[(&str, &SweepDistributions)]) -> String {
+    assert!(!entries.is_empty());
+    let baseline = entries[0].1.total_cost.p50;
+    let mut out = String::new();
+    out.push_str(
+        "Fig 2 — Cost comparison with p5–p95 bands over sweep populations\n\n",
+    );
+    let bars: Vec<(String, f64)> = entries
+        .iter()
+        .map(|(label, d)| (label.to_string(), d.total_cost.p50))
+        .collect();
+    out.push_str(&bar_chart(&bars, "USD (p50)", 40));
+    out.push('\n');
+    let mut t = TextTable::new(&[
+        "Configuration", "Runs", "Cost p50", "p5", "p95", "Band",
+        "Saving vs baseline (p50)",
+    ]);
+    for (label, d) in entries {
+        let c = &d.total_cost;
+        let saving = 1.0 - c.p50 / baseline;
+        t.row(&[
+            label.to_string(),
+            d.runs.to_string(),
+            crate::util::fmt::dollars(c.p50),
+            crate::util::fmt::dollars(c.p05),
+            crate::util::fmt::dollars(c.p95),
+            crate::util::fmt::dollars(c.p95 - c.p05),
+            if c.p50 == baseline {
+                "—".to_string()
+            } else {
+                crate::util::fmt::pct(-saving).replace('-', "")
+            },
+        ]);
+    }
+    out.push_str(&t.render());
+    out
+}
+
+/// Fig 3 with uncertainty: execution-time p50 plus the p5–p95 band,
+/// application-native vs transparent, grouped by eviction process.
+/// `pairs` = (eviction label, app sweep, transparent sweep).
+pub fn render_fig3_bands(
+    pairs: &[(&str, &SweepDistributions, &SweepDistributions)],
+) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "Fig 3 — Execution time with p5–p95 bands: application-native vs \
+         transparent checkpointing on spot\n\n",
+    );
+    let mut bars = Vec::new();
+    for (label, app, tr) in pairs {
+        bars.push((
+            format!("{label} / application"),
+            app.makespan_secs.p50 / 3600.0,
+        ));
+        bars.push((
+            format!("{label} / transparent"),
+            tr.makespan_secs.p50 / 3600.0,
+        ));
+    }
+    out.push_str(&bar_chart(&bars, "h (p50)", 40));
+    out.push('\n');
+    let mut t = TextTable::new(&[
+        "Eviction", "Method", "p50", "p5", "p95", "Band", "Time saved (p50)",
+    ]);
+    for (label, app, tr) in pairs {
+        let saving = 1.0 - tr.makespan_secs.p50 / app.makespan_secs.p50;
+        for (method, d, saved) in [
+            ("application", app, "—".to_string()),
+            (
+                "transparent",
+                tr,
+                crate::util::fmt::pct(saving).replace('+', ""),
+            ),
+        ] {
+            let m = &d.makespan_secs;
+            t.row(&[
+                label.to_string(),
+                method.to_string(),
+                hms(m.p50),
+                hms(m.p05),
+                hms(m.p95),
+                hms(m.p95 - m.p05),
+                saved,
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::report::distribution::summarize;
     use crate::sim::experiment::Experiment;
     use crate::simclock::SimDuration;
 
@@ -104,6 +208,65 @@ mod tests {
         assert!(s.contains("on-demand baseline"));
         assert!(s.contains("Saving"));
         assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn fig2_bands_render_p5_p95() {
+        let od = Experiment::table1()
+            .named("od")
+            .spoton_off()
+            .ondemand()
+            .sweep()
+            .seed_range(0, 6)
+            .threads(2)
+            .run()
+            .unwrap();
+        let spot = Experiment::table1()
+            .named("spot")
+            .eviction_poisson(SimDuration::from_mins(75))
+            .transparent(SimDuration::from_mins(30))
+            .sweep()
+            .seed_range(0, 6)
+            .threads(2)
+            .run()
+            .unwrap();
+        let od_d = summarize("on-demand", &od);
+        let spot_d = summarize("spot + transparent", &spot);
+        let s = render_fig2_bands(&[
+            ("on-demand", &od_d),
+            ("spot + transparent", &spot_d),
+        ]);
+        assert!(s.contains("p5–p95"), "{s}");
+        assert!(s.contains("on-demand"), "{s}");
+        assert!(s.contains("Saving vs baseline"), "{s}");
+        assert!(s.contains('#'), "{s}");
+    }
+
+    #[test]
+    fn fig3_bands_render_both_methods() {
+        let mk = |app: bool| {
+            let e = Experiment::table1()
+                .named("f3b")
+                .eviction_poisson(SimDuration::from_mins(60))
+                .deadline(SimDuration::from_hours(30));
+            let e = if app {
+                e.app_native()
+            } else {
+                e.transparent(SimDuration::from_mins(30))
+            };
+            summarize(
+                if app { "app" } else { "tr" },
+                &e.sweep().seed_range(0, 5).threads(2).run().unwrap(),
+            )
+        };
+        let app = mk(true);
+        let tr = mk(false);
+        let s = render_fig3_bands(&[("poisson 60m", &app, &tr)]);
+        assert!(s.contains("poisson 60m / application"), "{s}");
+        assert!(s.contains("transparent"), "{s}");
+        assert!(s.contains("Time saved"), "{s}");
+        // band columns really carry order statistics
+        assert!(app.makespan_secs.p05 <= app.makespan_secs.p95);
     }
 
     #[test]

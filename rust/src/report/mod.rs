@@ -10,14 +10,22 @@
 //!   comparison for multi-pool fleet runs.
 //! * [`distribution`] — mean/percentile summaries over Monte Carlo
 //!   sweeps ([`crate::sim::sweep`]): distributions, not point estimates.
+//! * [`policy`] — fixed-vs-adaptive checkpoint-interval comparison
+//!   tables over per-controller sweep populations
+//!   ([`crate::policy`] controllers).
 
 pub mod table;
 pub mod table1;
 pub mod figures;
 pub mod fleet;
 pub mod distribution;
+pub mod policy;
 
 pub use distribution::{summarize, SweepDistributions};
+pub use policy::{
+    render_controller_comparison, summarize_controllers,
+    ControllerDistributions,
+};
 pub use fleet::{
     render_policy_comparison, render_pool_breakdown, render_price_timeline,
 };

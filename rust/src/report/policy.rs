@@ -1,0 +1,145 @@
+//! Fixed-vs-adaptive checkpoint-interval comparison over sweep
+//! populations.
+//!
+//! The paper's Table I fixes the transparent interval offline; the
+//! [`crate::policy`] controllers tune it online. This module reduces the
+//! per-controller populations a [`crate::sim::sweep::Sweep`] produces
+//! ([`Sweep::run_controllers`](crate::sim::Sweep::run_controllers)) into
+//! one comparison table — makespan p50/p95, cost mean/p95, lost steps,
+//! checkpoints taken — so "does Young/Daly beat the paper's interval?"
+//! is answered by distributions, not a single lucky seed
+//! (`examples/adaptive_interval.rs` is the headline driver).
+
+use super::distribution::{self, Summary, SweepDistributions};
+use super::table::TextTable;
+use crate::sim::sweep::ControllerSweep;
+use crate::util::fmt::{dollars, hms_f64 as hms};
+
+/// One controller's reduced sweep: the standard distribution summaries
+/// plus the checkpoint-activity metrics the interval controller directly
+/// drives.
+#[derive(Debug, Clone)]
+pub struct ControllerDistributions {
+    pub label: String,
+    pub dist: SweepDistributions,
+    /// Periodic (transparent) checkpoints per run.
+    pub periodic_ckpts: Summary,
+    /// Committed termination checkpoints per run.
+    pub termination_ckpts: Summary,
+}
+
+/// Reduce each controller's merged population (walks runs in seed order,
+/// like [`distribution::summarize`] — deterministic for a deterministic
+/// sweep).
+pub fn summarize_controllers(
+    sweeps: &[ControllerSweep],
+) -> Vec<ControllerDistributions> {
+    sweeps
+        .iter()
+        .map(|s| {
+            let periodic: Vec<f64> = s
+                .runs
+                .iter()
+                .map(|r| r.result.periodic_ckpts as f64)
+                .collect();
+            let termination: Vec<f64> = s
+                .runs
+                .iter()
+                .map(|r| r.result.termination_ok as f64)
+                .collect();
+            ControllerDistributions {
+                label: s.label.clone(),
+                dist: distribution::summarize(&s.label, &s.runs),
+                periodic_ckpts: Summary::from_samples(&periodic),
+                termination_ckpts: Summary::from_samples(&termination),
+            }
+        })
+        .collect()
+}
+
+/// The comparison table: one row per controller, the fixed baseline
+/// first by convention (whatever order the sweeps were run in).
+pub fn render_controller_comparison(
+    entries: &[ControllerDistributions],
+) -> String {
+    let mut t = TextTable::new(&[
+        "Controller",
+        "Completed",
+        "Makespan p50",
+        "Makespan p95",
+        "Cost mean",
+        "Cost p95",
+        "Lost steps",
+        "Ckpts/run",
+        "Term ckpts",
+    ]);
+    for e in entries {
+        t.row(&[
+            e.label.clone(),
+            format!("{}/{}", e.dist.completed, e.dist.runs),
+            hms(e.dist.makespan_secs.p50),
+            hms(e.dist.makespan_secs.p95),
+            dollars(e.dist.total_cost.mean),
+            dollars(e.dist.total_cost.p95),
+            format!("{:.1}", e.dist.lost_steps.mean),
+            format!("{:.1}", e.periodic_ckpts.mean),
+            format!("{:.1}", e.termination_ckpts.mean),
+        ]);
+    }
+    let mut out = t.render();
+    if let Some(fixed) =
+        entries.iter().find(|e| e.label == "fixed").filter(|_| entries.len() > 1)
+    {
+        for e in entries.iter().filter(|e| e.label != "fixed") {
+            let cost = 1.0 - e.dist.total_cost.mean / fixed.dist.total_cost.mean;
+            let p95 = 1.0
+                - e.dist.makespan_secs.p95 / fixed.dist.makespan_secs.p95;
+            out.push_str(&format!(
+                "  {} vs fixed: mean cost {:+.1}%, p95 makespan {:+.1}%\n",
+                e.label,
+                -100.0 * cost,
+                -100.0 * p95,
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::IntervalControllerCfg;
+    use crate::sim::experiment::Experiment;
+    use crate::simclock::SimDuration;
+
+    #[test]
+    fn summarizes_and_renders_a_controller_comparison() {
+        let sweeps = Experiment::table1()
+            .named("policy-report")
+            .eviction_poisson(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(30))
+            .deadline(SimDuration::from_hours(30))
+            .sweep()
+            .seed_range(0, 6)
+            .threads(2)
+            .run_controllers(&[
+                IntervalControllerCfg::Fixed,
+                IntervalControllerCfg::young_daly(),
+            ])
+            .unwrap();
+        let entries = summarize_controllers(&sweeps);
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].label, "fixed");
+        assert_eq!(entries[0].dist.runs, 6);
+        assert!(entries[0].periodic_ckpts.mean > 0.0);
+        // young-daly tightens the cadence under this storm
+        assert!(
+            entries[1].periodic_ckpts.mean > entries[0].periodic_ckpts.mean
+        );
+        let text = render_controller_comparison(&entries);
+        assert!(text.contains("fixed"), "{text}");
+        assert!(text.contains("young-daly"), "{text}");
+        assert!(text.contains("Makespan p95"), "{text}");
+        assert!(text.contains("vs fixed"), "{text}");
+    }
+}

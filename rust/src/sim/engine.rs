@@ -29,6 +29,13 @@
 //!   placement re-decides at the new price and a straddling instance is
 //!   billed per price segment.
 //!
+//! The periodic-checkpoint cadence is decided at each `BoundaryReached`
+//! by an [`IntervalController`] ([`crate::policy`]): the engine feeds it
+//! every launch, eviction, restore, checkpoint cost and price epoch, and
+//! asks it for the due interval instead of hard-coding
+//! `CheckpointPolicy::periodic_due` — a `FixedInterval` controller (the
+//! default) reproduces that static test byte for byte.
+//!
 //! Every schedule is tracked by its cancellation token; when an instance
 //! dies or the run finishes, the engine cancels that run's pending timers
 //! individually ([`EventQueue::cancel`]) instead of `clear()`-ing the
@@ -67,6 +74,7 @@ use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
 use crate::coordinator::policy::CheckpointPolicy;
 use crate::coordinator::restart::{RestartManager, RestoreReport};
 use crate::metrics::{EventKind, Timeline};
+use crate::policy::{build_controller, IntervalController, PolicyCtx};
 use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
 use crate::storage::SharedStore;
 use crate::workload::{Snapshot, StepOutcome, Workload};
@@ -150,6 +158,17 @@ pub struct Engine<'a> {
     price_tokens: Vec<u64>,
 
     policy: CheckpointPolicy,
+    /// Tunes the periodic-checkpoint cadence online
+    /// ([`crate::policy`]): consulted at every step boundary, fed by the
+    /// launch/eviction/price observations below. The default
+    /// `FixedInterval` reproduces `CheckpointPolicy::periodic_due`
+    /// byte for byte.
+    controller: Box<dyn IntervalController>,
+    /// A-priori cost of one periodic checkpoint write (the modeled
+    /// snapshot transfer time) — the δ estimate handed to controllers
+    /// via `PolicyCtx`; observed commit costs reach them through the
+    /// `observe_ckpt_cost` hook instead of mutating this.
+    ckpt_cost_est: SimDuration,
     billing: BillingMeter,
     timeline: Timeline,
     metadata: MetadataService,
@@ -200,10 +219,35 @@ impl<'a> Engine<'a> {
         }
         let fleet = Fleet::from_scenario(cfg)?;
         let placement = build_policy(&cfg.fleet.placement)?;
+        // The policy carries the controller selection; the live
+        // controller is built from that one copy so the two can't drift.
+        let policy = CheckpointPolicy::new(cfg.checkpoint.clone())
+            .with_compression(cfg.compress_termination)
+            .with_controller(cfg.adaptive.clone());
+        // Builder-API mirror of the `[checkpoint.adaptive]` parse rule:
+        // an adaptive controller without a periodic interval to tune
+        // would silently never be consulted.
+        if policy.periodic_interval().is_none()
+            && *policy.controller() != crate::config::IntervalControllerCfg::Fixed
+        {
+            anyhow::bail!(
+                "adaptive interval controller '{}' requires the transparent \
+                 checkpoint method (it tunes the periodic interval)",
+                policy.controller().label()
+            );
+        }
+        let controller = build_controller(policy.controller())?;
+        // A-priori checkpoint-cost estimate from the modeled image size
+        // (the same estimate a CRIU pre-dump makes); controllers refine
+        // it from observed commits via `observe_ckpt_cost`.
+        let ckpt_cost_est = store.transfer_cost(
+            (cfg.workload.state_gib * (1u64 << 30) as f64) as u64,
+        );
         let spoton = cfg.coordinator_attached;
         Ok(Self {
-            policy: CheckpointPolicy::new(cfg.checkpoint.clone())
-                .with_compression(cfg.compress_termination),
+            policy,
+            controller,
+            ckpt_cost_est,
             overhead_factor: if spoton {
                 1.0 + cfg.cloud.coordinator_overhead
             } else {
@@ -373,6 +417,7 @@ impl<'a> Engine<'a> {
     fn on_instance_provisioned(&mut self) -> Result<()> {
         let now = self.clock.now();
         let inst_id = self.fleet.launch(now).id.to_string();
+        self.controller.observe_launch(self.fleet.active_pool(), now);
         self.timeline.record_with(now, EventKind::InstanceLaunch, || {
             if self.fleet.is_multi_pool() {
                 format!(
@@ -441,6 +486,7 @@ impl<'a> Engine<'a> {
     fn on_restore_done(&mut self, report: RestoreReport) -> Result<()> {
         let now = self.clock.now();
         self.restores += 1;
+        self.controller.observe_restore(now);
         self.lost_steps += self
             .max_steps_seen
             .saturating_sub(report.resumed_total_steps);
@@ -474,7 +520,7 @@ impl<'a> Engine<'a> {
 
         // periodic transparent checkpoint at step boundary (the snapshot
         // buffer is reused across every checkpoint of the run)
-        if self.spoton && self.policy.periodic_due(now, self.last_ckpt_at) {
+        if self.spoton && self.periodic_due(now) {
             self.workload.snapshot_into(&mut self.snap_buf)?;
             let outcome = self.writer.write(
                 self.store,
@@ -492,6 +538,28 @@ impl<'a> Engine<'a> {
         }
 
         self.decide_step()
+    }
+
+    /// Is a periodic checkpoint due at this boundary? The interval
+    /// controller decides: it sees the configured interval, the modeled
+    /// checkpoint cost, and the active pool's current price factor, and
+    /// answers with the gap the due test should use. A `FixedInterval`
+    /// controller always answers `base_interval`, making this exactly
+    /// `CheckpointPolicy::periodic_due` — the legacy-equivalence pin.
+    fn periodic_due(&mut self, now: SimTime) -> bool {
+        let Some(base) = self.policy.periodic_interval() else {
+            return false;
+        };
+        let pool = self.fleet.active_pool();
+        let ctx = PolicyCtx {
+            now,
+            last_ckpt: self.last_ckpt_at,
+            base_interval: base,
+            ckpt_cost: self.ckpt_cost_est,
+            pool,
+            price_factor: self.fleet.price_factor(pool),
+        };
+        now.since(self.last_ckpt_at) >= self.controller.next_interval(&ctx)
     }
 
     /// Commit to the next step — or, when the posted notice / reclaim
@@ -589,6 +657,11 @@ impl<'a> Engine<'a> {
         outcome: WriteOutcome,
     ) -> Result<()> {
         let now = self.clock.now();
+        if periodic {
+            // the observed write cost (includes manifest/commit
+            // latency) refines the controllers' a-priori δ estimate
+            self.controller.observe_ckpt_cost(outcome.cost());
+        }
         if let Some(manifest) = outcome.committed() {
             if periodic {
                 self.periodic_ckpts += 1;
@@ -727,6 +800,7 @@ impl<'a> Engine<'a> {
         let terminated = self.fleet.terminate_current(now, &mut self.billing);
         if let Some((_, pool)) = terminated {
             self.fleet.note_eviction(pool);
+            self.controller.observe_eviction(pool, now);
         }
         self.metadata.clear_resource(&inst.id);
         self.evictions += 1;
@@ -750,6 +824,7 @@ impl<'a> Engine<'a> {
             (points[idx], points.get(idx + 1).copied())
         };
         let (old, new) = self.fleet.apply_price_factor(pool, point.factor, now);
+        self.controller.observe_price(pool, point.factor);
         self.timeline.record_with(now, EventKind::PoolPriceChanged, || {
             format!(
                 "{}: ${old:.4}/h -> ${new:.4}/h (x{})",
@@ -925,6 +1000,66 @@ mod tests {
         let attributed: f64 =
             r.pool_stats.iter().map(|p| p.compute_cost).sum();
         assert!((attributed - r.compute_cost).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_controller_requires_transparent_method() {
+        use crate::config::IntervalControllerCfg;
+        // The builder API enforces the same pairing rule the
+        // [checkpoint.adaptive] parser does: an adaptive controller on a
+        // run with no periodic interval is an error, not a silent no-op.
+        let err = Experiment::table1()
+            .named("adaptive-mismatch")
+            .app_native()
+            .adaptive(IntervalControllerCfg::young_daly())
+            .run_sleeper()
+            .unwrap_err();
+        assert!(err.to_string().contains("transparent"), "{err}");
+        // Fixed (the identity) stays valid with every method
+        assert!(Experiment::table1()
+            .adaptive(IntervalControllerCfg::Fixed)
+            .run_sleeper()
+            .is_ok());
+    }
+
+    #[test]
+    fn young_daly_controller_tightens_cadence_under_a_storm() {
+        use crate::config::IntervalControllerCfg;
+        // Same storm, same 30-minute configured interval, and a 10 s
+        // notice the 3 GiB image can never beat (termination checkpoints
+        // all fail — periodic cadence is the only protection): evictions
+        // at 40 min of uptime cost the fixed policy the 10 min since its
+        // last 30-min checkpoint, while Young/Daly (δ ≈ 12 s, MTBF
+        // estimate collapsing toward 40 min) tightens to a few minutes
+        // and loses far less per eviction.
+        let storm = |cfg: IntervalControllerCfg| {
+            Experiment::table1()
+                .named("adaptive-smoke")
+                .eviction_every(SimDuration::from_mins(40))
+                .transparent(SimDuration::from_mins(30))
+                .notice(SimDuration::from_secs(10))
+                .deadline(SimDuration::from_hours(30))
+                .adaptive(cfg)
+                .run_sleeper()
+                .unwrap()
+        };
+        let fixed = storm(IntervalControllerCfg::Fixed);
+        let adaptive = storm(IntervalControllerCfg::young_daly());
+        assert!(fixed.completed && adaptive.completed);
+        assert!(
+            adaptive.periodic_ckpts > fixed.periodic_ckpts,
+            "young-daly {} ckpts vs fixed {}",
+            adaptive.periodic_ckpts,
+            fixed.periodic_ckpts
+        );
+        assert!(
+            adaptive.lost_steps < fixed.lost_steps,
+            "young-daly lost {} steps vs fixed {}",
+            adaptive.lost_steps,
+            fixed.lost_steps
+        );
+        // both still land the same final state
+        assert_eq!(adaptive.final_fingerprint, fixed.final_fingerprint);
     }
 
     #[test]

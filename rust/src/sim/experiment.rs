@@ -9,8 +9,8 @@
 //! three-layer stack; used by the headline benches and examples).
 
 pub use crate::config::{
-    CheckpointMethodCfg, EvictionPlanCfg, PlacementPolicyCfg, PoolCfg,
-    PoolPricingCfg,
+    CheckpointMethodCfg, EvictionPlanCfg, IntervalControllerCfg,
+    PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
 };
 use crate::config::ScenarioConfig;
 use crate::runtime::Runtime;
@@ -101,6 +101,14 @@ impl Experiment {
     /// the notice window (`checkpoint::compress` rescue path).
     pub fn compress_termination(mut self, on: bool) -> Self {
         self.cfg.compress_termination = on;
+        self
+    }
+
+    /// Adaptive checkpoint-interval controller ([`crate::policy`]) tuning
+    /// the transparent cadence online; the default
+    /// [`IntervalControllerCfg::Fixed`] keeps the configured interval.
+    pub fn adaptive(mut self, cfg: IntervalControllerCfg) -> Self {
+        self.cfg.adaptive = cfg;
         self
     }
 

@@ -43,7 +43,7 @@ pub mod sweep;
 
 pub use engine::SimEvent;
 pub use experiment::Experiment;
-pub use sweep::{SeededRun, Sweep};
+pub use sweep::{ControllerSweep, SeededRun, Sweep};
 
 use crate::cloud::billing::Invoice;
 use crate::cloud::fleet::PoolStats;

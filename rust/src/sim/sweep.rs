@@ -39,6 +39,7 @@
 
 use super::experiment::Experiment;
 use super::RunResult;
+use crate::config::IntervalControllerCfg;
 use crate::metrics::RecordLevel;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -178,6 +179,37 @@ impl Sweep {
     }
 }
 
+/// One interval controller's merged sweep: the controller label and the
+/// full seed-ordered population it produced.
+#[derive(Debug)]
+pub struct ControllerSweep {
+    pub label: String,
+    pub runs: Vec<SeededRun>,
+}
+
+impl Sweep {
+    /// Run the same seed list once per interval controller — the
+    /// controller analogue of sweeping placement policies: every entry
+    /// reruns the base experiment with only `[checkpoint.adaptive]`
+    /// swapped, so the merged populations differ by the controller and
+    /// nothing else. Output order follows `controllers`; each entry's
+    /// runs merge by seed position exactly like [`Sweep::run`], so the
+    /// whole comparison is byte-identical at any thread count.
+    pub fn run_controllers(
+        &self,
+        controllers: &[IntervalControllerCfg],
+    ) -> Result<Vec<ControllerSweep>> {
+        controllers
+            .iter()
+            .map(|cfg| {
+                let mut sweep = self.clone();
+                sweep.base.cfg.adaptive = cfg.clone();
+                Ok(ControllerSweep { label: cfg.label(), runs: sweep.run()? })
+            })
+            .collect()
+    }
+}
+
 /// Canonical digest of everything a run produced — every `RunResult`
 /// field (costs bitwise), per-pool attribution, and the full timeline.
 /// Two runs are byte-identical iff their digests match; the determinism
@@ -273,6 +305,32 @@ mod tests {
         assert_eq!(
             r.timeline.count(crate::metrics::EventKind::InstanceEvicted),
             r.evictions as usize
+        );
+    }
+
+    #[test]
+    fn controller_sweeps_share_seeds_and_differ_by_controller() {
+        let sweeps = base()
+            .sweep()
+            .seeds([1, 2])
+            .threads(1)
+            .run_controllers(&[
+                IntervalControllerCfg::Fixed,
+                IntervalControllerCfg::young_daly(),
+            ])
+            .unwrap();
+        assert_eq!(sweeps.len(), 2);
+        assert_eq!(sweeps[0].label, "fixed");
+        assert_eq!(sweeps[1].label, "young-daly");
+        for s in &sweeps {
+            let seeds: Vec<u64> = s.runs.iter().map(|r| r.seed).collect();
+            assert_eq!(seeds, [1, 2], "{}: seed lists must match", s.label);
+        }
+        // on a stormy base the controller really changes the run
+        assert_ne!(
+            run_digest(&sweeps[0].runs[0].result),
+            run_digest(&sweeps[1].runs[0].result),
+            "young-daly must deviate from fixed under evictions"
         );
     }
 

@@ -14,6 +14,14 @@ pub fn hms(total_secs: u64) -> String {
     }
 }
 
+/// [`hms`] for a fractional seconds count (distribution summaries carry
+/// f64 metrics): rounds to millisecond precision like
+/// [`SimDuration::from_secs_f64`](crate::simclock::SimDuration), clamps
+/// negatives to zero.
+pub fn hms_f64(secs: f64) -> String {
+    crate::simclock::SimDuration::from_secs_f64(secs.max(0.0)).hms()
+}
+
 /// Parse `H:MM:SS` / `MM:SS` / `SS` into whole seconds.
 pub fn parse_hms(s: &str) -> Option<u64> {
     let parts: Vec<&str> = s.split(':').collect();
@@ -68,6 +76,13 @@ mod tests {
         assert_eq!(hms(0), "0:00");
         assert_eq!(hms(59), "0:59");
         assert_eq!(hms(3600), "1:00:00");
+    }
+
+    #[test]
+    fn hms_f64_rounds_and_clamps() {
+        assert_eq!(hms_f64(11006.0), "3:03:26");
+        assert_eq!(hms_f64(59.9996), "1:00"); // rounds at ms precision
+        assert_eq!(hms_f64(-5.0), "0:00"); // negatives clamp to zero
     }
 
     #[test]

@@ -250,6 +250,33 @@ fn constant_price_trace_is_byte_identical_to_legacy() {
 }
 
 #[test]
+fn fixed_interval_controller_is_byte_identical_to_legacy() {
+    // The adaptive-interval subsystem's identity element: an explicit
+    // `FixedInterval` controller must leave every decision exactly where
+    // the legacy loop's `periodic_due` test put it — same checkpoints at
+    // the same instants, same billing bits, same timeline — across fixed
+    // and seeded-Poisson eviction storms. The same discipline as the
+    // constant-price-trace pin: the new subsystem is a strict superset.
+    use spoton::config::IntervalControllerCfg;
+    let exp = Experiment::table1()
+        .named("ctl-fixed")
+        .eviction_every(SimDuration::from_mins(90))
+        .transparent(SimDuration::from_mins(30))
+        .adaptive(IntervalControllerCfg::Fixed);
+    assert_equivalent("ctl-fixed", &exp);
+    for seed in 1u64..=3 {
+        let exp = Experiment::table1()
+            .named("ctl-fixed-poisson")
+            .eviction_poisson(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(15))
+            .deadline(SimDuration::from_hours(30))
+            .adaptive(IntervalControllerCfg::Fixed)
+            .seed(seed);
+        assert_equivalent(&format!("ctl-fixed-seed{seed}"), &exp);
+    }
+}
+
+#[test]
 fn short_notice_failed_termination_checkpoints() {
     let exp = Experiment::table1()
         .named("short-notice")

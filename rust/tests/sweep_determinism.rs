@@ -141,6 +141,72 @@ fn traced_pool_sweeps_merge_deterministically() {
 }
 
 #[test]
+fn adaptive_controller_sweeps_merge_deterministically() {
+    // Adaptive interval controllers on a traced multi-pool market: the
+    // Young/Daly estimator and the cost-aware price scaling are pure
+    // functions of the run's own observations, so per-controller sweeps
+    // must merge byte-identically at any thread count — and the
+    // controllers must actually diverge from the fixed baseline.
+    use spoton::cloud::trace::{PricePoint, PriceTrace};
+    use spoton::config::{
+        EvictionPlanCfg, IntervalControllerCfg, PlacementPolicyCfg, PoolCfg,
+        PoolPricingCfg,
+    };
+    let spike = PriceTrace::new(vec![
+        PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+        PricePoint { offset: SimDuration::from_mins(75), factor: 1.6 },
+    ])
+    .expect("valid trace");
+    let exp = Experiment::table1()
+        .named("adaptive-determinism")
+        .transparent(SimDuration::from_mins(30))
+        .deadline(SimDuration::from_hours(30))
+        .pool(
+            PoolCfg::named("spiky")
+                .pricing(PoolPricingCfg::Trace(spike))
+                .eviction(EvictionPlanCfg::Poisson {
+                    mean: SimDuration::from_mins(40),
+                }),
+        )
+        .pool(PoolCfg::named("steady"))
+        .placement(PlacementPolicyCfg::CheapestSpot);
+    let controllers = [
+        IntervalControllerCfg::Fixed,
+        IntervalControllerCfg::young_daly(),
+        IntervalControllerCfg::cost_aware(1.0),
+    ];
+    let sweep = exp.sweep().seed_range(0, 10);
+    let per_thread: Vec<Vec<(String, Vec<(u64, String)>)>> = [1, 2, 8]
+        .into_iter()
+        .map(|threads| {
+            sweep
+                .clone()
+                .threads(threads)
+                .run_controllers(&controllers)
+                .unwrap()
+                .into_iter()
+                .map(|cs| (cs.label.clone(), digests(&cs.runs)))
+                .collect()
+        })
+        .collect();
+    assert_eq!(per_thread[0], per_thread[1], "threads=2 diverged");
+    assert_eq!(per_thread[0], per_thread[2], "threads=8 diverged");
+    // labels arrive in controller order
+    let labels: Vec<&str> =
+        per_thread[0].iter().map(|(l, _)| l.as_str()).collect();
+    assert_eq!(labels, ["fixed", "young-daly", "cost-aware/1"]);
+    // the adaptive populations genuinely differ from the fixed baseline
+    assert_ne!(
+        per_thread[0][0].1, per_thread[0][1].1,
+        "young-daly never deviated from fixed"
+    );
+    assert_ne!(
+        per_thread[0][1].1, per_thread[0][2].1,
+        "cost-aware never deviated from young-daly on a moving market"
+    );
+}
+
+#[test]
 fn multi_pool_sweeps_merge_deterministically() {
     use spoton::config::{EvictionPlanCfg, PlacementPolicyCfg, PoolCfg};
     let exp = Experiment::table1()
