@@ -1,0 +1,162 @@
+//! A contended cluster under a price spike: the multiplexed engine's
+//! headline scenario.
+//!
+//! ```bash
+//! cargo run --release --example contended_cluster
+//! ```
+//!
+//! Forty jobs arrive five minutes apart on a two-pool fleet:
+//!
+//! * `east` — capacity 8, 20% below catalog until a capacity crunch
+//!   more than doubles the price at the 60-minute mark; the crunch
+//!   clears at minute 180;
+//! * `west` — capacity 2, steady at catalog.
+//!
+//! Pre-spike, `CheapestSpot` admits everyone into east and the cluster
+//! runs without queueing. The spike flips the price order: arrivals
+//! funnel into west, west's two slots saturate almost immediately, and
+//! the admission queue grows for the whole spike — east's slots sit
+//! idle because the policy (correctly) refuses to place new work at the
+//! spiked price, and FIFO head-of-line blocking holds the line behind
+//! the west-bound head. When the spike clears, placements flip back to
+//! east's eight slots and the backlog drains. Every admission decision,
+//! queue event and price epoch comes off **one** event queue around
+//! **one** live fleet — the cluster-wide view the per-run engine could
+//! never see.
+
+use spoton::cloud::trace::{PricePoint, PriceTrace};
+use spoton::config::{ClusterCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg};
+use spoton::metrics::EventKind;
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+
+const SPIKE_START_MIN: u64 = 60;
+const SPIKE_END_MIN: u64 = 180;
+
+fn main() -> anyhow::Result<()> {
+    let spike = PriceTrace::new(vec![
+        PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+        PricePoint {
+            offset: SimDuration::from_mins(SPIKE_START_MIN),
+            factor: 2.0,
+        },
+        PricePoint {
+            offset: SimDuration::from_mins(SPIKE_END_MIN),
+            factor: 0.8,
+        },
+    ])?;
+    let mut exp = Experiment::table1()
+        .named("contended-cluster")
+        .scale_stages(0.1)
+        .transparent(SimDuration::from_mins(10))
+        .deadline(SimDuration::from_hours(400))
+        .pool(
+            PoolCfg::named("east")
+                .capacity(8)
+                .pricing(PoolPricingCfg::Trace(spike)),
+        )
+        .pool(PoolCfg::named("west").capacity(2))
+        .placement(PlacementPolicyCfg::CheapestSpot);
+    exp.cfg.cluster = Some(ClusterCfg::with_count(40).arrival(
+        spoton::config::ArrivalCfg::Uniform {
+            spacing: SimDuration::from_mins(5),
+        },
+    ));
+
+    let r = exp.run_cluster_sleeper()?;
+    println!("{}\n", r.summary());
+    println!(
+        "peak in flight: {} cluster-wide, {:?} per pool (east cap 8, west \
+         cap 2)",
+        r.peak_in_flight, r.peak_in_flight_per_pool
+    );
+
+    // every job eventually finished: the queue drained after the spike
+    assert_eq!(r.completed_jobs(), 40, "queue must drain: {}", r.summary());
+    assert!(r.timeline.is_monotone());
+    assert!(r.peak_in_flight_per_pool[0] <= 8);
+    assert!(r.peak_in_flight_per_pool[1] <= 2);
+
+    // pre-spike the cluster is underloaded: nobody queues before the
+    // price flips
+    let spike_start = SimDuration::from_mins(SPIKE_START_MIN).as_millis();
+    let spike_end = SimDuration::from_mins(SPIKE_END_MIN).as_millis();
+    let queued_at: Vec<u64> = r
+        .timeline
+        .events()
+        .iter()
+        .filter(|e| e.kind == EventKind::JobQueued)
+        .map(|e| e.at.as_millis())
+        .collect();
+    assert!(!queued_at.is_empty(), "the spike must force queueing");
+    assert!(
+        queued_at.iter().all(|&at| at > spike_start),
+        "no queueing before the spike: {}",
+        r.summary()
+    );
+    let queued_in_spike = queued_at
+        .iter()
+        .filter(|&&at| at > spike_start && at < spike_end)
+        .count();
+    println!(
+        "\n{} jobs queued during the spike window ({}–{} min), {} queued \
+         admissions total",
+        queued_in_spike,
+        SPIKE_START_MIN,
+        SPIKE_END_MIN,
+        r.queued_admissions()
+    );
+    assert!(
+        queued_in_spike >= 8,
+        "the backlog must genuinely build during the spike"
+    );
+
+    // while east is spiked, every queue admission lands in west; once
+    // the spike clears, placements flip back to east and the backlog
+    // drains through its eight slots
+    let mut west_during_spike = 0usize;
+    let mut east_after_spike = 0usize;
+    for e in r.timeline.events() {
+        if e.kind != EventKind::JobAdmitted {
+            continue;
+        }
+        let at = e.at.as_millis();
+        if at > spike_start && at < spike_end {
+            assert!(
+                e.detail.ends_with("-> west"),
+                "mid-spike admission must avoid the spiked pool: {} @ {at}",
+                e.detail
+            );
+            west_during_spike += 1;
+        } else if at > spike_end && e.detail.ends_with("-> east") {
+            east_after_spike += 1;
+        }
+    }
+    assert!(
+        west_during_spike > 0,
+        "west must take the mid-spike spillover"
+    );
+    assert!(
+        east_after_spike > 0,
+        "the post-spike drain must flow back into east"
+    );
+    println!(
+        "{west_during_spike} mid-spike admissions into west, \
+         {east_after_spike} post-spike admissions back into east"
+    );
+
+    // the backlog outlived the spike: the last job finished well after
+    // the price recovered
+    assert!(
+        r.makespan > SimDuration::from_mins(SPIKE_END_MIN),
+        "drain must extend past the spike ({} makespan)",
+        r.makespan
+    );
+    println!(
+        "makespan {} — queue grew for the whole spike, drained in {} after \
+         the price recovered",
+        r.makespan,
+        r.makespan - SimDuration::from_mins(SPIKE_END_MIN)
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Multiplexed cluster engine throughput: the perf figure behind the
+//! contended-fleet tentpole.
+//!
+//! One thousand jobs share a capacity-bound pool through the
+//! `sim::cluster` engine — every job an interleaved stream of
+//! subject-tagged events on **one** queue around **one** live fleet —
+//! and the same thousand-job workload replays through the older
+//! one-engine-per-attempt `sched::RequeueScheduler` path for the
+//! apples-to-apples wall-clock comparison. Results land in
+//! `BENCH_cluster.json`:
+//!
+//! * `cluster.events_per_sec` — sustained events/sec through the
+//!   multiplexed engine (events popped / mean wall-clock);
+//! * `requeue.run_1000_jobs` — the baseline's wall-clock on the same
+//!   jobs with `slots == capacity`;
+//! * `speedup_vs_requeue` — multiplexed over baseline (target >= 2x:
+//!   the baseline rebuilds a full engine per attempt, so every eviction
+//!   re-pays config cloning and store setup the multiplexed engine
+//!   amortizes).
+
+use spoton::config::ClusterCfg;
+use spoton::metrics::RecordLevel;
+use spoton::sched::{Job, RequeueScheduler};
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+use spoton::util::bench::{bench_fn, section, BenchReport};
+
+const JOBS: usize = 1000;
+const CAPACITY: u32 = 32;
+
+/// The shared per-job scenario: short scaled stages so the bench stays
+/// in the engine hot path, a storm mean well under the job length so
+/// evictions (and therefore requeue attempts) genuinely happen, and the
+/// lean `Counts` metrics level both engines use in sweeps.
+fn base() -> Experiment {
+    Experiment::table1()
+        .named("cluster-bench")
+        .scale_stages(0.01)
+        .eviction_poisson(SimDuration::from_mins(6))
+        .transparent(SimDuration::from_mins(5))
+        .deadline(SimDuration::from_hours(4000))
+        .metrics(RecordLevel::Counts)
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut report = BenchReport::new("cluster");
+    report.value("jobs", JOBS as u64);
+    report.value("capacity", CAPACITY as u64);
+
+    section(&format!(
+        "multiplexed cluster engine ({JOBS} jobs, capacity {CAPACITY})"
+    ));
+    let mut exp = base();
+    exp.cfg.cluster =
+        Some(ClusterCfg::with_count(JOBS).capacity(CAPACITY));
+    // one untimed run for the workload-shape numbers
+    let probe = exp.run_cluster_sleeper()?;
+    assert_eq!(
+        probe.completed_jobs(),
+        JOBS,
+        "bench scenario must complete: {}",
+        probe.summary()
+    );
+    println!("  {}", probe.summary());
+    let events = probe.events_processed;
+    let stats = bench_fn(1, 3, || {
+        std::hint::black_box(exp.run_cluster_sleeper().unwrap());
+    });
+    let events_per_sec = events as f64 / stats.mean.as_secs_f64();
+    println!("  run          {stats}");
+    println!(
+        "  -> {:.2} Mevents/s sustained ({events} events per run)",
+        events_per_sec / 1e6
+    );
+    report.stat("cluster.run_1000_jobs", &stats);
+    report.value("cluster.events_processed", events);
+    report.value("cluster.events_per_sec", events_per_sec);
+    report.value(
+        "cluster.queued_admissions",
+        probe.queued_admissions() as u64,
+    );
+
+    section(&format!(
+        "requeue-scheduler baseline ({JOBS} jobs, slots {CAPACITY})"
+    ));
+    // The pre-tentpole cluster idiom: `slots` concurrent jobs over a
+    // shared fleet config — but every attempt deep-clones the scenario,
+    // rebuilds the fleet (pool state resets between attempts) and spins
+    // a fresh engine, which is exactly the setup cost the multiplexed
+    // engine amortizes into one long-lived cluster.
+    let job_exp = base();
+    let mk_jobs = || -> Vec<Job> {
+        (0..JOBS as u32)
+            .map(|i| Job {
+                id: i,
+                name: format!("job-{i}"),
+                experiment: job_exp.clone().seed(i as u64),
+            })
+            .collect()
+    };
+    let shared_fleet = spoton::config::FleetCfg {
+        pools: vec![spoton::config::PoolCfg::named("pool-0").eviction(
+            spoton::config::EvictionPlanCfg::Poisson {
+                mean: SimDuration::from_mins(6),
+            },
+        )],
+        placement: spoton::config::PlacementPolicyCfg::Sticky,
+    };
+    let sched = RequeueScheduler {
+        requeue_delay: SimDuration::from_secs(300),
+        max_attempts: 16,
+        slots: CAPACITY,
+        fleet: Some(shared_fleet),
+    };
+    let records = sched.run(mk_jobs())?;
+    assert_eq!(records.len(), JOBS);
+    assert!(
+        records.iter().all(|r| r.completed),
+        "baseline must complete the same workload"
+    );
+    let baseline = bench_fn(1, 3, || {
+        std::hint::black_box(sched.run(mk_jobs()).unwrap());
+    });
+    println!("  run          {baseline}");
+    report.stat("requeue.run_1000_jobs", &baseline);
+
+    let speedup =
+        baseline.mean.as_secs_f64() / stats.mean.as_secs_f64();
+    println!(
+        "\nmultiplexed vs requeue baseline: {:.2}x wall-clock \
+         ({:?} vs {:?} mean)",
+        speedup, stats.mean, baseline.mean
+    );
+    report.value("speedup_vs_requeue", speedup);
+
+    report.write()?;
+    Ok(())
+}

@@ -275,6 +275,35 @@ fn main() -> anyhow::Result<()> {
     println!("  legacy loop  {legacy_stats}");
     report.stat("l3.legacy_loop", &legacy_stats);
 
+    section("L3 multiplexed cluster engine (64 jobs, capacity 8)");
+    // the contended-fleet hot path: one queue, one live fleet, jobs
+    // interleaving as subject-tagged events (full figure in
+    // `benches/perf_cluster.rs` / BENCH_cluster.json)
+    let mut cluster_exp = Experiment::table1()
+        .scale_stages(0.02)
+        .eviction_poisson(SimDuration::from_mins(40))
+        .transparent(SimDuration::from_mins(10))
+        .deadline(SimDuration::from_hours(4000))
+        .metrics(RecordLevel::Counts);
+    cluster_exp.cfg.cluster =
+        Some(spoton::config::ClusterCfg::with_count(64).capacity(8));
+    let probe = cluster_exp.run_cluster_sleeper()?;
+    let cluster_events = probe.events_processed;
+    let stats = bench_fn(2, 10, || {
+        std::hint::black_box(cluster_exp.run_cluster_sleeper().unwrap());
+    });
+    let eps = cluster_events as f64 / stats.mean.as_secs_f64();
+    println!("  64-job run   {stats}");
+    println!(
+        "  -> {:.2} Mevents/s sustained ({cluster_events} events per run, \
+         peak {} in flight)",
+        eps / 1e6,
+        probe.peak_in_flight
+    );
+    report.stat("l3.cluster_64jobs", &stats);
+    report.value("l3.cluster_events_per_run", cluster_events);
+    report.value("l3.cluster_events_per_sec", eps);
+
     let _ = std::fs::remove_dir_all(&nfs_dir);
     report.write()?;
     Ok(())

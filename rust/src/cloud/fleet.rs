@@ -272,13 +272,19 @@ impl Fleet {
             if pools.iter().any(|p: &Pool| p.name == pc.name) {
                 bail!("duplicate pool name '{}'", pc.name);
             }
+            // Mirror the TOML-side check for builder-built configs: a
+            // zero-capacity pool could never admit a job.
+            if pc.capacity == 0 {
+                bail!("pool '{}' capacity must be >= 1, got 0", pc.name);
+            }
             let book = PriceBook::default().with_price_factor(pc.price_factor)?;
             let mut set = ScaleSet::new(
                 &pc.vm_size,
                 pc.spot,
                 pc.provisioning_delay,
                 book,
-            )?;
+            )?
+            .with_capacity(pc.capacity);
             // Pool tags exist for multi-pool attribution; a 1-pool fleet
             // books exactly like the pre-fleet scale set so legacy-world
             // invoices (and the equivalence oracle's) stay byte-identical.
@@ -336,7 +342,12 @@ impl Fleet {
     /// `[eviction]` sections define (the paper's testbed).
     pub fn from_scenario(cfg: &ScenarioConfig) -> Result<Self> {
         if cfg.fleet.pools.is_empty() {
-            let pool = PoolCfg::from_cloud(&cfg.cloud, cfg.eviction.clone());
+            let mut pool = PoolCfg::from_cloud(&cfg.cloud, cfg.eviction.clone());
+            // A `[cluster]` section may widen the implicit pool so many
+            // jobs can run concurrently ([`crate::sim::cluster`]).
+            if let Some(cap) = cfg.cluster.as_ref().and_then(|c| c.capacity) {
+                pool.capacity = cap;
+            }
             Self::new(&[pool], cfg.seed)
         } else {
             Self::new(&cfg.fleet.pools, cfg.seed)
@@ -534,6 +545,92 @@ impl Fleet {
             })
             .collect()
     }
+
+    // --- cluster-engine accessors ---------------------------------------
+    //
+    // The multiplexed cluster engine ([`crate::sim::cluster`]) runs many
+    // instances at once, so the single-slot `current_pool` bookkeeping
+    // above does not apply: the cluster tracks its own instance-to-job
+    // mapping and addresses instances by id.
+
+    /// Launch an instance in `pool`, immediately Running at `now`
+    /// (cluster path). Uses the same fleet-wide id sequence as
+    /// [`Fleet::launch`] but leaves the single-slot state untouched.
+    /// Panics if the pool is at capacity — admission control must gate
+    /// launches ([`Fleet::pool_running`] vs [`Fleet::pool_capacity`]).
+    pub fn launch_in(&mut self, pool: PoolId, now: SimTime) -> &Instance {
+        let id = InstanceId(self.next_id);
+        self.next_id += 1;
+        self.total_launched += 1;
+        self.pools[pool.0].set.launch_with_id(id, now)
+    }
+
+    /// Eviction-notice offset for the instance just launched in `pool`,
+    /// drawn from that pool's plan (cluster path). Call once per launch,
+    /// in launch order — the draw sequence is per pool, so a 1-pool
+    /// single-job cluster replays [`Fleet::next_eviction_offset`]'s
+    /// draws exactly.
+    pub fn next_eviction_offset_in(
+        &mut self,
+        pool: PoolId,
+    ) -> Option<SimDuration> {
+        self.pools[pool.0].plan.next_eviction_offset()
+    }
+
+    /// Terminate instance `id` in `pool` at `now`, booking its uptime
+    /// (cluster path — the by-id sibling of [`Fleet::terminate_current`]
+    /// with the identical static/piecewise billing split). Returns
+    /// `false` if no such instance runs there.
+    pub fn terminate_in(
+        &mut self,
+        pool: PoolId,
+        id: InstanceId,
+        now: SimTime,
+        billing: &mut BillingMeter,
+    ) -> bool {
+        let multi = self.is_multi_pool();
+        let p = &mut self.pools[pool.0];
+        if !p.traced {
+            return p.set.terminate(id, now, billing).is_some();
+        }
+        let Some(inst) = p.set.reclaim_unbilled(id, now) else {
+            return false;
+        };
+        let base = p
+            .set
+            .price_book()
+            .lookup(&inst.vm_size)
+            .expect("validated at launch")
+            .price_per_hour(inst.spot);
+        billing.book_instance_piecewise(
+            if multi { Some(p.name.as_str()) } else { None },
+            &inst.id.to_string(),
+            &inst.vm_size,
+            inst.spot,
+            inst.started_at,
+            now,
+            base,
+            &p.price_epochs,
+        );
+        true
+    }
+
+    /// `pool`'s configured maximum number of concurrent instances.
+    pub fn pool_capacity(&self, pool: PoolId) -> u32 {
+        self.pools[pool.0].set.capacity()
+    }
+
+    /// Instances currently running in `pool`.
+    pub fn pool_running(&self, pool: PoolId) -> u32 {
+        self.pools[pool.0].set.running_count() as u32
+    }
+
+    /// `pool`'s provisioning delay. The cluster engine applies the
+    /// "first launch free" rule *per job* rather than fleet-wide, so it
+    /// needs the raw delay instead of [`Fleet::ready_at`].
+    pub fn pool_provisioning_delay(&self, pool: PoolId) -> SimDuration {
+        self.pools[pool.0].set.provisioning_delay()
+    }
 }
 
 #[cfg(test)]
@@ -599,6 +696,10 @@ mod tests {
         assert!(Fleet::new(&bad_size, 1).is_err());
         let bad_factor = vec![PoolCfg::named("a").price_factor(-1.0)];
         assert!(Fleet::new(&bad_factor, 1).is_err());
+        let zero_cap = vec![PoolCfg::named("tiny").capacity(0)];
+        let err = Fleet::new(&zero_cap, 1).unwrap_err();
+        assert!(err.to_string().contains("'tiny'"), "{err}");
+        assert!(err.to_string().contains("capacity"), "{err}");
         let mut fleet = Fleet::new(&three_pools(), 1).unwrap();
         assert!(fleet.set_active(PoolId(3)).is_err());
     }
@@ -774,6 +875,89 @@ mod tests {
         );
         // default scenario has no evictions
         assert_eq!(fleet.next_eviction_offset(), None);
+    }
+
+    #[test]
+    fn cluster_accessors_run_many_instances_per_pool() {
+        let cfgs = vec![
+            PoolCfg::named("wide").capacity(3),
+            PoolCfg::named("narrow"),
+        ];
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        assert_eq!(fleet.pool_capacity(PoolId(0)), 3);
+        assert_eq!(fleet.pool_capacity(PoolId(1)), 1);
+        assert_eq!(
+            fleet.pool_provisioning_delay(PoolId(0)),
+            PoolCfg::named("wide").provisioning_delay
+        );
+
+        let a = fleet.launch_in(PoolId(0), SimTime::ZERO).id;
+        let b = fleet.launch_in(PoolId(0), SimTime::ZERO).id;
+        let c = fleet.launch_in(PoolId(1), SimTime::ZERO).id;
+        // one fleet-wide id sequence, shared with the single-slot path
+        assert_eq!((a, b, c), (InstanceId(0), InstanceId(1), InstanceId(2)));
+        assert_eq!(fleet.pool_running(PoolId(0)), 2);
+        assert_eq!(fleet.pool_running(PoolId(1)), 1);
+        assert_eq!(fleet.total_launched(), 3);
+        // the single-slot view stays untouched
+        assert!(fleet.current().is_none());
+
+        // terminate out of launch order, by id
+        let mut billing = BillingMeter::new();
+        assert!(fleet.terminate_in(
+            PoolId(0),
+            b,
+            SimTime::from_secs(3600),
+            &mut billing
+        ));
+        assert_eq!(fleet.pool_running(PoolId(0)), 1);
+        assert!(
+            !fleet.terminate_in(
+                PoolId(0),
+                b,
+                SimTime::from_secs(3600),
+                &mut billing
+            ),
+            "double termination must report false"
+        );
+        // wrong pool: instance `a` lives in pool 0
+        assert!(!fleet.terminate_in(
+            PoolId(1),
+            a,
+            SimTime::from_secs(3600),
+            &mut billing
+        ));
+        // one hour of d8 spot, attributed to the wide pool
+        assert!((billing.compute_total() - 0.076).abs() < 1e-9);
+        assert!(
+            (billing.pool_compute_total("wide") - 0.076).abs() < 1e-9,
+            "multi-pool cluster terminations tag the pool"
+        );
+    }
+
+    #[test]
+    fn cluster_terminate_in_bills_traced_pools_piecewise() {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let cfgs = vec![PoolCfg::named("traced")
+            .capacity(2)
+            .pricing(PoolPricingCfg::Trace(trace))];
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        let id = fleet.launch_in(PoolId(0), SimTime::ZERO).id;
+        fleet.apply_price_factor(PoolId(0), 2.0, SimTime::from_secs(1800));
+        let mut billing = BillingMeter::new();
+        assert!(fleet.terminate_in(
+            PoolId(0),
+            id,
+            SimTime::from_secs(3600),
+            &mut billing
+        ));
+        // 0.5 h at $0.076 + 0.5 h at $0.152, as on the single-slot path
+        assert!((billing.compute_total() - 0.5 * (0.076 + 0.152)).abs() < 1e-12);
+        assert_eq!(billing.invoice().items.len(), 2);
     }
 
     #[test]

@@ -174,10 +174,21 @@ impl ScaleSet {
     /// piecewise themselves via
     /// [`BillingMeter::book_instance_piecewise`].
     pub fn reclaim_current_unbilled(&mut self, now: SimTime) -> Option<Instance> {
-        if self.running.is_empty() {
-            return None;
-        }
-        let mut inst = self.running.remove(0);
+        let id = self.running.first()?.id;
+        self.reclaim_unbilled(id, now)
+    }
+
+    /// Remove and terminate a specific running instance **without
+    /// booking** its uptime — the by-id variant of
+    /// [`Self::reclaim_current_unbilled`] for capacity-N pools where the
+    /// dying instance is not necessarily the oldest.
+    pub fn reclaim_unbilled(
+        &mut self,
+        id: InstanceId,
+        now: SimTime,
+    ) -> Option<Instance> {
+        let idx = self.running.iter().position(|i| i.id == id)?;
+        let mut inst = self.running.remove(idx);
         inst.terminate(now);
         Some(inst)
     }
@@ -319,6 +330,19 @@ mod tests {
         assert_eq!(inst.uptime(SimTime::from_secs(9999)).as_secs(), 3600);
         assert!(ss.current().is_none());
         assert!(ss.reclaim_current_unbilled(SimTime::from_secs(3700)).is_none());
+    }
+
+    #[test]
+    fn reclaim_unbilled_by_id_picks_the_right_instance() {
+        let mut ss = mk().with_capacity(3);
+        let a = ss.launch(SimTime::ZERO).id;
+        let b = ss.launch(SimTime::from_secs(10)).id;
+        let inst = ss.reclaim_unbilled(b, SimTime::from_secs(3610)).unwrap();
+        assert_eq!(inst.id, b);
+        assert_eq!(inst.uptime(SimTime::from_secs(9999)).as_secs(), 3600);
+        assert_eq!(ss.running_count(), 1);
+        assert_eq!(ss.current().unwrap().id, a);
+        assert!(ss.reclaim_unbilled(b, SimTime::from_secs(3620)).is_none());
     }
 
     #[test]

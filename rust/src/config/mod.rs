@@ -10,8 +10,8 @@ pub mod toml;
 pub mod scenario;
 
 pub use scenario::{
-    CheckpointMethodCfg, ClampCfg, CloudCfg, EvictionPlanCfg, FleetCfg,
-    IntervalControllerCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
-    ScenarioConfig, StorageCfg, WorkloadCfg,
+    ArrivalCfg, CheckpointMethodCfg, ClampCfg, CloudCfg, ClusterCfg,
+    EvictionPlanCfg, FleetCfg, IntervalControllerCfg, PlacementPolicyCfg,
+    PoolCfg, PoolPricingCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -108,6 +108,11 @@ pub struct PoolCfg {
     pub eviction: EvictionPlanCfg,
     /// Price dynamics on top of `price_factor` (static by default).
     pub pricing: PoolPricingCfg,
+    /// Maximum concurrently-running instances in this pool (the scale
+    /// set's capacity). The paper's single-job testbed is capacity 1; a
+    /// contended cluster ([`ClusterCfg`]) raises it so several jobs share
+    /// the pool and the rest queue. Must be >= 1.
+    pub capacity: u32,
 }
 
 impl Default for PoolCfg {
@@ -120,6 +125,7 @@ impl Default for PoolCfg {
             price_factor: 1.0,
             eviction: EvictionPlanCfg::None,
             pricing: PoolPricingCfg::Static,
+            capacity: 1,
         }
     }
 }
@@ -141,6 +147,7 @@ impl PoolCfg {
             price_factor: 1.0,
             eviction,
             pricing: PoolPricingCfg::Static,
+            capacity: 1,
         }
     }
 
@@ -171,6 +178,11 @@ impl PoolCfg {
 
     pub fn pricing(mut self, pricing: PoolPricingCfg) -> Self {
         self.pricing = pricing;
+        self
+    }
+
+    pub fn capacity(mut self, capacity: u32) -> Self {
+        self.capacity = capacity;
         self
     }
 }
@@ -212,9 +224,17 @@ pub enum IntervalControllerCfg {
     /// the pre-policy engine (pinned against the legacy oracle).
     #[default]
     Fixed,
-    /// Young/Daly first-order optimum `√(2 · ckpt_cost · MTBF)` from an
-    /// online per-pool eviction-rate estimate seeded with `prior_mtbf`.
-    YoungDaly { prior_mtbf: SimDuration, clamp: ClampCfg },
+    /// Young/Daly optimum from an online per-pool eviction-rate estimate
+    /// seeded with `prior_mtbf`. `higher_order = false` (the default) is
+    /// the first-order form `√(2 · ckpt_cost · MTBF)`; `true` applies
+    /// Daly's higher-order correction, which matters when the checkpoint
+    /// cost is no longer small against the MTBF and reduces to the
+    /// first-order form as `ckpt_cost / MTBF → 0`.
+    YoungDaly {
+        prior_mtbf: SimDuration,
+        clamp: ClampCfg,
+        higher_order: bool,
+    },
     /// Young/Daly scaled by the active pool's current traced price
     /// factor raised to `sensitivity`: checkpoints cluster when the pool
     /// is cheap, spread out across a price spike.
@@ -226,11 +246,12 @@ pub enum IntervalControllerCfg {
 }
 
 impl IntervalControllerCfg {
-    /// Young/Daly with the default prior and clamp.
+    /// Young/Daly with the default prior and clamp (first-order form).
     pub fn young_daly() -> Self {
         Self::YoungDaly {
             prior_mtbf: SimDuration::from_mins(60),
             clamp: ClampCfg::default(),
+            higher_order: false,
         }
     }
 
@@ -291,6 +312,137 @@ pub struct FleetCfg {
     /// set.
     pub pools: Vec<PoolCfg>,
     pub placement: PlacementPolicyCfg,
+}
+
+/// When the cluster's jobs are submitted.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ArrivalCfg {
+    /// Every job submitted at t = 0 (a batch drop — maximum contention).
+    #[default]
+    Batch,
+    /// Job `i` arrives at `i × spacing`. `spacing` must be positive.
+    Uniform { spacing: SimDuration },
+    /// Poisson arrivals with the given mean inter-arrival time, drawn
+    /// deterministically from the scenario seed. `mean` must be positive.
+    Poisson { mean: SimDuration },
+}
+
+/// A contended multi-job cluster: many copies of the scenario's workload
+/// submitted against **one** shared fleet with finite per-pool capacity
+/// ([`crate::sim::cluster`]). Jobs that find every slot taken queue FIFO
+/// per priority and admit as slots free up.
+///
+/// TOML reference — the `[cluster]` section:
+///
+/// ```toml
+/// [cluster]
+/// # job population: a count (names auto-generated "job-0", "job-1", …)
+/// jobs = 200
+/// # …or an explicit (unique) name list — give one or the other:
+/// # names = ["align", "assemble", "polish"]
+///
+/// # arrival process: "batch" (default, all at t = 0), "uniform"
+/// # (one job every arrival_spacing_mins), or "poisson"
+/// # (seeded, mean arrival_mean_mins)
+/// arrival = "uniform"
+/// arrival_spacing_mins = 5
+///
+/// # capacity of the implicit [cloud]-derived pool. With explicit
+/// # [pool.*] sections, set `capacity` per pool instead.
+/// capacity = 8
+///
+/// # optional per-job admission priorities (lower value admits first;
+/// # FIFO within a priority). Omitted = all equal.
+/// # priorities = [0, 0, 1]
+/// ```
+///
+/// Zero/negative capacities or counts, non-finite arrival parameters and
+/// duplicate job names are rejected at parse time *and* re-checked by
+/// [`ClusterCfg::validate`] at build time, each error naming the
+/// offending key.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ClusterCfg {
+    /// Job names, one concurrent job each. Must be non-empty and unique.
+    pub jobs: Vec<String>,
+    /// Submission process for the job population.
+    pub arrival: ArrivalCfg,
+    /// Admission priority per job (lower admits first; FIFO within a
+    /// priority). Empty means all jobs share priority 0; otherwise the
+    /// length must match `jobs`.
+    pub priorities: Vec<u32>,
+    /// Capacity for the implicit single pool derived from `[cloud]` +
+    /// `[eviction]`. Ignored when explicit fleet pools are configured —
+    /// those carry their own per-pool `capacity`.
+    pub capacity: Option<u32>,
+}
+
+impl ClusterCfg {
+    /// `n` identically-configured jobs named `job-0 … job-{n-1}`.
+    pub fn with_count(n: usize) -> Self {
+        Self {
+            jobs: (0..n).map(|i| format!("job-{i}")).collect(),
+            ..Self::default()
+        }
+    }
+
+    pub fn arrival(mut self, arrival: ArrivalCfg) -> Self {
+        self.arrival = arrival;
+        self
+    }
+
+    pub fn capacity(mut self, capacity: u32) -> Self {
+        self.capacity = Some(capacity);
+        self
+    }
+
+    pub fn priorities(mut self, priorities: Vec<u32>) -> Self {
+        self.priorities = priorities;
+        self
+    }
+
+    /// Admission priority of job `i` (0 when no priorities were given).
+    pub fn priority(&self, job: usize) -> u32 {
+        self.priorities.get(job).copied().unwrap_or(0)
+    }
+
+    /// Build-side validation, mirroring the `[cluster]` parse rules for
+    /// configs assembled through the builder API.
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            bail!("cluster.jobs must name at least one job");
+        }
+        let mut seen = std::collections::BTreeSet::new();
+        for name in &self.jobs {
+            if name.is_empty() {
+                bail!("cluster job names must be non-empty");
+            }
+            if !seen.insert(name.as_str()) {
+                bail!("duplicate cluster job name '{name}'");
+            }
+        }
+        if !self.priorities.is_empty()
+            && self.priorities.len() != self.jobs.len()
+        {
+            bail!(
+                "cluster.priorities has {} entries for {} jobs",
+                self.priorities.len(),
+                self.jobs.len()
+            );
+        }
+        match &self.arrival {
+            ArrivalCfg::Uniform { spacing } if spacing.is_zero() => {
+                bail!("cluster.arrival_spacing_mins must be positive")
+            }
+            ArrivalCfg::Poisson { mean } if mean.is_zero() => {
+                bail!("cluster.arrival_mean_mins must be positive")
+            }
+            _ => {}
+        }
+        if self.capacity == Some(0) {
+            bail!("cluster.capacity must be >= 1, got 0");
+        }
+        Ok(())
+    }
 }
 
 /// Workload selection + calibration.
@@ -420,6 +572,11 @@ pub struct ScenarioConfig {
     /// derived from `cloud`/`eviction` with sticky placement (the paper's
     /// capacity-1 scale set).
     pub fleet: FleetCfg,
+    /// Contended multi-job cluster ([`ClusterCfg`]): `Some` multiplexes
+    /// many copies of this scenario's workload onto the shared fleet via
+    /// [`crate::sim::cluster`]; `None` (the default) is the single-job
+    /// world.
+    pub cluster: Option<ClusterCfg>,
     pub storage: StorageCfg,
     /// Abort threshold: give up if the run exceeds this much virtual time
     /// (catches never-completing configurations — paper §IV).
@@ -443,6 +600,7 @@ impl Default for ScenarioConfig {
             compress_termination: false,
             cloud: CloudCfg::default(),
             fleet: FleetCfg::default(),
+            cluster: None,
             storage: StorageCfg::default(),
             deadline: SimDuration::from_hours(48),
             metrics: RecordLevel::Full,
@@ -457,6 +615,21 @@ fn mins(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
 
 fn secs(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
     doc.get_f64(sec, key).map(SimDuration::from_secs_f64)
+}
+
+/// Parse `sec.capacity` (which the caller verified is present) as an
+/// instance count >= 1; zero, negative and out-of-range values are parse
+/// errors naming the key.
+fn parse_capacity(doc: &TomlDoc, sec: &str) -> Result<u32> {
+    let v = doc.get(sec, "capacity").expect("caller checked presence");
+    let n = v.as_u64().with_context(|| {
+        format!("{sec}.capacity must be a non-negative integer")
+    })?;
+    if n == 0 {
+        bail!("{sec}.capacity must be >= 1, got 0");
+    }
+    u32::try_from(n)
+        .map_err(|_| anyhow::anyhow!("{sec}.capacity {n} is out of range"))
 }
 
 /// Parse an eviction plan out of `sec` (used by both the scenario-level
@@ -663,6 +836,11 @@ impl ScenarioConfig {
                     );
                 }
             }
+            let higher_order = doc.get_bool(sec, "higher_order");
+            if doc.get(sec, "higher_order").is_some() && higher_order.is_none()
+            {
+                bail!("{sec}.higher_order must be a boolean");
+            }
             cfg.adaptive = match doc.get_str(sec, "controller").unwrap_or("fixed")
             {
                 "fixed" => {
@@ -676,6 +854,7 @@ impl ScenarioConfig {
                         "hysteresis",
                         "mtbf_prior_mins",
                         "sensitivity",
+                        "higher_order",
                     ] {
                         if doc.get(sec, key).is_some() {
                             bail!(
@@ -694,13 +873,25 @@ impl ScenarioConfig {
                              cost-aware controller"
                         );
                     }
-                    IntervalControllerCfg::YoungDaly { prior_mtbf, clamp }
+                    IntervalControllerCfg::YoungDaly {
+                        prior_mtbf,
+                        clamp,
+                        higher_order: higher_order.unwrap_or(false),
+                    }
                 }
-                "cost-aware" => IntervalControllerCfg::CostAware {
-                    sensitivity: sensitivity.unwrap_or(1.0),
-                    prior_mtbf,
-                    clamp,
-                },
+                "cost-aware" => {
+                    if higher_order.is_some() {
+                        bail!(
+                            "{sec}.higher_order only applies to the \
+                             young-daly controller"
+                        );
+                    }
+                    IntervalControllerCfg::CostAware {
+                        sensitivity: sensitivity.unwrap_or(1.0),
+                        prior_mtbf,
+                        clamp,
+                    }
+                }
                 other => bail!("unknown {sec}.controller '{other}'"),
             };
         }
@@ -816,6 +1007,9 @@ impl ScenarioConfig {
                 }
                 pool.price_factor = v;
             }
+            if doc.get(&sec, "capacity").is_some() {
+                pool.capacity = parse_capacity(doc, &sec)?;
+            }
             pool.eviction = eviction_plan_from(doc, &sec)?;
             // price dynamics: a replayed trace file, or a generated walk
             let wsec = format!("{sec}.price_walk");
@@ -880,6 +1074,136 @@ impl ScenarioConfig {
                 "[eviction] conflicts with explicit [pool.*] sections — move \
                  the plan into the pools (each pool has its own)"
             );
+        }
+
+        // [cluster] — contended multi-job scenarios on the shared fleet.
+        if doc.has_section("cluster") {
+            let sec = "cluster";
+            let mut cluster = ClusterCfg::default();
+            let count = doc.get(sec, "jobs");
+            let names = doc.get(sec, "names").and_then(TomlValue::as_array);
+            match (count, names) {
+                (Some(_), Some(_)) => bail!(
+                    "{sec}.jobs conflicts with {sec}.names — give a count or \
+                     an explicit name list, not both"
+                ),
+                (Some(v), None) => {
+                    let n = v.as_u64().with_context(|| {
+                        format!("{sec}.jobs must be a non-negative integer")
+                    })?;
+                    if n == 0 {
+                        bail!("{sec}.jobs must be >= 1, got 0");
+                    }
+                    let n = usize::try_from(n).map_err(|_| {
+                        anyhow::anyhow!("{sec}.jobs {n} is out of range")
+                    })?;
+                    cluster.jobs =
+                        (0..n).map(|i| format!("job-{i}")).collect();
+                }
+                (None, Some(arr)) => {
+                    cluster.jobs = arr
+                        .iter()
+                        .map(|v| {
+                            v.as_str().map(str::to_string).with_context(|| {
+                                format!("{sec}.names must be strings")
+                            })
+                        })
+                        .collect::<Result<_>>()?;
+                }
+                (None, None) => bail!(
+                    "[{sec}] requires {sec}.jobs (a count) or {sec}.names \
+                     (an explicit list)"
+                ),
+            }
+            let pos_mins = |key: &str| -> Result<Option<SimDuration>> {
+                match doc.get_f64(sec, key) {
+                    None => Ok(None),
+                    Some(v) if v.is_finite() && v > 0.0 => {
+                        Ok(Some(SimDuration::from_secs_f64(v * 60.0)))
+                    }
+                    Some(v) => bail!(
+                        "{sec}.{key} must be positive and finite, got {v}"
+                    ),
+                }
+            };
+            let spacing = pos_mins("arrival_spacing_mins")?;
+            let mean = pos_mins("arrival_mean_mins")?;
+            cluster.arrival = match doc
+                .get_str(sec, "arrival")
+                .unwrap_or("batch")
+            {
+                "batch" => {
+                    if spacing.is_some() || mean.is_some() {
+                        bail!(
+                            "{sec}.arrival_spacing_mins / \
+                             {sec}.arrival_mean_mins have no effect with \
+                             arrival = \"batch\""
+                        );
+                    }
+                    ArrivalCfg::Batch
+                }
+                "uniform" => {
+                    if mean.is_some() {
+                        bail!(
+                            "{sec}.arrival_mean_mins only applies to \
+                             poisson arrivals"
+                        );
+                    }
+                    ArrivalCfg::Uniform {
+                        spacing: spacing.with_context(|| {
+                            format!(
+                                "{sec}.arrival_spacing_mins required for \
+                                 uniform arrivals"
+                            )
+                        })?,
+                    }
+                }
+                "poisson" => {
+                    if spacing.is_some() {
+                        bail!(
+                            "{sec}.arrival_spacing_mins only applies to \
+                             uniform arrivals"
+                        );
+                    }
+                    ArrivalCfg::Poisson {
+                        mean: mean.with_context(|| {
+                            format!(
+                                "{sec}.arrival_mean_mins required for \
+                                 poisson arrivals"
+                            )
+                        })?,
+                    }
+                }
+                other => bail!("unknown {sec}.arrival '{other}'"),
+            };
+            if doc.get(sec, "capacity").is_some() {
+                if !cfg.fleet.pools.is_empty() {
+                    bail!(
+                        "{sec}.capacity conflicts with explicit [pool.*] \
+                         sections — set capacity per pool instead"
+                    );
+                }
+                cluster.capacity = Some(parse_capacity(doc, sec)?);
+            }
+            if let Some(arr) =
+                doc.get(sec, "priorities").and_then(TomlValue::as_array)
+            {
+                cluster.priorities = arr
+                    .iter()
+                    .map(|v| {
+                        v.as_u64()
+                            .and_then(|x| u32::try_from(x).ok())
+                            .with_context(|| {
+                                format!(
+                                    "{sec}.priorities must be non-negative \
+                                     integers"
+                                )
+                            })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            cluster.validate()?;
+            cfg.cluster = Some(cluster);
         }
 
         Ok(cfg)
@@ -1054,14 +1378,31 @@ mtbf_prior_mins = 45
         )
         .unwrap();
         match cfg.adaptive {
-            IntervalControllerCfg::YoungDaly { prior_mtbf, clamp } => {
+            IntervalControllerCfg::YoungDaly {
+                prior_mtbf,
+                clamp,
+                higher_order,
+            } => {
                 assert_eq!(prior_mtbf, SimDuration::from_mins(45));
                 assert_eq!(clamp.min, SimDuration::from_mins(5));
                 assert_eq!(clamp.max, SimDuration::from_mins(90));
                 assert_eq!(clamp.hysteresis, 0.15);
+                assert!(!higher_order, "higher_order defaults off");
             }
             other => panic!("wrong controller: {other:?}"),
         }
+
+        // the higher-order Daly correction is a young-daly knob
+        let cfg = ScenarioConfig::from_str_toml(
+            "[checkpoint]\nmethod = \"transparent\"\ninterval_mins = 30\n\
+             [checkpoint.adaptive]\ncontroller = \"young-daly\"\n\
+             higher_order = true\n",
+        )
+        .unwrap();
+        assert!(matches!(
+            cfg.adaptive,
+            IntervalControllerCfg::YoungDaly { higher_order: true, .. }
+        ));
 
         // cost-aware picks up sensitivity (default 1.0)
         let cfg = ScenarioConfig::from_str_toml(
@@ -1152,6 +1493,22 @@ mtbf_prior_mins = 45
         assert!(ScenarioConfig::from_str_toml(&format!(
             "{transparent}[checkpoint.adaptive]\n\
              controller = \"cost-aware\"\nsensitivity = 0\n"
+        ))
+        .is_err());
+        // higher_order is young-daly-only (and must be a boolean)
+        let err = ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\n\
+             controller = \"cost-aware\"\nhigher_order = true\n"
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("higher_order"), "{err}");
+        assert!(ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\n\
+             controller = \"young-daly\"\nhigher_order = 3\n"
+        ))
+        .is_err());
+        assert!(ScenarioConfig::from_str_toml(&format!(
+            "{transparent}[checkpoint.adaptive]\nhigher_order = true\n"
         ))
         .is_err());
     }
@@ -1366,6 +1723,155 @@ ceil = 1.6
         )
         .unwrap_err();
         assert!(err.to_string().contains("conflicts"), "{err}");
+    }
+
+    #[test]
+    fn pool_capacity_parses_and_validates() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[pool.east]\ncapacity = 8\n\n[pool.west]\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.pools[0].capacity, 8);
+        assert_eq!(cfg.fleet.pools[1].capacity, 1, "capacity defaults to 1");
+        // zero / negative / oversized / non-integer capacities are parse
+        // errors naming the offending key
+        for bad in [
+            "capacity = 0",
+            "capacity = -4",
+            "capacity = 4294967296",
+            "capacity = 2.5",
+        ] {
+            let err = ScenarioConfig::from_str_toml(&format!(
+                "[pool.east]\n{bad}\n"
+            ))
+            .expect_err(&format!("{bad} must be rejected"));
+            assert!(
+                err.to_string().contains("pool.east.capacity"),
+                "{bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_section_parses() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[cluster]\njobs = 3\ncapacity = 2\narrival = \"uniform\"\n\
+             arrival_spacing_mins = 5\npriorities = [0, 1, 0]\n",
+        )
+        .unwrap();
+        let cluster = cfg.cluster.expect("cluster section parsed");
+        assert_eq!(cluster.jobs, ["job-0", "job-1", "job-2"]);
+        assert_eq!(cluster.capacity, Some(2));
+        assert_eq!(
+            cluster.arrival,
+            ArrivalCfg::Uniform { spacing: SimDuration::from_mins(5) }
+        );
+        assert_eq!(cluster.priorities, [0, 1, 0]);
+        assert_eq!(cluster.priority(1), 1);
+        assert_eq!(cluster.priority(99), 0);
+
+        // explicit names + poisson arrivals
+        let cfg = ScenarioConfig::from_str_toml(
+            "[cluster]\nnames = [\"align\", \"polish\"]\n\
+             arrival = \"poisson\"\narrival_mean_mins = 12\n",
+        )
+        .unwrap();
+        let cluster = cfg.cluster.unwrap();
+        assert_eq!(cluster.jobs, ["align", "polish"]);
+        assert_eq!(
+            cluster.arrival,
+            ArrivalCfg::Poisson { mean: SimDuration::from_mins(12) }
+        );
+        assert!(cluster.priorities.is_empty());
+
+        // no section → no cluster
+        assert!(ScenarioConfig::from_str_toml("name = \"x\"")
+            .unwrap()
+            .cluster
+            .is_none());
+    }
+
+    #[test]
+    fn cluster_section_rejects_bad_knobs() {
+        // population is required, single-sourced and positive
+        assert!(ScenarioConfig::from_str_toml("[cluster]\n").is_err());
+        assert!(ScenarioConfig::from_str_toml(
+            "[cluster]\njobs = 2\nnames = [\"a\"]\n"
+        )
+        .is_err());
+        let err =
+            ScenarioConfig::from_str_toml("[cluster]\njobs = 0\n").unwrap_err();
+        assert!(err.to_string().contains("cluster.jobs"), "{err}");
+        assert!(ScenarioConfig::from_str_toml("[cluster]\njobs = -2\n")
+            .is_err());
+        // duplicate job names are rejected at parse (via validate)
+        let err = ScenarioConfig::from_str_toml(
+            "[cluster]\nnames = [\"a\", \"b\", \"a\"]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        assert!(err.to_string().contains('a'), "{err}");
+        // arrival params must be positive/finite and match the kind
+        for bad in [
+            "jobs = 2\narrival = \"uniform\"",
+            "jobs = 2\narrival = \"uniform\"\narrival_spacing_mins = 0",
+            "jobs = 2\narrival = \"uniform\"\narrival_spacing_mins = -5",
+            "jobs = 2\narrival = \"poisson\"\narrival_mean_mins = 0",
+            "jobs = 2\narrival = \"poisson\"\narrival_spacing_mins = 5",
+            "jobs = 2\narrival_spacing_mins = 5",
+            "jobs = 2\narrival = \"thundering-herd\"",
+        ] {
+            let err =
+                ScenarioConfig::from_str_toml(&format!("[cluster]\n{bad}\n"))
+                    .expect_err(&format!("{bad} must be rejected"));
+            assert!(err.to_string().contains("cluster"), "{bad}: {err}");
+        }
+        // capacity: zero rejected, and with explicit pools it belongs on
+        // the pools
+        let err = ScenarioConfig::from_str_toml(
+            "[cluster]\njobs = 2\ncapacity = 0\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cluster.capacity"), "{err}");
+        let err = ScenarioConfig::from_str_toml(
+            "[cluster]\njobs = 2\ncapacity = 4\n\n[pool.east]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("per pool"), "{err}");
+        // priorities must cover every job
+        let err = ScenarioConfig::from_str_toml(
+            "[cluster]\njobs = 3\npriorities = [1]\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("priorities"), "{err}");
+    }
+
+    #[test]
+    fn cluster_builder_validation_mirrors_parse() {
+        assert!(ClusterCfg::with_count(4).validate().is_ok());
+        assert!(ClusterCfg::default().validate().is_err());
+        let dup = ClusterCfg {
+            jobs: vec!["a".into(), "a".into()],
+            ..ClusterCfg::default()
+        };
+        assert!(dup.validate().unwrap_err().to_string().contains("duplicate"));
+        assert!(ClusterCfg::with_count(2)
+            .capacity(0)
+            .validate()
+            .is_err());
+        assert!(ClusterCfg::with_count(2)
+            .arrival(ArrivalCfg::Uniform { spacing: SimDuration::ZERO })
+            .validate()
+            .is_err());
+        assert!(ClusterCfg::with_count(2)
+            .priorities(vec![1, 2, 3])
+            .validate()
+            .is_err());
+        assert!(ClusterCfg::with_count(2)
+            .priorities(vec![1, 0])
+            .capacity(3)
+            .validate()
+            .is_ok());
     }
 
     #[test]

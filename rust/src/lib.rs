@@ -43,13 +43,18 @@
 //!   via [`checkpoint::compress`]), an IMDS-compatible scheduled-events
 //!   HTTP service ([`httpd`], [`cloud::imds_http`]), billing/pricing
 //!   ([`cloud::billing`], [`cloud::pricing`]), run instrumentation
-//!   ([`metrics`]), and an event-driven multi-slot requeue scheduler
-//!   ([`sched`]) that interleaves whole jobs on the same queue and can
-//!   draw every job's replacements from one shared fleet (the Slurm/LSF
-//!   path of paper §II). [`sim::SimDriver`] is the stable facade over the
-//!   engine; [`sim::legacy`] preserves the pre-refactor loop as the
-//!   equivalence oracle; [`sim::sweep`] fans thousands of seeded runs
-//!   across threads (merged deterministically by seed) and
+//!   ([`metrics`]), and two cluster schedulers: the event-driven
+//!   multi-slot requeue scheduler ([`sched`]) that interleaves whole
+//!   jobs as atomic attempts (the Slurm/LSF path of paper §II), and the
+//!   **multiplexed cluster engine** ([`sim::cluster`]) that runs
+//!   thousands of jobs *concurrently* as subject-tagged events on one
+//!   queue around one live capacity-bounded fleet — evictions, price
+//!   epochs and placement evidence accumulate cluster-wide, jobs queue
+//!   FIFO-per-priority when pools fill, and throughput is measured in
+//!   events/sec (`BENCH_cluster.json`). [`sim::SimDriver`] is the stable
+//!   facade over the engine; [`sim::legacy`] preserves the pre-refactor
+//!   loop as the equivalence oracle; [`sim::sweep`] fans thousands of
+//!   seeded runs across threads (merged deterministically by seed) and
 //!   [`report::distribution`] reduces the population to mean/percentile
 //!   summaries — distributions, not point estimates, for the paper's
 //!   figures and the placement-policy comparisons.

@@ -43,11 +43,19 @@ pub enum EventKind {
     JobSubmitted,
     JobStarted,
     JobRequeued,
+    JobFinished,
+    // --- cluster-engine admission events (the multiplexed cluster's
+    //     shared timeline; see `crate::sim::cluster`) ---
+    /// A job could not start because its chosen pool was at capacity.
+    CapacityExhausted,
+    /// A job entered the FIFO-per-priority admission queue.
+    JobQueued,
     // When adding a variant, extend [`EventKind::ALL`] too — the
     // exhaustive match in `tests::kind_indices_are_dense` refuses to
     // compile until every variant is listed, which keeps the per-kind
     // counter array correctly sized.
-    JobFinished,
+    /// A previously queued job was admitted to a freed slot.
+    JobAdmitted,
 }
 
 /// Number of [`EventKind`] variants (sizes the per-kind counter array).
@@ -55,7 +63,7 @@ const N_KINDS: usize = EventKind::ALL.len();
 
 impl EventKind {
     /// Every variant, in discriminant order.
-    pub const ALL: [EventKind; 16] = [
+    pub const ALL: [EventKind; 19] = [
         EventKind::InstanceLaunch,
         EventKind::RestoreFromCheckpoint,
         EventKind::CheckpointCommitted,
@@ -72,6 +80,9 @@ impl EventKind {
         EventKind::JobStarted,
         EventKind::JobRequeued,
         EventKind::JobFinished,
+        EventKind::CapacityExhausted,
+        EventKind::JobQueued,
+        EventKind::JobAdmitted,
     ];
     pub fn as_str(self) -> &'static str {
         match self {
@@ -91,6 +102,9 @@ impl EventKind {
             EventKind::JobStarted => "job-started",
             EventKind::JobRequeued => "job-requeued",
             EventKind::JobFinished => "job-finished",
+            EventKind::CapacityExhausted => "capacity-exhausted",
+            EventKind::JobQueued => "job-queued",
+            EventKind::JobAdmitted => "job-admitted",
         }
     }
 }
@@ -292,7 +306,10 @@ mod tests {
                 | EventKind::JobSubmitted
                 | EventKind::JobStarted
                 | EventKind::JobRequeued
-                | EventKind::JobFinished => {}
+                | EventKind::JobFinished
+                | EventKind::CapacityExhausted
+                | EventKind::JobQueued
+                | EventKind::JobAdmitted => {}
             }
         }
         assert_eq!(t.events().len(), EventKind::ALL.len());

@@ -44,6 +44,7 @@
 //! hysteresis = 0.1            # dead-band fraction in [0, 1) (default 0)
 //! mtbf_prior_mins = 60        # estimator prior (> 0; default 60)
 //! sensitivity = 1.0           # cost-aware only: price-factor exponent (> 0)
+//! higher_order = false        # young-daly only: Daly's higher-order form
 //! ```
 //!
 //! Every knob is validated at parse ([`crate::config::ScenarioConfig`])
@@ -205,11 +206,18 @@ pub fn build_controller(
 ) -> Result<Box<dyn IntervalController>> {
     Ok(match cfg {
         IntervalControllerCfg::Fixed => Box::new(FixedInterval),
-        IntervalControllerCfg::YoungDaly { prior_mtbf, clamp } => {
+        IntervalControllerCfg::YoungDaly {
+            prior_mtbf,
+            clamp,
+            higher_order,
+        } => {
             if prior_mtbf.is_zero() {
                 bail!("young-daly mtbf prior must be non-zero");
             }
-            Box::new(YoungDaly::new(*prior_mtbf, Clamp::new(clamp)?))
+            Box::new(
+                YoungDaly::new(*prior_mtbf, Clamp::new(clamp)?)
+                    .with_higher_order(*higher_order),
+            )
         }
         IntervalControllerCfg::CostAware {
             sensitivity,
@@ -361,6 +369,7 @@ mod tests {
         assert!(build_controller(&C::YoungDaly {
             prior_mtbf: SimDuration::ZERO,
             clamp: ClampCfg::default(),
+            higher_order: false,
         })
         .is_err());
         assert!(build_controller(&C::YoungDaly {
@@ -370,6 +379,7 @@ mod tests {
                 max: SimDuration::from_mins(5),
                 hysteresis: 0.0,
             },
+            higher_order: false,
         })
         .is_err());
     }

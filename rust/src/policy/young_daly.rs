@@ -9,6 +9,18 @@
 //! step boundary, so an eviction storm tightens the cadence and a quiet
 //! market relaxes it — through the [`Clamp`] so one noisy estimate can't
 //! thrash it.
+//!
+//! [`YoungDaly::with_higher_order`] switches to Daly's higher-order
+//! perturbation solution (Daly 2006, eq. 20):
+//!
+//! ```text
+//! t = √(2δM) · [1 + ⅓·√(δ/(2M)) + (1/9)·(δ/(2M))] − δ    for δ < 2M
+//! t = M                                                    otherwise
+//! ```
+//!
+//! which matters when δ is no longer negligible against M (an eviction
+//! storm shrinking the estimated MTBF toward the write cost) and reduces
+//! to the first-order form as δ/M → 0 — a limit the property tests pin.
 
 use super::estimator::EvictionRateEstimator;
 use super::{Clamp, IntervalController, PolicyCtx};
@@ -24,6 +36,11 @@ pub struct YoungDaly {
     /// real write has landed, its cost replaces the a-priori
     /// `PolicyCtx::ckpt_cost` estimate as δ.
     observed_cost: Option<SimDuration>,
+    /// Use Daly's higher-order perturbation solution instead of the
+    /// first-order √(2δM) (the `[checkpoint.adaptive] higher_order`
+    /// knob; off by default, keeping pinned first-order runs bitwise
+    /// intact).
+    higher_order: bool,
 }
 
 impl YoungDaly {
@@ -32,7 +49,14 @@ impl YoungDaly {
             estimator: EvictionRateEstimator::new(prior_mtbf),
             clamp,
             observed_cost: None,
+            higher_order: false,
         }
+    }
+
+    /// Toggle Daly's higher-order correction (see the module docs).
+    pub fn with_higher_order(mut self, on: bool) -> Self {
+        self.higher_order = on;
+        self
     }
 
     /// The Young/Daly first-order optimum, unclamped.
@@ -45,13 +69,38 @@ impl YoungDaly {
         )
     }
 
+    /// Daly's higher-order optimum, unclamped: for δ < 2M,
+    /// `√(2δM)·[1 + ⅓√(δ/(2M)) + (1/9)(δ/(2M))] − δ`; for δ >= 2M the
+    /// expansion breaks down and the optimum saturates at M itself.
+    pub fn optimal_interval_higher_order(
+        ckpt_cost: SimDuration,
+        mtbf: SimDuration,
+    ) -> SimDuration {
+        let delta = ckpt_cost.as_secs_f64();
+        let m = mtbf.as_secs_f64();
+        if delta >= 2.0 * m {
+            return mtbf;
+        }
+        let ratio = delta / (2.0 * m); // δ/(2M), in [0, 1)
+        let x = ratio.sqrt();
+        let t = (2.0 * delta * m).sqrt()
+            * (1.0 + x / 3.0 + ratio / 9.0)
+            - delta;
+        SimDuration::from_secs_f64(t.max(0.0))
+    }
+
     /// The unclamped optimum at this boundary: δ selection (observed
     /// commit cost over the a-priori estimate) + the online MTBF.
     /// [`CostAware`](super::CostAware) composes on this before applying
     /// its price scaling.
     pub fn raw_interval(&self, ctx: &PolicyCtx) -> SimDuration {
         let cost = self.observed_cost.unwrap_or(ctx.ckpt_cost);
-        Self::optimal_interval(cost, self.estimator.mtbf(ctx.pool, ctx.now))
+        let mtbf = self.estimator.mtbf(ctx.pool, ctx.now);
+        if self.higher_order {
+            Self::optimal_interval_higher_order(cost, mtbf)
+        } else {
+            Self::optimal_interval(cost, mtbf)
+        }
     }
 
     pub(crate) fn clamp_apply(&mut self, raw: SimDuration) -> SimDuration {
@@ -137,6 +186,66 @@ mod tests {
         c.observe_ckpt_cost(SimDuration::from_secs(48));
         let refined = c.next_interval(&ctx(SimTime::ZERO));
         assert_eq!(refined.as_millis(), 587_878);
+    }
+
+    #[test]
+    fn higher_order_correction_is_off_by_default_and_shortens_intervals() {
+        // default-off: the pinned first-order value is untouched
+        let mut fo = YoungDaly::new(SimDuration::from_mins(60), wide_clamp());
+        assert_eq!(fo.next_interval(&ctx(SimTime::ZERO)).as_millis(), 293_939);
+        // on: Daly's correction subtracts δ (net) when δ ≪ M, so the
+        // interval comes in below the first-order optimum
+        let mut ho = YoungDaly::new(SimDuration::from_mins(60), wide_clamp())
+            .with_higher_order(true);
+        let corrected = ho.next_interval(&ctx(SimTime::ZERO));
+        assert!(
+            corrected.as_millis() < 293_939,
+            "higher-order {corrected} should undercut first-order 293939ms"
+        );
+        // δ >= 2M saturates at the MTBF instead of going negative
+        let saturated = YoungDaly::optimal_interval_higher_order(
+            SimDuration::from_mins(30),
+            SimDuration::from_mins(10),
+        );
+        assert_eq!(saturated, SimDuration::from_mins(10));
+    }
+
+    #[test]
+    fn prop_higher_order_reduces_to_first_order_in_the_limit() {
+        // Satellite pin: as δ/MTBF → 0 the higher-order optimum converges
+        // to √(2·δ·MTBF). Analytically the ratio is
+        // 1 − ⅔·x + (1/9)·x² with x = √(δ/(2M)), so |ratio − 1| <= x —
+        // checked over random (δ, M) pairs spanning five decades of x.
+        forall(
+            Config::default().cases(300),
+            |rng| {
+                let delta_ms = rng.range_u64(1, 60_000);
+                // MTBF from comparable to δ up to ~10^5 times larger
+                let mtbf_ms = delta_ms * rng.range_u64(3, 100_000);
+                (delta_ms, mtbf_ms)
+            },
+            shrink_none,
+            |&(delta_ms, mtbf_ms)| {
+                let delta = SimDuration::from_millis(delta_ms);
+                let mtbf = SimDuration::from_millis(mtbf_ms);
+                let fo = YoungDaly::optimal_interval(delta, mtbf)
+                    .as_millis() as f64;
+                let ho =
+                    YoungDaly::optimal_interval_higher_order(delta, mtbf)
+                        .as_millis() as f64;
+                let x = (delta_ms as f64 / (2.0 * mtbf_ms as f64)).sqrt();
+                let ratio = ho / fo;
+                // millisecond rounding on both sides: allow 2 ms of slack
+                let bound = x + 2.0 / fo;
+                if (ratio - 1.0).abs() > bound {
+                    return Err(format!(
+                        "δ={delta_ms}ms M={mtbf_ms}ms: ratio {ratio} strayed \
+                         more than x={x} from 1"
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

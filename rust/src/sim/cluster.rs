@@ -1,0 +1,1534 @@
+//! The multiplexed cluster engine: thousands of concurrent jobs on one
+//! contended fleet, interleaved as targeted events on a single queue.
+//!
+//! The per-run engine ([`super::engine`]) simulates one job on its own
+//! event queue; the requeue scheduler ([`crate::sched`]) runs many jobs
+//! by building one engine *per attempt*, which serializes the jobs and
+//! rebuilds the whole world between attempts. This module multiplexes
+//! instead: every job's events carry a job id, live on **one**
+//! [`EventQueue`] (subject-tagged — [`EventQueue::schedule_for`] /
+//! [`EventQueue::cancel_subject`]), and execute against **one** live
+//! [`Fleet`] whose per-pool capacity, eviction draws, price epochs and
+//! placement evidence persist across the whole scenario. One `pop` loop
+//! drives everything; throughput is reported as sustained events/sec
+//! (`benches/perf_cluster.rs` → `BENCH_cluster.json`).
+//!
+//! ## Admission
+//!
+//! Pools have **finite capacity** ([`crate::config::PoolCfg::capacity`]).
+//! When a job needs an instance (arrival or post-eviction replacement)
+//! the placement policy picks a pool as usual; if that pool is full the
+//! job does not spin — the cluster timeline records
+//! [`EventKind::CapacityExhausted`] then [`EventKind::JobQueued`] and the
+//! job parks in a FIFO queue per priority (lower number = higher
+//! priority). Every freed slot (eviction, completion, abort) first
+//! re-places the head waiter — [`EventKind::JobAdmitted`] — before an
+//! evicted job may re-request, so waiters are never starved by churning
+//! jobs. The head waiter blocks its queue (strict FIFO): if *its* chosen
+//! pool is full, nobody behind it jumps ahead.
+//!
+//! ## Determinism and equivalence
+//!
+//! One sequential queue per cluster run: digests are byte-identical at
+//! any sweep thread count ([`ClusterSweep`] merges by seed position like
+//! [`super::sweep::Sweep`]). Each job carries its *own* store, billing
+//! meter, metadata service, checkpoint writer and interval controller, so
+//! per-job event-id sequences and invoices never depend on how jobs
+//! interleave. A single-job cluster replays the per-run engine **byte for
+//! byte** — same placement, launch ids, eviction draws, checkpoint
+//! cadence, billing and timeline (`tests/engine_equivalence.rs`); the
+//! only deliberate divergences for multi-job runs are documented on
+//! [`ClusterEngine::run`].
+//!
+//! ## Hot path
+//!
+//! Event routing is O(log queue) per event: the job id on the event
+//! indexes straight into the job table — no O(jobs) scan anywhere in the
+//! loop. Admission peeks one waiter; placement is O(pools). The rare
+//! price-epoch events fan out to every live controller (documented
+//! exception, bounded by trace length × jobs).
+
+use super::engine::SimEvent;
+use super::experiment::Experiment;
+use super::sweep::run_digest;
+use super::RunResult;
+use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind};
+use crate::cloud::billing::BillingMeter;
+use crate::cloud::fleet::{
+    build_policy, Fleet, PlacementPolicy, PoolId, PoolStats,
+};
+use crate::cloud::instance::InstanceId;
+use crate::cloud::metadata::MetadataService;
+use crate::config::{ArrivalCfg, ClusterCfg, ScenarioConfig};
+use crate::coordinator::handlers::{self, PollReaction};
+use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
+use crate::coordinator::policy::CheckpointPolicy;
+use crate::coordinator::restart::{RestartManager, RestoreReport};
+use crate::metrics::{EventKind, RecordLevel, Timeline};
+use crate::policy::{build_controller, IntervalController, PolicyCtx};
+use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
+use crate::storage::{BlobStore, TransferModel};
+use crate::util::prng::Prng;
+use crate::workload::{Snapshot, StepOutcome, Workload};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Decorrelates Poisson arrival draws from every other consumer of the
+/// scenario seed.
+const ARRIVAL_SEED_SALT: u64 = 0xCA15_7E2A_0F1E_E7C3;
+
+/// Builds a fresh workload for one job (and rebuilds it after an
+/// unprotected restart) — the per-job analogue of the engine's factory.
+pub type JobFactory = Box<dyn FnMut() -> Result<Box<dyn Workload>>>;
+
+/// Everything that can happen in a cluster run.
+#[derive(Debug)]
+pub enum ClusterEvent {
+    /// Job `job` enters the system (its arrival-process instant).
+    JobArrived { job: usize },
+    /// A per-run engine event, targeted at one job.
+    Job { job: usize, ev: SimEvent },
+    /// The spot market moved — cluster-wide, never owned by a job.
+    PoolPriceChanged { pool: PoolId, idx: usize },
+}
+
+/// When the platform will post/enforce the eviction of one instance
+/// (mirror of the per-run engine's schedule).
+#[derive(Debug, Clone, Copy)]
+struct EvictionSchedule {
+    post: SimTime,
+    detect: SimTime,
+    deadline: SimTime,
+}
+
+/// The instance a job currently runs on.
+#[derive(Debug)]
+struct JobInstance {
+    id: String,
+    iid: InstanceId,
+    pool: PoolId,
+    schedule: Option<EvictionSchedule>,
+}
+
+/// One job's complete private world: the same policy / monitor / writer /
+/// store / controller pieces a per-run engine owns, so nothing a job does
+/// can perturb another job's event-id sequence, checkpoints or invoice.
+struct JobState {
+    name: String,
+    priority: u32,
+    factory: JobFactory,
+    store: BlobStore,
+    workload: Box<dyn Workload>,
+    policy: CheckpointPolicy,
+    controller: Box<dyn IntervalController>,
+    ckpt_cost_est: SimDuration,
+    billing: BillingMeter,
+    timeline: Timeline,
+    metadata: MetadataService,
+    writer: CheckpointWriter,
+    monitor: Option<ScheduledEventsMonitor>,
+    inst: Option<JobInstance>,
+    snap_buf: Snapshot,
+    /// The job's replacement target (its own "active pool" — placement
+    /// stickiness is per job, not cluster-global).
+    active: PoolId,
+    /// Per-pool (launches, evictions) by this job, for its `PoolStats`.
+    pool_counts: Vec<(u32, u32)>,
+    launches: u32,
+    submitted_at: SimTime,
+    admitted_at: Option<SimTime>,
+    finished_at: Option<SimTime>,
+    last_ckpt_at: SimTime,
+    completion_at: Vec<Option<SimTime>>,
+    notices: u32,
+    evictions: u32,
+    periodic_ckpts: u32,
+    termination_ok: u32,
+    termination_failed: u32,
+    app_ckpts: u32,
+    restores: u32,
+    lost_steps: u64,
+    max_steps_seen: u64,
+    completed: bool,
+    aborted_reason: Option<String>,
+    finished: bool,
+}
+
+/// One job's outcome: queueing times plus the full per-job [`RunResult`]
+/// (so every report that consumes run results works per job unchanged).
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    pub priority: u32,
+    pub submitted_at: SimTime,
+    /// First admission instant (`None` only for a job that never got a
+    /// slot — impossible unless the run was cut short externally).
+    pub admitted_at: Option<SimTime>,
+    pub finished_at: SimTime,
+    pub result: RunResult,
+}
+
+impl JobOutcome {
+    /// Time spent waiting for the first slot (real queueing delay).
+    pub fn wait(&self) -> SimDuration {
+        self.admitted_at
+            .unwrap_or(self.finished_at)
+            .since(self.submitted_at)
+    }
+
+    /// Submission-to-finish wall time.
+    pub fn turnaround(&self) -> SimDuration {
+        self.finished_at.since(self.submitted_at)
+    }
+}
+
+/// Everything a cluster run produced.
+#[derive(Debug)]
+pub struct ClusterResult {
+    pub scenario: String,
+    /// One outcome per configured job, in `[cluster]` job order.
+    pub jobs: Vec<JobOutcome>,
+    /// Cluster-wide admission timeline (`JobSubmitted`, `JobQueued`,
+    /// `JobAdmitted`, `CapacityExhausted`, `JobFinished`,
+    /// `PoolPriceChanged`); per-job events live on each job's own
+    /// `result.timeline`.
+    pub timeline: Timeline,
+    /// Events popped from the shared queue — the numerator of the
+    /// events/sec throughput figure.
+    pub events_processed: u64,
+    /// First arrival to last finish.
+    pub makespan: SimDuration,
+    /// Peak simultaneously-running instances, cluster-wide.
+    pub peak_in_flight: u32,
+    /// Peak simultaneously-running instances per pool (the capacity
+    /// invariant: `peak_in_flight_per_pool[i] <= capacity[i]`, pinned by
+    /// `tests/cluster_invariants.rs`).
+    pub peak_in_flight_per_pool: Vec<u32>,
+}
+
+impl ClusterResult {
+    pub fn completed_jobs(&self) -> usize {
+        self.jobs.iter().filter(|j| j.result.completed).count()
+    }
+
+    /// How many admissions went through the wait queue.
+    pub fn queued_admissions(&self) -> usize {
+        self.timeline.count(EventKind::JobQueued)
+    }
+
+    pub fn total_cost(&self) -> f64 {
+        self.jobs.iter().map(|j| j.result.total_cost()).sum()
+    }
+
+    /// One-line summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {}/{} jobs completed in {} | {} events | peak {} in flight \
+             | {} queued admission(s) | total {}",
+            self.scenario,
+            self.completed_jobs(),
+            self.jobs.len(),
+            self.makespan,
+            self.events_processed,
+            self.peak_in_flight,
+            self.queued_admissions(),
+            crate::util::fmt::dollars(self.total_cost()),
+        )
+    }
+}
+
+/// Canonical digest of everything a cluster run produced: the cluster
+/// counters and admission timeline plus every job's full [`run_digest`].
+/// Two cluster runs are byte-identical iff their digests match — the
+/// thread-invariance and engine-equivalence suites compare these.
+pub fn cluster_digest(r: &ClusterResult) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(
+        out,
+        "{}|jobs={}|events={}|makespan={}|peak={}",
+        r.scenario,
+        r.jobs.len(),
+        r.events_processed,
+        r.makespan.as_millis(),
+        r.peak_in_flight,
+    );
+    for p in &r.peak_in_flight_per_pool {
+        let _ = write!(out, "/{p}");
+    }
+    for k in EventKind::ALL {
+        let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));
+    }
+    for e in r.timeline.events() {
+        let _ = write!(
+            out,
+            "|{}@{}:{}",
+            e.kind.as_str(),
+            e.at.as_millis(),
+            e.detail
+        );
+    }
+    for j in &r.jobs {
+        let _ = write!(
+            out,
+            "||job:{}|prio={}|sub={}|adm={}|fin={}|{}",
+            j.name,
+            j.priority,
+            j.submitted_at.as_millis(),
+            j.admitted_at
+                .map(|t| t.as_millis() as i128)
+                .unwrap_or(-1),
+            j.finished_at.as_millis(),
+            run_digest(&j.result),
+        );
+    }
+    out
+}
+
+/// The multiplexed engine: one clock, one subject-tagged queue, one live
+/// fleet; N private job worlds.
+pub struct ClusterEngine<'a> {
+    cfg: &'a ScenarioConfig,
+    clock: Clock,
+    queue: EventQueue<ClusterEvent>,
+    price_tokens: Vec<u64>,
+    fleet: Fleet,
+    placement: Box<dyn PlacementPolicy>,
+    jobs: Vec<JobState>,
+    /// FIFO wait queue per priority (lower number admits first).
+    waiting: BTreeMap<u32, VecDeque<usize>>,
+    /// Slots promised to admitted-but-not-yet-launched jobs, per pool —
+    /// a slot is held from the placement decision through provisioning.
+    reserved: Vec<u32>,
+    timeline: Timeline,
+    spoton: bool,
+    overhead_factor: f64,
+    events_processed: u64,
+    running_total: u32,
+    peak_in_flight: u32,
+    pool_peaks: Vec<u32>,
+    finished_jobs: usize,
+}
+
+impl<'a> ClusterEngine<'a> {
+    /// Build the cluster for one scenario. `factories` supplies one
+    /// workload factory per configured job (in `[cluster]` job order);
+    /// when the scenario has no `[cluster]` section a single job named
+    /// after the scenario is assumed.
+    pub fn new(
+        cfg: &'a ScenarioConfig,
+        factories: Vec<JobFactory>,
+    ) -> Result<Self> {
+        let ccfg = cfg.cluster.clone().unwrap_or_else(|| ClusterCfg {
+            jobs: vec![cfg.name.clone()],
+            ..ClusterCfg::default()
+        });
+        ccfg.validate()?;
+        if factories.len() != ccfg.jobs.len() {
+            bail!(
+                "cluster has {} job(s) but {} factories were supplied",
+                ccfg.jobs.len(),
+                factories.len()
+            );
+        }
+        let fleet = Fleet::from_scenario(cfg)?;
+        let placement = build_policy(&cfg.fleet.placement)?;
+        let n_pools = fleet.num_pools();
+        let spoton = cfg.coordinator_attached;
+
+        let arrivals = arrival_times(&ccfg, cfg.seed);
+        let mut jobs = Vec::with_capacity(ccfg.jobs.len());
+        for ((i, factory), at) in
+            factories.into_iter().enumerate().zip(&arrivals)
+        {
+            jobs.push(build_job(
+                cfg,
+                &ccfg.jobs[i],
+                ccfg.priority(i),
+                *at,
+                factory,
+                n_pools,
+            )?);
+        }
+        Ok(Self {
+            cfg,
+            clock: Clock::new(),
+            queue: EventQueue::new(),
+            price_tokens: Vec::new(),
+            fleet,
+            placement,
+            jobs,
+            waiting: BTreeMap::new(),
+            reserved: vec![0; n_pools],
+            timeline: Timeline::with_level(cfg.metrics),
+            spoton,
+            overhead_factor: if spoton {
+                1.0 + cfg.cloud.coordinator_overhead
+            } else {
+                1.0
+            },
+            events_processed: 0,
+            running_total: 0,
+            peak_in_flight: 0,
+            pool_peaks: vec![0; n_pools],
+            finished_jobs: 0,
+        })
+    }
+
+    /// Run every job to completion or abort.
+    ///
+    /// Single-job clusters replay the per-run engine byte for byte. For
+    /// multi-job runs two things deliberately differ from "N independent
+    /// engines": pools have finite capacity (jobs queue), and
+    /// `PoolPriceChanged` is recorded once on the *cluster* timeline
+    /// instead of once per job.
+    pub fn run(mut self) -> Result<ClusterResult> {
+        for j in &mut self.jobs {
+            j.writer.resume_after(CheckpointStore::max_id(&mut j.store)?);
+        }
+        let arrivals: Vec<SimTime> =
+            self.jobs.iter().map(|j| j.submitted_at).collect();
+        for (job, at) in arrivals.into_iter().enumerate() {
+            self.queue.schedule(at, ClusterEvent::JobArrived { job });
+        }
+        self.schedule_price_traces();
+        while let Some(sch) = self.queue.pop() {
+            self.events_processed += 1;
+            self.price_tokens.retain(|&t| t != sch.seq);
+            self.clock.advance_to(sch.at);
+            self.dispatch(sch.event)?;
+            if self.finished_jobs == self.jobs.len() {
+                break;
+            }
+        }
+        self.finalize()
+    }
+
+    fn schedule_price_traces(&mut self) {
+        for i in 0..self.fleet.num_pools() {
+            let pool = PoolId(i);
+            if let Some(first) = self.fleet.price_points(pool).first() {
+                let at = SimTime::ZERO + first.offset;
+                let token = self
+                    .queue
+                    .schedule(at, ClusterEvent::PoolPriceChanged { pool, idx: 0 });
+                self.price_tokens.push(token);
+            }
+        }
+    }
+
+    // ---------------------------------------------------- event plumbing
+
+    fn sched_job(&mut self, job: usize, at: SimTime, ev: SimEvent) {
+        self.queue
+            .schedule_for(job, at, ClusterEvent::Job { job, ev });
+    }
+
+    fn sched_job_in(&mut self, job: usize, delay: SimDuration, ev: SimEvent) {
+        let now = self.clock.now();
+        self.queue
+            .schedule_for_in(job, now, delay, ClusterEvent::Job { job, ev });
+    }
+
+    fn dispatch(&mut self, event: ClusterEvent) -> Result<()> {
+        match event {
+            ClusterEvent::JobArrived { job } => self.on_job_arrived(job),
+            ClusterEvent::Job { job, ev } => self.dispatch_job(job, ev),
+            ClusterEvent::PoolPriceChanged { pool, idx } => {
+                self.on_price_changed(pool, idx)
+            }
+        }
+    }
+
+    fn dispatch_job(&mut self, job: usize, ev: SimEvent) -> Result<()> {
+        match ev {
+            SimEvent::ReplacementRequested => self.request_admission(job),
+            SimEvent::PlacementDecided { pool } => {
+                self.on_placement_decided(job, pool)
+            }
+            SimEvent::InstanceProvisioned => self.on_instance_provisioned(job),
+            SimEvent::RestoreDone { report } => self.on_restore_done(job, report),
+            SimEvent::BoundaryReached => self.on_boundary(job),
+            SimEvent::StepDone => self.on_step_done(job),
+            SimEvent::CkptDone { periodic, outcome } => {
+                self.on_ckpt_done(job, periodic, outcome)
+            }
+            SimEvent::NoticePosted => self.on_notice_posted(job),
+            SimEvent::PollTick => self.on_poll_tick(job),
+            SimEvent::NoticeDeadline => self.on_instance_reclaimed(job),
+            SimEvent::TerminationCkptDone { outcome, notice } => {
+                self.on_termination_ckpt_done(job, outcome, notice)
+            }
+            SimEvent::InstanceEvicted => self.on_instance_reclaimed(job),
+            SimEvent::PoolPriceChanged { .. } => {
+                unreachable!("price events are cluster-level, never job-tagged")
+            }
+        }
+    }
+
+    // --------------------------------------------------------- admission
+
+    fn on_job_arrived(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        self.timeline.record_with(now, EventKind::JobSubmitted, || {
+            self.jobs[job].name.clone()
+        });
+        let at = self.jobs[job].submitted_at;
+        self.sched_job(job, at, SimEvent::ReplacementRequested);
+        Ok(())
+    }
+
+    /// A job needs an instance: place, then either reserve a slot and
+    /// open the provisioning chain, or park in the wait queue.
+    fn request_admission(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let views = self.fleet.views();
+        let pool = self.placement.place(self.jobs[job].active, &views);
+        if self.slot_free(pool) {
+            return self.admit(job, pool);
+        }
+        let prio = self.jobs[job].priority;
+        self.timeline.record_with(now, EventKind::CapacityExhausted, || {
+            format!(
+                "{}: {} at capacity {}",
+                self.jobs[job].name,
+                self.fleet.pool_name(pool),
+                self.fleet.pool_capacity(pool)
+            )
+        });
+        self.timeline.record_with(now, EventKind::JobQueued, || {
+            format!("{} (priority {prio})", self.jobs[job].name)
+        });
+        self.waiting.entry(prio).or_default().push_back(job);
+        Ok(())
+    }
+
+    fn slot_free(&self, pool: PoolId) -> bool {
+        self.fleet.pool_running(pool) + self.reserved[pool.0]
+            < self.fleet.pool_capacity(pool)
+    }
+
+    /// Reserve the slot and run the engine's placement-decision step.
+    fn admit(&mut self, job: usize, pool: PoolId) -> Result<()> {
+        let now = self.clock.now();
+        self.reserved[pool.0] += 1;
+        if self.jobs[job].admitted_at.is_none() {
+            self.jobs[job].admitted_at = Some(now);
+        }
+        if self.fleet.is_multi_pool() {
+            let name = self.placement.name();
+            self.jobs[job].timeline.record_with(
+                now,
+                EventKind::ReplacementRequested,
+                || format!("placement via {name}"),
+            );
+        }
+        self.sched_job(job, now, SimEvent::PlacementDecided { pool });
+        Ok(())
+    }
+
+    /// A slot was freed: admit waiters, head first, strictly FIFO within
+    /// each priority. The head waiter re-places against the *current*
+    /// views; if its pool is full the whole queue waits behind it.
+    fn try_admit_waiting(&mut self) -> Result<()> {
+        loop {
+            let Some(job) = self.peek_waiting() else { return Ok(()) };
+            let views = self.fleet.views();
+            let pool = self.placement.place(self.jobs[job].active, &views);
+            if !self.slot_free(pool) {
+                return Ok(());
+            }
+            let popped = self.pop_waiting().expect("peeked non-empty");
+            debug_assert_eq!(popped, job);
+            let now = self.clock.now();
+            self.timeline.record_with(now, EventKind::JobAdmitted, || {
+                format!(
+                    "{} -> {}",
+                    self.jobs[job].name,
+                    self.fleet.pool_name(pool)
+                )
+            });
+            self.admit(job, pool)?;
+        }
+    }
+
+    fn peek_waiting(&self) -> Option<usize> {
+        self.waiting
+            .values()
+            .find(|q| !q.is_empty())
+            .map(|q| *q.front().expect("non-empty"))
+    }
+
+    fn pop_waiting(&mut self) -> Option<usize> {
+        self.waiting.values_mut().find_map(|q| q.pop_front())
+    }
+
+    // ----------------------------------------- per-job engine handlers
+    //
+    // Each mirrors its `super::engine` namesake exactly, with the job's
+    // private world substituted for the engine's run-wide state and
+    // `cancel_subject` for token-list cancellation.
+
+    fn on_placement_decided(&mut self, job: usize, pool: PoolId) -> Result<()> {
+        let now = self.clock.now();
+        if pool.0 >= self.fleet.num_pools() {
+            bail!(
+                "placement picked {pool} but the fleet has {} pool(s)",
+                self.fleet.num_pools()
+            );
+        }
+        self.jobs[job].active = pool;
+        if self.fleet.is_multi_pool() {
+            let views = self.fleet.views();
+            let view = &views[pool.0];
+            self.jobs[job].timeline.record_with(
+                now,
+                EventKind::PlacementDecided,
+                || {
+                    format!(
+                        "{} ({} {} @ ${:.4}/h)",
+                        view.name,
+                        view.vm_size,
+                        if view.spot { "spot" } else { "on-demand" },
+                        view.price_per_hour
+                    )
+                },
+            );
+        }
+        // "first launch free" is a per-job rule here (the engine's
+        // fleet-wide total_launched test degenerates to this for one job)
+        let ready = if self.jobs[job].launches == 0 {
+            now
+        } else {
+            now + self.fleet.pool_provisioning_delay(pool)
+        };
+        self.sched_job(job, ready, SimEvent::InstanceProvisioned);
+        Ok(())
+    }
+
+    fn on_instance_provisioned(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let pool = self.jobs[job].active;
+        let iid = self.fleet.launch_in(pool, now).id;
+        self.reserved[pool.0] -= 1;
+        self.running_total += 1;
+        self.peak_in_flight = self.peak_in_flight.max(self.running_total);
+        let running = self.fleet.pool_running(pool);
+        self.pool_peaks[pool.0] = self.pool_peaks[pool.0].max(running);
+
+        let inst_id = iid.to_string();
+        let multi = self.fleet.is_multi_pool();
+        {
+            let fleet = &self.fleet;
+            let j = &mut self.jobs[job];
+            j.controller.observe_launch(pool, now);
+            j.launches += 1;
+            j.pool_counts[pool.0].0 += 1;
+            j.timeline.record_with(now, EventKind::InstanceLaunch, || {
+                if multi {
+                    format!("{inst_id} in {}", fleet.pool_name(pool))
+                } else {
+                    inst_id.clone()
+                }
+            });
+            let mut monitor = ScheduledEventsMonitor::new(&inst_id);
+            monitor.reset();
+            j.monitor = Some(monitor);
+        }
+
+        let spoton = self.spoton;
+        let notice = self.cfg.cloud.notice;
+        let poll_interval = self.cfg.cloud.poll_interval;
+        let schedule = self.fleet.next_eviction_offset_in(pool).map(|offset| {
+            let post = now + offset;
+            let deadline = post + notice;
+            let detect = if !spoton {
+                deadline
+            } else {
+                let since_start = post.since(now).as_millis();
+                let poll = poll_interval.as_millis().max(1);
+                let ticks = since_start.div_ceil(poll);
+                now + SimDuration::from_millis(ticks * poll)
+            };
+            EvictionSchedule { post, detect, deadline }
+        });
+        self.jobs[job].inst =
+            Some(JobInstance { id: inst_id, iid, pool, schedule });
+
+        if spoton {
+            let j = &mut self.jobs[job];
+            match RestartManager::find_and_restore(
+                &mut j.store,
+                &j.policy,
+                j.workload.as_mut(),
+            ) {
+                Ok(Some(report)) => {
+                    let cost = report.cost;
+                    self.sched_job_in(job, cost, SimEvent::RestoreDone {
+                        report,
+                    });
+                    return Ok(());
+                }
+                Ok(None) => {
+                    if j.evictions > 0 {
+                        j.workload = (j.factory)()?;
+                        j.lost_steps += j.max_steps_seen;
+                    }
+                }
+                Err(e) => return Err(e).context("restart"),
+            }
+        } else if self.jobs[job].evictions > 0 {
+            let j = &mut self.jobs[job];
+            j.workload = (j.factory)()?;
+            j.lost_steps += j.max_steps_seen;
+        }
+
+        self.jobs[job].last_ckpt_at = now;
+        self.sched_job(job, now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    fn on_restore_done(&mut self, job: usize, report: RestoreReport) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        j.restores += 1;
+        j.controller.observe_restore(now);
+        j.lost_steps +=
+            j.max_steps_seen.saturating_sub(report.resumed_total_steps);
+        j.timeline.record_with(now, EventKind::RestoreFromCheckpoint, || {
+            format!(
+                "ckpt {} ({}) -> step {}",
+                report.manifest.id,
+                report.manifest.kind.as_str(),
+                report.resumed_total_steps
+            )
+        });
+        j.last_ckpt_at = now;
+        self.sched_job(job, now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    fn on_boundary(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        if now.since(SimTime::ZERO) >= self.cfg.deadline {
+            let reason = format!("deadline {} exceeded", self.cfg.deadline);
+            self.jobs[job]
+                .timeline
+                .record(now, EventKind::Aborted, reason.clone());
+            self.jobs[job].aborted_reason = Some(reason);
+            return self.finish_job(job, now);
+        }
+
+        if self.spoton && self.periodic_due(job, now) {
+            let j = &mut self.jobs[job];
+            j.workload.snapshot_into(&mut j.snap_buf)?;
+            let outcome = j.writer.write(
+                &mut j.store,
+                now,
+                CkptKind::Periodic,
+                j.workload.as_ref(),
+                &j.snap_buf,
+            )?;
+            let cost = outcome.cost();
+            self.sched_job_in(job, cost, SimEvent::CkptDone {
+                periodic: true,
+                outcome,
+            });
+            return Ok(());
+        }
+
+        self.decide_step(job)
+    }
+
+    fn periodic_due(&mut self, job: usize, now: SimTime) -> bool {
+        let pool = self.jobs[job]
+            .inst
+            .as_ref()
+            .map(|i| i.pool)
+            .unwrap_or(self.jobs[job].active);
+        let price_factor = self.fleet.price_factor(pool);
+        let j = &mut self.jobs[job];
+        let Some(base) = j.policy.periodic_interval() else {
+            return false;
+        };
+        let ctx = PolicyCtx {
+            now,
+            last_ckpt: j.last_ckpt_at,
+            base_interval: base,
+            ckpt_cost: j.ckpt_cost_est,
+            pool,
+            price_factor,
+        };
+        now.since(j.last_ckpt_at) >= j.controller.next_interval(&ctx)
+    }
+
+    fn decide_step(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let j = &self.jobs[job];
+        let stage = j.workload.progress().stage as usize;
+        let step_cost = SimDuration::from_secs_f64(
+            self.cfg.workload.stage_secs[stage] as f64
+                / j.workload.stage_steps(stage as u32) as f64
+                * self.overhead_factor,
+        );
+
+        if let Some(es) = j.inst.as_ref().and_then(|inst| inst.schedule) {
+            let step_end = now + step_cost;
+            if es.detect <= step_end || es.deadline <= step_end {
+                let post_visible = es.post.max(now);
+                self.sched_job(job, post_visible, SimEvent::NoticePosted);
+                return Ok(());
+            }
+        }
+
+        self.sched_job_in(job, step_cost, SimEvent::StepDone);
+        Ok(())
+    }
+
+    fn on_step_done(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        let outcome = j.workload.step()?;
+        j.max_steps_seen = j.max_steps_seen.max(j.workload.progress().total_steps);
+
+        let mut milestone = false;
+        match outcome {
+            StepOutcome::Advanced => {}
+            StepOutcome::Milestone => milestone = true,
+            StepOutcome::StageComplete(s) => {
+                milestone = true;
+                j.completion_at[s as usize] = Some(now);
+                j.timeline.record_with(now, EventKind::StageComplete, || {
+                    j.workload.stage_label(s)
+                });
+            }
+            StepOutcome::Done => {
+                let s = (j.workload.num_stages() - 1) as usize;
+                j.completion_at[s] = Some(now);
+                j.timeline.record_with(now, EventKind::StageComplete, || {
+                    j.workload.stage_label(s as u32)
+                });
+                j.timeline.record_with(now, EventKind::WorkloadDone, || {
+                    format!("{} steps", j.workload.progress().total_steps)
+                });
+                j.completed = true;
+                return self.finish_job(job, now);
+            }
+        }
+
+        if milestone
+            && self.spoton
+            && self.jobs[job].policy.persists_app_milestones()
+        {
+            let j = &mut self.jobs[job];
+            if let Some(snap) = j.workload.app_snapshot()? {
+                let outcome = j.writer.write(
+                    &mut j.store,
+                    now,
+                    CkptKind::AppNative,
+                    j.workload.as_ref(),
+                    &snap,
+                )?;
+                let cost = outcome.cost();
+                self.sched_job_in(job, cost, SimEvent::CkptDone {
+                    periodic: false,
+                    outcome,
+                });
+                return Ok(());
+            }
+        }
+
+        self.sched_job(job, now, SimEvent::BoundaryReached);
+        Ok(())
+    }
+
+    fn on_ckpt_done(
+        &mut self,
+        job: usize,
+        periodic: bool,
+        outcome: crate::checkpoint::WriteOutcome,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        if periodic {
+            j.controller.observe_ckpt_cost(outcome.cost());
+        }
+        if let Some(manifest) = outcome.committed() {
+            if periodic {
+                j.periodic_ckpts += 1;
+                j.timeline.record_with(now, EventKind::CheckpointCommitted, || {
+                    format!("periodic ckpt {}", manifest.id)
+                });
+            } else {
+                j.app_ckpts += 1;
+                j.timeline.record_with(now, EventKind::CheckpointCommitted, || {
+                    format!("application ckpt {}", manifest.id)
+                });
+            }
+        }
+        CheckpointStore::gc(&mut j.store, 3)?;
+        if periodic {
+            j.last_ckpt_at = now;
+            self.decide_step(job)
+        } else {
+            self.sched_job(job, now, SimEvent::BoundaryReached);
+            Ok(())
+        }
+    }
+
+    fn on_notice_posted(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        let (inst_id, es) = {
+            let inst = j
+                .inst
+                .as_ref()
+                .expect("notice events require a live instance");
+            (
+                inst.id.clone(),
+                inst.schedule.expect("notice without an eviction schedule"),
+            )
+        };
+        let detail = j.metadata.post_preempt(&inst_id, es.deadline);
+        j.timeline.record(now, EventKind::EvictionNotice, detail);
+        j.notices += 1;
+
+        if !self.spoton || es.detect >= es.deadline {
+            self.sched_job(job, es.deadline.max(now), SimEvent::NoticeDeadline);
+        } else {
+            self.sched_job(job, es.detect.max(now), SimEvent::PollTick);
+        }
+        Ok(())
+    }
+
+    fn on_poll_tick(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        let deadline = j
+            .inst
+            .as_ref()
+            .and_then(|inst| inst.schedule)
+            .expect("poll tick without an eviction schedule")
+            .deadline;
+        let reaction = handlers::on_poll_tick(
+            j.monitor.as_mut().expect("live instance has a monitor"),
+            &mut j.metadata,
+            &j.policy,
+            &mut j.writer,
+            &mut j.store,
+            j.workload.as_ref(),
+            now,
+            deadline,
+        )?;
+        match reaction {
+            PollReaction::TerminationCkpt { notice, outcome } => {
+                let cost = outcome.cost();
+                self.sched_job_in(job, cost, SimEvent::TerminationCkptDone {
+                    outcome,
+                    notice,
+                });
+            }
+            PollReaction::AckOnly => {
+                self.sched_job(job, now, SimEvent::InstanceEvicted);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_termination_ckpt_done(
+        &mut self,
+        job: usize,
+        outcome: crate::checkpoint::WriteOutcome,
+        notice: Notice,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let j = &mut self.jobs[job];
+        if let Some(manifest) = outcome.committed() {
+            j.termination_ok += 1;
+            j.timeline.record_with(now, EventKind::CheckpointCommitted, || {
+                format!("termination ckpt {}", manifest.id)
+            });
+        } else {
+            j.termination_failed += 1;
+            j.timeline.record(
+                now,
+                EventKind::CheckpointFailed,
+                "termination ckpt missed deadline",
+            );
+        }
+        handlers::ack_notice(
+            j.monitor.as_ref().expect("live instance has a monitor"),
+            &mut j.metadata,
+            &notice,
+        );
+        self.sched_job(job, now, SimEvent::InstanceEvicted);
+        Ok(())
+    }
+
+    /// The instance dies: bill it, free its slot, admit waiters, then let
+    /// the evicted job re-request (it joins the back of the queue if the
+    /// fleet is still full — waiters are never starved by churners).
+    fn on_instance_reclaimed(&mut self, job: usize) -> Result<()> {
+        let now = self.clock.now();
+        let inst = self.jobs[job]
+            .inst
+            .take()
+            .expect("reclaim events require a live instance");
+        let pool = inst.pool;
+        if self
+            .fleet
+            .terminate_in(pool, inst.iid, now, &mut self.jobs[job].billing)
+        {
+            self.running_total -= 1;
+            self.fleet.note_eviction(pool);
+            self.jobs[job].controller.observe_eviction(pool, now);
+            self.jobs[job].pool_counts[pool.0].1 += 1;
+        }
+        let j = &mut self.jobs[job];
+        j.metadata.clear_resource(&inst.id);
+        j.evictions += 1;
+        j.timeline.record(now, EventKind::InstanceEvicted, inst.id);
+        self.queue.cancel_subject(job);
+        self.try_admit_waiting()?;
+        self.sched_job(job, now, SimEvent::ReplacementRequested);
+        Ok(())
+    }
+
+    fn on_price_changed(&mut self, pool: PoolId, idx: usize) -> Result<()> {
+        let now = self.clock.now();
+        let (point, next) = {
+            let points = self.fleet.price_points(pool);
+            (points[idx], points.get(idx + 1).copied())
+        };
+        let (old, new) = self.fleet.apply_price_factor(pool, point.factor, now);
+        // the one documented O(jobs) event: market moves are trace-rare
+        // and every live controller must see them
+        for j in self.jobs.iter_mut().filter(|j| !j.finished) {
+            j.controller.observe_price(pool, point.factor);
+        }
+        self.timeline.record_with(now, EventKind::PoolPriceChanged, || {
+            format!(
+                "{}: ${old:.4}/h -> ${new:.4}/h (x{})",
+                self.fleet.pool_name(pool),
+                point.factor
+            )
+        });
+        if let Some(next) = next {
+            let token = self.queue.schedule(
+                SimTime::ZERO + next.offset,
+                ClusterEvent::PoolPriceChanged { pool, idx: idx + 1 },
+            );
+            self.price_tokens.push(token);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------- run ending
+
+    /// A job ends (workload done or deadline abort): terminate its
+    /// instance, drop its pending events, free the slot for waiters.
+    fn finish_job(&mut self, job: usize, now: SimTime) -> Result<()> {
+        if let Some(inst) = self.jobs[job].inst.take() {
+            if self.fleet.terminate_in(
+                inst.pool,
+                inst.iid,
+                now,
+                &mut self.jobs[job].billing,
+            ) {
+                self.running_total -= 1;
+            }
+        }
+        self.jobs[job].finished = true;
+        self.jobs[job].finished_at = Some(now);
+        self.queue.cancel_subject(job);
+        self.finished_jobs += 1;
+        self.timeline.record_with(now, EventKind::JobFinished, || {
+            let j = &self.jobs[job];
+            format!(
+                "{} ({})",
+                j.name,
+                if j.completed { "completed" } else { "aborted" }
+            )
+        });
+        if self.finished_jobs == self.jobs.len() {
+            for token in self.price_tokens.drain(..) {
+                self.queue.cancel(token);
+            }
+        } else {
+            self.try_admit_waiting()?;
+        }
+        Ok(())
+    }
+
+    fn finalize(self) -> Result<ClusterResult> {
+        let cfg = self.cfg;
+        let end = self.clock.now();
+        let views = self.fleet.views();
+        let multi = self.fleet.is_multi_pool();
+        let spoton = self.spoton;
+
+        let mut outcomes = Vec::with_capacity(self.jobs.len());
+        for j in self.jobs {
+            let finished_at = j.finished_at.unwrap_or(end);
+            let total = finished_at.since(j.submitted_at);
+            let mut billing = j.billing;
+            if spoton && j.policy.protected() {
+                billing.book_storage(
+                    "nfs-share",
+                    cfg.storage.provisioned_gib,
+                    total,
+                    cfg.storage.price_per_100gib_month,
+                );
+            }
+
+            let mut stage_times = Vec::new();
+            let mut prev = j.submitted_at;
+            for (i, at) in j.completion_at.iter().enumerate() {
+                if let Some(t) = at {
+                    stage_times
+                        .push((j.workload.stage_label(i as u32), t.since(prev)));
+                    prev = *t;
+                }
+            }
+            if let Some(reason) = &j.aborted_reason {
+                log::warn!("{}: {reason}", j.name);
+            }
+            let pool_stats = views
+                .iter()
+                .enumerate()
+                .map(|(i, v)| PoolStats {
+                    pool: v.name.clone(),
+                    vm_size: v.vm_size.clone(),
+                    spot: v.spot,
+                    launches: j.pool_counts[i].0,
+                    evictions: j.pool_counts[i].1,
+                    compute_cost: if multi {
+                        billing.pool_compute_total(&v.name)
+                    } else {
+                        billing.compute_total()
+                    },
+                })
+                .collect();
+
+            let result = RunResult {
+                scenario: j.name.clone(),
+                completed: j.completed,
+                stage_times,
+                total,
+                notices: j.notices,
+                evictions: j.evictions,
+                instances: j.launches,
+                periodic_ckpts: j.periodic_ckpts,
+                termination_ok: j.termination_ok,
+                termination_failed: j.termination_failed,
+                app_ckpts: j.app_ckpts,
+                restores: j.restores,
+                lost_steps: j.lost_steps,
+                compute_cost: billing.compute_total(),
+                storage_cost: billing.storage_total(),
+                invoice: billing.invoice(),
+                pool_stats,
+                timeline: j.timeline,
+                final_fingerprint: j.workload.fingerprint(),
+            };
+            outcomes.push(JobOutcome {
+                name: j.name,
+                priority: j.priority,
+                submitted_at: j.submitted_at,
+                admitted_at: j.admitted_at,
+                finished_at,
+                result,
+            });
+        }
+
+        Ok(ClusterResult {
+            scenario: cfg.name.clone(),
+            jobs: outcomes,
+            timeline: self.timeline,
+            events_processed: self.events_processed,
+            makespan: end.since(SimTime::ZERO),
+            peak_in_flight: self.peak_in_flight,
+            peak_in_flight_per_pool: self.pool_peaks,
+        })
+    }
+}
+
+/// Arrival instants per job, in job order. Poisson draws come from a
+/// dedicated salt of the scenario seed so arrivals never perturb
+/// eviction plans or price walks.
+fn arrival_times(ccfg: &ClusterCfg, seed: u64) -> Vec<SimTime> {
+    let n = ccfg.jobs.len();
+    match &ccfg.arrival {
+        ArrivalCfg::Batch => vec![SimTime::ZERO; n],
+        ArrivalCfg::Uniform { spacing } => (0..n as u64)
+            .map(|i| {
+                SimTime::ZERO + SimDuration::from_millis(spacing.as_millis() * i)
+            })
+            .collect(),
+        ArrivalCfg::Poisson { mean } => {
+            let mut rng = Prng::new(seed ^ ARRIVAL_SEED_SALT);
+            let mean_s = mean.as_secs_f64();
+            let mut t = SimTime::ZERO;
+            (0..n)
+                .map(|_| {
+                    t = t + SimDuration::from_secs_f64(rng.exp(mean_s));
+                    t
+                })
+                .collect()
+        }
+    }
+}
+
+fn build_job(
+    cfg: &ScenarioConfig,
+    name: &str,
+    priority: u32,
+    submitted_at: SimTime,
+    mut factory: JobFactory,
+    n_pools: usize,
+) -> Result<JobState> {
+    let workload = factory()
+        .with_context(|| format!("building workload for job '{name}'"))?;
+    let n_stages = workload.num_stages() as usize;
+    if cfg.workload.stage_secs.len() != n_stages {
+        bail!(
+            "scenario has {} stage durations but workload has {} stages",
+            cfg.workload.stage_secs.len(),
+            n_stages
+        );
+    }
+    let policy = CheckpointPolicy::new(cfg.checkpoint.clone())
+        .with_compression(cfg.compress_termination)
+        .with_controller(cfg.adaptive.clone());
+    if policy.periodic_interval().is_none()
+        && *policy.controller() != crate::config::IntervalControllerCfg::Fixed
+    {
+        bail!(
+            "adaptive interval controller '{}' requires the transparent \
+             checkpoint method (it tunes the periodic interval)",
+            policy.controller().label()
+        );
+    }
+    let controller = build_controller(policy.controller())?;
+    let store = BlobStore::new(
+        TransferModel {
+            bandwidth_mib_s: cfg.storage.bandwidth_mib_s,
+            latency: cfg.storage.latency,
+        },
+        Some(cfg.storage.provisioned_gib),
+    );
+    let ckpt_cost_est = store
+        .transfer_cost((cfg.workload.state_gib * (1u64 << 30) as f64) as u64);
+    Ok(JobState {
+        name: name.to_string(),
+        priority,
+        factory,
+        store,
+        workload,
+        policy,
+        controller,
+        ckpt_cost_est,
+        billing: BillingMeter::new(),
+        timeline: Timeline::with_level(cfg.metrics),
+        metadata: MetadataService::new(),
+        writer: CheckpointWriter::new(),
+        monitor: None,
+        inst: None,
+        snap_buf: Snapshot { bytes: Vec::new(), charged_bytes: 0 },
+        active: PoolId(0),
+        pool_counts: vec![(0, 0); n_pools],
+        launches: 0,
+        submitted_at,
+        admitted_at: None,
+        finished_at: None,
+        last_ckpt_at: SimTime::ZERO,
+        completion_at: vec![None; n_stages],
+        notices: 0,
+        evictions: 0,
+        periodic_ckpts: 0,
+        termination_ok: 0,
+        termination_failed: 0,
+        app_ckpts: 0,
+        restores: 0,
+        lost_steps: 0,
+        max_steps_seen: 0,
+        completed: false,
+        aborted_reason: None,
+        finished: false,
+    })
+}
+
+// ------------------------------------------------------- sweep driver
+
+/// One merged cluster-sweep entry.
+#[derive(Debug)]
+pub struct SeededClusterRun {
+    pub seed: u64,
+    pub result: ClusterResult,
+}
+
+/// Monte Carlo sweep over one base cluster scenario: each seeded run is
+/// one sequential cluster engine; the sweep parallelizes **across runs**
+/// and merges by seed position, so the merged vector is byte-identical
+/// at any thread count (pinned by `tests/sweep_determinism.rs`).
+#[derive(Debug, Clone)]
+pub struct ClusterSweep {
+    base: Experiment,
+    seeds: Vec<u64>,
+    threads: usize,
+    record: RecordLevel,
+}
+
+impl Experiment {
+    /// Run this scenario's `[cluster]` with one sleeper workload per job.
+    pub fn run_cluster_sleeper(&self) -> Result<ClusterResult> {
+        let n = self.cfg.cluster.as_ref().map_or(1, |c| c.jobs.len());
+        let factories = (0..n).map(|_| self.sleeper_factory()).collect();
+        ClusterEngine::new(&self.cfg, factories)?.run()
+    }
+
+    /// Start a cluster sweep over this experiment.
+    pub fn cluster_sweep(&self) -> ClusterSweep {
+        ClusterSweep::new(self.clone())
+    }
+}
+
+impl ClusterSweep {
+    pub fn new(base: Experiment) -> Self {
+        Self {
+            base,
+            seeds: Vec::new(),
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            record: RecordLevel::Counts,
+        }
+    }
+
+    /// Explicit seed list (merge order == this order).
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    /// The contiguous seed range `first .. first + n`.
+    pub fn seed_range(self, first: u64, n: usize) -> Self {
+        let seeds: Vec<u64> =
+            (0..n as u64).map(|i| first.wrapping_add(i)).collect();
+        self.seeds(seeds)
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    pub fn record(mut self, level: RecordLevel) -> Self {
+        self.record = level;
+        self
+    }
+
+    /// One run at `seed`, exactly as the sweep executes it.
+    pub fn run_one(&self, seed: u64) -> Result<ClusterResult> {
+        let mut exp = self.base.clone().seed(seed);
+        exp.cfg.metrics = self.record;
+        exp.run_cluster_sleeper()
+    }
+
+    /// Run every seed and merge by seed position (same worker scheme as
+    /// [`super::sweep::Sweep::run`]: atomic work index, local stashes,
+    /// position merge — worker identity never leaks into the output).
+    pub fn run(&self) -> Result<Vec<SeededClusterRun>> {
+        let n = self.seeds.len();
+        let workers = self.threads.min(n.max(1));
+        let mut slots: Vec<Option<Result<ClusterResult>>> =
+            (0..n).map(|_| None).collect();
+
+        if workers <= 1 {
+            for (i, &seed) in self.seeds.iter().enumerate() {
+                slots[i] = Some(self.run_one(seed));
+            }
+        } else {
+            let next = AtomicUsize::new(0);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(workers);
+                for _ in 0..workers {
+                    let next = &next;
+                    handles.push(scope.spawn(move || {
+                        let mut local: Vec<(usize, Result<ClusterResult>)> =
+                            Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, self.run_one(self.seeds[i])));
+                        }
+                        local
+                    }));
+                }
+                for h in handles {
+                    for (i, r) in h.join().expect("cluster sweep worker panicked")
+                    {
+                        slots[i] = Some(r);
+                    }
+                }
+            });
+        }
+
+        self.seeds
+            .iter()
+            .zip(slots)
+            .map(|(&seed, slot)| {
+                slot.expect("every seed index visited exactly once")
+                    .map(|result| SeededClusterRun { seed, result })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simclock::SimDuration;
+
+    fn contended(jobs: usize, capacity: u32) -> Experiment {
+        let mut exp = Experiment::table1()
+            .named("cluster-unit")
+            .scale_stages(0.02)
+            .eviction_poisson(SimDuration::from_mins(40))
+            .transparent(SimDuration::from_mins(10))
+            .deadline(SimDuration::from_hours(400));
+        exp.cfg.cluster =
+            Some(ClusterCfg::with_count(jobs).capacity(capacity));
+        exp
+    }
+
+    #[test]
+    fn contended_batch_queues_and_completes_all_jobs() {
+        let r = contended(6, 2).run_cluster_sleeper().unwrap();
+        assert_eq!(r.jobs.len(), 6);
+        assert_eq!(r.completed_jobs(), 6, "{}", r.summary());
+        // 6 jobs on 2 slots: at least 4 had to queue at submission
+        assert!(r.queued_admissions() >= 4, "{}", r.summary());
+        assert_eq!(
+            r.timeline.count(EventKind::CapacityExhausted),
+            r.timeline.count(EventKind::JobQueued),
+            "every CapacityExhausted must be followed by a JobQueued"
+        );
+        assert_eq!(r.timeline.count(EventKind::JobSubmitted), 6);
+        assert_eq!(r.timeline.count(EventKind::JobFinished), 6);
+        // jobs genuinely interleave, but never beyond capacity
+        assert_eq!(r.peak_in_flight, 2);
+        assert_eq!(r.peak_in_flight_per_pool, vec![2]);
+        assert!(r.timeline.is_monotone());
+        // queued jobs really waited
+        let waited = r
+            .jobs
+            .iter()
+            .filter(|j| !j.wait().is_zero())
+            .count();
+        assert!(waited >= 4, "{waited} jobs waited");
+        for j in &r.jobs {
+            assert!(j.result.completed, "{}", j.name);
+            assert!(j.result.timeline.is_monotone(), "{}", j.name);
+        }
+    }
+
+    #[test]
+    fn same_priority_admits_fifo_lower_priority_number_first() {
+        // 1 slot, 4 jobs, no evictions (each job holds the slot to
+        // completion, so the admission order is exactly the queue
+        // discipline): job 0 takes the free slot, 1..3 queue. Job 3 gets
+        // priority 0 (highest), the rest 1 — it must be admitted first
+        // even though it queued last; 1 and 2 follow FIFO.
+        let mut exp = Experiment::table1()
+            .named("cluster-prio")
+            .scale_stages(0.02)
+            .transparent(SimDuration::from_mins(10))
+            .deadline(SimDuration::from_hours(400));
+        exp.cfg.cluster = Some(
+            ClusterCfg::with_count(4)
+                .capacity(1)
+                .priorities(vec![1, 1, 1, 0]),
+        );
+        let r = exp.run_cluster_sleeper().unwrap();
+        assert_eq!(r.completed_jobs(), 4);
+        let admitted: Vec<&str> = r
+            .timeline
+            .events()
+            .iter()
+            .filter(|e| e.kind == EventKind::JobAdmitted)
+            .map(|e| e.detail.split(' ').next().unwrap())
+            .collect();
+        assert_eq!(
+            admitted,
+            ["job-3", "job-1", "job-2"],
+            "priority 0 first, then FIFO within priority 1"
+        );
+    }
+
+    #[test]
+    fn cluster_runs_are_deterministic_per_seed() {
+        // Stormy enough that evictions certainly land inside each job's
+        // runtime (~37 min of work vs a 10-min poisson mean), so the
+        // seed genuinely shapes the run.
+        let stormy = |seed: u64| {
+            let mut exp = Experiment::table1()
+                .named("cluster-det")
+                .scale_stages(0.2)
+                .eviction_poisson(SimDuration::from_mins(10))
+                .transparent(SimDuration::from_mins(10))
+                .deadline(SimDuration::from_hours(400))
+                .seed(seed);
+            exp.cfg.cluster = Some(ClusterCfg::with_count(3).capacity(2));
+            exp.run_cluster_sleeper().unwrap()
+        };
+        let a = stormy(1234);
+        assert!(
+            a.jobs.iter().any(|j| j.result.evictions > 0),
+            "storm must actually evict: {}",
+            a.summary()
+        );
+        assert_eq!(cluster_digest(&a), cluster_digest(&stormy(1234)));
+        assert_ne!(
+            cluster_digest(&a),
+            cluster_digest(&stormy(1235)),
+            "seed must matter under poisson evictions"
+        );
+    }
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_ordered() {
+        let ccfg = ClusterCfg::with_count(8).arrival(ArrivalCfg::Poisson {
+            mean: SimDuration::from_mins(3),
+        });
+        let a = arrival_times(&ccfg, 7);
+        let b = arrival_times(&ccfg, 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+        assert!(a[0] > SimTime::ZERO);
+        let c = arrival_times(&ccfg, 8);
+        assert_ne!(a, c, "seed drives arrivals");
+        // uniform spacing is exact
+        let u = ClusterCfg::with_count(3).arrival(ArrivalCfg::Uniform {
+            spacing: SimDuration::from_mins(5),
+        });
+        assert_eq!(
+            arrival_times(&u, 0),
+            vec![
+                SimTime::ZERO,
+                SimTime::ZERO + SimDuration::from_mins(5),
+                SimTime::ZERO + SimDuration::from_mins(10),
+            ]
+        );
+    }
+
+    #[test]
+    fn factory_count_must_match_job_count() {
+        let exp = contended(3, 1);
+        let err = ClusterEngine::new(&exp.cfg, vec![]).unwrap_err();
+        assert!(err.to_string().contains("3 job(s)"), "{err}");
+    }
+}

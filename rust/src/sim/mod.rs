@@ -20,6 +20,11 @@
 //! * [`sweep`] — the parallel Monte Carlo driver: thousands of seeded
 //!   runs fanned across threads, merged deterministically by seed, fed
 //!   into [`crate::report::distribution`] summaries.
+//! * [`cluster`] — the multiplexed cluster engine: thousands of
+//!   concurrent jobs interleaved as subject-tagged events on **one**
+//!   queue around **one** capacity-bounded fleet, with FIFO-per-priority
+//!   admission when pools are full; throughput measured in events/sec
+//!   (`benches/perf_cluster.rs`).
 //!
 //! ## Time accounting
 //!
@@ -36,11 +41,15 @@
 //!   provisions it (a scheduled event, not a blocking wait), the
 //!   coordinator restores from the most recent valid checkpoint.
 
+pub mod cluster;
 pub mod engine;
 pub mod experiment;
 pub mod legacy;
 pub mod sweep;
 
+pub use cluster::{
+    ClusterEngine, ClusterResult, ClusterSweep, JobOutcome, SeededClusterRun,
+};
 pub use engine::SimEvent;
 pub use experiment::Experiment;
 pub use sweep::{ControllerSweep, SeededRun, Sweep};

@@ -76,6 +76,12 @@ pub struct EventQueue<E> {
     states: Vec<TokenState>,
     /// Number of `Live` tokens (== the queue's logical length).
     live: usize,
+    /// `subjects[s]` holds the tokens scheduled under subject `s` via
+    /// [`EventQueue::schedule_for`]. Lists are pruned lazily: popped and
+    /// cancelled tokens linger until the subject's next
+    /// [`EventQueue::cancel_subject`], where cancelling a dead token is a
+    /// free no-op. Grown on demand — untagged schedules pay nothing.
+    subjects: Vec<Vec<u64>>,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -90,6 +96,7 @@ impl<E> EventQueue<E> {
             heap: BinaryHeap::new(),
             states: Vec::new(),
             live: 0,
+            subjects: Vec::new(),
         }
     }
 
@@ -112,6 +119,51 @@ impl<E> EventQueue<E> {
         event: E,
     ) -> u64 {
         self.schedule(now + delay, event)
+    }
+
+    /// Schedule `event` at `at` under a **subject** — a caller-chosen
+    /// dense id (a job index, an instance slot) whose pending events can
+    /// later be dropped wholesale with [`EventQueue::cancel_subject`].
+    /// This is the targeted-dispatch primitive of the multiplexed cluster
+    /// engine: thousands of jobs share one queue, and one job's death
+    /// cancels exactly its own timers without scanning the heap or any
+    /// other job's bookkeeping.
+    pub fn schedule_for(&mut self, subject: usize, at: SimTime, event: E) -> u64 {
+        let token = self.schedule(at, event);
+        if subject >= self.subjects.len() {
+            self.subjects.resize_with(subject + 1, Vec::new);
+        }
+        self.subjects[subject].push(token);
+        token
+    }
+
+    /// [`EventQueue::schedule_for`] with a relative delay.
+    pub fn schedule_for_in(
+        &mut self,
+        subject: usize,
+        now: SimTime,
+        delay: SimDuration,
+        event: E,
+    ) -> u64 {
+        self.schedule_for(subject, now + delay, event)
+    }
+
+    /// Cancel every still-pending event scheduled under `subject`;
+    /// returns how many were actually live. Tokens already popped or
+    /// individually cancelled are skipped for free. O(events ever tagged
+    /// with this subject since its last `cancel_subject`).
+    pub fn cancel_subject(&mut self, subject: usize) -> usize {
+        let Some(tokens) = self.subjects.get_mut(subject) else {
+            return 0;
+        };
+        let tokens = std::mem::take(tokens);
+        let mut cancelled = 0;
+        for token in tokens {
+            if self.cancel(token) {
+                cancelled += 1;
+            }
+        }
+        cancelled
     }
 
     /// Cancel a previously scheduled event by token. Returns whether the
@@ -171,6 +223,9 @@ impl<E> EventQueue<E> {
         self.heap.clear();
         for s in &mut self.states {
             *s = TokenState::Dead;
+        }
+        for s in &mut self.subjects {
+            s.clear();
         }
         self.live = 0;
     }
@@ -297,6 +352,110 @@ mod tests {
         assert!(q.is_empty());
         assert_eq!(q.len(), 0);
         assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn cancel_subject_drops_only_that_subjects_events() {
+        let mut q = EventQueue::new();
+        q.schedule_for(0, SimTime::from_secs(1), "job0-a");
+        q.schedule_for(1, SimTime::from_secs(2), "job1-a");
+        q.schedule_for(0, SimTime::from_secs(3), "job0-b");
+        q.schedule(SimTime::from_secs(4), "untagged");
+        assert_eq!(q.cancel_subject(0), 2);
+        assert_eq!(q.len(), 2);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|s| s.event))
+            .collect();
+        assert_eq!(order, ["job1-a", "untagged"]);
+    }
+
+    #[test]
+    fn cancel_subject_skips_popped_and_cancelled_tokens() {
+        let mut q = EventQueue::new();
+        q.schedule_for(3, SimTime::from_secs(1), "fired");
+        let t = q.schedule_for(3, SimTime::from_secs(2), "cancelled");
+        q.schedule_for(3, SimTime::from_secs(3), "pending");
+        assert_eq!(q.pop().unwrap().event, "fired");
+        assert!(q.cancel(t));
+        // only "pending" is still live under subject 3
+        assert_eq!(q.cancel_subject(3), 1);
+        assert!(q.is_empty());
+        // the subject's list was drained: a second sweep is a no-op, and
+        // fresh schedules under the same subject work normally
+        assert_eq!(q.cancel_subject(3), 0);
+        q.schedule_for(3, SimTime::from_secs(4), "fresh");
+        assert_eq!(q.cancel_subject(3), 1);
+        // unknown subjects are a no-op too
+        assert_eq!(q.cancel_subject(999), 0);
+    }
+
+    #[test]
+    fn schedule_for_in_is_relative() {
+        let mut q = EventQueue::new();
+        let now = SimTime::from_secs(50);
+        q.schedule_for_in(0, now, SimDuration::from_secs(5), "later");
+        assert_eq!(q.pop().unwrap().at, SimTime::from_secs(55));
+    }
+
+    #[test]
+    fn clear_resets_subject_lists() {
+        let mut q = EventQueue::new();
+        q.schedule_for(0, SimTime::from_secs(1), "a");
+        q.clear();
+        assert_eq!(q.cancel_subject(0), 0);
+        q.schedule_for(0, SimTime::from_secs(2), "b");
+        assert_eq!(q.cancel_subject(0), 1);
+    }
+
+    #[test]
+    fn prop_subject_cancellation_matches_per_token_cancellation() {
+        // Tagging events across a handful of subjects and cancelling one
+        // subject must behave exactly like cancelling that subject's
+        // tokens one by one: survivors pop in unchanged order.
+        forall(
+            Config::default().cases(100),
+            |rng| {
+                let n = rng.range_u64(0, 30);
+                (0..n)
+                    .map(|_| (rng.below(10), rng.below(4)))
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            shrinks_vec,
+            |plan| {
+                let mut tagged = EventQueue::new();
+                let mut manual = EventQueue::new();
+                let mut manual_tokens = Vec::new();
+                for (i, &(t, subj)) in plan.iter().enumerate() {
+                    let at = SimTime::from_secs(t);
+                    tagged.schedule_for(subj as usize, at, i);
+                    manual_tokens.push((subj, manual.schedule(at, i)));
+                }
+                let doomed = 0u64;
+                let n_live = tagged.cancel_subject(doomed as usize);
+                let mut n_manual = 0;
+                for &(subj, token) in &manual_tokens {
+                    if subj == doomed && manual.cancel(token) {
+                        n_manual += 1;
+                    }
+                }
+                if n_live != n_manual {
+                    return Err(format!(
+                        "cancel_subject dropped {n_live}, per-token {n_manual}"
+                    ));
+                }
+                loop {
+                    match (tagged.pop(), manual.pop()) {
+                        (None, None) => return Ok(()),
+                        (a, b)
+                            if a.as_ref().map(|s| (s.at, s.seq, s.event))
+                                != b.as_ref().map(|s| (s.at, s.seq, s.event)) =>
+                        {
+                            return Err(format!("diverged: {a:?} vs {b:?}"))
+                        }
+                        _ => {}
+                    }
+                }
+            },
+        );
     }
 
     #[test]

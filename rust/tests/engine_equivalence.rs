@@ -330,6 +330,100 @@ fn milestone_starvation_app_native() {
     assert_equivalent("milestone-starvation", &exp);
 }
 
+/// Run `exp` as a one-job cluster (the job named after the scenario so
+/// `run_digest` prefixes match) and return that job's `RunResult`.
+fn run_cluster_single(exp: &Experiment) -> RunResult {
+    use spoton::config::ClusterCfg;
+    let mut cfg = exp.cfg.clone();
+    cfg.cluster = Some(ClusterCfg {
+        jobs: vec![cfg.name.clone()],
+        ..ClusterCfg::default()
+    });
+    let cexp = Experiment { cfg };
+    let mut r = cexp.run_cluster_sleeper().expect("cluster run");
+    assert_eq!(r.jobs.len(), 1);
+    assert_eq!(r.peak_in_flight, 1);
+    assert_eq!(r.timeline.count(spoton::metrics::EventKind::JobQueued), 0);
+    r.jobs.remove(0).result
+}
+
+#[test]
+fn single_job_cluster_is_byte_identical_to_engine() {
+    // The multiplexed cluster engine must degenerate *exactly* to the
+    // per-run engine when the cluster holds one batch-arrival job: same
+    // placement decisions, launch ids, eviction draws, checkpoint
+    // instants, billing bits and timeline. Pinned through `run_digest`,
+    // which serializes every field the sweep layer deduplicates on
+    // (costs and fingerprints as raw bits, the full timeline verbatim).
+    // Price *traces* are deliberately absent here: a cluster records
+    // `PoolPriceChanged` once on the cluster-wide timeline rather than
+    // per job, the one documented multi-job divergence.
+    use spoton::sim::sweep::run_digest;
+    let scenarios: Vec<(String, Experiment)> = vec![
+        (
+            "uninterrupted".into(),
+            Experiment::table1().named("solo-base"),
+        ),
+        (
+            "fixed-eviction".into(),
+            Experiment::table1()
+                .named("solo-fixed")
+                .eviction_every(SimDuration::from_mins(90))
+                .transparent(SimDuration::from_mins(30))
+                .deadline(SimDuration::from_hours(30)),
+        ),
+        (
+            "app-native".into(),
+            Experiment::table1()
+                .named("solo-app")
+                .eviction_every(SimDuration::from_mins(45))
+                .app_native()
+                .deadline(SimDuration::from_hours(30)),
+        ),
+        (
+            "short-notice".into(),
+            Experiment::table1()
+                .named("solo-notice")
+                .eviction_every(SimDuration::from_mins(90))
+                .transparent(SimDuration::from_mins(30))
+                .notice(SimDuration::from_secs(5)),
+        ),
+        (
+            "deadline-abort".into(),
+            Experiment::table1()
+                .named("solo-off")
+                .spoton_off()
+                .eviction_every(SimDuration::from_mins(80))
+                .deadline(SimDuration::from_hours(12)),
+        ),
+    ];
+    for (label, exp) in &scenarios {
+        let eng = run_engine(exp);
+        let clu = run_cluster_single(exp);
+        assert_eq!(
+            run_digest(&eng),
+            run_digest(&clu),
+            "{label}: single-job cluster diverged from the engine"
+        );
+    }
+    // seeded poisson storms: the seed must thread through identically
+    for seed in 1u64..=3 {
+        let exp = Experiment::table1()
+            .named("solo-poisson")
+            .eviction_poisson(SimDuration::from_mins(45))
+            .transparent(SimDuration::from_mins(15))
+            .deadline(SimDuration::from_hours(30))
+            .seed(seed);
+        let eng = run_engine(&exp);
+        let clu = run_cluster_single(&exp);
+        assert_eq!(
+            run_digest(&eng),
+            run_digest(&clu),
+            "poisson-seed{seed}: single-job cluster diverged from the engine"
+        );
+    }
+}
+
 #[test]
 fn prop_engine_equals_legacy_on_random_scenarios() {
     // The randomized generator from the driver property suite: eviction

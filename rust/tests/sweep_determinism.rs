@@ -207,6 +207,59 @@ fn adaptive_controller_sweeps_merge_deterministically() {
 }
 
 #[test]
+fn cluster_sweeps_merge_deterministically() {
+    // The multiplexed cluster engine under sweep: each seeded run packs
+    // 200 Poisson-arriving jobs onto one capacity-8 pool (offered load
+    // ~9 — the queue genuinely binds), the sweep fans runs across
+    // threads, and the merged `cluster_digest`s — every job's full
+    // `run_digest` plus the cluster admission timeline — must be
+    // byte-identical at any thread count.
+    use spoton::config::{ArrivalCfg, ClusterCfg};
+    use spoton::sim::cluster::cluster_digest;
+    use spoton::sim::SeededClusterRun;
+    let mut exp = Experiment::table1()
+        .named("cluster-determinism")
+        .scale_stages(0.01)
+        .eviction_poisson(SimDuration::from_mins(30))
+        .transparent(SimDuration::from_mins(5))
+        .deadline(SimDuration::from_hours(4000));
+    exp.cfg.cluster = Some(
+        ClusterCfg::with_count(200).capacity(8).arrival(
+            ArrivalCfg::Poisson { mean: SimDuration::from_mins(2) },
+        ),
+    );
+    let dig = |runs: &[SeededClusterRun]| -> Vec<(u64, String)> {
+        runs.iter()
+            .map(|r| (r.seed, cluster_digest(&r.result)))
+            .collect()
+    };
+    let sweep = exp.cluster_sweep().seed_range(0, 4);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t2 = sweep.clone().threads(2).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    let d1 = dig(&t1);
+    assert_eq!(d1.len(), 4);
+    assert_eq!(d1, dig(&t2), "threads=2 diverged from threads=1");
+    assert_eq!(d1, dig(&t8), "threads=8 diverged from threads=1");
+    // the contention is real in every seeded run: all jobs finish, the
+    // pool saturates, and admissions actually queue
+    for r in &t1 {
+        assert_eq!(r.result.completed_jobs(), 200, "{}", r.result.summary());
+        assert!(
+            r.result.peak_in_flight > 1,
+            "jobs must genuinely interleave: {}",
+            r.result.summary()
+        );
+        assert_eq!(r.result.peak_in_flight_per_pool, vec![8]);
+        assert!(
+            r.result.queued_admissions() > 0,
+            "capacity must bind: {}",
+            r.result.summary()
+        );
+    }
+}
+
+#[test]
 fn multi_pool_sweeps_merge_deterministically() {
     use spoton::config::{EvictionPlanCfg, PlacementPolicyCfg, PoolCfg};
     let exp = Experiment::table1()
