@@ -1,0 +1,164 @@
+//! Sharded sweep runner throughput: the perf figure behind the
+//! multi-process Monte Carlo tentpole.
+//!
+//! One plan (cluster scenario, `SEEDS` seeds × one config = `SEEDS`
+//! cells in `SHARDS` shards) runs through `sim::shard::ShardRunner` at
+//! P ∈ {1, 2, 4} worker processes — real `spoton sweep-worker` OS
+//! processes over a fresh run directory each time — and the merged
+//! digests are asserted byte-identical across every P before any number
+//! is reported. Results land in `BENCH_shards.json`:
+//!
+//! * `procs_P.secs` / `procs_P.runs_per_sec` — best-of-2 wall-clock and
+//!   aggregate sweep throughput at P workers;
+//! * `speedup_4p_vs_1p` — the headline scaling figure (asserted >= 1.8x
+//!   when the host actually has >= 4 cores; reported either way);
+//! * `resume.one_shard_secs` — re-running exactly one lost shard out of
+//!   `SHARDS` plus the re-merge (the checkpointed-progress payoff:
+//!   interruption costs one shard, not the sweep);
+//! * `resume.merge_only_secs` — a fully-complete resume (pure
+//!   verify + merge, no simulation at all).
+
+use spoton::config::ScenarioConfig;
+use spoton::sim::shard::{artifact_path, SeedStream, ShardPlan, ShardRunner};
+use spoton::util::bench::{section, BenchReport};
+use std::time::Instant;
+
+const SEEDS: usize = 32;
+const SHARDS: usize = 8;
+
+/// Each cell is a 24-job contended cluster run: enough engine work
+/// (~tens of ms) that process-level parallelism, not spawn overhead,
+/// dominates the wall-clock.
+const SCENARIO: &str = r#"
+name = "shard-bench"
+deadline_mins = 240000
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [2, 3]
+
+[eviction]
+plan = "poisson"
+mean_mins = 6
+
+[checkpoint]
+method = "transparent"
+interval_mins = 5
+
+[cluster]
+jobs = 24
+capacity = 8
+"#;
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "spoton-shard-bench-{tag}-{}-{}",
+        std::process::id(),
+        spoton::util::next_seq()
+    ))
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ScenarioConfig::from_str_toml(SCENARIO)?;
+    let plan = ShardPlan::new(
+        "bench",
+        SeedStream::contiguous(0, SEEDS),
+        &["base".to_string()],
+        &cfg,
+        SCENARIO,
+        SHARDS,
+    )?;
+    let exe = env!("CARGO_BIN_EXE_spoton");
+    let cells = plan.cells();
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    let mut report = BenchReport::new("shards");
+    report
+        .value("cells", cells as u64)
+        .value("shards", SHARDS as u64)
+        .value("host_cores", cores as u64);
+
+    let mut digests: Vec<String> = Vec::new();
+    let mut best_secs: Vec<f64> = Vec::new();
+    for procs in [1usize, 2, 4] {
+        section(&format!(
+            "sharded sweep: {cells} cells, {SHARDS} shards, {procs} proc(s)"
+        ));
+        let mut best = f64::INFINITY;
+        let mut digest = String::new();
+        for _rep in 0..2 {
+            let dir = tmp(&format!("p{procs}"));
+            let runner =
+                ShardRunner::new(plan.clone(), &dir, exe).procs(procs);
+            runner.init(SCENARIO)?;
+            let t0 = Instant::now();
+            let out = runner.run()?;
+            let secs = t0.elapsed().as_secs_f64();
+            assert!(out.dead_letter.is_empty(), "bench workers must not die");
+            digest = out.merged.expect("bench sweep must complete").digest;
+            best = best.min(secs);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        let rps = cells as f64 / best;
+        println!("  best of 2: {best:.3}s  ->  {rps:.1} runs/sec");
+        report
+            .value(&format!("procs_{procs}.secs"), best)
+            .value(&format!("procs_{procs}.runs_per_sec"), rps);
+        digests.push(digest);
+        best_secs.push(best);
+    }
+
+    // process count must be invisible in the output before any perf
+    // number means anything
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "merged digests diverged across process counts"
+    );
+    report.value("digest", digests[0].as_str());
+
+    let speedup = best_secs[0] / best_secs[2];
+    println!("\n4 procs vs 1: {speedup:.2}x ({cores} host cores)");
+    report.value("speedup_4p_vs_1p", speedup);
+    if cores >= 4 {
+        assert!(
+            speedup >= 1.8,
+            "expected >= 1.8x at 4 procs on a {cores}-core host, \
+             got {speedup:.2}x"
+        );
+    } else {
+        println!("  (floor not asserted on a {cores}-core host)");
+    }
+
+    section("resume: one lost shard vs merge-only");
+    let dir = tmp("resume");
+    let runner = ShardRunner::new(plan.clone(), &dir, exe).procs(2);
+    runner.init(SCENARIO)?;
+    runner.run()?.merged.expect("seed run must complete");
+    std::fs::remove_file(artifact_path(&dir, SHARDS - 1))?;
+    let t0 = Instant::now();
+    let out = runner.run()?;
+    let one_shard = t0.elapsed().as_secs_f64();
+    assert_eq!(out.ran, vec![SHARDS - 1], "exactly the lost shard re-runs");
+    assert_eq!(out.reused.len(), SHARDS - 1);
+    let resumed = out.merged.expect("resume must complete");
+    assert_eq!(resumed.digest, digests[0], "resume changed the digest");
+    let t0 = Instant::now();
+    let out = runner.run()?;
+    let merge_only = t0.elapsed().as_secs_f64();
+    assert!(out.ran.is_empty(), "nothing should re-run when complete");
+    println!(
+        "  one shard: {one_shard:.3}s   merge-only: {merge_only:.3}s   \
+         (full sweep at 2 procs: {:.3}s)",
+        best_secs[1]
+    );
+    report
+        .value("resume.one_shard_secs", one_shard)
+        .value("resume.merge_only_secs", merge_only);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    report.write()?;
+    Ok(())
+}

@@ -1214,6 +1214,19 @@ impl ScenarioConfig {
         Self::from_toml(&doc)
     }
 
+    /// Parse from a string with an explicit base directory for relative
+    /// trace paths — for callers that moved the TOML text away from the
+    /// file it came from (the sharded sweep runner copies the scenario
+    /// into its run directory but resolves traces against the original
+    /// location recorded in `PLAN.json`).
+    pub fn from_str_toml_with_base(
+        src: &str,
+        base: Option<&std::path::Path>,
+    ) -> Result<Self> {
+        let doc = TomlDoc::parse(src).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_toml_with_base(&doc, base)
+    }
+
     pub fn load(path: &std::path::Path) -> Result<Self> {
         let src = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;

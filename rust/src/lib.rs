@@ -57,7 +57,16 @@
 //!   seeded runs across threads (merged deterministically by seed) and
 //!   [`report::distribution`] reduces the population to mean/percentile
 //!   summaries — distributions, not point estimates, for the paper's
-//!   figures and the placement-policy comparisons.
+//!   figures and the placement-policy comparisons. Past one process,
+//!   [`sim::shard`] shards a sweep across worker OS processes
+//!   (`spoton sweep` / `sweep-worker`): a fingerprinted
+//!   [`sim::shard::ShardPlan`] partitions seed range × controller
+//!   matrix, each worker writes a rename-atomic artifact into a
+//!   `shards/<run_id>/` run directory beside a checkpointed
+//!   `MANIFEST.json`, interrupted sweeps resume (only missing or
+//!   corrupt shards re-run; persistent failures dead-letter with their
+//!   cell list), and the merge is byte-identical to the in-process
+//!   sweep at any process count.
 //! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly
 //!   analog workload's compute: JAX stage functions calling Pallas kernels,
 //!   AOT-lowered to HLO-text artifacts (`python/compile/`), executed from

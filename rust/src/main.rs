@@ -11,6 +11,11 @@
 //! spoton coordinator --share DIR --instance vm-0 --events-url URL
 //! spoton artifacts-info [--artifacts DIR]
 //! spoton generate-reads [--count 8] [--seed 2022]
+//! spoton sweep --scenario cfg.toml [--seeds 256] [--seed-start 0]
+//!              [--salt 0] [--controllers fixed,young-daly,...]
+//!              [--shards 8] [--procs N] [--threads 1] [--retries 2]
+//!              [--out shards] [--run-id ID]
+//! spoton sweep-worker --dir shards/ID --shard K [--threads 1]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -87,6 +92,8 @@ fn main() -> Result<()> {
         "coordinator" => cmd_coordinator(&args),
         "artifacts-info" => cmd_artifacts_info(&args),
         "generate-reads" => cmd_generate_reads(&args),
+        "sweep" => cmd_sweep(&args),
+        "sweep-worker" => cmd_sweep_worker(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -107,6 +114,17 @@ USAGE:
   spoton coordinator --share DIR --instance vm-0 [--events-url URL]
   spoton artifacts-info [--artifacts DIR]
   spoton generate-reads [--count 8] [--seed 2022]
+  spoton sweep --scenario cfg.toml [--seeds 256] [--seed-start 0] [--salt 0]
+               [--controllers fixed,young-daly,young-daly-ho,cost-aware[:S]]
+               [--shards 8] [--procs N] [--threads 1] [--retries 2]
+               [--out shards] [--run-id ID]
+  spoton sweep-worker --dir shards/ID --shard K [--threads 1]
+
+`sweep` plans a sharded Monte Carlo sweep (seed range x configuration
+matrix), fans shards out over worker processes, checkpoints completed
+shards in shards/ID/MANIFEST.json, and merges per-shard artifacts into a
+byte-identical digest + per-variant summaries. Interrupted? Re-run the
+same command: completed shards are reused, only missing ones re-run.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -262,6 +280,181 @@ fn cmd_artifacts_info(args: &Args) -> Result<()> {
         rt.executable(&name)?;
         println!("  {name}: compiled in {:?}", start.elapsed());
     }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use spoton::sim::shard::{SeedStream, ShardPlan, ShardRunner};
+    let scenario_path =
+        PathBuf::from(args.get("scenario").context("--scenario required")?);
+    let scenario_text = std::fs::read_to_string(&scenario_path)
+        .with_context(|| format!("reading {}", scenario_path.display()))?;
+    let scenario_base = scenario_path
+        .parent()
+        .map(|p| {
+            if p.as_os_str().is_empty() { Path::new(".") } else { p }
+                .canonicalize()
+        })
+        .transpose()
+        .context("resolving scenario directory")?;
+    let scenario = ScenarioConfig::from_str_toml_with_base(
+        &scenario_text,
+        scenario_base.as_deref(),
+    )?;
+    let parse_u64 = |key: &str, default: u64| -> Result<u64> {
+        match args.get(key) {
+            Some(v) => {
+                v.parse().with_context(|| format!("bad --{key} '{v}'"))
+            }
+            None => Ok(default),
+        }
+    };
+    let seeds = SeedStream::salted(
+        parse_u64("seed-start", 0)?,
+        parse_u64("seeds", 256)? as usize,
+        parse_u64("salt", 0)?,
+    );
+    let specs: Vec<String> = args
+        .get("controllers")
+        .map(|s| {
+            s.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    // shard count is part of the plan (it defines the artifact layout),
+    // so the default is fixed, never derived from this machine
+    let shards = parse_u64("shards", 8)? as usize;
+    let procs = match args.get("procs") {
+        Some(v) => v.parse().with_context(|| format!("bad --procs '{v}'"))?,
+        None => std::thread::available_parallelism().map_or(1, |n| n.get()),
+    };
+    let threads = parse_u64("threads", 1)? as usize;
+    let retries = parse_u64("retries", 2)? as u32;
+
+    // The fingerprint-derived default run id makes "re-run the same
+    // command" resume and "change any parameter" start fresh.
+    let probe = ShardPlan::new(
+        "probe",
+        seeds,
+        &specs,
+        &scenario,
+        &scenario_text,
+        shards,
+    )?;
+    let run_id = args.get("run-id").map(str::to_string).unwrap_or_else(|| {
+        format!("sweep-{}", &probe.fingerprint()[..12])
+    });
+    let plan = ShardPlan::new(
+        &run_id,
+        seeds,
+        &specs,
+        &scenario,
+        &scenario_text,
+        shards,
+    )?;
+    for s in &plan.skipped {
+        eprintln!("skipping config '{}': {}", s.spec, s.reason);
+    }
+    let dir = PathBuf::from(args.get("out").unwrap_or("shards")).join(&run_id);
+    println!(
+        "sweep {run_id}: {} cells ({} configs x {} seeds) in {} shards, \
+         {procs} worker process(es) x {threads} thread(s)",
+        plan.cells(),
+        plan.configs.len(),
+        plan.seeds.count,
+        plan.shards,
+    );
+    println!("run dir: {}", dir.display());
+    let exe = std::env::current_exe().context("locating spoton binary")?;
+    let runner = ShardRunner::new(plan, &dir, exe)
+        .procs(procs)
+        .threads(threads)
+        .retries(retries)
+        .scenario_base(scenario_base);
+    runner.init(&scenario_text)?;
+    let outcome = runner.run()?;
+    if !outcome.reused.is_empty() {
+        println!(
+            "resumed: reused {} completed shard(s), ran {}",
+            outcome.reused.len(),
+            outcome.ran.len()
+        );
+    }
+    if !outcome.dead_letter.is_empty() {
+        for d in &outcome.dead_letter {
+            eprintln!(
+                "DEAD LETTER shard {} after {} attempt(s): {} ({} cells)",
+                d.shard,
+                d.attempts,
+                d.reason,
+                d.cells.len()
+            );
+        }
+        bail!(
+            "{} shard(s) failed permanently; fix the cause and re-run the \
+             same command to retry just those shards",
+            outcome.dead_letter.len()
+        );
+    }
+    let merged = outcome.merged.context("no merge despite no dead letters")?;
+    print!("\n{}", merged.render());
+    println!("merged digest: {}", merged.digest);
+    println!("merged report: {}", dir.join("MERGED.json").display());
+    Ok(())
+}
+
+/// Shard ids listed in a `SPOTON_TEST_*` fault-injection variable.
+fn fault_list(var: &str) -> Vec<usize> {
+    std::env::var(var)
+        .ok()
+        .map(|s| {
+            s.split(',')
+                .filter_map(|t| t.trim().parse().ok())
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+fn cmd_sweep_worker(args: &Args) -> Result<()> {
+    use spoton::sim::shard::{artifact_path, load_run_dir, run_shard};
+    let dir = PathBuf::from(args.get("dir").context("--dir required")?);
+    let shard: usize = args
+        .get("shard")
+        .context("--shard required")?
+        .parse()
+        .context("bad --shard")?;
+    let threads: usize =
+        args.get("threads").unwrap_or("1").parse().context("bad --threads")?;
+    // Fault-injection hooks for the resume/dead-letter tests:
+    //  - SPOTON_TEST_FAIL_SHARDS=2,3  → listed shards exit 17 up front
+    //  - SPOTON_TEST_PARTIAL_SHARDS=1 → listed shards write half an
+    //    artifact straight to the final path (simulating a worker killed
+    //    mid-write with no atomic rename) and exit 9
+    if fault_list("SPOTON_TEST_FAIL_SHARDS").contains(&shard) {
+        eprintln!("injected failure for shard {shard}");
+        std::process::exit(17);
+    }
+    let (plan, scenario) = load_run_dir(&dir)?;
+    let artifact = run_shard(&plan, &scenario, shard, threads)?;
+    let mut body = spoton::json::to_string_pretty(&artifact.to_json());
+    body.push('\n');
+    if fault_list("SPOTON_TEST_PARTIAL_SHARDS").contains(&shard) {
+        eprintln!("injected partial artifact for shard {shard}");
+        std::fs::write(
+            artifact_path(&dir, shard),
+            &body.as_bytes()[..body.len() / 2],
+        )?;
+        std::process::exit(9);
+    }
+    spoton::util::atomic_write(&artifact_path(&dir, shard), body.as_bytes())?;
+    println!(
+        "shard {shard}: {} cells in {} ms",
+        artifact.cells.len(),
+        artifact.wall_ms
+    );
     Ok(())
 }
 

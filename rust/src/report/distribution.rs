@@ -10,6 +10,12 @@
 //! Every reduction walks the merged runs in seed order with a fixed
 //! summation order, so two sweeps that merged identically summarize
 //! identically — bit-for-bit, across thread counts.
+//!
+//! Reductions over *many* populations (per-controller comparisons, the
+//! per-variant summaries a sharded merge produces) go through a
+//! [`Summarizer`], which reuses its accumulation and sort-scratch
+//! buffers across populations instead of reallocating per summary —
+//! the allocation churn is what shows up first at million-seed scale.
 
 use crate::json::Value;
 use crate::report::table::TextTable;
@@ -46,29 +52,15 @@ impl Summary {
 
     /// Summarize `samples` (nearest-rank percentiles over a total-order
     /// sort; the mean sums in input order — deterministic for a
-    /// deterministic input sequence).
+    /// deterministic input sequence). Allocates one scratch buffer; a
+    /// loop over many populations should hold a [`Summarizer`] instead.
     pub fn from_samples(samples: &[f64]) -> Summary {
-        if samples.is_empty() {
-            return Summary::ZERO;
-        }
-        let n = samples.len();
-        let mean = samples.iter().sum::<f64>() / n as f64;
-        let mut sorted = samples.to_vec();
-        sorted.sort_by(f64::total_cmp);
-        let pct = |q: f64| sorted[(((n - 1) as f64) * q).round() as usize];
-        Summary {
-            n,
-            mean,
-            p05: pct(0.05),
-            p50: pct(0.50),
-            p95: pct(0.95),
-            p99: pct(0.99),
-            min: sorted[0],
-            max: sorted[n - 1],
-        }
+        let mut scratch = Vec::new();
+        compute(samples, &mut scratch)
     }
 
-    fn to_json(self) -> Value {
+    /// Deterministic JSON shape (object keys serialize sorted).
+    pub fn to_json(self) -> Value {
         let mut v = Value::obj();
         v.set("n", self.n)
             .set("mean", self.mean)
@@ -79,6 +71,79 @@ impl Summary {
             .set("min", self.min)
             .set("max", self.max);
         v
+    }
+}
+
+/// The shared reduction: mean in input order, nearest-rank percentiles
+/// over a total-order sort of `scratch` (cleared and refilled; its
+/// capacity is the whole point of reusing it).
+fn compute(samples: &[f64], scratch: &mut Vec<f64>) -> Summary {
+    if samples.is_empty() {
+        return Summary::ZERO;
+    }
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    scratch.clear();
+    scratch.extend_from_slice(samples);
+    scratch.sort_by(f64::total_cmp);
+    let pct = |q: f64| scratch[(((n - 1) as f64) * q).round() as usize];
+    Summary {
+        n,
+        mean,
+        p05: pct(0.05),
+        p50: pct(0.50),
+        p95: pct(0.95),
+        p99: pct(0.99),
+        min: scratch[0],
+        max: scratch[n - 1],
+    }
+}
+
+/// Reusable accumulation + sort-scratch buffers for reducing many
+/// populations in sequence. At million-seed scale `Summary::from_samples`
+/// reallocates two `Vec<f64>`s per metric per population (the collect
+/// plus the sort copy); a `Summarizer` keeps both buffers across
+/// populations, so a per-controller or per-shard-variant loop allocates
+/// twice total instead of twice per summary. The reduction itself is
+/// bit-identical to [`Summary::from_samples`].
+#[derive(Debug, Default)]
+pub struct Summarizer {
+    samples: Vec<f64>,
+    scratch: Vec<f64>,
+}
+
+impl Summarizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one sample of the current population.
+    pub fn push(&mut self, sample: f64) {
+        self.samples.push(sample);
+    }
+
+    /// Samples accumulated so far in the current population.
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Reduce the accumulated population and clear it for the next one
+    /// (both buffers keep their capacity).
+    pub fn finish(&mut self) -> Summary {
+        let s = compute(&self.samples, &mut self.scratch);
+        self.samples.clear();
+        s
+    }
+
+    /// Reduce an externally-accumulated slice through the shared sort
+    /// scratch (for populations that must stay separate while others
+    /// accumulate, like per-pool costs). Leaves pushed samples alone.
+    pub fn of_slice(&mut self, samples: &[f64]) -> Summary {
+        compute(samples, &mut self.scratch)
     }
 }
 
@@ -111,14 +176,29 @@ pub struct SweepDistributions {
 
 /// Reduce a merged sweep (seed order) into distribution summaries.
 pub fn summarize(scenario: &str, runs: &[SeededRun]) -> SweepDistributions {
-    let metric = |f: &dyn Fn(&SeededRun) -> f64| -> Vec<f64> {
-        runs.iter().map(f).collect()
+    summarize_with(&mut Summarizer::new(), scenario, runs)
+}
+
+/// Like [`summarize`], but accumulating through a caller-owned
+/// [`Summarizer`], so a loop over many populations (per-controller
+/// sweeps, per-variant shard merges) reuses the same buffers instead of
+/// reallocating per summary. Output is bit-identical to [`summarize`].
+pub fn summarize_with(
+    sz: &mut Summarizer,
+    scenario: &str,
+    runs: &[SeededRun],
+) -> SweepDistributions {
+    let mut metric = |f: &dyn Fn(&SeededRun) -> f64| -> Summary {
+        for r in runs {
+            sz.push(f(r));
+        }
+        sz.finish()
     };
-    let makespan = metric(&|r| r.result.total.as_secs_f64());
-    let cost = metric(&|r| r.result.total_cost());
+    let makespan_secs = metric(&|r| r.result.total.as_secs_f64());
+    let total_cost = metric(&|r| r.result.total_cost());
     let evictions = metric(&|r| r.result.evictions as f64);
     let restores = metric(&|r| r.result.restores as f64);
-    let lost = metric(&|r| r.result.lost_steps as f64);
+    let lost_steps = metric(&|r| r.result.lost_steps as f64);
 
     // Per-pool attribution: pools keyed by first-seen order (identical in
     // every run of one sweep — pool ids come from the shared config).
@@ -145,18 +225,18 @@ pub fn summarize(scenario: &str, runs: &[SeededRun]) -> SweepDistributions {
         scenario: scenario.to_string(),
         runs: runs.len(),
         completed: runs.iter().filter(|r| r.result.completed).count(),
-        makespan_secs: Summary::from_samples(&makespan),
-        total_cost: Summary::from_samples(&cost),
-        evictions: Summary::from_samples(&evictions),
-        restores: Summary::from_samples(&restores),
-        lost_steps: Summary::from_samples(&lost),
+        makespan_secs,
+        total_cost,
+        evictions,
+        restores,
+        lost_steps,
         pools: pools
             .into_iter()
             .map(|(pool, launches, evictions, costs)| PoolDistribution {
                 pool,
                 launches,
                 evictions,
-                compute_cost: Summary::from_samples(&costs),
+                compute_cost: sz.of_slice(&costs),
             })
             .collect(),
     }
@@ -281,6 +361,51 @@ mod tests {
         let one = Summary::from_samples(&[7.5]);
         assert_eq!(one.mean, 7.5);
         assert_eq!(one.p99, 7.5);
+    }
+
+    #[test]
+    fn summarizer_matches_from_samples_across_populations() {
+        let pops: [&[f64]; 4] = [
+            &[5.0, 1.0, 3.0, 2.0, 4.0],
+            &[],
+            &[7.5],
+            &[0.1, -2.0, f64::MAX, 0.0, 1e-300, 42.0, 42.0],
+        ];
+        let mut sz = Summarizer::new();
+        for samples in pops {
+            for &s in samples {
+                sz.push(s);
+            }
+            assert_eq!(sz.len(), samples.len());
+            // the reused-buffer path is bit-identical to the one-shot one
+            assert_eq!(sz.finish(), Summary::from_samples(samples));
+            assert!(sz.is_empty(), "finish() must clear the population");
+            // ... and so is the external-slice path
+            assert_eq!(sz.of_slice(samples), Summary::from_samples(samples));
+        }
+    }
+
+    #[test]
+    fn summarize_with_matches_summarize() {
+        use crate::simclock::SimDuration;
+        let runs = Experiment::table1()
+            .named("dist-with")
+            .eviction_poisson(SimDuration::from_mins(70))
+            .transparent(SimDuration::from_mins(20))
+            .sweep()
+            .seed_range(3, 6)
+            .threads(2)
+            .run()
+            .unwrap();
+        let one_shot = summarize("dist-with", &runs);
+        let mut sz = Summarizer::new();
+        // run twice through the same Summarizer: reuse must not leak
+        // state between populations
+        let first = summarize_with(&mut sz, "dist-with", &runs);
+        let second = summarize_with(&mut sz, "dist-with", &runs);
+        let json = |d: &SweepDistributions| crate::json::to_string(&d.to_json());
+        assert_eq!(json(&one_shot), json(&first));
+        assert_eq!(json(&one_shot), json(&second));
     }
 
     #[test]

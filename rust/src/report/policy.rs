@@ -34,24 +34,26 @@ pub struct ControllerDistributions {
 pub fn summarize_controllers(
     sweeps: &[ControllerSweep],
 ) -> Vec<ControllerDistributions> {
+    // One Summarizer across every controller population: seven summaries
+    // per controller share two buffers instead of reallocating each.
+    let mut sz = distribution::Summarizer::new();
     sweeps
         .iter()
         .map(|s| {
-            let periodic: Vec<f64> = s
-                .runs
-                .iter()
-                .map(|r| r.result.periodic_ckpts as f64)
-                .collect();
-            let termination: Vec<f64> = s
-                .runs
-                .iter()
-                .map(|r| r.result.termination_ok as f64)
-                .collect();
+            let dist = distribution::summarize_with(&mut sz, &s.label, &s.runs);
+            for r in &s.runs {
+                sz.push(r.result.periodic_ckpts as f64);
+            }
+            let periodic_ckpts = sz.finish();
+            for r in &s.runs {
+                sz.push(r.result.termination_ok as f64);
+            }
+            let termination_ckpts = sz.finish();
             ControllerDistributions {
                 label: s.label.clone(),
-                dist: distribution::summarize(&s.label, &s.runs),
-                periodic_ckpts: Summary::from_samples(&periodic),
-                termination_ckpts: Summary::from_samples(&termination),
+                dist,
+                periodic_ckpts,
+                termination_ckpts,
             }
         })
         .collect()

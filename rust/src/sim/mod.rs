@@ -25,6 +25,13 @@
 //!   queue around **one** capacity-bounded fleet, with FIFO-per-priority
 //!   admission when pools are full; throughput measured in events/sec
 //!   (`benches/perf_cluster.rs`).
+//! * [`shard`] — the multi-process sweep runner behind
+//!   `spoton sweep`: a [`shard::ShardPlan`] deterministically partitions
+//!   seed range × configuration matrix into shards, worker processes
+//!   write rename-atomic per-shard artifacts, a checkpointed manifest
+//!   makes interrupted sweeps resumable, and the merger folds artifacts
+//!   by shard id into byte-identical digests at any process count
+//!   (`benches/perf_shards.rs`).
 //!
 //! ## Time accounting
 //!
@@ -45,6 +52,7 @@ pub mod cluster;
 pub mod engine;
 pub mod experiment;
 pub mod legacy;
+pub mod shard;
 pub mod sweep;
 
 pub use cluster::{
@@ -52,6 +60,9 @@ pub use cluster::{
 };
 pub use engine::SimEvent;
 pub use experiment::Experiment;
+pub use shard::{
+    MergedSweep, SeedStream, ShardPlan, ShardRunner, ShardedOutcome,
+};
 pub use sweep::{ControllerSweep, SeededRun, Sweep};
 
 use crate::cloud::billing::Invoice;

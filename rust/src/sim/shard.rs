@@ -1,0 +1,1759 @@
+//! Sharded, resumable Monte Carlo sweeps across OS processes.
+//!
+//! One process tops out well below the million-seed ×
+//! thousand-configuration studies the ROADMAP calls for, so this module
+//! practices what the simulator preaches: plan the sweep as
+//! deterministic shards, checkpoint completed-shard progress, and
+//! resume after interruption — the sweep runner checkpoints too.
+//!
+//! * [`ShardPlan`] deterministically partitions a seed range
+//!   ([`SeedStream`], optionally salted so decorrelated streams never
+//!   depend on shard boundaries) × a configuration matrix
+//!   ([`ConfigVariant`] specs over the interval controllers) into
+//!   contiguous shards of cells, filtering invalid combinations (an
+//!   adaptive controller without transparent checkpointing) into
+//!   `skipped` with reasons. The plan's `fingerprint` covers every
+//!   parameter plus the scenario TOML bytes, so a resumed run can never
+//!   silently mix artifacts from two different studies.
+//! * [`ShardRunner`] orchestrates: it spawns up to P worker processes
+//!   (`spoton sweep-worker --dir … --shard k`, re-invoking the same
+//!   binary), verifies each finished shard's artifact, checkpoints a
+//!   completed-shard manifest after every completion, retries failures
+//!   a bounded number of times, and dead-letters shards that keep
+//!   failing — with their full `(config, seed)` cell list for replay.
+//!   Re-running the same plan over an existing run directory resumes:
+//!   only missing (or corrupt) shards re-run.
+//! * [`run_shard`] is the worker body: it runs the shard's cells through
+//!   the same atomic-work-index thread pool idiom as
+//!   [`super::sweep::Sweep::run`], one engine per cell, and returns a
+//!   [`ShardArtifact`] the worker writes with
+//!   [`crate::util::atomic_write`] — rename-atomic, so a killed worker
+//!   leaves no observable partial artifact (a torn write that somehow
+//!   lands anyway is rejected at merge time by parse + fingerprint +
+//!   cell validation).
+//! * [`merge`] folds artifacts **by shard id** into a [`MergedSweep`]:
+//!   per-cell digest hashes concatenated in global cell order and
+//!   hashed again ([`fold_cell_shas`]) plus per-variant distribution
+//!   summaries. Cell order is a pure function of the plan, so the
+//!   merged digest is byte-identical at any process count, any thread
+//!   count, any shard count, and across interrupt-and-resume — exactly
+//!   the invariant `tests/sweep_determinism.rs` pins for in-process
+//!   sweeps, extended to the multi-process runner
+//!   ([`fold_run_digests`] folds an in-process sweep's digests into the
+//!   same value for direct comparison).
+//!
+//! ## Run-directory layout
+//!
+//! ```text
+//! shards/<run_id>/
+//!   scenario.toml        # the scenario, byte-for-byte (sha pinned in PLAN)
+//!   PLAN.json            # the ShardPlan (+ scenario_base for trace paths)
+//!   MANIFEST.json        # checkpointed progress: completed shards + DLQ
+//!   shard-<k>.json       # one validated artifact per completed shard
+//!   shard-<k>.stderr.log # the worker's stderr, kept per attempt
+//!   MERGED.json          # digest + per-variant summaries, once complete
+//! ```
+//!
+//! All JSON is written with sorted keys (objects are `BTreeMap`s) and
+//! `u64` values that may exceed 2^53 (seeds, salts) are serialized as
+//! decimal strings, so every artifact is stably diffable and
+//! round-trips exactly.
+
+use super::cluster::{cluster_digest, ClusterResult};
+use super::experiment::Experiment;
+use super::sweep::run_digest;
+use super::RunResult;
+use crate::config::{CheckpointMethodCfg, IntervalControllerCfg, ScenarioConfig};
+use crate::json::{self, Value};
+use crate::metrics::RecordLevel;
+use crate::report::distribution::{Summarizer, Summary};
+use crate::util::{atomic_write, prng::mix64, sha256_hex};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+pub const PLAN_FORMAT: &str = "spoton-shard-plan/1";
+pub const ARTIFACT_FORMAT: &str = "spoton-shard-artifact/1";
+pub const MANIFEST_FORMAT: &str = "spoton-shard-manifest/1";
+pub const MERGE_FORMAT: &str = "spoton-shard-merge/1";
+
+/// Serialize a u64 losslessly (JSON numbers are f64 — salted seeds use
+/// all 64 bits).
+fn u64_str(v: u64) -> Value {
+    Value::Str(v.to_string())
+}
+
+fn req_u64_str(v: &Value, key: &str) -> Result<u64> {
+    v.req_str(key)?
+        .parse::<u64>()
+        .with_context(|| format!("field '{key}' is not a u64"))
+}
+
+/// A deterministic seed stream: `count` seeds addressed by global index.
+///
+/// `salt == 0` yields the contiguous range `start..start+count` (the
+/// same seeds `Sweep::seed_range` produces, so sharded output is
+/// directly comparable to pinned in-process sweeps). A non-zero salt
+/// derives each seed as `mix64(salt ^ mix64(start + j))` — decorrelated
+/// across `j` and across salts, and a function of the *global* index
+/// only, so re-planning with a different shard count yields the
+/// byte-identical merged output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SeedStream {
+    pub start: u64,
+    pub count: usize,
+    pub salt: u64,
+}
+
+impl SeedStream {
+    /// The contiguous range `start .. start + count` (salt 0).
+    pub fn contiguous(start: u64, count: usize) -> Self {
+        Self { start, count, salt: 0 }
+    }
+
+    /// A salted, decorrelated stream of `count` seeds.
+    pub fn salted(start: u64, count: usize, salt: u64) -> Self {
+        Self { start, count, salt }
+    }
+
+    /// The seed at global index `j` (must be `< count`).
+    pub fn seed(&self, j: usize) -> u64 {
+        debug_assert!(j < self.count);
+        let base = self.start.wrapping_add(j as u64);
+        if self.salt == 0 {
+            base
+        } else {
+            mix64(self.salt ^ mix64(base))
+        }
+    }
+
+    /// Every seed, in index order.
+    pub fn iter(&self) -> impl Iterator<Item = u64> + '_ {
+        (0..self.count).map(|j| self.seed(j))
+    }
+}
+
+/// One configuration-matrix axis value: a parsed variant spec. Specs are
+/// strings so plans round-trip through JSON and the CLI verbatim:
+///
+/// * `base` — the scenario exactly as configured;
+/// * `fixed` — force the fixed-interval controller;
+/// * `young-daly` / `young-daly-ho` — the Young/Daly controller
+///   (first-order / Daly's higher-order correction);
+/// * `cost-aware` / `cost-aware:<sensitivity>` — price-scaled
+///   Young/Daly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigVariant {
+    pub spec: String,
+    controller: Option<IntervalControllerCfg>,
+}
+
+impl ConfigVariant {
+    /// The scenario as-is (no controller override).
+    pub fn base() -> Self {
+        Self { spec: "base".into(), controller: None }
+    }
+
+    pub fn parse(spec: &str) -> Result<Self> {
+        let controller = match spec {
+            "base" => None,
+            "fixed" => Some(IntervalControllerCfg::Fixed),
+            "young-daly" => Some(IntervalControllerCfg::young_daly()),
+            "young-daly-ho" => {
+                let mut c = IntervalControllerCfg::young_daly();
+                if let IntervalControllerCfg::YoungDaly {
+                    higher_order, ..
+                } = &mut c
+                {
+                    *higher_order = true;
+                }
+                Some(c)
+            }
+            "cost-aware" => Some(IntervalControllerCfg::cost_aware(1.0)),
+            other => match other.strip_prefix("cost-aware:") {
+                Some(s) => {
+                    let sensitivity: f64 = s.parse().with_context(|| {
+                        format!("bad cost-aware sensitivity '{s}'")
+                    })?;
+                    if !sensitivity.is_finite() || sensitivity <= 0.0 {
+                        bail!(
+                            "cost-aware sensitivity must be finite and > 0, \
+                             got {sensitivity}"
+                        );
+                    }
+                    Some(IntervalControllerCfg::cost_aware(sensitivity))
+                }
+                None => bail!(
+                    "unknown config variant '{other}' (expected base, fixed, \
+                     young-daly, young-daly-ho, cost-aware[:S])"
+                ),
+            },
+        };
+        Ok(Self { spec: spec.to_string(), controller })
+    }
+
+    /// Apply the variant to a scenario (controller override only; `base`
+    /// is the identity).
+    pub fn apply(&self, cfg: &mut ScenarioConfig) {
+        if let Some(c) = &self.controller {
+            cfg.adaptive = c.clone();
+        }
+    }
+
+    /// Why this variant cannot run on `cfg`, if it can't — the
+    /// invalid-combination filter. Adaptive interval controllers tune
+    /// the transparent checkpoint cadence, so they require
+    /// `checkpoint.method = "transparent"` (the same rule the
+    /// `[checkpoint.adaptive]` TOML section enforces).
+    pub fn invalid_reason(&self, cfg: &ScenarioConfig) -> Option<String> {
+        match &self.controller {
+            Some(c)
+                if *c != IntervalControllerCfg::Fixed
+                    && !matches!(
+                        cfg.checkpoint,
+                        CheckpointMethodCfg::Transparent { .. }
+                    ) =>
+            {
+                Some(format!(
+                    "adaptive controller '{}' requires transparent \
+                     checkpointing (checkpoint.method = \"{}\")",
+                    self.spec,
+                    cfg.checkpoint.label()
+                ))
+            }
+            _ => None,
+        }
+    }
+}
+
+/// A combination the planner filtered out, with the reason.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SkippedVariant {
+    pub spec: String,
+    pub reason: String,
+}
+
+/// The deterministic partition of seed range × configuration matrix
+/// into shards. Cells are numbered config-major: cell
+/// `m = config_idx * seed_count + seed_idx`; shard `k` owns a
+/// contiguous, balanced range of cells. Everything here is a pure
+/// function of the constructor inputs — two processes that parse the
+/// same `PLAN.json` agree on every cell of every shard.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    pub run_id: String,
+    pub seeds: SeedStream,
+    /// Valid variants, in requested order (the config axis).
+    pub configs: Vec<ConfigVariant>,
+    /// Filtered-out combinations, with reasons.
+    pub skipped: Vec<SkippedVariant>,
+    pub shards: usize,
+    /// sha256 of the scenario TOML text this plan was built against.
+    pub scenario_sha: String,
+    /// The originally-requested spec list (including later-skipped
+    /// entries) — what `fingerprint` covers and JSON round-trips.
+    requested: Vec<String>,
+    fingerprint: String,
+}
+
+impl ShardPlan {
+    /// Plan a sweep. `specs` empty means a single `base` variant.
+    /// `shards` is clamped into `1..=cells`.
+    pub fn new(
+        run_id: &str,
+        seeds: SeedStream,
+        specs: &[String],
+        scenario: &ScenarioConfig,
+        scenario_text: &str,
+        shards: usize,
+    ) -> Result<Self> {
+        if run_id.is_empty()
+            || !run_id.chars().all(|c| {
+                c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')
+            })
+        {
+            bail!(
+                "run id '{run_id}' must be non-empty [A-Za-z0-9._-] \
+                 (it names a directory)"
+            );
+        }
+        if seeds.count == 0 {
+            bail!("a sweep needs at least one seed");
+        }
+        let requested: Vec<String> = if specs.is_empty() {
+            vec!["base".to_string()]
+        } else {
+            specs.to_vec()
+        };
+        let mut configs: Vec<ConfigVariant> = Vec::new();
+        let mut skipped = Vec::new();
+        for spec in &requested {
+            let v = ConfigVariant::parse(spec)?;
+            if configs.iter().any(|c| c.spec == v.spec) {
+                bail!("duplicate config variant '{}'", v.spec);
+            }
+            match v.invalid_reason(scenario) {
+                Some(reason) => {
+                    skipped.push(SkippedVariant { spec: v.spec, reason })
+                }
+                None => configs.push(v),
+            }
+        }
+        if configs.is_empty() {
+            bail!(
+                "every requested configuration was filtered out: {}",
+                skipped
+                    .iter()
+                    .map(|s| format!("{} ({})", s.spec, s.reason))
+                    .collect::<Vec<_>>()
+                    .join("; ")
+            );
+        }
+        let cells = configs.len() * seeds.count;
+        let shards = shards.clamp(1, cells);
+        let scenario_sha = sha256_hex(scenario_text.as_bytes());
+        // NOTE: run_id is deliberately outside the fingerprint — it
+        // names the run directory; the fingerprint identifies the work.
+        let canon = format!(
+            "{PLAN_FORMAT}|start={}|count={}|salt={}|shards={shards}|\
+             configs={}|scenario={scenario_sha}",
+            seeds.start,
+            seeds.count,
+            seeds.salt,
+            requested.join(",")
+        );
+        let fingerprint = sha256_hex(canon.as_bytes());
+        Ok(Self {
+            run_id: run_id.to_string(),
+            seeds,
+            configs,
+            skipped,
+            shards,
+            scenario_sha,
+            requested,
+            fingerprint,
+        })
+    }
+
+    /// Identifies the planned work (parameters + scenario bytes), not
+    /// the directory it runs in. Artifacts and manifests carry it, so a
+    /// resume against an edited scenario or changed parameters is
+    /// rejected instead of silently mixing incompatible results.
+    pub fn fingerprint(&self) -> &str {
+        &self.fingerprint
+    }
+
+    /// Total cells (valid configs × seeds).
+    pub fn cells(&self) -> usize {
+        self.configs.len() * self.seeds.count
+    }
+
+    /// The contiguous cell range shard `k` owns. Balanced split: every
+    /// shard gets `cells/shards` cells, the first `cells%shards` shards
+    /// one extra — never an empty shard.
+    pub fn shard_range(&self, shard: usize) -> Range<usize> {
+        assert!(shard < self.shards, "shard {shard} of {}", self.shards);
+        let m = self.cells();
+        let base = m / self.shards;
+        let rem = m % self.shards;
+        let lo = shard * base + shard.min(rem);
+        let len = base + usize::from(shard < rem);
+        lo..lo + len
+    }
+
+    /// Resolve cell `m` to `(config index, seed)`.
+    pub fn cell(&self, m: usize) -> (usize, u64) {
+        let n = self.seeds.count;
+        (m / n, self.seeds.seed(m % n))
+    }
+
+    /// The plan as JSON (`PLAN.json` body; sorted keys, u64s as
+    /// strings).
+    pub fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("format", PLAN_FORMAT)
+            .set("run_id", self.run_id.as_str())
+            .set("seed_start", u64_str(self.seeds.start))
+            .set("seed_count", self.seeds.count)
+            .set("salt", u64_str(self.seeds.salt))
+            .set("shards", self.shards)
+            .set("cells", self.cells())
+            .set(
+                "configs",
+                self.requested
+                    .iter()
+                    .map(|s| Value::Str(s.clone()))
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "resolved",
+                self.configs
+                    .iter()
+                    .map(|c| Value::Str(c.spec.clone()))
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "skipped",
+                self.skipped
+                    .iter()
+                    .map(|s| {
+                        let mut o = Value::obj();
+                        o.set("spec", s.spec.as_str())
+                            .set("reason", s.reason.as_str());
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set("scenario_sha256", self.scenario_sha.as_str())
+            .set("fingerprint", self.fingerprint.as_str());
+        v
+    }
+
+    /// Rebuild a plan from `PLAN.json` + the scenario it references.
+    /// Re-plans from the stored parameters and verifies the stored
+    /// fingerprint matches — drift (edited scenario text, edited plan
+    /// fields) is an error, not a silent divergence.
+    pub fn from_json(
+        v: &Value,
+        scenario: &ScenarioConfig,
+        scenario_text: &str,
+    ) -> Result<Self> {
+        let format = v.req_str("format")?;
+        if format != PLAN_FORMAT {
+            bail!("unsupported plan format '{format}'");
+        }
+        let seeds = SeedStream {
+            start: req_u64_str(v, "seed_start")?,
+            count: v.req_u64("seed_count")? as usize,
+            salt: req_u64_str(v, "salt")?,
+        };
+        let specs: Vec<String> = v
+            .req_array("configs")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("non-string config spec"))
+            })
+            .collect::<Result<_>>()?;
+        let plan = Self::new(
+            v.req_str("run_id")?,
+            seeds,
+            &specs,
+            scenario,
+            scenario_text,
+            v.req_u64("shards")? as usize,
+        )?;
+        let stored = v.req_str("fingerprint")?;
+        if plan.fingerprint != stored {
+            bail!(
+                "plan fingerprint mismatch: stored {stored}, recomputed {} \
+                 (scenario or plan edited since planning?)",
+                plan.fingerprint
+            );
+        }
+        Ok(plan)
+    }
+}
+
+/// The per-cell metrics an artifact carries for merged summaries (all
+/// f64 — Rust's shortest-round-trip float formatting means they survive
+/// the JSON round trip bit-exactly).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CellMetrics {
+    pub makespan_secs: f64,
+    pub total_cost: f64,
+    pub evictions: f64,
+    pub restores: f64,
+    pub lost_steps: f64,
+    pub completed: bool,
+}
+
+impl CellMetrics {
+    fn from_run(r: &RunResult) -> Self {
+        Self {
+            makespan_secs: r.total.as_secs_f64(),
+            total_cost: r.total_cost(),
+            evictions: r.evictions as f64,
+            restores: r.restores as f64,
+            lost_steps: r.lost_steps as f64,
+            completed: r.completed,
+        }
+    }
+
+    fn from_cluster(r: &ClusterResult) -> Self {
+        let sum = |f: &dyn Fn(&RunResult) -> f64| -> f64 {
+            r.jobs.iter().map(|j| f(&j.result)).sum()
+        };
+        Self {
+            makespan_secs: r.makespan.as_secs_f64(),
+            total_cost: r.total_cost(),
+            evictions: sum(&|j| j.evictions as f64),
+            restores: sum(&|j| j.restores as f64),
+            lost_steps: sum(&|j| j.lost_steps as f64),
+            completed: r.completed_jobs() == r.jobs.len(),
+        }
+    }
+}
+
+/// One executed cell: its identity under the plan, the sha256 of its
+/// full canonical digest ([`run_digest`] / [`cluster_digest`]), and the
+/// metrics the merger summarizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellRecord {
+    pub cell: usize,
+    /// The variant spec that ran (redundant with `cell`; validated).
+    pub config: String,
+    pub seed: u64,
+    /// sha256 (hex) of the cell's canonical digest string.
+    pub digest_sha: String,
+    pub metrics: CellMetrics,
+}
+
+impl CellRecord {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("cell", self.cell)
+            .set("config", self.config.as_str())
+            .set("seed", u64_str(self.seed))
+            .set("digest_sha256", self.digest_sha.as_str())
+            .set("makespan_secs", self.metrics.makespan_secs)
+            .set("total_cost", self.metrics.total_cost)
+            .set("evictions", self.metrics.evictions)
+            .set("restores", self.metrics.restores)
+            .set("lost_steps", self.metrics.lost_steps)
+            .set("completed", self.metrics.completed);
+        v
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            cell: v.req_u64("cell")? as usize,
+            config: v.req_str("config")?.to_string(),
+            seed: req_u64_str(v, "seed")?,
+            digest_sha: v.req_str("digest_sha256")?.to_string(),
+            metrics: CellMetrics {
+                makespan_secs: v.req_f64("makespan_secs")?,
+                total_cost: v.req_f64("total_cost")?,
+                evictions: v.req_f64("evictions")?,
+                restores: v.req_f64("restores")?,
+                lost_steps: v.req_f64("lost_steps")?,
+                completed: v
+                    .get("completed")
+                    .and_then(Value::as_bool)
+                    .context("missing bool field 'completed'")?,
+            },
+        })
+    }
+}
+
+/// One worker's output: every cell of one shard, plus bench counters
+/// (wall-clock is observability only — it never enters a digest or a
+/// summary, so artifacts stay comparable across machines).
+#[derive(Debug, Clone)]
+pub struct ShardArtifact {
+    pub run_id: String,
+    pub shard: usize,
+    pub fingerprint: String,
+    pub cells: Vec<CellRecord>,
+    /// Worker wall-clock for the shard, in milliseconds.
+    pub wall_ms: u64,
+}
+
+impl ShardArtifact {
+    pub fn to_json(&self) -> Value {
+        let runs_per_sec = if self.wall_ms == 0 {
+            0.0
+        } else {
+            self.cells.len() as f64 / (self.wall_ms as f64 / 1000.0)
+        };
+        let mut v = Value::obj();
+        v.set("format", ARTIFACT_FORMAT)
+            .set("run_id", self.run_id.as_str())
+            .set("shard", self.shard)
+            .set("fingerprint", self.fingerprint.as_str())
+            .set(
+                "cells",
+                self.cells.iter().map(CellRecord::to_json).collect::<Vec<_>>(),
+            )
+            .set("wall_ms", self.wall_ms)
+            .set("runs_per_sec", runs_per_sec);
+        v
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let format = v.req_str("format")?;
+        if format != ARTIFACT_FORMAT {
+            bail!("unsupported artifact format '{format}'");
+        }
+        Ok(Self {
+            run_id: v.req_str("run_id")?.to_string(),
+            shard: v.req_u64("shard")? as usize,
+            fingerprint: v.req_str("fingerprint")?.to_string(),
+            cells: v
+                .req_array("cells")?
+                .iter()
+                .map(CellRecord::from_json)
+                .collect::<Result<_>>()?,
+            wall_ms: v.req_u64("wall_ms")?,
+        })
+    }
+
+    /// Full validation against the plan: identity, fingerprint, and
+    /// every cell's (index, config, seed) exactly as planned — a
+    /// partial or tampered artifact cannot pass.
+    pub fn validate(&self, plan: &ShardPlan, shard: usize) -> Result<()> {
+        if self.run_id != plan.run_id {
+            bail!("artifact run id '{}' != '{}'", self.run_id, plan.run_id);
+        }
+        if self.shard != shard {
+            bail!("artifact is for shard {}, expected {shard}", self.shard);
+        }
+        if self.fingerprint != plan.fingerprint {
+            bail!(
+                "artifact fingerprint mismatch (plan or scenario changed \
+                 since this shard ran)"
+            );
+        }
+        let range = plan.shard_range(shard);
+        if self.cells.len() != range.len() {
+            bail!(
+                "shard {shard} artifact has {} cells, plan says {}",
+                self.cells.len(),
+                range.len()
+            );
+        }
+        for (rec, m) in self.cells.iter().zip(range) {
+            let (ci, seed) = plan.cell(m);
+            if rec.cell != m {
+                bail!("cell index {} out of order (expected {m})", rec.cell);
+            }
+            if rec.config != plan.configs[ci].spec {
+                bail!(
+                    "cell {m} ran config '{}', plan says '{}'",
+                    rec.config,
+                    plan.configs[ci].spec
+                );
+            }
+            if rec.seed != seed {
+                bail!("cell {m} ran seed {}, plan says {seed}", rec.seed);
+            }
+            if rec.digest_sha.len() != 64
+                || !rec.digest_sha.chars().all(|c| c.is_ascii_hexdigit())
+            {
+                bail!("cell {m} digest '{}' is not sha256 hex", rec.digest_sha);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Artifact path for one shard.
+pub fn artifact_path(dir: &Path, shard: usize) -> PathBuf {
+    dir.join(format!("shard-{shard}.json"))
+}
+
+fn run_cell(
+    plan: &ShardPlan,
+    scenario: &ScenarioConfig,
+    m: usize,
+) -> Result<CellRecord> {
+    let (ci, seed) = plan.cell(m);
+    let variant = &plan.configs[ci];
+    let mut cfg = scenario.clone();
+    variant.apply(&mut cfg);
+    cfg.seed = seed;
+    // same lean metrics level Sweep::run uses — per-kind counters still
+    // enter the digest, so the byte-identity contract is unchanged
+    cfg.metrics = RecordLevel::Counts;
+    let exp = Experiment { cfg };
+    let (digest, metrics) = if exp.cfg.cluster.is_some() {
+        let r = exp.run_cluster_sleeper()?;
+        (cluster_digest(&r), CellMetrics::from_cluster(&r))
+    } else {
+        let r = exp.run_sleeper()?;
+        (run_digest(&r), CellMetrics::from_run(&r))
+    };
+    Ok(CellRecord {
+        cell: m,
+        config: variant.spec.clone(),
+        seed,
+        digest_sha: sha256_hex(digest.as_bytes()),
+        metrics,
+    })
+}
+
+/// Execute one shard in-process: the worker body behind
+/// `spoton sweep-worker`. Cells run on an atomic-work-index thread pool
+/// (the [`super::sweep::Sweep::run`] idiom — no shared mutable state,
+/// results merged by cell position), so worker thread count is as
+/// invisible in the artifact as process count is in the merge.
+pub fn run_shard(
+    plan: &ShardPlan,
+    scenario: &ScenarioConfig,
+    shard: usize,
+    threads: usize,
+) -> Result<ShardArtifact> {
+    let cells: Vec<usize> = plan.shard_range(shard).collect();
+    let n = cells.len();
+    let workers = threads.clamp(1, n.max(1));
+    let t0 = Instant::now();
+    let mut slots: Vec<Option<Result<CellRecord>>> =
+        (0..n).map(|_| None).collect();
+    if workers <= 1 {
+        for (i, &m) in cells.iter().enumerate() {
+            slots[i] = Some(run_cell(plan, scenario, m));
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let next = &next;
+                let cells = &cells;
+                handles.push(scope.spawn(move || {
+                    let mut local: Vec<(usize, Result<CellRecord>)> =
+                        Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, run_cell(plan, scenario, cells[i])));
+                    }
+                    local
+                }));
+            }
+            for h in handles {
+                for (i, r) in h.join().expect("shard worker panicked") {
+                    slots[i] = Some(r);
+                }
+            }
+        });
+    }
+    let records: Vec<CellRecord> = slots
+        .into_iter()
+        .map(|slot| slot.expect("every cell index visited exactly once"))
+        .collect::<Result<_>>()?;
+    Ok(ShardArtifact {
+        run_id: plan.run_id.clone(),
+        shard,
+        fingerprint: plan.fingerprint.clone(),
+        cells: records,
+        wall_ms: t0.elapsed().as_millis() as u64,
+    })
+}
+
+/// Read + parse + validate one shard artifact; returns it with the
+/// sha256 of its file bytes (what the manifest records).
+pub fn verify_artifact(
+    dir: &Path,
+    plan: &ShardPlan,
+    shard: usize,
+) -> Result<(ShardArtifact, String)> {
+    let path = artifact_path(dir, shard);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let text = std::str::from_utf8(&bytes)
+        .with_context(|| format!("{} is not UTF-8", path.display()))?;
+    let v = json::parse(text)
+        .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let art = ShardArtifact::from_json(&v)
+        .with_context(|| format!("parsing {}", path.display()))?;
+    art.validate(plan, shard)
+        .with_context(|| format!("validating {}", path.display()))?;
+    Ok((art, sha256_hex(&bytes)))
+}
+
+/// Fold per-cell digest hashes (in global cell order) into the merged
+/// sweep digest: newline-joined, sha256'd.
+pub fn fold_cell_shas<I, S>(shas: I) -> String
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let mut buf = String::new();
+    for sha in shas {
+        buf.push_str(sha.as_ref());
+        buf.push('\n');
+    }
+    sha256_hex(buf.as_bytes())
+}
+
+/// Fold full per-run digest strings ([`run_digest`] / [`cluster_digest`]
+/// output, in cell order) into the merged digest: sha256 each, then
+/// [`fold_cell_shas`]. An in-process `Sweep::run` folded this way must
+/// equal a sharded run's [`MergedSweep::digest`] — the cross-process
+/// equality `tests/sweep_determinism.rs` pins.
+pub fn fold_run_digests<I, S>(digests: I) -> String
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    fold_cell_shas(
+        digests.into_iter().map(|d| sha256_hex(d.as_ref().as_bytes())),
+    )
+}
+
+/// One variant's merged population, reduced.
+#[derive(Debug, Clone)]
+pub struct VariantSummary {
+    pub spec: String,
+    pub runs: usize,
+    pub completed: usize,
+    pub makespan_secs: Summary,
+    pub total_cost: Summary,
+    pub evictions: Summary,
+    pub restores: Summary,
+    pub lost_steps: Summary,
+}
+
+impl VariantSummary {
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("config", self.spec.as_str())
+            .set("runs", self.runs)
+            .set("completed", self.completed)
+            .set("makespan_secs", self.makespan_secs.to_json())
+            .set("total_cost", self.total_cost.to_json())
+            .set("evictions", self.evictions.to_json())
+            .set("restores", self.restores.to_json())
+            .set("lost_steps", self.lost_steps.to_json());
+        v
+    }
+}
+
+/// The merged sweep: every cell in global order, the fold digest, and
+/// per-variant summaries.
+#[derive(Debug, Clone)]
+pub struct MergedSweep {
+    pub digest: String,
+    pub cells: Vec<CellRecord>,
+    pub summaries: Vec<VariantSummary>,
+}
+
+impl MergedSweep {
+    /// Deterministic `MERGED.json` body: digest + summaries (cell
+    /// records stay in the per-shard artifacts — at a million seeds the
+    /// merge file must not re-carry them all).
+    pub fn to_json(&self, plan: &ShardPlan) -> Value {
+        let mut v = Value::obj();
+        v.set("format", MERGE_FORMAT)
+            .set("run_id", plan.run_id.as_str())
+            .set("fingerprint", plan.fingerprint())
+            .set("digest", self.digest.as_str())
+            .set("cells", self.cells.len())
+            .set("shards", plan.shards)
+            .set(
+                "skipped",
+                plan.skipped
+                    .iter()
+                    .map(|s| {
+                        let mut o = Value::obj();
+                        o.set("spec", s.spec.as_str())
+                            .set("reason", s.reason.as_str());
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "summaries",
+                self.summaries
+                    .iter()
+                    .map(VariantSummary::to_json)
+                    .collect::<Vec<_>>(),
+            );
+        v
+    }
+
+    /// Human-readable per-variant table.
+    pub fn render(&self) -> String {
+        use crate::report::table::TextTable;
+        use crate::util::fmt::{dollars, hms_f64 as hms};
+        let mut t = TextTable::new(&[
+            "Config",
+            "Runs",
+            "Completed",
+            "Makespan p50",
+            "Makespan p95",
+            "Cost mean",
+            "Cost p95",
+            "Evictions mean",
+        ]);
+        for s in &self.summaries {
+            t.row(&[
+                s.spec.clone(),
+                s.runs.to_string(),
+                s.completed.to_string(),
+                hms(s.makespan_secs.p50),
+                hms(s.makespan_secs.p95),
+                dollars(s.total_cost.mean),
+                dollars(s.total_cost.p95),
+                format!("{:.2}", s.evictions.mean),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Merge a complete run directory **by shard id**: artifacts are read
+/// in shard order (shards own contiguous ascending cell ranges, so
+/// concatenation is global cell order), validated against the plan, and
+/// folded into the digest + per-variant summaries. Any missing, torn,
+/// or mismatched artifact fails the merge — it never guesses.
+pub fn merge(dir: &Path, plan: &ShardPlan) -> Result<MergedSweep> {
+    let mut cells: Vec<CellRecord> = Vec::with_capacity(plan.cells());
+    for shard in 0..plan.shards {
+        let (art, _) = verify_artifact(dir, plan, shard)
+            .with_context(|| format!("merging shard {shard}"))?;
+        cells.extend(art.cells);
+    }
+    let digest = fold_cell_shas(cells.iter().map(|c| c.digest_sha.as_str()));
+    // per-variant summaries through one reused Summarizer (cells are
+    // config-major: variant v owns cells[v*n .. (v+1)*n])
+    let n = plan.seeds.count;
+    let mut sz = Summarizer::new();
+    let summaries = plan
+        .configs
+        .iter()
+        .enumerate()
+        .map(|(v, cfg)| {
+            let slice = &cells[v * n..(v + 1) * n];
+            let mut metric = |f: &dyn Fn(&CellMetrics) -> f64| -> Summary {
+                for rec in slice {
+                    sz.push(f(&rec.metrics));
+                }
+                sz.finish()
+            };
+            VariantSummary {
+                spec: cfg.spec.clone(),
+                runs: slice.len(),
+                completed: slice
+                    .iter()
+                    .filter(|r| r.metrics.completed)
+                    .count(),
+                makespan_secs: metric(&|m| m.makespan_secs),
+                total_cost: metric(&|m| m.total_cost),
+                evictions: metric(&|m| m.evictions),
+                restores: metric(&|m| m.restores),
+                lost_steps: metric(&|m| m.lost_steps),
+            }
+        })
+        .collect();
+    Ok(MergedSweep { digest, cells, summaries })
+}
+
+/// A shard that exhausted its retries, with everything needed to replay
+/// it: the attempt count, the last failure reason, and the full
+/// `(config, seed)` cell list.
+#[derive(Debug, Clone)]
+pub struct DeadLetter {
+    pub shard: usize,
+    pub attempts: u32,
+    pub reason: String,
+    pub cells: Vec<(String, u64)>,
+}
+
+impl DeadLetter {
+    fn for_shard(
+        plan: &ShardPlan,
+        shard: usize,
+        attempts: u32,
+        reason: String,
+    ) -> Self {
+        let cells = plan
+            .shard_range(shard)
+            .map(|m| {
+                let (ci, seed) = plan.cell(m);
+                (plan.configs[ci].spec.clone(), seed)
+            })
+            .collect();
+        Self { shard, attempts, reason, cells }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut v = Value::obj();
+        v.set("shard", self.shard)
+            .set("attempts", u64::from(self.attempts))
+            .set("reason", self.reason.as_str())
+            .set(
+                "cells",
+                self.cells
+                    .iter()
+                    .map(|(config, seed)| {
+                        let mut o = Value::obj();
+                        o.set("config", config.as_str())
+                            .set("seed", u64_str(*seed));
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            );
+        v
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            shard: v.req_u64("shard")? as usize,
+            attempts: v.req_u64("attempts")? as u32,
+            reason: v.req_str("reason")?.to_string(),
+            cells: v
+                .req_array("cells")?
+                .iter()
+                .map(|c| {
+                    Ok((
+                        c.req_str("config")?.to_string(),
+                        req_u64_str(c, "seed")?,
+                    ))
+                })
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The checkpointed progress record (`MANIFEST.json`): which shards
+/// completed (with their artifact file hashes) and which dead-lettered.
+/// Rewritten atomically after every state change — an orchestrator
+/// killed at any instant leaves a manifest a resume can trust.
+#[derive(Debug, Clone, Default)]
+struct Manifest {
+    run_id: String,
+    fingerprint: String,
+    completed: BTreeMap<usize, String>,
+    dead_letter: Vec<DeadLetter>,
+}
+
+impl Manifest {
+    fn path(dir: &Path) -> PathBuf {
+        dir.join("MANIFEST.json")
+    }
+
+    fn fresh(plan: &ShardPlan) -> Self {
+        Self {
+            run_id: plan.run_id.clone(),
+            fingerprint: plan.fingerprint.clone(),
+            ..Self::default()
+        }
+    }
+
+    fn load_or_new(dir: &Path, plan: &ShardPlan) -> Result<Self> {
+        let path = Self::path(dir);
+        if !path.exists() {
+            return Ok(Self::fresh(plan));
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let format = v.req_str("format")?;
+        if format != MANIFEST_FORMAT {
+            bail!("unsupported manifest format '{format}'");
+        }
+        let m = Self {
+            run_id: v.req_str("run_id")?.to_string(),
+            fingerprint: v.req_str("fingerprint")?.to_string(),
+            completed: v
+                .req_array("completed")?
+                .iter()
+                .map(|e| {
+                    Ok((
+                        e.req_u64("shard")? as usize,
+                        e.req_str("artifact_sha256")?.to_string(),
+                    ))
+                })
+                .collect::<Result<_>>()?,
+            dead_letter: v
+                .req_array("dead_letter")?
+                .iter()
+                .map(DeadLetter::from_json)
+                .collect::<Result<_>>()?,
+        };
+        if m.run_id != plan.run_id || m.fingerprint != plan.fingerprint {
+            bail!(
+                "manifest in {} belongs to a different run/plan — refusing \
+                 to resume over it",
+                dir.display()
+            );
+        }
+        Ok(m)
+    }
+
+    fn save(&self, dir: &Path) -> Result<()> {
+        let mut v = Value::obj();
+        v.set("format", MANIFEST_FORMAT)
+            .set("run_id", self.run_id.as_str())
+            .set("fingerprint", self.fingerprint.as_str())
+            .set(
+                "completed",
+                self.completed
+                    .iter()
+                    .map(|(shard, sha)| {
+                        let mut o = Value::obj();
+                        o.set("shard", *shard)
+                            .set("artifact_sha256", sha.as_str());
+                        o
+                    })
+                    .collect::<Vec<_>>(),
+            )
+            .set(
+                "dead_letter",
+                self.dead_letter
+                    .iter()
+                    .map(DeadLetter::to_json)
+                    .collect::<Vec<_>>(),
+            );
+        let mut body = json::to_string_pretty(&v);
+        body.push('\n');
+        atomic_write(&Self::path(dir), body.as_bytes())
+            .context("writing MANIFEST.json")
+    }
+}
+
+/// What one `ShardRunner::run` invocation produced.
+#[derive(Debug)]
+pub struct ShardedOutcome {
+    /// The merged sweep — present iff every shard completed and
+    /// validated.
+    pub merged: Option<MergedSweep>,
+    /// Shards that exhausted retries this invocation.
+    pub dead_letter: Vec<DeadLetter>,
+    /// Shards freshly executed by this invocation.
+    pub ran: Vec<usize>,
+    /// Shards reused from the checkpointed manifest.
+    pub reused: Vec<usize>,
+}
+
+/// The multi-process orchestrator: spawns worker processes over a run
+/// directory, checkpoints progress, retries, dead-letters, and merges.
+#[derive(Debug, Clone)]
+pub struct ShardRunner {
+    plan: ShardPlan,
+    dir: PathBuf,
+    exe: PathBuf,
+    procs: usize,
+    threads: usize,
+    retries: u32,
+    envs: Vec<(String, String)>,
+    scenario_base: Option<PathBuf>,
+}
+
+impl ShardRunner {
+    /// `exe` is the `spoton` binary to re-invoke (`current_exe()` from
+    /// the CLI, `env!("CARGO_BIN_EXE_spoton")` from tests/benches).
+    pub fn new(plan: ShardPlan, dir: impl Into<PathBuf>, exe: impl Into<PathBuf>) -> Self {
+        Self {
+            plan,
+            dir: dir.into(),
+            exe: exe.into(),
+            procs: 1,
+            threads: 1,
+            retries: 2,
+            envs: Vec::new(),
+            scenario_base: None,
+        }
+    }
+
+    /// Max concurrent worker processes (default 1).
+    pub fn procs(mut self, n: usize) -> Self {
+        self.procs = n.max(1);
+        self
+    }
+
+    /// Threads per worker process (default 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Extra attempts after a shard's first failure (default 2).
+    pub fn retries(mut self, n: u32) -> Self {
+        self.retries = n;
+        self
+    }
+
+    /// Extra environment for spawned workers (tests use this to inject
+    /// failures; see `spoton sweep-worker`'s `SPOTON_TEST_*` hooks).
+    pub fn env(mut self, key: &str, value: &str) -> Self {
+        self.envs.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Directory relative `price_trace` paths in the scenario resolve
+    /// against (recorded in `PLAN.json` for workers; defaults to the
+    /// run directory).
+    pub fn scenario_base(mut self, base: Option<PathBuf>) -> Self {
+        self.scenario_base = base;
+        self
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Create (or verify) the run directory: `scenario.toml` +
+    /// `PLAN.json`. Idempotent; an existing directory must carry the
+    /// same plan fingerprint or this bails — resuming a *different*
+    /// study over old artifacts is always an error.
+    pub fn init(&self, scenario_text: &str) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let plan_path = self.dir.join("PLAN.json");
+        if plan_path.exists() {
+            let (existing, _) = load_run_dir(&self.dir)?;
+            if existing.fingerprint != self.plan.fingerprint {
+                bail!(
+                    "{} holds a different plan (fingerprint {} != {}); use a \
+                     fresh --run-id or directory",
+                    self.dir.display(),
+                    existing.fingerprint,
+                    self.plan.fingerprint
+                );
+            }
+            return Ok(());
+        }
+        atomic_write(
+            &self.dir.join("scenario.toml"),
+            scenario_text.as_bytes(),
+        )
+        .context("writing scenario.toml")?;
+        let mut plan_json = self.plan.to_json();
+        if let Some(base) = &self.scenario_base {
+            plan_json
+                .set("scenario_base", base.to_string_lossy().into_owned());
+        }
+        let mut body = json::to_string_pretty(&plan_json);
+        body.push('\n');
+        atomic_write(&plan_path, body.as_bytes())
+            .context("writing PLAN.json")
+    }
+
+    fn spawn_worker(&self, shard: usize) -> Result<std::process::Child> {
+        let log = std::fs::File::create(
+            self.dir.join(format!("shard-{shard}.stderr.log")),
+        )?;
+        let mut cmd = Command::new(&self.exe);
+        cmd.arg("sweep-worker")
+            .arg("--dir")
+            .arg(&self.dir)
+            .arg("--shard")
+            .arg(shard.to_string())
+            .arg("--threads")
+            .arg(self.threads.to_string())
+            .stdout(Stdio::null())
+            .stderr(Stdio::from(log));
+        for (k, v) in &self.envs {
+            cmd.env(k, v);
+        }
+        cmd.spawn().with_context(|| {
+            format!("spawning worker for shard {shard} ({:?})", self.exe)
+        })
+    }
+
+    /// Run (or resume) the sweep. Requires [`Self::init`] to have been
+    /// called for this directory at some point.
+    pub fn run(&self) -> Result<ShardedOutcome> {
+        let plan = &self.plan;
+        let mut manifest = Manifest::load_or_new(&self.dir, plan)?;
+
+        // Re-verify checkpointed completions against the disk: a shard
+        // whose artifact went missing, tore, or no longer matches its
+        // recorded hash is *marked missing* and re-run.
+        let stale: Vec<usize> = manifest
+            .completed
+            .iter()
+            .filter(|&(&shard, recorded)| {
+                match verify_artifact(&self.dir, plan, shard) {
+                    Ok((_, sha)) => &sha != recorded,
+                    Err(_) => true,
+                }
+            })
+            .map(|(&shard, _)| shard)
+            .collect();
+        for shard in &stale {
+            manifest.completed.remove(shard);
+        }
+
+        let reused: Vec<usize> = manifest.completed.keys().copied().collect();
+        let pending_init: Vec<usize> = (0..plan.shards)
+            .filter(|s| !manifest.completed.contains_key(s))
+            .collect();
+        // Shards about to be re-attempted get a clean dead-letter slate.
+        let dead_before = manifest.dead_letter.len();
+        manifest
+            .dead_letter
+            .retain(|d| !pending_init.contains(&d.shard));
+        if !stale.is_empty() || manifest.dead_letter.len() != dead_before {
+            manifest.save(&self.dir)?;
+        }
+        let mut pending: VecDeque<usize> = pending_init.into();
+
+        let mut running: Vec<(usize, std::process::Child)> = Vec::new();
+        let mut attempts: BTreeMap<usize, u32> = BTreeMap::new();
+        let mut ran: Vec<usize> = Vec::new();
+        let mut fresh_dead: Vec<DeadLetter> = Vec::new();
+
+        loop {
+            while running.len() < self.procs {
+                let Some(shard) = pending.pop_front() else { break };
+                running.push((shard, self.spawn_worker(shard)?));
+            }
+            if running.is_empty() {
+                break;
+            }
+            let mut finished: Vec<(usize, std::process::ExitStatus)> =
+                Vec::new();
+            let mut still = Vec::new();
+            for (shard, mut child) in running.drain(..) {
+                match child.try_wait().context("polling worker")? {
+                    Some(status) => finished.push((shard, status)),
+                    None => still.push((shard, child)),
+                }
+            }
+            running = still;
+            if finished.is_empty() {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                continue;
+            }
+            for (shard, status) in finished {
+                let verdict: Result<String> = if status.success() {
+                    verify_artifact(&self.dir, plan, shard)
+                        .map(|(_, sha)| sha)
+                } else {
+                    Err(anyhow!("worker exited with {status}"))
+                };
+                match verdict {
+                    Ok(sha) => {
+                        manifest.completed.insert(shard, sha);
+                        manifest.save(&self.dir)?;
+                        ran.push(shard);
+                    }
+                    Err(e) => {
+                        let tries = attempts.entry(shard).or_insert(0);
+                        *tries += 1;
+                        if *tries <= self.retries {
+                            log::warn!(
+                                "shard {shard} attempt {tries} failed \
+                                 ({e:#}); retrying"
+                            );
+                            pending.push_back(shard);
+                        } else {
+                            let dl = DeadLetter::for_shard(
+                                plan,
+                                shard,
+                                *tries,
+                                format!("{e:#}"),
+                            );
+                            manifest.dead_letter.push(dl.clone());
+                            manifest.save(&self.dir)?;
+                            fresh_dead.push(dl);
+                        }
+                    }
+                }
+            }
+        }
+
+        let merged = if manifest.completed.len() == plan.shards {
+            let m = merge(&self.dir, plan)?;
+            let mut body = json::to_string_pretty(&m.to_json(plan));
+            body.push('\n');
+            atomic_write(&self.dir.join("MERGED.json"), body.as_bytes())
+                .context("writing MERGED.json")?;
+            Some(m)
+        } else {
+            None
+        };
+        Ok(ShardedOutcome { merged, dead_letter: fresh_dead, ran, reused })
+    }
+}
+
+/// Load a run directory as a worker (or a resuming orchestrator) sees
+/// it: parse `PLAN.json`, check `scenario.toml` against the pinned
+/// hash, parse the scenario (trace paths resolve against the recorded
+/// `scenario_base`, defaulting to the run directory), and rebuild +
+/// verify the plan.
+pub fn load_run_dir(dir: &Path) -> Result<(ShardPlan, ScenarioConfig)> {
+    let plan_path = dir.join("PLAN.json");
+    let plan_text = std::fs::read_to_string(&plan_path)
+        .with_context(|| format!("reading {}", plan_path.display()))?;
+    let v = json::parse(&plan_text)
+        .map_err(|e| anyhow!("{}: {e}", plan_path.display()))?;
+    let scen_path = dir.join("scenario.toml");
+    let scen_text = std::fs::read_to_string(&scen_path)
+        .with_context(|| format!("reading {}", scen_path.display()))?;
+    if sha256_hex(scen_text.as_bytes()) != v.req_str("scenario_sha256")? {
+        bail!(
+            "{} does not match the hash pinned in PLAN.json (scenario \
+             edited after planning?)",
+            scen_path.display()
+        );
+    }
+    let base = v
+        .get("scenario_base")
+        .and_then(Value::as_str)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| dir.to_path_buf());
+    let scenario =
+        ScenarioConfig::from_str_toml_with_base(&scen_text, Some(base.as_path()))?;
+    let plan = ShardPlan::from_json(&v, &scenario, &scen_text)?;
+    Ok((plan, scenario))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario() -> (ScenarioConfig, String) {
+        let text = r#"
+name = "shard-unit"
+deadline_mins = 1800
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [100, 200]
+
+[eviction]
+plan = "poisson"
+mean_mins = 45
+
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+"#;
+        (ScenarioConfig::from_str_toml(text).unwrap(), text.to_string())
+    }
+
+    fn plan_with(shards: usize, specs: &[&str]) -> ShardPlan {
+        let (cfg, text) = scenario();
+        let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+        ShardPlan::new(
+            "unit",
+            SeedStream::contiguous(0, 6),
+            &specs,
+            &cfg,
+            &text,
+            shards,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_partitions_every_cell_exactly_once() {
+        for shards in [1, 2, 3, 4, 5, 7, 12] {
+            let plan = plan_with(shards, &["fixed", "young-daly"]);
+            assert_eq!(plan.cells(), 12);
+            let mut seen = vec![false; plan.cells()];
+            let mut expected_lo = 0;
+            for k in 0..plan.shards {
+                let range = plan.shard_range(k);
+                assert!(!range.is_empty(), "shard {k} empty at S={shards}");
+                assert_eq!(range.start, expected_lo, "gap before shard {k}");
+                expected_lo = range.end;
+                for m in range {
+                    assert!(!seen[m], "cell {m} in two shards");
+                    seen[m] = true;
+                }
+            }
+            assert_eq!(expected_lo, plan.cells());
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn shard_count_is_clamped_to_cells() {
+        let plan = plan_with(500, &["fixed"]);
+        assert_eq!(plan.shards, 6, "6 cells can fill at most 6 shards");
+        let plan = plan_with(0, &["fixed"]);
+        assert_eq!(plan.shards, 1);
+    }
+
+    #[test]
+    fn salted_streams_are_decorrelated_and_boundary_free() {
+        let plain = SeedStream::contiguous(10, 8);
+        assert_eq!(plain.iter().collect::<Vec<_>>(), (10..18).collect::<Vec<_>>());
+        let salted = SeedStream::salted(10, 8, 0xfeed);
+        let seeds: Vec<u64> = salted.iter().collect();
+        // deterministic
+        assert_eq!(seeds, salted.iter().collect::<Vec<_>>());
+        // decorrelated from the contiguous range and from other salts
+        assert!(seeds.iter().zip(10..18).all(|(&s, p)| s != p));
+        let other: Vec<u64> = SeedStream::salted(10, 8, 0xbeef).iter().collect();
+        assert!(seeds.iter().zip(&other).all(|(a, b)| a != b));
+        // seeds are a function of global index only — identical however
+        // the plan is sharded (shard boundaries never enter seed())
+        let via_cells: Vec<u64> = (0..8)
+            .map(|j| SeedStream::salted(10, 8, 0xfeed).seed(j))
+            .collect();
+        assert_eq!(seeds, via_cells);
+    }
+
+    #[test]
+    fn invalid_combinations_are_filtered_with_reasons() {
+        let text = "[checkpoint]\nmethod = \"none\"\n";
+        let cfg = ScenarioConfig::from_str_toml(text).unwrap();
+        let specs =
+            vec!["base".to_string(), "young-daly".to_string(), "fixed".into()];
+        let plan = ShardPlan::new(
+            "f",
+            SeedStream::contiguous(0, 2),
+            &specs,
+            &cfg,
+            text,
+            2,
+        )
+        .unwrap();
+        // base has no controller, fixed is the no-op controller — both
+        // run anywhere; young-daly needs transparent checkpointing
+        let resolved: Vec<&str> =
+            plan.configs.iter().map(|c| c.spec.as_str()).collect();
+        assert_eq!(resolved, ["base", "fixed"]);
+        assert_eq!(plan.skipped.len(), 1);
+        assert_eq!(plan.skipped[0].spec, "young-daly");
+        assert!(
+            plan.skipped[0].reason.contains("transparent"),
+            "{}",
+            plan.skipped[0].reason
+        );
+        // all filtered → hard error
+        let err = ShardPlan::new(
+            "f",
+            SeedStream::contiguous(0, 2),
+            &["cost-aware:2".to_string()],
+            &cfg,
+            text,
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("filtered out"), "{err}");
+    }
+
+    #[test]
+    fn fingerprint_tracks_every_parameter() {
+        let base = plan_with(3, &["fixed"]);
+        let fp = |p: &ShardPlan| p.fingerprint().to_string();
+        // run_id is a label, not part of the work
+        let (cfg, text) = scenario();
+        let renamed = ShardPlan::new(
+            "other-name",
+            SeedStream::contiguous(0, 6),
+            &["fixed".to_string()],
+            &cfg,
+            &text,
+            3,
+        )
+        .unwrap();
+        assert_eq!(fp(&base), fp(&renamed));
+        // every work-defining knob moves it
+        assert_ne!(fp(&base), fp(&plan_with(4, &["fixed"])));
+        assert_ne!(fp(&base), fp(&plan_with(3, &["young-daly"])));
+        let salted = ShardPlan::new(
+            "unit",
+            SeedStream::salted(0, 6, 9),
+            &["fixed".to_string()],
+            &cfg,
+            &text,
+            3,
+        )
+        .unwrap();
+        assert_ne!(fp(&base), fp(&salted));
+        let edited = ShardPlan::new(
+            "unit",
+            SeedStream::contiguous(0, 6),
+            &["fixed".to_string()],
+            &cfg,
+            &format!("{text}\n# edited"),
+            3,
+        )
+        .unwrap();
+        assert_ne!(fp(&base), fp(&edited));
+    }
+
+    #[test]
+    fn plan_round_trips_through_json() {
+        let (cfg, text) = scenario();
+        let plan = plan_with(4, &["fixed", "cost-aware:1.5"]);
+        let v = plan.to_json();
+        let back = ShardPlan::from_json(&v, &cfg, &text).unwrap();
+        assert_eq!(back.fingerprint(), plan.fingerprint());
+        assert_eq!(back.seeds, plan.seeds);
+        assert_eq!(back.shards, plan.shards);
+        assert_eq!(back.configs, plan.configs);
+        // tampering with a stored field is caught
+        let mut tampered = v.clone();
+        tampered.set("seed_count", 7u64);
+        let err = ShardPlan::from_json(&tampered, &cfg, &text).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+    }
+
+    #[test]
+    fn resharding_preserves_the_merged_digest() {
+        let (cfg, _) = scenario();
+        let run = |shards: usize| -> (String, Vec<CellRecord>) {
+            let plan = plan_with(shards, &["fixed", "young-daly"]);
+            let mut cells = Vec::new();
+            for k in 0..plan.shards {
+                let art = run_shard(&plan, &cfg, k, 2).unwrap();
+                art.validate(&plan, k).unwrap();
+                cells.extend(art.cells);
+            }
+            (
+                fold_cell_shas(cells.iter().map(|c| c.digest_sha.as_str())),
+                cells,
+            )
+        };
+        let (d3, cells3) = run(3);
+        let (d5, cells5) = run(5);
+        assert_eq!(d3, d5, "shard count must be invisible in the merge");
+        assert_eq!(cells3, cells5);
+        // and the digest equals the in-process Sweep fold, per variant
+        // in config-major cell order
+        let mut digests: Vec<String> = Vec::new();
+        for spec in ["fixed", "young-daly"] {
+            let mut c = cfg.clone();
+            ConfigVariant::parse(spec).unwrap().apply(&mut c);
+            let runs = Experiment { cfg: c }
+                .sweep()
+                .seed_range(0, 6)
+                .threads(2)
+                .run()
+                .unwrap();
+            digests.extend(runs.iter().map(|r| run_digest(&r.result)));
+        }
+        assert_eq!(d3, fold_run_digests(digests.iter()));
+    }
+
+    #[test]
+    fn artifact_round_trips_and_rejects_tampering() {
+        let (cfg, _) = scenario();
+        let plan = plan_with(3, &["fixed"]);
+        let art = run_shard(&plan, &cfg, 1, 1).unwrap();
+        let v = art.to_json();
+        let back = ShardArtifact::from_json(&v).unwrap();
+        back.validate(&plan, 1).unwrap();
+        assert_eq!(back.cells, art.cells);
+        // wrong shard id
+        assert!(back.validate(&plan, 2).is_err());
+        // a tampered seed fails validation
+        let mut bad = back.clone();
+        bad.cells[0].seed ^= 1;
+        let err = bad.validate(&plan, 1).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        // metrics survive the JSON round trip bit-exactly
+        let text = json::to_string_pretty(&v);
+        let reparsed =
+            ShardArtifact::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(reparsed.cells, art.cells);
+    }
+
+    #[test]
+    fn merge_rejects_missing_and_truncated_artifacts() {
+        let (cfg, _) = scenario();
+        let plan = plan_with(2, &["fixed"]);
+        let dir = std::env::temp_dir().join(format!(
+            "spoton-shard-unit-{}-{}",
+            std::process::id(),
+            crate::util::next_seq()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        for k in 0..plan.shards {
+            let art = run_shard(&plan, &cfg, k, 1).unwrap();
+            let mut body = json::to_string_pretty(&art.to_json());
+            body.push('\n');
+            atomic_write(&artifact_path(&dir, k), body.as_bytes()).unwrap();
+        }
+        let full = merge(&dir, &plan).unwrap();
+        assert_eq!(full.cells.len(), plan.cells());
+        assert_eq!(full.summaries.len(), 1);
+        assert_eq!(full.summaries[0].runs, 6);
+        // truncate shard 1 mid-file: parse fails → merge fails
+        let path = artifact_path(&dir, 1);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        let err = merge(&dir, &plan).unwrap_err();
+        assert!(format!("{err:#}").contains("shard 1"), "{err:#}");
+        // remove it entirely: still fails
+        std::fs::remove_file(&path).unwrap();
+        assert!(merge(&dir, &plan).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cluster_scenarios_shard_too() {
+        let text = r#"
+name = "shard-cluster-unit"
+deadline_mins = 240000
+
+[workload]
+kind = "sleeper"
+ks = [33]
+stage_secs = [2]
+
+[eviction]
+plan = "poisson"
+mean_mins = 6
+
+[checkpoint]
+method = "transparent"
+interval_mins = 5
+
+[cluster]
+jobs = 6
+capacity = 2
+"#;
+        let cfg = ScenarioConfig::from_str_toml(text).unwrap();
+        let plan = ShardPlan::new(
+            "cluster-unit",
+            SeedStream::contiguous(0, 4),
+            &[],
+            &cfg,
+            text,
+            2,
+        )
+        .unwrap();
+        assert_eq!(plan.configs[0].spec, "base");
+        let a0 = run_shard(&plan, &cfg, 0, 1).unwrap();
+        let a1 = run_shard(&plan, &cfg, 1, 2).unwrap();
+        a0.validate(&plan, 0).unwrap();
+        a1.validate(&plan, 1).unwrap();
+        // equals the in-process ClusterSweep fold
+        let runs = Experiment { cfg: cfg.clone() }
+            .cluster_sweep()
+            .seed_range(0, 4)
+            .threads(2)
+            .run()
+            .unwrap();
+        let folded =
+            fold_run_digests(runs.iter().map(|r| cluster_digest(&r.result)));
+        let sharded = fold_cell_shas(
+            a0.cells
+                .iter()
+                .chain(a1.cells.iter())
+                .map(|c| c.digest_sha.as_str()),
+        );
+        assert_eq!(folded, sharded);
+        // cluster metrics aggregate over jobs
+        assert!(a0.cells.iter().all(|c| c.metrics.completed));
+        assert!(a0.cells[0].metrics.makespan_secs > 0.0);
+    }
+
+    #[test]
+    fn timing_is_excluded_from_comparable_output() {
+        // two artifacts for the same shard with different wall clocks
+        // must agree on everything the merge consumes
+        let (cfg, _) = scenario();
+        let plan = plan_with(2, &["fixed"]);
+        let mut a = run_shard(&plan, &cfg, 0, 1).unwrap();
+        let mut b = run_shard(&plan, &cfg, 0, 2).unwrap();
+        assert_eq!(a.cells, b.cells);
+        a.wall_ms = 1;
+        b.wall_ms = 99_999;
+        assert_eq!(a.cells, b.cells, "wall_ms must not touch cells");
+    }
+}

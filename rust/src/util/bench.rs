@@ -10,6 +10,15 @@
 //! tracked across commits and uploaded as a CI artifact. The output
 //! directory defaults to the working directory and is overridable with
 //! `BENCH_JSON_DIR`.
+//!
+//! Emission is **key-order-deterministic and atomic**: object keys
+//! serialize sorted regardless of the order `stat`/`value` were called
+//! in (`json::Value` objects are `BTreeMap`s; pinned by a test below),
+//! so two reports carrying the same data are byte-identical and
+//! `BENCH_*.json` diffs stay meaningful across runs — and the file is
+//! written via [`crate::util::atomic_write`], so an interrupted bench
+//! never leaves a truncated report for CI upload steps or the shard
+//! merger to trip over.
 
 use crate::json::Value;
 use std::path::PathBuf;
@@ -130,14 +139,25 @@ impl BenchReport {
         dir.join(format!("BENCH_{}.json", self.name))
     }
 
-    /// Write the pretty-printed report; returns where it landed.
+    /// Write the canonical report atomically (temp file + rename, so a
+    /// killed bench never leaves a partial `BENCH_*.json`); returns
+    /// where it landed.
     pub fn write(&self) -> std::io::Result<PathBuf> {
         let path = self.path();
-        let mut body = crate::json::to_string_pretty(&self.root);
-        body.push('\n');
-        std::fs::write(&path, body)?;
+        crate::util::atomic_write(&path, self.to_string().as_bytes())?;
         println!("\nwrote {}", path.display());
         Ok(path)
+    }
+}
+
+/// Canonical serialized form: pretty-printed JSON with sorted keys plus
+/// a trailing newline. Two reports with the same contents stringify
+/// byte-identically no matter the insertion order (the shape `write`
+/// persists).
+impl std::fmt::Display for BenchReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&crate::json::to_string_pretty(&self.root))?;
+        f.write_str("\n")
     }
 }
 
@@ -180,5 +200,43 @@ mod tests {
         let text = crate::json::to_string_pretty(&v);
         assert!(crate::json::parse(&text).is_ok());
         assert!(report.path().ends_with("BENCH_unit.json"));
+    }
+
+    #[test]
+    fn emission_is_key_order_deterministic() {
+        // same data, opposite insertion order → byte-identical output
+        let mut a = BenchReport::new("order");
+        a.value("alpha", 1u64).value("zeta", 2u64).value("mid", 3u64);
+        let mut b = BenchReport::new("order");
+        b.value("zeta", 2u64).value("mid", 3u64).value("alpha", 1u64);
+        assert_eq!(a.to_string(), b.to_string());
+        // keys really come out sorted
+        let text = a.to_string();
+        let pos = |k: &str| text.find(k).unwrap();
+        assert!(pos("alpha") < pos("bench"));
+        assert!(pos("bench") < pos("mid"));
+        assert!(pos("mid") < pos("zeta"));
+        assert!(text.ends_with('\n'));
+    }
+
+    #[test]
+    fn write_lands_atomically_in_bench_json_dir() {
+        // BENCH_JSON_DIR is process-global: write to a private dir via a
+        // path check only (no env mutation — tests run in parallel).
+        let mut report = BenchReport::new("atomic-unit");
+        report.value("k", 1u64);
+        let dir = std::env::temp_dir().join(format!(
+            "spoton-bench-{}-{}",
+            std::process::id(),
+            crate::util::next_seq()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_atomic-unit.json");
+        crate::util::atomic_write(&path, report.to_string().as_bytes())
+            .unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body, report.to_string());
+        assert!(crate::json::parse(&body).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

