@@ -1,0 +1,93 @@
+//! Chaos storm: coordinated evictions + flaky storage vs the retrying
+//! coordinator.
+//!
+//! ```bash
+//! cargo run --release --example chaos_storm
+//! ```
+//!
+//! Loads the `chaos-storm` scenario (the same TOML that CI drives
+//! through `spoton check`): a two-pool fleet hit by seeded eviction
+//! storms while the scheduled-events endpoint goes dark and checkpoint
+//! commits fail at random. The run is hard-asserted through the
+//! scenario's own `[expect]` section, then re-run with retries stripped
+//! to show what the bounded-backoff coordinator absorbs.
+
+use spoton::config::ScenarioConfig;
+use spoton::metrics::EventKind;
+use spoton::report::table::TextTable;
+use spoton::report::{expect, faults};
+use spoton::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    // The example and `spoton check` evaluate the identical scenario —
+    // compiled in so it runs from any working directory.
+    let cfg = ScenarioConfig::from_str_toml(include_str!(
+        "../scenarios/chaos_storm.toml"
+    ))?;
+    let expect_cfg = cfg
+        .expect
+        .clone()
+        .expect("chaos_storm.toml carries an [expect] section");
+
+    // 1. The hardened coordinator, judged by its own expectations.
+    println!("chaos-storm with bounded-backoff retries:\n");
+    let exp = Experiment { cfg: cfg.clone() };
+    let runs = exp
+        .sweep()
+        .seed_range(cfg.seed, expect_cfg.seeds as usize)
+        .run()?;
+    let acc = faults::account_many(runs.iter().map(|r| &r.result.timeline));
+    print!("{}", faults::render(&acc));
+    let report = expect::evaluate_runs(&expect_cfg, &cfg.name, &runs);
+    print!("\n{}", expect::render(&report));
+    assert!(report.passed(), "[expect] must hold under the storm");
+    assert!(acc.total() > 0, "the storms alone guarantee chaos events");
+    assert_eq!(
+        acc.count(EventKind::UnrecoveredRestore),
+        0,
+        "every restore must land on a verified generation"
+    );
+
+    // 2. Same seeds, same faults drawn, retries stripped: every injected
+    //    write fault now costs a whole generation instead of a delay.
+    println!("\nsame storm, no-retry baseline:\n");
+    let mut bare = cfg.clone();
+    bare.retry = None;
+    let baseline = Experiment { cfg: bare }
+        .sweep()
+        .seed_range(cfg.seed, expect_cfg.seeds as usize)
+        .run()?;
+    let bare_acc =
+        faults::account_many(baseline.iter().map(|r| &r.result.timeline));
+
+    let count = |rs: &[spoton::sim::sweep::SeededRun], k: EventKind| {
+        rs.iter().map(|r| r.result.timeline.count(k)).sum::<usize>()
+    };
+    let mut t = TextTable::new(&[
+        "Coordinator", "Retries", "Lost generations", "Completed",
+    ]);
+    for (label, rs, a) in
+        [("retrying", &runs, &acc), ("no-retry", &baseline, &bare_acc)]
+    {
+        t.row(&[
+            label.to_string(),
+            a.count(EventKind::CkptRetried).to_string(),
+            count(rs, EventKind::CheckpointFailed).to_string(),
+            format!(
+                "{}/{}",
+                rs.iter().filter(|r| r.result.completed).count(),
+                rs.len()
+            ),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let retry_lost = count(&runs, EventKind::CheckpointFailed);
+    let bare_lost = count(&baseline, EventKind::CheckpointFailed);
+    assert!(
+        bare_lost >= retry_lost,
+        "backoff may only reduce lost generations ({bare_lost} < {retry_lost})"
+    );
+    println!("\nstorm absorbed: zero unrecovered restores, [expect] green");
+    Ok(())
+}

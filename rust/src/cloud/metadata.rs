@@ -82,6 +82,11 @@ pub struct MetadataService {
     incarnation: u64,
     next_event_id: u64,
     events: BTreeMap<String, ScheduledEvent>,
+    /// Endpoint outage (chaos injection): while set, polls see nothing —
+    /// the document is unreachable, not empty, so incarnation tracking in
+    /// the monitor is untouched and the notice reappears once the
+    /// endpoint recovers.
+    unavailable: bool,
 }
 
 impl MetadataService {
@@ -157,6 +162,16 @@ impl MetadataService {
 
     pub fn incarnation(&self) -> u64 {
         self.incarnation
+    }
+
+    /// Mark the endpoint up/down (chaos: IMDS outage windows).
+    pub fn set_available(&mut self, up: bool) {
+        self.unavailable = !up;
+    }
+
+    /// Is the endpoint reachable right now?
+    pub fn is_available(&self) -> bool {
+        !self.unavailable
     }
 
     /// Current events (test/inspection helper).
@@ -271,6 +286,16 @@ mod tests {
         assert_eq!(svc.incarnation(), base + 2);
         svc.complete(&id); // absent: no change
         assert_eq!(svc.incarnation(), base + 2);
+    }
+
+    #[test]
+    fn availability_toggle() {
+        let mut svc = MetadataService::new();
+        assert!(svc.is_available());
+        svc.set_available(false);
+        assert!(!svc.is_available());
+        svc.set_available(true);
+        assert!(svc.is_available());
     }
 
     #[test]

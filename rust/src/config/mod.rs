@@ -10,8 +10,9 @@ pub mod toml;
 pub mod scenario;
 
 pub use scenario::{
-    ArrivalCfg, CheckpointMethodCfg, ClampCfg, CloudCfg, ClusterCfg,
-    EvictionPlanCfg, FleetCfg, IntervalControllerCfg, PlacementPolicyCfg,
-    PoolCfg, PoolPricingCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
+    ArrivalCfg, BackoffCfg, ChaosCfg, ChaosImdsCfg, ChaosStorageCfg,
+    CheckpointMethodCfg, ClampCfg, CloudCfg, ClusterCfg, EvictionPlanCfg,
+    ExpectCfg, FleetCfg, IntervalControllerCfg, PlacementPolicyCfg, PoolCfg,
+    PoolPricingCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

@@ -547,6 +547,333 @@ impl Default for StorageCfg {
     }
 }
 
+/// Jittered-exponential-backoff policy for retrying failed checkpoint
+/// commits ([`crate::coordinator::backoff`]). TOML: the
+/// `[checkpoint.retry]` section:
+///
+/// ```toml
+/// [checkpoint.retry]
+/// attempts = 4      # total write attempts (>= 1; 1 = no retry)
+/// base_ms = 500     # first retry delay
+/// max_ms = 8000     # delay cap (>= base_ms)
+/// factor = 2.0      # exponential growth per attempt (>= 1 + jitter)
+/// jitter = 0.25     # uniform jitter fraction in [0, 1)
+/// ```
+///
+/// `factor >= 1 + jitter` guarantees the jittered delay sequence is
+/// monotone non-decreasing up to the cap (property-tested in
+/// `coordinator::backoff`). All knobs are validated at TOML parse AND
+/// again at policy construction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BackoffCfg {
+    /// Total write attempts, including the first (must be >= 1).
+    pub attempts: u32,
+    /// Delay before the first retry. Must be non-zero.
+    pub base: SimDuration,
+    /// Upper bound on any retry delay. Must be >= `base`.
+    pub max: SimDuration,
+    /// Exponential growth factor per attempt. Must be finite and
+    /// >= `1 + jitter` (keeps jittered delays monotone).
+    pub factor: f64,
+    /// Uniform jitter fraction in `[0, 1)`: attempt `k` waits
+    /// `min(base · factor^k · (1 + jitter·u), max)` with `u ∈ [0, 1)`.
+    pub jitter: f64,
+}
+
+impl Default for BackoffCfg {
+    fn default() -> Self {
+        Self {
+            attempts: 4,
+            base: SimDuration::from_millis(500),
+            max: SimDuration::from_secs(8),
+            factor: 2.0,
+            jitter: 0.25,
+        }
+    }
+}
+
+impl BackoffCfg {
+    /// Build-side validation, mirrored by the `[checkpoint.retry]` parse.
+    pub fn validate(&self) -> Result<()> {
+        if self.attempts == 0 {
+            bail!("checkpoint.retry.attempts must be >= 1, got 0");
+        }
+        if self.base.is_zero() {
+            bail!("checkpoint.retry.base_ms must be positive");
+        }
+        if self.max < self.base {
+            bail!(
+                "checkpoint.retry.max_ms ({}) is below base_ms ({}) — the \
+                 backoff bounds are inverted",
+                self.max,
+                self.base
+            );
+        }
+        if !(self.jitter.is_finite() && (0.0..1.0).contains(&self.jitter)) {
+            bail!(
+                "checkpoint.retry.jitter must be in [0, 1), got {}",
+                self.jitter
+            );
+        }
+        if !(self.factor.is_finite() && self.factor >= 1.0 + self.jitter) {
+            bail!(
+                "checkpoint.retry.factor must be finite and >= 1 + jitter \
+                 ({}) so delays stay monotone, got {}",
+                1.0 + self.jitter,
+                self.factor
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Storage-layer fault injection ([`crate::storage::chaos`]). TOML: the
+/// `[chaos.storage]` section:
+///
+/// ```toml
+/// [chaos.storage]
+/// write_fail_prob = 0.10    # checkpoint object write fails outright
+/// torn_write_prob = 0.05    # write dies mid-transfer (prefix lands)
+/// corrupt_prob = 0.05       # payload lands bit-flipped (caught at
+///                           # restore by manifest CRC/SHA verification)
+/// latency_spike_prob = 0.2  # write completes but takes extra time
+/// latency_spike_ms = 1500   # size of the injected latency spike
+/// ```
+///
+/// Probabilities are per stored object (the two-phase writer puts
+/// payload, manifest and COMMIT separately) and must be finite values in
+/// `[0, 1]`. All draws come from a salted per-run PRNG stream, so sweeps
+/// stay byte-identical at any thread or process count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosStorageCfg {
+    pub write_fail_prob: f64,
+    pub torn_write_prob: f64,
+    pub corrupt_prob: f64,
+    pub latency_spike_prob: f64,
+    pub latency_spike: SimDuration,
+}
+
+impl Default for ChaosStorageCfg {
+    fn default() -> Self {
+        Self {
+            write_fail_prob: 0.0,
+            torn_write_prob: 0.0,
+            corrupt_prob: 0.0,
+            latency_spike_prob: 0.0,
+            latency_spike: SimDuration::from_millis(250),
+        }
+    }
+}
+
+/// IMDS (scheduled-events endpoint) outage injection. TOML: the
+/// `[chaos.imds]` section:
+///
+/// ```toml
+/// [chaos.imds]
+/// outages = 2               # outage windows drawn inside [chaos]'s
+///                           # window_mins
+/// outage_mins = 2.0         # length of each outage window
+/// degraded_poll_factor = 6  # poll cadence multiplier while the
+///                           # endpoint is down (the monitor degrades
+///                           # instead of silently losing the notice)
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosImdsCfg {
+    pub outages: u32,
+    pub outage_duration: SimDuration,
+    pub degraded_poll_factor: u32,
+}
+
+impl Default for ChaosImdsCfg {
+    fn default() -> Self {
+        Self {
+            outages: 0,
+            outage_duration: SimDuration::from_mins(2),
+            degraded_poll_factor: 6,
+        }
+    }
+}
+
+/// Seeded fault injection ([`crate::sim::chaos`]). TOML: the `[chaos]`
+/// section plus its `[chaos.storage]` / `[chaos.imds]` subsections:
+///
+/// ```toml
+/// [chaos]
+/// salt = 99            # decorrelates this scenario's fault stream
+/// storms = 2           # coordinated multi-pool eviction storms
+/// window_mins = 120    # storms + IMDS outages are drawn inside this
+///                      # window from the run start
+/// ```
+///
+/// Every fault instant and probability draw is a function of
+/// `(scenario seed, salt)` only — never thread, worker or shard count —
+/// so chaos-enabled sweeps merge byte-identically
+/// (`tests/sweep_determinism.rs`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosCfg {
+    /// Salt decorrelating this scenario's fault stream from the seed's
+    /// other consumers (eviction plans, price walks, arrivals).
+    pub salt: u64,
+    /// Coordinated eviction storms: each storm instantly schedules an
+    /// eviction notice for every live instance in every pool.
+    pub storms: u32,
+    /// Window (from run start) inside which storms and IMDS outages are
+    /// drawn. Must be positive when storms or outages are configured.
+    pub window: SimDuration,
+    pub storage: ChaosStorageCfg,
+    pub imds: ChaosImdsCfg,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        Self {
+            salt: 0,
+            storms: 0,
+            window: SimDuration::from_hours(4),
+            storage: ChaosStorageCfg::default(),
+            imds: ChaosImdsCfg::default(),
+        }
+    }
+}
+
+impl ChaosCfg {
+    /// Build-side validation, mirroring the `[chaos]` parse rules.
+    pub fn validate(&self) -> Result<()> {
+        let probs = [
+            ("chaos.storage.write_fail_prob", self.storage.write_fail_prob),
+            ("chaos.storage.torn_write_prob", self.storage.torn_write_prob),
+            ("chaos.storage.corrupt_prob", self.storage.corrupt_prob),
+            (
+                "chaos.storage.latency_spike_prob",
+                self.storage.latency_spike_prob,
+            ),
+        ];
+        for (key, p) in probs {
+            if !(p.is_finite() && (0.0..=1.0).contains(&p)) {
+                bail!("{key} must be a finite probability in [0, 1], got {p}");
+            }
+        }
+        if self.storage.latency_spike_prob > 0.0
+            && self.storage.latency_spike.is_zero()
+        {
+            bail!(
+                "chaos.storage.latency_spike_ms must be positive when \
+                 latency_spike_prob > 0"
+            );
+        }
+        if (self.storms > 0 || self.imds.outages > 0) && self.window.is_zero()
+        {
+            bail!(
+                "chaos.window_mins must be positive when storms or IMDS \
+                 outages are configured"
+            );
+        }
+        if self.imds.outages > 0 && self.imds.outage_duration.is_zero() {
+            bail!(
+                "chaos.imds.outage_mins must be positive when outages are \
+                 configured"
+            );
+        }
+        if self.imds.degraded_poll_factor < 2 {
+            bail!(
+                "chaos.imds.degraded_poll_factor must be >= 2 (a degraded \
+                 cadence slower than the healthy one), got {}",
+                self.imds.degraded_poll_factor
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Post-run expectations ([`crate::report::expect`]): bounds a scenario
+/// must satisfy to count as healthy, evaluated after a run or sweep by
+/// `spoton check`. TOML: the `[expect]` section:
+///
+/// ```toml
+/// [expect]
+/// seeds = 16                    # evaluate over a 16-seed sweep
+/// must_complete = true          # every run finishes its workload
+/// max_lost_steps = 40000        # per-run recomputation bound
+/// max_cost = 2.50               # per-run total cost ceiling ($)
+/// max_makespan_mins = 600       # per-run wall-clock bound
+/// p95_makespan_mins = 480       # population percentile bound
+/// p95_turnaround_mins = 480     # cluster-job turnaround percentile
+/// max_restore_fallbacks = 4     # restores may skip at most this many
+///                               # unverifiable generations
+/// max_unrecovered_restores = 0  # no restart may lose all generations
+/// zero_dead_letter = true       # no job aborts / fails to finish
+/// ```
+///
+/// Every bound is optional, but an empty `[expect]` section is rejected
+/// (it would make `spoton check` vacuously green).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpectCfg {
+    /// Seeds to sweep when evaluating (`seed .. seed + seeds`).
+    pub seeds: u64,
+    pub must_complete: bool,
+    pub max_lost_steps: Option<u64>,
+    pub max_cost: Option<f64>,
+    pub max_makespan: Option<SimDuration>,
+    pub p95_makespan: Option<SimDuration>,
+    pub p95_turnaround: Option<SimDuration>,
+    pub max_restore_fallbacks: Option<u64>,
+    pub max_unrecovered_restores: Option<u64>,
+    pub zero_dead_letter: bool,
+}
+
+impl Default for ExpectCfg {
+    fn default() -> Self {
+        Self {
+            seeds: 1,
+            must_complete: false,
+            max_lost_steps: None,
+            max_cost: None,
+            max_makespan: None,
+            p95_makespan: None,
+            p95_turnaround: None,
+            max_restore_fallbacks: None,
+            max_unrecovered_restores: None,
+            zero_dead_letter: false,
+        }
+    }
+}
+
+impl ExpectCfg {
+    /// True when at least one bound is actually asserted.
+    pub fn names_any_bound(&self) -> bool {
+        self.must_complete
+            || self.zero_dead_letter
+            || self.max_lost_steps.is_some()
+            || self.max_cost.is_some()
+            || self.max_makespan.is_some()
+            || self.p95_makespan.is_some()
+            || self.p95_turnaround.is_some()
+            || self.max_restore_fallbacks.is_some()
+            || self.max_unrecovered_restores.is_some()
+    }
+
+    /// Build-side validation, mirroring the `[expect]` parse rules.
+    pub fn validate(&self) -> Result<()> {
+        if self.seeds == 0 {
+            bail!("expect.seeds must be >= 1, got 0");
+        }
+        if !self.names_any_bound() {
+            bail!(
+                "[expect] names no expectations — add at least one bound \
+                 or remove the section"
+            );
+        }
+        if let Some(v) = self.max_cost {
+            if !(v.is_finite() && v >= 0.0) {
+                bail!(
+                    "expect.max_cost must be finite and non-negative, got {v}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// A complete experiment scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioConfig {
@@ -578,6 +905,20 @@ pub struct ScenarioConfig {
     /// world.
     pub cluster: Option<ClusterCfg>,
     pub storage: StorageCfg,
+    /// Verified checkpoint generations the store retains (`[checkpoint]
+    /// retain`, default 3). Restores fall back generation by generation
+    /// when the newest snapshot fails manifest verification, so `k > 1`
+    /// is what makes corrupted-snapshot chaos survivable.
+    pub retain: u32,
+    /// Retry policy for failed checkpoint commits (`[checkpoint.retry]`).
+    /// `None` (the default) fails fast on the first storage error —
+    /// the pre-chaos behaviour.
+    pub retry: Option<BackoffCfg>,
+    /// Seeded fault injection (`[chaos]`). `None` (the default) injects
+    /// nothing and leaves every digest byte-identical.
+    pub chaos: Option<ChaosCfg>,
+    /// Post-run expectations (`[expect]`) evaluated by `spoton check`.
+    pub expect: Option<ExpectCfg>,
     /// Abort threshold: give up if the run exceeds this much virtual time
     /// (catches never-completing configurations — paper §IV).
     pub deadline: SimDuration,
@@ -602,6 +943,10 @@ impl Default for ScenarioConfig {
             fleet: FleetCfg::default(),
             cluster: None,
             storage: StorageCfg::default(),
+            retain: 3,
+            retry: None,
+            chaos: None,
+            expect: None,
             deadline: SimDuration::from_hours(48),
             metrics: RecordLevel::Full,
         }
@@ -778,6 +1123,72 @@ impl ScenarioConfig {
             if let Some(v) = doc.get_bool("checkpoint", "compress") {
                 cfg.compress_termination = v;
             }
+            if let Some(raw) = doc.get("checkpoint", "retain") {
+                let v = raw.as_u64().context(
+                    "checkpoint.retain must be a non-negative integer",
+                )?;
+                if v == 0 {
+                    bail!(
+                        "checkpoint.retain must be >= 1 (retaining zero \
+                         generations leaves nothing to restore), got 0"
+                    );
+                }
+                if matches!(cfg.checkpoint, CheckpointMethodCfg::None) {
+                    bail!(
+                        "checkpoint.retain has no effect with checkpoint.\
+                         method = \"none\" — remove it or enable checkpoints"
+                    );
+                }
+                cfg.retain = u32::try_from(v)
+                    .context("checkpoint.retain is out of range")?;
+            }
+        }
+
+        // [checkpoint.retry] — bounded jittered-exponential backoff for
+        // failed checkpoint commits. Same validation posture as
+        // [checkpoint.adaptive]: every knob checked here AND at policy
+        // construction (`coordinator::backoff::Backoff::new`).
+        if doc.has_section("checkpoint.retry") {
+            let sec = "checkpoint.retry";
+            if matches!(cfg.checkpoint, CheckpointMethodCfg::None) {
+                bail!(
+                    "[{sec}] requires a checkpointing method (retries apply \
+                     to checkpoint commits) — set checkpoint.method"
+                );
+            }
+            let mut retry = BackoffCfg::default();
+            if let Some(raw) = doc.get(sec, "attempts") {
+                let v = raw
+                    .as_u64()
+                    .with_context(|| format!("{sec}.attempts must be an integer"))?;
+                retry.attempts = u32::try_from(v)
+                    .with_context(|| format!("{sec}.attempts is out of range"))?;
+            }
+            let pos_ms = |key: &str| -> Result<Option<SimDuration>> {
+                match doc.get_f64(sec, key) {
+                    None => Ok(None),
+                    Some(v) if v.is_finite() && v > 0.0 => {
+                        Ok(Some(SimDuration::from_secs_f64(v / 1000.0)))
+                    }
+                    Some(v) => bail!(
+                        "{sec}.{key} must be positive and finite, got {v}"
+                    ),
+                }
+            };
+            if let Some(v) = pos_ms("base_ms")? {
+                retry.base = v;
+            }
+            if let Some(v) = pos_ms("max_ms")? {
+                retry.max = v;
+            }
+            if let Some(v) = doc.get_f64(sec, "factor") {
+                retry.factor = v;
+            }
+            if let Some(v) = doc.get_f64(sec, "jitter") {
+                retry.jitter = v;
+            }
+            retry.validate()?;
+            cfg.retry = Some(retry);
         }
 
         // [checkpoint.adaptive] — interval-controller selection + knobs.
@@ -1204,6 +1615,167 @@ impl ScenarioConfig {
             }
             cluster.validate()?;
             cfg.cluster = Some(cluster);
+        }
+
+        // [chaos] + [chaos.storage] + [chaos.imds] — seeded fault
+        // injection. Any of the three sections enables chaos; unknown
+        // chaos subsections are rejected like unknown pool subsections.
+        for sec in doc.sections.keys() {
+            if let Some(rest) = sec.strip_prefix("chaos.") {
+                if rest != "storage" && rest != "imds" {
+                    bail!(
+                        "unknown chaos subsection [chaos.{rest}] (only \
+                         storage and imds are recognized)"
+                    );
+                }
+            }
+        }
+        if doc.has_section("chaos")
+            || doc.has_section("chaos.storage")
+            || doc.has_section("chaos.imds")
+        {
+            let mut chaos = ChaosCfg::default();
+            if let Some(raw) = doc.get("chaos", "salt") {
+                chaos.salt = raw
+                    .as_u64()
+                    .context("chaos.salt must be a non-negative integer")?;
+            }
+            if let Some(raw) = doc.get("chaos", "storms") {
+                let v = raw
+                    .as_u64()
+                    .context("chaos.storms must be a non-negative integer")?;
+                chaos.storms = u32::try_from(v)
+                    .context("chaos.storms is out of range")?;
+            }
+            if let Some(v) = doc.get_f64("chaos", "window_mins") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!(
+                        "chaos.window_mins must be positive and finite, \
+                         got {v}"
+                    );
+                }
+                chaos.window = SimDuration::from_secs_f64(v * 60.0);
+            }
+            let ssec = "chaos.storage";
+            let prob = |key: &str, into: &mut f64| -> Result<()> {
+                if let Some(v) = doc.get_f64(ssec, key) {
+                    if !(v.is_finite() && (0.0..=1.0).contains(&v)) {
+                        bail!(
+                            "{ssec}.{key} must be a finite probability in \
+                             [0, 1], got {v}"
+                        );
+                    }
+                    *into = v;
+                }
+                Ok(())
+            };
+            prob("write_fail_prob", &mut chaos.storage.write_fail_prob)?;
+            prob("torn_write_prob", &mut chaos.storage.torn_write_prob)?;
+            prob("corrupt_prob", &mut chaos.storage.corrupt_prob)?;
+            prob("latency_spike_prob", &mut chaos.storage.latency_spike_prob)?;
+            if let Some(v) = doc.get_f64(ssec, "latency_spike_ms") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!(
+                        "{ssec}.latency_spike_ms must be positive and \
+                         finite, got {v}"
+                    );
+                }
+                chaos.storage.latency_spike =
+                    SimDuration::from_secs_f64(v / 1000.0);
+            }
+            let isec = "chaos.imds";
+            if let Some(raw) = doc.get(isec, "outages") {
+                let v = raw
+                    .as_u64()
+                    .with_context(|| format!("{isec}.outages must be an integer"))?;
+                chaos.imds.outages = u32::try_from(v)
+                    .with_context(|| format!("{isec}.outages is out of range"))?;
+            }
+            if let Some(v) = doc.get_f64(isec, "outage_mins") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!(
+                        "{isec}.outage_mins must be positive and finite, \
+                         got {v}"
+                    );
+                }
+                chaos.imds.outage_duration =
+                    SimDuration::from_secs_f64(v * 60.0);
+            }
+            if let Some(raw) = doc.get(isec, "degraded_poll_factor") {
+                let v = raw.as_u64().with_context(|| {
+                    format!("{isec}.degraded_poll_factor must be an integer")
+                })?;
+                chaos.imds.degraded_poll_factor = u32::try_from(v)
+                    .with_context(|| {
+                        format!("{isec}.degraded_poll_factor is out of range")
+                    })?;
+            }
+            chaos.validate()?;
+            cfg.chaos = Some(chaos);
+        }
+
+        // [expect] — post-run expectations for `spoton check`.
+        if doc.has_section("expect") {
+            let sec = "expect";
+            let mut expect = ExpectCfg::default();
+            if let Some(raw) = doc.get(sec, "seeds") {
+                let v = raw
+                    .as_u64()
+                    .with_context(|| format!("{sec}.seeds must be an integer"))?;
+                if v == 0 {
+                    bail!("{sec}.seeds must be >= 1, got 0");
+                }
+                expect.seeds = v;
+            }
+            for (key, into) in [
+                ("must_complete", &mut expect.must_complete),
+                ("zero_dead_letter", &mut expect.zero_dead_letter),
+            ] {
+                match doc.get_bool(sec, key) {
+                    Some(v) => *into = v,
+                    None if doc.get(sec, key).is_some() => {
+                        bail!("{sec}.{key} must be a boolean")
+                    }
+                    None => {}
+                }
+            }
+            let count = |key: &str| -> Result<Option<u64>> {
+                match doc.get(sec, key) {
+                    None => Ok(None),
+                    Some(raw) => Ok(Some(raw.as_u64().with_context(|| {
+                        format!("{sec}.{key} must be a non-negative integer")
+                    })?)),
+                }
+            };
+            expect.max_lost_steps = count("max_lost_steps")?;
+            expect.max_restore_fallbacks = count("max_restore_fallbacks")?;
+            expect.max_unrecovered_restores =
+                count("max_unrecovered_restores")?;
+            if let Some(v) = doc.get_f64(sec, "max_cost") {
+                if !(v.is_finite() && v >= 0.0) {
+                    bail!(
+                        "{sec}.max_cost must be finite and non-negative, \
+                         got {v}"
+                    );
+                }
+                expect.max_cost = Some(v);
+            }
+            let bound_mins = |key: &str| -> Result<Option<SimDuration>> {
+                match doc.get_f64(sec, key) {
+                    None => Ok(None),
+                    Some(v) if v.is_finite() && v > 0.0 => {
+                        Ok(Some(SimDuration::from_secs_f64(v * 60.0)))
+                    }
+                    Some(v) => bail!(
+                        "{sec}.{key} must be positive and finite, got {v}"
+                    ),
+                }
+            };
+            expect.max_makespan = bound_mins("max_makespan_mins")?;
+            expect.p95_makespan = bound_mins("p95_makespan_mins")?;
+            expect.p95_turnaround = bound_mins("p95_turnaround_mins")?;
+            expect.validate()?;
+            cfg.expect = Some(expect);
         }
 
         Ok(cfg)
@@ -1901,5 +2473,189 @@ ceil = 1.6
                 .label(),
             "every 60 min"
         );
+    }
+
+    const TRANSPARENT: &str =
+        "[checkpoint]\nmethod = \"transparent\"\ninterval_mins = 15\n";
+
+    #[test]
+    fn checkpoint_retain_and_retry_parse() {
+        let cfg = ScenarioConfig::from_str_toml(&format!(
+            "{TRANSPARENT}retain = 5\n\
+             [checkpoint.retry]\nattempts = 3\nbase_ms = 200\nmax_ms = 4000\n\
+             factor = 2.5\njitter = 0.5\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.retain, 5);
+        let retry = cfg.retry.unwrap();
+        assert_eq!(retry.attempts, 3);
+        assert_eq!(retry.base, SimDuration::from_millis(200));
+        assert_eq!(retry.max, SimDuration::from_secs(4));
+        assert_eq!(retry.factor, 2.5);
+        assert_eq!(retry.jitter, 0.5);
+        // defaults: retain 3, no retry, no chaos, no expectations
+        let cfg = ScenarioConfig::from_str_toml(TRANSPARENT).unwrap();
+        assert_eq!(cfg.retain, 3);
+        assert_eq!(cfg.retry, None);
+        assert_eq!(cfg.chaos, None);
+        assert_eq!(cfg.expect, None);
+        // bare [checkpoint.retry] picks up the validated defaults
+        let cfg = ScenarioConfig::from_str_toml(&format!(
+            "{TRANSPARENT}[checkpoint.retry]\n"
+        ))
+        .unwrap();
+        assert_eq!(cfg.retry, Some(BackoffCfg::default()));
+    }
+
+    #[test]
+    fn checkpoint_retain_and_retry_reject_bad_knobs() {
+        // retention k = 0 leaves nothing to restore
+        let err = ScenarioConfig::from_str_toml(&format!(
+            "{TRANSPARENT}retain = 0\n"
+        ))
+        .unwrap_err();
+        assert!(err.to_string().contains("retain"), "{err}");
+        // retain without any checkpointing method is inert
+        let err =
+            ScenarioConfig::from_str_toml("[checkpoint]\nretain = 2\n")
+                .unwrap_err();
+        assert!(err.to_string().contains("no effect"), "{err}");
+        // retry without a checkpointing method is inert
+        let err =
+            ScenarioConfig::from_str_toml("[checkpoint.retry]\nattempts = 2\n")
+                .unwrap_err();
+        assert!(err.to_string().contains("checkpoint.retry"), "{err}");
+        for bad in [
+            "attempts = 0",
+            "base_ms = 0",
+            "base_ms = -5",
+            "base_ms = 1e400", // overflows to +inf
+            "max_ms = 0",
+            "base_ms = 500\nmax_ms = 100", // inverted bounds
+            "factor = 0.5",                // shrinking delays
+            "factor = 1e400",
+            "jitter = 1.5",
+            "jitter = -0.1",
+            "factor = 1.1\njitter = 0.5", // factor < 1 + jitter
+        ] {
+            let src = format!("{TRANSPARENT}[checkpoint.retry]\n{bad}\n");
+            let err = ScenarioConfig::from_str_toml(&src)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("checkpoint.retry"),
+                "error for {bad:?} should name the section: {err}"
+            );
+        }
+        // NaN can't be written in TOML; the build-side validator is the
+        // line of defence for programmatic configs.
+        let nan = BackoffCfg { jitter: f64::NAN, ..BackoffCfg::default() };
+        assert!(nan.validate().is_err());
+        let nan = BackoffCfg { factor: f64::NAN, ..BackoffCfg::default() };
+        assert!(nan.validate().is_err());
+        assert!(BackoffCfg::default().validate().is_ok());
+    }
+
+    #[test]
+    fn chaos_section_parses() {
+        let cfg = ScenarioConfig::from_str_toml(&format!(
+            "{TRANSPARENT}\
+             [chaos]\nsalt = 99\nstorms = 2\nwindow_mins = 120\n\
+             [chaos.storage]\nwrite_fail_prob = 0.1\ntorn_write_prob = 0.05\n\
+             corrupt_prob = 0.02\nlatency_spike_prob = 0.2\n\
+             latency_spike_ms = 1500\n\
+             [chaos.imds]\noutages = 2\noutage_mins = 2.5\n\
+             degraded_poll_factor = 4\n"
+        ))
+        .unwrap();
+        let chaos = cfg.chaos.unwrap();
+        assert_eq!(chaos.salt, 99);
+        assert_eq!(chaos.storms, 2);
+        assert_eq!(chaos.window, SimDuration::from_mins(120));
+        assert_eq!(chaos.storage.write_fail_prob, 0.1);
+        assert_eq!(chaos.storage.latency_spike, SimDuration::from_millis(1500));
+        assert_eq!(chaos.imds.outages, 2);
+        assert_eq!(chaos.imds.outage_duration, SimDuration::from_secs(150));
+        assert_eq!(chaos.imds.degraded_poll_factor, 4);
+        // a subsection alone enables chaos with parent defaults
+        let cfg = ScenarioConfig::from_str_toml(
+            "[chaos.storage]\nwrite_fail_prob = 0.3\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.unwrap().storage.write_fail_prob, 0.3);
+    }
+
+    #[test]
+    fn chaos_section_rejects_bad_knobs() {
+        for bad in [
+            "[chaos.storage]\nwrite_fail_prob = -0.1\n",
+            "[chaos.storage]\nwrite_fail_prob = 1.5\n",
+            "[chaos.storage]\ncorrupt_prob = 1e400\n",
+            "[chaos.storage]\nlatency_spike_prob = 0.5\nlatency_spike_ms = 0\n",
+            "[chaos]\nstorms = 1\nwindow_mins = 0\n",
+            "[chaos]\nwindow_mins = -3\n",
+            "[chaos.imds]\noutages = 1\noutage_mins = 0\n",
+            "[chaos.imds]\ndegraded_poll_factor = 1\n",
+            "[chaos.bogus]\nx = 1\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("chaos"),
+                "error for {bad:?} should name the section: {err}"
+            );
+        }
+        // build-side validation mirrors the parse
+        let mut chaos = ChaosCfg::default();
+        chaos.storage.corrupt_prob = f64::NAN;
+        assert!(chaos.validate().is_err());
+        let mut chaos = ChaosCfg::default();
+        chaos.imds.degraded_poll_factor = 0;
+        assert!(chaos.validate().is_err());
+        assert!(ChaosCfg::default().validate().is_ok());
+    }
+
+    #[test]
+    fn expect_section_parses() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[expect]\nseeds = 16\nmust_complete = true\n\
+             max_lost_steps = 40000\nmax_cost = 2.5\n\
+             max_makespan_mins = 600\np95_makespan_mins = 480\n\
+             p95_turnaround_mins = 500\nmax_restore_fallbacks = 4\n\
+             max_unrecovered_restores = 0\nzero_dead_letter = true\n",
+        )
+        .unwrap();
+        let expect = cfg.expect.unwrap();
+        assert_eq!(expect.seeds, 16);
+        assert!(expect.must_complete);
+        assert!(expect.zero_dead_letter);
+        assert_eq!(expect.max_lost_steps, Some(40_000));
+        assert_eq!(expect.max_cost, Some(2.5));
+        assert_eq!(expect.max_makespan, Some(SimDuration::from_mins(600)));
+        assert_eq!(expect.p95_makespan, Some(SimDuration::from_mins(480)));
+        assert_eq!(expect.p95_turnaround, Some(SimDuration::from_mins(500)));
+        assert_eq!(expect.max_restore_fallbacks, Some(4));
+        assert_eq!(expect.max_unrecovered_restores, Some(0));
+    }
+
+    #[test]
+    fn expect_section_rejects_bad_knobs() {
+        for bad in [
+            "[expect]\n",                     // vacuously green
+            "[expect]\nseeds = 4\n",          // still no bounds
+            "[expect]\nseeds = 0\nmust_complete = true\n",
+            "[expect]\nmust_complete = 3\n",  // not a boolean
+            "[expect]\nmax_cost = -1.0\n",
+            "[expect]\nmax_cost = 1e400\n",
+            "[expect]\nmax_makespan_mins = 0\n",
+            "[expect]\np95_makespan_mins = -2\n",
+            "[expect]\nmax_lost_steps = -4\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("expect"),
+                "error for {bad:?} should name the section: {err}"
+            );
+        }
     }
 }

@@ -1,0 +1,172 @@
+//! Bounded jittered-exponential backoff for checkpoint-commit retries.
+//!
+//! When chaos injects a storage fault into a periodic or app-native
+//! checkpoint write ([`crate::storage::chaos`]), the coordinator does not
+//! give the generation up on the first failure: it re-attempts the commit
+//! under this policy — `attempts` tries total, attempt `k` waiting
+//!
+//! ```text
+//! delay(k) = min(base · factor^k · (1 + jitter·u), max),   u ∈ [0, 1)
+//! ```
+//!
+//! before the retry. The configuration ([`BackoffCfg`], TOML
+//! `[checkpoint.retry]`) is validated so the delay sequence is provably
+//! monotone non-decreasing up to the cap (`factor >= 1 + jitter`) and
+//! always within `[base, max]` — both pinned by property tests below.
+//! Jitter draws come from a dedicated salted PRNG stream, so retry timing
+//! is a function of the scenario seed only and sweep digests stay
+//! byte-identical at any thread count.
+
+use crate::config::BackoffCfg;
+use crate::simclock::SimDuration;
+use crate::util::prng::Prng;
+use anyhow::Result;
+
+/// Salt decorrelating the backoff jitter stream from every other consumer
+/// of the scenario seed.
+pub const BACKOFF_SEED_SALT: u64 = 0xB0FF_0FF5_1A77_E12D;
+
+/// A validated retry policy: [`BackoffCfg`] plus the jitter stream.
+#[derive(Debug, Clone)]
+pub struct Backoff {
+    cfg: BackoffCfg,
+    rng: Prng,
+}
+
+impl Backoff {
+    /// Build a policy from a validated configuration; `seed` should be
+    /// `mix64(scenario_seed ^ salt ^ BACKOFF_SEED_SALT)` so the jitter
+    /// stream is decorrelated but reproducible.
+    pub fn new(cfg: BackoffCfg, seed: u64) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { cfg, rng: Prng::new(seed) })
+    }
+
+    /// Total write attempts, including the first.
+    pub fn attempts(&self) -> u32 {
+        self.cfg.attempts
+    }
+
+    /// True if attempt index `attempt` (0-based, counting the failures so
+    /// far) still has a retry left.
+    pub fn retries_left(&self, attempt: u32) -> bool {
+        attempt + 1 < self.cfg.attempts
+    }
+
+    /// Delay before the retry following failed attempt `attempt`
+    /// (0-based). Always in `[base, max]`; consumes one jitter draw.
+    pub fn delay(&mut self, attempt: u32) -> SimDuration {
+        let u = self.rng.f64();
+        let grown = self.cfg.base.as_secs_f64()
+            * self.cfg.factor.powi(attempt.min(64) as i32)
+            * (1.0 + self.cfg.jitter * u);
+        let capped = grown.min(self.cfg.max.as_secs_f64());
+        let d = SimDuration::from_secs_f64(capped);
+        // guard the integer floor: from_secs_f64 truncates to millis, and
+        // the policy's contract is delay >= base
+        d.max(self.cfg.base)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{forall, shrink_none, Config};
+
+    fn cfg_from(rng: &mut Prng) -> BackoffCfg {
+        let base_ms = rng.range_u64(1, 5_000);
+        let max_ms = base_ms + rng.below(60_000);
+        let jitter = rng.f64() * 0.999;
+        let factor = 1.0 + jitter + rng.f64() * 3.0;
+        let attempts = 1 + rng.below(9) as u32;
+        BackoffCfg {
+            attempts,
+            base: SimDuration::from_millis(base_ms),
+            max: SimDuration::from_millis(max_ms),
+            factor,
+            jitter,
+        }
+    }
+
+    #[test]
+    fn delays_are_monotone_and_bounded() {
+        forall(
+            Config::default().cases(300),
+            |rng| (cfg_from(rng), rng.next_u64()),
+            shrink_none,
+            |(cfg, seed)| {
+                let mut policy = Backoff::new(cfg.clone(), *seed)
+                    .map_err(|e| e.to_string())?;
+                let mut prev = SimDuration::ZERO;
+                for attempt in 0..cfg.attempts {
+                    let d = policy.delay(attempt);
+                    if d < cfg.base || d > cfg.max.max(cfg.base) {
+                        return Err(format!(
+                            "delay {d} outside [{}, {}] at attempt {attempt}",
+                            cfg.base, cfg.max
+                        ));
+                    }
+                    if d < prev {
+                        return Err(format!(
+                            "delay shrank {prev} -> {d} at attempt {attempt} \
+                             (factor {}, jitter {})",
+                            cfg.factor, cfg.jitter
+                        ));
+                    }
+                    prev = d;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        forall(
+            Config::default().cases(100),
+            |rng| (cfg_from(rng), rng.next_u64()),
+            shrink_none,
+            |(cfg, seed)| {
+                let mut a = Backoff::new(cfg.clone(), *seed).unwrap();
+                let mut b = Backoff::new(cfg.clone(), *seed).unwrap();
+                for attempt in 0..cfg.attempts {
+                    let (da, db) = (a.delay(attempt), b.delay(attempt));
+                    if da != db {
+                        return Err(format!(
+                            "same seed diverged at attempt {attempt}: \
+                             {da} vs {db}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn retries_left_counts_attempts() {
+        let mut rng = Prng::new(3);
+        let cfg = BackoffCfg { attempts: 3, ..cfg_from(&mut rng) };
+        let policy = Backoff::new(cfg, 1).unwrap();
+        assert!(policy.retries_left(0));
+        assert!(policy.retries_left(1));
+        assert!(!policy.retries_left(2));
+        assert!(!policy.retries_left(7));
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected_at_build() {
+        let ok = BackoffCfg::default();
+        assert!(Backoff::new(ok.clone(), 1).is_ok());
+        let zero_attempts = BackoffCfg { attempts: 0, ..ok.clone() };
+        assert!(Backoff::new(zero_attempts, 1).is_err());
+        let inverted = BackoffCfg {
+            base: SimDuration::from_secs(10),
+            max: SimDuration::from_secs(1),
+            ..ok.clone()
+        };
+        assert!(Backoff::new(inverted, 1).is_err());
+        let shrinking = BackoffCfg { factor: 0.9, ..ok };
+        assert!(Backoff::new(shrinking, 1).is_err());
+    }
+}

@@ -71,14 +71,25 @@ pub fn on_poll_tick(
                 snap = Snapshot { bytes: framed, charged_bytes: effective };
             }
         }
-        let outcome = writer.write_with_budget(
+        // An injected storage fault (chaos) mid-race is the same shape as
+        // running out the budget: the generation is lost, the instance
+        // still dies, and the notice — already consumed from the monitor —
+        // must reach the ack path, so it degrades to a Partial outcome
+        // instead of erroring out of the poll tick.
+        let outcome = match writer.write_with_budget(
             store,
             now,
             CkptKind::Termination,
             workload,
             &snap,
             Some(budget),
-        )?;
+        ) {
+            Ok(outcome) => outcome,
+            Err(e) => match e.downcast_ref::<crate::storage::InjectedFault>() {
+                Some(fault) => WriteOutcome::Partial { cost: fault.burned },
+                None => return Err(e),
+            },
+        };
         Ok(PollReaction::TerminationCkpt { notice, outcome })
     } else {
         monitor.ack_inproc(metadata, &notice.event_id);
@@ -315,6 +326,40 @@ mod tests {
         // and a committed compressed frame never has worse integrity: the
         // 30 s budget commits the raw image for the same sample
         assert!(poll_commits(noise, 30, true));
+    }
+
+    #[test]
+    fn injected_fault_degrades_to_partial_outcome() {
+        // A chaos write fault during the termination race must not escape
+        // as an error: the notice is already consumed from the monitor, so
+        // the reaction carries it with a Partial outcome instead.
+        use crate::config::ChaosStorageCfg;
+        use crate::storage::ChaosStore;
+        let (mut mon, mut md, policy, mut writer, store, w) =
+            setup(CheckpointMethodCfg::Transparent {
+                interval: SimDuration::from_mins(30),
+            });
+        let mut store = ChaosStore::new(
+            store,
+            ChaosStorageCfg {
+                write_fail_prob: 1.0,
+                ..ChaosStorageCfg::default()
+            },
+            7,
+        );
+        let now = SimTime::from_secs(100);
+        let dl = now + SimDuration::from_secs(30);
+        md.post_preempt("vm-0", dl);
+        let r = on_poll_tick(
+            &mut mon, &mut md, &policy, &mut writer, &mut store, &w, now, dl,
+        )
+        .unwrap();
+        match r {
+            PollReaction::TerminationCkpt { outcome, .. } => {
+                assert!(outcome.committed().is_none());
+            }
+            other => panic!("expected partial termination ckpt, got {other:?}"),
+        }
     }
 
     #[test]

@@ -32,9 +32,11 @@ pub mod monitor;
 pub mod restart;
 pub mod handlers;
 pub mod realtime;
+pub mod backoff;
 
+pub use backoff::Backoff;
 pub use handlers::PollReaction;
 pub use monitor::{Notice, ScheduledEventsMonitor};
 pub use policy::CheckpointPolicy;
 pub use realtime::{RealtimeCoordinator, RealtimeOutcome, RealtimeParams};
-pub use restart::RestartManager;
+pub use restart::{RestartManager, RestoreSearch};

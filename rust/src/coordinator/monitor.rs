@@ -64,11 +64,18 @@ impl ScheduledEventsMonitor {
         Ok(None)
     }
 
-    /// Poll the in-process service.
+    /// Poll the in-process service. An unreachable endpoint (chaos: IMDS
+    /// outage) looks like an empty poll, not an error: the real
+    /// coordinator retries on transport failure, and the notice is still
+    /// in the document once the endpoint recovers because incarnation
+    /// tracking never advanced.
     pub fn poll_inproc(
         &mut self,
         service: &MetadataService,
     ) -> Result<Option<Notice>> {
+        if !service.is_available() {
+            return Ok(None);
+        }
         self.scan_document(&service.document())
     }
 
@@ -155,6 +162,21 @@ mod tests {
         mon.reset();
         // after ack the event is Started, not Scheduled
         assert!(mon.poll_inproc(&svc).unwrap().is_none());
+    }
+
+    #[test]
+    fn outage_hides_notice_until_recovery() {
+        let mut svc = MetadataService::new();
+        let mut mon = ScheduledEventsMonitor::new("vm-5");
+        let id = svc.post_preempt("vm-5", SimTime::from_secs(90));
+        svc.set_available(false);
+        // down: the notice is invisible, but nothing is consumed
+        assert!(mon.poll_inproc(&svc).unwrap().is_none());
+        assert!(mon.poll_inproc(&svc).unwrap().is_none());
+        svc.set_available(true);
+        // recovered: the same notice surfaces (incarnation never advanced)
+        let n = mon.poll_inproc(&svc).unwrap().unwrap();
+        assert_eq!(n.event_id, id);
     }
 
     #[test]

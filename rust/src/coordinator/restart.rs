@@ -1,4 +1,15 @@
 //! Restart: find the most recent valid checkpoint and resume (paper §II).
+//!
+//! Two search strategies share one restore path:
+//!
+//! * [`RestartManager::find_and_restore`] — the classic "most recent
+//!   valid generation" lookup;
+//! * [`RestartManager::find_and_restore_with_fallback`] — the
+//!   chaos-hardened variant: walk generations newest-first, skip every
+//!   committed-but-unverifiable one (corrupted payload, unreadable
+//!   manifest), and restore the newest generation that actually passes
+//!   verification. Each skip is reported so the engine can account the
+//!   fallback ([`crate::metrics::EventKind::RestoreFallback`]).
 
 use super::policy::CheckpointPolicy;
 use crate::checkpoint::{CheckpointManifest, CheckpointStore};
@@ -16,6 +27,27 @@ pub struct RestoreReport {
     /// Steps the workload lost relative to `steps_at_interruption`
     /// (filled by the caller, which knows where the workload was).
     pub resumed_total_steps: u64,
+}
+
+/// Result of a fallback restore search.
+#[derive(Debug, Default)]
+pub struct RestoreSearch {
+    /// The restore that succeeded, if any generation was usable.
+    pub report: Option<RestoreReport>,
+    /// `(checkpoint id, problem)` for each committed generation newer
+    /// than the restored one that failed verification and was skipped.
+    /// Partial writes without a COMMIT marker are *not* listed: they were
+    /// never promised to readers, so skipping them is normal operation.
+    pub skipped: Vec<(u64, String)>,
+}
+
+/// Checkpoint id from a `ckpt/{id:010}-{kind}` directory key.
+fn dir_id(dir: &str) -> u64 {
+    dir.rsplit('/')
+        .next()
+        .and_then(|name| name.split('-').next())
+        .and_then(|id| id.parse().ok())
+        .unwrap_or(0)
 }
 
 /// Stateless restart manager.
@@ -37,6 +69,61 @@ impl RestartManager {
         else {
             return Ok(None);
         };
+        Self::restore_from(store, surface, workload, manifest).map(Some)
+    }
+
+    /// Like [`find_and_restore`](Self::find_and_restore), but when the
+    /// newest committed generation fails verification, fall back to the
+    /// next-newest and keep walking — the coordinator never restores a
+    /// generation it could not verify, and never gives up while an older
+    /// verified one remains.
+    pub fn find_and_restore_with_fallback(
+        store: &mut dyn SharedStore,
+        policy: &CheckpointPolicy,
+        workload: &mut dyn Workload,
+    ) -> Result<RestoreSearch> {
+        let Some(surface) = policy.restore_surface() else {
+            return Ok(RestoreSearch::default()); // unprotected: always fresh
+        };
+        let entries = CheckpointStore::scan(store)?;
+        let mut skipped = Vec::new();
+        // scan() returns ascending by id; walk newest-first
+        for e in entries.iter().rev() {
+            if let Some(m) = &e.manifest {
+                if m.kind.is_transparent() != surface {
+                    continue; // other surface: invisible, as in latest_valid
+                }
+            }
+            if !e.is_valid() {
+                // Only COMMIT-bearing generations were promised to
+                // readers; their failure is a real fallback. (A torn
+                // manifest leaves no COMMIT — that is a partial write,
+                // handled silently here as everywhere else.)
+                if store.exists(&format!("{}/COMMIT", e.dir)) {
+                    let problem = e
+                        .problem
+                        .clone()
+                        .unwrap_or_else(|| "failed verification".into());
+                    skipped.push((dir_id(&e.dir), problem));
+                }
+                continue;
+            }
+            let manifest =
+                e.manifest.clone().expect("valid entries carry a manifest");
+            let report =
+                Self::restore_from(store, surface, workload, manifest)?;
+            return Ok(RestoreSearch { report: Some(report), skipped });
+        }
+        Ok(RestoreSearch { report: None, skipped })
+    }
+
+    /// Restore `workload` from one verified manifest.
+    fn restore_from(
+        store: &mut dyn SharedStore,
+        surface: bool,
+        workload: &mut dyn Workload,
+        manifest: CheckpointManifest,
+    ) -> Result<RestoreReport> {
         if manifest.workload != workload.name() {
             bail!(
                 "checkpoint on share belongs to workload '{}', running '{}'",
@@ -72,11 +159,11 @@ impl RestartManager {
             cost += workload.app_restart_overhead();
         }
         let p = workload.progress();
-        Ok(Some(RestoreReport {
+        Ok(RestoreReport {
             manifest,
             cost,
             resumed_total_steps: p.total_steps,
-        }))
+        })
     }
 }
 
@@ -216,6 +303,169 @@ mod tests {
             RestartManager::find_and_restore(&mut store, &policy, &mut fresh)
                 .unwrap();
         assert!(got.is_none());
+    }
+
+    /// Write `n` periodic checkpoints 10 steps apart; returns the
+    /// committed manifests in id order.
+    fn write_generations(
+        store: &mut BlobStore,
+        w: &mut Sleeper,
+        n: u64,
+    ) -> Vec<CheckpointManifest> {
+        let mut writer = CheckpointWriter::new();
+        let mut out = Vec::new();
+        for i in 0..n {
+            for _ in 0..10 {
+                w.step().unwrap();
+            }
+            let snap = w.snapshot().unwrap();
+            let m = writer
+                .write(store, SimTime::from_secs(i), CkptKind::Periodic, w,
+                       &snap)
+                .unwrap()
+                .committed()
+                .expect("unbudgeted write commits")
+                .clone();
+            out.push(m);
+        }
+        out
+    }
+
+    #[test]
+    fn fallback_restores_newest_verified_generation() {
+        let mut store = BlobStore::for_tests();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let gens = write_generations(&mut store, &mut w, 3);
+        // the two newest payloads rot on the share
+        store.corrupt(&gens[1].payload_key, 0).unwrap();
+        store.corrupt(&gens[2].payload_key, 0).unwrap();
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 3);
+        let search = RestartManager::find_and_restore_with_fallback(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .unwrap();
+        let report = search.report.expect("oldest generation still verifies");
+        assert_eq!(report.manifest.id, gens[0].id);
+        assert_eq!(report.resumed_total_steps, 10);
+        // both bad generations reported, newest first
+        let ids: Vec<u64> = search.skipped.iter().map(|(id, _)| *id).collect();
+        assert_eq!(ids, vec![gens[2].id, gens[1].id]);
+    }
+
+    #[test]
+    fn fallback_matches_classic_search_when_all_valid() {
+        let mut store = BlobStore::for_tests();
+        let mut w = Sleeper::new(SleeperCfg::small(), 4);
+        let gens = write_generations(&mut store, &mut w, 3);
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 4);
+        let search = RestartManager::find_and_restore_with_fallback(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .unwrap();
+        assert!(search.skipped.is_empty());
+        assert_eq!(search.report.unwrap().manifest.id, gens[2].id);
+        let mut again = Sleeper::new(SleeperCfg::small(), 4);
+        let classic = RestartManager::find_and_restore(
+            &mut store,
+            &transparent_policy(),
+            &mut again,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(classic.manifest.id, gens[2].id);
+        assert_eq!(fresh.fingerprint(), again.fingerprint());
+    }
+
+    #[test]
+    fn fallback_ignores_partial_writes() {
+        // A generation with no COMMIT marker was never promised to
+        // readers: skipping it is not a fallback and is not reported.
+        let mut store = BlobStore::for_tests();
+        let mut w = Sleeper::new(SleeperCfg::small(), 6);
+        let gens = write_generations(&mut store, &mut w, 2);
+        let dir = crate::checkpoint::ckpt_dir(gens[1].id, gens[1].kind);
+        store.delete(&format!("{dir}/COMMIT")).unwrap();
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 6);
+        let search = RestartManager::find_and_restore_with_fallback(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .unwrap();
+        assert!(search.skipped.is_empty());
+        assert_eq!(search.report.unwrap().manifest.id, gens[0].id);
+    }
+
+    #[test]
+    fn fallback_property_never_restores_unverified() {
+        // Property, over seeded corruption patterns: the coordinator
+        // never restores a generation that failed verification, restores
+        // the newest one that passes, reports exactly the committed
+        // failures newer than the restore, and — with K generations
+        // retained — falls back at most K-1 times.
+        const KEEP: usize = 3;
+        for seed in 0..24u64 {
+            let mut rng = crate::util::Prng::new(seed * 31 + 7);
+            let mut store = BlobStore::for_tests();
+            let mut w = Sleeper::new(SleeperCfg::small(), 2);
+            let gens = write_generations(&mut store, &mut w, 5);
+            CheckpointStore::gc(&mut store, KEEP).unwrap();
+            let kept = &gens[gens.len() - KEEP..];
+            let mut corrupted = std::collections::BTreeSet::new();
+            for m in kept {
+                if rng.below(2) == 1 {
+                    store.corrupt(&m.payload_key, 0).unwrap();
+                    corrupted.insert(m.id);
+                }
+            }
+            let mut fresh = Sleeper::new(SleeperCfg::small(), 2);
+            let search = RestartManager::find_and_restore_with_fallback(
+                &mut store,
+                &transparent_policy(),
+                &mut fresh,
+            )
+            .unwrap();
+            assert!(search.skipped.len() <= KEEP, "seed {seed}");
+            match search.report {
+                Some(report) => {
+                    let best = kept
+                        .iter()
+                        .map(|m| m.id)
+                        .filter(|id| !corrupted.contains(id))
+                        .max()
+                        .expect("a restore implies a clean generation");
+                    assert_eq!(report.manifest.id, best, "seed {seed}");
+                    assert!(
+                        !corrupted.contains(&report.manifest.id),
+                        "seed {seed}: restored an unverified generation"
+                    );
+                    // exactly the corrupted generations newer than the
+                    // restore were skipped — at most K-1 of them
+                    let expect: Vec<u64> = corrupted
+                        .iter()
+                        .rev()
+                        .copied()
+                        .filter(|&id| id > best)
+                        .collect();
+                    let got: Vec<u64> =
+                        search.skipped.iter().map(|(id, _)| *id).collect();
+                    assert_eq!(got, expect, "seed {seed}");
+                    assert!(search.skipped.len() <= KEEP - 1, "seed {seed}");
+                }
+                None => {
+                    assert_eq!(
+                        corrupted.len(),
+                        KEEP,
+                        "seed {seed}: gave up with a clean generation left"
+                    );
+                    assert_eq!(search.skipped.len(), KEEP, "seed {seed}");
+                }
+            }
+        }
     }
 
     #[test]

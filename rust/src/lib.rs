@@ -66,7 +66,16 @@
 //!   `MANIFEST.json`, interrupted sweeps resume (only missing or
 //!   corrupt shards re-run; persistent failures dead-letter with their
 //!   cell list), and the merge is byte-identical to the in-process
-//!   sweep at any process count.
+//!   sweep at any process count. All of it is chaos-hardened:
+//!   [`sim::chaos`] draws seeded fault plans (coordinated eviction
+//!   storms, IMDS outages with degraded poll cadence) and
+//!   [`storage::chaos`] fault-wraps the checkpoint store (failed, torn,
+//!   silently-corrupted and slow writes), while the coordinator retries
+//!   commits under bounded jittered backoff ([`coordinator::backoff`])
+//!   and restores fall back past unverifiable generations; `[expect]`
+//!   scenario sections ([`report::expect`], evaluated by
+//!   `spoton check`) plus the [`report::faults`] ledger make chaos
+//!   scenarios self-checking in CI.
 //! * **Layer 2/1 (build-time Python)** — the MiniMeta metagenome-assembly
 //!   analog workload's compute: JAX stage functions calling Pallas kernels,
 //!   AOT-lowered to HLO-text artifacts (`python/compile/`), executed from

@@ -16,6 +16,7 @@
 //!              [--shards 8] [--procs N] [--threads 1] [--retries 2]
 //!              [--out shards] [--run-id ID]
 //! spoton sweep-worker --dir shards/ID --shard K [--threads 1]
+//! spoton check --scenario cfg.toml
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -94,6 +95,7 @@ fn main() -> Result<()> {
         "generate-reads" => cmd_generate_reads(&args),
         "sweep" => cmd_sweep(&args),
         "sweep-worker" => cmd_sweep_worker(&args),
+        "check" => cmd_check(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -119,6 +121,12 @@ USAGE:
                [--shards 8] [--procs N] [--threads 1] [--retries 2]
                [--out shards] [--run-id ID]
   spoton sweep-worker --dir shards/ID --shard K [--threads 1]
+  spoton check --scenario cfg.toml
+
+`check` evaluates the scenario's [expect] section over an
+`expect.seeds`-seed sweep (cluster sweep for [cluster] scenarios),
+prints the fault-accounting ledger when chaos injected anything, and
+exits non-zero on any violated bound — self-checking scenarios for CI.
 
 `sweep` plans a sharded Monte Carlo sweep (seed range x configuration
 matrix), fans shards out over worker processes, checkpoints completed
@@ -455,6 +463,51 @@ fn cmd_sweep_worker(args: &Args) -> Result<()> {
         artifact.cells.len(),
         artifact.wall_ms
     );
+    Ok(())
+}
+
+fn cmd_check(args: &Args) -> Result<()> {
+    let path = Path::new(args.get("scenario").context("--scenario required")?);
+    let cfg = ScenarioConfig::load(path)?;
+    let Some(expect) = cfg.expect.clone() else {
+        bail!(
+            "scenario '{}' has no [expect] section — nothing to check",
+            cfg.name
+        );
+    };
+    let exp = Experiment { cfg: cfg.clone() };
+    let (checked, faults) = if cfg.cluster.is_some() {
+        let runs = exp
+            .cluster_sweep()
+            .seed_range(cfg.seed, expect.seeds as usize)
+            .run()?;
+        let faults = report::faults::account_many(runs.iter().flat_map(|r| {
+            r.result.jobs.iter().map(|j| &j.result.timeline)
+        }));
+        (report::expect::evaluate_cluster(&expect, &cfg.name, &runs), faults)
+    } else {
+        let runs = exp
+            .sweep()
+            .seed_range(cfg.seed, expect.seeds as usize)
+            .run()?;
+        let faults = report::faults::account_many(
+            runs.iter().map(|r| &r.result.timeline),
+        );
+        (report::expect::evaluate_runs(&expect, &cfg.name, &runs), faults)
+    };
+    if faults.total() > 0 {
+        println!("Fault accounting:");
+        print!("{}", report::faults::render(&faults));
+        println!();
+    }
+    print!("{}", report::expect::render(&checked));
+    if !checked.passed() {
+        bail!(
+            "{} expectation(s) violated in '{}'",
+            checked.violations.len(),
+            cfg.name
+        );
+    }
     Ok(())
 }
 

@@ -50,12 +50,41 @@ pub enum EventKind {
     CapacityExhausted,
     /// A job entered the FIFO-per-priority admission queue.
     JobQueued,
-    // When adding a variant, extend [`EventKind::ALL`] too — the
-    // exhaustive match in `tests::kind_indices_are_dense` refuses to
-    // compile until every variant is listed, which keeps the per-kind
-    // counter array correctly sized.
     /// A previously queued job was admitted to a freed slot.
     JobAdmitted,
+    // --- chaos + degradation accounting (see `crate::sim::chaos`).
+    //     When adding a variant, append it here AND at the end of
+    //     [`EventKind::ALL`] — the exhaustive match in
+    //     `tests::kind_indices_are_dense` refuses to compile until every
+    //     variant is listed, which keeps the per-kind counter array
+    //     correctly sized. Appending (never inserting) keeps existing
+    //     discriminants — and thereby digests — stable. ---
+    /// An injected checkpoint-write failure (storage chaos).
+    ChaosWriteFault,
+    /// An injected torn write: half the object landed, then the
+    /// connection died.
+    ChaosTornWrite,
+    /// An injected storage latency spike on a successful write.
+    ChaosLatencySpike,
+    /// A snapshot was silently corrupted in storage (caught later by
+    /// restore-time manifest verification).
+    ChaosCorruption,
+    /// A coordinated eviction storm fired across every pool.
+    ChaosStorm,
+    /// The IMDS scheduled-events endpoint went dark (first poll to
+    /// notice an outage window).
+    ImdsOutage,
+    /// A poll ran against a dark endpoint; the monitor degraded to the
+    /// slower cadence instead of silently losing the notice.
+    PollDegraded,
+    /// A failed checkpoint commit was retried under the backoff policy.
+    CkptRetried,
+    /// Restore skipped an unverifiable generation and fell back to an
+    /// older one.
+    RestoreFallback,
+    /// Restore exhausted every retained generation without finding a
+    /// verifiable one (the run restarts from scratch).
+    UnrecoveredRestore,
 }
 
 /// Number of [`EventKind`] variants (sizes the per-kind counter array).
@@ -63,7 +92,7 @@ const N_KINDS: usize = EventKind::ALL.len();
 
 impl EventKind {
     /// Every variant, in discriminant order.
-    pub const ALL: [EventKind; 19] = [
+    pub const ALL: [EventKind; 29] = [
         EventKind::InstanceLaunch,
         EventKind::RestoreFromCheckpoint,
         EventKind::CheckpointCommitted,
@@ -83,7 +112,37 @@ impl EventKind {
         EventKind::CapacityExhausted,
         EventKind::JobQueued,
         EventKind::JobAdmitted,
+        EventKind::ChaosWriteFault,
+        EventKind::ChaosTornWrite,
+        EventKind::ChaosLatencySpike,
+        EventKind::ChaosCorruption,
+        EventKind::ChaosStorm,
+        EventKind::ImdsOutage,
+        EventKind::PollDegraded,
+        EventKind::CkptRetried,
+        EventKind::RestoreFallback,
+        EventKind::UnrecoveredRestore,
     ];
+
+    /// The chaos/degradation kinds appended by the fault-injection
+    /// subsystem. Digest writers skip these when their count is zero so
+    /// chaos-free runs produce byte-identical digests to pre-chaos
+    /// builds.
+    pub fn is_chaos(self) -> bool {
+        matches!(
+            self,
+            EventKind::ChaosWriteFault
+                | EventKind::ChaosTornWrite
+                | EventKind::ChaosLatencySpike
+                | EventKind::ChaosCorruption
+                | EventKind::ChaosStorm
+                | EventKind::ImdsOutage
+                | EventKind::PollDegraded
+                | EventKind::CkptRetried
+                | EventKind::RestoreFallback
+                | EventKind::UnrecoveredRestore
+        )
+    }
     pub fn as_str(self) -> &'static str {
         match self {
             EventKind::InstanceLaunch => "launch",
@@ -105,6 +164,16 @@ impl EventKind {
             EventKind::CapacityExhausted => "capacity-exhausted",
             EventKind::JobQueued => "job-queued",
             EventKind::JobAdmitted => "job-admitted",
+            EventKind::ChaosWriteFault => "chaos-write-fault",
+            EventKind::ChaosTornWrite => "chaos-torn-write",
+            EventKind::ChaosLatencySpike => "chaos-latency",
+            EventKind::ChaosCorruption => "chaos-corrupt",
+            EventKind::ChaosStorm => "chaos-storm",
+            EventKind::ImdsOutage => "imds-outage",
+            EventKind::PollDegraded => "poll-degraded",
+            EventKind::CkptRetried => "ckpt-retried",
+            EventKind::RestoreFallback => "restore-fallback",
+            EventKind::UnrecoveredRestore => "restore-unrecovered",
         }
     }
 }
@@ -309,10 +378,35 @@ mod tests {
                 | EventKind::JobFinished
                 | EventKind::CapacityExhausted
                 | EventKind::JobQueued
-                | EventKind::JobAdmitted => {}
+                | EventKind::JobAdmitted
+                | EventKind::ChaosWriteFault
+                | EventKind::ChaosTornWrite
+                | EventKind::ChaosLatencySpike
+                | EventKind::ChaosCorruption
+                | EventKind::ChaosStorm
+                | EventKind::ImdsOutage
+                | EventKind::PollDegraded
+                | EventKind::CkptRetried
+                | EventKind::RestoreFallback
+                | EventKind::UnrecoveredRestore => {}
             }
         }
         assert_eq!(t.events().len(), EventKind::ALL.len());
+    }
+
+    #[test]
+    fn chaos_kinds_are_a_contiguous_tail() {
+        // the digest writers rely on every chaos kind sorting after every
+        // pre-chaos kind, so skipping zero-count chaos kinds reproduces
+        // the pre-chaos digest byte for byte
+        let first_chaos = EventKind::ALL
+            .iter()
+            .position(|k| k.is_chaos())
+            .expect("chaos kinds exist");
+        for (i, k) in EventKind::ALL.iter().enumerate() {
+            assert_eq!(k.is_chaos(), i >= first_chaos, "{}", k.as_str());
+        }
+        assert_eq!(first_chaos, 19, "pre-chaos kind count is pinned");
     }
 
     #[test]

@@ -1,0 +1,372 @@
+//! `[expect]` evaluation: self-checking scenarios for `spoton check`.
+//!
+//! A scenario's optional `[expect]` section
+//! ([`crate::config::ExpectCfg`]) names bounds the scenario must satisfy
+//! to count as healthy — completion, recomputation, cost, wall-clock,
+//! restore-fallback and dead-letter bounds, per run and at the
+//! population p95. This module evaluates those bounds over a merged
+//! sweep (single-job scenarios) or a merged cluster sweep (`[cluster]`
+//! scenarios) and reduces the outcome to an [`ExpectReport`]: the list
+//! of violations, empty when everything holds. `spoton check` renders
+//! the report and exits non-zero on any violation, which is what makes
+//! chaos scenarios CI-enforceable instead of eyeball-verified.
+//!
+//! Evaluation is deterministic: runs are walked in seed order, jobs in
+//! job order, bounds in declaration order, so two evaluations of the
+//! same population produce byte-identical reports.
+
+use crate::config::ExpectCfg;
+use crate::metrics::EventKind;
+use crate::report::distribution::Summary;
+use crate::report::table::TextTable;
+use crate::sim::cluster::SeededClusterRun;
+use crate::sim::sweep::SeededRun;
+use crate::util::fmt::{dollars, hms_f64};
+
+/// One bound that did not hold: which `[expect]` key, and the concrete
+/// run/job evidence.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// The `[expect]` key, e.g. `"max_lost_steps"`.
+    pub bound: String,
+    /// Where and by how much, e.g. `"seed 3: 51200 lost steps > 40000"`.
+    pub detail: String,
+}
+
+/// The outcome of evaluating one scenario's `[expect]` section.
+#[derive(Debug, Clone)]
+pub struct ExpectReport {
+    pub scenario: String,
+    /// Seeds evaluated, in evaluation order.
+    pub seeds: Vec<u64>,
+    /// How many bounds the section asserted.
+    pub checks: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl ExpectReport {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// How many bounds an `[expect]` section asserts (the report's `checks`).
+fn active_bounds(cfg: &ExpectCfg) -> usize {
+    usize::from(cfg.must_complete)
+        + usize::from(cfg.zero_dead_letter)
+        + usize::from(cfg.max_lost_steps.is_some())
+        + usize::from(cfg.max_cost.is_some())
+        + usize::from(cfg.max_makespan.is_some())
+        + usize::from(cfg.p95_makespan.is_some())
+        + usize::from(cfg.p95_turnaround.is_some())
+        + usize::from(cfg.max_restore_fallbacks.is_some())
+        + usize::from(cfg.max_unrecovered_restores.is_some())
+}
+
+/// Evaluate `[expect]` over a merged single-job sweep (seed order). With
+/// one job per run, turnaround equals makespan (submission at t=0), so
+/// `p95_turnaround` evaluates against the same population as
+/// `p95_makespan`.
+pub fn evaluate_runs(
+    cfg: &ExpectCfg,
+    scenario: &str,
+    runs: &[SeededRun],
+) -> ExpectReport {
+    let mut v: Vec<Violation> = Vec::new();
+    for r in runs {
+        per_run_bounds(cfg, &mut v, r.seed, None, &r.result);
+        if cfg.zero_dead_letter && !r.result.completed {
+            push(&mut v, "zero_dead_letter", format!(
+                "seed {}: run did not finish its workload",
+                r.seed
+            ));
+        }
+    }
+    let makespans: Vec<f64> =
+        runs.iter().map(|r| r.result.total.as_secs_f64()).collect();
+    percentile_bound(cfg.p95_makespan, "p95_makespan", &makespans, &mut v);
+    percentile_bound(cfg.p95_turnaround, "p95_turnaround", &makespans, &mut v);
+    ExpectReport {
+        scenario: scenario.to_string(),
+        seeds: runs.iter().map(|r| r.seed).collect(),
+        checks: active_bounds(cfg),
+        violations: v,
+    }
+}
+
+/// Evaluate `[expect]` over a merged cluster sweep: per-run bounds apply
+/// to every job of every seeded run; `max_makespan`/`p95_makespan` bound
+/// the cluster makespan, `p95_turnaround` the per-job
+/// submission-to-finish population, and `zero_dead_letter` demands every
+/// job of every run completes.
+pub fn evaluate_cluster(
+    cfg: &ExpectCfg,
+    scenario: &str,
+    runs: &[SeededClusterRun],
+) -> ExpectReport {
+    let mut v: Vec<Violation> = Vec::new();
+    for r in runs {
+        for j in &r.result.jobs {
+            per_job_bounds(cfg, &mut v, r.seed, j);
+        }
+        if let Some(bound) = cfg.max_makespan {
+            if r.result.makespan > bound {
+                push(&mut v, "max_makespan", format!(
+                    "seed {}: makespan {} > {}",
+                    r.seed, r.result.makespan, bound
+                ));
+            }
+        }
+    }
+    let makespans: Vec<f64> =
+        runs.iter().map(|r| r.result.makespan.as_secs_f64()).collect();
+    percentile_bound(cfg.p95_makespan, "p95_makespan", &makespans, &mut v);
+    let turnarounds: Vec<f64> = runs
+        .iter()
+        .flat_map(|r| {
+            r.result.jobs.iter().map(|j| j.turnaround().as_secs_f64())
+        })
+        .collect();
+    percentile_bound(
+        cfg.p95_turnaround,
+        "p95_turnaround",
+        &turnarounds,
+        &mut v,
+    );
+    ExpectReport {
+        scenario: scenario.to_string(),
+        seeds: runs.iter().map(|r| r.seed).collect(),
+        checks: active_bounds(cfg),
+        violations: v,
+    }
+}
+
+/// The bounds shared by both modes, applied to one run result. `job` is
+/// `Some(name)` for a cluster job, folded into the evidence string.
+fn per_run_bounds(
+    cfg: &ExpectCfg,
+    v: &mut Vec<Violation>,
+    seed: u64,
+    job: Option<&str>,
+    r: &crate::sim::RunResult,
+) {
+    let whom = match job {
+        Some(name) => format!("seed {seed} {name}"),
+        None => format!("seed {seed}"),
+    };
+    if cfg.must_complete && !r.completed {
+        push(v, "must_complete", format!(
+            "{whom}: run did not finish its workload"
+        ));
+    }
+    if let Some(bound) = cfg.max_lost_steps {
+        if r.lost_steps > bound {
+            push(v, "max_lost_steps", format!(
+                "{whom}: {} lost steps > {bound}",
+                r.lost_steps
+            ));
+        }
+    }
+    if let Some(bound) = cfg.max_cost {
+        if r.total_cost() > bound {
+            push(v, "max_cost", format!(
+                "{whom}: {} > {}",
+                dollars(r.total_cost()),
+                dollars(bound)
+            ));
+        }
+    }
+    if job.is_none() {
+        if let Some(bound) = cfg.max_makespan {
+            if r.total > bound {
+                push(v, "max_makespan", format!(
+                    "{whom}: makespan {} > {}",
+                    r.total, bound
+                ));
+            }
+        }
+    }
+    if let Some(bound) = cfg.max_restore_fallbacks {
+        let n = r.timeline.count(EventKind::RestoreFallback) as u64;
+        if n > bound {
+            push(v, "max_restore_fallbacks", format!(
+                "{whom}: {n} restore fallbacks > {bound}"
+            ));
+        }
+    }
+    if let Some(bound) = cfg.max_unrecovered_restores {
+        let n = r.timeline.count(EventKind::UnrecoveredRestore) as u64;
+        if n > bound {
+            push(v, "max_unrecovered_restores", format!(
+                "{whom}: {n} unrecovered restores > {bound}"
+            ));
+        }
+    }
+}
+
+fn per_job_bounds(
+    cfg: &ExpectCfg,
+    v: &mut Vec<Violation>,
+    seed: u64,
+    j: &crate::sim::cluster::JobOutcome,
+) {
+    per_run_bounds(cfg, v, seed, Some(&j.name), &j.result);
+    if cfg.zero_dead_letter && !j.result.completed {
+        push(v, "zero_dead_letter", format!(
+            "seed {seed} {}: job did not finish its workload",
+            j.name
+        ));
+    }
+}
+
+/// Nearest-rank p95 over `samples` (seconds) against `bound`.
+fn percentile_bound(
+    bound: Option<crate::simclock::SimDuration>,
+    name: &str,
+    samples: &[f64],
+    v: &mut Vec<Violation>,
+) {
+    let Some(bound) = bound else { return };
+    if samples.is_empty() {
+        return;
+    }
+    let p95 = Summary::from_samples(samples).p95;
+    if p95 > bound.as_secs_f64() {
+        push(v, name, format!(
+            "population p95 {} > {} over {} sample(s)",
+            hms_f64(p95),
+            bound,
+            samples.len()
+        ));
+    }
+}
+
+fn push(v: &mut Vec<Violation>, bound: &str, detail: String) {
+    v.push(Violation { bound: bound.to_string(), detail });
+}
+
+/// Render the report: a verdict line, then every violation as an
+/// aligned table row (empty table elided on pass).
+pub fn render(report: &ExpectReport) -> String {
+    let mut out = format!(
+        "{}: {} seed(s), {} check(s) — {}\n",
+        report.scenario,
+        report.seeds.len(),
+        report.checks,
+        if report.passed() {
+            "PASS".to_string()
+        } else {
+            format!("FAIL ({} violation(s))", report.violations.len())
+        }
+    );
+    if !report.passed() {
+        let mut t = TextTable::new(&["Bound", "Evidence"]);
+        for viol in &report.violations {
+            t.row(&[viol.bound.clone(), viol.detail.clone()]);
+        }
+        out.push_str(&t.render());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::experiment::Experiment;
+    use crate::simclock::SimDuration;
+
+    fn sweep(n: usize) -> Vec<SeededRun> {
+        Experiment::table1()
+            .named("expect-unit")
+            .eviction_poisson(SimDuration::from_mins(75))
+            .transparent(SimDuration::from_mins(20))
+            .sweep()
+            .seed_range(0, n)
+            .threads(1)
+            .run()
+            .unwrap()
+    }
+
+    #[test]
+    fn healthy_sweep_passes_generous_bounds() {
+        let runs = sweep(4);
+        let cfg = ExpectCfg {
+            seeds: 4,
+            must_complete: true,
+            max_unrecovered_restores: Some(0),
+            p95_makespan: Some(SimDuration::from_hours(400)),
+            ..ExpectCfg::default()
+        };
+        let rep = evaluate_runs(&cfg, "expect-unit", &runs);
+        assert!(rep.passed(), "{:?}", rep.violations);
+        assert_eq!(rep.checks, 3);
+        assert_eq!(rep.seeds, [0, 1, 2, 3]);
+        assert!(render(&rep).contains("PASS"));
+    }
+
+    #[test]
+    fn impossible_bounds_fail_with_evidence() {
+        let runs = sweep(3);
+        let cfg = ExpectCfg {
+            seeds: 3,
+            max_cost: Some(0.0),
+            max_makespan: Some(SimDuration::from_mins(1)),
+            p95_makespan: Some(SimDuration::from_mins(1)),
+            ..ExpectCfg::default()
+        };
+        let rep = evaluate_runs(&cfg, "expect-unit", &runs);
+        assert!(!rep.passed());
+        // every run violates the two per-run bounds; the percentile
+        // bound violates once
+        assert_eq!(rep.violations.len(), 3 * 2 + 1, "{:?}", rep.violations);
+        let text = render(&rep);
+        assert!(text.contains("FAIL"), "{text}");
+        assert!(text.contains("max_cost"), "{text}");
+        assert!(text.contains("seed 1"), "{text}");
+        assert!(text.contains("population p95"), "{text}");
+    }
+
+    #[test]
+    fn evaluation_is_deterministic() {
+        let runs = sweep(3);
+        let cfg = ExpectCfg {
+            seeds: 3,
+            max_cost: Some(0.0),
+            ..ExpectCfg::default()
+        };
+        let a = render(&evaluate_runs(&cfg, "expect-unit", &runs));
+        let b = render(&evaluate_runs(&cfg, "expect-unit", &runs));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn cluster_mode_bounds_jobs_and_turnaround() {
+        use crate::config::ClusterCfg;
+        let mut exp = Experiment::table1()
+            .named("expect-cluster")
+            .scale_stages(0.02)
+            .transparent(SimDuration::from_mins(10))
+            .deadline(SimDuration::from_hours(400));
+        exp.cfg.cluster = Some(ClusterCfg::with_count(3).capacity(1));
+        let runs = exp.cluster_sweep().seed_range(0, 2).threads(1).run().unwrap();
+        let pass = ExpectCfg {
+            seeds: 2,
+            must_complete: true,
+            zero_dead_letter: true,
+            p95_turnaround: Some(SimDuration::from_hours(400)),
+            ..ExpectCfg::default()
+        };
+        let rep = evaluate_cluster(&pass, "expect-cluster", &runs);
+        assert!(rep.passed(), "{:?}", rep.violations);
+        // 3 jobs share 1 slot: a tight turnaround p95 must trip on the
+        // queued jobs even though each job's own runtime is short
+        let tight = ExpectCfg {
+            seeds: 2,
+            p95_turnaround: Some(SimDuration::from_millis(1)),
+            ..ExpectCfg::default()
+        };
+        let rep = evaluate_cluster(&tight, "expect-cluster", &runs);
+        assert!(!rep.passed());
+        assert_eq!(rep.violations[0].bound, "p95_turnaround");
+    }
+}

@@ -1,0 +1,114 @@
+//! Fault accounting: what chaos injected and how the coordinator coped.
+//!
+//! Chaos runs ([`crate::sim::chaos`]) surface every injected fault and
+//! every degradation as a chaos-tagged [`EventKind`] on the timeline —
+//! write faults, torn writes, corruptions, latency spikes, storms, IMDS
+//! outages, degraded polls, checkpoint retries, restore fallbacks and
+//! unrecovered restores. This module reduces one or many timelines into
+//! a per-kind ledger and renders it as an aligned table, so a chaos
+//! scenario's outcome reads as an explicit account instead of a diff
+//! over raw event streams.
+
+use crate::metrics::{EventKind, Timeline};
+use crate::report::table::TextTable;
+
+/// Per-kind totals of every chaos-tagged timeline event, in
+/// [`EventKind::ALL`] order (injected faults first, then the
+/// coordinator's observed degradations and recoveries).
+#[derive(Debug, Clone)]
+pub struct FaultAccounting {
+    pub counts: Vec<(EventKind, usize)>,
+}
+
+impl FaultAccounting {
+    /// Total chaos events across every kind.
+    pub fn total(&self) -> usize {
+        self.counts.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Count for one kind (0 for non-chaos kinds).
+    pub fn count(&self, kind: EventKind) -> usize {
+        self.counts
+            .iter()
+            .find(|(k, _)| *k == kind)
+            .map_or(0, |(_, n)| *n)
+    }
+}
+
+/// Reduce one timeline into its chaos ledger.
+pub fn account(timeline: &Timeline) -> FaultAccounting {
+    account_many([timeline])
+}
+
+/// Reduce many timelines (a sweep's runs, a cluster's jobs) into one
+/// summed ledger. Counts work at every [`RecordLevel`] — a Counts-level
+/// sweep still accounts its faults.
+///
+/// [`RecordLevel`]: crate::metrics::RecordLevel
+pub fn account_many<'a>(
+    timelines: impl IntoIterator<Item = &'a Timeline>,
+) -> FaultAccounting {
+    let mut counts: Vec<(EventKind, usize)> = EventKind::ALL
+        .iter()
+        .copied()
+        .filter(|k| k.is_chaos())
+        .map(|k| (k, 0))
+        .collect();
+    for t in timelines {
+        for (k, n) in counts.iter_mut() {
+            *n += t.count(*k);
+        }
+    }
+    FaultAccounting { counts }
+}
+
+/// Aligned text table: one row per chaos kind (zeros included — an
+/// accounting table that hides its zero rows can't show "no corruption
+/// got through"), plus a totals row.
+pub fn render(acc: &FaultAccounting) -> String {
+    let mut t = TextTable::new(&["Fault event", "Count"]);
+    for (k, n) in &acc.counts {
+        t.row(&[k.as_str().to_string(), n.to_string()]);
+    }
+    t.row(&["total".to_string(), acc.total().to_string()]);
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::RecordLevel;
+    use crate::simclock::SimTime;
+
+    #[test]
+    fn accounts_only_chaos_kinds() {
+        let mut tl = Timeline::with_level(RecordLevel::Counts);
+        tl.record(SimTime::ZERO, EventKind::ChaosWriteFault, "k");
+        tl.record(SimTime::ZERO, EventKind::ChaosWriteFault, "k");
+        tl.record(SimTime::ZERO, EventKind::CkptRetried, "r");
+        tl.record(SimTime::ZERO, EventKind::InstanceLaunch, "i-0");
+        let acc = account(&tl);
+        assert_eq!(acc.count(EventKind::ChaosWriteFault), 2);
+        assert_eq!(acc.count(EventKind::CkptRetried), 1);
+        assert_eq!(acc.count(EventKind::InstanceLaunch), 0, "not chaos");
+        assert_eq!(acc.total(), 3);
+        assert!(acc.counts.iter().all(|(k, _)| k.is_chaos()));
+    }
+
+    #[test]
+    fn sums_across_timelines_and_renders_zeros() {
+        let mut a = Timeline::with_level(RecordLevel::Counts);
+        let mut b = Timeline::with_level(RecordLevel::Counts);
+        a.record(SimTime::ZERO, EventKind::ImdsOutage, "down");
+        b.record(SimTime::ZERO, EventKind::ImdsOutage, "down");
+        b.record(SimTime::ZERO, EventKind::RestoreFallback, "ckpt 3");
+        let acc = account_many([&a, &b]);
+        assert_eq!(acc.count(EventKind::ImdsOutage), 2);
+        assert_eq!(acc.count(EventKind::RestoreFallback), 1);
+        let text = render(&acc);
+        assert!(text.contains("imds-outage"), "{text}");
+        // zero rows stay visible
+        assert!(text.contains("chaos-corrupt"), "{text}");
+        assert!(text.contains("total"), "{text}");
+    }
+}

@@ -13,6 +13,10 @@
 //! * [`policy`] — fixed-vs-adaptive checkpoint-interval comparison
 //!   tables over per-controller sweep populations
 //!   ([`crate::policy`] controllers).
+//! * [`faults`] — per-kind chaos ledger over one or many timelines
+//!   (what was injected, what the coordinator absorbed).
+//! * [`expect`] — `[expect]` evaluation over sweeps and cluster sweeps,
+//!   the engine behind `spoton check`.
 
 pub mod table;
 pub mod table1;
@@ -20,8 +24,12 @@ pub mod figures;
 pub mod fleet;
 pub mod distribution;
 pub mod policy;
+pub mod faults;
+pub mod expect;
 
 pub use distribution::{summarize, SweepDistributions};
+pub use expect::{ExpectReport, Violation};
+pub use faults::FaultAccounting;
 pub use policy::{
     render_controller_comparison, summarize_controllers,
     ControllerDistributions,

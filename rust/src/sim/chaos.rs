@@ -1,0 +1,236 @@
+//! Seeded fault injection: the per-run `FaultPlan`.
+//!
+//! Chaos turns the simulator's *planned* evictions into the full failure
+//! menagerie a real spot fleet sees — flaky checkpoint storage
+//! ([`crate::storage::chaos`]), silently corrupted snapshots, IMDS
+//! scheduled-events outages, and coordinated multi-pool eviction storms —
+//! while keeping the determinism contract that everything else in the
+//! simulator obeys: **every fault instant and probability draw is a
+//! function of `(scenario seed, chaos salt)` only**, never thread, worker
+//! or shard count, so chaos-enabled sweeps merge byte-identically at any
+//! parallelism (`tests/sweep_determinism.rs`).
+//!
+//! [`FaultPlan`] is the run-level schedule, drawn once up front from a
+//! salted PRNG stream: the storm instants (each storm rewrites every live
+//! instance's eviction schedule to "now", across all pools at once) and
+//! the IMDS outage windows (inside which the monitor cannot see the
+//! scheduled-events document and degrades to a slower poll cadence
+//! instead of silently losing the notice). Storage-level faults draw from
+//! their own per-put stream inside [`crate::storage::chaos::ChaosStore`].
+//!
+//! # TOML reference
+//!
+//! ```toml
+//! [chaos]
+//! salt = 99            # decorrelates this scenario's fault stream
+//! storms = 2           # coordinated multi-pool eviction storms
+//! window_mins = 120    # storms + outages drawn in [0, window) from start
+//!
+//! [chaos.storage]
+//! write_fail_prob = 0.10    # put dies before any bytes move
+//! torn_write_prob = 0.05    # put dies mid-transfer; half the object lands
+//! corrupt_prob = 0.05       # payload lands bit-flipped; restore-time
+//!                           # CRC/SHA verification catches it
+//! latency_spike_prob = 0.2  # put succeeds but costs extra virtual time
+//! latency_spike_ms = 1500
+//!
+//! [chaos.imds]
+//! outages = 2               # metadata-endpoint outage windows
+//! outage_mins = 2.0
+//! degraded_poll_factor = 6  # poll-interval multiplier while down
+//! ```
+//!
+//! With `[chaos]` absent nothing is armed and every digest is
+//! byte-identical to a chaos-free build; an armed plan with all
+//! probabilities zero and no storms/outages is observably identical too
+//! (draws are consumed internally, never surfaced).
+
+use crate::config::ChaosCfg;
+use crate::simclock::{SimDuration, SimTime};
+use crate::util::prng::{mix64, Prng};
+
+pub use crate::coordinator::backoff::BACKOFF_SEED_SALT;
+pub use crate::storage::chaos::STORAGE_CHAOS_SALT;
+
+/// Salt for the plan-level stream (storm instants, outage windows).
+pub const PLAN_SEED_SALT: u64 = 0xC4A0_5F17_0D5E_A7B1;
+
+/// Per-job stride for cluster seeds: job 0 must match the single-run
+/// engine exactly (the single-job equivalence pin), later jobs must be
+/// decorrelated.
+const JOB_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Seed for a run's storage-fault stream.
+pub fn storage_seed(scenario_seed: u64, chaos_salt: u64) -> u64 {
+    mix64(scenario_seed ^ chaos_salt ^ STORAGE_CHAOS_SALT)
+}
+
+/// Seed for cluster job `idx`'s storage-fault stream (`idx = 0` equals
+/// [`storage_seed`]).
+pub fn job_storage_seed(scenario_seed: u64, chaos_salt: u64, idx: u64) -> u64 {
+    mix64(
+        scenario_seed
+            ^ chaos_salt
+            ^ STORAGE_CHAOS_SALT
+            ^ idx.wrapping_mul(JOB_STRIDE),
+    )
+}
+
+/// Seed for a run's retry-jitter stream (independent of chaos: the
+/// backoff policy exists whether or not faults are injected).
+pub fn backoff_seed(scenario_seed: u64) -> u64 {
+    mix64(scenario_seed ^ BACKOFF_SEED_SALT)
+}
+
+/// Seed for cluster job `idx`'s retry-jitter stream.
+pub fn job_backoff_seed(scenario_seed: u64, idx: u64) -> u64 {
+    mix64(scenario_seed ^ BACKOFF_SEED_SALT ^ idx.wrapping_mul(JOB_STRIDE))
+}
+
+/// The run-level fault schedule, drawn once per run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Storm instants, ascending. At each one every live instance's
+    /// eviction schedule is rewritten to post a notice immediately.
+    pub storms: Vec<SimTime>,
+    /// IMDS outage windows `[start, end)`, ascending by start.
+    pub outages: Vec<(SimTime, SimTime)>,
+    /// Poll-interval multiplier while inside an outage window.
+    pub degraded_poll_factor: u32,
+}
+
+impl FaultPlan {
+    /// The empty plan (chaos off): no storms, no outages.
+    pub fn none() -> Self {
+        FaultPlan { degraded_poll_factor: 1, ..FaultPlan::default() }
+    }
+
+    /// Draw a plan from the scenario seed. Instants are uniform in
+    /// `[0, window)`; the draw order is fixed (storms first, then
+    /// outages) so the stream is stable as knobs are toggled
+    /// independently of each other.
+    pub fn draw(cfg: &ChaosCfg, scenario_seed: u64) -> Self {
+        let mut rng =
+            Prng::new(mix64(scenario_seed ^ cfg.salt ^ PLAN_SEED_SALT));
+        let window_ms = cfg.window.as_millis().max(1);
+        let mut storms: Vec<SimTime> = (0..cfg.storms)
+            .map(|_| SimTime(rng.below(window_ms)))
+            .collect();
+        storms.sort_unstable();
+        let mut outages: Vec<(SimTime, SimTime)> = (0..cfg.imds.outages)
+            .map(|_| {
+                let start = SimTime(rng.below(window_ms));
+                (start, start + cfg.imds.outage_duration)
+            })
+            .collect();
+        outages.sort_unstable();
+        FaultPlan {
+            storms,
+            outages,
+            degraded_poll_factor: cfg.imds.degraded_poll_factor.max(1),
+        }
+    }
+
+    /// Is the metadata endpoint down at `now`?
+    pub fn imds_down(&self, now: SimTime) -> bool {
+        self.outages.iter().any(|&(start, end)| start <= now && now < end)
+    }
+
+    /// When the current outage ends, if one is active at `now`.
+    pub fn outage_ends(&self, now: SimTime) -> Option<SimTime> {
+        self.outages
+            .iter()
+            .filter(|&&(start, end)| start <= now && now < end)
+            .map(|&(_, end)| end)
+            .max()
+    }
+
+    /// The degraded poll interval during an outage.
+    pub fn degraded_poll(&self, poll: SimDuration) -> SimDuration {
+        SimDuration::from_millis(
+            poll.as_millis()
+                .saturating_mul(u64::from(self.degraded_poll_factor.max(1))),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChaosImdsCfg;
+
+    fn storm_cfg() -> ChaosCfg {
+        ChaosCfg {
+            salt: 3,
+            storms: 4,
+            window: SimDuration::from_mins(100),
+            imds: ChaosImdsCfg {
+                outages: 2,
+                outage_duration: SimDuration::from_mins(2),
+                degraded_poll_factor: 6,
+            },
+            ..ChaosCfg::default()
+        }
+    }
+
+    #[test]
+    fn plan_is_deterministic_and_seed_sensitive() {
+        let cfg = storm_cfg();
+        assert_eq!(FaultPlan::draw(&cfg, 7), FaultPlan::draw(&cfg, 7));
+        assert_ne!(FaultPlan::draw(&cfg, 7), FaultPlan::draw(&cfg, 8));
+        let salted = ChaosCfg { salt: 4, ..cfg.clone() };
+        assert_ne!(FaultPlan::draw(&cfg, 7), FaultPlan::draw(&salted, 7));
+    }
+
+    #[test]
+    fn plan_respects_window_and_sorting() {
+        let cfg = storm_cfg();
+        let plan = FaultPlan::draw(&cfg, 11);
+        assert_eq!(plan.storms.len(), 4);
+        assert_eq!(plan.outages.len(), 2);
+        for w in plan.storms.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        for &t in &plan.storms {
+            assert!(t < SimTime::ZERO + cfg.window);
+        }
+        for &(start, end) in &plan.outages {
+            assert!(start < SimTime::ZERO + cfg.window);
+            assert_eq!(end, start + cfg.imds.outage_duration);
+        }
+    }
+
+    #[test]
+    fn outage_queries() {
+        let plan = FaultPlan {
+            storms: Vec::new(),
+            outages: vec![(
+                SimTime::from_secs(100),
+                SimTime::from_secs(220),
+            )],
+            degraded_poll_factor: 6,
+        };
+        assert!(!plan.imds_down(SimTime::from_secs(99)));
+        assert!(plan.imds_down(SimTime::from_secs(100)));
+        assert!(plan.imds_down(SimTime::from_secs(219)));
+        assert!(!plan.imds_down(SimTime::from_secs(220)));
+        assert_eq!(
+            plan.outage_ends(SimTime::from_secs(150)),
+            Some(SimTime::from_secs(220))
+        );
+        assert_eq!(plan.outage_ends(SimTime::from_secs(300)), None);
+        assert_eq!(
+            plan.degraded_poll(SimDuration::from_secs(10)),
+            SimDuration::from_secs(60)
+        );
+        let empty = FaultPlan::none();
+        assert!(!empty.imds_down(SimTime::ZERO));
+    }
+
+    #[test]
+    fn job_zero_matches_single_run_seeds() {
+        assert_eq!(storage_seed(42, 9), job_storage_seed(42, 9, 0));
+        assert_ne!(job_storage_seed(42, 9, 1), job_storage_seed(42, 9, 2));
+        assert_eq!(backoff_seed(42), job_backoff_seed(42, 0));
+    }
+}

@@ -48,6 +48,7 @@
 //! price-epoch events fan out to every live controller (documented
 //! exception, bounded by trace length × jobs).
 
+use super::chaos::FaultPlan;
 use super::engine::SimEvent;
 use super::experiment::Experiment;
 use super::sweep::run_digest;
@@ -60,6 +61,7 @@ use crate::cloud::fleet::{
 use crate::cloud::instance::InstanceId;
 use crate::cloud::metadata::MetadataService;
 use crate::config::{ArrivalCfg, ClusterCfg, ScenarioConfig};
+use crate::coordinator::backoff::Backoff;
 use crate::coordinator::handlers::{self, PollReaction};
 use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
 use crate::coordinator::policy::CheckpointPolicy;
@@ -67,7 +69,9 @@ use crate::coordinator::restart::{RestartManager, RestoreReport};
 use crate::metrics::{EventKind, RecordLevel, Timeline};
 use crate::policy::{build_controller, IntervalController, PolicyCtx};
 use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
-use crate::storage::{BlobStore, TransferModel};
+use crate::storage::{
+    BlobStore, ChaosStore, FaultKind, InjectedFault, TransferModel,
+};
 use crate::util::prng::Prng;
 use crate::workload::{Snapshot, StepOutcome, Workload};
 use anyhow::{bail, Context, Result};
@@ -91,6 +95,10 @@ pub enum ClusterEvent {
     Job { job: usize, ev: SimEvent },
     /// The spot market moved — cluster-wide, never owned by a job.
     PoolPriceChanged { pool: PoolId, idx: usize },
+    /// A planned eviction storm (chaos) — cluster-wide like the market:
+    /// every live instance's eviction schedule is rewritten to post its
+    /// Preempt now.
+    ChaosStorm { idx: usize },
 }
 
 /// When the platform will post/enforce the eviction of one instance
@@ -109,6 +117,9 @@ struct JobInstance {
     iid: InstanceId,
     pool: PoolId,
     schedule: Option<EvictionSchedule>,
+    /// Launch instant — poll ticks are measured from here, so a storm
+    /// rewriting the schedule can land `detect` on a real tick boundary.
+    started: SimTime,
 }
 
 /// One job's complete private world: the same policy / monitor / writer /
@@ -118,7 +129,12 @@ struct JobState {
     name: String,
     priority: u32,
     factory: JobFactory,
-    store: BlobStore,
+    /// The job's private store behind the chaos wrapper. With `[chaos]`
+    /// absent this is a passthrough: pure delegation, no PRNG draws. With
+    /// chaos armed each job draws its own fault stream
+    /// ([`super::chaos::job_storage_seed`] — job 0's equals the single-run
+    /// engine's, the equivalence pin).
+    store: ChaosStore<BlobStore>,
     workload: Box<dyn Workload>,
     policy: CheckpointPolicy,
     controller: Box<dyn IntervalController>,
@@ -130,6 +146,14 @@ struct JobState {
     monitor: Option<ScheduledEventsMonitor>,
     inst: Option<JobInstance>,
     snap_buf: Snapshot,
+    /// Retry policy for this job's failed checkpoint commits
+    /// (`[checkpoint.retry]`), with its own jitter stream.
+    backoff: Option<Backoff>,
+    /// Is this job's monitor currently inside an observed IMDS outage?
+    imds_was_down: bool,
+    /// Token of this job's pending `NoticePosted`, so a storm can pull an
+    /// already decided (but not yet posted) eviction forward to "now".
+    notice_token: Option<u64>,
     /// The job's replacement target (its own "active pool" — placement
     /// stickiness is per job, not cluster-global).
     active: PoolId,
@@ -257,7 +281,13 @@ pub fn cluster_digest(r: &ClusterResult) -> String {
     for p in &r.peak_in_flight_per_pool {
         let _ = write!(out, "/{p}");
     }
+    // Chaos kinds are gated on being observed, exactly like run_digest:
+    // a chaos-free cluster digest stays byte-identical to digests minted
+    // before the chaos kinds existed.
     for k in EventKind::ALL {
+        if k.is_chaos() && r.timeline.count(k) == 0 {
+            continue;
+        }
         let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));
     }
     for e in r.timeline.events() {
@@ -293,6 +323,12 @@ pub struct ClusterEngine<'a> {
     clock: Clock,
     queue: EventQueue<ClusterEvent>,
     price_tokens: Vec<u64>,
+    /// Tokens of pending chaos storms — cluster-scoped like the market.
+    chaos_tokens: Vec<u64>,
+    /// The run's fault schedule (storm instants + IMDS outage windows),
+    /// cluster-global and drawn from the scenario seed exactly like the
+    /// single-run engine's; empty with `[chaos]` absent.
+    plan: FaultPlan,
     fleet: Fleet,
     placement: Box<dyn PlacementPolicy>,
     jobs: Vec<JobState>,
@@ -349,13 +385,20 @@ impl<'a> ClusterEngine<'a> {
                 *at,
                 factory,
                 n_pools,
+                i as u64,
             )?);
         }
+        let plan = match &cfg.chaos {
+            Some(chaos) => FaultPlan::draw(chaos, cfg.seed),
+            None => FaultPlan::none(),
+        };
         Ok(Self {
             cfg,
             clock: Clock::new(),
             queue: EventQueue::new(),
             price_tokens: Vec::new(),
+            chaos_tokens: Vec::new(),
+            plan,
             fleet,
             placement,
             jobs,
@@ -393,9 +436,11 @@ impl<'a> ClusterEngine<'a> {
             self.queue.schedule(at, ClusterEvent::JobArrived { job });
         }
         self.schedule_price_traces();
+        self.schedule_storms();
         while let Some(sch) = self.queue.pop() {
             self.events_processed += 1;
             self.price_tokens.retain(|&t| t != sch.seq);
+            self.chaos_tokens.retain(|&t| t != sch.seq);
             self.clock.advance_to(sch.at);
             self.dispatch(sch.event)?;
             if self.finished_jobs == self.jobs.len() {
@@ -415,6 +460,17 @@ impl<'a> ClusterEngine<'a> {
                     .schedule(at, ClusterEvent::PoolPriceChanged { pool, idx: 0 });
                 self.price_tokens.push(token);
             }
+        }
+    }
+
+    /// Arm the plan's storm instants. Storms belong to the cluster, not
+    /// to any job: an instance death must not cancel a future storm.
+    fn schedule_storms(&mut self) {
+        for idx in 0..self.plan.storms.len() {
+            let at = self.plan.storms[idx];
+            let token =
+                self.queue.schedule(at, ClusterEvent::ChaosStorm { idx });
+            self.chaos_tokens.push(token);
         }
     }
 
@@ -438,6 +494,7 @@ impl<'a> ClusterEngine<'a> {
             ClusterEvent::PoolPriceChanged { pool, idx } => {
                 self.on_price_changed(pool, idx)
             }
+            ClusterEvent::ChaosStorm { idx } => self.on_chaos_storm(idx),
         }
     }
 
@@ -461,8 +518,14 @@ impl<'a> ClusterEngine<'a> {
                 self.on_termination_ckpt_done(job, outcome, notice)
             }
             SimEvent::InstanceEvicted => self.on_instance_reclaimed(job),
+            SimEvent::CkptRetry { periodic, attempt } => {
+                self.attempt_ckpt(job, periodic, attempt)
+            }
             SimEvent::PoolPriceChanged { .. } => {
                 unreachable!("price events are cluster-level, never job-tagged")
+            }
+            SimEvent::ChaosStorm { .. } => {
+                unreachable!("storm events are cluster-level, never job-tagged")
             }
         }
     }
@@ -653,30 +716,59 @@ impl<'a> ClusterEngine<'a> {
             };
             EvictionSchedule { post, detect, deadline }
         });
-        self.jobs[job].inst =
-            Some(JobInstance { id: inst_id, iid, pool, schedule });
+        self.jobs[job].inst = Some(JobInstance {
+            id: inst_id,
+            iid,
+            pool,
+            schedule,
+            started: now,
+        });
 
         if spoton {
-            let j = &mut self.jobs[job];
-            match RestartManager::find_and_restore(
-                &mut j.store,
-                &j.policy,
-                j.workload.as_mut(),
-            ) {
-                Ok(Some(report)) => {
+            // Fallback search: a committed generation that fails
+            // verification (chaos corruption) is skipped — recorded as a
+            // fallback — and the next-newest verified one restores. With
+            // chaos off every committed generation verifies, so this is
+            // exactly the classic most-recent-valid lookup.
+            let search = {
+                let j = &mut self.jobs[job];
+                let search = RestartManager::find_and_restore_with_fallback(
+                    &mut j.store,
+                    &j.policy,
+                    j.workload.as_mut(),
+                )
+                .context("restart")?;
+                for (id, problem) in &search.skipped {
+                    j.timeline.record_with(
+                        now,
+                        EventKind::RestoreFallback,
+                        || format!("ckpt {id} unusable ({problem})"),
+                    );
+                }
+                search
+            };
+            match search.report {
+                Some(report) => {
                     let cost = report.cost;
                     self.sched_job_in(job, cost, SimEvent::RestoreDone {
                         report,
                     });
                     return Ok(());
                 }
-                Ok(None) => {
+                None => {
+                    let j = &mut self.jobs[job];
+                    if !search.skipped.is_empty() {
+                        j.timeline.record(
+                            now,
+                            EventKind::UnrecoveredRestore,
+                            "every committed generation failed verification",
+                        );
+                    }
                     if j.evictions > 0 {
                         j.workload = (j.factory)()?;
                         j.lost_steps += j.max_steps_seen;
                     }
                 }
-                Err(e) => return Err(e).context("restart"),
             }
         } else if self.jobs[job].evictions > 0 {
             let j = &mut self.jobs[job];
@@ -721,24 +813,139 @@ impl<'a> ClusterEngine<'a> {
         }
 
         if self.spoton && self.periodic_due(job, now) {
-            let j = &mut self.jobs[job];
-            j.workload.snapshot_into(&mut j.snap_buf)?;
-            let outcome = j.writer.write(
-                &mut j.store,
-                now,
-                CkptKind::Periodic,
-                j.workload.as_ref(),
-                &j.snap_buf,
-            )?;
-            let cost = outcome.cost();
-            self.sched_job_in(job, cost, SimEvent::CkptDone {
-                periodic: true,
-                outcome,
-            });
-            return Ok(());
+            return self.attempt_ckpt(job, true, 0);
         }
 
         self.decide_step(job)
+    }
+
+    /// One checkpoint write attempt for `job` — the per-job mirror of the
+    /// engine's `attempt_ckpt`: an injected storage fault burns the
+    /// virtual time the transfer consumed and, while the retry policy has
+    /// attempts left, schedules a [`SimEvent::CkptRetry`] after the
+    /// backoff delay instead of failing the run.
+    fn attempt_ckpt(
+        &mut self,
+        job: usize,
+        periodic: bool,
+        attempt: u32,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let kind =
+            if periodic { CkptKind::Periodic } else { CkptKind::AppNative };
+        let snapped = {
+            let j = &mut self.jobs[job];
+            if periodic {
+                j.workload.snapshot_into(&mut j.snap_buf)?;
+                true
+            } else {
+                match j.workload.app_snapshot()? {
+                    Some(snap) => {
+                        j.snap_buf = snap;
+                        true
+                    }
+                    // nothing to capture at this milestone — back to the
+                    // boundary (also covers a retry outliving its
+                    // milestone)
+                    None => false,
+                }
+            }
+        };
+        if !snapped {
+            self.sched_job(job, now, SimEvent::BoundaryReached);
+            return Ok(());
+        }
+        let res = {
+            let j = &mut self.jobs[job];
+            j.writer.write(
+                &mut j.store,
+                now,
+                kind,
+                j.workload.as_ref(),
+                &j.snap_buf,
+            )
+        };
+        match res {
+            Ok(outcome) => {
+                self.drain_faults(job, now);
+                let cost = outcome.cost();
+                self.sched_job_in(job, cost, SimEvent::CkptDone {
+                    periodic,
+                    outcome,
+                });
+                Ok(())
+            }
+            Err(e) => match e.downcast_ref::<InjectedFault>() {
+                Some(fault) => {
+                    let burned = fault.burned;
+                    self.drain_faults(job, now);
+                    self.on_ckpt_fault(job, periodic, attempt, burned)
+                }
+                None => Err(e),
+            },
+        }
+    }
+
+    /// A job's checkpoint write died on an injected storage fault: retry
+    /// under its backoff policy, or surrender the generation and move on.
+    fn on_ckpt_fault(
+        &mut self,
+        job: usize,
+        periodic: bool,
+        attempt: u32,
+        burned: SimDuration,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let label = if periodic { "periodic" } else { "application" };
+        let j = &mut self.jobs[job];
+        let can_retry =
+            j.backoff.as_ref().map_or(false, |b| b.retries_left(attempt));
+        if can_retry {
+            let delay = j
+                .backoff
+                .as_mut()
+                .expect("retries imply a backoff policy")
+                .delay(attempt);
+            j.timeline.record_with(now, EventKind::CkptRetried, || {
+                format!(
+                    "{label} ckpt attempt {} failed; retry in {delay}",
+                    attempt + 1
+                )
+            });
+            self.sched_job_in(job, burned + delay, SimEvent::CkptRetry {
+                periodic,
+                attempt: attempt + 1,
+            });
+        } else {
+            j.timeline.record_with(now, EventKind::CheckpointFailed, || {
+                format!(
+                    "{label} ckpt failed after {} attempt(s); \
+                     generation lost",
+                    attempt + 1
+                )
+            });
+            if periodic {
+                // the cadence clock still advances: the next due test
+                // starts from the failure, not the last success
+                j.last_ckpt_at = now;
+            }
+            self.sched_job_in(job, burned, SimEvent::BoundaryReached);
+        }
+        Ok(())
+    }
+
+    /// Surface one job's injected-fault log onto its timeline.
+    fn drain_faults(&mut self, job: usize, now: SimTime) {
+        let j = &mut self.jobs[job];
+        for f in j.store.take_faults() {
+            let kind = match f.kind {
+                FaultKind::WriteFail => EventKind::ChaosWriteFault,
+                FaultKind::TornWrite => EventKind::ChaosTornWrite,
+                FaultKind::Corrupt => EventKind::ChaosCorruption,
+                FaultKind::LatencySpike => EventKind::ChaosLatencySpike,
+            };
+            j.timeline.record(now, kind, f.key);
+        }
     }
 
     fn periodic_due(&mut self, job: usize, now: SimTime) -> bool {
@@ -777,7 +984,13 @@ impl<'a> ClusterEngine<'a> {
             let step_end = now + step_cost;
             if es.detect <= step_end || es.deadline <= step_end {
                 let post_visible = es.post.max(now);
-                self.sched_job(job, post_visible, SimEvent::NoticePosted);
+                let token = self.queue.schedule_for(
+                    job,
+                    post_visible,
+                    ClusterEvent::Job { job, ev: SimEvent::NoticePosted },
+                );
+                // remembered so a storm can pull the post forward
+                self.jobs[job].notice_token = Some(token);
                 return Ok(());
             }
         }
@@ -821,22 +1034,9 @@ impl<'a> ClusterEngine<'a> {
             && self.spoton
             && self.jobs[job].policy.persists_app_milestones()
         {
-            let j = &mut self.jobs[job];
-            if let Some(snap) = j.workload.app_snapshot()? {
-                let outcome = j.writer.write(
-                    &mut j.store,
-                    now,
-                    CkptKind::AppNative,
-                    j.workload.as_ref(),
-                    &snap,
-                )?;
-                let cost = outcome.cost();
-                self.sched_job_in(job, cost, SimEvent::CkptDone {
-                    periodic: false,
-                    outcome,
-                });
-                return Ok(());
-            }
+            // attempt_ckpt falls back to the boundary itself when the
+            // workload has no milestone snapshot to offer
+            return self.attempt_ckpt(job, false, 0);
         }
 
         self.sched_job(job, now, SimEvent::BoundaryReached);
@@ -867,7 +1067,7 @@ impl<'a> ClusterEngine<'a> {
                 });
             }
         }
-        CheckpointStore::gc(&mut j.store, 3)?;
+        CheckpointStore::gc(&mut j.store, self.cfg.retain as usize)?;
         if periodic {
             j.last_ckpt_at = now;
             self.decide_step(job)
@@ -880,6 +1080,7 @@ impl<'a> ClusterEngine<'a> {
     fn on_notice_posted(&mut self, job: usize) -> Result<()> {
         let now = self.clock.now();
         let j = &mut self.jobs[job];
+        j.notice_token = None;
         let (inst_id, es) = {
             let inst = j
                 .inst
@@ -904,23 +1105,68 @@ impl<'a> ClusterEngine<'a> {
 
     fn on_poll_tick(&mut self, job: usize) -> Result<()> {
         let now = self.clock.now();
-        let j = &mut self.jobs[job];
-        let deadline = j
+        let deadline = self.jobs[job]
             .inst
             .as_ref()
             .and_then(|inst| inst.schedule)
             .expect("poll tick without an eviction schedule")
             .deadline;
-        let reaction = handlers::on_poll_tick(
-            j.monitor.as_mut().expect("live instance has a monitor"),
-            &mut j.metadata,
-            &j.policy,
-            &mut j.writer,
-            &mut j.store,
-            j.workload.as_ref(),
-            now,
-            deadline,
-        )?;
+        if self.plan.imds_down(now) {
+            // IMDS outage: this poll sees nothing. The monitor degrades
+            // to a slower cadence and keeps polling; if even the
+            // degraded tick cannot land before the reclaim instant, the
+            // notice goes unobserved and the platform simply kills the
+            // instance at the deadline — degraded, accounted, never
+            // wedged.
+            let end = self.plan.outage_ends(now);
+            let degraded =
+                self.plan.degraded_poll(self.cfg.cloud.poll_interval);
+            let j = &mut self.jobs[job];
+            if !j.imds_was_down {
+                j.imds_was_down = true;
+                j.metadata.set_available(false);
+                j.timeline.record_with(now, EventKind::ImdsOutage, || {
+                    match end {
+                        Some(end) => format!(
+                            "scheduled-events endpoint down until {end}"
+                        ),
+                        None => "scheduled-events endpoint down".into(),
+                    }
+                });
+            }
+            j.timeline.record_with(now, EventKind::PollDegraded, || {
+                format!("poll backed off to {degraded}")
+            });
+            let next = now + degraded;
+            if next < deadline {
+                self.sched_job(job, next, SimEvent::PollTick);
+            } else {
+                self.sched_job(
+                    job,
+                    deadline.max(now),
+                    SimEvent::NoticeDeadline,
+                );
+            }
+            return Ok(());
+        }
+        let reaction = {
+            let j = &mut self.jobs[job];
+            if j.imds_was_down {
+                j.imds_was_down = false;
+                j.metadata.set_available(true);
+            }
+            handlers::on_poll_tick(
+                j.monitor.as_mut().expect("live instance has a monitor"),
+                &mut j.metadata,
+                &j.policy,
+                &mut j.writer,
+                &mut j.store,
+                j.workload.as_ref(),
+                now,
+                deadline,
+            )?
+        };
+        self.drain_faults(job, now);
         match reaction {
             PollReaction::TerminationCkpt { notice, outcome } => {
                 let cost = outcome.cost();
@@ -989,6 +1235,7 @@ impl<'a> ClusterEngine<'a> {
         j.metadata.clear_resource(&inst.id);
         j.evictions += 1;
         j.timeline.record(now, EventKind::InstanceEvicted, inst.id);
+        j.notice_token = None;
         self.queue.cancel_subject(job);
         self.try_admit_waiting()?;
         self.sched_job(job, now, SimEvent::ReplacementRequested);
@@ -1024,6 +1271,82 @@ impl<'a> ClusterEngine<'a> {
         Ok(())
     }
 
+    /// A planned eviction storm lands cluster-wide: every unfinished
+    /// job's live instance gets its eviction schedule rewritten so the
+    /// Preempt posts *now* (the platform still grants the configured
+    /// notice before reclaiming) — the correlated multi-pool capacity
+    /// event the per-run engine's storm models for one instance. Jobs
+    /// without a live instance — queued, provisioning, or between
+    /// instances — ride the storm out: storms hit instances, not work.
+    fn on_chaos_storm(&mut self, idx: usize) -> Result<()> {
+        let now = self.clock.now();
+        for job in 0..self.jobs.len() {
+            if self.jobs[job].finished {
+                continue;
+            }
+            self.storm_job(job, idx, now);
+        }
+        Ok(())
+    }
+
+    /// Apply storm `idx` to one job — the per-job mirror of the engine's
+    /// `on_chaos_storm`, recorded on the job's own timeline.
+    fn storm_job(&mut self, job: usize, idx: usize, now: SimTime) {
+        let started = match &self.jobs[job].inst {
+            Some(inst) => inst.started,
+            None => {
+                self.jobs[job].timeline.record_with(
+                    now,
+                    EventKind::ChaosStorm,
+                    || format!("storm {idx}: no live instance"),
+                );
+                return;
+            }
+        };
+        let already_posted = self.jobs[job]
+            .inst
+            .as_ref()
+            .and_then(|inst| inst.schedule)
+            .map_or(false, |es| es.post <= now);
+        if already_posted {
+            self.jobs[job].timeline.record_with(
+                now,
+                EventKind::ChaosStorm,
+                || format!("storm {idx}: eviction already in flight"),
+            );
+            return;
+        }
+        let post = now;
+        let deadline = post + self.cfg.cloud.notice;
+        let detect = if !self.spoton {
+            deadline
+        } else {
+            // first poll tick at/after the post, ticks measured from the
+            // instance's launch — same rule as the planned schedule
+            let since_start = post.since(started).as_millis();
+            let poll = self.cfg.cloud.poll_interval.as_millis().max(1);
+            let ticks = since_start.div_ceil(poll);
+            started + SimDuration::from_millis(ticks * poll)
+        };
+        if let Some(inst) = self.jobs[job].inst.as_mut() {
+            inst.schedule = Some(EvictionSchedule { post, detect, deadline });
+        }
+        // if the job's boundary already committed to the (later) planned
+        // post, pull that pending NoticePosted forward to now
+        if let Some(token) = self.jobs[job].notice_token.take() {
+            self.queue.cancel(token);
+            let new_token = self.queue.schedule_for(
+                job,
+                now,
+                ClusterEvent::Job { job, ev: SimEvent::NoticePosted },
+            );
+            self.jobs[job].notice_token = Some(new_token);
+        }
+        self.jobs[job].timeline.record_with(now, EventKind::ChaosStorm, || {
+            format!("storm {idx}: eviction rescheduled to now")
+        });
+    }
+
     // ------------------------------------------------------- run ending
 
     /// A job ends (workload done or deadline abort): terminate its
@@ -1041,6 +1364,7 @@ impl<'a> ClusterEngine<'a> {
         }
         self.jobs[job].finished = true;
         self.jobs[job].finished_at = Some(now);
+        self.jobs[job].notice_token = None;
         self.queue.cancel_subject(job);
         self.finished_jobs += 1;
         self.timeline.record_with(now, EventKind::JobFinished, || {
@@ -1053,6 +1377,9 @@ impl<'a> ClusterEngine<'a> {
         });
         if self.finished_jobs == self.jobs.len() {
             for token in self.price_tokens.drain(..) {
+                self.queue.cancel(token);
+            }
+            for token in self.chaos_tokens.drain(..) {
                 self.queue.cancel(token);
             }
         } else {
@@ -1187,6 +1514,7 @@ fn build_job(
     submitted_at: SimTime,
     mut factory: JobFactory,
     n_pools: usize,
+    idx: u64,
 ) -> Result<JobState> {
     let workload = factory()
         .with_context(|| format!("building workload for job '{name}'"))?;
@@ -1220,6 +1548,24 @@ fn build_job(
     );
     let ckpt_cost_est = store
         .transfer_cost((cfg.workload.state_gib * (1u64 << 30) as f64) as u64);
+    // Per-job chaos decorrelation: job 0 draws the single-run engine's
+    // exact fault and jitter streams (the equivalence pin); later jobs
+    // stride off them so no two jobs share a fault sequence.
+    let store = match &cfg.chaos {
+        Some(chaos) => ChaosStore::new(
+            store,
+            chaos.storage.clone(),
+            super::chaos::job_storage_seed(cfg.seed, chaos.salt, idx),
+        ),
+        None => ChaosStore::passthrough(store),
+    };
+    let backoff = cfg
+        .retry
+        .as_ref()
+        .map(|r| {
+            Backoff::new(r.clone(), super::chaos::job_backoff_seed(cfg.seed, idx))
+        })
+        .transpose()?;
     Ok(JobState {
         name: name.to_string(),
         priority,
@@ -1236,6 +1582,9 @@ fn build_job(
         monitor: None,
         inst: None,
         snap_buf: Snapshot { bytes: Vec::new(), charged_bytes: 0 },
+        backoff,
+        imds_was_down: false,
+        notice_token: None,
         active: PoolId(0),
         pool_counts: vec![(0, 0); n_pools],
         launches: 0,

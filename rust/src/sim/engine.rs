@@ -63,12 +63,14 @@
 //!   [`StickyPool`](crate::cloud::fleet::StickyPool) run's timeline stays
 //!   byte-identical to the legacy loop's.
 
+use super::chaos::FaultPlan;
 use super::RunResult;
 use crate::checkpoint::{CheckpointStore, CheckpointWriter, CkptKind, WriteOutcome};
 use crate::cloud::billing::BillingMeter;
 use crate::cloud::fleet::{build_policy, Fleet, PlacementPolicy, PoolId};
 use crate::cloud::metadata::MetadataService;
 use crate::config::ScenarioConfig;
+use crate::coordinator::backoff::Backoff;
 use crate::coordinator::handlers::{self, PollReaction};
 use crate::coordinator::monitor::{Notice, ScheduledEventsMonitor};
 use crate::coordinator::policy::CheckpointPolicy;
@@ -76,7 +78,7 @@ use crate::coordinator::restart::{RestartManager, RestoreReport};
 use crate::metrics::{EventKind, Timeline};
 use crate::policy::{build_controller, IntervalController, PolicyCtx};
 use crate::simclock::{Clock, EventQueue, SimDuration, SimTime};
-use crate::storage::SharedStore;
+use crate::storage::{ChaosStore, FaultKind, InjectedFault, SharedStore};
 use crate::workload::{Snapshot, StepOutcome, Workload};
 use anyhow::{Context, Result};
 
@@ -118,6 +120,13 @@ pub enum SimEvent {
     /// (and schedule the next point). These events belong to the *run*,
     /// not to any instance — an eviction never cancels them.
     PoolPriceChanged { pool: PoolId, idx: usize },
+    /// A planned eviction storm (chaos): rewrite the live instance's
+    /// eviction schedule to post a notice immediately. Like price
+    /// changes, storms belong to the run, not to any instance.
+    ChaosStorm { idx: usize },
+    /// A failed checkpoint write's backoff delay elapsed: take attempt
+    /// `attempt` (0-based) of the same capture.
+    CkptRetry { periodic: bool, attempt: u32 },
 }
 
 /// When the platform will post/enforce the eviction of one instance.
@@ -137,6 +146,9 @@ struct EvictionSchedule {
 struct InstanceCtx {
     id: String,
     schedule: Option<EvictionSchedule>,
+    /// Launch instant — poll ticks are measured from here, so a storm
+    /// rewriting the schedule can land `detect` on a real tick boundary.
+    started: SimTime,
 }
 
 /// The engine: event queue + clock + run accounting around the same
@@ -144,7 +156,10 @@ struct InstanceCtx {
 /// drawing instances from a multi-pool [`Fleet`].
 pub struct Engine<'a> {
     cfg: &'a ScenarioConfig,
-    store: &'a mut dyn SharedStore,
+    /// The share, behind the chaos wrapper. With `[chaos]` absent this is
+    /// a passthrough: pure delegation, no PRNG draws, byte-identical to
+    /// the bare store.
+    store: ChaosStore<&'a mut dyn SharedStore>,
     factory: &'a mut dyn FnMut() -> Result<Box<dyn Workload>>,
 
     clock: Clock,
@@ -156,6 +171,11 @@ pub struct Engine<'a> {
     /// `live_tokens`: price changes outlive instances (an eviction must
     /// not cancel the market), but the run's end still drains them.
     price_tokens: Vec<u64>,
+    /// Tokens of pending chaos storms — run-scoped like the market.
+    chaos_tokens: Vec<u64>,
+    /// Token of a pending `NoticePosted`, so a storm can pull an already
+    /// decided (but not yet posted) eviction forward to "now".
+    notice_token: Option<u64>,
 
     policy: CheckpointPolicy,
     /// Tunes the periodic-checkpoint cadence online
@@ -181,6 +201,15 @@ pub struct Engine<'a> {
     /// Reusable periodic-snapshot buffer: one allocation per run, not one
     /// per checkpoint (`Workload::snapshot_into`).
     snap_buf: Snapshot,
+    /// The run's fault schedule (storms + IMDS outages); empty with
+    /// `[chaos]` absent.
+    plan: FaultPlan,
+    /// Retry policy for failed checkpoint commits (`[checkpoint.retry]`);
+    /// `None` fails the generation on the first storage error.
+    backoff: Option<Backoff>,
+    /// Are we currently inside an observed IMDS outage? (Drives the
+    /// one-record-per-outage transition on the timeline.)
+    imds_was_down: bool,
 
     spoton: bool,
     overhead_factor: f64,
@@ -244,6 +273,27 @@ impl<'a> Engine<'a> {
             (cfg.workload.state_gib * (1u64 << 30) as f64) as u64,
         );
         let spoton = cfg.coordinator_attached;
+        // Chaos wrapping: with `[chaos]` absent the wrapper is a pure
+        // passthrough and the plan is empty — nothing is armed, nothing
+        // draws, every digest stays byte-identical.
+        let (store, plan) = match &cfg.chaos {
+            Some(chaos) => (
+                ChaosStore::new(
+                    store,
+                    chaos.storage.clone(),
+                    super::chaos::storage_seed(cfg.seed, chaos.salt),
+                ),
+                FaultPlan::draw(chaos, cfg.seed),
+            ),
+            None => (ChaosStore::passthrough(store), FaultPlan::none()),
+        };
+        let backoff = cfg
+            .retry
+            .as_ref()
+            .map(|r| {
+                Backoff::new(r.clone(), super::chaos::backoff_seed(cfg.seed))
+            })
+            .transpose()?;
         Ok(Self {
             policy,
             controller,
@@ -258,6 +308,11 @@ impl<'a> Engine<'a> {
             queue: EventQueue::new(),
             live_tokens: Vec::new(),
             price_tokens: Vec::new(),
+            chaos_tokens: Vec::new(),
+            notice_token: None,
+            plan,
+            backoff,
+            imds_was_down: false,
             billing: BillingMeter::new(),
             timeline: Timeline::with_level(cfg.metrics),
             metadata: MetadataService::new(),
@@ -290,12 +345,15 @@ impl<'a> Engine<'a> {
 
     /// Run to completion (workload Done) or abort (scenario deadline).
     pub fn run(mut self) -> Result<RunResult> {
-        self.writer.resume_after(CheckpointStore::max_id(self.store)?);
+        self.writer
+            .resume_after(CheckpointStore::max_id(&mut self.store)?);
         self.schedule(SimTime::ZERO, SimEvent::ReplacementRequested);
         self.schedule_price_traces();
+        self.schedule_storms();
         while let Some(sch) = self.queue.pop() {
             self.live_tokens.retain(|&t| t != sch.seq);
             self.price_tokens.retain(|&t| t != sch.seq);
+            self.chaos_tokens.retain(|&t| t != sch.seq);
             self.clock.advance_to(sch.at);
             self.dispatch(sch.event)?;
             if self.finished {
@@ -323,6 +381,16 @@ impl<'a> Engine<'a> {
         }
     }
 
+    /// Arm the plan's storm instants. Like the market, storms belong to
+    /// the run: an instance death must not cancel a future storm.
+    fn schedule_storms(&mut self) {
+        for idx in 0..self.plan.storms.len() {
+            let at = self.plan.storms[idx];
+            let token = self.queue.schedule(at, SimEvent::ChaosStorm { idx });
+            self.chaos_tokens.push(token);
+        }
+    }
+
     // ---------------------------------------------------- event plumbing
 
     fn schedule(&mut self, at: SimTime, event: SimEvent) {
@@ -342,6 +410,7 @@ impl<'a> Engine<'a> {
         for token in self.live_tokens.drain(..) {
             self.queue.cancel(token);
         }
+        self.notice_token = None;
     }
 
     fn dispatch(&mut self, event: SimEvent) -> Result<()> {
@@ -366,6 +435,10 @@ impl<'a> Engine<'a> {
             SimEvent::InstanceEvicted => self.on_instance_reclaimed(),
             SimEvent::PoolPriceChanged { pool, idx } => {
                 self.on_price_changed(pool, idx)
+            }
+            SimEvent::ChaosStorm { idx } => self.on_chaos_storm(idx),
+            SimEvent::CkptRetry { periodic, attempt } => {
+                self.attempt_ckpt(periodic, attempt)
             }
         }
     }
@@ -451,27 +524,48 @@ impl<'a> Engine<'a> {
             };
             EvictionSchedule { post, detect, deadline }
         });
-        self.inst = Some(InstanceCtx { id: inst_id, schedule });
+        self.inst =
+            Some(InstanceCtx { id: inst_id, schedule, started: now });
 
         if self.spoton {
-            match RestartManager::find_and_restore(
-                self.store,
+            // Fallback search: a committed generation that fails
+            // verification (chaos corruption) is skipped — recorded as a
+            // fallback — and the next-newest verified one restores. With
+            // chaos off every committed generation verifies, so this is
+            // exactly the classic most-recent-valid lookup.
+            let search = RestartManager::find_and_restore_with_fallback(
+                &mut self.store,
                 &self.policy,
                 self.workload.as_mut(),
-            ) {
-                Ok(Some(report)) => {
+            )
+            .context("restart")?;
+            for (id, problem) in &search.skipped {
+                self.timeline.record_with(
+                    now,
+                    EventKind::RestoreFallback,
+                    || format!("ckpt {id} unusable ({problem})"),
+                );
+            }
+            match search.report {
+                Some(report) => {
                     let cost = report.cost;
                     self.schedule_in(cost, SimEvent::RestoreDone { report });
                     return Ok(());
                 }
-                Ok(None) => {
+                None => {
+                    if !search.skipped.is_empty() {
+                        self.timeline.record(
+                            now,
+                            EventKind::UnrecoveredRestore,
+                            "every committed generation failed verification",
+                        );
+                    }
                     if self.evictions > 0 {
                         // unprotected restart: begin from scratch
                         self.workload = (self.factory)()?;
                         self.lost_steps += self.max_steps_seen;
                     }
                 }
-                Err(e) => return Err(e).context("restart"),
             }
         } else if self.evictions > 0 {
             self.workload = (self.factory)()?;
@@ -521,23 +615,124 @@ impl<'a> Engine<'a> {
         // periodic transparent checkpoint at step boundary (the snapshot
         // buffer is reused across every checkpoint of the run)
         if self.spoton && self.periodic_due(now) {
-            self.workload.snapshot_into(&mut self.snap_buf)?;
-            let outcome = self.writer.write(
-                self.store,
-                now,
-                CkptKind::Periodic,
-                self.workload.as_ref(),
-                &self.snap_buf,
-            )?;
-            let cost = outcome.cost(); // workload frozen while dumping
-            self.schedule_in(cost, SimEvent::CkptDone {
-                periodic: true,
-                outcome,
-            });
-            return Ok(());
+            return self.attempt_ckpt(true, 0);
         }
 
         self.decide_step()
+    }
+
+    /// One checkpoint write attempt — periodic boundary capture
+    /// (`periodic`) or application milestone — with chaos-aware failure
+    /// handling: an injected storage fault burns the virtual time the
+    /// transfer consumed and, while the retry policy has attempts left,
+    /// schedules a [`SimEvent::CkptRetry`] after the backoff delay
+    /// instead of failing the run.
+    fn attempt_ckpt(&mut self, periodic: bool, attempt: u32) -> Result<()> {
+        let now = self.clock.now();
+        let kind =
+            if periodic { CkptKind::Periodic } else { CkptKind::AppNative };
+        if periodic {
+            self.workload.snapshot_into(&mut self.snap_buf)?;
+        } else {
+            match self.workload.app_snapshot()? {
+                Some(snap) => self.snap_buf = snap,
+                // nothing to capture at this milestone — back to the
+                // boundary (also covers a retry outliving its milestone)
+                None => {
+                    self.schedule(now, SimEvent::BoundaryReached);
+                    return Ok(());
+                }
+            }
+        }
+        let res = self.writer.write(
+            &mut self.store,
+            now,
+            kind,
+            self.workload.as_ref(),
+            &self.snap_buf,
+        );
+        match res {
+            Ok(outcome) => {
+                self.drain_faults(now);
+                let cost = outcome.cost(); // workload frozen while dumping
+                self.schedule_in(cost, SimEvent::CkptDone {
+                    periodic,
+                    outcome,
+                });
+                Ok(())
+            }
+            Err(e) => match e.downcast_ref::<InjectedFault>() {
+                Some(fault) => {
+                    let burned = fault.burned;
+                    self.drain_faults(now);
+                    self.on_ckpt_fault(periodic, attempt, burned)
+                }
+                None => Err(e),
+            },
+        }
+    }
+
+    /// A checkpoint write died on an injected storage fault: retry under
+    /// the backoff policy, or surrender the generation and move on — a
+    /// lost generation is a wider eviction-rollback window, not a dead
+    /// run.
+    fn on_ckpt_fault(
+        &mut self,
+        periodic: bool,
+        attempt: u32,
+        burned: SimDuration,
+    ) -> Result<()> {
+        let now = self.clock.now();
+        let label = if periodic { "periodic" } else { "application" };
+        let can_retry = self
+            .backoff
+            .as_ref()
+            .map_or(false, |b| b.retries_left(attempt));
+        if can_retry {
+            let delay = self
+                .backoff
+                .as_mut()
+                .expect("retries imply a backoff policy")
+                .delay(attempt);
+            self.timeline.record_with(now, EventKind::CkptRetried, || {
+                format!(
+                    "{label} ckpt attempt {} failed; retry in {delay}",
+                    attempt + 1
+                )
+            });
+            self.schedule_in(burned + delay, SimEvent::CkptRetry {
+                periodic,
+                attempt: attempt + 1,
+            });
+        } else {
+            self.timeline.record_with(now, EventKind::CheckpointFailed, || {
+                format!(
+                    "{label} ckpt failed after {} attempt(s); \
+                     generation lost",
+                    attempt + 1
+                )
+            });
+            if periodic {
+                // the cadence clock still advances: the next due test
+                // starts from the failure, not the last success
+                self.last_ckpt_at = now;
+            }
+            self.schedule_in(burned, SimEvent::BoundaryReached);
+        }
+        Ok(())
+    }
+
+    /// Surface the chaos wrapper's injected-fault log onto the timeline.
+    fn drain_faults(&mut self, now: SimTime) {
+        for f in self.store.take_faults() {
+            let kind = match f.kind {
+                FaultKind::WriteFail => EventKind::ChaosWriteFault,
+                FaultKind::TornWrite => EventKind::ChaosTornWrite,
+                FaultKind::Corrupt => EventKind::ChaosCorruption,
+                FaultKind::LatencySpike => EventKind::ChaosLatencySpike,
+            };
+            self.timeline.record(now, kind, f.key);
+        }
     }
 
     /// Is a periodic checkpoint due at this boundary? The interval
@@ -584,7 +779,11 @@ impl<'a> Engine<'a> {
                 // the platform's post becomes visible no earlier than the
                 // boundary that observes it (legacy-loop semantics)
                 let post_visible = es.post.max(now);
-                self.schedule(post_visible, SimEvent::NoticePosted);
+                let token =
+                    self.queue.schedule(post_visible, SimEvent::NoticePosted);
+                self.live_tokens.push(token);
+                // remembered so a storm can pull the post forward
+                self.notice_token = Some(token);
                 return Ok(());
             }
         }
@@ -630,21 +829,9 @@ impl<'a> Engine<'a> {
         // application milestone checkpoint (the app writes its own files
         // when app-native checkpointing is enabled)
         if milestone && self.spoton && self.policy.persists_app_milestones() {
-            if let Some(snap) = self.workload.app_snapshot()? {
-                let outcome = self.writer.write(
-                    self.store,
-                    now,
-                    CkptKind::AppNative,
-                    self.workload.as_ref(),
-                    &snap,
-                )?;
-                let cost = outcome.cost();
-                self.schedule_in(cost, SimEvent::CkptDone {
-                    periodic: false,
-                    outcome,
-                });
-                return Ok(());
-            }
+            // attempt_ckpt falls back to the boundary itself when the
+            // workload has no milestone snapshot to offer
+            return self.attempt_ckpt(false, 0);
         }
 
         self.schedule(now, SimEvent::BoundaryReached);
@@ -679,7 +866,7 @@ impl<'a> Engine<'a> {
                 );
             }
         }
-        CheckpointStore::gc(self.store, 3)?;
+        CheckpointStore::gc(&mut self.store, self.cfg.retain as usize)?;
         if periodic {
             self.last_ckpt_at = now;
             // Legacy-loop shape: after a periodic checkpoint the driver
@@ -699,6 +886,7 @@ impl<'a> Engine<'a> {
     /// reclaim deadline.
     fn on_notice_posted(&mut self) -> Result<()> {
         let now = self.clock.now();
+        self.notice_token = None;
         let (inst_id, es) = {
             let inst = self
                 .inst
@@ -727,22 +915,58 @@ impl<'a> Engine<'a> {
     /// [`crate::coordinator::handlers`].
     fn on_poll_tick(&mut self) -> Result<()> {
         let now = self.clock.now();
-        let deadline = self
+        let es = self
             .inst
             .as_ref()
             .and_then(|inst| inst.schedule)
-            .expect("poll tick without an eviction schedule")
-            .deadline;
+            .expect("poll tick without an eviction schedule");
+        if self.plan.imds_down(now) {
+            // IMDS outage: this poll sees nothing. The monitor degrades
+            // to a slower cadence and keeps polling; if even the
+            // degraded tick cannot land before the reclaim instant, the
+            // notice goes unobserved and the platform simply kills the
+            // instance at the deadline — degraded, accounted, never
+            // wedged.
+            if !self.imds_was_down {
+                self.imds_was_down = true;
+                self.metadata.set_available(false);
+                self.timeline.record_with(now, EventKind::ImdsOutage, || {
+                    match self.plan.outage_ends(now) {
+                        Some(end) => format!(
+                            "scheduled-events endpoint down until {end}"
+                        ),
+                        None => "scheduled-events endpoint down".into(),
+                    }
+                });
+            }
+            let degraded =
+                self.plan.degraded_poll(self.cfg.cloud.poll_interval);
+            self.timeline.record_with(now, EventKind::PollDegraded, || {
+                format!("poll backed off to {degraded}")
+            });
+            let next = now + degraded;
+            if next < es.deadline {
+                self.schedule(next, SimEvent::PollTick);
+            } else {
+                self.schedule(es.deadline.max(now), SimEvent::NoticeDeadline);
+            }
+            return Ok(());
+        }
+        if self.imds_was_down {
+            self.imds_was_down = false;
+            self.metadata.set_available(true);
+        }
         let reaction = handlers::on_poll_tick(
             self.monitor.as_mut().expect("live instance has a monitor"),
             &mut self.metadata,
             &self.policy,
             &mut self.writer,
-            self.store,
+            &mut self.store,
             self.workload.as_ref(),
             now,
-            deadline,
+            es.deadline,
         )?;
+        self.drain_faults(now);
         match reaction {
             PollReaction::TerminationCkpt { notice, outcome } => {
                 let cost = outcome.cost();
@@ -842,13 +1066,73 @@ impl<'a> Engine<'a> {
         Ok(())
     }
 
+    /// A planned eviction storm lands: rewrite the live instance's
+    /// eviction schedule so the Preempt posts *now* (the platform still
+    /// grants the configured notice before reclaiming). A run with no
+    /// live instance — provisioning, or between instances — rides the
+    /// storm out: storms hit instances, not queued work.
+    fn on_chaos_storm(&mut self, idx: usize) -> Result<()> {
+        let now = self.clock.now();
+        let started = match &self.inst {
+            Some(inst) => inst.started,
+            None => {
+                self.timeline.record_with(now, EventKind::ChaosStorm, || {
+                    format!("storm {idx}: no live instance")
+                });
+                return Ok(());
+            }
+        };
+        let already_posted = self
+            .inst
+            .as_ref()
+            .and_then(|inst| inst.schedule)
+            .map_or(false, |es| es.post <= now);
+        if already_posted {
+            self.timeline.record_with(now, EventKind::ChaosStorm, || {
+                format!("storm {idx}: eviction already in flight")
+            });
+            return Ok(());
+        }
+        let post = now;
+        let deadline = post + self.cfg.cloud.notice;
+        let detect = if !self.spoton {
+            deadline
+        } else {
+            // first poll tick at/after the post, ticks measured from the
+            // instance's launch — same rule as the planned schedule
+            let since_start = post.since(started).as_millis();
+            let poll = self.cfg.cloud.poll_interval.as_millis().max(1);
+            let ticks = since_start.div_ceil(poll);
+            started + SimDuration::from_millis(ticks * poll)
+        };
+        if let Some(inst) = self.inst.as_mut() {
+            inst.schedule = Some(EvictionSchedule { post, detect, deadline });
+        }
+        // if the boundary already committed to the (later) planned post,
+        // pull that pending NoticePosted forward to now
+        if let Some(token) = self.notice_token.take() {
+            self.queue.cancel(token);
+            self.live_tokens.retain(|&t| t != token);
+            let new_token = self.queue.schedule(now, SimEvent::NoticePosted);
+            self.live_tokens.push(new_token);
+            self.notice_token = Some(new_token);
+        }
+        self.timeline.record_with(now, EventKind::ChaosStorm, || {
+            format!("storm {idx}: eviction rescheduled to now")
+        });
+        Ok(())
+    }
+
     // ------------------------------------------------------- run ending
 
     fn finish(&mut self) {
         self.finished = true;
         self.cancel_pending();
-        // un-replayed market moves die with the run
+        // un-replayed market moves and un-landed storms die with the run
         for token in self.price_tokens.drain(..) {
+            self.queue.cancel(token);
+        }
+        for token in self.chaos_tokens.drain(..) {
             self.queue.cancel(token);
         }
     }

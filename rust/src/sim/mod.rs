@@ -25,6 +25,10 @@
 //!   queue around **one** capacity-bounded fleet, with FIFO-per-priority
 //!   admission when pools are full; throughput measured in events/sec
 //!   (`benches/perf_cluster.rs`).
+//! * [`chaos`] — seeded fault injection: the per-run
+//!   [`chaos::FaultPlan`] (storm instants, IMDS outage windows) drawn
+//!   from `(scenario seed, chaos salt)` only, so chaos-enabled sweeps
+//!   stay byte-identical at any parallelism.
 //! * [`shard`] — the multi-process sweep runner behind
 //!   `spoton sweep`: a [`shard::ShardPlan`] deterministically partitions
 //!   seed range × configuration matrix into shards, worker processes
@@ -48,6 +52,7 @@
 //!   provisions it (a scheduled event, not a blocking wait), the
 //!   coordinator restores from the most recent valid checkpoint.
 
+pub mod chaos;
 pub mod cluster;
 pub mod engine;
 pub mod experiment;
@@ -55,6 +60,7 @@ pub mod legacy;
 pub mod shard;
 pub mod sweep;
 
+pub use chaos::FaultPlan;
 pub use cluster::{
     ClusterEngine, ClusterResult, ClusterSweep, JobOutcome, SeededClusterRun,
 };

@@ -253,7 +253,13 @@ pub fn run_digest(r: &RunResult) -> String {
     }
     // Per-kind counters are the only timeline data a Counts-level run
     // keeps — they must enter the digest for the iff contract to hold.
+    // Chaos kinds are gated on being observed: a chaos-free run's digest
+    // stays byte-identical to digests minted before the chaos kinds
+    // existed, while any injected fault still lands in the digest.
     for k in crate::metrics::EventKind::ALL {
+        if k.is_chaos() && r.timeline.count(k) == 0 {
+            continue;
+        }
         let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));
     }
     for e in r.timeline.events() {

@@ -1,0 +1,371 @@
+//! Fault-wrapping storage backend: seeded chaos over any [`SharedStore`].
+//!
+//! [`ChaosStore`] wraps a real backend (`local`/`nfs`/`blob`) and injects
+//! storage failures into checkpoint writes (keys under `ckpt/`), drawing
+//! every decision from a salted per-run PRNG stream so fault timing is a
+//! function of the scenario seed only — never thread, worker or shard
+//! count ([`crate::sim::chaos`] holds the plan-level counterpart):
+//!
+//! * **write failure** — the put dies before any bytes move; the caller
+//!   sees an [`InjectedFault`] with zero burned transfer time.
+//! * **torn write** — the connection dies mid-transfer: the first half of
+//!   the object lands under the real key (a torn `payload.bin` or
+//!   `manifest.json` that manifest-hash verification later rejects), and
+//!   the caller is charged the partial transfer.
+//! * **corruption** — the payload is stored bit-flipped and the put
+//!   *succeeds*; nothing notices until restore-time CRC/SHA verification
+//!   fails and the coordinator falls back a generation
+//!   ([`crate::coordinator::restart`]).
+//! * **latency spike** — the put succeeds but costs extra virtual time.
+//!
+//! Injected failures are typed ([`InjectedFault`]) so the retry path can
+//! distinguish them from real I/O errors (which still abort the run), and
+//! every injection is appended to an in-order fault log the engines drain
+//! into their timelines for the `report/` fault-accounting table.
+//!
+//! A disabled wrapper (chaos off) is pure delegation — no PRNG draws, no
+//! log writes — which is what keeps chaos-off digests byte-identical.
+
+use super::{IoMeter, SharedStore};
+use crate::config::ChaosStorageCfg;
+use crate::simclock::SimDuration;
+use crate::util::prng::Prng;
+use anyhow::Result;
+use std::fmt;
+
+/// Salt decorrelating the storage-fault stream from every other consumer
+/// of the scenario seed.
+pub const STORAGE_CHAOS_SALT: u64 = 0x5707_A6E0_FAB1_7CA0;
+
+/// What kind of failure was injected into a storage operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    WriteFail,
+    TornWrite,
+    Corrupt,
+    LatencySpike,
+}
+
+impl FaultKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultKind::WriteFail => "write-fail",
+            FaultKind::TornWrite => "torn-write",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::LatencySpike => "latency-spike",
+        }
+    }
+}
+
+/// A typed injected failure: downcast via
+/// `err.downcast_ref::<InjectedFault>()` to tell chaos from a real I/O
+/// error. `burned` is the virtual transfer time consumed before the
+/// operation died (zero for an outright write failure, the partial
+/// transfer for a torn write) — the caller still pays it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    pub kind: FaultKind,
+    pub burned: SimDuration,
+}
+
+impl fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "injected {} fault ({} burned)",
+            self.kind.as_str(),
+            self.burned
+        )
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// One injection, recorded in occurrence order for the timeline.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub key: String,
+}
+
+/// Seeded fault injection over an inner [`SharedStore`].
+#[derive(Debug, Clone)]
+pub struct ChaosStore<S> {
+    inner: S,
+    cfg: ChaosStorageCfg,
+    rng: Prng,
+    enabled: bool,
+    log: Vec<FaultEvent>,
+}
+
+impl<S: SharedStore> ChaosStore<S> {
+    /// An armed wrapper. `seed` should be
+    /// `mix64(scenario_seed ^ chaos_salt ^ STORAGE_CHAOS_SALT)` (plus a
+    /// per-job stride in the cluster) so fault draws are decorrelated but
+    /// reproducible.
+    pub fn new(inner: S, cfg: ChaosStorageCfg, seed: u64) -> Self {
+        Self { inner, cfg, rng: Prng::new(seed), enabled: true, log: Vec::new() }
+    }
+
+    /// A disabled wrapper: pure delegation, no PRNG draws, byte-identical
+    /// behaviour to the bare inner store.
+    pub fn passthrough(inner: S) -> Self {
+        Self {
+            inner,
+            cfg: ChaosStorageCfg::default(),
+            rng: Prng::new(0),
+            enabled: false,
+            log: Vec::new(),
+        }
+    }
+
+    /// Drain the injections recorded since the last call, in order.
+    pub fn take_faults(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.log)
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    fn record(&mut self, kind: FaultKind, key: &str) {
+        self.log.push(FaultEvent { kind, key: key.to_string() });
+    }
+}
+
+impl<S: SharedStore> SharedStore for ChaosStore<S> {
+    fn put_sized(
+        &mut self,
+        key: &str,
+        data: &[u8],
+        charged_bytes: u64,
+    ) -> Result<SimDuration> {
+        if !self.enabled || !key.starts_with("ckpt/") {
+            return self.inner.put_sized(key, data, charged_bytes);
+        }
+        if self.rng.chance(self.cfg.write_fail_prob) {
+            self.record(FaultKind::WriteFail, key);
+            return Err(InjectedFault {
+                kind: FaultKind::WriteFail,
+                burned: SimDuration::ZERO,
+            }
+            .into());
+        }
+        if self.rng.chance(self.cfg.torn_write_prob) {
+            // the connection dies halfway: the prefix lands under the real
+            // key (manifest verification rejects it later) and the caller
+            // pays for the partial transfer
+            let burned = self
+                .inner
+                .put_sized(key, &data[..data.len() / 2], charged_bytes / 2)?;
+            self.record(FaultKind::TornWrite, key);
+            return Err(InjectedFault { kind: FaultKind::TornWrite, burned }
+                .into());
+        }
+        let spike = if self.rng.chance(self.cfg.latency_spike_prob) {
+            self.record(FaultKind::LatencySpike, key);
+            self.cfg.latency_spike
+        } else {
+            SimDuration::ZERO
+        };
+        if key.ends_with("/payload.bin")
+            && !data.is_empty()
+            && self.rng.chance(self.cfg.corrupt_prob)
+        {
+            // silent bit rot: the put succeeds, the damage only surfaces
+            // when restore-time CRC/SHA verification rejects the snapshot
+            let pos = self.rng.below(data.len() as u64) as usize;
+            let bit = self.rng.below(8) as u8;
+            let mut copy = data.to_vec();
+            copy[pos] ^= 1 << bit;
+            let cost = self.inner.put_sized(key, &copy, charged_bytes)?;
+            self.record(FaultKind::Corrupt, key);
+            return Ok(cost + spike);
+        }
+        Ok(self.inner.put_sized(key, data, charged_bytes)? + spike)
+    }
+
+    fn get(&mut self, key: &str) -> Result<(Vec<u8>, SimDuration)> {
+        self.inner.get(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.inner.list(prefix)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+
+    fn delete(&mut self, key: &str) -> Result<bool> {
+        self.inner.delete(key)
+    }
+
+    fn transfer_cost(&self, bytes: u64) -> SimDuration {
+        self.inner.transfer_cost(bytes)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        self.inner.used_bytes()
+    }
+
+    fn capacity_bytes(&self) -> Option<u64> {
+        self.inner.capacity_bytes()
+    }
+
+    fn meter(&self) -> IoMeter {
+        self.inner.meter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::BlobStore;
+
+    fn store() -> BlobStore {
+        BlobStore::for_tests()
+    }
+
+    fn all_on() -> ChaosStorageCfg {
+        ChaosStorageCfg {
+            write_fail_prob: 1.0,
+            torn_write_prob: 0.0,
+            corrupt_prob: 0.0,
+            latency_spike_prob: 0.0,
+            ..ChaosStorageCfg::default()
+        }
+    }
+
+    #[test]
+    fn passthrough_is_byte_identical() {
+        let mut plain = store();
+        let mut wrapped = ChaosStore::passthrough(store());
+        let cost_a = plain.put("ckpt/a/payload.bin", b"hello").unwrap();
+        let cost_b = wrapped.put("ckpt/a/payload.bin", b"hello").unwrap();
+        assert_eq!(cost_a, cost_b);
+        assert_eq!(
+            plain.get("ckpt/a/payload.bin").unwrap(),
+            wrapped.get("ckpt/a/payload.bin").unwrap()
+        );
+        assert_eq!(plain.meter(), wrapped.meter());
+        assert!(wrapped.take_faults().is_empty());
+    }
+
+    #[test]
+    fn zero_probability_chaos_changes_nothing_observable() {
+        let mut plain = store();
+        let mut armed =
+            ChaosStore::new(store(), ChaosStorageCfg::default(), 42);
+        for i in 0..8 {
+            let key = format!("ckpt/{i:010}-periodic/payload.bin");
+            let a = plain.put_sized(&key, b"state", 1 << 20).unwrap();
+            let b = armed.put_sized(&key, b"state", 1 << 20).unwrap();
+            assert_eq!(a, b);
+        }
+        assert_eq!(plain.meter(), armed.meter());
+        assert!(armed.take_faults().is_empty());
+    }
+
+    #[test]
+    fn write_fail_is_typed_and_burns_nothing() {
+        let mut chaos = ChaosStore::new(store(), all_on(), 7);
+        let err = chaos.put("ckpt/0/payload.bin", b"state").unwrap_err();
+        let fault = err.downcast_ref::<InjectedFault>().expect("typed");
+        assert_eq!(fault.kind, FaultKind::WriteFail);
+        assert_eq!(fault.burned, SimDuration::ZERO);
+        assert!(!chaos.exists("ckpt/0/payload.bin"));
+        let faults = chaos.take_faults();
+        assert_eq!(faults.len(), 1);
+        assert_eq!(faults[0].kind, FaultKind::WriteFail);
+        // non-checkpoint keys are never touched
+        assert!(chaos.put("scratch/x", b"ok").is_ok());
+    }
+
+    #[test]
+    fn torn_write_leaves_a_prefix_and_charges_it() {
+        let cfg = ChaosStorageCfg {
+            torn_write_prob: 1.0,
+            ..ChaosStorageCfg::default()
+        };
+        let mut chaos = ChaosStore::new(store(), cfg, 7);
+        let err =
+            chaos.put_sized("ckpt/0/payload.bin", b"0123456789", 10).unwrap_err();
+        let fault = err.downcast_ref::<InjectedFault>().expect("typed");
+        assert_eq!(fault.kind, FaultKind::TornWrite);
+        let (data, _) = chaos.get("ckpt/0/payload.bin").unwrap();
+        assert_eq!(data, b"01234");
+    }
+
+    #[test]
+    fn corruption_succeeds_but_flips_one_bit() {
+        let cfg = ChaosStorageCfg {
+            corrupt_prob: 1.0,
+            ..ChaosStorageCfg::default()
+        };
+        let mut chaos = ChaosStore::new(store(), cfg, 7);
+        let original = b"checkpoint payload bytes".to_vec();
+        chaos.put("ckpt/0/payload.bin", &original).unwrap();
+        let (stored, _) = chaos.get("ckpt/0/payload.bin").unwrap();
+        assert_eq!(stored.len(), original.len());
+        let flipped: u32 = stored
+            .iter()
+            .zip(&original)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(flipped, 1, "exactly one bit flips");
+        // manifests are spared: only payloads rot silently
+        chaos.put("ckpt/0/manifest.json", &original).unwrap();
+        let (m, _) = chaos.get("ckpt/0/manifest.json").unwrap();
+        assert_eq!(m, original);
+    }
+
+    #[test]
+    fn latency_spike_adds_cost_without_failing() {
+        let cfg = ChaosStorageCfg {
+            latency_spike_prob: 1.0,
+            latency_spike: SimDuration::from_secs(3),
+            ..ChaosStorageCfg::default()
+        };
+        let mut plain = store();
+        let mut chaos = ChaosStore::new(store(), cfg, 7);
+        let base = plain.put("ckpt/0/payload.bin", b"state").unwrap();
+        let spiked = chaos.put("ckpt/0/payload.bin", b"state").unwrap();
+        assert_eq!(spiked, base + SimDuration::from_secs(3));
+        assert_eq!(
+            chaos.get("ckpt/0/payload.bin").unwrap().0,
+            plain.get("ckpt/0/payload.bin").unwrap().0
+        );
+    }
+
+    #[test]
+    fn fault_stream_is_deterministic_for_a_seed() {
+        let cfg = ChaosStorageCfg {
+            write_fail_prob: 0.4,
+            torn_write_prob: 0.3,
+            latency_spike_prob: 0.2,
+            ..ChaosStorageCfg::default()
+        };
+        let run = |seed: u64| {
+            let mut chaos = ChaosStore::new(store(), cfg.clone(), seed);
+            let mut outcomes = Vec::new();
+            for i in 0..32 {
+                let key = format!("ckpt/{i:010}-periodic/payload.bin");
+                outcomes.push(match chaos.put(&key, b"state") {
+                    Ok(cost) => format!("ok:{}", cost.as_millis()),
+                    Err(e) => format!(
+                        "fault:{}",
+                        e.downcast_ref::<InjectedFault>().unwrap().kind.as_str()
+                    ),
+                });
+            }
+            (outcomes, chaos.take_faults())
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11).0, run(12).0);
+    }
+}

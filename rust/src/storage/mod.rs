@@ -23,8 +23,10 @@
 pub mod nfs;
 pub mod blob;
 pub mod local;
+pub mod chaos;
 
 pub use blob::BlobStore;
+pub use chaos::{ChaosStore, FaultEvent, FaultKind, InjectedFault};
 pub use local::LocalScratch;
 pub use nfs::NfsStore;
 
@@ -99,6 +101,52 @@ pub trait SharedStore {
     fn capacity_bytes(&self) -> Option<u64>;
 
     fn meter(&self) -> IoMeter;
+}
+
+/// Mutable references delegate, so wrappers like
+/// [`chaos::ChaosStore<&mut dyn SharedStore>`] can stack over a borrowed
+/// backend without taking ownership.
+impl<T: SharedStore + ?Sized> SharedStore for &mut T {
+    fn put_sized(
+        &mut self,
+        key: &str,
+        data: &[u8],
+        charged_bytes: u64,
+    ) -> Result<SimDuration> {
+        (**self).put_sized(key, data, charged_bytes)
+    }
+
+    fn get(&mut self, key: &str) -> Result<(Vec<u8>, SimDuration)> {
+        (**self).get(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        (**self).list(prefix)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        (**self).exists(key)
+    }
+
+    fn delete(&mut self, key: &str) -> Result<bool> {
+        (**self).delete(key)
+    }
+
+    fn transfer_cost(&self, bytes: u64) -> SimDuration {
+        (**self).transfer_cost(bytes)
+    }
+
+    fn used_bytes(&self) -> u64 {
+        (**self).used_bytes()
+    }
+
+    fn capacity_bytes(&self) -> Option<u64> {
+        (**self).capacity_bytes()
+    }
+
+    fn meter(&self) -> IoMeter {
+        (**self).meter()
+    }
 }
 
 /// Validate a storage key: path-like, no escapes.

@@ -474,3 +474,86 @@ fn prop_engine_equals_legacy_on_random_scenarios() {
         check_equivalent,
     );
 }
+
+// ---------------------------------------------------------------------
+// Chaos equivalence: the multiplexed cluster engine must stay a perfect
+// superset of the single-run engine even under fault injection. Job 0's
+// chaos streams (storage faults, backoff jitter) and the cluster-global
+// fault plan (storms, IMDS outages) are derived so that a one-job
+// cluster draws exactly what the engine draws.
+// ---------------------------------------------------------------------
+
+const CHAOS_EQUIV_SCENARIO: &str = r#"
+name = "chaos-equiv"
+deadline_mins = 1800
+seed = 5
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [60, 120]
+
+[eviction]
+plan = "poisson"
+mean_mins = 45
+
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+retain = 3
+
+[checkpoint.retry]
+attempts = 4
+base_ms = 250
+max_ms = 8000
+factor = 2.0
+jitter = 0.25
+
+[chaos]
+salt = 9
+storms = 2
+window_mins = 240
+
+[chaos.storage]
+write_fail_prob = 0.25
+torn_write_prob = 0.1
+corrupt_prob = 0.05
+latency_spike_prob = 0.1
+latency_spike_ms = 1500
+
+[chaos.imds]
+outages = 1
+outage_mins = 20
+degraded_poll_factor = 4
+"#;
+
+#[test]
+fn single_job_cluster_chaos_is_byte_identical_to_engine() {
+    use spoton::config::{ClusterCfg, ScenarioConfig};
+    use spoton::metrics::RecordLevel;
+    use spoton::sim::sweep::run_digest;
+    for seed in [5u64, 6, 7] {
+        let mut cfg =
+            ScenarioConfig::from_str_toml(CHAOS_EQUIV_SCENARIO).unwrap();
+        cfg.seed = seed;
+        cfg.metrics = RecordLevel::Full;
+        let exp = Experiment { cfg: cfg.clone() };
+        let eng = run_engine(&exp);
+
+        let mut ccfg = cfg;
+        ccfg.cluster = Some(ClusterCfg {
+            jobs: vec![ccfg.name.clone()],
+            ..ClusterCfg::default()
+        });
+        let mut r = Experiment { cfg: ccfg }
+            .run_cluster_sleeper()
+            .expect("cluster run");
+        assert_eq!(r.jobs.len(), 1);
+        let clu = r.jobs.remove(0).result;
+        assert_eq!(
+            run_digest(&eng),
+            run_digest(&clu),
+            "seed {seed}: chaos single-job cluster diverged from engine"
+        );
+    }
+}

@@ -281,6 +281,138 @@ fn multi_pool_sweeps_merge_deterministically() {
 }
 
 // ---------------------------------------------------------------------
+// Chaos-enabled sweeps: injected faults are drawn from per-run salted
+// streams, so a sweep under full fault injection must merge exactly as
+// deterministically as a healthy one — across threads and processes.
+// ---------------------------------------------------------------------
+
+const CHAOS_SCENARIO: &str = r#"
+name = "chaos-determinism"
+deadline_mins = 1800
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [60, 120]
+
+[eviction]
+plan = "poisson"
+mean_mins = 45
+
+[checkpoint]
+method = "transparent"
+interval_mins = 15
+retain = 3
+
+[checkpoint.retry]
+attempts = 4
+base_ms = 250
+max_ms = 8000
+factor = 2.0
+jitter = 0.25
+
+[chaos]
+salt = 3
+storms = 2
+window_mins = 240
+
+[chaos.storage]
+write_fail_prob = 0.2
+torn_write_prob = 0.1
+corrupt_prob = 0.05
+latency_spike_prob = 0.1
+latency_spike_ms = 1500
+
+[chaos.imds]
+outages = 1
+outage_mins = 20
+degraded_poll_factor = 4
+"#;
+
+fn chaos_experiment() -> Experiment {
+    use spoton::config::ScenarioConfig;
+    Experiment {
+        cfg: ScenarioConfig::from_str_toml(CHAOS_SCENARIO).unwrap(),
+    }
+}
+
+#[test]
+fn chaos_sweeps_merge_deterministically() {
+    // Every chaos knob armed at once: flaky + torn + corrupting storage,
+    // latency spikes, eviction storms, an IMDS outage with degraded
+    // polling, and the retrying coordinator absorbing it all. The merged
+    // digests — fault events, retry delays, fallback restores included —
+    // must be byte-identical at any thread count.
+    let sweep = chaos_experiment().sweep().seed_range(0, 12);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t2 = sweep.clone().threads(2).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    assert_eq!(digests(&t1), digests(&t2), "threads=2 diverged");
+    assert_eq!(digests(&t1), digests(&t8), "threads=8 diverged");
+    // chaos genuinely fired: the two storms per run alone guarantee a
+    // non-empty ledger, and the flaky store forces real retries
+    let acc = spoton::report::faults::account_many(
+        t1.iter().map(|r| &r.result.timeline),
+    );
+    assert!(acc.total() > 0, "no chaos events in a fully-armed sweep");
+    assert!(
+        acc.count(spoton::metrics::EventKind::ChaosStorm) > 0,
+        "storms are scheduled unconditionally"
+    );
+}
+
+#[test]
+fn chaos_full_metrics_sweeps_are_thread_invariant() {
+    // Full record level keeps every injected-fault detail line (fault
+    // kinds, retry delays, storm rewrites) — all of it must merge
+    // identically too.
+    let sweep = chaos_experiment()
+        .sweep()
+        .seed_range(50, 8)
+        .record(RecordLevel::Full);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    assert_eq!(digests(&t1), digests(&t8), "full chaos sweep diverged");
+    assert!(t1.iter().all(|r| !r.result.timeline.events().is_empty()));
+}
+
+#[test]
+fn chaos_cluster_sweeps_merge_deterministically() {
+    // The multiplexed cluster engine under the same chaos plan: per-job
+    // fault streams are decorrelated by job index but drawn from the
+    // scenario seed, so the cluster digests must also be thread-
+    // invariant.
+    use spoton::config::{ArrivalCfg, ClusterCfg};
+    use spoton::sim::cluster::cluster_digest;
+    use spoton::sim::SeededClusterRun;
+    let mut exp = chaos_experiment();
+    exp.cfg.cluster = Some(
+        ClusterCfg::with_count(12).capacity(4).arrival(
+            ArrivalCfg::Poisson { mean: SimDuration::from_mins(5) },
+        ),
+    );
+    let dig = |runs: &[SeededClusterRun]| -> Vec<(u64, String)> {
+        runs.iter()
+            .map(|r| (r.seed, cluster_digest(&r.result)))
+            .collect()
+    };
+    let sweep = exp.cluster_sweep().seed_range(0, 4);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t2 = sweep.clone().threads(2).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    assert_eq!(dig(&t1), dig(&t2), "threads=2 diverged");
+    assert_eq!(dig(&t1), dig(&t8), "threads=8 diverged");
+    for r in &t1 {
+        assert_eq!(
+            r.result.jobs.len(),
+            12,
+            "every job accounted for: {}",
+            r.result.summary()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
 // Sharded (multi-process) sweeps: the `spoton sweep` runner must uphold
 // across OS processes the same contract the in-process sweep upholds
 // across threads — merged digests and summaries are a pure function of
@@ -446,4 +578,56 @@ fn interrupted_sharded_sweeps_resume_byte_identically() {
     );
     let _ = std::fs::remove_dir_all(&ref_dir);
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn chaos_sharded_sweeps_merge_byte_identically() {
+    // The multi-process path under full fault injection: worker
+    // processes draw the same per-run chaos streams as in-process
+    // threads, so the merged artifact is process-count invariant AND
+    // equal to the in-process sweep fold.
+    use spoton::config::ScenarioConfig;
+    use spoton::sim::shard::{
+        fold_run_digests, SeedStream, ShardPlan, ShardRunner,
+    };
+    use spoton::sim::sweep::run_digest;
+    let cfg = ScenarioConfig::from_str_toml(CHAOS_SCENARIO).unwrap();
+    let plan = ShardPlan::new(
+        "chaos-det",
+        SeedStream::contiguous(0, 8),
+        &["base".to_string()],
+        &cfg,
+        CHAOS_SCENARIO,
+        4,
+    )
+    .unwrap();
+    let run = |procs: usize| -> (String, Vec<u8>) {
+        let dir = shard_tmp(&format!("chaos-procs{procs}"));
+        let runner =
+            ShardRunner::new(plan.clone(), &dir, env!("CARGO_BIN_EXE_spoton"))
+                .procs(procs)
+                .threads(2);
+        runner.init(CHAOS_SCENARIO).unwrap();
+        let out = runner.run().unwrap();
+        assert!(out.dead_letter.is_empty());
+        let merged = out.merged.expect("all shards completed");
+        let bytes = std::fs::read(dir.join("MERGED.json")).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        (merged.digest, bytes)
+    };
+    let (d1, b1) = run(1);
+    let (d4, b4) = run(4);
+    assert_eq!(d1, d4, "process count leaked into the chaos digest");
+    assert_eq!(b1, b4, "process count leaked into MERGED.json");
+    let runs = chaos_experiment()
+        .sweep()
+        .seed_range(0, 8)
+        .threads(4)
+        .run()
+        .unwrap();
+    assert_eq!(
+        d1,
+        fold_run_digests(runs.iter().map(|r| run_digest(&r.result))),
+        "sharded chaos digest diverged from the in-process sweep"
+    );
 }
