@@ -1,0 +1,291 @@
+//! The committed lint baseline: `analysis/BASELINE.json`.
+//!
+//! The baseline records, per `(rule, file)`, how many findings are
+//! *tolerated* while the pre-existing debt burns down. `spoton lint`
+//! fails when a file's current count **exceeds** its baselined count
+//! (a new violation landed) and also when a baselined count exceeds the
+//! current one (the debt shrank but the file wasn't refreshed — a stale
+//! baseline would silently absorb the next regression). Counts rather
+//! than line numbers keep the file stable under unrelated edits; the
+//! ratchet only ever moves via an explicit `spoton lint --fix-baseline`.
+//!
+//! The file is sorted-key JSON written atomically via
+//! [`crate::util::atomic_write`], so it diffs cleanly across PRs and a
+//! crashed writer can never leave a torn baseline behind.
+
+use super::rules::Diag;
+use crate::json::{self, Value};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Tolerated finding counts: rule id → repo-relative path → count.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Baseline {
+    pub counts: BTreeMap<String, BTreeMap<String, u64>>,
+}
+
+/// One `(rule, path)` group whose current findings exceed the baseline.
+#[derive(Debug, Clone)]
+pub struct NewGroup {
+    pub rule: String,
+    pub path: String,
+    pub baselined: u64,
+    pub current: u64,
+    /// Every current finding in the group (the new one is among them —
+    /// line-level attribution inside a group is not tracked by counts).
+    pub diags: Vec<Diag>,
+}
+
+/// One baseline entry that no longer matches enough findings.
+#[derive(Debug, Clone)]
+pub struct StaleEntry {
+    pub rule: String,
+    pub path: String,
+    pub baselined: u64,
+    pub current: u64,
+}
+
+/// Result of comparing current findings against the baseline.
+#[derive(Debug, Default)]
+pub struct Comparison {
+    pub new_groups: Vec<NewGroup>,
+    pub stale: Vec<StaleEntry>,
+}
+
+impl Comparison {
+    pub fn clean(&self) -> bool {
+        self.new_groups.is_empty() && self.stale.is_empty()
+    }
+}
+
+impl Baseline {
+    /// Load from `path`; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Baseline::default());
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading baseline {}", path.display())
+                });
+            }
+        };
+        let v = json::parse(&text).with_context(|| {
+            format!("parsing baseline {}", path.display())
+        })?;
+        let version = v.req_u64("version")?;
+        if version != 1 {
+            bail!("unsupported baseline version {version}");
+        }
+        let mut counts = BTreeMap::new();
+        if let Some(rules) = v.get("rules").and_then(Value::as_object) {
+            for (rule, files) in rules {
+                let Some(files) = files.as_object() else {
+                    bail!("baseline rule '{rule}' is not an object");
+                };
+                let mut per_file = BTreeMap::new();
+                for (file, count) in files {
+                    let count = count.as_u64().with_context(|| {
+                        format!(
+                            "baseline count for {rule} / {file} is not a \
+                             non-negative integer"
+                        )
+                    })?;
+                    per_file.insert(file.clone(), count);
+                }
+                counts.insert(rule.clone(), per_file);
+            }
+        }
+        Ok(Baseline { counts })
+    }
+
+    /// Counts of `diags` grouped by `(rule, path)` — what
+    /// `--fix-baseline` writes.
+    pub fn from_diags(diags: &[Diag]) -> Baseline {
+        let mut counts: BTreeMap<String, BTreeMap<String, u64>> =
+            BTreeMap::new();
+        for d in diags {
+            *counts
+                .entry(d.rule.as_str().to_string())
+                .or_default()
+                .entry(d.path.clone())
+                .or_default() += 1;
+        }
+        Baseline { counts }
+    }
+
+    /// Serialize as sorted-key JSON.
+    pub fn to_json(&self) -> Value {
+        let mut rules = Value::obj();
+        for (rule, files) in &self.counts {
+            let mut per_file = Value::obj();
+            for (file, count) in files {
+                per_file.set(file, *count);
+            }
+            rules.set(rule, per_file);
+        }
+        let mut root = Value::obj();
+        root.set("version", 1u64);
+        root.set("rules", rules);
+        root
+    }
+
+    /// Write atomically (rename over the target) with a trailing newline.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut body = json::to_string_pretty(&self.to_json());
+        body.push('\n');
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating {}", parent.display())
+                })?;
+            }
+        }
+        crate::util::atomic_write(path, body.as_bytes()).with_context(
+            || format!("writing baseline {}", path.display()),
+        )
+    }
+
+    /// Compare current findings against the baseline: groups over budget
+    /// are new violations, baseline entries over the current count are
+    /// stale.
+    pub fn compare(&self, diags: &[Diag]) -> Comparison {
+        let current = Baseline::from_diags(diags);
+        let mut cmp = Comparison::default();
+        for (rule, files) in &current.counts {
+            for (file, &count) in files {
+                let baselined = self
+                    .counts
+                    .get(rule)
+                    .and_then(|f| f.get(file))
+                    .copied()
+                    .unwrap_or(0);
+                if count > baselined {
+                    cmp.new_groups.push(NewGroup {
+                        rule: rule.clone(),
+                        path: file.clone(),
+                        baselined,
+                        current: count,
+                        diags: diags
+                            .iter()
+                            .filter(|d| {
+                                d.rule.as_str() == rule && &d.path == file
+                            })
+                            .cloned()
+                            .collect(),
+                    });
+                }
+            }
+        }
+        for (rule, files) in &self.counts {
+            for (file, &baselined) in files {
+                let count = current
+                    .counts
+                    .get(rule)
+                    .and_then(|f| f.get(file))
+                    .copied()
+                    .unwrap_or(0);
+                if baselined > count {
+                    cmp.stale.push(StaleEntry {
+                        rule: rule.clone(),
+                        path: file.clone(),
+                        baselined,
+                        current: count,
+                    });
+                }
+            }
+        }
+        cmp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::RuleId;
+
+    fn diag(rule: RuleId, path: &str, line: u32) -> Diag {
+        Diag {
+            rule,
+            path: path.to_string(),
+            line,
+            message: "m".to_string(),
+        }
+    }
+
+    #[test]
+    fn baseline_suppresses_old_but_not_new() {
+        let old = vec![
+            diag(RuleId::D3, "rust/src/a.rs", 10),
+            diag(RuleId::D3, "rust/src/a.rs", 20),
+        ];
+        let base = Baseline::from_diags(&old);
+        // same debt: clean
+        assert!(base.compare(&old).clean());
+        // one NEW finding in the same file: flagged
+        let mut more = old.clone();
+        more.push(diag(RuleId::D3, "rust/src/a.rs", 30));
+        let cmp = base.compare(&more);
+        assert_eq!(cmp.new_groups.len(), 1);
+        assert_eq!(cmp.new_groups[0].baselined, 2);
+        assert_eq!(cmp.new_groups[0].current, 3);
+        assert!(cmp.stale.is_empty());
+        // a finding in a different file: flagged independently
+        let cmp = base
+            .compare(&[old[0].clone(), old[1].clone(),
+                       diag(RuleId::D3, "rust/src/b.rs", 1)]);
+        assert_eq!(cmp.new_groups.len(), 1);
+        assert_eq!(cmp.new_groups[0].path, "rust/src/b.rs");
+    }
+
+    #[test]
+    fn shrunk_debt_makes_baseline_stale() {
+        let old = vec![
+            diag(RuleId::D3, "rust/src/a.rs", 10),
+            diag(RuleId::D3, "rust/src/a.rs", 20),
+        ];
+        let base = Baseline::from_diags(&old);
+        let cmp = base.compare(&old[..1]);
+        assert!(cmp.new_groups.is_empty());
+        assert_eq!(cmp.stale.len(), 1);
+        assert_eq!(cmp.stale[0].baselined, 2);
+        assert_eq!(cmp.stale[0].current, 1);
+    }
+
+    #[test]
+    fn save_load_round_trip_is_stable() {
+        let diags = vec![
+            diag(RuleId::D3, "rust/src/a.rs", 1),
+            diag(RuleId::D2, "rust/src/b.rs", 2),
+            diag(RuleId::D3, "rust/src/b.rs", 3),
+        ];
+        let base = Baseline::from_diags(&diags);
+        let dir = std::env::temp_dir().join(format!(
+            "spoton-baseline-{}-{}",
+            std::process::id(),
+            crate::util::next_seq()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BASELINE.json");
+        base.save(&path).unwrap();
+        let loaded = Baseline::load(&path).unwrap();
+        assert_eq!(loaded, base);
+        // byte-stable: saving the loaded baseline reproduces the file
+        let first = std::fs::read(&path).unwrap();
+        loaded.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), first);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_file_is_empty_baseline() {
+        let path = std::path::Path::new(
+            "/nonexistent/spoton-test/BASELINE.json",
+        );
+        let base = Baseline::load(path).unwrap();
+        assert!(base.counts.is_empty());
+    }
+}

@@ -1,0 +1,504 @@
+//! Token-level Rust scanner backing the `spoton lint` rules.
+//!
+//! This is deliberately *not* a real Rust parser: the determinism rules in
+//! [`super::rules`] only need identifier/punctuation sequences with line
+//! numbers, with comments and literals out of the way so `"HashMap"` in a
+//! string or `.unwrap()` in a doc example never counts. The scanner
+//! handles the lexical shapes that actually occur in this repo:
+//!
+//! * line comments (`//`, `///`, `//!`) and **nested** block comments —
+//!   captured as [`Lexed::comments`] so allow markers can be parsed;
+//! * string literals with escapes, byte strings (`b"…"`), raw strings
+//!   (`r"…"`, `r#"…"#`, `br#"…"#`) and char/byte-char literals, all
+//!   reduced to an opaque [`TokKind::Lit`];
+//! * lifetimes (`'a`) disambiguated from char literals;
+//! * number literals (including `1_000`, `0xff`, `1.5e3` and suffixed
+//!   forms) reduced to [`TokKind::Lit`] without swallowing `..` ranges.
+//!
+//! On top of the token stream, [`test_regions`] finds `#[cfg(test)]`-style
+//! modules (any `cfg` attribute whose argument list mentions `test`,
+//! including `#[cfg(all(test, feature = "pjrt"))]`) by brace matching, so
+//! rules that exempt test code can ask "is this line inside a test mod?".
+
+/// One scanned token.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword (`HashMap`, `unwrap`, `mod`, …).
+    Ident(String),
+    /// Single punctuation character (`.`, `:`, `{`, …).
+    Punct(char),
+    /// Any literal (string, raw string, char, number) — contents opaque.
+    Lit,
+}
+
+/// A token with the 1-based source line it starts on.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+}
+
+/// Scanner output: code tokens plus the comment text per line (so the
+/// `spoton-lint` allow markers can be parsed out of the comments).
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// `(line, text)` for each comment, line = where the comment starts.
+    pub comments: Vec<(u32, String)>,
+}
+
+/// Scan `src` into tokens and comments.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Lexed::default();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // line comment
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            out.comments.push((line, chars[start..j].iter().collect()));
+            i = j;
+            continue;
+        }
+        // block comment (Rust block comments nest)
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            let mut text = String::new();
+            while j < n && depth > 0 {
+                if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                    continue;
+                }
+                if chars[j] == '\n' {
+                    line += 1;
+                }
+                text.push(chars[j]);
+                j += 1;
+            }
+            out.comments.push((start_line, text));
+            i = j;
+            continue;
+        }
+        // string literal
+        if c == '"' {
+            let start_line = line;
+            i = skip_string(&chars, i, &mut line);
+            out.toks.push(Tok { line: start_line, kind: TokKind::Lit });
+            continue;
+        }
+        // char literal or lifetime
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // escaped char literal: '\n', '\'', '\u{…}'
+                let mut j = i + 3; // skip quote, backslash, escaped char
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                out.toks.push(Tok { line, kind: TokKind::Lit });
+                i = (j + 1).min(n);
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                // plain char literal 'x'
+                out.toks.push(Tok { line, kind: TokKind::Lit });
+                i += 3;
+                continue;
+            }
+            // lifetime: consume the quote, let the ident lex normally
+            i += 1;
+            continue;
+        }
+        // identifier / keyword / raw-string prefix
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            let word: String = chars[start..j].iter().collect();
+            if (word == "r" || word == "br")
+                && j < n
+                && (chars[j] == '"' || chars[j] == '#')
+            {
+                if let Some(end) = skip_raw_string(&chars, j, &mut line) {
+                    out.toks.push(Tok { line, kind: TokKind::Lit });
+                    i = end;
+                    continue;
+                }
+                // not a raw string (raw identifier like r#match):
+                // fall through and emit the word as an ident
+            }
+            if word == "b" && j < n && chars[j] == '"' {
+                let start_line = line;
+                i = skip_string(&chars, j, &mut line);
+                out.toks.push(Tok { line: start_line, kind: TokKind::Lit });
+                continue;
+            }
+            if word == "b" && j < n && chars[j] == '\'' {
+                // byte-char literal b'x' / b'\n'
+                let mut k = j + 1;
+                if k < n && chars[k] == '\\' {
+                    k += 2;
+                }
+                while k < n && chars[k] != '\'' {
+                    k += 1;
+                }
+                out.toks.push(Tok { line, kind: TokKind::Lit });
+                i = (k + 1).min(n);
+                continue;
+            }
+            out.toks.push(Tok { line, kind: TokKind::Ident(word) });
+            i = j;
+            continue;
+        }
+        // number literal (loose: digits, suffixes, hex, underscores)
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            // fractional part — but never swallow `..` range dots
+            if j + 1 < n && chars[j] == '.' && chars[j + 1].is_ascii_digit()
+            {
+                j += 1;
+                while j < n && (chars[j].is_alphanumeric() || chars[j] == '_')
+                {
+                    j += 1;
+                }
+            }
+            out.toks.push(Tok { line, kind: TokKind::Lit });
+            i = j;
+            continue;
+        }
+        out.toks.push(Tok { line, kind: TokKind::Punct(c) });
+        i += 1;
+    }
+    out
+}
+
+/// Skip a `"…"` literal starting at the opening quote; returns the index
+/// just past the closing quote. Handles `\"` / `\\` escapes and counts
+/// newlines in multi-line strings — including the newline swallowed by a
+/// backslash line-continuation, which still advances the source line.
+fn skip_string(chars: &[char], open: usize, line: &mut u32) -> usize {
+    let n = chars.len();
+    let mut j = open + 1;
+    while j < n {
+        match chars[j] {
+            '\\' => {
+                if j + 1 < n && chars[j + 1] == '\n' {
+                    *line += 1;
+                }
+                j += 2;
+            }
+            '"' => return j + 1,
+            c => {
+                if c == '\n' {
+                    *line += 1;
+                }
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Skip a raw string whose `#`/`"` run starts at `j` (the prefix `r`/`br`
+/// was already consumed). Returns `None` when this is not actually a raw
+/// string (e.g. a raw identifier `r#match`).
+fn skip_raw_string(
+    chars: &[char],
+    mut j: usize,
+    line: &mut u32,
+) -> Option<usize> {
+    let n = chars.len();
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        return None;
+    }
+    j += 1;
+    while j < n {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' {
+            let mut k = j + 1;
+            let mut h = 0usize;
+            while k < n && h < hashes && chars[k] == '#' {
+                h += 1;
+                k += 1;
+            }
+            if h == hashes {
+                return Some(k);
+            }
+        }
+        j += 1;
+    }
+    Some(n)
+}
+
+/// Inclusive `(start_line, end_line)` ranges of `#[cfg(test)]`-style
+/// modules and functions: any `#[cfg(…)]` attribute whose argument list
+/// contains the identifier `test`, applied (possibly through further
+/// attributes and a `pub` qualifier) to a `mod` or `fn` with a brace
+/// body. Bodyless items (`mod tests;`) produce no region.
+pub fn test_regions(toks: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    let mut pending = false;
+    while i < n {
+        // attribute group: # [ … ]
+        if matches!(toks[i].kind, TokKind::Punct('#'))
+            && i + 1 < n
+            && matches!(toks[i + 1].kind, TokKind::Punct('['))
+        {
+            let mut depth = 0usize;
+            let mut j = i + 1;
+            let mut has_cfg = false;
+            let mut has_test = false;
+            while j < n {
+                match &toks[j].kind {
+                    TokKind::Punct('[') => depth += 1,
+                    TokKind::Punct(']') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    TokKind::Ident(w) if w == "cfg" => has_cfg = true,
+                    TokKind::Ident(w) if w == "test" => has_test = true,
+                    _ => {}
+                }
+                j += 1;
+            }
+            if has_cfg && has_test {
+                pending = true;
+            }
+            i = j + 1;
+            continue;
+        }
+        if pending {
+            match &toks[i].kind {
+                TokKind::Ident(w) if w == "pub" => {
+                    // `pub` (incl. pub(crate): the parens lex as puncts
+                    // and fall through harmlessly below)
+                    i += 1;
+                    continue;
+                }
+                TokKind::Ident(w) if w == "mod" || w == "fn" => {
+                    let start_line = toks[i].line;
+                    let mut j = i;
+                    while j < n {
+                        match toks[j].kind {
+                            TokKind::Punct('{') => break,
+                            TokKind::Punct(';') => break,
+                            _ => j += 1,
+                        }
+                    }
+                    if j >= n || matches!(toks[j].kind, TokKind::Punct(';'))
+                    {
+                        pending = false;
+                        i = j + 1;
+                        continue;
+                    }
+                    let mut depth = 0usize;
+                    while j < n {
+                        match toks[j].kind {
+                            TokKind::Punct('{') => depth += 1,
+                            TokKind::Punct('}') => {
+                                depth -= 1;
+                                if depth == 0 {
+                                    break;
+                                }
+                            }
+                            _ => {}
+                        }
+                        j += 1;
+                    }
+                    let end_line = if j < n {
+                        toks[j].line
+                    } else {
+                        toks.last().map_or(start_line, |t| t.line)
+                    };
+                    out.push((start_line, end_line));
+                    pending = false;
+                    i = j + 1;
+                    continue;
+                }
+                TokKind::Punct('(' | ')') => {
+                    // pub(crate) / pub(super) qualifier parts
+                    i += 1;
+                    continue;
+                }
+                TokKind::Ident(w) if w == "crate" || w == "super" => {
+                    i += 1;
+                    continue;
+                }
+                _ => {
+                    // the cfg(test) attribute guarded something else
+                    // (a use item, a const, …) — not a region
+                    pending = false;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                TokKind::Ident(w) => Some(w),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_are_opaque() {
+        let src = r##"
+// HashMap in a comment
+/* block HashMap /* nested */ still comment */
+let a = "HashMap in a string";
+let b = r#"raw HashMap"#;
+let c = 'x';
+let d: &'static str = "s";
+real_ident();
+"##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|w| w == "HashMap"), "{ids:?}");
+        assert!(ids.iter().any(|w| w == "real_ident"));
+        assert!(ids.iter().any(|w| w == "static"), "lifetime ident kept");
+    }
+
+    #[test]
+    fn comment_text_and_lines_captured() {
+        let src = "let x = 1;\n// spoton-lint: allow(D3, reason = \"ok\")\nlet y = 2;\n";
+        let lexed = lex(src);
+        assert_eq!(lexed.comments.len(), 1);
+        assert_eq!(lexed.comments[0].0, 2);
+        assert!(lexed.comments[0].1.contains("spoton-lint"));
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let s = \"a\nb\nc\";\nafter();\n";
+        let lexed = lex(src);
+        let after = lexed
+            .toks
+            .iter()
+            .find(|t| matches!(&t.kind, TokKind::Ident(w) if w == "after"))
+            .unwrap();
+        assert_eq!(after.line, 4);
+    }
+
+    #[test]
+    fn line_numbers_survive_backslash_continuations() {
+        // a `\` line-continuation swallows the newline from the string's
+        // *value* but not from the source line count
+        let src = "let s = \"first \\\n    second\";\nafter();\n";
+        let lexed = lex(src);
+        let after = lexed
+            .toks
+            .iter()
+            .find(|t| matches!(&t.kind, TokKind::Ident(w) if w == "after"))
+            .unwrap();
+        assert_eq!(after.line, 3);
+    }
+
+    #[test]
+    fn byte_and_escaped_char_literals() {
+        let src = "self.expect(b'{')?; let c = '\\''; let d = b\"bytes\";";
+        let ids = idents(src);
+        assert_eq!(
+            ids,
+            vec!["self".to_string(), "expect".into(), "let".into(),
+                 "c".into(), "let".into(), "d".into()]
+        );
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = r#"
+fn lib_code() { x.unwrap(); }
+
+#[cfg(test)]
+mod tests {
+    fn helper() { y.unwrap(); }
+}
+
+fn more_lib() {}
+"#;
+        let lexed = lex(src);
+        let regions = test_regions(&lexed.toks);
+        assert_eq!(regions.len(), 1);
+        let (s, e) = regions[0];
+        assert!(s >= 4 && s <= 5, "start {s}");
+        assert!(e >= 7, "end {e}");
+        // lib lines are outside
+        assert!(!(s..=e).contains(&2));
+        assert!(!(s..=e).contains(&9));
+    }
+
+    #[test]
+    fn cfg_all_test_feature_counts_as_test_region() {
+        let src = "#[cfg(all(test, feature = \"pjrt\"))]\nmod tests {\n    fn f() {}\n}\n";
+        let lexed = lex(src);
+        assert_eq!(test_regions(&lexed.toks).len(), 1);
+    }
+
+    #[test]
+    fn cfg_feature_only_is_not_a_test_region() {
+        let src = "#[cfg(feature = \"pjrt\")]\nmod real {\n    fn f() {}\n}\n";
+        let lexed = lex(src);
+        assert!(test_regions(&lexed.toks).is_empty());
+    }
+
+    #[test]
+    fn bodyless_mod_is_no_region() {
+        let src = "#[cfg(test)]\nmod tests;\nfn lib() {}\n";
+        let lexed = lex(src);
+        assert!(test_regions(&lexed.toks).is_empty());
+    }
+}

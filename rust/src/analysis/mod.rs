@@ -1,0 +1,352 @@
+//! `spoton lint` — in-repo determinism & robustness static analysis.
+//!
+//! Every result this reproduction ships — merge-by-seed sweeps, sharded
+//! resumable runs, chaos digests — rests on one contract:
+//!
+//! > **Byte-identical output at any thread, process or shard count.**
+//!
+//! The sweeps and shard merges assert that contract *dynamically*, but a
+//! dynamic test only catches a hazard once a seed happens to hit it. This
+//! module enforces the contract *statically*: a token-level Rust scanner
+//! (in the spirit of the in-repo [`crate::util::hash`] / [`crate::json`]
+//! utilities — no new dependencies) walks `rust/src`, `rust/benches`,
+//! `rust/tests` and `examples/` and flags the constructions that have
+//! historically broken reproducibility or crashed long-running restores.
+//!
+//! ## Rules
+//!
+//! | id | what it flags | why |
+//! |----|---------------|-----|
+//! | `D1` | `HashMap`/`HashSet` in digest/report/billing paths | unordered iteration order leaks into output bytes — e.g. summing `f64` pool costs from a `HashMap` makes the billing digest depend on hasher seeds. Use `BTreeMap`/`BTreeSet` or sort first. Applies even in test mods: a test digesting hash order is exactly the flake this stops. |
+//! | `D2` | `Instant::now`, `SystemTime`, `thread::current`, `env::var*`, `env::args*`, OS RNG (`OsRng`/`getrandom`/`from_entropy`), `available_parallelism` outside the allowlist | wall-clock and environment reads make two runs of the same seed diverge. Simulated time ([`crate::simclock`]) and seeded [`crate::util::prng`] only; the allowlist covers the genuinely real-world modules (realtime coordinator, bench harness, IMDS HTTP server, shard wall-clock stamps, the CLI entry point). |
+//! | `D3` | `.unwrap()` / `.expect(…)` in library code | a panic in the restore path turns a recoverable missing-manifest into a dead coordinator. Propagate `anyhow::Result` with context naming the generation/key involved. Tests, benches and examples are exempt. |
+//! | `D4` | truncating `as u32`-and-narrower casts in seed/billing/cell-index math | silent truncation of a seed or cell index corrupts the sweep partition without failing. Use `try_from` so overflow fails loudly. |
+//! | `D5` | `Cargo.toml` dependency creep | the crate is anyhow+log only with the optional `pjrt`-gated `xla` binding; anything else must be vendored in-repo. Dev/build dependency sections are creep by definition. |
+//! | `A1` | malformed `spoton-lint` allow marker | an allow without a reason (or with an unknown rule id) is a silent hole; it is itself a finding. |
+//!
+//! ## Escape hatch
+//!
+//! A justified violation carries an inline marker **with a mandatory
+//! reason**:
+//!
+//! ```text
+//! let seq = GUARD.lock().unwrap(); // spoton-lint: allow(D3, reason = "mutex poisoning is unrecoverable")
+//! ```
+//!
+//! A marker trailing code covers its own line only; a marker on a line of
+//! its own covers the next line only — an allow can never silently leak
+//! onto code it wasn't written for.
+//!
+//! ## Baseline ratchet
+//!
+//! Pre-existing debt lives in the committed `analysis/BASELINE.json`
+//! ([`baseline::Baseline`]): per `(rule, file)` tolerated counts, written
+//! atomically and with sorted keys so it diffs cleanly. `spoton lint`
+//! fails on any count *above* baseline (new violation) and on any count
+//! *below* it (stale entry — refresh with `--fix-baseline` so the ratchet
+//! only moves deliberately). At HEAD the baseline is empty: every finding
+//! has either been fixed or carries a reasoned allow marker.
+//!
+//! ## Running the linter
+//!
+//! ```text
+//! spoton lint                  # scan the repo, exit 1 on non-baseline findings
+//! spoton lint --json           # deterministic sorted-key JSON (CI artifacts)
+//! spoton lint --fix-baseline   # rewrite analysis/BASELINE.json to current counts
+//! spoton lint --root ../repo   # lint a checkout other than cwd
+//! ```
+//!
+//! CI runs `spoton lint` in the `lint-smoke` job next to the clippy gate;
+//! the stale-entry check doubles as baseline freshness, so the file can't
+//! rot.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+pub use baseline::{Baseline, Comparison};
+pub use rules::{check_cargo_toml, check_source, Diag, RuleId};
+
+use crate::json::Value;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Repo-relative path the baseline lives at.
+pub const BASELINE_PATH: &str = "analysis/BASELINE.json";
+
+/// Directory roots scanned for `.rs` files (repo-relative).
+pub const SCAN_ROOTS: [&str; 4] =
+    ["rust/src", "rust/benches", "rust/tests", "examples"];
+
+/// Manifests checked by the D5 dependency-creep guard (repo-relative).
+pub const MANIFESTS: [&str; 2] = ["Cargo.toml", "rust/Cargo.toml"];
+
+/// Path scoping for the rules. All entries are repo-relative prefixes
+/// with `/` separators; a file is in scope when its path starts with an
+/// entry. The fixture tests re-scope rules onto synthetic files by
+/// pushing paths here.
+#[derive(Clone, Debug)]
+pub struct LintConfig {
+    /// D1 scope: paths whose iteration order reaches digests, reports or
+    /// billing totals.
+    pub ordered_paths: Vec<String>,
+    /// D2 allowlist: modules that legitimately touch wall-clock or
+    /// environment.
+    pub wallclock_allow: Vec<String>,
+    /// D4 scope: seed / billing / cell-index arithmetic.
+    pub cast_paths: Vec<String>,
+    /// Paths exempt from the panic/wall-clock rules (tests, benches,
+    /// examples).
+    pub exempt_targets: Vec<String>,
+    /// Paths not scanned at all (deliberately-violating lint fixtures).
+    pub skip: Vec<String>,
+    /// D5: the full allowed `[dependencies]` set (plus the optional
+    /// `xla` binding, special-cased).
+    pub allowed_deps: Vec<String>,
+}
+
+impl LintConfig {
+    /// The scope this repository is linted with.
+    pub fn repo_default() -> LintConfig {
+        let v = |xs: &[&str]| -> Vec<String> {
+            xs.iter().map(|s| s.to_string()).collect()
+        };
+        LintConfig {
+            ordered_paths: v(&[
+                "rust/src/report/",
+                "rust/src/json/",
+                "rust/src/metrics/",
+                "rust/src/cloud/billing.rs",
+                "rust/src/cloud/pricing.rs",
+                "rust/src/checkpoint/manifest.rs",
+                "rust/src/sim/sweep.rs",
+                "rust/src/sim/shard.rs",
+                "rust/src/sim/cluster.rs",
+                "rust/src/sim/chaos.rs",
+                "rust/src/util/bench.rs",
+            ]),
+            wallclock_allow: v(&[
+                "rust/src/coordinator/realtime.rs",
+                "rust/src/util/bench.rs",
+                "rust/src/cloud/imds_http.rs",
+                "rust/src/sim/shard.rs",
+                "rust/src/runtime/",
+                "rust/src/main.rs",
+            ]),
+            cast_paths: v(&[
+                "rust/src/util/prng.rs",
+                "rust/src/cloud/billing.rs",
+                "rust/src/cloud/pricing.rs",
+                "rust/src/sim/shard.rs",
+            ]),
+            exempt_targets: v(&[
+                "rust/tests/",
+                "rust/benches/",
+                "examples/",
+            ]),
+            skip: v(&["rust/tests/lint_fixtures/"]),
+            allowed_deps: v(&["anyhow", "log"]),
+        }
+    }
+}
+
+/// Deterministic (name-sorted) recursive `.rs` walk under `dir`,
+/// accumulating `(repo_relative, absolute)` pairs.
+fn walk(
+    dir: &Path,
+    rel: &str,
+    cfg: &LintConfig,
+    out: &mut Vec<(String, PathBuf)>,
+) -> Result<()> {
+    let mut entries: Vec<(String, PathBuf, bool)> = Vec::new();
+    let iter = std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?;
+    for entry in iter {
+        let entry = entry
+            .with_context(|| format!("listing {}", dir.display()))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let is_dir = entry
+            .file_type()
+            .with_context(|| format!("stat {}", entry.path().display()))?
+            .is_dir();
+        entries.push((name, entry.path(), is_dir));
+    }
+    entries.sort();
+    for (name, path, is_dir) in entries {
+        let rel_child = format!("{rel}/{name}");
+        if cfg.skip.iter().any(|s| {
+            rel_child.starts_with(s.as_str())
+                || s.trim_end_matches('/') == rel_child
+        }) {
+            continue;
+        }
+        if is_dir {
+            walk(&path, &rel_child, cfg, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((rel_child, path));
+        }
+    }
+    Ok(())
+}
+
+/// Scan the repository at `root` and return every finding plus the
+/// number of files scanned. Findings are sorted by `(path, line, rule)`
+/// so output is byte-stable regardless of filesystem order.
+pub fn collect_diags(
+    root: &Path,
+    cfg: &LintConfig,
+) -> Result<(Vec<Diag>, usize)> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    for scan_root in SCAN_ROOTS {
+        let dir = root.join(scan_root);
+        if dir.is_dir() {
+            walk(&dir, scan_root, cfg, &mut files)?;
+        }
+    }
+    let mut diags: Vec<Diag> = Vec::new();
+    let mut scanned = 0usize;
+    for (rel, path) in &files {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        diags.extend(check_source(rel, &src, cfg));
+        scanned += 1;
+    }
+    for manifest in MANIFESTS {
+        let path = root.join(manifest);
+        if path.is_file() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            diags.extend(check_cargo_toml(manifest, &text, cfg));
+            scanned += 1;
+        }
+    }
+    diags.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule, a.message.as_str()).cmp(&(
+            b.path.as_str(),
+            b.line,
+            b.rule,
+            b.message.as_str(),
+        ))
+    });
+    Ok((diags, scanned))
+}
+
+/// Result of one full lint pass: the findings, the baseline verdict and
+/// scan stats.
+pub struct LintReport {
+    pub diags: Vec<Diag>,
+    pub comparison: Comparison,
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// True when there is nothing new and nothing stale — the exit-0
+    /// condition.
+    pub fn clean(&self) -> bool {
+        self.comparison.clean()
+    }
+
+    /// Human-readable report (deterministic ordering).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for g in &self.comparison.new_groups {
+            out.push_str(&format!(
+                "NEW {} findings in {} (baselined {}, current {}):\n",
+                g.rule, g.path, g.baselined, g.current
+            ));
+            for d in &g.diags {
+                out.push_str(&format!("  {d}\n"));
+            }
+        }
+        for s in &self.comparison.stale {
+            out.push_str(&format!(
+                "STALE baseline entry {} / {} (baselined {}, current {}) \
+                 — run `spoton lint --fix-baseline`\n",
+                s.rule, s.path, s.baselined, s.current
+            ));
+        }
+        if self.clean() {
+            out.push_str(&format!(
+                "spoton lint: clean ({} files scanned, {} baselined \
+                 findings)\n",
+                self.files_scanned,
+                self.diags.len()
+            ));
+        } else {
+            out.push_str(&format!(
+                "spoton lint: FAILED ({} new finding group(s), {} stale \
+                 baseline entr(y/ies); {} files scanned)\n",
+                self.comparison.new_groups.len(),
+                self.comparison.stale.len(),
+                self.files_scanned,
+            ));
+        }
+        out
+    }
+
+    /// Deterministic sorted-key JSON for CI artifacts — same idiom as
+    /// `util::bench` reports.
+    pub fn to_json(&self) -> Value {
+        let diag_json = |d: &Diag| {
+            let mut o = Value::obj();
+            o.set("file", d.path.as_str());
+            o.set("line", u64::from(d.line));
+            o.set("message", d.message.as_str());
+            o.set("rule", d.rule.as_str());
+            o
+        };
+        let mut new_groups: Vec<Value> = Vec::new();
+        for g in &self.comparison.new_groups {
+            let findings: Vec<Value> =
+                g.diags.iter().map(diag_json).collect();
+            let mut o = Value::obj();
+            o.set("baselined", g.baselined);
+            o.set("current", g.current);
+            o.set("file", g.path.as_str());
+            o.set("findings", findings);
+            o.set("rule", g.rule.as_str());
+            new_groups.push(o);
+        }
+        let mut stale: Vec<Value> = Vec::new();
+        for s in &self.comparison.stale {
+            let mut o = Value::obj();
+            o.set("baselined", s.baselined);
+            o.set("current", s.current);
+            o.set("file", s.path.as_str());
+            o.set("rule", s.rule.as_str());
+            stale.push(o);
+        }
+        let findings: Vec<Value> =
+            self.diags.iter().map(diag_json).collect();
+        let mut root = Value::obj();
+        root.set("clean", self.clean());
+        root.set("counts", Baseline::from_diags(&self.diags).to_json());
+        root.set("files_scanned", self.files_scanned);
+        root.set("findings", findings);
+        root.set("new", new_groups);
+        root.set("stale", stale);
+        root.set("version", 1u64);
+        root
+    }
+}
+
+/// Full lint pass over the repository at `root`: scan, load the
+/// baseline, compare.
+pub fn lint_repo(root: &Path, cfg: &LintConfig) -> Result<LintReport> {
+    let (diags, files_scanned) = collect_diags(root, cfg)?;
+    let baseline = Baseline::load(&root.join(BASELINE_PATH))?;
+    let comparison = baseline.compare(&diags);
+    Ok(LintReport { diags, comparison, files_scanned })
+}
+
+/// Rewrite the baseline at `root` to the current findings
+/// (`--fix-baseline`). Returns the number of `(rule, file)` groups
+/// written.
+pub fn fix_baseline(root: &Path, cfg: &LintConfig) -> Result<usize> {
+    let (diags, _) = collect_diags(root, cfg)?;
+    let base = Baseline::from_diags(&diags);
+    let groups: usize =
+        base.counts.values().map(|files| files.len()).sum();
+    base.save(&root.join(BASELINE_PATH))?;
+    Ok(groups)
+}

@@ -1,0 +1,599 @@
+//! The determinism & robustness rules enforced by `spoton lint`.
+//!
+//! Each rule carries a machine-readable id (`D1`–`D5`, plus `A1` for
+//! malformed allow markers) and produces `file:line` diagnostics. See the
+//! [`super`] module docs for the full contract and rationale. Rules are
+//! scoped by repo-relative path prefixes carried in
+//! [`super::LintConfig`], so the fixture tests can re-scope them onto
+//! synthetic files.
+
+use super::lexer::{lex, test_regions, TokKind};
+use super::LintConfig;
+
+/// Machine-readable rule identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// Unordered-container (`HashMap`/`HashSet`) use in a digest, report
+    /// or billing path — iteration order would leak into output bytes.
+    D1,
+    /// Wall-clock / environment read (`Instant::now`, `SystemTime`,
+    /// `thread::current`, `env::var`, OS RNG, `available_parallelism`)
+    /// outside the allowlisted real-world modules.
+    D2,
+    /// `.unwrap()` / `.expect(…)` in library code (tests, benches and
+    /// examples exempt).
+    D3,
+    /// Truncating `as` cast (`as u32` and narrower) in seed, billing or
+    /// cell-index arithmetic.
+    D4,
+    /// Dependency creep in `Cargo.toml` (anyhow + log only; `pjrt`
+    /// feature gate must stay).
+    D5,
+    /// Malformed `spoton-lint` allow marker (missing or empty reason,
+    /// unknown rule id).
+    A1,
+}
+
+impl RuleId {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::D1 => "D1",
+            RuleId::D2 => "D2",
+            RuleId::D3 => "D3",
+            RuleId::D4 => "D4",
+            RuleId::D5 => "D5",
+            RuleId::A1 => "A1",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        match s {
+            "D1" => Some(RuleId::D1),
+            "D2" => Some(RuleId::D2),
+            "D3" => Some(RuleId::D3),
+            "D4" => Some(RuleId::D4),
+            "D5" => Some(RuleId::D5),
+            "A1" => Some(RuleId::A1),
+            _ => None,
+        }
+    }
+
+    /// All rule ids, for help/summary output.
+    pub const ALL: [RuleId; 6] = [
+        RuleId::D1,
+        RuleId::D2,
+        RuleId::D3,
+        RuleId::D4,
+        RuleId::D5,
+        RuleId::A1,
+    ];
+
+    /// One-line description, for `render` summaries.
+    pub fn summary(self) -> &'static str {
+        match self {
+            RuleId::D1 => {
+                "unordered container in digest/report/billing path"
+            }
+            RuleId::D2 => "wall-clock/environment read outside allowlist",
+            RuleId::D3 => "panicking unwrap/expect in library path",
+            RuleId::D4 => "truncating cast in seed/billing/index math",
+            RuleId::D5 => "Cargo.toml dependency creep",
+            RuleId::A1 => "malformed spoton-lint allow marker",
+        }
+    }
+}
+
+impl std::fmt::Display for RuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding: rule + repo-relative path + 1-based line + message.
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub rule: RuleId,
+    pub path: String,
+    pub line: u32,
+    pub message: String,
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: {} {}",
+            self.path, self.line, self.rule, self.message
+        )
+    }
+}
+
+/// A parsed `// spoton-lint: allow(D2, reason = "…")` marker. A marker
+/// trailing code suppresses the listed rules on its own line; a marker
+/// on a line of its own suppresses them on the next line.
+struct AllowMarker {
+    line: u32,
+    rules: Vec<RuleId>,
+}
+
+/// Parse every `spoton-lint` marker out of the comment stream; malformed
+/// markers become `A1` diagnostics instead of silent no-ops.
+fn parse_markers(
+    comments: &[(u32, String)],
+    path: &str,
+    diags: &mut Vec<Diag>,
+) -> Vec<AllowMarker> {
+    let mut markers = Vec::new();
+    for (line, text) in comments {
+        let Some(pos) = text.find("spoton-lint:") else {
+            continue;
+        };
+        let rest = text[pos + "spoton-lint:".len()..].trim_start();
+        let bad = |why: &str| Diag {
+            rule: RuleId::A1,
+            path: path.to_string(),
+            line: *line,
+            message: format!("bad allow marker: {why}"),
+        };
+        let Some(inner) = rest.strip_prefix("allow(") else {
+            diags.push(bad("expected `allow(RULES, reason = \"…\")`"));
+            continue;
+        };
+        let Some(rpos) = inner.find("reason") else {
+            diags.push(bad(
+                "allow marker requires a `reason = \"…\"` string",
+            ));
+            continue;
+        };
+        let after = inner[rpos + "reason".len()..].trim_start();
+        let Some(after) = after.strip_prefix('=') else {
+            diags.push(bad("expected `reason = \"…\"`"));
+            continue;
+        };
+        let after = after.trim_start();
+        let Some(after) = after.strip_prefix('"') else {
+            diags.push(bad("reason must be a quoted string"));
+            continue;
+        };
+        let Some(endq) = after.find('"') else {
+            diags.push(bad("unterminated reason string"));
+            continue;
+        };
+        if after[..endq].trim().is_empty() {
+            diags.push(bad("reason must not be empty"));
+            continue;
+        }
+        let mut rules = Vec::new();
+        let mut ok = true;
+        for tok in inner[..rpos].split(',') {
+            let t = tok.trim();
+            if t.is_empty() {
+                continue;
+            }
+            match RuleId::parse(t) {
+                Some(r) => rules.push(r),
+                None => {
+                    diags.push(bad(&format!("unknown rule id '{t}'")));
+                    ok = false;
+                    break;
+                }
+            }
+        }
+        if !ok {
+            continue;
+        }
+        if rules.is_empty() {
+            diags.push(bad("no rule ids listed before the reason"));
+            continue;
+        }
+        markers.push(AllowMarker { line: *line, rules });
+    }
+    markers
+}
+
+/// D2 trigger identifiers that are hazardous wherever they appear.
+const D2_BARE: [&str; 6] = [
+    "Instant",
+    "SystemTime",
+    "OsRng",
+    "getrandom",
+    "from_entropy",
+    "available_parallelism",
+];
+
+/// D2 `a::b` path triggers (`env::var`, `thread::current`, …).
+const D2_PATHS: [(&str, &str); 6] = [
+    ("env", "var"),
+    ("env", "var_os"),
+    ("env", "vars"),
+    ("env", "args"),
+    ("env", "args_os"),
+    ("thread", "current"),
+];
+
+/// Truncating cast targets for D4.
+const D4_NARROW: [&str; 6] = ["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Lint one Rust source file. `path` must be repo-relative with `/`
+/// separators — rule scoping and the baseline both key on it.
+pub fn check_source(path: &str, src: &str, cfg: &LintConfig) -> Vec<Diag> {
+    let lexed = lex(src);
+    let mut diags: Vec<Diag> = Vec::new();
+    let markers = parse_markers(&lexed.comments, path, &mut diags);
+    let regions = test_regions(&lexed.toks);
+    let in_test =
+        |line: u32| regions.iter().any(|&(s, e)| line >= s && line <= e);
+
+    let exempt_target = starts_with_any(path, &cfg.exempt_targets);
+    let d1_scope = starts_with_any(path, &cfg.ordered_paths);
+    let d2_allowed = starts_with_any(path, &cfg.wallclock_allow);
+    let d4_scope = starts_with_any(path, &cfg.cast_paths);
+
+    let toks = &lexed.toks;
+    let n = toks.len();
+    let mut raw: Vec<Diag> = Vec::new();
+    let mut push = |rule: RuleId, line: u32, message: String| {
+        raw.push(Diag { rule, path: path.to_string(), line, message });
+    };
+    for i in 0..n {
+        let TokKind::Ident(word) = &toks[i].kind else {
+            continue;
+        };
+        let line = toks[i].line;
+        let exempt_here = exempt_target || in_test(line);
+
+        // D1 — unordered containers in ordered (digest/report/billing)
+        // paths. Applies even inside test mods: a test that digests a
+        // HashMap iteration order is exactly the flake this rule exists
+        // to stop.
+        if d1_scope && (word == "HashMap" || word == "HashSet") {
+            push(
+                RuleId::D1,
+                line,
+                format!(
+                    "`{word}` in an ordered (digest/report/billing) path \
+                     — use BTreeMap/BTreeSet or sort before iterating"
+                ),
+            );
+        }
+
+        // D2 — wall-clock / environment reads outside the allowlist.
+        if !d2_allowed && !exempt_here {
+            if D2_BARE.contains(&word.as_str()) {
+                push(
+                    RuleId::D2,
+                    line,
+                    format!(
+                        "`{word}` outside the wall-clock allowlist — \
+                         simulated time / seeded util::prng only"
+                    ),
+                );
+            }
+            if i + 3 < n {
+                if let (
+                    TokKind::Punct(':'),
+                    TokKind::Punct(':'),
+                    TokKind::Ident(member),
+                ) = (&toks[i + 1].kind, &toks[i + 2].kind, &toks[i + 3].kind)
+                {
+                    if D2_PATHS
+                        .iter()
+                        .any(|(m, f)| m == word && f == member)
+                    {
+                        push(
+                            RuleId::D2,
+                            toks[i + 3].line,
+                            format!(
+                                "`{word}::{member}` outside the wall-clock \
+                                 allowlist — environment reads break \
+                                 reproducibility"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+
+        // D3 — `.unwrap()` / `.expect(` in library code. The `.expect(`
+        // form skips a direct `self.expect(` receiver: that is a
+        // user-defined method (the JSON parser), not Option::expect.
+        if !exempt_here
+            && (word == "unwrap" || word == "expect")
+            && i >= 1
+            && matches!(toks[i - 1].kind, TokKind::Punct('.'))
+            && i + 1 < n
+            && matches!(toks[i + 1].kind, TokKind::Punct('('))
+        {
+            let self_recv = i >= 2
+                && matches!(&toks[i - 2].kind,
+                            TokKind::Ident(w) if w == "self");
+            if !(word == "expect" && self_recv) {
+                push(
+                    RuleId::D3,
+                    line,
+                    format!(
+                        "`.{word}(…)` in a library path — propagate a \
+                         Result (or justify with an allow marker)"
+                    ),
+                );
+            }
+        }
+
+        // D4 — truncating casts in seed/billing/cell-index math.
+        if d4_scope && !exempt_here && word == "as" && i + 1 < n {
+            if let TokKind::Ident(target) = &toks[i + 1].kind {
+                if D4_NARROW.contains(&target.as_str()) {
+                    push(
+                        RuleId::D4,
+                        line,
+                        format!(
+                            "truncating `as {target}` cast — use \
+                             `{target}::try_from` so overflow fails loudly"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+
+    // Apply allow markers. A marker trailing code covers its own line; a
+    // standalone marker covers the next line — so an allow can never
+    // silently leak onto code it wasn't written for.
+    let code_lines: std::collections::BTreeSet<u32> =
+        toks.iter().map(|t| t.line).collect();
+    for d in raw {
+        let allowed = markers.iter().any(|m| {
+            let target = if code_lines.contains(&m.line) {
+                m.line
+            } else {
+                m.line + 1
+            };
+            target == d.line && m.rules.contains(&d.rule)
+        });
+        if !allowed {
+            diags.push(d);
+        }
+    }
+    diags
+}
+
+/// D5 — dependency-creep guard over a `Cargo.toml`. Only the declared
+/// dependency set is allowed, dev/build dependency sections are creep by
+/// definition, and the `pjrt` feature gate must survive.
+pub fn check_cargo_toml(
+    path: &str,
+    text: &str,
+    cfg: &LintConfig,
+) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut section = String::new();
+    let mut saw_deps = false;
+    let mut features: Vec<String> = Vec::new();
+    for (idx, rawline) in text.lines().enumerate() {
+        let line_no = idx as u32 + 1;
+        let line = match rawline.find('#') {
+            Some(h) => rawline[..h].trim(),
+            None => rawline.trim(),
+        };
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            section = line
+                .trim_start_matches('[')
+                .trim_end_matches(']')
+                .trim()
+                .to_string();
+            if section == "dependencies" {
+                saw_deps = true;
+            }
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            continue;
+        };
+        let full_key = line[..eq].trim().trim_matches('"');
+        let key = match full_key.find('.') {
+            Some(d) => &full_key[..d],
+            None => full_key,
+        };
+        match section.as_str() {
+            "dependencies" => {
+                let allowed = cfg
+                    .allowed_deps
+                    .iter()
+                    .any(|a| a == key)
+                    || (key == "xla" && line.contains("optional = true"));
+                if !allowed {
+                    diags.push(Diag {
+                        rule: RuleId::D5,
+                        path: path.to_string(),
+                        line: line_no,
+                        message: format!(
+                            "dependency '{key}' is outside the declared \
+                             set ({}) — vendor the code in-repo instead",
+                            cfg.allowed_deps.join("+"),
+                        ),
+                    });
+                }
+            }
+            "dev-dependencies" | "build-dependencies" => {
+                diags.push(Diag {
+                    rule: RuleId::D5,
+                    path: path.to_string(),
+                    line: line_no,
+                    message: format!(
+                        "'{key}' in [{section}] — the crate builds with \
+                         no dev/build dependencies; use in-repo utilities"
+                    ),
+                });
+            }
+            "features" => features.push(key.to_string()),
+            _ => {}
+        }
+    }
+    if saw_deps && !features.iter().any(|f| f == "pjrt") {
+        diags.push(Diag {
+            rule: RuleId::D5,
+            path: path.to_string(),
+            line: 1,
+            message: "the `pjrt` feature gate is missing from [features] \
+                      — the stubbed PJRT runtime must stay buildable"
+                .to_string(),
+        });
+    }
+    diags
+}
+
+fn starts_with_any(path: &str, prefixes: &[String]) -> bool {
+    prefixes.iter().any(|p| path.starts_with(p.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg_for(path: &str) -> LintConfig {
+        let mut cfg = LintConfig::repo_default();
+        // scope every path-keyed rule onto the synthetic file
+        cfg.ordered_paths.push(path.to_string());
+        cfg.cast_paths.push(path.to_string());
+        cfg
+    }
+
+    #[test]
+    fn d1_fires_on_hashmap_in_ordered_path() {
+        let path = "rust/src/report/fake.rs";
+        let src = "use std::collections::HashMap;\nfn f(m: &HashMap<u32, f64>) {}\n";
+        let diags = check_source(path, src, &cfg_for(path));
+        let d1: Vec<_> =
+            diags.iter().filter(|d| d.rule == RuleId::D1).collect();
+        assert_eq!(d1.len(), 2);
+        assert_eq!(d1[0].line, 1);
+        assert_eq!(d1[1].line, 2);
+    }
+
+    #[test]
+    fn d2_fires_outside_allowlist_only() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        let hot = "rust/src/sim/engine_fake.rs";
+        let diags = check_source(hot, src, &cfg_for(hot));
+        assert!(diags.iter().any(|d| d.rule == RuleId::D2));
+        let allowed = "rust/src/util/bench.rs";
+        let diags = check_source(allowed, src, &LintConfig::repo_default());
+        assert!(diags.is_empty());
+    }
+
+    #[test]
+    fn d3_skips_tests_and_self_expect() {
+        let src = "\
+fn lib() { x.unwrap(); self.expect(b'{'); y.expect(\"msg\"); }
+#[cfg(test)]
+mod tests {
+    fn t() { z.unwrap(); }
+}
+";
+        let path = "rust/src/sim/fake.rs";
+        let diags = check_source(path, src, &cfg_for(path));
+        let d3: Vec<_> =
+            diags.iter().filter(|d| d.rule == RuleId::D3).collect();
+        assert_eq!(d3.len(), 2, "{d3:?}");
+        assert!(d3.iter().all(|d| d.line == 1));
+    }
+
+    #[test]
+    fn d4_fires_on_narrow_casts_only() {
+        let path = "rust/src/util/prng_fake.rs";
+        let src = "fn f(x: u64) { let a = x as u32; let b = x as f64; let c = x as usize; }\n";
+        let diags = check_source(path, src, &cfg_for(path));
+        let d4: Vec<_> =
+            diags.iter().filter(|d| d.rule == RuleId::D4).collect();
+        assert_eq!(d4.len(), 1);
+    }
+
+    #[test]
+    fn allow_marker_suppresses_with_reason() {
+        let path = "rust/src/sim/fake.rs";
+        let src = "\
+// spoton-lint: allow(D3, reason = \"invariant: set at construction\")
+fn f() { x.unwrap(); }
+fn g() { y.unwrap(); } // spoton-lint: allow(D3, reason = \"same line\")
+fn h() { z.unwrap(); }
+";
+        let diags = check_source(path, src, &cfg_for(path));
+        let d3: Vec<_> =
+            diags.iter().filter(|d| d.rule == RuleId::D3).collect();
+        assert_eq!(d3.len(), 1, "{d3:?}");
+        assert_eq!(d3[0].line, 4);
+    }
+
+    #[test]
+    fn allow_marker_without_reason_is_a1_and_does_not_suppress() {
+        let path = "rust/src/sim/fake.rs";
+        let src = "\
+// spoton-lint: allow(D3)
+fn f() { x.unwrap(); }
+";
+        let diags = check_source(path, src, &cfg_for(path));
+        assert!(diags.iter().any(|d| d.rule == RuleId::A1));
+        assert!(diags.iter().any(|d| d.rule == RuleId::D3));
+    }
+
+    #[test]
+    fn allow_marker_unknown_rule_is_a1() {
+        let path = "rust/src/sim/fake.rs";
+        let src = "// spoton-lint: allow(D9, reason = \"nope\")\n";
+        let diags = check_source(path, src, &cfg_for(path));
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].rule, RuleId::A1);
+        assert!(diags[0].message.contains("D9"));
+    }
+
+    #[test]
+    fn d5_flags_new_dependency_and_missing_gate() {
+        let cfg = LintConfig::repo_default();
+        let text = "\
+[package]
+name = \"x\"
+
+[dependencies]
+anyhow = \"1\"
+serde = \"1\"
+
+[features]
+default = []
+";
+        let diags = check_cargo_toml("rust/Cargo.toml", text, &cfg);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.rule == RuleId::D5));
+        assert!(diags.iter().any(|d| d.message.contains("serde")));
+        assert!(diags.iter().any(|d| d.message.contains("pjrt")));
+    }
+
+    #[test]
+    fn d5_accepts_the_declared_set() {
+        let cfg = LintConfig::repo_default();
+        let text = "\
+[dependencies]
+anyhow = \"1\"
+log = \"0.4\"
+xla = { path = \"../vendor/xla-rs\", optional = true }
+
+[features]
+default = []
+pjrt = []
+";
+        let diags = check_cargo_toml("rust/Cargo.toml", text, &cfg);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn exempt_targets_skip_panic_rules() {
+        let cfg = LintConfig::repo_default();
+        let src = "fn f() { x.unwrap(); let t = Instant::now(); }\n";
+        let diags = check_source("rust/tests/some_test.rs", src, &cfg);
+        assert!(diags.is_empty(), "{diags:?}");
+        let diags = check_source("examples/demo.rs", src, &cfg);
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+}

@@ -8,7 +8,7 @@
 //! uncompressed payloads from older runs keep working.
 
 use crate::util::zlib;
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 /// Frame magic ("SPZ1").
 const MAGIC: [u8; 4] = *b"SPZ1";
@@ -38,7 +38,10 @@ pub fn decompress(data: &[u8]) -> Result<Vec<u8>> {
     if !is_compressed(data) {
         return Ok(data.to_vec());
     }
-    let expected = u64::from_le_bytes(data[4..12].try_into().unwrap());
+    let header: [u8; 8] = data[4..12]
+        .try_into()
+        .context("compressed frame header truncated")?;
+    let expected = u64::from_le_bytes(header);
     if expected > MAX_DECOMPRESSED {
         bail!("compressed frame claims absurd size {expected}");
     }

@@ -11,7 +11,7 @@ use super::manifest::CheckpointManifest;
 use super::CKPT_PREFIX;
 use crate::simclock::SimDuration;
 use crate::storage::SharedStore;
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 /// One discovered checkpoint and its validation status.
 #[derive(Debug, Clone)]
@@ -139,8 +139,16 @@ impl CheckpointStore {
         store: &mut dyn SharedStore,
         manifest: &CheckpointManifest,
     ) -> Result<(Vec<u8>, SimDuration)> {
-        let (payload, cost) = store.get(&manifest.payload_key)?;
-        manifest.verify_payload(&payload)?;
+        let (payload, cost) =
+            store.get(&manifest.payload_key).with_context(|| {
+                format!(
+                    "fetching payload '{}' of generation {}",
+                    manifest.payload_key, manifest.id
+                )
+            })?;
+        manifest.verify_payload(&payload).with_context(|| {
+            format!("verifying payload of generation {}", manifest.id)
+        })?;
         Ok((payload, cost))
     }
 
@@ -150,7 +158,10 @@ impl CheckpointStore {
         let entries = Self::scan(store)?;
         let mut valid: Vec<&CkptEntry> =
             entries.iter().filter(|e| e.is_valid()).collect();
-        valid.sort_by_key(|e| e.manifest.as_ref().unwrap().id);
+        // directory names are `ckpt/{id:010}-{kind}`, so the
+        // lexicographic dir order IS ascending id order — no need to
+        // assume a manifest is present
+        valid.sort_by(|a, b| a.dir.cmp(&b.dir));
         let cutoff = valid.len().saturating_sub(keep);
         let doomed: Vec<String> = valid[..cutoff]
             .iter()
@@ -380,5 +391,60 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fetch_payload_error_names_generation_and_key() {
+        // Regression: a payload that disappears between scan and fetch
+        // is an error whose context names the generation and the key —
+        // not a panic, and not an anonymous I/O error.
+        use crate::storage::SharedStore;
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 1, CkptKind::Periodic);
+        let m = &ms[0];
+        store.delete(&m.payload_key).unwrap();
+        let err = CheckpointStore::fetch_payload(&mut store, m)
+            .expect_err("missing payload is an error, not a panic");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&format!("generation {}", m.id)), "{msg}");
+        assert!(msg.contains(&m.payload_key), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_payload_error_names_generation() {
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 1, CkptKind::Periodic);
+        let m = &ms[0];
+        store.corrupt(&m.payload_key, 0).unwrap();
+        let err = CheckpointStore::fetch_payload(&mut store, m)
+            .expect_err("corrupt payload fails verification");
+        let msg = format!("{err:#}");
+        assert!(msg.contains(&format!("generation {}", m.id)), "{msg}");
+    }
+
+    #[test]
+    fn gc_orders_by_directory_and_tolerates_invalid_entries() {
+        // Regression: gc used to sort valid entries by unwrapping their
+        // manifests; it now orders by the zero-padded directory name.
+        // An entry whose manifest is damaged must still be collected.
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 3);
+        let ms = write_n(&mut store, &mut writer, &mut w, 3, CkptKind::Periodic);
+        let key = format!(
+            "{}/manifest.json",
+            crate::checkpoint::ckpt_dir(ms[1].id, CkptKind::Periodic)
+        );
+        store.truncate(&key, 4).unwrap();
+        let removed = CheckpointStore::gc(&mut store, 1).unwrap();
+        // oldest valid generation + the invalid middle one
+        assert_eq!(removed, 2);
+        let latest =
+            CheckpointStore::latest_valid(&mut store, None).unwrap().unwrap();
+        assert_eq!(latest.id, ms[2].id);
     }
 }

@@ -131,6 +131,7 @@ impl BillingMeter {
             .iter()
             .take_while(|e| e.0 <= start)
             .last()
+            // spoton-lint: allow(D3, reason = "epoch list is seeded with a start-covering epoch")
             .expect("first epoch covers start")
             .1;
         let mut seg_start = start;

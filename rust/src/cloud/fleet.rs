@@ -219,11 +219,13 @@ impl Pool {
         self.set
             .price_book()
             .lookup(self.set.vm_size())
+            // spoton-lint: allow(D3, reason = "pool set validated non-empty at construction")
             .expect("validated at construction")
             .price_per_hour(self.set.spot())
     }
 
     fn current_factor(&self) -> f64 {
+        // spoton-lint: allow(D3, reason = "price_epochs seeded at construction; never emptied")
         self.price_epochs.last().expect("seeded at construction").1
     }
 
@@ -456,6 +458,7 @@ impl Fleet {
                 .set
                 .price_book()
                 .lookup(&inst.vm_size)
+                // spoton-lint: allow(D3, reason = "pool id validated when the launch was accepted")
                 .expect("validated at launch")
                 .price_per_hour(inst.spot);
             billing.book_instance_piecewise(
@@ -600,6 +603,7 @@ impl Fleet {
             .set
             .price_book()
             .lookup(&inst.vm_size)
+            // spoton-lint: allow(D3, reason = "pool id validated when the launch was accepted")
             .expect("validated at launch")
             .price_per_hour(inst.spot);
         billing.book_instance_piecewise(

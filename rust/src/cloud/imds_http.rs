@@ -98,6 +98,7 @@ fn handle(state: &Arc<Mutex<ImdsState>>, req: &Request) -> Response {
             if req.query_param("api-version") != Some(API_VERSION) {
                 return Response::bad_request("unsupported api-version");
             }
+            // spoton-lint: allow(D3, reason = "lock poisoning means a panicked holder; unrecoverable by design")
             let st = state.lock().unwrap();
             Response::ok_json(json::to_string(&st.service.document()))
         }
@@ -109,6 +110,7 @@ fn handle(state: &Arc<Mutex<ImdsState>>, req: &Request) -> Response {
                 Some(v) => v,
                 None => return Response::bad_request("invalid JSON body"),
             };
+            // spoton-lint: allow(D3, reason = "lock poisoning means a panicked holder; unrecoverable by design")
             let mut st = state.lock().unwrap();
             let n = st.service.start_requests(&body);
             Response::ok_json(format!("{{\"acknowledged\":{n}}}"))
@@ -118,6 +120,7 @@ fn handle(state: &Arc<Mutex<ImdsState>>, req: &Request) -> Response {
                 Some(r) if !r.is_empty() => r.to_string(),
                 _ => return Response::bad_request("resource param required"),
             };
+            // spoton-lint: allow(D3, reason = "lock poisoning means a panicked holder; unrecoverable by design")
             let mut st = state.lock().unwrap();
             let not_before = st.now()
                 + crate::simclock::SimDuration::from_secs(st.notice_secs);

@@ -61,6 +61,7 @@ impl Default for PriceBook {
             mk("Standard_D16s_v3", 16, 64, 0.76, 0.152),
             mk("Standard_D32s_v3", 32, 128, 1.52, 0.304),
         ])
+        // spoton-lint: allow(D3, reason = "default catalog is a static table; validity is tested")
         .expect("default catalog is valid")
     }
 }

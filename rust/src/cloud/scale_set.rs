@@ -96,6 +96,7 @@ impl ScaleSet {
         self.launched += 1;
         self.running
             .push(Instance::new(id, &self.vm_size, self.spot, now));
+        // spoton-lint: allow(D3, reason = "last() follows the push on the previous line")
         self.running.last().expect("just pushed")
     }
 
@@ -146,6 +147,7 @@ impl ScaleSet {
         let size = self
             .price_book
             .lookup(&inst.vm_size)
+            // spoton-lint: allow(D3, reason = "capacity validated at construction")
             .expect("validated at construction");
         let price = size.price_per_hour(inst.spot);
         match &self.pool_label {

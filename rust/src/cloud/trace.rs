@@ -149,7 +149,9 @@ impl PoolTrace {
                 continue;
             }
             let mut parts = line.split_whitespace();
-            let directive = parts.next().expect("non-empty line has a token");
+            let Some(directive) = parts.next() else {
+                continue; // whitespace-only line
+            };
             match directive {
                 "price" => {
                     let (off, factor) = (parts.next(), parts.next());

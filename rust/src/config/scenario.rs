@@ -966,7 +966,9 @@ fn secs(doc: &TomlDoc, sec: &str, key: &str) -> Option<SimDuration> {
 /// instance count >= 1; zero, negative and out-of-range values are parse
 /// errors naming the key.
 fn parse_capacity(doc: &TomlDoc, sec: &str) -> Result<u32> {
-    let v = doc.get(sec, "capacity").expect("caller checked presence");
+    let v = doc
+        .get(sec, "capacity")
+        .with_context(|| format!("{sec}.capacity missing"))?;
     let n = v.as_u64().with_context(|| {
         format!("{sec}.capacity must be a non-negative integer")
     })?;

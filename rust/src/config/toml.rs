@@ -130,7 +130,7 @@ impl TomlDoc {
                     msg: format!("trailing garbage '{rest}'"),
                 });
             }
-            let sec = doc.sections.get_mut(&section).unwrap();
+            let sec = doc.sections.entry(section.clone()).or_default();
             if sec.contains_key(&key) {
                 return Err(TomlError {
                     line: line_no,

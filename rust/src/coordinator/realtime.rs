@@ -152,6 +152,7 @@ impl RealtimeCoordinator {
                 last_poll = Instant::now();
                 let notice = match transport {
                     Transport::InProc(svc) => {
+                        // spoton-lint: allow(D3, reason = "lock poisoning means a panicked holder; unrecoverable by design")
                         monitor.poll_inproc(&svc.lock().unwrap())?
                     }
                     Transport::Http { events_url } => {
@@ -188,6 +189,7 @@ impl RealtimeCoordinator {
                     // Ack readiness so the platform can proceed.
                     match transport {
                         Transport::InProc(svc) => monitor
+                            // spoton-lint: allow(D3, reason = "lock poisoning means a panicked holder; unrecoverable by design")
                             .ack_inproc(&mut svc.lock().unwrap(), &n.event_id),
                         Transport::Http { events_url } => {
                             monitor.ack_http(events_url, &n.event_id)?

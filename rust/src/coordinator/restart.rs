@@ -108,8 +108,16 @@ impl RestartManager {
                 }
                 continue;
             }
-            let manifest =
-                e.manifest.clone().expect("valid entries carry a manifest");
+            let Some(manifest) = e.manifest.clone() else {
+                // scan() only marks manifest-bearing entries valid; a
+                // None here means the store scan invariant broke, and
+                // restoring "something" would be worse than stopping.
+                bail!(
+                    "checkpoint generation {} is marked valid but \
+                     carries no manifest",
+                    dir_id(&e.dir)
+                );
+            };
             let report =
                 Self::restore_from(store, surface, workload, manifest)?;
             return Ok(RestoreSearch { report: Some(report), skipped });
@@ -133,7 +141,12 @@ impl RestartManager {
         }
         let (payload, fetch_cost) =
             CheckpointStore::fetch_payload(store, &manifest)
-                .context("fetching checkpoint payload")?;
+                .with_context(|| {
+                    format!(
+                        "fetching checkpoint payload for generation {}",
+                        manifest.id
+                    )
+                })?;
         // Compressed termination checkpoints (notice-window rescue) are
         // framed; anything else passes through untouched.
         let payload = crate::checkpoint::compress::decompress(&payload)
@@ -529,5 +542,56 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("belongs to workload"));
+    }
+
+    #[test]
+    fn corrupt_manifest_falls_back_without_panicking() {
+        // Regression: a checkpoint whose manifest bytes are damaged on
+        // the share must surface as a skipped generation (with the
+        // restore falling back to the previous one), never a panic.
+        let mut store = BlobStore::for_tests();
+        let mut writer = CheckpointWriter::new();
+        let mut w = Sleeper::new(SleeperCfg::small(), 7);
+        for _ in 0..10 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        let m1 = writer
+            .write(&mut store, SimTime::from_secs(1), CkptKind::Periodic, &w,
+                   &snap)
+            .unwrap()
+            .committed()
+            .expect("first write commits")
+            .clone();
+        for _ in 0..10 {
+            w.step().unwrap();
+        }
+        let snap = w.snapshot().unwrap();
+        let m2 = writer
+            .write(&mut store, SimTime::from_secs(2), CkptKind::Periodic, &w,
+                   &snap)
+            .unwrap()
+            .committed()
+            .expect("second write commits")
+            .clone();
+        let key = format!(
+            "{}/manifest.json",
+            crate::checkpoint::ckpt_dir(m2.id, CkptKind::Periodic)
+        );
+        store.truncate(&key, 5).unwrap(); // unparseable JSON
+        let mut fresh = Sleeper::new(SleeperCfg::small(), 7);
+        let search = RestartManager::find_and_restore_with_fallback(
+            &mut store,
+            &transparent_policy(),
+            &mut fresh,
+        )
+        .expect("a corrupt manifest must not abort the whole search");
+        let report = search.report.expect("older generation restores");
+        assert_eq!(report.resumed_total_steps, 10);
+        assert_eq!(fresh.progress().total_steps, 10);
+        assert_eq!(search.skipped.len(), 1, "{:?}", search.skipped);
+        assert_eq!(search.skipped[0].0, m2.id);
+        assert!(search.skipped[0].1.contains("manifest"));
+        assert_eq!(report.manifest.id, m1.id);
     }
 }

@@ -105,6 +105,24 @@
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the Table I / Fig 2 / Fig 3 reproductions.
+//!
+//! ## Running the linter
+//!
+//! The repo enforces its determinism & robustness contract statically
+//! with an in-repo analysis pass (see [`analysis`] for the rule set and
+//! rationale):
+//!
+//! ```text
+//! spoton lint                  # scan rust/src, rust/benches, rust/tests, examples
+//! spoton lint --json           # deterministic sorted-key JSON for CI artifacts
+//! spoton lint --fix-baseline   # ratchet analysis/BASELINE.json to current counts
+//! ```
+//!
+//! CI's `lint-smoke` job fails on any finding that is new relative to the
+//! committed baseline — and on any baseline entry that no longer matches
+//! a finding, so the baseline can only shrink deliberately.
+
+#![deny(unsafe_code)]
 
 pub mod util;
 pub mod json;
@@ -122,3 +140,4 @@ pub mod sim;
 pub mod metrics;
 pub mod report;
 pub mod sched;
+pub mod analysis;

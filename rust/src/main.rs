@@ -17,6 +17,7 @@
 //!              [--out shards] [--run-id ID]
 //! spoton sweep-worker --dir shards/ID --shard K [--threads 1]
 //! spoton check --scenario cfg.toml
+//! spoton lint [--json] [--fix-baseline] [--root DIR] [--baseline FILE]
 //! ```
 
 use anyhow::{bail, Context, Result};
@@ -96,6 +97,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "sweep-worker" => cmd_sweep_worker(&args),
         "check" => cmd_check(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -122,6 +124,14 @@ USAGE:
                [--out shards] [--run-id ID]
   spoton sweep-worker --dir shards/ID --shard K [--threads 1]
   spoton check --scenario cfg.toml
+  spoton lint [--json] [--fix-baseline] [--root DIR] [--baseline FILE]
+
+`lint` runs the in-repo determinism & robustness static analysis
+(rules D1-D5; see the `spoton::analysis` rustdoc) over rust/src,
+rust/benches, rust/tests and examples/, and exits non-zero on any
+finding that is new relative to analysis/BASELINE.json — or on any
+stale baseline entry. `--fix-baseline` rewrites the baseline to the
+current counts; `--json` emits a deterministic sorted-key report.
 
 `check` evaluates the scenario's [expect] section over an
 `expect.seeds`-seed sweep (cluster sweep for [cluster] scenarios),
@@ -507,6 +517,44 @@ fn cmd_check(args: &Args) -> Result<()> {
             checked.violations.len(),
             cfg.name
         );
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    use spoton::analysis::{self, Baseline, LintConfig, LintReport};
+    let root = PathBuf::from(args.get("root").unwrap_or("."));
+    let cfg = LintConfig::repo_default();
+    let baseline_path = args
+        .get("baseline")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join(analysis::BASELINE_PATH));
+    let (diags, files_scanned) = analysis::collect_diags(&root, &cfg)?;
+    if args.flag("fix-baseline") {
+        let base = Baseline::from_diags(&diags);
+        let groups: usize =
+            base.counts.values().map(|files| files.len()).sum();
+        base.save(&baseline_path)?;
+        println!(
+            "wrote {} ({} baselined (rule, file) group(s), {} finding(s))",
+            baseline_path.display(),
+            groups,
+            diags.len()
+        );
+        return Ok(());
+    }
+    let baseline = Baseline::load(&baseline_path)?;
+    let comparison = baseline.compare(&diags);
+    let report = LintReport { diags, comparison, files_scanned };
+    if args.flag("json") {
+        let mut body = spoton::json::to_string_pretty(&report.to_json());
+        body.push('\n');
+        print!("{body}");
+    } else {
+        print!("{}", report.render());
+    }
+    if !report.clean() {
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -280,6 +280,7 @@ impl RequeueScheduler {
                             submitted_at: SimTime::ZERO,
                             started_at: state
                                 .first_start
+                                // spoton-lint: allow(D3, reason = "finish() is only reached after start() recorded the time")
                                 .expect("finished job must have started"),
                             finished_at: now,
                             attempts: state.attempts,

@@ -602,6 +602,7 @@ impl<'a> ClusterEngine<'a> {
             if !self.slot_free(pool) {
                 return Ok(());
             }
+            // spoton-lint: allow(D3, reason = "pop follows a successful peek on the same queue")
             let popped = self.pop_waiting().expect("peeked non-empty");
             debug_assert_eq!(popped, job);
             let now = self.clock.now();
@@ -620,6 +621,7 @@ impl<'a> ClusterEngine<'a> {
         self.waiting
             .values()
             .find(|q| !q.is_empty())
+            // spoton-lint: allow(D3, reason = "empty queues are pruned; fronts exist")
             .map(|q| *q.front().expect("non-empty"))
     }
 
@@ -904,6 +906,7 @@ impl<'a> ClusterEngine<'a> {
             let delay = j
                 .backoff
                 .as_mut()
+                // spoton-lint: allow(D3, reason = "retry policies are constructed with a backoff")
                 .expect("retries imply a backoff policy")
                 .delay(attempt);
             j.timeline.record_with(now, EventKind::CkptRetried, || {
@@ -1085,9 +1088,11 @@ impl<'a> ClusterEngine<'a> {
             let inst = j
                 .inst
                 .as_ref()
+                // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
                 .expect("notice events require a live instance");
             (
                 inst.id.clone(),
+                // spoton-lint: allow(D3, reason = "eviction events are only scheduled with a schedule set")
                 inst.schedule.expect("notice without an eviction schedule"),
             )
         };
@@ -1109,6 +1114,7 @@ impl<'a> ClusterEngine<'a> {
             .inst
             .as_ref()
             .and_then(|inst| inst.schedule)
+            // spoton-lint: allow(D3, reason = "eviction events are only scheduled with a schedule set")
             .expect("poll tick without an eviction schedule")
             .deadline;
         if self.plan.imds_down(now) {
@@ -1156,6 +1162,7 @@ impl<'a> ClusterEngine<'a> {
                 j.metadata.set_available(true);
             }
             handlers::on_poll_tick(
+                // spoton-lint: allow(D3, reason = "live instances always carry a monitor")
                 j.monitor.as_mut().expect("live instance has a monitor"),
                 &mut j.metadata,
                 &j.policy,
@@ -1204,6 +1211,7 @@ impl<'a> ClusterEngine<'a> {
             );
         }
         handlers::ack_notice(
+            // spoton-lint: allow(D3, reason = "live instances always carry a monitor")
             j.monitor.as_ref().expect("live instance has a monitor"),
             &mut j.metadata,
             &notice,
@@ -1220,6 +1228,7 @@ impl<'a> ClusterEngine<'a> {
         let inst = self.jobs[job]
             .inst
             .take()
+            // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
             .expect("reclaim events require a live instance");
         let pool = inst.pool;
         if self
@@ -1648,6 +1657,7 @@ impl ClusterSweep {
         Self {
             base,
             seeds: Vec::new(),
+            // spoton-lint: allow(D2, reason = "worker-count default only; merged results are seed-keyed")
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
@@ -1718,6 +1728,7 @@ impl ClusterSweep {
                     }));
                 }
                 for h in handles {
+                    // spoton-lint: allow(D3, reason = "a panicked worker is a bug; re-raise it")
                     for (i, r) in h.join().expect("cluster sweep worker panicked")
                     {
                         slots[i] = Some(r);
@@ -1730,6 +1741,7 @@ impl ClusterSweep {
             .iter()
             .zip(slots)
             .map(|(&seed, slot)| {
+                // spoton-lint: allow(D3, reason = "the plan visits every index exactly once")
                 slot.expect("every seed index visited exactly once")
                     .map(|result| SeededClusterRun { seed, result })
             })

@@ -692,6 +692,7 @@ impl<'a> Engine<'a> {
             let delay = self
                 .backoff
                 .as_mut()
+                // spoton-lint: allow(D3, reason = "retry policies are constructed with a backoff")
                 .expect("retries imply a backoff policy")
                 .delay(attempt);
             self.timeline.record_with(now, EventKind::CkptRetried, || {
@@ -891,9 +892,11 @@ impl<'a> Engine<'a> {
             let inst = self
                 .inst
                 .as_ref()
+                // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
                 .expect("notice events require a live instance");
             (
                 inst.id.clone(),
+                // spoton-lint: allow(D3, reason = "eviction events are only scheduled with a schedule set")
                 inst.schedule.expect("notice without an eviction schedule"),
             )
         };
@@ -919,6 +922,7 @@ impl<'a> Engine<'a> {
             .inst
             .as_ref()
             .and_then(|inst| inst.schedule)
+            // spoton-lint: allow(D3, reason = "eviction events are only scheduled with a schedule set")
             .expect("poll tick without an eviction schedule");
         if self.plan.imds_down(now) {
             // IMDS outage: this poll sees nothing. The monitor degrades
@@ -957,6 +961,7 @@ impl<'a> Engine<'a> {
             self.metadata.set_available(true);
         }
         let reaction = handlers::on_poll_tick(
+            // spoton-lint: allow(D3, reason = "live instances always carry a monitor")
             self.monitor.as_mut().expect("live instance has a monitor"),
             &mut self.metadata,
             &self.policy,
@@ -1004,6 +1009,7 @@ impl<'a> Engine<'a> {
             );
         }
         handlers::ack_notice(
+            // spoton-lint: allow(D3, reason = "live instances always carry a monitor")
             self.monitor.as_ref().expect("live instance has a monitor"),
             &mut self.metadata,
             &notice,
@@ -1020,6 +1026,7 @@ impl<'a> Engine<'a> {
         let inst = self
             .inst
             .take()
+            // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
             .expect("reclaim events require a live instance");
         let terminated = self.fleet.terminate_current(now, &mut self.billing);
         if let Some((_, pool)) = terminated {

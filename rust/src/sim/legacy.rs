@@ -164,6 +164,7 @@ pub fn run_reference(
                 timeline.record(
                     clock.now(),
                     EventKind::Aborted,
+                    // spoton-lint: allow(D3, reason = "frozen pre-refactor oracle; aborted runs always carry a reason")
                     aborted_reason.clone().unwrap(),
                 );
                 break 'instances;

@@ -729,6 +729,7 @@ pub fn run_shard(
                 }));
             }
             for h in handles {
+                // spoton-lint: allow(D3, reason = "a panicked worker is a bug; re-raise it")
                 for (i, r) in h.join().expect("shard worker panicked") {
                     slots[i] = Some(r);
                 }
@@ -737,6 +738,7 @@ pub fn run_shard(
     }
     let records: Vec<CellRecord> = slots
         .into_iter()
+        // spoton-lint: allow(D3, reason = "the plan visits every index exactly once")
         .map(|slot| slot.expect("every cell index visited exactly once"))
         .collect::<Result<_>>()?;
     Ok(ShardArtifact {
@@ -998,7 +1000,8 @@ impl DeadLetter {
     fn from_json(v: &Value) -> Result<Self> {
         Ok(Self {
             shard: v.req_u64("shard")? as usize,
-            attempts: v.req_u64("attempts")? as u32,
+            attempts: u32::try_from(v.req_u64("attempts")?)
+                .context("dead-letter 'attempts' out of u32 range")?,
             reason: v.req_str("reason")?.to_string(),
             cells: v
                 .req_array("cells")?

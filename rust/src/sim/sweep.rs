@@ -76,6 +76,7 @@ impl Sweep {
         Self {
             base,
             seeds: Vec::new(),
+            // spoton-lint: allow(D2, reason = "worker-count default only; merged results are seed-keyed")
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
@@ -161,6 +162,7 @@ impl Sweep {
                     }));
                 }
                 for h in handles {
+                    // spoton-lint: allow(D3, reason = "a panicked worker is a bug; re-raise it")
                     for (i, r) in h.join().expect("sweep worker panicked") {
                         slots[i] = Some(r);
                     }
@@ -172,6 +174,7 @@ impl Sweep {
             .iter()
             .zip(slots)
             .map(|(&seed, slot)| {
+                // spoton-lint: allow(D3, reason = "the plan visits every index exactly once")
                 slot.expect("every seed index visited exactly once")
                     .map(|result| SeededRun { seed, result })
             })

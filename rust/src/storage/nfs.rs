@@ -64,11 +64,12 @@ impl NfsStore {
                 if name.ends_with(META_EXT) {
                     continue;
                 }
-                let key = path
-                    .strip_prefix(&self.root)
-                    .unwrap()
-                    .to_string_lossy()
-                    .replace('\\', "/");
+                // every path under the walk is below root, but a racing
+                // rename could break that — skip rather than panic
+                let Ok(rel) = path.strip_prefix(&self.root) else {
+                    continue;
+                };
+                let key = rel.to_string_lossy().replace('\\', "/");
                 let charged = fs::read_to_string(sidecar(&path))
                     .ok()
                     .and_then(|s| s.trim().parse::<u64>().ok())

@@ -112,18 +112,22 @@ impl<'a> WireReader<'a> {
     }
 
     pub fn get_u32(&mut self) -> Result<u32> {
+        // spoton-lint: allow(D3, reason = "take(4)? returned exactly 4 bytes")
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     pub fn get_u64(&mut self) -> Result<u64> {
+        // spoton-lint: allow(D3, reason = "take(8)? returned exactly 8 bytes")
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     pub fn get_f32(&mut self) -> Result<f32> {
+        // spoton-lint: allow(D3, reason = "take(4)? returned exactly 4 bytes")
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     pub fn get_f64(&mut self) -> Result<f64> {
+        // spoton-lint: allow(D3, reason = "take(8)? returned exactly 8 bytes")
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 

@@ -46,7 +46,7 @@ pub fn summarize(lengths: &[u64]) -> ContigStats {
         return ContigStats::empty();
     }
     let total: u64 = lengths.iter().sum();
-    let max = *lengths.iter().max().unwrap();
+    let max = lengths.iter().copied().max().unwrap_or(0);
     let mut sorted: Vec<u64> = lengths.to_vec();
     sorted.sort_unstable_by(|a, b| b.cmp(a)); // descending
     let mut acc = 0u64;

@@ -252,6 +252,7 @@ impl MiniMeta {
     fn encode(&self, app: bool) -> Vec<u8> {
         let ms;
         let (stage, step, total, counts, summaries, done) = if app {
+            // spoton-lint: allow(D3, reason = "milestone is recorded at stage entry before use")
             ms = self.milestone.as_ref().expect("milestone exists");
             (ms.stage, ms.step_in_stage, ms.total_steps, &ms.counts,
              &ms.summaries, ms.done)
@@ -390,7 +391,10 @@ impl Workload for MiniMeta {
                 .call_f32(&[Arg::I32(&chunk), Arg::F32(&self.counts)])
                 .with_context(|| format!("count step k={k}"))?;
             drop(rt);
-            self.counts = out.into_iter().next().unwrap();
+            self.counts = out
+                .into_iter()
+                .next()
+                .with_context(|| format!("count kernel k={k} returned no output buffer"))?;
         } else {
             // denoise phase
             let sweep =
@@ -406,7 +410,10 @@ impl Workload for MiniMeta {
                 ])
                 .with_context(|| format!("denoise sweep {sweep} k={k}"))?;
             drop(rt);
-            self.counts = out.into_iter().next().unwrap();
+            self.counts = out
+                .into_iter()
+                .next()
+                .with_context(|| format!("denoise sweep {sweep} returned no output buffer"))?;
         }
 
         self.step_in_stage += 1;

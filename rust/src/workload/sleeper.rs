@@ -103,6 +103,7 @@ impl Sleeper {
         w.put_u32(if app { APP_MAGIC } else { MAGIC });
         w.put_u32(VERSION);
         let (stage, step, total, state) = if app {
+            // spoton-lint: allow(D3, reason = "milestone_state is seeded in new() before any step")
             self.milestone_state.expect("milestone recorded at init")
         } else {
             (self.stage, self.step_in_stage, self.total_steps, self.state)

@@ -1,0 +1,330 @@
+//! Integration tests for the `spoton lint` engine.
+//!
+//! Three layers of coverage:
+//!
+//! 1. **Golden fixtures** — the deliberately-violating files under
+//!    `tests/lint_fixtures/` (skipped by the repo walker) are scanned
+//!    under synthetic repo-relative paths that put each rule in scope,
+//!    and the exact `(rule, line)` set is asserted.
+//! 2. **Mutation checks on real repo files** — each rule is proven to
+//!    fire by appending a violation to an actual source file that is
+//!    clean at HEAD and asserting exactly one new finding with the right
+//!    rule id and computed line.
+//! 3. **The repo gate** — `lint_repo` over this checkout must be clean:
+//!    every finding fixed or carrying a reasoned allow marker, and the
+//!    committed baseline neither exceeded nor stale.
+
+use spoton::analysis::{
+    self, check_cargo_toml, check_source, Baseline, Diag, LintConfig,
+    RuleId,
+};
+use std::path::{Path, PathBuf};
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+fn read_repo(rel: &str) -> String {
+    let p = repo_root().join(rel);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Repo config with every path-scoped rule additionally scoped onto the
+/// given synthetic path (same pattern as the unit tests in
+/// `analysis::rules`).
+fn scoped(path: &str) -> LintConfig {
+    let mut cfg = LintConfig::repo_default();
+    cfg.ordered_paths.push(path.to_string());
+    cfg.cast_paths.push(path.to_string());
+    cfg
+}
+
+/// `(rule, line)` pairs sorted by line then rule — the golden shape.
+fn golden(diags: &[Diag]) -> Vec<(u32, &'static str)> {
+    let mut g: Vec<(u32, &'static str)> =
+        diags.iter().map(|d| (d.line, d.rule.as_str())).collect();
+    g.sort();
+    g
+}
+
+/// 1-based line of the first line containing `needle`.
+fn line_of(text: &str, needle: &str) -> u32 {
+    let idx = text
+        .lines()
+        .position(|l| l.contains(needle))
+        .unwrap_or_else(|| panic!("needle '{needle}' not found"));
+    u32::try_from(idx).unwrap() + 1
+}
+
+// ---------------------------------------------------------------- golden
+
+#[test]
+fn d1_fixture_golden() {
+    let path = "rust/src/report/lint_fixture_d1.rs";
+    let diags = check_source(path, &fixture("d1_digest.rs"), &scoped(path));
+    assert_eq!(golden(&diags), vec![(6, "D1"), (9, "D1")], "{diags:?}");
+    assert!(diags.iter().all(|d| d.path == path));
+    // diagnostics render as clickable file:line with the rule id
+    let line = format!("{}", diags[0]);
+    assert!(
+        line.starts_with("rust/src/report/lint_fixture_d1.rs:6: D1 "),
+        "{line}"
+    );
+}
+
+#[test]
+fn d2_fixture_golden() {
+    let path = "rust/src/sim/lint_fixture_d2.rs";
+    let diags =
+        check_source(path, &fixture("d2_wallclock.rs"), &scoped(path));
+    assert_eq!(
+        golden(&diags),
+        vec![(5, "D2"), (9, "D2"), (13, "D2")],
+        "{diags:?}"
+    );
+}
+
+#[test]
+fn d2_fixture_is_exempt_in_allowlisted_module() {
+    // the same source under a wall-clock-allowlisted path is clean
+    let diags = check_source(
+        "rust/src/coordinator/realtime.rs",
+        &fixture("d2_wallclock.rs"),
+        &LintConfig::repo_default(),
+    );
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn d3_fixture_golden() {
+    let path = "rust/src/lint_fixture_d3.rs";
+    let diags = check_source(path, &fixture("d3_unwrap.rs"), &scoped(path));
+    // the `self.expect(…)` call and the `#[cfg(test)]` unwrap are silent
+    assert_eq!(golden(&diags), vec![(4, "D3"), (5, "D3")], "{diags:?}");
+}
+
+#[test]
+fn d3_fixture_is_exempt_under_tests() {
+    let diags = check_source(
+        "rust/tests/lint_fixture_d3.rs",
+        &fixture("d3_unwrap.rs"),
+        &LintConfig::repo_default(),
+    );
+    assert!(diags.is_empty(), "{diags:?}");
+}
+
+#[test]
+fn d4_fixture_golden() {
+    let path = "rust/src/util/lint_fixture_d4.rs";
+    let diags = check_source(path, &fixture("d4_cast.rs"), &scoped(path));
+    // only the narrowing cast fires; `as u64` / `as f64` are silent
+    assert_eq!(golden(&diags), vec![(4, "D4")], "{diags:?}");
+}
+
+// --------------------------------------------------------- allow markers
+
+#[test]
+fn allow_markers_with_reason_suppress_exactly_their_line() {
+    let path = "rust/src/lint_fixture_allow.rs";
+    let diags = check_source(path, &fixture("allow_ok.rs"), &scoped(path));
+    // standalone marker covers line 5, trailing marker covers line 9;
+    // the uncovered unwrap on line 13 still fires, and no A1 appears
+    assert_eq!(golden(&diags), vec![(13, "D3")], "{diags:?}");
+}
+
+#[test]
+fn malformed_allow_markers_are_a1_and_suppress_nothing() {
+    let path = "rust/src/lint_fixture_allow_bad.rs";
+    let diags = check_source(path, &fixture("allow_bad.rs"), &scoped(path));
+    assert_eq!(
+        golden(&diags),
+        vec![
+            (5, "A1"),
+            (6, "D3"),
+            (10, "A1"),
+            (11, "D3"),
+            (15, "A1"),
+            (16, "D3"),
+        ],
+        "{diags:?}"
+    );
+    let a1: Vec<&Diag> =
+        diags.iter().filter(|d| d.rule == RuleId::A1).collect();
+    assert!(a1[0].message.contains("reason"), "{}", a1[0].message);
+    assert!(a1[1].message.contains("empty"), "{}", a1[1].message);
+    assert!(a1[2].message.contains("'D9'"), "{}", a1[2].message);
+}
+
+// -------------------------------------------------------------- baseline
+
+#[test]
+fn baseline_suppresses_old_findings_but_not_new_ones() {
+    let path = "rust/src/lint_fixture_d3.rs";
+    let cfg = scoped(path);
+    let src = fixture("d3_unwrap.rs");
+    let old = check_source(path, &src, &cfg);
+    assert_eq!(old.len(), 2);
+    let base = Baseline::from_diags(&old);
+
+    // unchanged debt: clean
+    assert!(base.compare(&old).clean());
+
+    // one more violation in the same file: exactly one new group,
+    // counting 2 baselined vs 3 current
+    let mutated =
+        format!("{src}pub fn extra(w: Option<u32>) -> u32 {{ w.unwrap() }}\n");
+    let now = check_source(path, &mutated, &cfg);
+    assert_eq!(now.len(), 3, "{now:?}");
+    let cmp = base.compare(&now);
+    assert_eq!(cmp.new_groups.len(), 1, "{:?}", cmp.new_groups);
+    assert!(cmp.stale.is_empty());
+    assert_eq!(cmp.new_groups[0].rule, "D3");
+    assert_eq!(cmp.new_groups[0].path, path);
+    assert_eq!(cmp.new_groups[0].baselined, 2);
+    assert_eq!(cmp.new_groups[0].current, 3);
+
+    // shrunk debt: the ratchet flags the baseline as stale instead
+    let cmp = base.compare(&old[..1]);
+    assert!(cmp.new_groups.is_empty());
+    assert_eq!(cmp.stale.len(), 1);
+}
+
+// ---------------------------------------- mutation checks on real files
+
+/// Assert `rel` is clean at HEAD, then that appending `addition` yields
+/// exactly one new finding of `rule` on the appended line.
+fn assert_mutation_fires(rel: &str, addition: &str, rule: RuleId) {
+    let cfg = LintConfig::repo_default();
+    let src = read_repo(rel);
+    let before = check_source(rel, &src, &cfg);
+    assert!(before.is_empty(), "{rel} not clean at HEAD: {before:?}");
+    assert!(src.ends_with('\n'), "{rel} lacks trailing newline");
+    let mutated = format!("{src}{addition}\n");
+    let diags = check_source(rel, &mutated, &cfg);
+    assert_eq!(diags.len(), 1, "{rel}: {diags:?}");
+    assert_eq!(diags[0].rule, rule, "{rel}: {diags:?}");
+    assert_eq!(diags[0].path, rel);
+    assert_eq!(diags[0].line, line_of(&mutated, "__lint_mut"));
+}
+
+#[test]
+fn mutation_d1_fires_in_report_path() {
+    assert_mutation_fires(
+        "rust/src/report/table1.rs",
+        "fn __lint_mut(m: &std::collections::HashMap<u32, u32>) -> usize \
+         { m.len() }",
+        RuleId::D1,
+    );
+}
+
+#[test]
+fn mutation_d2_fires_in_sim_engine() {
+    assert_mutation_fires(
+        "rust/src/sim/cluster.rs",
+        "fn __lint_mut() -> u64 { \
+         std::time::Instant::now().elapsed().as_secs() }",
+        RuleId::D2,
+    );
+}
+
+#[test]
+fn mutation_d3_fires_in_checkpoint_store() {
+    assert_mutation_fires(
+        "rust/src/checkpoint/store.rs",
+        "fn __lint_mut(x: Option<u32>) -> u32 { x.unwrap() }",
+        RuleId::D3,
+    );
+}
+
+#[test]
+fn mutation_d4_fires_in_billing_math() {
+    assert_mutation_fires(
+        "rust/src/cloud/billing.rs",
+        "fn __lint_mut(x: u64) -> u32 { x as u32 }",
+        RuleId::D4,
+    );
+}
+
+#[test]
+fn mutation_d5_fires_on_dependency_creep() {
+    let cfg = LintConfig::repo_default();
+    let text = read_repo("rust/Cargo.toml");
+    let before = check_cargo_toml("rust/Cargo.toml", &text, &cfg);
+    assert!(before.is_empty(), "rust/Cargo.toml not clean: {before:?}");
+
+    // a dev-dependency is creep by definition
+    let mutated = format!("{text}\n[dev-dependencies]\ntempfile = \"3\"\n");
+    let diags = check_cargo_toml("rust/Cargo.toml", &mutated, &cfg);
+    assert_eq!(diags.len(), 1, "{diags:?}");
+    assert_eq!(diags[0].rule, RuleId::D5);
+    assert_eq!(diags[0].line, line_of(&mutated, "tempfile"));
+    assert!(diags[0].message.contains("tempfile"), "{}", diags[0].message);
+
+    // removing the pjrt feature gate is also a D5 failure
+    let gateless = text.replace("pjrt", "pjrt_renamed");
+    let diags = check_cargo_toml("rust/Cargo.toml", &gateless, &cfg);
+    assert!(
+        diags.iter().any(|d| d.rule == RuleId::D5
+            && d.message.contains("pjrt")),
+        "{diags:?}"
+    );
+}
+
+// -------------------------------------------------------- the repo gate
+
+#[test]
+fn repo_lint_is_clean_at_head() {
+    let root = repo_root();
+    let cfg = LintConfig::repo_default();
+    let report = analysis::lint_repo(&root, &cfg)
+        .expect("lint pass over the checkout");
+    let listing: Vec<String> =
+        report.diags.iter().map(|d| d.to_string()).collect();
+    assert!(
+        report.diags.is_empty(),
+        "HEAD must lint clean (fix it or add a reasoned allow marker):\n{}",
+        listing.join("\n")
+    );
+    assert!(report.clean(), "baseline is stale or exceeded");
+    assert!(
+        report.files_scanned > 50,
+        "suspiciously few files scanned: {}",
+        report.files_scanned
+    );
+}
+
+#[test]
+fn committed_baseline_matches_engine_serialization() {
+    // the checked-in file must be byte-identical to what the engine
+    // writes, otherwise --fix-baseline would produce spurious diffs
+    let path = repo_root().join(analysis::BASELINE_PATH);
+    let committed = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    let loaded = Baseline::load(&path).expect("parse committed baseline");
+    let mut expect = spoton::json::to_string_pretty(&loaded.to_json());
+    expect.push('\n');
+    assert_eq!(committed, expect, "run `spoton lint --fix-baseline`");
+}
+
+#[test]
+fn lint_report_json_is_deterministic() {
+    let root = repo_root();
+    let cfg = LintConfig::repo_default();
+    let a = analysis::lint_repo(&root, &cfg).unwrap();
+    let b = analysis::lint_repo(&root, &cfg).unwrap();
+    let ja = spoton::json::to_string_pretty(&a.to_json());
+    let jb = spoton::json::to_string_pretty(&b.to_json());
+    assert_eq!(ja, jb);
+    let v = spoton::json::parse(&ja).expect("report JSON parses");
+    assert_eq!(v.req_u64("version").unwrap(), 1);
+    assert!(a.render().contains("spoton lint: clean"));
+}

@@ -1,0 +1,17 @@
+//! Lint fixture: malformed allow markers — each is an A1 finding and
+//! suppresses nothing.
+
+pub fn missing_reason(x: Option<u32>) -> u32 {
+    // spoton-lint: allow(D3)
+    x.unwrap() // line 6: D3 — marker above is invalid (no reason)
+}
+
+pub fn empty_reason(y: Option<u32>) -> u32 {
+    // spoton-lint: allow(D3, reason = "")
+    y.unwrap() // line 11: D3 — empty reason does not count
+}
+
+pub fn unknown_rule(z: Option<u32>) -> u32 {
+    // spoton-lint: allow(D9, reason = "no such rule")
+    z.unwrap() // line 16: D3 — unknown rule id
+}

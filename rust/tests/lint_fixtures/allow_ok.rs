@@ -1,0 +1,14 @@
+//! Lint fixture: well-formed allow markers (standalone and trailing).
+
+pub fn standalone_marker(x: Option<u32>) -> u32 {
+    // spoton-lint: allow(D3, reason = "fixture: invariant set by caller")
+    x.unwrap() // line 5: suppressed by the marker on line 4
+}
+
+pub fn trailing_marker(y: Option<u32>) -> u32 {
+    y.unwrap() // spoton-lint: allow(D3, reason = "fixture: same-line allow")
+}
+
+pub fn not_covered(z: Option<u32>) -> u32 {
+    z.unwrap() // line 13: D3 — no marker reaches this line
+}

@@ -1,0 +1,16 @@
+//! Lint fixture: D1 — unordered containers in an ordered path.
+//! Scanned by `tests/lint_engine.rs` under a synthetic digest-path name;
+//! the repo walker skips this directory, so these deliberate violations
+//! never reach the baseline.
+
+use std::collections::HashMap; // line 6: D1
+use std::collections::BTreeMap;
+
+pub fn digest_costs(costs: &HashMap<String, f64>) -> f64 {
+    // iteration order leaks into the sum's rounding
+    costs.values().sum()
+}
+
+pub fn ordered_is_fine(costs: &BTreeMap<String, f64>) -> f64 {
+    costs.values().sum()
+}

@@ -1,0 +1,22 @@
+//! Lint fixture: D2 — wall-clock and environment reads. Each violating
+//! line carries exactly one trigger so the golden lines stay exact.
+
+pub fn wall_clock() {
+    let _t = std::time::Instant::now(); // line 5: D2 (Instant)
+}
+
+pub fn env_read() -> Option<String> {
+    std::env::var("HOME").ok() // line 9: D2 (env::var)
+}
+
+pub fn thread_name() -> bool {
+    std::thread::current().name().is_some() // line 13: D2 (thread::current)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn wall_clock_in_tests_is_fine() {
+        let _ = std::time::Instant::now(); // exempt: test region
+    }
+}

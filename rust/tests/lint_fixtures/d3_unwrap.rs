@@ -1,0 +1,27 @@
+//! Lint fixture: D3 — panicking unwrap/expect in library paths.
+
+pub fn library_panics(x: Option<u32>, y: Option<u32>) -> u32 {
+    let a = x.unwrap(); // line 4: D3
+    let b = y.expect("present"); // line 5: D3
+    a + b
+}
+
+struct Parser;
+impl Parser {
+    fn expect(&mut self, _b: u8) -> Result<(), ()> {
+        Ok(())
+    }
+    fn run(&mut self) {
+        // a user-defined `self.expect(…)` method is NOT Option::expect
+        self.expect(b'{').ok();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1); // exempt: test region
+    }
+}

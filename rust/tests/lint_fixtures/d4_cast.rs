@@ -1,0 +1,13 @@
+//! Lint fixture: D4 — truncating casts in seed/index math.
+
+pub fn truncates(seed: u64) -> u32 {
+    seed as u32 // line 4: D4
+}
+
+pub fn widening_is_fine(cell: u32) -> u64 {
+    cell as u64
+}
+
+pub fn float_is_fine(x: u64) -> f64 {
+    x as f64
+}
