@@ -1,0 +1,174 @@
+//! Bid frontier: what deadline attainment costs on a spiking spot market.
+//!
+//! ```bash
+//! cargo run --release --example bid_frontier
+//! ```
+//!
+//! Three fleet configurations race the same deadline-SLA job population
+//! through the recorded `east-spike` price trace (the market opens at
+//! 0.8× the spot level, doubles at 80 min, and keeps climbing):
+//!
+//! * **all-spot** — every job bids a fixed $0.10/h on the traced pool and
+//!   loses the auction when the spike crosses the bid: outbid, evicted,
+//!   and every replacement is born outbid again. Nobody finishes; every
+//!   deadline is missed.
+//! * **hybrid** — the autoscaler ([`spoton::autoscale`]) bids the
+//!   25th-percentile of the traced factor stream (Khatua-style) and,
+//!   the moment the spike makes that bid non-viable, shifts replacements
+//!   onto a never-evicting on-demand pool. Every deadline holds.
+//! * **on-demand** — the whole population runs at the undiscounted
+//!   catalog price. Every deadline holds, at the highest cost.
+//!
+//! The run reduces each population to a [`spoton::report::frontier`]
+//! point and hard-asserts the headline: the hybrid holds 100% attainment
+//! at a fraction of the all-on-demand cost, and the all-on-demand point
+//! is Pareto-dominated.
+
+use spoton::cloud::trace::PoolTrace;
+use spoton::config::{
+    AutoscaleCfg, BidPolicyCfg, ClusterCfg, EvictionPlanCfg,
+    PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+};
+use spoton::metrics::EventKind;
+use spoton::report::{render_frontier, sla_frontier};
+use spoton::sim::cluster::ClusterResult;
+use spoton::sim::experiment::Experiment;
+use spoton::simclock::SimDuration;
+
+/// Concurrent deadline-SLA jobs per run.
+const JOBS: usize = 6;
+/// Seeded runs per configuration.
+const SEEDS: usize = 3;
+const SEED0: u64 = 101;
+
+/// The shared scenario: 6 sleeper jobs of ~90 min work each,
+/// transparent checkpoints every 15 min, a 6 h per-job SLA, and an 8 h
+/// abort deadline so the losing configuration terminates.
+fn base() -> Experiment {
+    let mut exp = Experiment::table1()
+        .named("bid-frontier")
+        .transparent(SimDuration::from_mins(15))
+        .deadline(SimDuration::from_mins(480))
+        .placement(PlacementPolicyCfg::CheapestSpot);
+    exp.cfg.workload.ks = vec![40, 50];
+    exp.cfg.workload.stage_secs = vec![2700, 2700];
+    exp.cfg.cluster = Some(ClusterCfg::with_count(JOBS));
+    exp.cfg.job_deadline = Some(SimDuration::from_mins(360));
+    exp
+}
+
+/// The traced spot pool: east-spike pricing plus the trace's recorded
+/// eviction offsets, sized so the whole population fits.
+fn east_pool(trace: &PoolTrace) -> PoolCfg {
+    PoolCfg::named("east")
+        .pricing(PoolPricingCfg::Trace(trace.price.clone()))
+        .eviction(EvictionPlanCfg::Trace { offsets: trace.evictions.clone() })
+        .capacity(JOBS as u32)
+}
+
+/// The undiscounted fallback: never evicted, never outbid.
+fn ondemand_pool() -> PoolCfg {
+    PoolCfg::named("ondemand").spot(false).capacity(JOBS as u32)
+}
+
+fn run(exp: &Experiment) -> anyhow::Result<Vec<ClusterResult>> {
+    let runs = exp.cluster_sweep().seed_range(SEED0, SEEDS).run()?;
+    Ok(runs.into_iter().map(|r| r.result).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    // Compiled in so the example runs from any working directory; the
+    // same file drives `scenarios/bid_storm.toml` through `spoton check`.
+    let trace =
+        PoolTrace::parse(include_str!("../traces/east-spike.trace"))?;
+
+    // 1. All-spot with a static $0.10/h bid: the 80-min spike (0.8× →
+    //    1.6× of $0.076/h ≈ $0.1216/h) crosses it and the market never
+    //    comes back down.
+    let all_spot = run(&base().pool(east_pool(&trace).bid(0.10)))?;
+
+    // 2. Hybrid: a bottom-quantile bid survives the calm market, and the
+    //    spike flips placement to the on-demand pool via NoViableBid.
+    let mut hybrid_exp =
+        base().pool(east_pool(&trace)).pool(ondemand_pool());
+    hybrid_exp.cfg.autoscale = Some(AutoscaleCfg {
+        policy: BidPolicyCfg::Percentile { q: 0.25 },
+        on_demand_pool: "ondemand".into(),
+        slack: SimDuration::from_mins(60),
+        max_queue: 4,
+    });
+    let hybrid = run(&hybrid_exp)?;
+
+    // 3. All-on-demand: the attainment ceiling and the cost ceiling.
+    let on_demand = run(&base().pool(ondemand_pool()))?;
+
+    let groups: Vec<(&str, Vec<ClusterResult>)> = vec![
+        ("all-spot", all_spot),
+        ("hybrid", hybrid),
+        ("on-demand", on_demand),
+    ];
+    let points = sla_frontier(&groups);
+    println!("cost-vs-SLA frontier over {SEEDS} seeded runs:\n");
+    print!("{}", render_frontier(&points));
+
+    let by_label = |l: &str| {
+        points.iter().find(|p| p.label == l).expect("label present")
+    };
+    let (spot_pt, hybrid_pt, od_pt) =
+        (by_label("all-spot"), by_label("hybrid"), by_label("on-demand"));
+
+    // The all-spot arm lost the auction: outbid jobs thrash until the
+    // abort deadline and every SLA is missed.
+    assert!(spot_pt.misses > 0, "the spike must outbid the $0.10 bid");
+    assert!(
+        spot_pt.sla.expect("verdicts recorded") < 0.5,
+        "all-spot cannot hold the SLA through the spike"
+    );
+
+    // The hybrid held the SLA the all-spot arm lost...
+    assert!(
+        hybrid_pt.sla.expect("verdicts recorded") >= 0.99,
+        "the hybrid must hold >= 99% attainment"
+    );
+    // ...at a fraction of the on-demand price.
+    assert!(
+        hybrid_pt.mean_cost < 0.75 * od_pt.mean_cost,
+        "hybrid (${:.4}) must undercut on-demand (${:.4}) by >= 25%",
+        hybrid_pt.mean_cost,
+        od_pt.mean_cost
+    );
+    assert!(!hybrid_pt.dominated, "the hybrid sits on the frontier");
+    assert!(
+        od_pt.dominated,
+        "equal attainment at higher cost: on-demand is dominated"
+    );
+
+    // The mechanism, not just the outcome: the hybrid's jobs really were
+    // outbid on spot and really were shifted by the autoscaler.
+    let hybrid_results = &groups
+        .iter()
+        .find(|(l, _)| *l == "hybrid")
+        .expect("hybrid group")
+        .1;
+    let outbids: usize = hybrid_results
+        .iter()
+        .flat_map(|r| &r.jobs)
+        .map(|j| j.result.timeline.count(EventKind::PoolOutbid))
+        .sum();
+    let shifts: usize = hybrid_results
+        .iter()
+        .map(|r| r.timeline.count(EventKind::AutoscaleShift))
+        .sum();
+    assert!(outbids > 0, "the spike must outbid the percentile bid");
+    assert!(shifts > 0, "the autoscaler must shift the outbid jobs");
+
+    println!(
+        "\nhybrid: {:.0}% attainment at {:.0}% of the on-demand cost \
+         ({} outbids absorbed, {} autoscale shifts)",
+        hybrid_pt.sla.unwrap_or(0.0) * 100.0,
+        100.0 * hybrid_pt.mean_cost / od_pt.mean_cost,
+        outbids,
+        shifts
+    );
+    Ok(())
+}

@@ -1,0 +1,442 @@
+//! Bid policies and the hybrid spot/on-demand autoscaler.
+//!
+//! Spot markets are auctions: a consumer names a **bid** — the maximum
+//! hourly price it is willing to pay — and keeps its instance only while
+//! the market price stays at or below that bid. When the price crosses
+//! the bid the provider *outbids* the instance: the eviction notice
+//! fires from the crossing and billing stops at the crossing boundary
+//! (the cloud layer's `PoolOutbid` path). This module supplies the two
+//! decision layers above that mechanism:
+//!
+//! * **[`BidPolicy`]** — *how much to bid* on a spot pool. Three
+//!   strategies from the spot-market literature:
+//!   * [`FixedMargin`]: current price × `(1 + margin)` — the naive
+//!     "bid a bit over market" baseline.
+//!   * [`PercentileOfTrace`]: base price × the `q`-quantile of the
+//!     pool's traced factor stream — application-centric bidding à la
+//!     Khatua et al.: the quantile directly bounds the fraction of
+//!     trace time the market spends above the bid.
+//!   * [`ReliabilityAware`]: a fixed margin inflated by the pool's
+//!     observed eviction rate — reliability-aware bidding à la
+//!     Voorsluys & Buyya: pools seen to churn earn defensive bids.
+//! * **[`Autoscaler`]** — *where to place* a deadline-SLA job. It wraps
+//!   the cluster's [`PlacementPolicy`](crate::cloud::fleet::PlacementPolicy)
+//!   and overrides its pick with the on-demand fallback pool when the
+//!   job's SLA is at risk: time-to-deadline inside the configured
+//!   slack, the admission queue past its depth bound, or no viable bid
+//!   on the chosen spot pool (the policy's bid is already under the
+//!   market). On-demand pools never evict but bill the undiscounted
+//!   catalog price, so every shift trades cost for attainment — the
+//!   frontier [`crate::report::frontier`] tabulates.
+//!
+//! Both layers are pure functions of the fleet's deterministic state
+//! (prices, traces, observed evictions) — no RNG, no wall clock — so
+//! autoscaled sweeps stay byte-identical at any thread or process
+//! count, and scenarios without an `[autoscale]` section (or bids) run
+//! byte-identical to the bid-free engine
+//! (`tests/engine_equivalence.rs`).
+//!
+//! # TOML reference
+//!
+//! ```toml
+//! [job]
+//! deadline_mins = 600          # per-job SLA: finishing later (or not
+//!                              # at all) records DeadlineMissed
+//!
+//! [pool.east]
+//! price_trace = "east-spike.trace"
+//! bid = 0.12                   # static $/h bid: outbid when the traced
+//!                              # price crosses above it
+//!
+//! [pool.fallback]
+//! kind = "on-demand"           # never evicts; bills the undiscounted
+//!                              # catalog price; no bid, no trace
+//!
+//! [autoscale]
+//! policy = "percentile"        # "fixed-margin" | "percentile" | "reliability"
+//! percentile = 0.9             # q for "percentile" (in (0, 1])
+//! # margin = 0.25              # for "fixed-margin" / "reliability" (>= 0)
+//! # reliability_weight = 4.0   # for "reliability" (>= 0)
+//! on_demand_pool = "fallback"  # must name a kind = "on-demand" pool
+//! slack_mins = 90              # shift to on-demand inside this
+//!                              # time-to-deadline
+//! max_queue = 4                # shift while >= this many jobs wait
+//! ```
+//!
+//! `[autoscale]` requires `[job] deadline_mins` (the slack rule is
+//! meaningless without a deadline) and a cluster scenario; every other
+//! inert combination is rejected at parse *and* build with the
+//! offending key named ([`crate::config::scenario`]).
+
+use crate::cloud::fleet::{Fleet, PoolId};
+use crate::config::{AutoscaleCfg, BidPolicyCfg};
+use crate::simclock::SimDuration;
+use anyhow::{bail, Result};
+
+/// A bidding strategy for spot placements: given the fleet's current
+/// deterministic state, name the maximum hourly price to attach to a
+/// launch in `pool`.
+///
+/// Implementations must be pure functions of the fleet (no RNG, no
+/// interior state) — the determinism suite runs autoscaled sweeps at
+/// several thread counts and requires byte-identical artifacts.
+pub trait BidPolicy: std::fmt::Debug {
+    /// Human-readable strategy label (stable across runs; used in
+    /// reports and event details).
+    fn label(&self) -> String;
+
+    /// The bid ($/h) this strategy names for a launch in `pool` now.
+    fn bid(&self, fleet: &Fleet, pool: PoolId) -> f64;
+}
+
+/// Bid the pool's current effective price times `1 + margin`.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedMargin {
+    pub margin: f64,
+}
+
+impl BidPolicy for FixedMargin {
+    fn label(&self) -> String {
+        format!("fixed-margin/{}", self.margin)
+    }
+
+    fn bid(&self, fleet: &Fleet, pool: PoolId) -> f64 {
+        fleet.pool_price(pool) * (1.0 + self.margin)
+    }
+}
+
+/// Bid the pool's *base* price times the `q`-quantile of its full
+/// traced factor stream ([`Fleet::factor_quantile`]) — Khatua-style
+/// application-centric bidding: with `q = 0.9` the market spends at
+/// most 10% of trace time above the bid.
+#[derive(Debug, Clone, Copy)]
+pub struct PercentileOfTrace {
+    pub q: f64,
+}
+
+impl BidPolicy for PercentileOfTrace {
+    fn label(&self) -> String {
+        format!("percentile/{}", self.q)
+    }
+
+    fn bid(&self, fleet: &Fleet, pool: PoolId) -> f64 {
+        fleet.pool_base_price(pool) * fleet.factor_quantile(pool, self.q)
+    }
+}
+
+/// Fixed margin inflated by the pool's observed eviction rate
+/// ([`Fleet::pool_eviction_rate`]) — Voorsluys & Buyya-style
+/// reliability-aware bidding: `current × (1 + margin × (1 + weight ×
+/// eviction_rate))`, so churny pools earn defensive bids.
+#[derive(Debug, Clone, Copy)]
+pub struct ReliabilityAware {
+    pub margin: f64,
+    pub weight: f64,
+}
+
+impl BidPolicy for ReliabilityAware {
+    fn label(&self) -> String {
+        format!("reliability/{}/{}", self.margin, self.weight)
+    }
+
+    fn bid(&self, fleet: &Fleet, pool: PoolId) -> f64 {
+        let rate = fleet.pool_eviction_rate(pool);
+        fleet.pool_price(pool) * (1.0 + self.margin * (1.0 + self.weight * rate))
+    }
+}
+
+/// Build a [`BidPolicy`] from its validated config (re-validates, so a
+/// hand-constructed [`BidPolicyCfg`] can't smuggle a NaN past the
+/// parser).
+pub fn build_bid_policy(cfg: &BidPolicyCfg) -> Result<Box<dyn BidPolicy>> {
+    cfg.validate()?;
+    Ok(match *cfg {
+        BidPolicyCfg::FixedMargin { margin } => Box::new(FixedMargin { margin }),
+        BidPolicyCfg::Percentile { q } => Box::new(PercentileOfTrace { q }),
+        BidPolicyCfg::Reliability { margin, weight } => {
+            Box::new(ReliabilityAware { margin, weight })
+        }
+    })
+}
+
+/// Why the autoscaler shifted (or kept) a job on the on-demand pool.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftReason {
+    /// Time-to-deadline dropped inside the configured slack.
+    DeadlinePressure,
+    /// The admission queue reached the configured depth bound.
+    QueuePressure,
+    /// The bid policy's bid is already below the spot pool's market
+    /// price — launching would be born outbid.
+    NoViableBid,
+    /// The inner placement policy itself picked the on-demand pool;
+    /// not a shift, so no `AutoscaleShift` event is recorded.
+    Placement,
+}
+
+impl std::fmt::Display for ShiftReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            ShiftReason::DeadlinePressure => "deadline pressure",
+            ShiftReason::QueuePressure => "queue pressure",
+            ShiftReason::NoViableBid => "no viable bid",
+            ShiftReason::Placement => "placement",
+        })
+    }
+}
+
+/// The autoscaler's verdict for one placement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScaleDecision {
+    /// Launch in `pool` on spot, carrying `bid` when the pool is traced
+    /// (untraced spot pools have static prices — nothing to outbid).
+    Spot { pool: PoolId, bid: Option<f64> },
+    /// Launch in the on-demand fallback pool instead.
+    OnDemand { reason: ShiftReason },
+}
+
+/// Hybrid spot/on-demand autoscaler ([module docs](self)): consulted at
+/// every placement (admission and replacement alike), it either
+/// endorses the inner placement's spot pick — attaching the bid
+/// policy's bid — or overrides it with the on-demand fallback when the
+/// deadline SLA is at risk.
+#[derive(Debug)]
+pub struct Autoscaler {
+    policy: Box<dyn BidPolicy>,
+    /// Resolved id of the `kind = "on-demand"` fallback pool.
+    pub on_demand: PoolId,
+    slack: SimDuration,
+    max_queue: u32,
+}
+
+impl Autoscaler {
+    /// Build from config against the fleet it will steer. Fails when
+    /// the named fallback pool is missing or is not on-demand.
+    pub fn new(cfg: &AutoscaleCfg, fleet: &Fleet) -> Result<Self> {
+        cfg.validate()?;
+        let Some(on_demand) = (0..fleet.num_pools())
+            .map(PoolId)
+            .find(|&p| fleet.pool_name(p) == cfg.on_demand_pool)
+        else {
+            bail!(
+                "autoscale.on_demand_pool '{}' does not name a pool in \
+                 the fleet",
+                cfg.on_demand_pool
+            );
+        };
+        if fleet.pool_is_spot(on_demand) {
+            bail!(
+                "autoscale.on_demand_pool '{}' is a spot pool — the \
+                 fallback must be kind = \"on-demand\"",
+                cfg.on_demand_pool
+            );
+        }
+        Ok(Self {
+            policy: build_bid_policy(&cfg.policy)?,
+            on_demand,
+            slack: cfg.slack,
+            max_queue: cfg.max_queue,
+        })
+    }
+
+    /// The bid strategy's label (for reports).
+    pub fn policy_label(&self) -> String {
+        self.policy.label()
+    }
+
+    /// Decide where one placement lands. `inner` is the wrapped
+    /// placement policy's pick; `time_to_deadline` is the job's
+    /// remaining SLA budget (`Some(ZERO)` when already past due, `None`
+    /// when the scenario has no job deadline); `queue_depth` is the
+    /// number of jobs waiting for admission.
+    ///
+    /// Pressure rules run in a fixed order — deadline, then queue, then
+    /// bid viability — so the recorded shift reason is deterministic.
+    pub fn decide(
+        &self,
+        fleet: &Fleet,
+        inner: PoolId,
+        time_to_deadline: Option<SimDuration>,
+        queue_depth: u32,
+    ) -> ScaleDecision {
+        if let Some(ttd) = time_to_deadline {
+            if ttd <= self.slack {
+                return ScaleDecision::OnDemand {
+                    reason: ShiftReason::DeadlinePressure,
+                };
+            }
+        }
+        if queue_depth >= self.max_queue {
+            return ScaleDecision::OnDemand {
+                reason: ShiftReason::QueuePressure,
+            };
+        }
+        if inner == self.on_demand {
+            return ScaleDecision::OnDemand {
+                reason: ShiftReason::Placement,
+            };
+        }
+        if fleet.pool_traced(inner) {
+            let bid = self.policy.bid(fleet, inner);
+            if bid >= fleet.pool_price(inner) {
+                ScaleDecision::Spot {
+                    pool: inner,
+                    bid: Some(bid),
+                }
+            } else {
+                ScaleDecision::OnDemand {
+                    reason: ShiftReason::NoViableBid,
+                }
+            }
+        } else {
+            // Static spot price: nothing can cross a bid, so don't
+            // carry one.
+            ScaleDecision::Spot { pool: inner, bid: None }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cloud::trace::{PricePoint, PriceTrace};
+    use crate::config::{PoolCfg, PoolPricingCfg};
+
+    /// Two-pool fleet: traced spot "east" (opens at 1.25×, spikes to
+    /// 2.5× at 80 min) + static on-demand "fallback".
+    fn hybrid_fleet() -> Fleet {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.25 },
+            PricePoint { offset: SimDuration::from_mins(80), factor: 2.5 },
+        ])
+        .unwrap();
+        let cfgs = vec![
+            PoolCfg::named("east").pricing(PoolPricingCfg::Trace(trace)),
+            PoolCfg::named("fallback").spot(false),
+        ];
+        Fleet::new(&cfgs, 7).expect("fleet builds")
+    }
+
+    fn autoscale_cfg() -> AutoscaleCfg {
+        AutoscaleCfg {
+            policy: BidPolicyCfg::FixedMargin { margin: 0.5 },
+            on_demand_pool: "fallback".into(),
+            slack: SimDuration::from_mins(60),
+            max_queue: 4,
+        }
+    }
+
+    #[test]
+    fn fixed_margin_bids_over_current_price() {
+        let fleet = hybrid_fleet();
+        let east = PoolId(0);
+        let p = FixedMargin { margin: 0.25 };
+        let price = fleet.pool_price(east);
+        assert!((p.bid(&fleet, east) - price * 1.25).abs() < 1e-12);
+        assert_eq!(p.label(), "fixed-margin/0.25");
+    }
+
+    #[test]
+    fn percentile_bid_is_base_times_factor_quantile() {
+        let fleet = hybrid_fleet();
+        let east = PoolId(0);
+        let p = PercentileOfTrace { q: 1.0 };
+        let want = fleet.pool_base_price(east) * fleet.factor_quantile(east, 1.0);
+        assert!((p.bid(&fleet, east) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reliability_bid_collapses_to_fixed_margin_on_clean_pool() {
+        // No evictions observed yet, so the weight term is inert.
+        let fleet = hybrid_fleet();
+        let east = PoolId(0);
+        let r = ReliabilityAware { margin: 0.3, weight: 8.0 };
+        let f = FixedMargin { margin: 0.3 };
+        assert!((r.bid(&fleet, east) - f.bid(&fleet, east)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn build_rejects_invalid_cfg() {
+        let err = build_bid_policy(&BidPolicyCfg::Percentile { q: 0.0 })
+            .expect_err("q = 0 must fail");
+        assert!(err.to_string().contains("percentile"), "got: {err}");
+    }
+
+    #[test]
+    fn new_resolves_fallback_and_rejects_spot_fallback() {
+        let fleet = hybrid_fleet();
+        let auto = Autoscaler::new(&autoscale_cfg(), &fleet).expect("builds");
+        assert_eq!(auto.on_demand, PoolId(1));
+
+        let mut bad = autoscale_cfg();
+        bad.on_demand_pool = "east".into();
+        let err = Autoscaler::new(&bad, &fleet).expect_err("spot fallback");
+        assert!(err.to_string().contains("spot pool"), "got: {err}");
+
+        let mut missing = autoscale_cfg();
+        missing.on_demand_pool = "nope".into();
+        let err = Autoscaler::new(&missing, &fleet).expect_err("missing pool");
+        assert!(err.to_string().contains("does not name"), "got: {err}");
+    }
+
+    #[test]
+    fn decide_orders_pressure_rules_deterministically() {
+        let fleet = hybrid_fleet();
+        let auto = Autoscaler::new(&autoscale_cfg(), &fleet).expect("builds");
+        let east = PoolId(0);
+
+        // Deadline pressure wins even when the queue is also deep.
+        assert_eq!(
+            auto.decide(&fleet, east, Some(SimDuration::from_mins(30)), 99),
+            ScaleDecision::OnDemand { reason: ShiftReason::DeadlinePressure }
+        );
+        // Past due clamps to ZERO upstream; still deadline pressure.
+        assert_eq!(
+            auto.decide(&fleet, east, Some(SimDuration::ZERO), 0),
+            ScaleDecision::OnDemand { reason: ShiftReason::DeadlinePressure }
+        );
+        // Queue pressure next.
+        assert_eq!(
+            auto.decide(&fleet, east, Some(SimDuration::from_hours(8)), 4),
+            ScaleDecision::OnDemand { reason: ShiftReason::QueuePressure }
+        );
+        // Inner already picked the fallback: keep it, no shift event.
+        assert_eq!(
+            auto.decide(&fleet, PoolId(1), None, 0),
+            ScaleDecision::OnDemand { reason: ShiftReason::Placement }
+        );
+        // Calm spot placement carries the policy's bid.
+        match auto.decide(&fleet, east, Some(SimDuration::from_hours(8)), 0) {
+            ScaleDecision::Spot { pool, bid: Some(bid) } => {
+                assert_eq!(pool, east);
+                let want = fleet.pool_price(east) * 1.5;
+                assert!((bid - want).abs() < 1e-12);
+            }
+            other => panic!("expected spot with bid, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decide_shifts_when_bid_is_under_market() {
+        // Trace opens at its *peak* (2×) and relaxes later (1×), so a
+        // bottom-quantile bid is deterministically under the market at
+        // placement time.
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 2.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 1.0 },
+        ])
+        .unwrap();
+        let cfgs = vec![
+            PoolCfg::named("east").pricing(PoolPricingCfg::Trace(trace)),
+            PoolCfg::named("fallback").spot(false),
+        ];
+        let fleet = Fleet::new(&cfgs, 7).expect("fleet builds");
+        let mut cfg = autoscale_cfg();
+        cfg.policy = BidPolicyCfg::Percentile { q: 0.01 };
+        let auto = Autoscaler::new(&cfg, &fleet).expect("builds");
+        assert_eq!(
+            auto.decide(&fleet, PoolId(0), None, 0),
+            ScaleDecision::OnDemand { reason: ShiftReason::NoViableBid }
+        );
+    }
+}

@@ -73,6 +73,12 @@ pub struct PoolView {
     pub launched: u32,
     /// Evictions observed in this pool so far.
     pub evictions: u32,
+    /// Does this pool's price move over time (trace or walk)? Bid
+    /// policies only bid where the price can actually cross a bid.
+    pub traced: bool,
+    /// Static per-pool bid ($/h) every instance launched here carries,
+    /// if the scenario configured one.
+    pub bid: Option<f64>,
 }
 
 impl PoolView {
@@ -210,6 +216,9 @@ struct Pool {
     price_epochs: Vec<(SimTime, f64)>,
     /// Trace points still to be replayed by the engine (offsets > 0).
     price_points: Vec<PricePoint>,
+    /// Static bid carried by every instance launched in this pool
+    /// (validated against the pool's pricing at construction).
+    bid: Option<f64>,
 }
 
 impl Pool {
@@ -320,6 +329,45 @@ impl Fleet {
                     )
                 }
             };
+            // Bid validation mirrors the TOML-side checks for
+            // builder-built configs, plus the catalog-dependent rule the
+            // parser cannot see: a bid below the pool's *initial*
+            // effective price would leave the pool born outbid.
+            if let Some(bid) = pc.bid {
+                if !(bid.is_finite() && bid > 0.0) {
+                    bail!(
+                        "pool '{}': bid {bid} must be positive and finite",
+                        pc.name
+                    );
+                }
+                if !pc.spot {
+                    bail!(
+                        "pool '{}': bid requires a spot pool — on-demand \
+                         instances are never outbid",
+                        pc.name
+                    );
+                }
+                if !traced {
+                    bail!(
+                        "pool '{}': bid is inert without traced or walked \
+                         pricing — a static price can never cross it",
+                        pc.name
+                    );
+                }
+                let initial = set
+                    .price_book()
+                    .lookup(set.vm_size())?
+                    .price_per_hour(set.spot())
+                    * initial_factor;
+                if bid < initial {
+                    bail!(
+                        "pool '{}': bid ${bid}/h is below the pool's initial \
+                         effective price ${initial}/h — every instance would \
+                         be born outbid",
+                        pc.name
+                    );
+                }
+            }
             pools.push(Pool {
                 name: pc.name.clone(),
                 set,
@@ -328,6 +376,7 @@ impl Fleet {
                 traced,
                 price_epochs: vec![(SimTime::ZERO, initial_factor)],
                 price_points,
+                bid: pc.bid,
             });
         }
         Ok(Self {
@@ -404,6 +453,8 @@ impl Fleet {
                     provisioning_delay: p.set.provisioning_delay(),
                     launched: p.set.launched(),
                     evictions: p.evictions,
+                    traced: p.traced,
+                    bid: p.bid,
                 }
             })
             .collect()
@@ -477,6 +528,44 @@ impl Fleet {
         Some((id, pool))
     }
 
+    /// Terminate the live instance at `now` after a market outbid at
+    /// `outbid_at`: the instance still occupies its slot until `now`
+    /// (the notice window runs from the crossing), but billing stops at
+    /// the crossing boundary — the provider reclaimed the capacity, so
+    /// the notice window is not charged. Bid validation guarantees the
+    /// pool is traced; the piecewise booking is segment-exact up to
+    /// `outbid_at` (clamped to the instance start).
+    pub fn terminate_current_outbid(
+        &mut self,
+        now: SimTime,
+        outbid_at: SimTime,
+        billing: &mut BillingMeter,
+    ) -> Option<(InstanceId, PoolId)> {
+        let pool = self.current_pool?;
+        let multi = self.is_multi_pool();
+        let p = &mut self.pools[pool.0];
+        let inst = p.set.reclaim_current_unbilled(now)?;
+        let base = p
+            .set
+            .price_book()
+            .lookup(&inst.vm_size)
+            // spoton-lint: allow(D3, reason = "pool id validated when the launch was accepted")
+            .expect("validated at launch")
+            .price_per_hour(inst.spot);
+        billing.book_instance_piecewise(
+            if multi { Some(p.name.as_str()) } else { None },
+            &inst.id.to_string(),
+            &inst.vm_size,
+            inst.spot,
+            inst.started_at,
+            outbid_at.max(inst.started_at),
+            base,
+            &p.price_epochs,
+        );
+        self.current_pool = None;
+        Some((inst.id, pool))
+    }
+
     /// Record an observed eviction in `pool` (placement-policy evidence).
     pub fn note_eviction(&mut self, pool: PoolId) {
         self.pools[pool.0].evictions += 1;
@@ -509,6 +598,96 @@ impl Fleet {
         let old = p.current_price();
         p.price_epochs.push((now, factor));
         (old, p.current_price())
+    }
+
+    /// The static bid every instance launched in `pool` carries (`None`
+    /// when the pool has no configured bid).
+    pub fn pool_bid(&self, pool: PoolId) -> Option<f64> {
+        self.pools[pool.0].bid
+    }
+
+    /// Current effective hourly price of `pool` (catalog ×
+    /// `price_factor` × current trace factor) — what an outbid check
+    /// compares a bid against.
+    pub fn pool_price(&self, pool: PoolId) -> f64 {
+        self.pools[pool.0].current_price()
+    }
+
+    /// `pool`'s *static-level* hourly price (catalog × `price_factor`,
+    /// before any trace factor) — what percentile-of-trace bid policies
+    /// multiply a factor quantile against.
+    pub fn pool_base_price(&self, pool: PoolId) -> f64 {
+        self.pools[pool.0].base_price()
+    }
+
+    /// Observed evictions per launch in `pool` (0 for an untried pool) —
+    /// the evidence behind reliability-aware bid policies, same ratio as
+    /// [`PoolView::eviction_rate`].
+    pub fn pool_eviction_rate(&self, pool: PoolId) -> f64 {
+        let p = &self.pools[pool.0];
+        p.evictions as f64 / p.set.launched().max(1) as f64
+    }
+
+    /// Whether `pool` provisions spot capacity (an on-demand pool never
+    /// evicts and bills the undiscounted catalog price).
+    pub fn pool_is_spot(&self, pool: PoolId) -> bool {
+        self.pools[pool.0].set.spot()
+    }
+
+    /// Whether `pool` carries a price trace (only traced spot pools
+    /// have moving prices, and therefore meaningful bids).
+    pub fn pool_traced(&self, pool: PoolId) -> bool {
+        self.pools[pool.0].traced
+    }
+
+    /// Nearest-rank `q`-quantile of `pool`'s full traced factor stream
+    /// (initial factor plus every scheduled point) — the signal behind
+    /// percentile-of-trace bid policies ([`crate::autoscale`]). `q` must
+    /// be in (0, 1]; a static pool's stream is the single factor 1.0.
+    pub fn factor_quantile(&self, pool: PoolId, q: f64) -> f64 {
+        debug_assert!(q > 0.0 && q <= 1.0, "quantile {q} out of (0, 1]");
+        let p = &self.pools[pool.0];
+        let mut factors: Vec<f64> =
+            Vec::with_capacity(1 + p.price_points.len());
+        factors.push(p.price_epochs[0].1);
+        factors.extend(p.price_points.iter().map(|pt| pt.factor));
+        // factors are validated positive and finite at trace parse, so
+        // the comparison is total
+        factors.sort_by(|a, b| {
+            // spoton-lint: allow(D3, reason = "trace factors validated finite at parse")
+            a.partial_cmp(b).expect("trace factors are finite")
+        });
+        let rank = ((q * factors.len() as f64).ceil() as usize)
+            .clamp(1, factors.len());
+        factors[rank - 1]
+    }
+
+    /// Splice seeded market shocks into every traced pool's remaining
+    /// price stream ([`crate::sim::chaos`]): inside each `(start, end)`
+    /// window the traced factor is multiplied by `factor`; at the window
+    /// end the underlying trace resumes. Static pools are untouched, and
+    /// windows never start at t = 0 (the initial epoch stays), so
+    /// shock-free pools keep their digests byte for byte. Call before
+    /// the engine schedules price points.
+    pub fn splice_market_shocks(
+        &mut self,
+        windows: &[(SimDuration, SimDuration)],
+        factor: f64,
+    ) {
+        if windows.is_empty() {
+            return;
+        }
+        for p in &mut self.pools {
+            if !p.traced {
+                continue;
+            }
+            p.price_points = super::trace::splice_price_shocks(
+                p.price_epochs[0].1,
+                &p.price_points,
+                windows,
+                factor,
+            );
+        }
     }
 
     /// When a launch placed in `pool` at `now` is Running. The fleet's
@@ -613,6 +792,44 @@ impl Fleet {
             inst.spot,
             inst.started_at,
             now,
+            base,
+            &p.price_epochs,
+        );
+        true
+    }
+
+    /// Terminate instance `id` in `pool` after a market outbid at
+    /// `outbid_at` (cluster path — the by-id sibling of
+    /// [`Fleet::terminate_current_outbid`]): the slot frees at `now`,
+    /// billing stops at the crossing boundary. Returns `false` if no
+    /// such instance runs there.
+    pub fn terminate_in_outbid(
+        &mut self,
+        pool: PoolId,
+        id: InstanceId,
+        now: SimTime,
+        outbid_at: SimTime,
+        billing: &mut BillingMeter,
+    ) -> bool {
+        let multi = self.is_multi_pool();
+        let p = &mut self.pools[pool.0];
+        let Some(inst) = p.set.reclaim_unbilled(id, now) else {
+            return false;
+        };
+        let base = p
+            .set
+            .price_book()
+            .lookup(&inst.vm_size)
+            // spoton-lint: allow(D3, reason = "pool id validated when the launch was accepted")
+            .expect("validated at launch")
+            .price_per_hour(inst.spot);
+        billing.book_instance_piecewise(
+            if multi { Some(p.name.as_str()) } else { None },
+            &inst.id.to_string(),
+            &inst.vm_size,
+            inst.spot,
+            inst.started_at,
+            outbid_at.max(inst.started_at),
             base,
             &p.price_epochs,
         );
@@ -962,6 +1179,266 @@ mod tests {
         // 0.5 h at $0.076 + 0.5 h at $0.152, as on the single-slot path
         assert!((billing.compute_total() - 0.5 * (0.076 + 0.152)).abs() < 1e-12);
         assert_eq!(billing.invoice().items.len(), 2);
+    }
+
+    #[test]
+    fn fleet_validates_bids() {
+        let spike = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let traced = |bid: f64| {
+            PoolCfg::named("p")
+                .pricing(PoolPricingCfg::Trace(spike.clone()))
+                .bid(bid)
+        };
+
+        for bad in [0.0, -0.05, f64::NAN, f64::INFINITY] {
+            let err = Fleet::new(&[traced(bad)], 1).unwrap_err();
+            assert!(
+                err.to_string().contains("positive and finite"),
+                "{bad}: {err}"
+            );
+        }
+        // bids only mean something where an auction can be lost
+        let err = Fleet::new(&[traced(0.10).spot(false)], 1).unwrap_err();
+        assert!(err.to_string().contains("spot pool"), "{err}");
+        let err =
+            Fleet::new(&[PoolCfg::named("p").bid(0.10)], 1).unwrap_err();
+        assert!(err.to_string().contains("inert"), "{err}");
+        // a bid below the initial effective price is born outbid
+        let opens_high = PriceTrace::new(vec![PricePoint {
+            offset: SimDuration::ZERO,
+            factor: 2.0,
+        }])
+        .unwrap();
+        let err = Fleet::new(
+            &[PoolCfg::named("p")
+                .pricing(PoolPricingCfg::Trace(opens_high))
+                .bid(0.10)],
+            1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("born outbid"), "{err}");
+        // a viable bid round-trips through the accessors
+        let fleet =
+            Fleet::new(&[traced(0.10), PoolCfg::named("static")], 1).unwrap();
+        assert_eq!(fleet.pool_bid(PoolId(0)), Some(0.10));
+        assert_eq!(fleet.pool_bid(PoolId(1)), None);
+        assert!(fleet.pool_traced(PoolId(0)));
+        assert!(!fleet.pool_traced(PoolId(1)));
+        assert!(fleet.pool_is_spot(PoolId(0)));
+    }
+
+    #[test]
+    fn factor_quantile_is_nearest_rank_over_the_full_stream() {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(10), factor: 0.8 },
+            PricePoint { offset: SimDuration::from_mins(20), factor: 1.5 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let fleet = Fleet::new(
+            &[
+                PoolCfg::named("traced")
+                    .pricing(PoolPricingCfg::Trace(trace)),
+                PoolCfg::named("static"),
+            ],
+            1,
+        )
+        .unwrap();
+        // sorted stream: [0.8, 1.0, 1.5, 2.0] — nearest rank, 1-indexed
+        assert_eq!(fleet.factor_quantile(PoolId(0), 0.01), 0.8);
+        assert_eq!(fleet.factor_quantile(PoolId(0), 0.25), 0.8);
+        assert_eq!(fleet.factor_quantile(PoolId(0), 0.5), 1.0);
+        assert_eq!(fleet.factor_quantile(PoolId(0), 0.75), 1.5);
+        assert_eq!(fleet.factor_quantile(PoolId(0), 1.0), 2.0);
+        // a static pool's stream is the single factor 1.0
+        assert_eq!(fleet.factor_quantile(PoolId(1), 0.25), 1.0);
+        assert_eq!(fleet.factor_quantile(PoolId(1), 1.0), 1.0);
+    }
+
+    #[test]
+    fn outbid_termination_stops_billing_at_the_crossing() {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let cfgs = vec![PoolCfg::named("traced")
+            .capacity(2)
+            .pricing(PoolPricingCfg::Trace(trace))
+            .bid(0.09)];
+        // single-slot path: outbid at 45 min, slot reclaimed at 60 min —
+        // only [0, 45 min) bills: 0.5 h at $0.076 + 0.25 h at $0.152
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        let mut billing = BillingMeter::new();
+        fleet.launch(SimTime::ZERO);
+        fleet.apply_price_factor(PoolId(0), 2.0, SimTime::from_secs(1800));
+        let (id, pool) = fleet
+            .terminate_current_outbid(
+                SimTime::from_secs(3600),
+                SimTime::from_secs(2700),
+                &mut billing,
+            )
+            .unwrap();
+        assert_eq!((id, pool), (InstanceId(0), PoolId(0)));
+        assert!(fleet.current().is_none());
+        let billed = 0.5 * 0.076 + 0.25 * 0.152;
+        assert!((billing.compute_total() - billed).abs() < 1e-12);
+
+        // cluster path bills the identical window by id
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        let mut by_id = BillingMeter::new();
+        let id = fleet.launch_in(PoolId(0), SimTime::ZERO).id;
+        fleet.apply_price_factor(PoolId(0), 2.0, SimTime::from_secs(1800));
+        assert!(fleet.terminate_in_outbid(
+            PoolId(0),
+            id,
+            SimTime::from_secs(3600),
+            SimTime::from_secs(2700),
+            &mut by_id
+        ));
+        assert_eq!(
+            by_id.compute_total().to_bits(),
+            billing.compute_total().to_bits()
+        );
+        assert!(
+            !fleet.terminate_in_outbid(
+                PoolId(0),
+                id,
+                SimTime::from_secs(3700),
+                SimTime::from_secs(2700),
+                &mut by_id
+            ),
+            "double outbid termination must report false"
+        );
+
+        // a crossing before launch clamps to the instance start: zero bill
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        let mut zero = BillingMeter::new();
+        let id = fleet.launch_in(PoolId(0), SimTime::from_secs(1000)).id;
+        assert!(fleet.terminate_in_outbid(
+            PoolId(0),
+            id,
+            SimTime::from_secs(2000),
+            SimTime::from_secs(500),
+            &mut zero
+        ));
+        assert_eq!(zero.compute_total(), 0.0);
+    }
+
+    #[test]
+    fn prop_outbid_billing_equals_plain_termination_at_the_crossing() {
+        // Metamorphic pin for the outbid billing clamp: terminating an
+        // instance outbid at `t_x` (slot reclaimed later, at `now`) books
+        // bitwise what a plain termination at `max(t_x, started_at)`
+        // books — across random price-move histories and random
+        // launch/crossing/reclaim orderings.
+        use crate::util::proptest::{forall, shrink_none, Config};
+        forall(
+            Config::default().cases(120),
+            |rng| {
+                let n = rng.range_u64(0, 4);
+                let mut moves = Vec::new();
+                let mut t = 0u64;
+                for _ in 0..n {
+                    t += rng.range_u64(60, 3_000);
+                    moves.push((SimTime(t), 0.5 + rng.f64()));
+                }
+                let started = SimTime(rng.below(4_000));
+                let outbid = SimTime(rng.below(8_000));
+                let now = started.max(outbid) + SimDuration::from_secs(
+                    rng.range_u64(1, 600),
+                );
+                (moves, started, outbid, now)
+            },
+            shrink_none,
+            |(moves, started, outbid, now)| {
+                // a constant-1.0 trace marks the pool traced, so both
+                // termination paths take the piecewise-billing branch
+                let flat = PriceTrace::new(vec![PricePoint {
+                    offset: SimDuration::ZERO,
+                    factor: 1.0,
+                }])
+                .unwrap();
+                let cfgs = vec![PoolCfg::named("p")
+                    .capacity(2)
+                    .pricing(PoolPricingCfg::Trace(flat))];
+                let mut run = |as_outbid: bool| -> u64 {
+                    let mut fleet = Fleet::new(&cfgs, 1).unwrap();
+                    for &(t, f) in moves {
+                        fleet.apply_price_factor(PoolId(0), f, t);
+                    }
+                    let id = fleet.launch_in(PoolId(0), *started).id;
+                    let mut billing = BillingMeter::new();
+                    let ok = if as_outbid {
+                        fleet.terminate_in_outbid(
+                            PoolId(0),
+                            id,
+                            *now,
+                            *outbid,
+                            &mut billing,
+                        )
+                    } else {
+                        fleet.terminate_in(
+                            PoolId(0),
+                            id,
+                            (*outbid).max(*started),
+                            &mut billing,
+                        )
+                    };
+                    assert!(ok);
+                    billing.compute_total().to_bits()
+                };
+                let (got, want) = (run(true), run(false));
+                if got != want {
+                    return Err(format!(
+                        "outbid bill {} != clamped plain bill {}",
+                        f64::from_bits(got),
+                        f64::from_bits(want)
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn market_shocks_splice_only_traced_pools() {
+        let trace = PriceTrace::new(vec![
+            PricePoint { offset: SimDuration::ZERO, factor: 1.0 },
+            PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+        ])
+        .unwrap();
+        let cfgs = vec![
+            PoolCfg::named("traced").pricing(PoolPricingCfg::Trace(trace)),
+            PoolCfg::named("static"),
+        ];
+        let mut fleet = Fleet::new(&cfgs, 7).unwrap();
+        // no windows: a byte-level no-op
+        let before = fleet.price_points(PoolId(0)).to_vec();
+        fleet.splice_market_shocks(&[], 2.0);
+        assert_eq!(fleet.price_points(PoolId(0)), &before[..]);
+
+        // one 2.0× window at [10 min, 20 min): shock on, shock off, and
+        // the underlying 30-min move all survive as change points
+        fleet.splice_market_shocks(
+            &[(SimDuration::from_mins(10), SimDuration::from_mins(20))],
+            2.0,
+        );
+        assert_eq!(
+            fleet.price_points(PoolId(0)),
+            &[
+                PricePoint { offset: SimDuration::from_mins(10), factor: 2.0 },
+                PricePoint { offset: SimDuration::from_mins(20), factor: 1.0 },
+                PricePoint { offset: SimDuration::from_mins(30), factor: 2.0 },
+            ][..]
+        );
+        // the static pool never gains points
+        assert!(fleet.price_points(PoolId(1)).is_empty());
     }
 
     #[test]

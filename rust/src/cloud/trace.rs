@@ -200,6 +200,56 @@ impl PoolTrace {
     }
 }
 
+/// Splice market-shock windows into a scheduled price stream
+/// (`[chaos.market]`): inside each `[start, end)` window the traced
+/// factor is multiplied by `mult`; at `end` the underlying trace's
+/// factor is restored. Pure function over the pool's *scheduled* points
+/// (offsets > 0; the offset-0 factor arrives as `initial_factor`), so
+/// the fleet can rewrite its replay stream before the engine schedules
+/// anything. Windows must be time-ordered, non-overlapping, and start
+/// after t = 0 — [`crate::sim::chaos::FaultPlan`] draws them that way —
+/// which keeps the initial price epoch untouched. The result is a valid
+/// scheduled stream: strictly increasing positive offsets, each factor
+/// the product of two validated-finite positives, with no-op repeats
+/// collapsed.
+pub fn splice_price_shocks(
+    initial_factor: f64,
+    points: &[PricePoint],
+    windows: &[(SimDuration, SimDuration)],
+    mult: f64,
+) -> Vec<PricePoint> {
+    let base_at = |t: SimDuration| {
+        points
+            .iter()
+            .take_while(|p| p.offset <= t)
+            .last()
+            .map(|p| p.factor)
+            .unwrap_or(initial_factor)
+    };
+    let shocked = |t: SimDuration| windows.iter().any(|&(s, e)| s <= t && t < e);
+    let mut offs: Vec<SimDuration> = points.iter().map(|p| p.offset).collect();
+    for &(s, e) in windows {
+        offs.push(s);
+        offs.push(e);
+    }
+    offs.sort();
+    offs.dedup();
+    let mut out = Vec::with_capacity(offs.len());
+    let mut last = initial_factor;
+    for t in offs {
+        debug_assert!(
+            !t.is_zero(),
+            "shock windows and scheduled points start after t = 0"
+        );
+        let f = base_at(t) * if shocked(t) { mult } else { 1.0 };
+        if f != last {
+            out.push(PricePoint { offset: t, factor: f });
+            last = f;
+        }
+    }
+    out
+}
+
 fn parse_mins(tok: &str, line_no: usize) -> Result<SimDuration> {
     let mins: f64 = tok
         .parse()
@@ -407,6 +457,47 @@ mod tests {
         ] {
             assert!(PoolTrace::parse(bad).is_err(), "should reject: {bad}");
         }
+    }
+
+    fn win(s: u64, e: u64) -> (SimDuration, SimDuration) {
+        (SimDuration::from_mins(s), SimDuration::from_mins(e))
+    }
+
+    #[test]
+    fn splice_multiplies_inside_windows_and_restores_after() {
+        // base: 0.8 from start, 1.6 at 80, 1.9 at 160
+        let base = vec![pt(80, 1.6), pt(160, 1.9)];
+        let out = splice_price_shocks(0.8, &base, &[win(30, 100)], 2.0);
+        assert_eq!(
+            out,
+            vec![pt(30, 1.6), pt(80, 3.2), pt(100, 1.6), pt(160, 1.9)]
+        );
+        // splice output is itself a valid scheduled stream
+        assert!(PriceTrace::new(out).is_ok());
+    }
+
+    #[test]
+    fn splice_handles_boundary_coincidence_and_multiple_windows() {
+        let base = vec![pt(80, 1.6)];
+        // window end lands exactly on a base point: one event, not two
+        let out = splice_price_shocks(0.8, &base, &[win(40, 80)], 2.0);
+        assert_eq!(out, vec![pt(40, 1.6), pt(80, 1.6)]);
+        // window start on a base point shocks the new factor directly
+        let out = splice_price_shocks(0.8, &base, &[win(80, 120)], 2.0);
+        assert_eq!(out, vec![pt(80, 3.2), pt(120, 1.6)]);
+        // two disjoint windows each shock and restore
+        let out =
+            splice_price_shocks(1.0, &[], &[win(10, 20), win(50, 60)], 3.0);
+        assert_eq!(
+            out,
+            vec![pt(10, 3.0), pt(20, 1.0), pt(50, 3.0), pt(60, 1.0)]
+        );
+    }
+
+    #[test]
+    fn splice_with_no_windows_is_the_base_stream() {
+        let base = vec![pt(80, 1.6), pt(160, 1.9)];
+        assert_eq!(splice_price_shocks(0.8, &base, &[], 2.0), base);
     }
 
     #[test]

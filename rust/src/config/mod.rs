@@ -10,9 +10,10 @@ pub mod toml;
 pub mod scenario;
 
 pub use scenario::{
-    ArrivalCfg, BackoffCfg, ChaosCfg, ChaosImdsCfg, ChaosStorageCfg,
-    CheckpointMethodCfg, ClampCfg, CloudCfg, ClusterCfg, EvictionPlanCfg,
-    ExpectCfg, FleetCfg, IntervalControllerCfg, PlacementPolicyCfg, PoolCfg,
-    PoolPricingCfg, ScenarioConfig, StorageCfg, WorkloadCfg,
+    ArrivalCfg, AutoscaleCfg, BackoffCfg, BidPolicyCfg, ChaosCfg,
+    ChaosImdsCfg, ChaosMarketCfg, ChaosStorageCfg, CheckpointMethodCfg,
+    ClampCfg, CloudCfg, ClusterCfg, EvictionPlanCfg, ExpectCfg, FleetCfg,
+    IntervalControllerCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+    ScenarioConfig, StorageCfg, WorkloadCfg,
 };
 pub use toml::{TomlDoc, TomlValue};

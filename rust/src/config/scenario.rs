@@ -113,6 +113,15 @@ pub struct PoolCfg {
     /// contended cluster ([`ClusterCfg`]) raises it so several jobs share
     /// the pool and the rest queue. Must be >= 1.
     pub capacity: u32,
+    /// Static bid price ($/h) every instance launched in this pool
+    /// carries: when a traced price epoch pushes the pool's effective
+    /// price *above* the bid, the market reclaims the instance (an
+    /// eviction notice fires from the crossing and billing stops at the
+    /// crossing boundary). Requires a spot pool with traced or walked
+    /// pricing — a static-priced pool can never cross a bid, so a bid
+    /// there is rejected as inert. `None` (the default) never evicts by
+    /// outbid.
+    pub bid: Option<f64>,
 }
 
 impl Default for PoolCfg {
@@ -126,6 +135,7 @@ impl Default for PoolCfg {
             eviction: EvictionPlanCfg::None,
             pricing: PoolPricingCfg::Static,
             capacity: 1,
+            bid: None,
         }
     }
 }
@@ -148,6 +158,7 @@ impl PoolCfg {
             eviction,
             pricing: PoolPricingCfg::Static,
             capacity: 1,
+            bid: None,
         }
     }
 
@@ -183,6 +194,11 @@ impl PoolCfg {
 
     pub fn capacity(mut self, capacity: u32) -> Self {
         self.capacity = capacity;
+        self
+    }
+
+    pub fn bid(mut self, bid: f64) -> Self {
+        self.bid = Some(bid);
         self
     }
 }
@@ -445,6 +461,134 @@ impl ClusterCfg {
     }
 }
 
+/// Which bid-pricing strategy the autoscaler uses when it places a job
+/// on a spot pool ([`crate::autoscale`]). Every strategy is a pure
+/// function of the pool's observable state (current price, factor
+/// history, eviction rate) — no RNG — so autoscaled sweeps stay
+/// byte-identical at any parallelism.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BidPolicyCfg {
+    /// Bid the pool's current effective price times `1 + margin`
+    /// (`margin >= 0`, finite).
+    FixedMargin { margin: f64 },
+    /// Bid the pool's base price times the `q`-quantile (nearest-rank,
+    /// `q` in (0, 1]) of the pool's full traced factor stream —
+    /// application-centric bidding à la Khatua et al.: the quantile
+    /// bounds the fraction of trace time spent above the bid.
+    Percentile { q: f64 },
+    /// Fixed margin inflated by the pool's observed eviction rate:
+    /// `current × (1 + margin × (1 + weight × eviction_rate))` —
+    /// reliability-aware bidding à la Voorsluys & Buyya. Both knobs must
+    /// be finite and >= 0.
+    Reliability { margin: f64, weight: f64 },
+}
+
+impl BidPolicyCfg {
+    pub fn label(&self) -> String {
+        match self {
+            BidPolicyCfg::FixedMargin { margin } => {
+                format!("fixed-margin/{margin}")
+            }
+            BidPolicyCfg::Percentile { q } => format!("percentile/{q}"),
+            BidPolicyCfg::Reliability { margin, weight } => {
+                format!("reliability/{margin}/{weight}")
+            }
+        }
+    }
+
+    /// Build-side validation, mirroring the `[autoscale]` parse rules.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            BidPolicyCfg::FixedMargin { margin } => {
+                if !(margin.is_finite() && *margin >= 0.0) {
+                    bail!(
+                        "autoscale.margin must be finite and non-negative, \
+                         got {margin}"
+                    );
+                }
+            }
+            BidPolicyCfg::Percentile { q } => {
+                if !(q.is_finite() && *q > 0.0 && *q <= 1.0) {
+                    bail!("autoscale.percentile must be in (0, 1], got {q}");
+                }
+            }
+            BidPolicyCfg::Reliability { margin, weight } => {
+                if !(margin.is_finite() && *margin >= 0.0) {
+                    bail!(
+                        "autoscale.margin must be finite and non-negative, \
+                         got {margin}"
+                    );
+                }
+                if !(weight.is_finite() && *weight >= 0.0) {
+                    bail!(
+                        "autoscale.reliability_weight must be finite and \
+                         non-negative, got {weight}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The hybrid spot/on-demand autoscaler ([`crate::autoscale`]): wraps
+/// the cluster's placement policy, bidding on spot pools via a
+/// [`BidPolicyCfg`] strategy and shifting jobs to the named on-demand
+/// fallback pool when the deadline SLA is at risk. TOML: the
+/// `[autoscale]` section (full reference in the `crate::autoscale`
+/// module docs):
+///
+/// ```toml
+/// [job]
+/// deadline_mins = 400            # per-job SLA (required by [autoscale])
+///
+/// [autoscale]
+/// policy = "percentile"          # "fixed-margin" | "percentile"
+///                                # | "reliability"
+/// percentile = 0.9               # policy knob (see BidPolicyCfg)
+/// on_demand_pool = "fallback"    # must name a kind = "on-demand" pool
+/// slack_mins = 60                # shift to on-demand when less than
+///                                # this much headroom remains before
+///                                # the deadline
+/// max_queue = 4                  # shift to on-demand when the
+///                                # admission queue is this deep
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleCfg {
+    /// Bid strategy for spot placements.
+    pub policy: BidPolicyCfg,
+    /// Name of the on-demand fallback pool (must exist in the fleet,
+    /// be `kind = "on-demand"`, and carry no eviction plan or price
+    /// dynamics).
+    pub on_demand_pool: String,
+    /// Shift a job to on-demand when its remaining time-to-deadline
+    /// drops below this slack. Must be positive.
+    pub slack: SimDuration,
+    /// Shift newly placed jobs to on-demand while the admission queue
+    /// holds at least this many waiting jobs. Must be >= 1.
+    pub max_queue: u32,
+}
+
+impl AutoscaleCfg {
+    /// Build-side validation, mirroring the `[autoscale]` parse rules.
+    /// Fleet/cluster cross-checks (the fallback pool exists and is
+    /// on-demand) live in the cluster engine, which sees the whole
+    /// scenario.
+    pub fn validate(&self) -> Result<()> {
+        self.policy.validate()?;
+        if self.on_demand_pool.is_empty() {
+            bail!("autoscale.on_demand_pool must name a pool");
+        }
+        if self.slack.is_zero() {
+            bail!("autoscale.slack_mins must be positive");
+        }
+        if self.max_queue == 0 {
+            bail!("autoscale.max_queue must be >= 1, got 0");
+        }
+        Ok(())
+    }
+}
+
 /// Workload selection + calibration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadCfg {
@@ -694,8 +838,43 @@ impl Default for ChaosImdsCfg {
     }
 }
 
+/// Trace-spliced price shocks ([`crate::sim::chaos`]): spike segments
+/// spliced into every traced pool's price stream at seeded instants.
+/// TOML: the `[chaos.market]` section:
+///
+/// ```toml
+/// [chaos.market]
+/// shocks = 2           # spike windows drawn inside [chaos]'s
+///                      # window_mins (off the salted seed)
+/// factor = 2.5         # price multiplier inside each window (> 1)
+/// duration_mins = 30   # length of each spike window
+/// ```
+///
+/// A shock multiplies the pool's traced factor inside its window and
+/// restores the underlying trace at the window end, so an instance whose
+/// bid the spike crosses is reclaimed by outbid mid-window. Requires at
+/// least one pool with traced or walked pricing — a shock against
+/// static-only pricing would be silently inert and is rejected.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosMarketCfg {
+    pub shocks: u32,
+    pub factor: f64,
+    pub duration: SimDuration,
+}
+
+impl Default for ChaosMarketCfg {
+    fn default() -> Self {
+        Self {
+            shocks: 0,
+            factor: 2.0,
+            duration: SimDuration::from_mins(30),
+        }
+    }
+}
+
 /// Seeded fault injection ([`crate::sim::chaos`]). TOML: the `[chaos]`
-/// section plus its `[chaos.storage]` / `[chaos.imds]` subsections:
+/// section plus its `[chaos.storage]` / `[chaos.imds]` /
+/// `[chaos.market]` subsections:
 ///
 /// ```toml
 /// [chaos]
@@ -722,6 +901,7 @@ pub struct ChaosCfg {
     pub window: SimDuration,
     pub storage: ChaosStorageCfg,
     pub imds: ChaosImdsCfg,
+    pub market: ChaosMarketCfg,
 }
 
 impl Default for ChaosCfg {
@@ -732,6 +912,7 @@ impl Default for ChaosCfg {
             window: SimDuration::from_hours(4),
             storage: ChaosStorageCfg::default(),
             imds: ChaosImdsCfg::default(),
+            market: ChaosMarketCfg::default(),
         }
     }
 }
@@ -761,12 +942,30 @@ impl ChaosCfg {
                  latency_spike_prob > 0"
             );
         }
-        if (self.storms > 0 || self.imds.outages > 0) && self.window.is_zero()
+        if (self.storms > 0
+            || self.imds.outages > 0
+            || self.market.shocks > 0)
+            && self.window.is_zero()
         {
             bail!(
-                "chaos.window_mins must be positive when storms or IMDS \
-                 outages are configured"
+                "chaos.window_mins must be positive when storms, IMDS \
+                 outages or market shocks are configured"
             );
+        }
+        if self.market.shocks > 0 {
+            if !(self.market.factor.is_finite() && self.market.factor > 1.0) {
+                bail!(
+                    "chaos.market.factor must be finite and > 1 (a shock \
+                     is a price *spike*), got {}",
+                    self.market.factor
+                );
+            }
+            if self.market.duration.is_zero() {
+                bail!(
+                    "chaos.market.duration_mins must be positive when \
+                     shocks are configured"
+                );
+            }
         }
         if self.imds.outages > 0 && self.imds.outage_duration.is_zero() {
             bail!(
@@ -802,6 +1001,10 @@ impl ChaosCfg {
 ///                               # unverifiable generations
 /// max_unrecovered_restores = 0  # no restart may lose all generations
 /// zero_dead_letter = true       # no job aborts / fails to finish
+/// max_deadline_misses = 2       # jobs past their [job] deadline,
+///                               # summed across the whole sweep
+/// min_sla_attainment = 0.99     # fraction of deadline-carrying jobs
+///                               # that met their deadline, in [0, 1]
 /// ```
 ///
 /// Every bound is optional, but an empty `[expect]` section is rejected
@@ -819,6 +1022,12 @@ pub struct ExpectCfg {
     pub max_restore_fallbacks: Option<u64>,
     pub max_unrecovered_restores: Option<u64>,
     pub zero_dead_letter: bool,
+    /// Total deadline misses allowed across the whole sweep (requires a
+    /// `[job] deadline_mins` SLA to be configured).
+    pub max_deadline_misses: Option<u64>,
+    /// Minimum fraction of deadline-carrying jobs that met their
+    /// deadline, aggregated across the sweep. Finite, in `[0, 1]`.
+    pub min_sla_attainment: Option<f64>,
 }
 
 impl Default for ExpectCfg {
@@ -834,6 +1043,8 @@ impl Default for ExpectCfg {
             max_restore_fallbacks: None,
             max_unrecovered_restores: None,
             zero_dead_letter: false,
+            max_deadline_misses: None,
+            min_sla_attainment: None,
         }
     }
 }
@@ -850,6 +1061,8 @@ impl ExpectCfg {
             || self.p95_turnaround.is_some()
             || self.max_restore_fallbacks.is_some()
             || self.max_unrecovered_restores.is_some()
+            || self.max_deadline_misses.is_some()
+            || self.min_sla_attainment.is_some()
     }
 
     /// Build-side validation, mirroring the `[expect]` parse rules.
@@ -867,6 +1080,14 @@ impl ExpectCfg {
             if !(v.is_finite() && v >= 0.0) {
                 bail!(
                     "expect.max_cost must be finite and non-negative, got {v}"
+                );
+            }
+        }
+        if let Some(v) = self.min_sla_attainment {
+            if !(v.is_finite() && (0.0..=1.0).contains(&v)) {
+                bail!(
+                    "expect.min_sla_attainment must be a finite fraction \
+                     in [0, 1], got {v}"
                 );
             }
         }
@@ -904,6 +1125,15 @@ pub struct ScenarioConfig {
     /// [`crate::sim::cluster`]; `None` (the default) is the single-job
     /// world.
     pub cluster: Option<ClusterCfg>,
+    /// Per-job deadline SLA (`[job] deadline_mins`), measured from each
+    /// job's submission (run start in the single-job world). Purely
+    /// observational — a run past its deadline still finishes, but
+    /// reports `deadline_missed` and a `DeadlineMissed` timeline event.
+    /// Distinct from the top-level `deadline_mins` *abort* threshold.
+    pub job_deadline: Option<SimDuration>,
+    /// Hybrid spot/on-demand autoscaler (`[autoscale]`), consulted at
+    /// every cluster placement. Requires `cluster` and `job_deadline`.
+    pub autoscale: Option<AutoscaleCfg>,
     pub storage: StorageCfg,
     /// Verified checkpoint generations the store retains (`[checkpoint]
     /// retain`, default 3). Restores fall back generation by generation
@@ -942,6 +1172,8 @@ impl Default for ScenarioConfig {
             cloud: CloudCfg::default(),
             fleet: FleetCfg::default(),
             cluster: None,
+            job_deadline: None,
+            autoscale: None,
             storage: StorageCfg::default(),
             retain: 3,
             retry: None,
@@ -1411,6 +1643,48 @@ impl ScenarioConfig {
             if let Some(v) = doc.get_bool(&sec, "spot") {
                 pool.spot = v;
             }
+            // kind = "spot" | "on-demand": readable sugar over `spot`.
+            // The on-demand kind is strict: it never evicts and its
+            // price never moves, so eviction plans, price dynamics and
+            // bids on it are rejected as contradictions (a bare
+            // `spot = false` keeps the historical permissive semantics).
+            let kind = match doc.get_str(&sec, "kind") {
+                None => None,
+                Some(k) => {
+                    if doc.get(&sec, "spot").is_some() {
+                        bail!(
+                            "{sec}.kind conflicts with {sec}.spot — give one \
+                             or the other"
+                        );
+                    }
+                    match k {
+                        "spot" => pool.spot = true,
+                        "on-demand" => pool.spot = false,
+                        other => bail!(
+                            "unknown {sec}.kind '{other}' (expected \"spot\" \
+                             or \"on-demand\")"
+                        ),
+                    }
+                    Some(k)
+                }
+            };
+            if kind == Some("on-demand") {
+                for key in ["bid", "plan", "price_trace"] {
+                    if doc.get(&sec, key).is_some() {
+                        bail!(
+                            "{sec}.{key} contradicts kind = \"on-demand\" — \
+                             on-demand pools never evict and their price \
+                             never moves"
+                        );
+                    }
+                }
+                if doc.has_section(&format!("{sec}.price_walk")) {
+                    bail!(
+                        "[{sec}.price_walk] contradicts kind = \"on-demand\" \
+                         — on-demand prices never move"
+                    );
+                }
+            }
             if let Some(v) = secs(doc, &sec, "provisioning_delay_secs") {
                 pool.provisioning_delay = v;
             }
@@ -1476,6 +1750,26 @@ impl ScenarioConfig {
                 walk.validate().with_context(|| format!("[{wsec}]"))?;
                 pool.pricing = PoolPricingCfg::Walk(walk);
             }
+            // bid last: its validity depends on the pricing just parsed
+            if let Some(v) = doc.get_f64(&sec, "bid") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("{sec}.bid must be positive and finite, got {v}");
+                }
+                if !pool.spot {
+                    bail!(
+                        "{sec}.bid requires a spot pool — on-demand \
+                         instances are never outbid"
+                    );
+                }
+                if matches!(pool.pricing, PoolPricingCfg::Static) {
+                    bail!(
+                        "{sec}.bid is inert without price dynamics — add a \
+                         price_trace or [{sec}.price_walk] so the price can \
+                         cross the bid"
+                    );
+                }
+                pool.bid = Some(v);
+            }
             cfg.fleet.pools.push(pool);
         }
         // With explicit pools, eviction behaviour lives on the pools; a
@@ -1487,6 +1781,25 @@ impl ScenarioConfig {
                 "[eviction] conflicts with explicit [pool.*] sections — move \
                  the plan into the pools (each pool has its own)"
             );
+        }
+
+        // [job] — per-job SLA knobs (the *observational* deadline, as
+        // opposed to the top-level deadline_mins abort threshold).
+        if doc.has_section("job") {
+            let sec = "job";
+            match doc.get_f64(sec, "deadline_mins") {
+                Some(v) if v.is_finite() && v > 0.0 => {
+                    cfg.job_deadline =
+                        Some(SimDuration::from_secs_f64(v * 60.0));
+                }
+                Some(v) => bail!(
+                    "{sec}.deadline_mins must be positive and finite, got {v}"
+                ),
+                None => bail!(
+                    "[{sec}] requires {sec}.deadline_mins (the per-job SLA \
+                     deadline)"
+                ),
+            }
         }
 
         // [cluster] — contended multi-job scenarios on the shared fleet.
@@ -1619,15 +1932,154 @@ impl ScenarioConfig {
             cfg.cluster = Some(cluster);
         }
 
+        // [autoscale] — hybrid spot/on-demand autoscaler over the
+        // cluster's placement. Inert-knob combinations are rejected in
+        // [checkpoint.adaptive] style: every knob must belong to the
+        // selected policy.
+        if doc.has_section("autoscale") {
+            let sec = "autoscale";
+            if cfg.cluster.is_none() {
+                bail!(
+                    "[{sec}] requires a [cluster] section — the autoscaler \
+                     drives cluster placement"
+                );
+            }
+            if cfg.job_deadline.is_none() {
+                bail!(
+                    "[{sec}] requires [job] deadline_mins — the autoscaler \
+                     holds per-job deadlines"
+                );
+            }
+            let fin = |key: &str| -> Result<Option<f64>> {
+                match doc.get_f64(sec, key) {
+                    None => Ok(None),
+                    Some(v) if v.is_finite() => Ok(Some(v)),
+                    Some(v) => {
+                        bail!("{sec}.{key} must be finite, got {v}")
+                    }
+                }
+            };
+            let margin = fin("margin")?;
+            let percentile = fin("percentile")?;
+            let weight = fin("reliability_weight")?;
+            let policy = match doc.get_str(sec, "policy") {
+                None => bail!(
+                    "[{sec}] requires {sec}.policy (\"fixed-margin\", \
+                     \"percentile\" or \"reliability\")"
+                ),
+                Some("fixed-margin") => {
+                    for (key, v) in
+                        [("percentile", percentile), ("reliability_weight", weight)]
+                    {
+                        if v.is_some() {
+                            bail!(
+                                "{sec}.{key} has no effect with policy = \
+                                 \"fixed-margin\" — remove it or pick the \
+                                 matching policy"
+                            );
+                        }
+                    }
+                    BidPolicyCfg::FixedMargin { margin: margin.unwrap_or(0.5) }
+                }
+                Some("percentile") => {
+                    for (key, v) in
+                        [("margin", margin), ("reliability_weight", weight)]
+                    {
+                        if v.is_some() {
+                            bail!(
+                                "{sec}.{key} has no effect with policy = \
+                                 \"percentile\" — remove it or pick the \
+                                 matching policy"
+                            );
+                        }
+                    }
+                    BidPolicyCfg::Percentile { q: percentile.unwrap_or(0.9) }
+                }
+                Some("reliability") => {
+                    if percentile.is_some() {
+                        bail!(
+                            "{sec}.percentile has no effect with policy = \
+                             \"reliability\" — remove it or pick the \
+                             matching policy"
+                        );
+                    }
+                    BidPolicyCfg::Reliability {
+                        margin: margin.unwrap_or(0.5),
+                        weight: weight.unwrap_or(1.0),
+                    }
+                }
+                Some(other) => bail!("unknown {sec}.policy '{other}'"),
+            };
+            let on_demand_pool = doc
+                .get_str(sec, "on_demand_pool")
+                .with_context(|| {
+                    format!(
+                        "[{sec}] requires {sec}.on_demand_pool (the \
+                         fallback pool's name)"
+                    )
+                })?
+                .to_string();
+            let Some(fallback) =
+                cfg.fleet.pools.iter().find(|p| p.name == on_demand_pool)
+            else {
+                bail!(
+                    "{sec}.on_demand_pool '{on_demand_pool}' does not name \
+                     a [pool.*] section"
+                );
+            };
+            if fallback.spot {
+                bail!(
+                    "{sec}.on_demand_pool '{on_demand_pool}' is a spot pool \
+                     — the fallback must be kind = \"on-demand\""
+                );
+            }
+            if fallback.eviction != EvictionPlanCfg::None
+                || fallback.pricing != PoolPricingCfg::Static
+            {
+                bail!(
+                    "{sec}.on_demand_pool '{on_demand_pool}' must carry no \
+                     eviction plan or price dynamics"
+                );
+            }
+            let mut autoscale = AutoscaleCfg {
+                policy,
+                on_demand_pool,
+                slack: SimDuration::from_mins(60),
+                max_queue: 4,
+            };
+            match doc.get_f64(sec, "slack_mins") {
+                None => {}
+                Some(v) if v.is_finite() && v > 0.0 => {
+                    autoscale.slack = SimDuration::from_secs_f64(v * 60.0);
+                }
+                Some(v) => bail!(
+                    "{sec}.slack_mins must be positive and finite, got {v}"
+                ),
+            }
+            if let Some(raw) = doc.get(sec, "max_queue") {
+                let v = raw.as_u64().with_context(|| {
+                    format!("{sec}.max_queue must be a non-negative integer")
+                })?;
+                if v == 0 {
+                    bail!("{sec}.max_queue must be >= 1, got 0");
+                }
+                autoscale.max_queue = u32::try_from(v).with_context(|| {
+                    format!("{sec}.max_queue {v} is out of range")
+                })?;
+            }
+            autoscale.validate()?;
+            cfg.autoscale = Some(autoscale);
+        }
+
         // [chaos] + [chaos.storage] + [chaos.imds] — seeded fault
         // injection. Any of the three sections enables chaos; unknown
         // chaos subsections are rejected like unknown pool subsections.
         for sec in doc.sections.keys() {
             if let Some(rest) = sec.strip_prefix("chaos.") {
-                if rest != "storage" && rest != "imds" {
+                if rest != "storage" && rest != "imds" && rest != "market" {
                     bail!(
                         "unknown chaos subsection [chaos.{rest}] (only \
-                         storage and imds are recognized)"
+                         storage, imds and market are recognized)"
                     );
                 }
             }
@@ -1635,6 +2087,7 @@ impl ScenarioConfig {
         if doc.has_section("chaos")
             || doc.has_section("chaos.storage")
             || doc.has_section("chaos.imds")
+            || doc.has_section("chaos.market")
         {
             let mut chaos = ChaosCfg::default();
             if let Some(raw) = doc.get("chaos", "salt") {
@@ -1712,6 +2165,43 @@ impl ScenarioConfig {
                         format!("{isec}.degraded_poll_factor is out of range")
                     })?;
             }
+            let msec = "chaos.market";
+            if let Some(raw) = doc.get(msec, "shocks") {
+                let v = raw.as_u64().with_context(|| {
+                    format!("{msec}.shocks must be a non-negative integer")
+                })?;
+                chaos.market.shocks = u32::try_from(v)
+                    .with_context(|| format!("{msec}.shocks is out of range"))?;
+            }
+            if let Some(v) = doc.get_f64(msec, "factor") {
+                if !(v.is_finite() && v > 1.0) {
+                    bail!(
+                        "{msec}.factor must be finite and > 1 (a shock is a \
+                         price *spike*), got {v}"
+                    );
+                }
+                chaos.market.factor = v;
+            }
+            if let Some(v) = doc.get_f64(msec, "duration_mins") {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!(
+                        "{msec}.duration_mins must be positive and finite, \
+                         got {v}"
+                    );
+                }
+                chaos.market.duration = SimDuration::from_secs_f64(v * 60.0);
+            }
+            if chaos.market.shocks > 0
+                && !cfg.fleet.pools.iter().any(|p| {
+                    !matches!(p.pricing, PoolPricingCfg::Static)
+                })
+            {
+                bail!(
+                    "{msec}.shocks require at least one pool with traced or \
+                     walked pricing — a shock against static-only pricing \
+                     is inert"
+                );
+            }
             chaos.validate()?;
             cfg.chaos = Some(chaos);
         }
@@ -1753,6 +2243,26 @@ impl ScenarioConfig {
             expect.max_restore_fallbacks = count("max_restore_fallbacks")?;
             expect.max_unrecovered_restores =
                 count("max_unrecovered_restores")?;
+            expect.max_deadline_misses = count("max_deadline_misses")?;
+            if let Some(v) = doc.get_f64(sec, "min_sla_attainment") {
+                if !(v.is_finite() && (0.0..=1.0).contains(&v)) {
+                    bail!(
+                        "{sec}.min_sla_attainment must be a finite fraction \
+                         in [0, 1], got {v}"
+                    );
+                }
+                expect.min_sla_attainment = Some(v);
+            }
+            if (expect.max_deadline_misses.is_some()
+                || expect.min_sla_attainment.is_some())
+                && cfg.job_deadline.is_none()
+            {
+                bail!(
+                    "{sec}.max_deadline_misses / {sec}.min_sla_attainment \
+                     require [job] deadline_mins — without an SLA there is \
+                     nothing to miss"
+                );
+            }
             if let Some(v) = doc.get_f64(sec, "max_cost") {
                 if !(v.is_finite() && v >= 0.0) {
                     bail!(
@@ -2659,5 +3169,282 @@ ceil = 1.6
                 "error for {bad:?} should name the section: {err}"
             );
         }
+    }
+
+    #[test]
+    fn pool_kind_and_bid_parse() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[fleet]\nplacement = \"cheapest-spot\"\n\
+             [pool.east]\nkind = \"spot\"\ncapacity = 4\nbid = 0.2\n\
+             [pool.east.price_walk]\nstart = 1.0\n\
+             [pool.ondemand]\nkind = \"on-demand\"\ncapacity = 2\n",
+        )
+        .unwrap();
+        let pools = &cfg.fleet.pools;
+        assert_eq!(pools.len(), 2);
+        assert!(pools[0].spot);
+        assert_eq!(pools[0].bid, Some(0.2));
+        assert_eq!(pools[0].capacity, 4);
+        assert!(matches!(pools[0].pricing, PoolPricingCfg::Walk(_)));
+        assert!(!pools[1].spot);
+        assert_eq!(pools[1].bid, None);
+        assert_eq!(pools[1].capacity, 2);
+        assert!(matches!(pools[1].pricing, PoolPricingCfg::Static));
+    }
+
+    #[test]
+    fn pool_kind_rejects_contradictions() {
+        for bad in [
+            // kind is sugar over spot: giving both is ambiguous
+            "[pool.a]\nkind = \"spot\"\nspot = true\n",
+            "[pool.a]\nkind = \"balloon\"\n",
+            // a strict on-demand pool never evicts and its price never
+            // moves — the knobs below contradict it
+            "[pool.a]\nkind = \"on-demand\"\nbid = 0.1\n",
+            "[pool.a]\nkind = \"on-demand\"\nplan = \"fixed\"\n",
+            "[pool.a]\nkind = \"on-demand\"\nprice_trace = \"x.trace\"\n",
+            "[pool.a]\nkind = \"on-demand\"\n[pool.a.price_walk]\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("kind")
+                    || err.to_string().contains("on-demand"),
+                "error for {bad:?} should explain the kind rule: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn pool_bid_rejects_bad_values() {
+        for bad in [
+            "[pool.a]\nbid = 0.0\n[pool.a.price_walk]\nstart = 1.0\n",
+            "[pool.a]\nbid = -0.5\n[pool.a.price_walk]\nstart = 1.0\n",
+            "[pool.a]\nbid = 1e400\n[pool.a.price_walk]\nstart = 1.0\n",
+            // bids only mean something where an auction can be lost
+            "[pool.a]\nspot = false\nbid = 0.1\n\
+             [pool.a.price_walk]\nstart = 1.0\n",
+            // and only where the price can actually move
+            "[pool.a]\nbid = 0.1\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("bid"),
+                "error for {bad:?} should name the bid: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn job_section_parses_and_rejects() {
+        let cfg =
+            ScenarioConfig::from_str_toml("[job]\ndeadline_mins = 360\n")
+                .unwrap();
+        assert_eq!(cfg.job_deadline, Some(SimDuration::from_mins(360)));
+        assert_eq!(
+            ScenarioConfig::from_str_toml("name = \"x\"").unwrap().job_deadline,
+            None
+        );
+        for bad in [
+            "[job]\n",
+            "[job]\ndeadline_mins = 0\n",
+            "[job]\ndeadline_mins = -5\n",
+            "[job]\ndeadline_mins = 1e400\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("deadline_mins"),
+                "error for {bad:?} should name the knob: {err}"
+            );
+        }
+    }
+
+    /// A hybrid fleet + cluster + SLA skeleton the `[autoscale]` tests
+    /// graft different autoscale bodies onto.
+    fn hybrid_scenario(autoscale: &str) -> String {
+        format!(
+            "[fleet]\nplacement = \"cheapest-spot\"\n\
+             [pool.east]\ncapacity = 4\n\
+             [pool.east.price_walk]\nstart = 1.0\n\
+             [pool.ondemand]\nkind = \"on-demand\"\ncapacity = 4\n\
+             [cluster]\njobs = 4\n\
+             [job]\ndeadline_mins = 240\n\
+             {autoscale}"
+        )
+    }
+
+    #[test]
+    fn autoscale_section_parses() {
+        let cfg = ScenarioConfig::from_str_toml(&hybrid_scenario(
+            "[autoscale]\npolicy = \"percentile\"\npercentile = 0.25\n\
+             on_demand_pool = \"ondemand\"\nslack_mins = 45\nmax_queue = 6\n",
+        ))
+        .unwrap();
+        let auto = cfg.autoscale.unwrap();
+        assert_eq!(auto.policy, BidPolicyCfg::Percentile { q: 0.25 });
+        assert_eq!(auto.on_demand_pool, "ondemand");
+        assert_eq!(auto.slack, SimDuration::from_mins(45));
+        assert_eq!(auto.max_queue, 6);
+
+        // policy knobs default per policy; slack/max_queue globally
+        let cfg = ScenarioConfig::from_str_toml(&hybrid_scenario(
+            "[autoscale]\npolicy = \"fixed-margin\"\n\
+             on_demand_pool = \"ondemand\"\n",
+        ))
+        .unwrap();
+        let auto = cfg.autoscale.unwrap();
+        assert_eq!(auto.policy, BidPolicyCfg::FixedMargin { margin: 0.5 });
+        assert_eq!(auto.slack, SimDuration::from_mins(60));
+        assert_eq!(auto.max_queue, 4);
+
+        let cfg = ScenarioConfig::from_str_toml(&hybrid_scenario(
+            "[autoscale]\npolicy = \"reliability\"\nmargin = 0.3\n\
+             reliability_weight = 2.0\non_demand_pool = \"ondemand\"\n",
+        ))
+        .unwrap();
+        assert_eq!(
+            cfg.autoscale.unwrap().policy,
+            BidPolicyCfg::Reliability { margin: 0.3, weight: 2.0 }
+        );
+    }
+
+    #[test]
+    fn autoscale_section_rejects_bad_knobs() {
+        let cases: Vec<String> = vec![
+            // the autoscaler drives cluster placement over an SLA: both
+            // the [cluster] and the [job] deadline must exist
+            "[autoscale]\npolicy = \"percentile\"\n\
+             on_demand_pool = \"x\"\n"
+                .to_string(),
+            "[pool.od]\nkind = \"on-demand\"\n[cluster]\njobs = 2\n\
+             [autoscale]\npolicy = \"percentile\"\n\
+             on_demand_pool = \"od\"\n"
+                .to_string(),
+            hybrid_scenario("[autoscale]\non_demand_pool = \"ondemand\"\n"),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"greedy\"\n\
+                 on_demand_pool = \"ondemand\"\n",
+            ),
+            // inert knobs are rejected per policy
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"fixed-margin\"\npercentile = 0.5\n\
+                 on_demand_pool = \"ondemand\"\n",
+            ),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"percentile\"\nmargin = 0.5\n\
+                 on_demand_pool = \"ondemand\"\n",
+            ),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"reliability\"\npercentile = 0.5\n\
+                 on_demand_pool = \"ondemand\"\n",
+            ),
+            // the fallback must exist, and must really be on-demand
+            hybrid_scenario("[autoscale]\npolicy = \"percentile\"\n"),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"percentile\"\n\
+                 on_demand_pool = \"nope\"\n",
+            ),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"percentile\"\n\
+                 on_demand_pool = \"east\"\n",
+            ),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"percentile\"\n\
+                 on_demand_pool = \"ondemand\"\nslack_mins = 0\n",
+            ),
+            hybrid_scenario(
+                "[autoscale]\npolicy = \"percentile\"\n\
+                 on_demand_pool = \"ondemand\"\nmax_queue = 0\n",
+            ),
+        ];
+        for bad in &cases {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(
+                err.to_string().contains("autoscale")
+                    || err.to_string().contains("on_demand_pool"),
+                "error for {bad:?} should name the section: {err}"
+            );
+        }
+        // a permissive `spot = false` fallback still may not carry price
+        // dynamics
+        let bad = "[fleet]\nplacement = \"cheapest-spot\"\n\
+                   [pool.east]\ncapacity = 4\n\
+                   [pool.east.price_walk]\nstart = 1.0\n\
+                   [pool.od]\nspot = false\n\
+                   [pool.od.price_walk]\nstart = 1.0\n\
+                   [cluster]\njobs = 4\n[job]\ndeadline_mins = 240\n\
+                   [autoscale]\npolicy = \"percentile\"\n\
+                   on_demand_pool = \"od\"\n";
+        let err = ScenarioConfig::from_str_toml(bad).unwrap_err();
+        assert!(err.to_string().contains("price dynamics"), "{err}");
+    }
+
+    #[test]
+    fn chaos_market_parses_and_rejects() {
+        let cfg = ScenarioConfig::from_str_toml(
+            "[pool.east]\n[pool.east.price_walk]\nstart = 1.0\n\
+             [chaos.market]\nshocks = 2\nfactor = 1.4\n\
+             duration_mins = 20\n",
+        )
+        .unwrap();
+        let market = cfg.chaos.unwrap().market;
+        assert_eq!(market.shocks, 2);
+        assert_eq!(market.factor, 1.4);
+        assert_eq!(market.duration, SimDuration::from_mins(20));
+        // a shock is a *spike*: the factor must exceed 1
+        for bad_factor in ["1.0", "0.5", "-2.0", "1e400"] {
+            let err = ScenarioConfig::from_str_toml(&format!(
+                "[pool.east]\n[pool.east.price_walk]\nstart = 1.0\n\
+                 [chaos.market]\nshocks = 1\nfactor = {bad_factor}\n"
+            ))
+            .expect_err(&format!("accepted factor {bad_factor}"));
+            assert!(err.to_string().contains("factor"), "{err}");
+        }
+        // shocks against static-only pricing are inert
+        let err = ScenarioConfig::from_str_toml(
+            "[pool.east]\n[chaos.market]\nshocks = 1\n",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("traced or walked"), "{err}");
+        // shocks = 0 with moving prices is a valid (inert) baseline
+        let cfg = ScenarioConfig::from_str_toml(
+            "[pool.east]\n[pool.east.price_walk]\nstart = 1.0\n\
+             [chaos.market]\nshocks = 0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.unwrap().market.shocks, 0);
+    }
+
+    #[test]
+    fn expect_deadline_bounds_require_a_job_deadline() {
+        for bad in [
+            "[expect]\nmax_deadline_misses = 0\n",
+            "[expect]\nmin_sla_attainment = 0.99\n",
+        ] {
+            let err = ScenarioConfig::from_str_toml(bad)
+                .expect_err(&format!("accepted: {bad}"));
+            assert!(err.to_string().contains("deadline_mins"), "{err}");
+        }
+        for bad_frac in ["1.5", "-0.1", "1e400"] {
+            let err = ScenarioConfig::from_str_toml(&format!(
+                "[job]\ndeadline_mins = 100\n\
+                 [expect]\nmin_sla_attainment = {bad_frac}\n"
+            ))
+            .expect_err(&format!("accepted fraction {bad_frac}"));
+            assert!(err.to_string().contains("min_sla_attainment"), "{err}");
+        }
+        let cfg = ScenarioConfig::from_str_toml(
+            "[job]\ndeadline_mins = 100\n\
+             [expect]\nseeds = 2\nmax_deadline_misses = 1\n\
+             min_sla_attainment = 0.9\n",
+        )
+        .unwrap();
+        let expect = cfg.expect.unwrap();
+        assert_eq!(expect.seeds, 2);
+        assert_eq!(expect.max_deadline_misses, Some(1));
+        assert_eq!(expect.min_sla_attainment, Some(0.9));
     }
 }

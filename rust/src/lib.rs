@@ -33,7 +33,19 @@
 //!   spot-price histories (files under `traces/`) replayed as
 //!   `PoolPriceChanged` events, so placement re-decides as the market
 //!   shifts and billing splits instance uptime piecewise at every price
-//!   boundary. The checkpoint cadence itself is tuned online by the
+//!   boundary. Traced pools are **bid-aware spot markets**: a pool (or
+//!   the [`autoscale`] subsystem's bid policies — fixed-margin,
+//!   percentile-of-trace à la Khatua, reliability-aware à la
+//!   Voorsluys) attaches a maximum hourly price to each launch, and
+//!   when a price epoch crosses the bid the market *outbids* the
+//!   instance — the eviction notice fires from the crossing and
+//!   billing stops at the crossing boundary. Above the market sits the
+//!   hybrid spot/on-demand [`autoscale::Autoscaler`]: driven by queue
+//!   depth, bid viability and time-to-deadline, it shifts
+//!   deadline-SLA jobs (`[job] deadline_mins`) onto a never-evicting
+//!   on-demand fallback pool, and [`report::frontier`] tabulates the
+//!   resulting cost-vs-attainment frontier. The checkpoint cadence
+//!   itself is tuned online by the
 //!   [`policy`] subsystem: pluggable interval controllers (fixed,
 //!   Young/Daly from an online per-pool eviction-rate estimator,
 //!   cost-aware scaling with the traced price) consulted at every step
@@ -136,6 +148,7 @@ pub mod runtime;
 pub mod workload;
 pub mod coordinator;
 pub mod policy;
+pub mod autoscale;
 pub mod sim;
 pub mod metrics;
 pub mod report;

@@ -85,6 +85,20 @@ pub enum EventKind {
     /// Restore exhausted every retained generation without finding a
     /// verifiable one (the run restarts from scratch).
     UnrecoveredRestore,
+    // --- bid-aware market + autoscale events (see `crate::autoscale`).
+    //     Digest-gated like the chaos kinds: bid-less runs keep their
+    //     pre-bid digests byte for byte. ---
+    /// A traced price epoch crossed a live instance's bid: the market
+    /// reclaims the instance (notice fires from the crossing; billing
+    /// stops at the crossing boundary).
+    PoolOutbid,
+    /// A job with a `[job] deadline_mins` SLA finished (or aborted) past
+    /// its deadline.
+    DeadlineMissed,
+    /// The autoscaler overrode the placement policy to shift a job
+    /// between spot pools and the on-demand fallback (detail names the
+    /// reason and the target pool).
+    AutoscaleShift,
 }
 
 /// Number of [`EventKind`] variants (sizes the per-kind counter array).
@@ -92,7 +106,7 @@ const N_KINDS: usize = EventKind::ALL.len();
 
 impl EventKind {
     /// Every variant, in discriminant order.
-    pub const ALL: [EventKind; 29] = [
+    pub const ALL: [EventKind; 32] = [
         EventKind::InstanceLaunch,
         EventKind::RestoreFromCheckpoint,
         EventKind::CheckpointCommitted,
@@ -122,6 +136,9 @@ impl EventKind {
         EventKind::CkptRetried,
         EventKind::RestoreFallback,
         EventKind::UnrecoveredRestore,
+        EventKind::PoolOutbid,
+        EventKind::DeadlineMissed,
+        EventKind::AutoscaleShift,
     ];
 
     /// The chaos/degradation kinds appended by the fault-injection
@@ -143,6 +160,23 @@ impl EventKind {
                 | EventKind::UnrecoveredRestore
         )
     }
+
+    /// Kinds whose zero counts are *omitted* from run/cluster digests:
+    /// the chaos kinds plus the bid/autoscale kinds. Gating on observed
+    /// counts keeps digests of runs that never see these events
+    /// byte-identical to digests minted before the kinds existed, while
+    /// any injected fault / outbid / missed deadline still lands in the
+    /// digest.
+    pub fn is_digest_gated(self) -> bool {
+        self.is_chaos()
+            || matches!(
+                self,
+                EventKind::PoolOutbid
+                    | EventKind::DeadlineMissed
+                    | EventKind::AutoscaleShift
+            )
+    }
+
     pub fn as_str(self) -> &'static str {
         match self {
             EventKind::InstanceLaunch => "launch",
@@ -174,6 +208,9 @@ impl EventKind {
             EventKind::CkptRetried => "ckpt-retried",
             EventKind::RestoreFallback => "restore-fallback",
             EventKind::UnrecoveredRestore => "restore-unrecovered",
+            EventKind::PoolOutbid => "outbid",
+            EventKind::DeadlineMissed => "deadline-missed",
+            EventKind::AutoscaleShift => "autoscale",
         }
     }
 }
@@ -389,25 +426,33 @@ mod tests {
                 | EventKind::PollDegraded
                 | EventKind::CkptRetried
                 | EventKind::RestoreFallback
-                | EventKind::UnrecoveredRestore => {}
+                | EventKind::UnrecoveredRestore
+                | EventKind::PoolOutbid
+                | EventKind::DeadlineMissed
+                | EventKind::AutoscaleShift => {}
             }
         }
         assert_eq!(t.events().len(), EventKind::ALL.len());
     }
 
     #[test]
-    fn chaos_kinds_are_a_contiguous_tail() {
-        // the digest writers rely on every chaos kind sorting after every
-        // pre-chaos kind, so skipping zero-count chaos kinds reproduces
-        // the pre-chaos digest byte for byte
-        let first_chaos = EventKind::ALL
+    fn gated_kinds_are_a_contiguous_tail() {
+        // the digest writers rely on every digest-gated kind (chaos +
+        // bid/autoscale) sorting after every ungated kind, so skipping
+        // zero-count gated kinds reproduces the pre-gating digest byte
+        // for byte
+        let first_gated = EventKind::ALL
             .iter()
-            .position(|k| k.is_chaos())
-            .expect("chaos kinds exist");
+            .position(|k| k.is_digest_gated())
+            .expect("gated kinds exist");
         for (i, k) in EventKind::ALL.iter().enumerate() {
-            assert_eq!(k.is_chaos(), i >= first_chaos, "{}", k.as_str());
+            assert_eq!(k.is_digest_gated(), i >= first_gated, "{}", k.as_str());
+            // every chaos kind is digest-gated (chaos ⊆ gated)
+            if k.is_chaos() {
+                assert!(k.is_digest_gated(), "{}", k.as_str());
+            }
         }
-        assert_eq!(first_chaos, 19, "pre-chaos kind count is pinned");
+        assert_eq!(first_gated, 19, "ungated kind count is pinned");
     }
 
     #[test]

@@ -61,6 +61,49 @@ fn active_bounds(cfg: &ExpectCfg) -> usize {
         + usize::from(cfg.p95_turnaround.is_some())
         + usize::from(cfg.max_restore_fallbacks.is_some())
         + usize::from(cfg.max_unrecovered_restores.is_some())
+        + usize::from(cfg.max_deadline_misses.is_some())
+        + usize::from(cfg.min_sla_attainment.is_some())
+}
+
+/// Aggregate deadline-SLA bounds over every verdict in the population
+/// (`[job] deadline_mins` gives each run/job a `deadline_missed`
+/// verdict; parse rejects these bounds without one).
+fn deadline_bounds(
+    cfg: &ExpectCfg,
+    v: &mut Vec<Violation>,
+    verdicts: impl Iterator<Item = bool>,
+) {
+    if cfg.max_deadline_misses.is_none() && cfg.min_sla_attainment.is_none() {
+        return;
+    }
+    let (mut misses, mut total) = (0u64, 0u64);
+    for missed in verdicts {
+        total += 1;
+        if missed {
+            misses += 1;
+        }
+    }
+    if let Some(bound) = cfg.max_deadline_misses {
+        if misses > bound {
+            push(v, "max_deadline_misses", format!(
+                "{misses} deadline miss(es) > {bound} across the sweep"
+            ));
+        }
+    }
+    if let Some(bound) = cfg.min_sla_attainment {
+        if total == 0 {
+            push(v, "min_sla_attainment", format!(
+                "no job carried a deadline verdict (bound {bound})"
+            ));
+        } else {
+            let att = (total - misses) as f64 / total as f64;
+            if att < bound {
+                push(v, "min_sla_attainment", format!(
+                    "attainment {att:.4} < {bound} over {total} job(s)"
+                ));
+            }
+        }
+    }
 }
 
 /// Evaluate `[expect]` over a merged single-job sweep (seed order). With
@@ -86,6 +129,11 @@ pub fn evaluate_runs(
         runs.iter().map(|r| r.result.total.as_secs_f64()).collect();
     percentile_bound(cfg.p95_makespan, "p95_makespan", &makespans, &mut v);
     percentile_bound(cfg.p95_turnaround, "p95_turnaround", &makespans, &mut v);
+    deadline_bounds(
+        cfg,
+        &mut v,
+        runs.iter().filter_map(|r| r.result.deadline_missed),
+    );
     ExpectReport {
         scenario: scenario.to_string(),
         seeds: runs.iter().map(|r| r.seed).collect(),
@@ -132,6 +180,13 @@ pub fn evaluate_cluster(
         "p95_turnaround",
         &turnarounds,
         &mut v,
+    );
+    deadline_bounds(
+        cfg,
+        &mut v,
+        runs.iter().flat_map(|r| {
+            r.result.jobs.iter().filter_map(|j| j.result.deadline_missed)
+        }),
     );
     ExpectReport {
         scenario: scenario.to_string(),
@@ -337,6 +392,55 @@ mod tests {
         let a = render(&evaluate_runs(&cfg, "expect-unit", &runs));
         let b = render(&evaluate_runs(&cfg, "expect-unit", &runs));
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deadline_bounds_pass_and_fail_on_the_aggregate() {
+        // A generous deadline: every run finishes well inside it.
+        let mut exp = Experiment::table1()
+            .named("expect-sla")
+            .scale_stages(0.02)
+            .transparent(SimDuration::from_mins(10))
+            .deadline(SimDuration::from_hours(400));
+        exp.cfg.job_deadline = Some(SimDuration::from_hours(300));
+        let runs =
+            exp.sweep().seed_range(0, 3).threads(1).run().unwrap();
+        assert!(
+            runs.iter().all(|r| r.result.deadline_missed == Some(false)),
+            "generous deadline must be met"
+        );
+        let pass = ExpectCfg {
+            seeds: 3,
+            max_deadline_misses: Some(0),
+            min_sla_attainment: Some(1.0),
+            ..ExpectCfg::default()
+        };
+        let rep = evaluate_runs(&pass, "expect-sla", &runs);
+        assert!(rep.passed(), "{:?}", rep.violations);
+        assert_eq!(rep.checks, 2);
+
+        // An impossible deadline: every run misses, both bounds trip.
+        exp.cfg.job_deadline = Some(SimDuration::from_millis(1));
+        let runs =
+            exp.sweep().seed_range(0, 3).threads(1).run().unwrap();
+        assert!(runs
+            .iter()
+            .all(|r| r.result.deadline_missed == Some(true)));
+        let rep = evaluate_runs(&pass, "expect-sla", &runs);
+        assert!(!rep.passed());
+        let bounds: Vec<&str> =
+            rep.violations.iter().map(|v| v.bound.as_str()).collect();
+        assert_eq!(
+            bounds,
+            ["max_deadline_misses", "min_sla_attainment"],
+            "{:?}",
+            rep.violations
+        );
+        assert!(
+            rep.violations[1].detail.contains("attainment 0.0000"),
+            "{:?}",
+            rep.violations
+        );
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! The cost-vs-SLA frontier: what deadline attainment costs.
+//!
+//! Bid-aware spot placement and the hybrid autoscaler
+//! ([`crate::autoscale`]) trade money for deadline attainment: all-spot
+//! with aggressive bids is cheap but misses deadlines when the market
+//! spikes; all-on-demand holds every deadline at the undiscounted
+//! price; the hybrid sits between. This module reduces labeled cluster
+//! populations (one label per configuration — e.g. `"all-spot"`,
+//! `"hybrid"`, `"on-demand"`) to one [`FrontierPoint`] each — mean
+//! cost, aggregate SLA attainment, total misses — marks Pareto
+//! domination (a point is dominated when some other point costs no
+//! more *and* attains no less), and renders the frontier as a
+//! [`TextTable`]. `examples/bid_frontier.rs` drives it end to end.
+
+use super::table::TextTable;
+use crate::sim::cluster::ClusterResult;
+
+/// One configuration's position on the cost-vs-SLA plane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrontierPoint {
+    /// Configuration label (stable; supplied by the caller).
+    pub label: String,
+    /// Mean total cost per run (compute + storage, all jobs).
+    pub mean_cost: f64,
+    /// Aggregate deadline attainment across every run's verdict-carrying
+    /// jobs; `None` when no job carried a deadline.
+    pub sla: Option<f64>,
+    /// Total deadline misses across the population.
+    pub misses: usize,
+    /// Runs reduced into this point.
+    pub runs: usize,
+    /// Pareto-dominated: some other point costs no more and attains no
+    /// less (strictly better on at least one axis).
+    pub dominated: bool,
+}
+
+/// Reduce one labeled population to its frontier point (domination is
+/// marked later, across points, by [`frontier`]).
+fn reduce(label: &str, results: &[ClusterResult]) -> FrontierPoint {
+    let runs = results.len();
+    let mean_cost = if runs == 0 {
+        0.0
+    } else {
+        results.iter().map(|r| r.total_cost()).sum::<f64>() / runs as f64
+    };
+    let (mut met, mut with_verdict) = (0usize, 0usize);
+    let mut misses = 0usize;
+    for r in results {
+        for j in &r.jobs {
+            if let Some(missed) = j.result.deadline_missed {
+                with_verdict += 1;
+                if missed {
+                    misses += 1;
+                } else {
+                    met += 1;
+                }
+            }
+        }
+    }
+    let sla =
+        (with_verdict > 0).then(|| met as f64 / with_verdict as f64);
+    FrontierPoint {
+        label: label.to_string(),
+        mean_cost,
+        sla,
+        misses,
+        runs,
+        dominated: false,
+    }
+}
+
+/// Build the frontier from labeled populations, sorted cheapest first,
+/// with Pareto domination marked. Input order among equal costs is
+/// preserved (stable sort on a total-order key), so the table is
+/// deterministic for any fixed input.
+pub fn frontier(groups: &[(&str, Vec<ClusterResult>)]) -> Vec<FrontierPoint> {
+    let mut points: Vec<FrontierPoint> =
+        groups.iter().map(|(label, rs)| reduce(label, rs)).collect();
+    points.sort_by(|a, b| {
+        // costs are sums of validated finite prices; compare totally
+        a.mean_cost
+            .partial_cmp(&b.mean_cost)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    for i in 0..points.len() {
+        let (ci, si) = (points[i].mean_cost, points[i].sla.unwrap_or(1.0));
+        points[i].dominated = points.iter().enumerate().any(|(k, other)| {
+            if k == i {
+                return false;
+            }
+            let (ck, sk) = (other.mean_cost, other.sla.unwrap_or(1.0));
+            ck <= ci && sk >= si && (ck < ci || sk > si)
+        });
+    }
+    points
+}
+
+/// Render the frontier as an aligned text table.
+pub fn render_frontier(points: &[FrontierPoint]) -> String {
+    let mut t = TextTable::new(&[
+        "config",
+        "mean cost",
+        "SLA",
+        "misses",
+        "runs",
+        "frontier",
+    ]);
+    for p in points {
+        t.row(&[
+            p.label.clone(),
+            crate::util::fmt::dollars(p.mean_cost),
+            match p.sla {
+                Some(s) => format!("{:.2}%", s * 100.0),
+                None => "n/a".into(),
+            },
+            p.misses.to_string(),
+            p.runs.to_string(),
+            if p.dominated { "dominated" } else { "*" }.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(label: &str, cost: f64, sla: f64, misses: usize) -> FrontierPoint {
+        FrontierPoint {
+            label: label.into(),
+            mean_cost: cost,
+            sla: Some(sla),
+            misses,
+            runs: 10,
+            dominated: false,
+        }
+    }
+
+    /// Domination marking over hand-built points (the reduce path is
+    /// exercised end to end by `examples/bid_frontier.rs`).
+    fn mark(mut points: Vec<FrontierPoint>) -> Vec<FrontierPoint> {
+        points.sort_by(|a, b| {
+            a.mean_cost
+                .partial_cmp(&b.mean_cost)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for i in 0..points.len() {
+            let (ci, si) =
+                (points[i].mean_cost, points[i].sla.unwrap_or(1.0));
+            points[i].dominated =
+                points.iter().enumerate().any(|(k, other)| {
+                    if k == i {
+                        return false;
+                    }
+                    let (ck, sk) =
+                        (other.mean_cost, other.sla.unwrap_or(1.0));
+                    ck <= ci && sk >= si && (ck < ci || sk > si)
+                });
+        }
+        points
+    }
+
+    #[test]
+    fn pareto_marks_strictly_worse_points() {
+        let pts = mark(vec![
+            pt("all-spot", 1.0, 0.80, 6),
+            pt("hybrid", 1.5, 0.99, 1),
+            pt("wasteful", 2.0, 0.90, 3), // costlier AND worse than hybrid
+            pt("on-demand", 3.0, 1.00, 0),
+        ]);
+        let by_label = |l: &str| pts.iter().find(|p| p.label == l).unwrap();
+        assert!(!by_label("all-spot").dominated);
+        assert!(!by_label("hybrid").dominated);
+        assert!(by_label("wasteful").dominated);
+        assert!(!by_label("on-demand").dominated);
+        // sorted cheapest first
+        assert_eq!(pts[0].label, "all-spot");
+        assert_eq!(pts[3].label, "on-demand");
+    }
+
+    #[test]
+    fn equal_points_do_not_dominate_each_other() {
+        let pts = mark(vec![pt("a", 1.0, 0.9, 1), pt("b", 1.0, 0.9, 1)]);
+        assert!(pts.iter().all(|p| !p.dominated));
+    }
+
+    #[test]
+    fn render_includes_every_label_and_flags() {
+        let s = render_frontier(&mark(vec![
+            pt("cheap", 1.0, 0.5, 5),
+            pt("good", 1.0, 0.99, 1),
+        ]));
+        assert!(s.contains("cheap"));
+        assert!(s.contains("good"));
+        assert!(s.contains("dominated"), "{s}");
+        assert!(s.contains("99.00%"), "{s}");
+    }
+}

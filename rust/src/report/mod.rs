@@ -17,6 +17,9 @@
 //!   (what was injected, what the coordinator absorbed).
 //! * [`expect`] — `[expect]` evaluation over sweeps and cluster sweeps,
 //!   the engine behind `spoton check`.
+//! * [`frontier`] — the cost-vs-SLA frontier over labeled cluster
+//!   populations (bid policies and the hybrid autoscaler,
+//!   [`crate::autoscale`]), with Pareto domination marked.
 
 pub mod table;
 pub mod table1;
@@ -26,9 +29,11 @@ pub mod distribution;
 pub mod policy;
 pub mod faults;
 pub mod expect;
+pub mod frontier;
 
 pub use distribution::{summarize, SweepDistributions};
 pub use expect::{ExpectReport, Violation};
+pub use frontier::{frontier as sla_frontier, render_frontier, FrontierPoint};
 pub use faults::FaultAccounting;
 pub use policy::{
     render_controller_comparison, summarize_controllers,

@@ -38,7 +38,21 @@
 //! outages = 2               # metadata-endpoint outage windows
 //! outage_mins = 2.0
 //! degraded_poll_factor = 6  # poll-interval multiplier while down
+//!
+//! [chaos.market]
+//! shocks = 2                # price-shock windows spliced into traces
+//! factor = 2.5              # traced factor multiplier inside a window
+//! duration_mins = 30.0
 //! ```
+//!
+//! Market shocks are *trace splices*, not runtime events: each window
+//! multiplies every traced pool's price factor by `factor` for its
+//! duration ([`crate::cloud::trace::splice_price_shocks`]), rewritten
+//! into the pools' replay streams before the engine schedules anything.
+//! The run then sees ordinary `PoolPriceChanged` events — shocks
+//! compose with bids ([`crate::autoscale`]): a shock crossing a bid
+//! outbids the instance. Requires at least one traced pool (rejected as
+//! inert otherwise).
 //!
 //! With `[chaos]` absent nothing is armed and every digest is
 //! byte-identical to a chaos-free build; an armed plan with all
@@ -97,18 +111,31 @@ pub struct FaultPlan {
     pub outages: Vec<(SimTime, SimTime)>,
     /// Poll-interval multiplier while inside an outage window.
     pub degraded_poll_factor: u32,
+    /// Market price-shock windows `[start, end)` as offsets from run
+    /// start, ascending, non-overlapping (merged at draw), never
+    /// starting at t = 0 — fed to
+    /// [`Fleet::splice_market_shocks`](crate::cloud::fleet::Fleet::splice_market_shocks)
+    /// before anything is scheduled.
+    pub market_shocks: Vec<(SimDuration, SimDuration)>,
+    /// Traced-factor multiplier inside a shock window (1.0 when market
+    /// chaos is off).
+    pub market_factor: f64,
 }
 
 impl FaultPlan {
-    /// The empty plan (chaos off): no storms, no outages.
+    /// The empty plan (chaos off): no storms, no outages, no shocks.
     pub fn none() -> Self {
-        FaultPlan { degraded_poll_factor: 1, ..FaultPlan::default() }
+        FaultPlan {
+            degraded_poll_factor: 1,
+            market_factor: 1.0,
+            ..FaultPlan::default()
+        }
     }
 
     /// Draw a plan from the scenario seed. Instants are uniform in
     /// `[0, window)`; the draw order is fixed (storms first, then
-    /// outages) so the stream is stable as knobs are toggled
-    /// independently of each other.
+    /// outages, then market shocks) so the stream is stable as knobs are
+    /// toggled independently of each other.
     pub fn draw(cfg: &ChaosCfg, scenario_seed: u64) -> Self {
         let mut rng =
             Prng::new(mix64(scenario_seed ^ cfg.salt ^ PLAN_SEED_SALT));
@@ -124,10 +151,38 @@ impl FaultPlan {
             })
             .collect();
         outages.sort_unstable();
+        // shock starts clamp to >= 1 ms so the initial price epoch is
+        // never rewritten (an offset-0 splice would change placement's
+        // very first decision, not just the market's evolution)
+        let mut shocks: Vec<(SimDuration, SimDuration)> = (0..cfg
+            .market
+            .shocks)
+            .map(|_| {
+                let start =
+                    SimDuration::from_millis(rng.below(window_ms).max(1));
+                (start, start + cfg.market.duration)
+            })
+            .collect();
+        shocks.sort_unstable();
+        // merge overlapping windows so the multiplier applies once
+        let mut market_shocks: Vec<(SimDuration, SimDuration)> =
+            Vec::with_capacity(shocks.len());
+        for (s, e) in shocks {
+            match market_shocks.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => market_shocks.push((s, e)),
+            }
+        }
         FaultPlan {
             storms,
             outages,
             degraded_poll_factor: cfg.imds.degraded_poll_factor.max(1),
+            market_shocks,
+            market_factor: if cfg.market.shocks > 0 {
+                cfg.market.factor
+            } else {
+                1.0
+            },
         }
     }
 
@@ -203,12 +258,12 @@ mod tests {
     #[test]
     fn outage_queries() {
         let plan = FaultPlan {
-            storms: Vec::new(),
             outages: vec![(
                 SimTime::from_secs(100),
                 SimTime::from_secs(220),
             )],
             degraded_poll_factor: 6,
+            ..FaultPlan::none()
         };
         assert!(!plan.imds_down(SimTime::from_secs(99)));
         assert!(plan.imds_down(SimTime::from_secs(100)));
@@ -225,6 +280,62 @@ mod tests {
         );
         let empty = FaultPlan::none();
         assert!(!empty.imds_down(SimTime::ZERO));
+    }
+
+    #[test]
+    fn market_knobs_do_not_perturb_storm_and_outage_draws() {
+        // shocks draw strictly after storms and outages, so arming
+        // [chaos.market] must leave the existing fault stream untouched
+        // — the stream-stability contract every chaos knob obeys
+        let base = storm_cfg();
+        let with_market = ChaosCfg {
+            market: crate::config::ChaosMarketCfg {
+                shocks: 3,
+                factor: 2.5,
+                duration: SimDuration::from_mins(20),
+            },
+            ..base.clone()
+        };
+        let a = FaultPlan::draw(&base, 7);
+        let b = FaultPlan::draw(&with_market, 7);
+        assert_eq!(a.storms, b.storms);
+        assert_eq!(a.outages, b.outages);
+        assert!(a.market_shocks.is_empty());
+        assert_eq!(a.market_factor, 1.0);
+        assert!(!b.market_shocks.is_empty());
+        assert_eq!(b.market_factor, 2.5);
+    }
+
+    #[test]
+    fn market_shocks_are_merged_ordered_and_off_origin() {
+        let cfg = ChaosCfg {
+            market: crate::config::ChaosMarketCfg {
+                shocks: 8,
+                factor: 3.0,
+                // long windows on a 100-min draw window force overlaps
+                duration: SimDuration::from_mins(45),
+            },
+            ..storm_cfg()
+        };
+        let plan = FaultPlan::draw(&cfg, 13);
+        assert_eq!(plan, FaultPlan::draw(&cfg, 13), "draw is deterministic");
+        assert!(!plan.market_shocks.is_empty());
+        assert!(
+            plan.market_shocks.len() < 8,
+            "8 overlapping 45-min windows in 100 min must merge: {:?}",
+            plan.market_shocks
+        );
+        let mut prev_end = SimDuration::ZERO;
+        for &(s, e) in &plan.market_shocks {
+            assert!(!s.is_zero(), "shock at t=0 would rewrite the initial epoch");
+            assert!(s > prev_end, "windows must be disjoint and ordered");
+            assert!(
+                e.as_millis() - s.as_millis()
+                    >= SimDuration::from_mins(45).as_millis(),
+                "a merged window is at least one shock long"
+            );
+            prev_end = e;
+        }
     }
 
     #[test]

@@ -50,6 +50,7 @@
 
 use super::chaos::FaultPlan;
 use super::engine::SimEvent;
+use crate::autoscale::{Autoscaler, ScaleDecision, ShiftReason};
 use super::experiment::Experiment;
 use super::sweep::run_digest;
 use super::RunResult;
@@ -120,6 +121,13 @@ struct JobInstance {
     /// Launch instant — poll ticks are measured from here, so a storm
     /// rewriting the schedule can land `detect` on a real tick boundary.
     started: SimTime,
+    /// The maximum hourly price this instance's launch named (the pool's
+    /// static bid or the autoscaler's bid-policy bid); `None` launches
+    /// can never be outbid.
+    bid: Option<f64>,
+    /// When a price epoch crossed `bid` — the instant billing stops at,
+    /// even though the instance keeps its notice window before reclaim.
+    outbid_at: Option<SimTime>,
 }
 
 /// One job's complete private world: the same policy / monitor / writer /
@@ -154,6 +162,9 @@ struct JobState {
     /// Token of this job's pending `NoticePosted`, so a storm can pull an
     /// already decided (but not yet posted) eviction forward to "now".
     notice_token: Option<u64>,
+    /// Bid decided at admission, carried until the launch completes (the
+    /// autoscaler bids at placement time; the instance exists later).
+    pending_bid: Option<f64>,
     /// The job's replacement target (its own "active pool" — placement
     /// stickiness is per job, not cluster-global).
     active: PoolId,
@@ -245,6 +256,30 @@ impl ClusterResult {
         self.jobs.iter().map(|j| j.result.total_cost()).sum()
     }
 
+    /// Jobs that missed their deadline SLA (0 when the scenario has no
+    /// `[job] deadline_mins`).
+    pub fn deadline_misses(&self) -> usize {
+        self.jobs
+            .iter()
+            .filter(|j| j.result.deadline_missed == Some(true))
+            .count()
+    }
+
+    /// Fraction of deadline-carrying jobs that met their SLA, or `None`
+    /// when no job carries a deadline verdict.
+    pub fn sla_attainment(&self) -> Option<f64> {
+        let verdicts =
+            self.jobs.iter().filter_map(|j| j.result.deadline_missed);
+        let (mut met, mut total) = (0usize, 0usize);
+        for missed in verdicts {
+            total += 1;
+            if !missed {
+                met += 1;
+            }
+        }
+        (total > 0).then(|| met as f64 / total as f64)
+    }
+
     /// One-line summary.
     pub fn summary(&self) -> String {
         format!(
@@ -281,11 +316,11 @@ pub fn cluster_digest(r: &ClusterResult) -> String {
     for p in &r.peak_in_flight_per_pool {
         let _ = write!(out, "/{p}");
     }
-    // Chaos kinds are gated on being observed, exactly like run_digest:
-    // a chaos-free cluster digest stays byte-identical to digests minted
-    // before the chaos kinds existed.
+    // Chaos and market kinds are gated on being observed, exactly like
+    // run_digest: a cluster digest without chaos, bids or deadlines stays
+    // byte-identical to digests minted before those kinds existed.
     for k in EventKind::ALL {
-        if k.is_chaos() && r.timeline.count(k) == 0 {
+        if k.is_digest_gated() && r.timeline.count(k) == 0 {
             continue;
         }
         let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));
@@ -331,6 +366,9 @@ pub struct ClusterEngine<'a> {
     plan: FaultPlan,
     fleet: Fleet,
     placement: Box<dyn PlacementPolicy>,
+    /// The `[autoscale]` layer over `placement`: bids on spot picks and
+    /// overrides them with the on-demand fallback under SLA pressure.
+    autoscaler: Option<Autoscaler>,
     jobs: Vec<JobState>,
     /// FIFO wait queue per priority (lower number admits first).
     waiting: BTreeMap<u32, VecDeque<usize>>,
@@ -370,6 +408,11 @@ impl<'a> ClusterEngine<'a> {
         }
         let fleet = Fleet::from_scenario(cfg)?;
         let placement = build_policy(&cfg.fleet.placement)?;
+        let autoscaler = cfg
+            .autoscale
+            .as_ref()
+            .map(|a| Autoscaler::new(a, &fleet))
+            .transpose()?;
         let n_pools = fleet.num_pools();
         let spoton = cfg.coordinator_attached;
 
@@ -401,6 +444,7 @@ impl<'a> ClusterEngine<'a> {
             plan,
             fleet,
             placement,
+            autoscaler,
             jobs,
             waiting: BTreeMap::new(),
             reserved: vec![0; n_pools],
@@ -435,6 +479,8 @@ impl<'a> ClusterEngine<'a> {
         for (job, at) in arrivals.into_iter().enumerate() {
             self.queue.schedule(at, ClusterEvent::JobArrived { job });
         }
+        self.fleet
+            .splice_market_shocks(&self.plan.market_shocks, self.plan.market_factor);
         self.schedule_price_traces();
         self.schedule_storms();
         while let Some(sch) = self.queue.pop() {
@@ -542,13 +588,61 @@ impl<'a> ClusterEngine<'a> {
         Ok(())
     }
 
+    /// One placement decision for `job`: the inner placement policy's
+    /// pick, filtered through the autoscaler when one is configured.
+    /// Returns the effective pool, the bid the launch should carry, and
+    /// — when the autoscaler overrode a spot pick — the shift reason the
+    /// caller records iff the placement actually goes through.
+    fn place_job(
+        &mut self,
+        job: usize,
+    ) -> (PoolId, Option<f64>, Option<ShiftReason>) {
+        let views = self.fleet.views();
+        let inner = self.placement.place(self.jobs[job].active, &views);
+        let Some(auto) = &self.autoscaler else {
+            return (inner, self.fleet.pool_bid(inner), None);
+        };
+        let now = self.clock.now();
+        let ttd = self.cfg.job_deadline.map(|d| {
+            let due = self.jobs[job].submitted_at + d;
+            if due > now { due.since(now) } else { SimDuration::ZERO }
+        });
+        let depth =
+            self.waiting.values().map(|q| q.len()).sum::<usize>() as u32;
+        match auto.decide(&self.fleet, inner, ttd, depth) {
+            ScaleDecision::Spot { pool, bid } => {
+                (pool, bid.or_else(|| self.fleet.pool_bid(pool)), None)
+            }
+            ScaleDecision::OnDemand { reason } => (
+                auto.on_demand,
+                None,
+                (reason != ShiftReason::Placement).then_some(reason),
+            ),
+        }
+    }
+
+    /// Record one autoscaler override on the cluster timeline.
+    fn record_shift(&mut self, job: usize, pool: PoolId, reason: ShiftReason) {
+        let now = self.clock.now();
+        self.timeline.record_with(now, EventKind::AutoscaleShift, || {
+            format!(
+                "{} -> {}: {reason}",
+                self.jobs[job].name,
+                self.fleet.pool_name(pool)
+            )
+        });
+    }
+
     /// A job needs an instance: place, then either reserve a slot and
     /// open the provisioning chain, or park in the wait queue.
     fn request_admission(&mut self, job: usize) -> Result<()> {
         let now = self.clock.now();
-        let views = self.fleet.views();
-        let pool = self.placement.place(self.jobs[job].active, &views);
+        let (pool, bid, shift) = self.place_job(job);
         if self.slot_free(pool) {
+            if let Some(reason) = shift {
+                self.record_shift(job, pool, reason);
+            }
+            self.jobs[job].pending_bid = bid;
             return self.admit(job, pool);
         }
         let prio = self.jobs[job].priority;
@@ -597,8 +691,7 @@ impl<'a> ClusterEngine<'a> {
     fn try_admit_waiting(&mut self) -> Result<()> {
         loop {
             let Some(job) = self.peek_waiting() else { return Ok(()) };
-            let views = self.fleet.views();
-            let pool = self.placement.place(self.jobs[job].active, &views);
+            let (pool, bid, shift) = self.place_job(job);
             if !self.slot_free(pool) {
                 return Ok(());
             }
@@ -606,6 +699,9 @@ impl<'a> ClusterEngine<'a> {
             let popped = self.pop_waiting().expect("peeked non-empty");
             debug_assert_eq!(popped, job);
             let now = self.clock.now();
+            if let Some(reason) = shift {
+                self.record_shift(job, pool, reason);
+            }
             self.timeline.record_with(now, EventKind::JobAdmitted, || {
                 format!(
                     "{} -> {}",
@@ -613,6 +709,7 @@ impl<'a> ClusterEngine<'a> {
                     self.fleet.pool_name(pool)
                 )
             });
+            self.jobs[job].pending_bid = bid;
             self.admit(job, pool)?;
         }
     }
@@ -718,13 +815,19 @@ impl<'a> ClusterEngine<'a> {
             };
             EvictionSchedule { post, detect, deadline }
         });
+        let bid = self.jobs[job].pending_bid.take();
         self.jobs[job].inst = Some(JobInstance {
             id: inst_id,
             iid,
             pool,
             schedule,
             started: now,
+            bid,
+            outbid_at: None,
         });
+        // born outbid: the market may already sit above the bid decided
+        // at admission (a price epoch landed during provisioning)
+        self.check_outbid_job(job, pool, self.fleet.pool_price(pool), now);
 
         if spoton {
             // Fallback search: a committed generation that fails
@@ -1231,10 +1334,23 @@ impl<'a> ClusterEngine<'a> {
             // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
             .expect("reclaim events require a live instance");
         let pool = inst.pool;
-        if self
-            .fleet
-            .terminate_in(pool, inst.iid, now, &mut self.jobs[job].billing)
-        {
+        let terminated = match inst.outbid_at {
+            // billing stops at the crossing, not the reclaim
+            Some(at) => self.fleet.terminate_in_outbid(
+                pool,
+                inst.iid,
+                now,
+                at,
+                &mut self.jobs[job].billing,
+            ),
+            None => self.fleet.terminate_in(
+                pool,
+                inst.iid,
+                now,
+                &mut self.jobs[job].billing,
+            ),
+        };
+        if terminated {
             self.running_total -= 1;
             self.fleet.note_eviction(pool);
             self.jobs[job].controller.observe_eviction(pool, now);
@@ -1277,7 +1393,79 @@ impl<'a> ClusterEngine<'a> {
             );
             self.price_tokens.push(token);
         }
+        // outbid fan-out in job index order (deterministic, and bounded
+        // like the controller loop above: trace length × jobs)
+        let price = self.fleet.pool_price(pool);
+        for job in 0..self.jobs.len() {
+            if !self.jobs[job].finished {
+                self.check_outbid_job(job, pool, price, now);
+            }
+        }
         Ok(())
+    }
+
+    /// Did this price epoch outbid `job`'s live instance? Mirrors the
+    /// per-run engine's `check_outbid`: mark the billing cut at the
+    /// crossing, then rewrite the eviction schedule so the notice posts
+    /// *now* (the platform still grants the configured notice window),
+    /// exactly like a storm — unless an eviction is already in flight,
+    /// in which case only the billing cut applies.
+    fn check_outbid_job(
+        &mut self,
+        job: usize,
+        pool: PoolId,
+        price: f64,
+        now: SimTime,
+    ) {
+        let Some(inst) = self.jobs[job].inst.as_ref() else { return };
+        if inst.pool != pool || inst.outbid_at.is_some() {
+            return;
+        }
+        let Some(bid) = inst.bid else { return };
+        if price <= bid {
+            return;
+        }
+        let started = inst.started;
+        let already_posted =
+            inst.schedule.map_or(false, |es| es.post <= now);
+        // spoton-lint: allow(D3, reason = "checked Some above; no reentrancy between the checks")
+        let inst = self.jobs[job].inst.as_mut().expect("checked live above");
+        inst.outbid_at = Some(now);
+        self.jobs[job].timeline.record_with(now, EventKind::PoolOutbid, || {
+            format!(
+                "{}: price ${price:.4}/h crossed bid ${bid:.4}/h",
+                self.fleet.pool_name(pool)
+            )
+        });
+        if already_posted {
+            return;
+        }
+        let post = now;
+        let deadline = post + self.cfg.cloud.notice;
+        let detect = if !self.spoton {
+            deadline
+        } else {
+            // first poll tick at/after the post, ticks measured from the
+            // instance's launch — same rule as the planned schedule
+            let since_start = post.since(started).as_millis();
+            let poll = self.cfg.cloud.poll_interval.as_millis().max(1);
+            let ticks = since_start.div_ceil(poll);
+            started + SimDuration::from_millis(ticks * poll)
+        };
+        if let Some(inst) = self.jobs[job].inst.as_mut() {
+            inst.schedule = Some(EvictionSchedule { post, detect, deadline });
+        }
+        // a boundary already committed to the (later) planned post: pull
+        // the pending NoticePosted forward to now
+        if let Some(token) = self.jobs[job].notice_token.take() {
+            self.queue.cancel(token);
+            let new_token = self.queue.schedule_for(
+                job,
+                now,
+                ClusterEvent::Job { job, ev: SimEvent::NoticePosted },
+            );
+            self.jobs[job].notice_token = Some(new_token);
+        }
     }
 
     /// A planned eviction storm lands cluster-wide: every unfinished
@@ -1362,13 +1550,40 @@ impl<'a> ClusterEngine<'a> {
     /// instance, drop its pending events, free the slot for waiters.
     fn finish_job(&mut self, job: usize, now: SimTime) -> Result<()> {
         if let Some(inst) = self.jobs[job].inst.take() {
-            if self.fleet.terminate_in(
-                inst.pool,
-                inst.iid,
-                now,
-                &mut self.jobs[job].billing,
-            ) {
+            let terminated = match inst.outbid_at {
+                Some(at) => self.fleet.terminate_in_outbid(
+                    inst.pool,
+                    inst.iid,
+                    now,
+                    at,
+                    &mut self.jobs[job].billing,
+                ),
+                None => self.fleet.terminate_in(
+                    inst.pool,
+                    inst.iid,
+                    now,
+                    &mut self.jobs[job].billing,
+                ),
+            };
+            if terminated {
                 self.running_total -= 1;
+            }
+        }
+        if let Some(d) = self.cfg.job_deadline {
+            let total = now.since(self.jobs[job].submitted_at);
+            let completed = self.jobs[job].completed;
+            if !completed || total > d {
+                self.jobs[job].timeline.record_with(
+                    now,
+                    EventKind::DeadlineMissed,
+                    || {
+                        if completed {
+                            format!("finished at {total}, deadline {d}")
+                        } else {
+                            format!("did not finish; deadline {d}")
+                        }
+                    },
+                );
             }
         }
         self.jobs[job].finished = true;
@@ -1450,6 +1665,9 @@ impl<'a> ClusterEngine<'a> {
             let result = RunResult {
                 scenario: j.name.clone(),
                 completed: j.completed,
+                deadline_missed: cfg
+                    .job_deadline
+                    .map(|d| !j.completed || total > d),
                 stage_times,
                 total,
                 notices: j.notices,
@@ -1594,6 +1812,7 @@ fn build_job(
         backoff,
         imds_was_down: false,
         notice_token: None,
+        pending_bid: None,
         active: PoolId(0),
         pool_counts: vec![(0, 0); n_pools],
         launches: 0,

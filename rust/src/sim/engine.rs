@@ -149,6 +149,12 @@ struct InstanceCtx {
     /// Launch instant — poll ticks are measured from here, so a storm
     /// rewriting the schedule can land `detect` on a real tick boundary.
     started: SimTime,
+    /// Bid carried from the pool at launch (`[pool.NAME] bid`); `None`
+    /// bids the going rate and is never outbid.
+    bid: Option<f64>,
+    /// Set when a price move crossed the bid: billing stops at this
+    /// instant even though the notice window still runs to the reclaim.
+    outbid_at: Option<SimTime>,
 }
 
 /// The engine: event queue + clock + run accounting around the same
@@ -348,6 +354,13 @@ impl<'a> Engine<'a> {
         self.writer
             .resume_after(CheckpointStore::max_id(&mut self.store)?);
         self.schedule(SimTime::ZERO, SimEvent::ReplacementRequested);
+        // market shocks rewrite the traced pools' replay streams before
+        // anything is scheduled; with `[chaos.market]` absent the plan
+        // carries no windows and the streams are untouched
+        self.fleet.splice_market_shocks(
+            &self.plan.market_shocks,
+            self.plan.market_factor,
+        );
         self.schedule_price_traces();
         self.schedule_storms();
         while let Some(sch) = self.queue.pop() {
@@ -524,8 +537,18 @@ impl<'a> Engine<'a> {
             };
             EvictionSchedule { post, detect, deadline }
         });
-        self.inst =
-            Some(InstanceCtx { id: inst_id, schedule, started: now });
+        self.inst = Some(InstanceCtx {
+            id: inst_id,
+            schedule,
+            started: now,
+            bid: self.fleet.pool_bid(self.fleet.active_pool()),
+            outbid_at: None,
+        });
+        // a replacement can land in a pool whose price rose past the
+        // configured bid since fleet validation: the instance is born
+        // outbid — the Preempt posts immediately and nothing past the
+        // launch instant is billed
+        self.check_outbid(self.fleet.active_pool(), now);
 
         if self.spoton {
             // Fallback search: a committed generation that fails
@@ -604,7 +627,7 @@ impl<'a> Engine<'a> {
         let now = self.clock.now();
         if now.since(SimTime::ZERO) >= self.cfg.deadline {
             let reason = format!("deadline {} exceeded", self.cfg.deadline);
-            self.fleet.terminate_current(now, &mut self.billing);
+            self.terminate_current_billed(now);
             self.timeline
                 .record(now, EventKind::Aborted, reason.clone());
             self.aborted_reason = Some(reason);
@@ -821,7 +844,7 @@ impl<'a> Engine<'a> {
                     format!("{} steps", self.workload.progress().total_steps)
                 });
                 self.completed = true;
-                self.fleet.terminate_current(now, &mut self.billing);
+                self.terminate_current_billed(now);
                 self.finish();
                 return Ok(());
             }
@@ -1023,12 +1046,12 @@ impl<'a> Engine<'a> {
     /// evidence, drop its pending timers, and open the replacement chain.
     fn on_instance_reclaimed(&mut self) -> Result<()> {
         let now = self.clock.now();
+        let terminated = self.terminate_current_billed(now);
         let inst = self
             .inst
             .take()
             // spoton-lint: allow(D3, reason = "event-queue invariant: events only target live instances")
             .expect("reclaim events require a live instance");
-        let terminated = self.fleet.terminate_current(now, &mut self.billing);
         if let Some((_, pool)) = terminated {
             self.fleet.note_eviction(pool);
             self.controller.observe_eviction(pool, now);
@@ -1070,7 +1093,81 @@ impl<'a> Engine<'a> {
             );
             self.price_tokens.push(token);
         }
+        self.check_outbid(pool, now);
         Ok(())
+    }
+
+    /// Did a price move (or a fresh launch) carry `pool` past the live
+    /// instance's bid? If so the market outbids it: billing stops at the
+    /// crossing, and the Preempt posts *now* — the configured notice
+    /// window still runs before the reclaim, exactly like a chaos storm
+    /// pulling an eviction forward. An eviction already in flight keeps
+    /// its schedule; the crossing still clamps billing.
+    fn check_outbid(&mut self, pool: PoolId, now: SimTime) {
+        if pool != self.fleet.active_pool() {
+            return;
+        }
+        let Some(inst) = self.inst.as_ref() else { return };
+        let Some(bid) = inst.bid else { return };
+        if inst.outbid_at.is_some() {
+            return;
+        }
+        let price = self.fleet.pool_price(pool);
+        if price <= bid {
+            return;
+        }
+        let started = inst.started;
+        let already_posted = inst.schedule.map_or(false, |es| es.post <= now);
+        if let Some(i) = self.inst.as_mut() {
+            i.outbid_at = Some(now);
+        }
+        self.timeline.record_with(now, EventKind::PoolOutbid, || {
+            format!(
+                "{}: price ${price:.4}/h crossed bid ${bid:.4}/h",
+                self.fleet.pool_name(pool)
+            )
+        });
+        if already_posted {
+            return;
+        }
+        let post = now;
+        let deadline = post + self.cfg.cloud.notice;
+        let detect = if !self.spoton {
+            deadline
+        } else {
+            // first poll tick at/after the post, ticks measured from the
+            // instance's launch — same rule as the planned schedule
+            let since_start = post.since(started).as_millis();
+            let poll = self.cfg.cloud.poll_interval.as_millis().max(1);
+            let ticks = since_start.div_ceil(poll);
+            started + SimDuration::from_millis(ticks * poll)
+        };
+        if let Some(i) = self.inst.as_mut() {
+            i.schedule = Some(EvictionSchedule { post, detect, deadline });
+        }
+        // a boundary already committed to the (later) planned post:
+        // pull that pending NoticePosted forward to now
+        if let Some(token) = self.notice_token.take() {
+            self.queue.cancel(token);
+            self.live_tokens.retain(|&t| t != token);
+            let new_token = self.queue.schedule(now, SimEvent::NoticePosted);
+            self.live_tokens.push(new_token);
+            self.notice_token = Some(new_token);
+        }
+    }
+
+    /// Terminate the live instance, billing to the outbid crossing when
+    /// the market reclaimed the capacity first.
+    fn terminate_current_billed(
+        &mut self,
+        now: SimTime,
+    ) -> Option<(crate::cloud::instance::InstanceId, PoolId)> {
+        match self.inst.as_ref().and_then(|i| i.outbid_at) {
+            Some(at) => {
+                self.fleet.terminate_current_outbid(now, at, &mut self.billing)
+            }
+            None => self.fleet.terminate_current(now, &mut self.billing),
+        }
     }
 
     /// A planned eviction storm lands: rewrite the live instance's
@@ -1173,6 +1270,28 @@ impl<'a> Engine<'a> {
             log::warn!("{}: {reason}", self.cfg.name);
         }
 
+        // deadline-SLA verdict (observational — `[job] deadline_mins`
+        // never changes the run, only judges it): a job that never
+        // completed cannot have met its deadline
+        let completed = self.completed;
+        let deadline_missed = self.cfg.job_deadline.map(|d| {
+            let missed = !completed || total > d;
+            if missed {
+                self.timeline.record_with(
+                    self.clock.now(),
+                    EventKind::DeadlineMissed,
+                    || {
+                        if completed {
+                            format!("finished at {total}, deadline {d}")
+                        } else {
+                            format!("did not finish; deadline {d}")
+                        }
+                    },
+                );
+            }
+            missed
+        });
+
         Ok(RunResult {
             scenario: self.cfg.name.clone(),
             completed: self.completed,
@@ -1193,6 +1312,7 @@ impl<'a> Engine<'a> {
             pool_stats: self.fleet.stats(&self.billing),
             timeline: self.timeline,
             final_fingerprint: self.workload.fingerprint(),
+            deadline_missed,
         })
     }
 }

@@ -383,9 +383,11 @@ pub fn run_reference(
         compute_cost: billing.compute_total(),
         storage_cost: billing.storage_total(),
         invoice: billing.invoice(),
-        // The legacy loop predates the fleet; no per-pool attribution.
-        // (Mechanical field addition only — semantics untouched.)
+        // The legacy loop predates the fleet; no per-pool attribution,
+        // and it predates deadline SLAs too — no verdict, ever.
+        // (Mechanical field additions only — semantics untouched.)
         pool_stats: Vec::new(),
+        deadline_missed: None,
         timeline,
         final_fingerprint: workload.fingerprint(),
     })

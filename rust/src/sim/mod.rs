@@ -109,6 +109,12 @@ pub struct RunResult {
     pub pool_stats: Vec<PoolStats>,
     pub timeline: Timeline,
     pub final_fingerprint: u64,
+    /// Deadline-SLA verdict: `None` when the scenario configures no
+    /// `[job] deadline_mins` (the field then stays out of digests, so
+    /// deadline-free runs keep their pre-SLA digests byte for byte);
+    /// `Some(true)` when the job finished — or aborted — past its
+    /// deadline.
+    pub deadline_missed: Option<bool>,
 }
 
 impl RunResult {

@@ -241,6 +241,11 @@ pub fn run_digest(r: &RunResult) -> String {
         r.storage_cost.to_bits(),
         r.final_fingerprint,
     );
+    // Gated like the bid/autoscale event kinds: deadline-free scenarios
+    // (deadline_missed == None) keep their pre-SLA digest bytes.
+    if let Some(missed) = r.deadline_missed {
+        let _ = write!(out, "|deadline_missed={missed}");
+    }
     for (label, d) in &r.stage_times {
         let _ = write!(out, "|stage:{label}={}", d.as_millis());
     }
@@ -256,11 +261,12 @@ pub fn run_digest(r: &RunResult) -> String {
     }
     // Per-kind counters are the only timeline data a Counts-level run
     // keeps — they must enter the digest for the iff contract to hold.
-    // Chaos kinds are gated on being observed: a chaos-free run's digest
-    // stays byte-identical to digests minted before the chaos kinds
-    // existed, while any injected fault still lands in the digest.
+    // Chaos and bid/autoscale kinds are gated on being observed: a run
+    // that never sees them keeps a digest byte-identical to digests
+    // minted before those kinds existed, while any injected fault or
+    // outbid still lands in the digest.
     for k in crate::metrics::EventKind::ALL {
-        if k.is_chaos() && r.timeline.count(k) == 0 {
+        if k.is_digest_gated() && r.timeline.count(k) == 0 {
             continue;
         }
         let _ = write!(out, "|#{}={}", k.as_str(), r.timeline.count(k));

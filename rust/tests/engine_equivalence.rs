@@ -528,6 +528,73 @@ degraded_poll_factor = 4
 "#;
 
 #[test]
+fn uncrossed_bid_is_byte_identical_to_no_bid() {
+    // The bid-aware market's identity element: a bid the traced price
+    // can never cross must be completely inert — no `PoolOutbid`, same
+    // placement decisions, same piecewise invoices (bitwise), same
+    // timeline — so bid-less configs keep their historical digests.
+    use spoton::cloud::trace::{PricePoint, PriceTrace};
+    use spoton::config::{
+        EvictionPlanCfg, PlacementPolicyCfg, PoolCfg, PoolPricingCfg,
+    };
+    use spoton::metrics::EventKind;
+    use spoton::sim::sweep::run_digest;
+
+    let trace = PriceTrace::new(vec![
+        PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+        PricePoint { offset: SimDuration::from_mins(60), factor: 1.5 },
+        PricePoint { offset: SimDuration::from_mins(150), factor: 1.1 },
+    ])
+    .expect("valid trace");
+    let exp = |bid: Option<f64>| {
+        let mut pool = PoolCfg::named("east")
+            .eviction(EvictionPlanCfg::Fixed {
+                interval: SimDuration::from_mins(90),
+            })
+            .pricing(PoolPricingCfg::Trace(trace.clone()));
+        if let Some(b) = bid {
+            pool = pool.bid(b);
+        }
+        Experiment::table1()
+            .named("uncrossed-bid")
+            .transparent(SimDuration::from_mins(30))
+            .deadline(SimDuration::from_hours(30))
+            .pool(pool)
+            .placement(PlacementPolicyCfg::Sticky)
+    };
+
+    // $9/h sits far above the trace ceiling (1.5 × the spot catalog
+    // price ≈ $0.11/h): the market can never cross it.
+    let with_bid = run_engine(&exp(Some(9.0)));
+    let without = run_engine(&exp(None));
+    assert!(with_bid.evictions > 0, "plan must exercise replacements");
+    assert_eq!(with_bid.timeline.count(EventKind::PoolOutbid), 0);
+    assert_eq!(
+        run_digest(&with_bid),
+        run_digest(&without),
+        "an uncrossed bid must be inert"
+    );
+
+    // Same pin through the multiplexed cluster engine: a 3-job cluster
+    // on the bidded pool must digest identically to the bid-free one.
+    use spoton::config::ClusterCfg;
+    use spoton::sim::cluster::cluster_digest;
+    let cluster = |bid: Option<f64>| {
+        let mut e = exp(bid);
+        e.cfg.fleet.pools[0].capacity = 3;
+        e.cfg.cluster = Some(ClusterCfg::with_count(3));
+        e.run_cluster_sleeper().expect("cluster run")
+    };
+    let c_with = cluster(Some(9.0));
+    let c_without = cluster(None);
+    assert_eq!(
+        cluster_digest(&c_with),
+        cluster_digest(&c_without),
+        "an uncrossed bid must be inert in the cluster engine"
+    );
+}
+
+#[test]
 fn single_job_cluster_chaos_is_byte_identical_to_engine() {
     use spoton::config::{ClusterCfg, ScenarioConfig};
     use spoton::metrics::RecordLevel;

@@ -412,6 +412,107 @@ fn chaos_cluster_sweeps_merge_deterministically() {
     }
 }
 
+#[test]
+fn autoscaled_bid_cluster_sweeps_merge_deterministically() {
+    // The full bid-aware hybrid under market chaos: a traced spot pool
+    // whose median-of-trace bid dies at the 40-min spike, an on-demand
+    // fallback, deadline-SLA jobs, Poisson arrivals, and two seeded
+    // price shocks spliced into the stream. Bids, outbid crossings and
+    // autoscale shifts are all pure functions of per-run state, so the
+    // merged cluster digests must be byte-identical at any thread count.
+    use spoton::cloud::trace::{PricePoint, PriceTrace};
+    use spoton::config::{
+        ArrivalCfg, AutoscaleCfg, BidPolicyCfg, ChaosCfg, ChaosMarketCfg,
+        ClusterCfg, EvictionPlanCfg, PlacementPolicyCfg, PoolCfg,
+        PoolPricingCfg,
+    };
+    use spoton::metrics::EventKind;
+    use spoton::sim::cluster::cluster_digest;
+    use spoton::sim::SeededClusterRun;
+
+    let spike = PriceTrace::new(vec![
+        PricePoint { offset: SimDuration::ZERO, factor: 0.8 },
+        PricePoint { offset: SimDuration::from_mins(40), factor: 1.8 },
+    ])
+    .expect("valid trace");
+    let mut exp = Experiment::table1()
+        .named("autoscale-determinism")
+        .transparent(SimDuration::from_mins(10))
+        .deadline(SimDuration::from_hours(10))
+        .pool(
+            PoolCfg::named("east")
+                .pricing(PoolPricingCfg::Trace(spike))
+                .eviction(EvictionPlanCfg::Poisson {
+                    mean: SimDuration::from_mins(30),
+                })
+                .capacity(4),
+        )
+        .pool(PoolCfg::named("ondemand").spot(false).capacity(4))
+        .placement(PlacementPolicyCfg::CheapestSpot);
+    exp.cfg.workload.ks = vec![33, 55];
+    exp.cfg.workload.stage_secs = vec![600, 600];
+    exp.cfg.cluster = Some(ClusterCfg::with_count(8).arrival(
+        ArrivalCfg::Poisson { mean: SimDuration::from_mins(2) },
+    ));
+    exp.cfg.job_deadline = Some(SimDuration::from_mins(240));
+    exp.cfg.autoscale = Some(AutoscaleCfg {
+        policy: BidPolicyCfg::Percentile { q: 0.5 },
+        on_demand_pool: "ondemand".into(),
+        slack: SimDuration::from_mins(30),
+        max_queue: 6,
+    });
+    exp.cfg.chaos = Some(ChaosCfg {
+        salt: 4,
+        window: SimDuration::from_mins(120),
+        market: ChaosMarketCfg {
+            shocks: 2,
+            factor: 1.5,
+            duration: SimDuration::from_mins(10),
+        },
+        ..ChaosCfg::default()
+    });
+
+    let dig = |runs: &[SeededClusterRun]| -> Vec<(u64, String)> {
+        runs.iter()
+            .map(|r| (r.seed, cluster_digest(&r.result)))
+            .collect()
+    };
+    let sweep = exp.cluster_sweep().seed_range(0, 6);
+    let t1 = sweep.clone().threads(1).run().unwrap();
+    let t2 = sweep.clone().threads(2).run().unwrap();
+    let t8 = sweep.clone().threads(8).run().unwrap();
+    let d1 = dig(&t1);
+    assert_eq!(d1.len(), 6);
+    assert_eq!(d1, dig(&t2), "threads=2 diverged from threads=1");
+    assert_eq!(d1, dig(&t8), "threads=8 diverged from threads=1");
+
+    // The hybrid mechanics genuinely fired across the population: jobs
+    // really were outbid on the traced pool, and the autoscaler really
+    // shifted placements onto the fallback.
+    let outbids: usize = t1
+        .iter()
+        .flat_map(|r| &r.result.jobs)
+        .map(|j| j.result.timeline.count(EventKind::PoolOutbid))
+        .sum();
+    let shifts: usize = t1
+        .iter()
+        .map(|r| r.result.timeline.count(EventKind::AutoscaleShift))
+        .sum();
+    assert!(outbids > 0, "the 1.8x spike must outbid median bids");
+    assert!(shifts > 0, "outbid replacements must shift to on-demand");
+    // every job carries a deadline verdict (the SLA layer is on)
+    for r in &t1 {
+        assert!(
+            r.result
+                .jobs
+                .iter()
+                .all(|j| j.result.deadline_missed.is_some()),
+            "missing deadline verdicts: {}",
+            r.result.summary()
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // Sharded (multi-process) sweeps: the `spoton sweep` runner must uphold
 // across OS processes the same contract the in-process sweep upholds
@@ -630,4 +731,100 @@ fn chaos_sharded_sweeps_merge_byte_identically() {
         fold_run_digests(runs.iter().map(|r| run_digest(&r.result))),
         "sharded chaos digest diverged from the in-process sweep"
     );
+}
+
+const BID_SHARD_SCENARIO: &str = r#"
+name = "bid-shard-determinism"
+deadline_mins = 1800
+
+[workload]
+kind = "sleeper"
+ks = [33, 55]
+stage_secs = [600, 900]
+
+[checkpoint]
+method = "transparent"
+interval_mins = 5
+
+[fleet]
+placement = "cheapest-spot"
+
+[pool.volatile]
+bid = 0.09
+
+[pool.volatile.price_walk]
+start = 1.1
+volatility = 0.3
+step_mins = 2
+steps = 30
+floor = 0.5
+ceil = 2.0
+
+[pool.calm]
+price_factor = 1.15
+"#;
+
+#[test]
+fn bid_sharded_sweeps_merge_byte_identically() {
+    // Bid-aware markets across OS processes: each seeded run regenerates
+    // its own price walk, launches into the cheaper volatile pool under
+    // a $0.09/h bid, and is outbid wherever the walk crosses it (the
+    // replacement lands in the calm pool). Worker processes must draw
+    // identical walks and identical crossings, so the merged artifact is
+    // process-count invariant and equal to the in-process sweep fold.
+    use spoton::config::ScenarioConfig;
+    use spoton::sim::shard::{
+        fold_run_digests, SeedStream, ShardPlan, ShardRunner,
+    };
+    use spoton::sim::sweep::run_digest;
+    let cfg = ScenarioConfig::from_str_toml(BID_SHARD_SCENARIO).unwrap();
+    let plan = ShardPlan::new(
+        "bid-det",
+        SeedStream::contiguous(0, 8),
+        &["base".to_string()],
+        &cfg,
+        BID_SHARD_SCENARIO,
+        4,
+    )
+    .unwrap();
+    let run = |procs: usize| -> (String, Vec<u8>) {
+        let dir = shard_tmp(&format!("bid-procs{procs}"));
+        let runner =
+            ShardRunner::new(plan.clone(), &dir, env!("CARGO_BIN_EXE_spoton"))
+                .procs(procs)
+                .threads(2);
+        runner.init(BID_SHARD_SCENARIO).unwrap();
+        let out = runner.run().unwrap();
+        assert!(out.dead_letter.is_empty());
+        let merged = out.merged.expect("all shards completed");
+        let bytes = std::fs::read(dir.join("MERGED.json")).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        (merged.digest, bytes)
+    };
+    let (d1, b1) = run(1);
+    let (d4, b4) = run(4);
+    assert_eq!(d1, d4, "process count leaked into the bid-sweep digest");
+    assert_eq!(b1, b4, "process count leaked into MERGED.json");
+    let runs = Experiment { cfg }
+        .sweep()
+        .seed_range(0, 8)
+        .threads(4)
+        .run()
+        .unwrap();
+    assert_eq!(
+        d1,
+        fold_run_digests(runs.iter().map(|r| run_digest(&r.result))),
+        "sharded bid digest diverged from the in-process sweep"
+    );
+    // across 8 independent walks the $0.09 bid is crossed somewhere —
+    // the sharded population really exercised the outbid path
+    let outbids: usize = runs
+        .iter()
+        .map(|r| {
+            r.result
+                .timeline
+                .count(spoton::metrics::EventKind::PoolOutbid)
+        })
+        .sum();
+    assert!(outbids > 0, "no walk crossed the bid in 8 seeded runs");
 }
